@@ -1,0 +1,63 @@
+//! Regenerate every table and figure of the paper's evaluation section.
+//!
+//!     cargo run --release --example paper_figures            # everything
+//!     cargo run --release --example paper_figures -- --only fig10
+//!
+//! Simulated experiments (Figs 1, 4, 10-16) run at paper scale on the
+//! A100 testbed substitute; Fig 8 and Table 1 execute the REAL tiny-llm
+//! artifacts (skipped with a notice if `make artifacts` hasn't run).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use sparseserve::figures::{self, sim_exp};
+use sparseserve::runtime::Runtime;
+use sparseserve::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let only = args.get("only").map(str::to_string);
+    let want = |name: &str| only.as_deref().map(|o| name.starts_with(o)).unwrap_or(true);
+
+    if want("fig1") {
+        println!("{}", sim_exp::fig1());
+    }
+    if want("fig4") {
+        println!("{}", sim_exp::fig4());
+    }
+    if want("fig8") || want("table1") {
+        let dir = Runtime::default_dir("tiny-llm");
+        if dir.join("manifest.json").exists() {
+            let rt = Arc::new(Runtime::load(dir)?);
+            if want("fig8") {
+                println!("{}", figures::fig8_overlap(rt.clone())?);
+            }
+            if want("table1") {
+                println!("{}", figures::table1_accuracy(rt)?);
+            }
+        } else {
+            println!("(fig8/table1 skipped: run `make artifacts` first)\n");
+        }
+    }
+    if want("fig10") || want("fig11") || want("fig12") {
+        for model in ["lwm-7b", "llama3-8b"] {
+            println!("{}", sim_exp::fig10_11_12(model, &sim_exp::default_rates(model)));
+        }
+    }
+    if want("fig13") {
+        println!("{}", sim_exp::fig13("lwm-7b"));
+        println!("{}", sim_exp::fig13("llama3-8b"));
+    }
+    if want("fig14") {
+        println!("{}", sim_exp::fig14a());
+        println!("{}", sim_exp::fig14b());
+    }
+    if want("fig15") {
+        println!("{}", sim_exp::fig15(&[0.1, 0.2, 0.3, 0.4, 0.5]));
+    }
+    if want("fig16") {
+        println!("{}", sim_exp::fig16a(&[0.05, 0.15, 0.25, 0.35]));
+        println!("{}", sim_exp::fig16b());
+    }
+    Ok(())
+}

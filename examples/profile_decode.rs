@@ -1,0 +1,38 @@
+// temp profiling driver: where does a real decode step spend time?
+use std::collections::HashMap;
+use std::sync::Arc;
+use sparseserve::config::ServingConfig;
+use sparseserve::engine::{Backend, PjrtBackend};
+use sparseserve::runtime::Runtime;
+use sparseserve::scheduler::{Batch, Phase, PrefillWork, Request};
+
+fn main() {
+    let rt = Arc::new(Runtime::load(Runtime::default_dir("tiny-llm")).unwrap());
+    let spec = rt.manifest.model.clone();
+    let mut cfg = ServingConfig::sparseserve(256, 64, spec.n_layers);
+    cfg.max_inject_tokens = spec.max_ctx * spec.n_layers;
+    let mut backend = PjrtBackend::new(rt.clone(), cfg, 8 << 20, 512 << 20);
+    let prompt = sparseserve::figures::real::demo_prompt(300, spec.vocab, 5);
+    let mut req = Request::with_prompt(1, prompt.clone(), 4096, 0.0);
+    req.phase = Phase::Prefill;
+    backend.register(&req).unwrap();
+    let mut requests = HashMap::new();
+    requests.insert(1u32, req);
+    let pf = Batch { decodes: vec![], prefill: Some(PrefillWork::LayerSegment{
+        req:1, layer_start:0, layer_end: spec.n_layers, tok_start:0, tok_len: prompt.len(), is_last:true}) };
+    backend.run_batch(&pf, &requests).unwrap();
+    requests.get_mut(&1).unwrap().phase = Phase::Decode;
+    let db = Batch { decodes: vec![1], prefill: None };
+    let t0 = std::time::Instant::now();
+    let n = 100;
+    for _ in 0..n { backend.run_batch(&db, &requests).unwrap(); }
+    let total = t0.elapsed().as_secs_f64();
+    println!("decode step mean: {:.3} ms", total / n as f64 * 1e3);
+    println!("{:<22} {:>6} {:>10} {:>10}", "entry", "calls", "total_s", "ms/call");
+    let mut pjrt_total = 0.0;
+    for (name, calls, secs) in rt.exec_stats() {
+        println!("{:<22} {:>6} {:>10.3} {:>10.3}", name, calls, secs, secs / calls as f64 * 1e3);
+        pjrt_total += secs;
+    }
+    println!("PJRT total: {:.3}s of {:.3}s wall ({:.1}% — rest is L3 host work)", pjrt_total, total, 100.0*pjrt_total/total);
+}

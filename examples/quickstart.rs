@@ -1,0 +1,43 @@
+//! Quickstart: bring up the SparseServe coordinator on the real PJRT
+//! backend and stream tokens for a couple of prompts.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use sparseserve::config::ServingConfig;
+use sparseserve::coordinator::Server;
+use sparseserve::engine::PjrtBackend;
+use sparseserve::figures::real::demo_prompt;
+use sparseserve::runtime::Runtime;
+use sparseserve::scheduler::Scheduler;
+
+fn main() -> Result<()> {
+    // The engine (PJRT client + scheduler) lives on its own thread.
+    let server = Server::start(|| {
+        let rt = Arc::new(Runtime::load(Runtime::default_dir("tiny-llm"))?);
+        let spec = rt.manifest.model.clone();
+        // SparseServe config: 256-token DSA budget (16 blocks), offloaded
+        // KV with FlashH2D/FlashD2H transfers, layer-segmented prefill.
+        let mut cfg = ServingConfig::sparseserve(256, 64, spec.n_layers);
+        cfg.max_inject_tokens = spec.max_ctx * spec.n_layers;
+        let hbm = 8 << 20; // scaled-down "HBM" KV cache
+        let backend = PjrtBackend::new(rt, cfg.clone(), hbm, 512 << 20);
+        let sched = Scheduler::new(cfg, spec, hbm);
+        Ok((sched, Box::new(backend) as _))
+    });
+
+    println!("submitting two prompts...");
+    let h1 = server.submit(demo_prompt(120, 256, 1), 8);
+    let h2 = server.submit(demo_prompt(400, 256, 2), 8);
+
+    let t1 = h1.collect_tokens().map_err(|e| anyhow::anyhow!(e))?;
+    let t2 = h2.collect_tokens().map_err(|e| anyhow::anyhow!(e))?;
+    println!("request 1 -> {t1:?}");
+    println!("request 2 -> {t2:?}");
+
+    server.shutdown()?;
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! End-to-end validation run (EXPERIMENTS.md §E2E): serve a Poisson
+//! trace of mixed-length requests on the REAL three-layer stack
+//! (tiny-llm artifacts via PJRT) and report TTFT / TBT / throughput.
+//!
+//!     make artifacts && cargo run --release --example serve_trace -- \
+//!         --requests 8 --rate 2.0 --system sparseserve
+//!
+//! `--system vllm|vllm-s|vllm-so|sparseserve` switches the serving policy
+//! (same comparison set as the paper's §4.2, at tiny scale).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+use sparseserve::baselines;
+use sparseserve::engine::{Engine, PjrtBackend};
+use sparseserve::runtime::Runtime;
+use sparseserve::scheduler::Scheduler;
+use sparseserve::util::cli::Args;
+use sparseserve::workload::{generate_with_tokens, WorkloadSpec};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n = args.usize("requests", 8);
+    let rate = args.f64("rate", 2.0);
+    let system = args.get_or("system", "sparseserve");
+    let seed = args.usize("seed", 7) as u64;
+
+    let rt = Arc::new(Runtime::load(Runtime::default_dir("tiny-llm"))?);
+    let spec = rt.manifest.model.clone();
+    let mut cfg = baselines::by_name(&system, 256, 64, spec.n_layers)
+        .ok_or_else(|| anyhow!("unknown system '{system}'"))?;
+    cfg.max_inject_tokens = spec.max_ctx * spec.n_layers;
+    cfg.chunk_tokens = 64;
+    cfg.t_max = 512;
+
+    let hbm = args.usize("hbm-bytes", 8 << 20);
+    let backend = PjrtBackend::new(rt.clone(), cfg.clone(), hbm, 512 << 20);
+    let sched = Scheduler::new(cfg, spec.clone(), hbm);
+    let engine = Engine::new(sched, Box::new(backend));
+
+    let wl = WorkloadSpec::tiny(rate, seed);
+    let trace = generate_with_tokens(&wl, n, 1, spec.vocab);
+    println!("[serve_trace] system={system} backend=pjrt model={} n={n} rate={rate}rps", spec.name);
+    for r in &trace {
+        println!("  req {}: prompt={} max_new={} arrival={:.2}s", r.id, r.prompt_len, r.max_new_tokens, r.arrival_s);
+    }
+
+    let t0 = std::time::Instant::now();
+    let report = engine.run_trace(trace, 1e6)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("[serve_trace] wall time {wall:.1}s, {} PJRT executions", rt.exec_count.load(std::sync::atomic::Ordering::Relaxed));
+    println!("[serve_trace] {}", report.metrics.summary());
+    println!(
+        "[serve_trace] TTFT p50={:.3}s | TBT p50={:.4}s p99={:.4}s | loads/iter p99={:.0}",
+        report.metrics.ttft.p50(),
+        report.metrics.tbt.p50(),
+        report.metrics.tbt.p99(),
+        report.metrics.blocks_loaded_per_iter.p99(),
+    );
+    for id in 1..=n as u32 {
+        if let Some(r) = report.requests.get(&id) {
+            println!("  req {id}: generated {:?}", &r.generated);
+        }
+    }
+    Ok(())
+}

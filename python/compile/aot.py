@@ -1,0 +1,317 @@
+"""AOT compiler: lower every L2 entry point to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+results via ``HloModuleProto::from_text_file`` and executes them on the
+PJRT CPU client. Python never runs on the request path.
+
+Interchange format is HLO text, NOT ``lowered.compiler_ir("hlo")`` proto
+serialization: jax >= 0.5 emits 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Outputs under ``<out>/<config-name>/``:
+- ``<entry>.hlo.txt``   one per entry point x shape bucket
+- ``weights.bin``       all weights, f32 little-endian, manifest order
+- ``manifest.json``     model config + weight layout + entry signatures
+- ``golden.json``       greedy-decode token traces for rust parity tests
+
+Usage: python -m compile.aot --out ../artifacts [--config tiny-llm]
+       [--fast] [--skip-golden]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import pipeline as P
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(fn, *specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+class Artifact:
+    def __init__(self, name, kind, bucket, fn, specs):
+        self.name = name
+        self.kind = kind
+        self.bucket = bucket
+        self.fn = fn
+        self.specs = specs
+
+    def describe(self):
+        return {
+            "name": self.name,
+            "file": f"{self.name}.hlo.txt",
+            "kind": self.kind,
+            "bucket": self.bucket,
+            "params": [
+                {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+                for s in self.specs
+            ],
+        }
+
+
+def build_artifacts(cfg: M.ModelConfig, buckets) -> list[Artifact]:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    f, v, nb, bs = cfg.ffn_dim, cfg.vocab, cfg.max_blocks, cfg.block_size
+    lw_specs = {
+        "attn_norm": spec([d]),
+        "wq": spec([d, hq * dh]),
+        "wk": spec([d, hkv * dh]),
+        "wv": spec([d, hkv * dh]),
+        "wo": spec([hq * dh, d]),
+        "ffn_norm": spec([d]),
+        "w_gate": spec([d, f]),
+        "w_up": spec([d, f]),
+        "w_down": spec([f, d]),
+    }
+    arts: list[Artifact] = []
+
+    # ---- embed: one bucket per token-count we ever embed ----
+    embed_ns = sorted(set(buckets["decode_b"]) | set(buckets["prefill_t"]))
+    for n in embed_ns:
+        arts.append(
+            Artifact(
+                f"embed_{n}", "embed", {"n": n},
+                lambda tokens, emb: M.embed(tokens, emb),
+                [spec([n], I32), spec([v, d])],
+            )
+        )
+
+    # ---- prefill_layer (layer-segmented / plain: no past) ----
+    attn_names = ("attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w_gate", "w_up", "w_down")
+    for t in buckets["prefill_t"]:
+        def pf(x, pos_offset, seg_mask, *ws, _t=t):
+            empty = jnp.zeros((hkv, 0, dh), dtype=F32)
+            emask = jnp.zeros((0,), dtype=F32)
+            return M.prefill_layer(cfg, x, pos_offset, seg_mask, empty, empty, emask, *ws)
+
+        arts.append(
+            Artifact(
+                f"prefill_layer_{t}", "prefill_layer", {"t": t},
+                pf,
+                [spec([t, d]), spec([], I32), spec([t])] + [lw_specs[n] for n in attn_names],
+            )
+        )
+
+    # ---- prefill_chunk (chunked-prefill baseline: padded past) ----
+    p_max = buckets["chunk_past"]
+    for t in buckets["chunk_t"]:
+        def pfc(x, pos_offset, seg_mask, past_k, past_v, past_mask, *ws):
+            return M.prefill_layer(cfg, x, pos_offset, seg_mask, past_k, past_v, past_mask, *ws)
+
+        arts.append(
+            Artifact(
+                f"prefill_chunk_{t}", "prefill_chunk", {"t": t, "past": p_max},
+                pfc,
+                [
+                    spec([t, d]), spec([], I32), spec([t]),
+                    spec([hkv, p_max, dh]), spec([hkv, p_max, dh]), spec([p_max]),
+                ]
+                + [lw_specs[n] for n in attn_names],
+            )
+        )
+
+    # ---- block metadata over a layer's prefill keys ----
+    for t in buckets["prefill_t"]:
+        if t % bs:
+            continue
+        arts.append(
+            Artifact(
+                f"block_meta_{t}", "block_meta", {"t": t},
+                lambda k_layer: M.build_block_metadata(cfg, k_layer),
+                [spec([hkv, t, dh])],
+            )
+        )
+
+    # ---- decode_qkv / decode_attend per batch bucket ----
+    for b in buckets["decode_b"]:
+        arts.append(
+            Artifact(
+                f"decode_qkv_{b}", "decode_qkv", {"b": b},
+                lambda x, pos, lo, hi, mm, an, wq, wk, wv: M.decode_qkv(
+                    cfg, x, pos, lo, hi, mm, an, wq, wk, wv
+                ),
+                [
+                    spec([b, d]), spec([b], I32),
+                    spec([b, hkv, nb, dh]), spec([b, hkv, nb, dh]), spec([b, hkv, nb]),
+                    lw_specs["attn_norm"], lw_specs["wq"], lw_specs["wk"], lw_specs["wv"],
+                ],
+            )
+        )
+        for k in buckets["budget_k"]:
+            s = k * bs
+            arts.append(
+                Artifact(
+                    f"decode_attend_{b}_{k}", "decode_attend", {"b": b, "k": k},
+                    lambda x, q, kk, kv, km, wo, fn_, wg, wu, wd: M.decode_attend(
+                        cfg, x, q, kk, kv, km, wo, fn_, wg, wu, wd
+                    ),
+                    [
+                        spec([b, d]), spec([b, hq, dh]),
+                        spec([b, hkv, s, dh]), spec([b, hkv, s, dh]), spec([b, hkv, s]),
+                        lw_specs["wo"], lw_specs["ffn_norm"],
+                        lw_specs["w_gate"], lw_specs["w_up"], lw_specs["w_down"],
+                    ],
+                )
+            )
+        arts.append(
+            Artifact(
+                f"lm_head_{b}", "lm_head", {"b": b},
+                M.lm_head,
+                [spec([b, d]), spec([d]), spec([d, v])],
+            )
+        )
+    return arts
+
+
+def default_buckets(cfg: M.ModelConfig, fast: bool):
+    if fast:
+        return {
+            "prefill_t": [64, 256],
+            "chunk_t": [64],
+            "chunk_past": 256,
+            "decode_b": [1, 2],
+            "budget_k": [4, cfg.max_blocks],
+        }
+    return {
+        "prefill_t": [64, 256, 1024, 2048],
+        "chunk_t": [64, 256],
+        "chunk_past": 2048,
+        "decode_b": [1, 2, 4, 8],
+        "budget_k": [4, 16, cfg.max_blocks],
+    }
+
+
+def make_goldens(cfg, weights, buckets):
+    """Greedy-token traces the rust pipeline must reproduce exactly."""
+    rng = np.random.default_rng(42)
+    cases = []
+    specs = [
+        ("full_budget_short", 50, 8, None),
+        ("sparse_budget4", 100, 8, 4),
+        ("sparse_budget16", 150, 6, 16),
+    ]
+    for name, plen, steps, budget in specs:
+        if budget is not None and budget not in buckets["budget_k"]:
+            continue
+        prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+        toks, _ = P.run_pipeline(
+            cfg, weights, prompt, steps,
+            budget_blocks=budget, seg_buckets=buckets["prefill_t"],
+        )
+        cases.append(
+            {
+                "name": name,
+                "prompt": prompt.tolist(),
+                "n_steps": steps,
+                "budget_blocks": budget,
+                "tokens": toks.tolist(),
+            }
+        )
+    return cases
+
+
+def compile_config(cfg: M.ModelConfig, out_dir: str, seed: int, fast: bool, skip_golden: bool):
+    os.makedirs(out_dir, exist_ok=True)
+    buckets = default_buckets(cfg, fast)
+    arts = build_artifacts(cfg, buckets)
+
+    weights = M.init_weights(cfg, seed=seed)
+    shapes = M.weight_shapes(cfg)
+    offset = 0
+    weight_entries = []
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as fbin:
+        for name, shape in shapes.items():
+            arr = weights[name]
+            assert arr.shape == tuple(shape) and arr.dtype == np.float32
+            fbin.write(arr.tobytes())
+            weight_entries.append(
+                {"name": name, "shape": list(shape), "offset_f32": offset}
+            )
+            offset += arr.size
+
+    entries = []
+    for art in arts:
+        t0 = time.time()
+        text = to_hlo_text(art.fn, *art.specs)
+        path = os.path.join(out_dir, f"{art.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(art.describe())
+        print(f"  {art.name}: {len(text)} chars in {time.time() - t0:.1f}s")
+
+    manifest = {
+        "model": {
+            "name": cfg.name,
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.head_dim,
+            "ffn_dim": cfg.ffn_dim,
+            "block_size": cfg.block_size,
+            "max_ctx": cfg.max_ctx,
+            "rope_theta": cfg.rope_theta,
+        },
+        "seed": seed,
+        "buckets": buckets,
+        "weights_bin": "weights.bin",
+        "total_f32": offset,
+        "weights": weight_entries,
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    if not skip_golden:
+        t0 = time.time()
+        goldens = make_goldens(cfg, weights, buckets)
+        with open(os.path.join(out_dir, "golden.json"), "w") as f:
+            json.dump(goldens, f)
+        print(f"  goldens: {len(goldens)} cases in {time.time() - t0:.1f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--config", default="tiny-llm", choices=sorted(M.CONFIGS))
+    ap.add_argument("--all-configs", action="store_true")
+    ap.add_argument("--seed", type=int, default=1234)
+    ap.add_argument("--fast", action="store_true", help="small bucket set (tests)")
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+
+    names = sorted(M.CONFIGS) if args.all_configs else [args.config]
+    for name in names:
+        cfg = M.CONFIGS[name]
+        out_dir = os.path.join(args.out, name)
+        print(f"[aot] {name} -> {out_dir}")
+        compile_config(cfg, out_dir, args.seed, args.fast, args.skip_golden)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""L1 pallas kernels for SparseServe (interpret=True on CPU PJRT).
+
+Kernel inventory:
+- block_meta:        metadata construction (mean / cuboid) per KV block
+- block_select:      block criticality scoring against metadata
+- sparse_attention:  decode attention over gathered top-k blocks
+- prefill_attention: tiled causal attention for prefill segments
+- ref:               pure-jnp oracle for all of the above
+"""
+
+from . import ref  # noqa: F401
+from .block_meta import block_meta_cuboid, block_meta_mean  # noqa: F401
+from .block_select import score_blocks_cuboid, score_blocks_mean  # noqa: F401
+from .prefill_attention import prefill_causal_attention  # noqa: F401
+from .sparse_attention import sparse_decode_attention  # noqa: F401

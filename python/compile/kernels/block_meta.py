@@ -1,0 +1,67 @@
+"""Pallas kernels for KV-block metadata construction (paper §2.2 / §3.1).
+
+DSAs represent each KV block with compact metadata used to estimate the
+block's criticality for a query token. SparseServe's default is the
+cuboid metadata of ArkVale (bounding box of the block's keys); the mean
+metadata of InfLLM is also provided.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): one grid step per
+(head, block); the [Bs, D] key tile is staged HBM->VMEM by the BlockSpec
+and reduced along the token axis on the VPU. Bs*D floats (16*32 here, up
+to 32*128 at paper scale = 16 KB) fits VMEM trivially, so the kernel is
+HBM-bandwidth-bound: one pass over the keys, 1/Bs (mean) or 2/Bs (cuboid)
+of the input volume written back.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _meta_mean_kernel(keys_ref, meta_ref):
+    # keys_ref: [1, 1, Bs, D] tile for one (head, block); reduce tokens.
+    meta_ref[...] = jnp.mean(keys_ref[...], axis=2)
+
+
+def _meta_cuboid_kernel(keys_ref, lo_ref, hi_ref):
+    k = keys_ref[...]
+    lo_ref[...] = jnp.min(k, axis=2)
+    hi_ref[...] = jnp.max(k, axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_meta_mean(keys: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """Mean-pool metadata. keys: [H, NB, Bs, D] -> [H, NB, D]."""
+    h, nb, bs, d = keys.shape
+    return pl.pallas_call(
+        _meta_mean_kernel,
+        grid=(h, nb),
+        in_specs=[pl.BlockSpec((1, 1, bs, d), lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, nb, d), keys.dtype),
+        interpret=interpret,
+    )(keys)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_meta_cuboid(
+    keys: jnp.ndarray, interpret: bool = True
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Bounding-cuboid metadata. keys: [H, NB, Bs, D] -> (lo, hi) [H, NB, D]."""
+    h, nb, bs, d = keys.shape
+    spec = pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0))
+    return pl.pallas_call(
+        _meta_cuboid_kernel,
+        grid=(h, nb),
+        in_specs=[pl.BlockSpec((1, 1, bs, d), lambda i, j: (i, j, 0, 0))],
+        out_specs=(spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((h, nb, d), keys.dtype),
+            jax.ShapeDtypeStruct((h, nb, d), keys.dtype),
+        ),
+        interpret=interpret,
+    )(keys)

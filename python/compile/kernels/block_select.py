@@ -1,0 +1,92 @@
+"""Pallas kernels for block criticality scoring (the DSA "select" step).
+
+For every query token, DSAs estimate each KV block's importance from its
+metadata and pick the top-k. The scoring is the compute-regular half
+(done here, on-device); the top-k and the residency decision (HBM hit or
+DRAM load) belong to the rust coordinator, which is why these kernels
+return dense per-block scores rather than indices.
+
+TPU mapping: scoring is a [NB, D] x [D] matvec per (batch, head) — at
+paper scale (NB=1024, D=128) a 512 KB tile that sits in VMEM and feeds
+the MXU as a skinny matmul; the cuboid variant is two VPU elementwise
+passes + a row reduction. The additive mask folds padding blocks to
+NEG_INF so rust's top-k never selects them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_mean_kernel(q_ref, meta_ref, mask_ref, out_ref):
+    # q: [1, 1, D], meta: [1, 1, NB, D], mask/out: [1, 1, NB]
+    q = q_ref[0, 0, :].astype(jnp.float32)
+    meta = meta_ref[0, 0, :, :].astype(jnp.float32)
+    scores = jnp.dot(meta, q, preferred_element_type=jnp.float32)
+    out_ref[0, 0, :] = (scores + mask_ref[0, 0, :].astype(jnp.float32)).astype(
+        out_ref.dtype
+    )
+
+
+def _score_cuboid_kernel(q_ref, lo_ref, hi_ref, mask_ref, out_ref):
+    q = q_ref[0, 0, :].astype(jnp.float32)
+    lo = lo_ref[0, 0, :, :].astype(jnp.float32)
+    hi = hi_ref[0, 0, :, :].astype(jnp.float32)
+    ql = lo * q[None, :]
+    qh = hi * q[None, :]
+    scores = jnp.sum(jnp.maximum(ql, qh), axis=-1)
+    out_ref[0, 0, :] = (scores + mask_ref[0, 0, :].astype(jnp.float32)).astype(
+        out_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def score_blocks_mean(
+    q: jnp.ndarray, meta: jnp.ndarray, mask: jnp.ndarray, interpret: bool = True
+) -> jnp.ndarray:
+    """q: [B, H, D], meta: [B, H, NB, D], mask: [B, H, NB] -> scores [B, H, NB]."""
+    b, h, d = q.shape
+    nb = meta.shape[2]
+    return pl.pallas_call(
+        _score_mean_kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, nb, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, nb), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, nb), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, nb), jnp.float32),
+        interpret=interpret,
+    )(q, meta, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def score_blocks_cuboid(
+    q: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    mask: jnp.ndarray,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q: [B, H, D], lo/hi: [B, H, NB, D], mask: [B, H, NB] -> scores [B, H, NB]."""
+    b, h, d = q.shape
+    nb = lo.shape[2]
+    meta_spec = pl.BlockSpec((1, 1, nb, d), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        _score_cuboid_kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),
+            meta_spec,
+            meta_spec,
+            pl.BlockSpec((1, 1, nb), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, nb), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, nb), jnp.float32),
+        interpret=interpret,
+    )(q, lo, hi, mask)

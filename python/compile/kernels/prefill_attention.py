@@ -1,0 +1,132 @@
+"""Pallas tiled causal attention for prefill segments.
+
+Used by both prefill strategies: layer-segmented prefill runs it once per
+layer over the whole prompt (kv_offset=0, Tk=T); the chunked-prefill
+baseline runs it per chunk with the accumulated KV of preceding chunks
+(kv_offset = Tk - T), which is exactly the repeated-KV-reload cost the
+paper's Fig. 16b charges against chunking.
+
+TPU mapping: flash-attention tiling. Grid (H, T/QT, Tk/KT); each step
+stages one q-tile (reused across the inner kv loop — BlockSpec maps it
+independently of t_kv, so it stays VMEM-resident) and one kv-tile, and
+folds into per-row online-softmax accumulators in VMEM scratch. The
+causal predicate is computed from absolute tile indices with iota, so
+fully-masked tiles cost one predicated VPU pass (Mosaic skips the MXU
+work when the whole tile folds to NEG_INF). VMEM footprint per step:
+QT*D + 2*KT*D inputs + QT*(D+2) accumulators — with QT=KT=128, D=128
+that is ~200 KB, comfortably double-buffered in 16 MB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _prefill_kernel(
+    q_ref, k_ref, v_ref, kvmask_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, kv_offset, q_tile, k_tile, n_kv
+):
+    tq = pl.program_id(1)
+    tk = pl.program_id(2)
+
+    @pl.when(tk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, :].astype(jnp.float32)  # [QT, D]
+    k = k_ref[0, :, :].astype(jnp.float32)  # [KT, D]
+    v = v_ref[0, :, :].astype(jnp.float32)  # [KT, D]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [QT, KT]
+    s = s + kvmask_ref[0, :].astype(jnp.float32)[None, :]  # padded-KV mask
+
+    # Causal mask on absolute positions: query row i (abs qi = tq*QT + i)
+    # may attend to kv col j (abs kj = tk*KT + j) iff kj <= qi + kv_offset.
+    qi = tq * q_tile + jax.lax.broadcasted_iota(jnp.int32, (q_tile, k_tile), 0)
+    kj = tk * k_tile + jax.lax.broadcasted_iota(jnp.int32, (q_tile, k_tile), 1)
+    s = jnp.where(kj <= qi + kv_offset, s, NEG_INF)
+
+    m_prev = m_ref[...]  # [QT]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    # Guard fully-masked rows (can only happen transiently before any valid
+    # kv tile has been seen): keep exp args finite.
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])  # [QT, KT]
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_new = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(tk == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("kv_offset", "q_tile", "k_tile", "interpret"))
+def prefill_causal_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    kvmask: jnp.ndarray | None = None,
+    kv_offset: int = 0,
+    q_tile: int = 16,
+    k_tile: int = 16,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Tiled causal attention. q: [H, T, D], k/v: [H, Tk, D] -> [H, T, D].
+
+    ``kv_offset`` shifts the causal diagonal for chunked prefill (the chunk's
+    first query sits at absolute position ``kv_offset`` relative to k[0]).
+    ``kvmask`` [Tk] is additive (NEG_INF for padded past-KV slots; chunked
+    prefill pads the accumulated past to a static bucket).
+    T and Tk must be multiples of the tile sizes (the model pads segments).
+    """
+    h, t, d = q.shape
+    tk_len = k.shape[1]
+    if kvmask is None:
+        kvmask = jnp.zeros((tk_len,), dtype=jnp.float32)
+    if t % q_tile or tk_len % k_tile:
+        raise ValueError(f"T={t}/Tk={tk_len} not multiples of tiles {q_tile}/{k_tile}")
+    n_q, n_kv = t // q_tile, tk_len // k_tile
+    scale = 1.0 / (d**0.5)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    kernel = functools.partial(
+        _prefill_kernel,
+        scale=scale,
+        kv_offset=kv_offset,
+        q_tile=q_tile,
+        k_tile=k_tile,
+        n_kv=n_kv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, q_tile, d), lambda i, tq, tk: (i, tq, 0)),
+            pl.BlockSpec((1, k_tile, d), lambda i, tq, tk: (i, tk, 0)),
+            pl.BlockSpec((1, k_tile, d), lambda i, tq, tk: (i, tk, 0)),
+            pl.BlockSpec((1, k_tile), lambda i, tq, tk: (0, tk)),
+        ],
+        out_specs=pl.BlockSpec((1, q_tile, d), lambda i, tq, tk: (i, tq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_tile,), jnp.float32),
+            pltpu.VMEM((q_tile,), jnp.float32),
+            pltpu.VMEM((q_tile, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, kvmask.reshape(1, tk_len))

@@ -1,0 +1,121 @@
+"""Pure-jnp reference oracle for every L1 pallas kernel.
+
+These functions define the *semantics* the kernels must match; pytest
+(`python/tests/`) asserts allclose between each kernel (interpret=True)
+and its oracle across hypothesis-driven shape/dtype sweeps.
+
+Conventions
+-----------
+- ``H``  : number of (query) attention heads
+- ``NB`` : number of KV blocks (padded to a static maximum)
+- ``Bs`` : tokens per KV block
+- ``S``  : gathered KV length for sparse decode, ``S = K * Bs``
+- ``T``  : prompt/segment length for prefill
+- ``D``  : head dimension
+- Masks are additive: 0.0 for valid positions, ``NEG_INF`` for invalid.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def block_meta_mean(keys: jnp.ndarray) -> jnp.ndarray:
+    """Mean-pool block metadata (InfLLM-style).
+
+    keys: [H, NB, Bs, D] -> meta [H, NB, D]
+    """
+    return jnp.mean(keys, axis=2)
+
+
+def block_meta_cuboid(keys: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Bounding-cuboid block metadata (ArkVale-style).
+
+    keys: [H, NB, Bs, D] -> (lo, hi) each [H, NB, D]
+    """
+    return jnp.min(keys, axis=2), jnp.max(keys, axis=2)
+
+
+def score_blocks_mean(q: jnp.ndarray, meta: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Approximate criticality score of each block: q . mean(K_block).
+
+    q: [B, H, D], meta: [B, H, NB, D], mask: [B, H, NB] (additive)
+    -> scores [B, H, NB]
+    """
+    scores = jnp.einsum("bhd,bhnd->bhn", q, meta)
+    return scores + mask
+
+
+def score_blocks_cuboid(
+    q: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Upper bound of q . k over the block's bounding cuboid.
+
+    For each dim, the max of q_d * k_d over k_d in [lo_d, hi_d] is
+    max(q_d * lo_d, q_d * hi_d); summing dims gives a tight upper bound
+    used as the criticality estimate (ArkVale's cuboid score).
+
+    q: [B, H, D], lo/hi: [B, H, NB, D], mask: [B, H, NB] -> [B, H, NB]
+    """
+    ql = jnp.einsum("bhd,bhnd->bhnd", q, lo)
+    qh = jnp.einsum("bhd,bhnd->bhnd", q, hi)
+    return jnp.sum(jnp.maximum(ql, qh), axis=-1) + mask
+
+
+def sparse_decode_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Decode attention over gathered (selected) KV blocks.
+
+    q: [B, H, D], k/v: [B, H, S, D], mask: [B, H, S] (additive)
+    -> out [B, H, D]
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    s = s + mask.astype(jnp.float32)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhs,bhsd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def prefill_causal_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    kvmask: jnp.ndarray | None = None,
+    kv_offset: int = 0,
+) -> jnp.ndarray:
+    """Causal self-attention over a prompt segment.
+
+    q: [H, T, D], k/v: [H, Tk, D]. ``kv_offset`` is the absolute position of
+    q[0] minus the absolute position of k[0]; for plain prefill it is 0 and
+    Tk == T, for chunked prefill the chunk attends to all preceding KV so
+    kv_offset = Tk - T. Query i may attend to kv j iff j <= i + kv_offset.
+    -> out [H, T, D]
+    """
+    d = q.shape[-1]
+    t, tk = q.shape[1], k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    s = jnp.einsum("htd,hsd->hts", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if kvmask is not None:
+        s = s + kvmask.astype(jnp.float32)[None, None, :]
+    qi = jnp.arange(t)[:, None]
+    kj = jnp.arange(tk)[None, :]
+    causal = kj <= qi + kv_offset
+    s = jnp.where(causal[None, :, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hts,hsd->htd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def topk_blocks(scores: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Indices of the top-k critical blocks per head. scores: [B, H, NB]."""
+    import jax
+
+    _, idx = jax.lax.top_k(scores, k)
+    return idx

@@ -1,0 +1,113 @@
+"""Pallas sparse decode attention — the paper's compute hot-spot.
+
+One decode step attends only to the KV blocks the DSA selected (gathered
+by the rust coordinator via FlashH2D into a contiguous [B, H, S, D]
+staging tensor, S = top_k * block_size, plus an additive mask for padded
+or partially-filled blocks).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the CUDA original streams
+16 KB KV blocks through SRAM per threadblock. Here the grid is
+(B, H, S/S_TILE); each step the BlockSpec stages one (kv-tile) pair
+HBM->VMEM and the kernel folds it into an online-softmax accumulator
+(m, l, acc) held in VMEM scratch — the flash-attention recurrence:
+
+    m' = max(m, max(s));  l' = l*e^(m-m') + sum(e^(s-m'))
+    acc' = acc*e^(m-m') + e^(s-m') @ V
+
+VMEM per step: 2 * S_TILE * D * 4 B of KV + D accumulator — a few KB, so
+double-buffering the HBM->VMEM stream is free and the kernel is
+bandwidth-bound exactly like the paper's (the point of DSA is to shrink
+that bandwidth by S/ctx_len).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _sparse_attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, n_tiles):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)  # [D]
+    k = k_ref[0, 0, :, :].astype(jnp.float32)  # [S_TILE, D]
+    v = v_ref[0, 0, :, :].astype(jnp.float32)  # [S_TILE, D]
+    mask = mask_ref[0, 0, :].astype(jnp.float32)  # [S_TILE]
+
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale + mask  # [S_TILE]
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)  # [S_TILE]
+    l_new = l_ref[0] * alpha + jnp.sum(p)
+    acc_new = acc_ref[...] * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(t == n_tiles - 1)
+    def _finish():
+        o_ref[0, 0, :] = (acc_ref[...] / l_ref[0]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("s_tile", "interpret"))
+def sparse_decode_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray,
+    s_tile: int = 16,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Online-softmax attention over gathered KV blocks.
+
+    q: [B, H, D], k/v: [B, H, S, D], mask: [B, H, S] (additive; NEG_INF for
+    padded slots) -> out [B, H, D]. S must be a multiple of ``s_tile``
+    (rust pads the gather to whole blocks, so S = top_k * block_size).
+    """
+    b, h, d = q.shape
+    s = k.shape[2]
+    if s % s_tile != 0:
+        raise ValueError(f"S={s} not a multiple of s_tile={s_tile}")
+    n_tiles = s // s_tile
+    scale = 1.0 / (d**0.5)
+
+    kernel = functools.partial(_sparse_attn_kernel, scale=scale, n_tiles=n_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda i, j, t: (i, j, 0)),
+            pl.BlockSpec((1, 1, s_tile, d), lambda i, j, t: (i, j, t, 0)),
+            pl.BlockSpec((1, 1, s_tile, d), lambda i, j, t: (i, j, t, 0)),
+            pl.BlockSpec((1, 1, s_tile), lambda i, j, t: (i, j, t)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, j, t: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu_scratch((1,), jnp.float32),
+            pltpu_scratch((1,), jnp.float32),
+            pltpu_scratch((d,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, mask)
+
+
+def pltpu_scratch(shape, dtype):
+    """VMEM scratch shape (works under interpret mode on CPU too)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,403 @@
+"""L2: the jax model — a llama-style transformer wired for SparseServe.
+
+The model is *deliberately split* into per-layer / per-phase entry points so
+the rust coordinator (L3) owns the control loop the paper's system
+contribution lives in: layer-segmented prefill calls ``prefill_layer`` once
+per layer over the whole prompt; decode calls ``decode_qkv`` (projection +
+RoPE + DSA block scoring), hands control back to rust for top-k selection and
+HBM/DRAM block residency (FlashH2D), then calls ``decode_attend`` (sparse
+attention over the gathered blocks + output projection + FFN).
+
+Every entry point is a pure function of arrays (weights are parameters, not
+constants) so a single AOT-lowered executable serves all layers.
+
+Python runs only at build time: ``aot.py`` lowers these functions to HLO
+text; the rust runtime loads and executes them via PJRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import (
+    block_meta_cuboid,
+    block_meta_mean,
+    prefill_causal_attention,
+    ref,
+    score_blocks_cuboid,
+    score_blocks_mean,
+    sparse_decode_attention,
+)
+
+NEG_INF = ref.NEG_INF
+RMS_EPS = 1e-5
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (llama-family)."""
+
+    name: str = "tiny-llm"
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 32
+    ffn_dim: int = 512
+    block_size: int = 16  # tokens per KV block (the DSA selection unit)
+    max_ctx: int = 2048
+    rope_theta: float = 10000.0
+
+    @property
+    def max_blocks(self) -> int:
+        return self.max_ctx // self.block_size
+
+    @property
+    def group(self) -> int:
+        """Query heads per KV head (GQA group size)."""
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+
+TINY_LLM = ModelConfig()
+TINY_GQA = ModelConfig(name="tiny-gqa", n_kv_heads=2)
+
+CONFIGS = {c.name: c for c in (TINY_LLM, TINY_GQA)}
+
+LAYER_WEIGHT_NAMES = (
+    "attn_norm",
+    "wq",
+    "wk",
+    "wv",
+    "wo",
+    "ffn_norm",
+    "w_gate",
+    "w_up",
+    "w_down",
+)
+GLOBAL_WEIGHT_NAMES = ("embedding", "final_norm", "lm_head")
+
+
+def weight_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    """Name -> shape for every weight tensor, in a stable order."""
+    d, hq, hkv, dh, f = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.ffn_dim
+    shapes: Dict[str, tuple] = {"embedding": (cfg.vocab, d)}
+    per_layer = {
+        "attn_norm": (d,),
+        "wq": (d, hq * dh),
+        "wk": (d, hkv * dh),
+        "wv": (d, hkv * dh),
+        "wo": (hq * dh, d),
+        "ffn_norm": (d,),
+        "w_gate": (d, f),
+        "w_up": (d, f),
+        "w_down": (f, d),
+    }
+    for i in range(cfg.n_layers):
+        for n, s in per_layer.items():
+            shapes[f"l{i}.{n}"] = s
+    shapes["final_norm"] = (d,)
+    shapes["lm_head"] = (d, cfg.vocab)
+    return shapes
+
+
+def init_weights(cfg: ModelConfig, seed: int = 1234) -> Dict[str, np.ndarray]:
+    """Deterministic random weights (the repo ships no pretrained model;
+    serving correctness/perf does not depend on weight values)."""
+    rng = np.random.default_rng(seed)
+    out: Dict[str, np.ndarray] = {}
+    for name, shape in weight_shapes(cfg).items():
+        if name.endswith("norm"):
+            w = np.ones(shape, dtype=np.float32)
+        else:
+            fan_in = shape[0]
+            w = (rng.standard_normal(shape) / np.sqrt(fan_in)).astype(np.float32)
+        out[name] = w
+    return out
+
+
+def layer_weights(weights: Dict[str, np.ndarray], i: int) -> list:
+    """The per-layer weight list in LAYER_WEIGHT_NAMES order."""
+    return [weights[f"l{i}.{n}"] for n in LAYER_WEIGHT_NAMES]
+
+
+# --------------------------------------------------------------------------
+# Primitive blocks
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + RMS_EPS) * w).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float, pos_axis: int = -2) -> jnp.ndarray:
+    """Rotary embedding. ``positions`` runs along ``pos_axis`` of x
+    (default -2: x is [H, T, D] or [B, H, D] with positions [T] / [B] —
+    for the decode case pass pos_axis=0)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) * 2.0 / d))
+    ang = positions.astype(jnp.float32)[:, None] * freqs  # [L, half]
+    # reshape so L lands on pos_axis and half on the last axis
+    pos_axis = pos_axis % x.ndim
+    shape = [1] * x.ndim
+    shape[pos_axis] = ang.shape[0]
+    shape[-1] = half
+    ang = ang.reshape(shape)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(
+        x.dtype
+    )
+
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    g = x @ w_gate
+    return (jax.nn.silu(g) * (x @ w_up)) @ w_down
+
+
+def _pick_tile(n: int) -> int:
+    """Largest flash tile in {128, 64, 32, 16, 8} dividing n.
+
+    128x128 q/kv tiles keep the VMEM footprint at ~200 KB (q + k + v +
+    accumulators at Dh<=128) while quartering the grid-loop trip count
+    versus 64 — the dominant prefill cost under interpret mode and a
+    better MXU shape on real TPUs.
+    """
+    for t in (128, 64, 32, 16, 8):
+        if n % t == 0:
+            return t
+    return n  # tiny odd segment: single tile
+
+
+def repeat_kv(x: jnp.ndarray, group: int, axis: int = 1) -> jnp.ndarray:
+    """Expand a KV-head axis to the query-head count (GQA)."""
+    if group == 1:
+        return x
+    return jnp.repeat(x, group, axis=axis)
+
+
+# --------------------------------------------------------------------------
+# Entry points (AOT-lowered; every array argument becomes an HLO parameter)
+# --------------------------------------------------------------------------
+
+
+def embed(tokens: jnp.ndarray, embedding: jnp.ndarray):
+    """tokens [T] i32 -> hidden [T, d]."""
+    return (jnp.take(embedding, tokens, axis=0),)
+
+
+def prefill_layer(
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # [T, d]
+    pos_offset: jnp.ndarray,  # scalar i32: absolute position of x[0]
+    seg_mask: jnp.ndarray,  # [T] additive; NEG_INF on padded tail slots
+    past_k: jnp.ndarray,  # [Hkv, P, Dh] roped keys of preceding chunks (P may be 0)
+    past_v: jnp.ndarray,  # [Hkv, P, Dh]
+    past_mask: jnp.ndarray,  # [P] additive; NEG_INF on unused past slots
+    attn_norm, wq, wk, wv, wo, ffn_norm, w_gate, w_up, w_down,
+    interpret: bool = True,
+):
+    """One transformer layer over a prompt segment.
+
+    Layer-segmented prefill passes P=0 (no past) and the full prompt as one
+    segment; the chunked-prefill baseline passes the accumulated past KV
+    (padded to a static bucket) and the current chunk as the segment.
+
+    Returns (k [Hkv, T, Dh] roped, v [Hkv, T, Dh], x_out [T, d]).
+    The caller (rust) saves k/v into DRAM KV blocks via FlashD2H and
+    computes block metadata from k.
+    """
+    t = x.shape[0]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = past_k.shape[1]
+
+    h = rmsnorm(x, attn_norm)
+    q = (h @ wq).reshape(t, hq, dh).transpose(1, 0, 2)  # [Hq, T, Dh]
+    k = (h @ wk).reshape(t, hkv, dh).transpose(1, 0, 2)  # [Hkv, T, Dh]
+    v = (h @ wv).reshape(t, hkv, dh).transpose(1, 0, 2)
+
+    positions = pos_offset + jnp.arange(t, dtype=jnp.int32)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if p > 0:
+        kv_k = jnp.concatenate([past_k, k], axis=1)  # [Hkv, P+T, Dh]
+        kv_v = jnp.concatenate([past_v, v], axis=1)
+        kvmask = jnp.concatenate([past_mask, seg_mask], axis=0)
+        kv_offset = p
+    else:
+        kv_k, kv_v, kvmask, kv_offset = k, v, seg_mask, 0
+
+    g = cfg.group
+    attn = prefill_causal_attention(
+        q,
+        repeat_kv(kv_k, g, axis=0),
+        repeat_kv(kv_v, g, axis=0),
+        kvmask,
+        kv_offset=kv_offset,
+        q_tile=_pick_tile(t),
+        k_tile=_pick_tile(kv_k.shape[1]),
+        interpret=interpret,
+    )  # [Hq, T, Dh]
+
+    attn = attn.transpose(1, 0, 2).reshape(t, hq * dh)
+    x1 = x + attn @ wo
+    x2 = x1 + swiglu(rmsnorm(x1, ffn_norm), w_gate, w_up, w_down)
+    return k, v, x2
+
+
+def decode_qkv(
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # [B, d] layer input hidden
+    positions: jnp.ndarray,  # [B] i32 absolute positions of the new token
+    meta_lo: jnp.ndarray,  # [B, Hkv, NB, Dh] cuboid-lo (roped-key space)
+    meta_hi: jnp.ndarray,  # [B, Hkv, NB, Dh] cuboid-hi
+    meta_mask: jnp.ndarray,  # [B, Hkv, NB] additive; NEG_INF for absent blocks
+    attn_norm, wq, wk, wv,
+    interpret: bool = True,
+):
+    """Projection + RoPE + DSA block scoring for one decode step.
+
+    Returns (q [B, Hq, Dh], k [B, Hkv, Dh], v [B, Hkv, Dh],
+    scores [B, Hkv, NB]). Scores are group-aggregated (max over the query
+    heads of each KV head) so rust selects and gathers at KV-head
+    granularity; rust performs top-k and block residency (FlashH2D).
+    """
+    b = x.shape[0]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    h = rmsnorm(x, attn_norm)
+    q = (h @ wq).reshape(b, hq, dh)
+    k = (h @ wk).reshape(b, hkv, dh)
+    v = (h @ wv).reshape(b, hkv, dh)
+    q = rope(q, positions, cfg.rope_theta, pos_axis=0)
+    k = rope(k, positions, cfg.rope_theta, pos_axis=0)
+
+    g = cfg.group
+    lo = repeat_kv(meta_lo, g, axis=1)  # [B, Hq, NB, Dh]
+    hi = repeat_kv(meta_hi, g, axis=1)
+    m = repeat_kv(meta_mask, g, axis=1)
+    scores_q = score_blocks_cuboid(q, lo, hi, m, interpret=interpret)  # [B, Hq, NB]
+    scores = jnp.max(scores_q.reshape(b, hkv, g, -1), axis=2)  # [B, Hkv, NB]
+    return q, k, v, scores
+
+
+def decode_attend(
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # [B, d] residual (layer input)
+    q: jnp.ndarray,  # [B, Hq, Dh] from decode_qkv
+    kv_k: jnp.ndarray,  # [B, Hkv, S, Dh] gathered selected blocks (roped keys)
+    kv_v: jnp.ndarray,  # [B, Hkv, S, Dh]
+    kv_mask: jnp.ndarray,  # [B, Hkv, S] additive; NEG_INF on invalid slots
+    wo, ffn_norm, w_gate, w_up, w_down,
+    interpret: bool = True,
+):
+    """Sparse attention over the gathered blocks + out-proj + FFN.
+
+    Returns (x_out [B, d],).
+    """
+    b = x.shape[0]
+    hq, dh = cfg.n_heads, cfg.head_dim
+    g = cfg.group
+
+    # s_tile: pack several KV blocks per grid step — fewer while-loop
+    # iterations in the lowered HLO (the dominant decode cost on CPU; on
+    # TPU the larger tile also feeds the MXU better). Must divide S and be
+    # a multiple of block_size so the mask layout stays block-aligned.
+    s = kv_k.shape[2]
+    s_tile = next(t for t in (128, 64, 32, 16, 8) if s % t == 0 and t % min(cfg.block_size, t) == 0)
+    attn = sparse_decode_attention(
+        q,
+        repeat_kv(kv_k, g, axis=1),
+        repeat_kv(kv_v, g, axis=1),
+        repeat_kv(kv_mask, g, axis=1),
+        s_tile=min(s_tile, s),
+        interpret=interpret,
+    )  # [B, Hq, Dh]
+
+    x1 = x + attn.reshape(b, hq * dh) @ wo
+    x2 = x1 + swiglu(rmsnorm(x1, ffn_norm), w_gate, w_up, w_down)
+    return (x2,)
+
+
+def lm_head(x: jnp.ndarray, final_norm: jnp.ndarray, w_lm: jnp.ndarray):
+    """hidden [B, d] -> (greedy next token [B] i32, logits [B, V])."""
+    h = rmsnorm(x, final_norm)
+    logits = h @ w_lm
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits
+
+
+def build_block_metadata(
+    cfg: ModelConfig, k_layer: jnp.ndarray, interpret: bool = True
+):
+    """Cuboid metadata for whole blocks of a layer's roped keys.
+
+    k_layer: [Hkv, T, Dh] with T a multiple of block_size ->
+    (lo, hi) each [Hkv, NB, Dh]. Exposed as an AOT entry point so rust can
+    (re)build metadata after prefill; decode-time incremental metadata is
+    maintained by rust directly (running min/max over the open block).
+    """
+    hkv, t, dh = k_layer.shape
+    bs = cfg.block_size
+    nb = t // bs
+    blocks = k_layer.reshape(hkv, nb, bs, dh)
+    return block_meta_cuboid(blocks, interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# Dense reference (golden generator + parity oracle for the split pipeline)
+# --------------------------------------------------------------------------
+
+
+def reference_forward(
+    cfg: ModelConfig, weights: Dict[str, np.ndarray], tokens: np.ndarray
+) -> np.ndarray:
+    """Full dense forward over a token sequence -> logits [T, V].
+
+    Straight-line jnp implementation (no pallas, no splitting); the oracle
+    the AOT pipeline must reproduce when the DSA budget covers all blocks.
+    """
+    x = jnp.take(jnp.asarray(weights["embedding"]), jnp.asarray(tokens), axis=0)
+    t = x.shape[0]
+    positions = jnp.arange(t, dtype=jnp.int32)
+    for i in range(cfg.n_layers):
+        aw = {n: jnp.asarray(weights[f"l{i}.{n}"]) for n in LAYER_WEIGHT_NAMES}
+        h = rmsnorm(x, aw["attn_norm"])
+        q = (h @ aw["wq"]).reshape(t, cfg.n_heads, cfg.head_dim).transpose(1, 0, 2)
+        k = (h @ aw["wk"]).reshape(t, cfg.n_kv_heads, cfg.head_dim).transpose(1, 0, 2)
+        v = (h @ aw["wv"]).reshape(t, cfg.n_kv_heads, cfg.head_dim).transpose(1, 0, 2)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        attn = ref.prefill_causal_attention(
+            q, repeat_kv(k, cfg.group, 0), repeat_kv(v, cfg.group, 0)
+        )
+        attn = attn.transpose(1, 0, 2).reshape(t, cfg.n_heads * cfg.head_dim)
+        x1 = x + attn @ aw["wo"]
+        x = x1 + swiglu(rmsnorm(x1, aw["ffn_norm"]), aw["w_gate"], aw["w_up"], aw["w_down"])
+    h = rmsnorm(x, jnp.asarray(weights["final_norm"]))
+    return np.asarray(h @ jnp.asarray(weights["lm_head"]))
+
+
+def reference_generate(
+    cfg: ModelConfig,
+    weights: Dict[str, np.ndarray],
+    prompt: np.ndarray,
+    n_steps: int,
+) -> np.ndarray:
+    """Greedy generation by repeated dense forward (golden tokens)."""
+    toks = list(int(t) for t in prompt)
+    out = []
+    for _ in range(n_steps):
+        logits = reference_forward(cfg, weights, np.asarray(toks, dtype=np.int32))
+        nxt = int(np.argmax(logits[-1]))
+        toks.append(nxt)
+        out.append(nxt)
+    return np.asarray(out, dtype=np.int32)

@@ -1,0 +1,207 @@
+"""Build-time python mirror of the rust request pipeline.
+
+Runs the *exact* split dataflow the rust coordinator executes —
+per-layer prefill, then per-layer decode_qkv -> top-k -> gather ->
+decode_attend — entirely in python. Two uses:
+
+1. pytest parity: with a DSA budget covering all blocks, the split
+   pipeline must reproduce ``model.reference_forward`` (dense oracle).
+2. golden generation: ``aot.py`` dumps prompt/step tokens produced here;
+   the rust integration tests assert the PJRT pipeline emits the same
+   tokens (bitwise-deterministic greedy decode).
+
+Conventions shared with rust (rust/src/engine/pjrt_backend.rs):
+- prompt segments are padded up to a static bucket; padded tail is
+  masked with NEG_INF via seg_mask and padded k/v rows are discarded.
+- the open (partially filled) KV block is ALWAYS part of the gather set
+  (its in-block padding masked); sealed blocks are chosen by cuboid
+  score, top-(budget_blocks - 1).
+- gather order: selected sealed blocks by descending score, then the
+  open block last; invalid selection slots fully masked.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+NEG_INF = M.NEG_INF
+
+
+def pad_to_bucket(n: int, buckets: List[int]) -> int:
+    for b in sorted(buckets):
+        if n <= b:
+            return b
+    raise ValueError(f"length {n} exceeds largest bucket {max(buckets)}")
+
+
+class KvState:
+    """Per-request, per-layer KV store at block granularity (numpy).
+
+    Mirrors rust's DRAM-resident block layout: [Hkv, NB, Bs, Dh] for keys
+    and values, plus cuboid metadata for sealed blocks.
+    """
+
+    def __init__(self, cfg: M.ModelConfig):
+        self.cfg = cfg
+        hkv, nb, bs, dh = cfg.n_kv_heads, cfg.max_blocks, cfg.block_size, cfg.head_dim
+        self.k = np.zeros((hkv, nb, bs, dh), dtype=np.float32)
+        self.v = np.zeros((hkv, nb, bs, dh), dtype=np.float32)
+        self.lo = np.zeros((hkv, nb, dh), dtype=np.float32)
+        self.hi = np.zeros((hkv, nb, dh), dtype=np.float32)
+        self.len = 0  # tokens stored
+
+    @property
+    def n_sealed(self) -> int:
+        return self.len // self.cfg.block_size
+
+    @property
+    def open_fill(self) -> int:
+        return self.len % self.cfg.block_size
+
+    def append(self, k_t: np.ndarray, v_t: np.ndarray) -> None:
+        """Append one token's k/v ([Hkv, Dh] each), sealing blocks as they fill."""
+        bs = self.cfg.block_size
+        blk, off = divmod(self.len, bs)
+        self.k[:, blk, off, :] = k_t
+        self.v[:, blk, off, :] = v_t
+        self.len += 1
+        if self.len % bs == 0:  # sealed: build cuboid metadata
+            self.lo[:, blk, :] = self.k[:, blk].min(axis=1)
+            self.hi[:, blk, :] = self.k[:, blk].max(axis=1)
+
+    def append_prefill(self, k_seg: np.ndarray, v_seg: np.ndarray) -> None:
+        """Append a whole segment ([Hkv, T, Dh]) token by token."""
+        for t in range(k_seg.shape[1]):
+            self.append(k_seg[:, t, :], v_seg[:, t, :])
+
+
+def gather_blocks(state: KvState, scores: np.ndarray, budget_blocks: int):
+    """Select and gather blocks for one (request, layer) decode step.
+
+    scores: [Hkv, NB] (group-aggregated, NEG_INF for absent). Returns
+    (kv_k, kv_v, kv_mask, selected) with kv_k/kv_v [Hkv, S, Dh],
+    kv_mask [Hkv, S], S = budget_blocks * Bs, and selected the per-head
+    list of gathered block ids (for working-set accounting / Fig. 8).
+    """
+    cfg = state.cfg
+    hkv, bs, dh = cfg.n_kv_heads, cfg.block_size, cfg.head_dim
+    s_len = budget_blocks * bs
+    kv_k = np.zeros((hkv, s_len, dh), dtype=np.float32)
+    kv_v = np.zeros((hkv, s_len, dh), dtype=np.float32)
+    kv_mask = np.full((hkv, s_len), NEG_INF, dtype=np.float32)
+    selected: List[List[int]] = []
+
+    n_sealed = state.n_sealed
+    open_blk = n_sealed  # index of the open block (may be empty)
+    open_fill = state.open_fill
+
+    for h in range(hkv):
+        n_pick = min(budget_blocks - 1, n_sealed)
+        order = np.argsort(-scores[h, :n_sealed], kind="stable")[:n_pick]
+        sel = [int(b) for b in order]
+        for slot, b in enumerate(sel):
+            kv_k[h, slot * bs : (slot + 1) * bs] = state.k[h, b]
+            kv_v[h, slot * bs : (slot + 1) * bs] = state.v[h, b]
+            kv_mask[h, slot * bs : (slot + 1) * bs] = 0.0
+        # open block in the last slot (always included; padding masked)
+        if open_fill > 0:
+            slot = budget_blocks - 1
+            kv_k[h, slot * bs : slot * bs + open_fill] = state.k[h, open_blk, :open_fill]
+            kv_v[h, slot * bs : slot * bs + open_fill] = state.v[h, open_blk, :open_fill]
+            kv_mask[h, slot * bs : slot * bs + open_fill] = 0.0
+            sel.append(open_blk)
+        selected.append(sel)
+    return kv_k, kv_v, kv_mask, selected
+
+
+def run_pipeline(
+    cfg: M.ModelConfig,
+    weights: Dict[str, np.ndarray],
+    prompt: np.ndarray,
+    n_steps: int,
+    budget_blocks: int | None = None,
+    seg_buckets: List[int] | None = None,
+    use_pallas: bool = True,
+    record_selected: bool = False,
+):
+    """Prefill + greedy decode through the split entry points.
+
+    budget_blocks=None means full budget (DSA degenerates to dense —
+    parity case). Returns (tokens [n_steps], selected_trace) where
+    selected_trace[step][layer][head] is the gathered block-id list
+    (empty unless record_selected).
+    """
+    seg_buckets = seg_buckets or [64, 256, 1024, 2048]
+    w = {k: jnp.asarray(v) for k, v in weights.items()}
+    lw = lambda i, n: w[f"l{i}.{n}"]
+
+    states = [KvState(cfg) for _ in range(cfg.n_layers)]
+
+    # ---- prefill (layer-segmented: whole prompt, one layer at a time) ----
+    t_real = len(prompt)
+    t_pad = pad_to_bucket(t_real, seg_buckets)
+    toks = np.zeros((t_pad,), dtype=np.int32)
+    toks[:t_real] = prompt
+    seg_mask = np.where(np.arange(t_pad) < t_real, 0.0, NEG_INF).astype(np.float32)
+
+    (x,) = M.embed(jnp.asarray(toks), w["embedding"])
+    empty_k = jnp.zeros((cfg.n_kv_heads, 0, cfg.head_dim), dtype=jnp.float32)
+    empty_mask = jnp.zeros((0,), dtype=jnp.float32)
+    for i in range(cfg.n_layers):
+        k, v, x = M.prefill_layer(
+            cfg, x, jnp.int32(0), jnp.asarray(seg_mask),
+            empty_k, empty_k, empty_mask,
+            *(lw(i, n) for n in M.LAYER_WEIGHT_NAMES),
+            interpret=use_pallas,
+        )
+        states[i].append_prefill(np.asarray(k)[:, :t_real], np.asarray(v)[:, :t_real])
+
+    next_tok, _ = M.lm_head(x[t_real - 1 : t_real], w["final_norm"], w["lm_head"])
+    cur = int(np.asarray(next_tok)[0])
+
+    # ---- decode ----
+    out_tokens = [cur]
+    selected_trace: List[List[List[int]]] = []
+    nb = cfg.max_blocks
+    for step in range(n_steps - 1):
+        pos = states[0].len  # absolute position of the new token
+        (x,) = M.embed(jnp.asarray([cur], dtype=jnp.int32), w["embedding"])
+        step_selected: List[List[int]] = []
+        for i in range(cfg.n_layers):
+            st = states[i]
+            n_sealed = st.n_sealed
+            meta_mask = np.full((1, cfg.n_kv_heads, nb), NEG_INF, dtype=np.float32)
+            meta_mask[:, :, :n_sealed] = 0.0
+            q, k, v, scores = M.decode_qkv(
+                cfg, x, jnp.asarray([pos], dtype=jnp.int32),
+                jnp.asarray(st.lo)[None], jnp.asarray(st.hi)[None],
+                jnp.asarray(meta_mask),
+                lw(i, "attn_norm"), lw(i, "wq"), lw(i, "wk"), lw(i, "wv"),
+                interpret=use_pallas,
+            )
+            st.append(np.asarray(k)[0], np.asarray(v)[0])
+
+            budget = budget_blocks if budget_blocks is not None else nb
+            budget = min(budget, nb)
+            kv_k, kv_v, kv_mask, sel = gather_blocks(st, np.asarray(scores)[0], budget)
+            if record_selected:
+                step_selected.append(sel[0] if cfg.n_kv_heads == 1 else [b for s in sel for b in s])
+            (x,) = M.decode_attend(
+                cfg, x, q,
+                jnp.asarray(kv_k)[None], jnp.asarray(kv_v)[None],
+                jnp.asarray(kv_mask)[None],
+                lw(i, "wo"), lw(i, "ffn_norm"),
+                lw(i, "w_gate"), lw(i, "w_up"), lw(i, "w_down"),
+                interpret=use_pallas,
+            )
+        next_tok, _ = M.lm_head(x, w["final_norm"], w["lm_head"])
+        cur = int(np.asarray(next_tok)[0])
+        out_tokens.append(cur)
+        if record_selected:
+            selected_trace.append(step_selected)
+    return np.asarray(out_tokens, dtype=np.int32), selected_trace

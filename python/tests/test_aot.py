@@ -1,0 +1,84 @@
+"""AOT artifact sanity: manifest consistency, HLO text validity, goldens."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "tiny-llm")
+
+
+def test_to_hlo_text_produces_parseable_module():
+    import jax.numpy as jnp
+
+    txt = aot.to_hlo_text(
+        lambda x, y: (jnp.matmul(x, y) + 1.0,),
+        aot.spec([4, 4]), aot.spec([4, 4]),
+    )
+    assert txt.startswith("HloModule")
+    assert "parameter(0)" in txt and "parameter(1)" in txt
+
+
+def test_default_buckets_cover_max_ctx():
+    cfg = M.TINY_LLM
+    b = aot.default_buckets(cfg, fast=False)
+    assert max(b["prefill_t"]) == cfg.max_ctx
+    assert cfg.max_blocks in b["budget_k"]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_every_entry_file_exists_and_is_hlo(self, manifest):
+        for e in manifest["entries"]:
+            path = os.path.join(ART, e["file"])
+            assert os.path.exists(path), e["file"]
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), e["file"]
+
+    def test_weights_bin_size_matches_manifest(self, manifest):
+        size = os.path.getsize(os.path.join(ART, manifest["weights_bin"]))
+        assert size == manifest["total_f32"] * 4
+        total = sum(int(np.prod(w["shape"])) for w in manifest["weights"])
+        assert total == manifest["total_f32"]
+
+    def test_weights_reproducible_from_seed(self, manifest):
+        cfg = M.CONFIGS[manifest["model"]["name"]]
+        w = M.init_weights(cfg, seed=manifest["seed"])
+        raw = np.fromfile(os.path.join(ART, manifest["weights_bin"]), dtype=np.float32)
+        first = manifest["weights"][0]
+        got = raw[first["offset_f32"]: first["offset_f32"] + int(np.prod(first["shape"]))]
+        np.testing.assert_array_equal(got, w[first["name"]].ravel())
+
+    def test_goldens_match_fresh_pipeline(self, manifest):
+        """Regenerating one golden case from scratch yields identical tokens
+        (determinism of the whole python stack)."""
+        from compile import pipeline as P
+
+        with open(os.path.join(ART, "golden.json")) as f:
+            goldens = json.load(f)
+        cfg = M.CONFIGS[manifest["model"]["name"]]
+        w = M.init_weights(cfg, seed=manifest["seed"])
+        case = goldens[0]
+        toks, _ = P.run_pipeline(
+            cfg, w, np.asarray(case["prompt"], dtype=np.int32), case["n_steps"],
+            budget_blocks=case["budget_blocks"],
+            seg_buckets=manifest["buckets"]["prefill_t"],
+        )
+        assert toks.tolist() == case["tokens"]
+
+    def test_entry_coverage(self, manifest):
+        kinds = {e["kind"] for e in manifest["entries"]}
+        assert kinds == {
+            "embed", "prefill_layer", "prefill_chunk", "block_meta",
+            "decode_qkv", "decode_attend", "lm_head",
+        }

@@ -1,0 +1,270 @@
+"""L1 kernel correctness: every pallas kernel (interpret=True) vs the
+pure-jnp oracle in ref.py, swept over shapes and dtypes with hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=3e-5, atol=3e-6)
+
+
+def randf(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32).astype(dtype)
+
+
+def randmask(rng, shape, p=0.25):
+    return jnp.where(jnp.asarray(rng.random(shape) < p), ref.NEG_INF, 0.0).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------- block_meta
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(1, 4),
+    nb=st.integers(1, 8),
+    bs=st.sampled_from([4, 8, 16]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_block_meta_mean(h, nb, bs, d, seed):
+    rng = np.random.default_rng(seed)
+    keys = randf(rng, (h, nb, bs, d))
+    np.testing.assert_allclose(
+        K.block_meta_mean(keys), ref.block_meta_mean(keys), rtol=1e-6, atol=1e-6
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(1, 4),
+    nb=st.integers(1, 8),
+    bs=st.sampled_from([4, 8, 16]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_block_meta_cuboid(h, nb, bs, d, seed):
+    rng = np.random.default_rng(seed)
+    keys = randf(rng, (h, nb, bs, d))
+    lo, hi = K.block_meta_cuboid(keys)
+    rlo, rhi = ref.block_meta_cuboid(keys)
+    np.testing.assert_array_equal(lo, rlo)
+    np.testing.assert_array_equal(hi, rhi)
+    assert (np.asarray(lo) <= np.asarray(hi)).all()
+
+
+def test_block_meta_single_token_block():
+    # Bs=1: mean == lo == hi == the key itself
+    rng = np.random.default_rng(0)
+    keys = randf(rng, (2, 3, 1, 8))
+    lo, hi = K.block_meta_cuboid(keys)
+    np.testing.assert_array_equal(lo, keys[:, :, 0])
+    np.testing.assert_array_equal(hi, keys[:, :, 0])
+    np.testing.assert_allclose(K.block_meta_mean(keys), keys[:, :, 0], rtol=1e-6)
+
+
+# -------------------------------------------------------------- block_select
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    nb=st.sampled_from([1, 4, 16, 64]),
+    d=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_score_blocks_mean(b, h, nb, d, seed):
+    rng = np.random.default_rng(seed)
+    q = randf(rng, (b, h, d))
+    meta = randf(rng, (b, h, nb, d))
+    mask = randmask(rng, (b, h, nb))
+    np.testing.assert_allclose(
+        K.score_blocks_mean(q, meta, mask),
+        ref.score_blocks_mean(q, meta, mask),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    nb=st.sampled_from([1, 4, 16, 64]),
+    d=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_score_blocks_cuboid(b, h, nb, d, seed):
+    rng = np.random.default_rng(seed)
+    q = randf(rng, (b, h, d))
+    lo = randf(rng, (b, h, nb, d))
+    hi = lo + jnp.abs(randf(rng, (b, h, nb, d)))
+    mask = randmask(rng, (b, h, nb))
+    np.testing.assert_allclose(
+        K.score_blocks_cuboid(q, lo, hi, mask),
+        ref.score_blocks_cuboid(q, lo, hi, mask),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_cuboid_score_is_upper_bound():
+    """The cuboid score must upper-bound q.k for every key inside the cuboid
+    (this is the property ArkVale's selection correctness rests on)."""
+    rng = np.random.default_rng(5)
+    h, nb, bs, d = 2, 6, 8, 16
+    keys = randf(rng, (h, nb, bs, d))
+    lo, hi = ref.block_meta_cuboid(keys)
+    q = randf(rng, (1, h, d))
+    mask = jnp.zeros((1, h, nb), dtype=jnp.float32)
+    scores = np.asarray(
+        K.score_blocks_cuboid(q, lo[None], hi[None], mask)
+    )  # [1, h, nb]
+    exact = np.einsum("hd,hnsd->hns", np.asarray(q)[0], np.asarray(keys))
+    assert (scores[0] >= exact.max(axis=-1) - 1e-4).all()
+
+
+# ---------------------------------------------------------- sparse attention
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    n_tiles=st.integers(1, 6),
+    s_tile=st.sampled_from([8, 16]),
+    d=st.sampled_from([8, 32]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**16),
+)
+def test_sparse_decode_attention(b, h, n_tiles, s_tile, d, dtype, seed):
+    rng = np.random.default_rng(seed)
+    s = n_tiles * s_tile
+    q = randf(rng, (b, h, d), dtype)
+    k = randf(rng, (b, h, s, d), dtype)
+    v = randf(rng, (b, h, s, d), dtype)
+    mask = randmask(rng, (b, h, s))
+    # guarantee at least one valid slot per (b, h)
+    mask = mask.at[:, :, 0].set(0.0)
+    out = K.sparse_decode_attention(q, k, v, mask, s_tile=s_tile)
+    want = ref.sparse_decode_attention(q, k, v, mask)
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32), np.asarray(want, dtype=np.float32), **tol(dtype)
+    )
+
+
+def test_sparse_attention_fully_masked_row_is_finite():
+    """A padded batch slot (all KV masked) must not produce NaN/Inf."""
+    b, h, s, d = 1, 1, 16, 8
+    q = jnp.ones((b, h, d), dtype=jnp.float32)
+    k = jnp.zeros((b, h, s, d), dtype=jnp.float32)
+    v = jnp.zeros((b, h, s, d), dtype=jnp.float32)
+    mask = jnp.full((b, h, s), ref.NEG_INF, dtype=jnp.float32)
+    out = np.asarray(K.sparse_decode_attention(q, k, v, mask, s_tile=8))
+    assert np.isfinite(out).all()
+
+
+def test_sparse_attention_matches_dense_softmax():
+    """With no mask, sparse decode attention == plain softmax attention."""
+    rng = np.random.default_rng(11)
+    b, h, s, d = 2, 2, 48, 16
+    q, k, v = (randf(rng, sh) for sh in [(b, h, d), (b, h, s, d), (b, h, s, d)])
+    mask = jnp.zeros((b, h, s), dtype=jnp.float32)
+    out = np.asarray(K.sparse_decode_attention(q, k, v, mask, s_tile=16))
+    want = np.asarray(ref.sparse_decode_attention(q, k, v, mask))
+    np.testing.assert_allclose(out, want, rtol=3e-5, atol=3e-6)
+
+
+# --------------------------------------------------------- prefill attention
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(1, 4),
+    n_q=st.integers(1, 4),
+    tile=st.sampled_from([8, 16]),
+    d=st.sampled_from([8, 32]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**16),
+)
+def test_prefill_causal(h, n_q, tile, d, dtype, seed):
+    rng = np.random.default_rng(seed)
+    t = n_q * tile
+    q, k, v = (randf(rng, (h, t, d), dtype) for _ in range(3))
+    out = K.prefill_causal_attention(q, k, v, q_tile=tile, k_tile=tile)
+    want = ref.prefill_causal_attention(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32), np.asarray(want, dtype=np.float32), **tol(dtype)
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(1, 3),
+    n_chunk=st.integers(1, 3),
+    n_past=st.integers(1, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_prefill_chunked_offset(h, n_chunk, n_past, seed):
+    """Chunk attending to accumulated past == the same rows of full causal."""
+    rng = np.random.default_rng(seed)
+    tile, d = 8, 16
+    t_past, t_chunk = n_past * tile, n_chunk * tile
+    t = t_past + t_chunk
+    q, k, v = (randf(rng, (h, t, d)) for _ in range(3))
+    full = ref.prefill_causal_attention(q, k, v)
+    out = K.prefill_causal_attention(
+        q[:, t_past:], k, v, kv_offset=t_past, q_tile=tile, k_tile=tile
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(full[:, t_past:]), rtol=3e-5, atol=3e-6
+    )
+
+
+def test_prefill_kvmask_padded_past():
+    """NEG_INF kvmask slots (padded past) must be ignored entirely."""
+    rng = np.random.default_rng(9)
+    h, d, tile = 2, 16, 8
+    t_chunk, p_valid, p_pad = 16, 8, 24  # past padded from 8 to 24
+    q = randf(rng, (h, t_chunk, d))
+    past_k, past_v = randf(rng, (h, p_valid, d)), randf(rng, (h, p_valid, d))
+    new_k, new_v = randf(rng, (h, t_chunk, d)), randf(rng, (h, t_chunk, d))
+
+    # padded layout: [valid past | garbage | chunk]
+    garbage = randf(rng, (h, p_pad - p_valid, d)) * 100.0
+    k_pad = jnp.concatenate([past_k, garbage, new_k], axis=1)
+    v_pad = jnp.concatenate([past_v, garbage, new_v], axis=1)
+    kvmask = jnp.concatenate(
+        [
+            jnp.zeros((p_valid,)),
+            jnp.full((p_pad - p_valid,), ref.NEG_INF),
+            jnp.zeros((t_chunk,)),
+        ]
+    ).astype(jnp.float32)
+    out = K.prefill_causal_attention(
+        q, k_pad, v_pad, kvmask, kv_offset=p_pad, q_tile=tile, k_tile=tile
+    )
+
+    # oracle: compact layout without padding
+    k_c = jnp.concatenate([past_k, new_k], axis=1)
+    v_c = jnp.concatenate([past_v, new_v], axis=1)
+    want = ref.prefill_causal_attention(q, k_c, v_c, kv_offset=p_valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-6)
+
+
+# ------------------------------------------------------------------- topk
+
+
+def test_topk_blocks_masked_never_selected():
+    scores = jnp.asarray(
+        [[[1.0, ref.NEG_INF, 3.0, 2.0, ref.NEG_INF]]], dtype=jnp.float32
+    )
+    idx = np.asarray(ref.topk_blocks(scores, 3))
+    assert set(idx[0, 0].tolist()) == {0, 2, 3}

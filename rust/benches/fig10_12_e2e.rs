@@ -1,0 +1,10 @@
+//! Figs. 10-12: mean TTFT, token throughput, mean TBT vs request rate for
+//! vLLM / vLLM-S / vLLM-SO / SparseServe on both paper models (simulated
+//! A100 testbed).
+use sparseserve::figures::sim_exp::{default_rates, fig10_11_12};
+
+fn main() {
+    for model in ["lwm-7b", "llama3-8b"] {
+        println!("{}", fig10_11_12(model, &default_rates(model)));
+    }
+}

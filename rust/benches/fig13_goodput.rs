@@ -1,0 +1,6 @@
+//! Fig. 13: goodput (max sustainable rate under SLO) for the ablation
+//! ladder vLLM -> +SA -> +Offload -> +FT -> +WC -> +LP.
+fn main() {
+    println!("{}", sparseserve::figures::sim_exp::fig13("lwm-7b"));
+    println!("{}", sparseserve::figures::sim_exp::fig13("llama3-8b"));
+}

@@ -1,0 +1,6 @@
+//! Fig. 14: (a) decode batch/loading latency memcpy vs FlashH2D;
+//! (b) prefill latency by KV saving method.
+fn main() {
+    println!("{}", sparseserve::figures::sim_exp::fig14a());
+    println!("{}", sparseserve::figures::sim_exp::fig14b());
+}

@@ -1,0 +1,5 @@
+//! Fig. 15: throughput & KV loads with/without working-set-aware batch
+//! size control, across request rates.
+fn main() {
+    println!("{}", sparseserve::figures::sim_exp::fig15(&[0.1, 0.2, 0.3, 0.4, 0.5]));
+}

@@ -1,0 +1,6 @@
+//! Fig. 16: (a) TTFT of chunked vs layer-segmented prefill across rates;
+//! (b) prefill attention overhead vs chunk size.
+fn main() {
+    println!("{}", sparseserve::figures::sim_exp::fig16a(&[0.05, 0.15, 0.25, 0.35]));
+    println!("{}", sparseserve::figures::sim_exp::fig16b());
+}

@@ -1,0 +1,4 @@
+//! Fig. 1: decode throughput & KV blocks loaded/iter vs batch size.
+fn main() {
+    println!("{}", sparseserve::figures::sim_exp::fig1());
+}

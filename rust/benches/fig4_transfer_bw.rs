@@ -1,0 +1,65 @@
+//! Fig. 4: PCIe bandwidth of KV loading/saving vs block size — the
+//! calibrated model series plus a REAL measurement of this repo's
+//! transfer engines moving bytes between the host block pools.
+
+use std::time::Instant;
+
+use sparseserve::config::serving::TransferKind;
+use sparseserve::config::HardwareSpec;
+use sparseserve::memory::transfer::{engine_for, ScatterEntry};
+use sparseserve::memory::BlockPool;
+
+fn main() {
+    println!("{}", sparseserve::figures::sim_exp::fig4());
+
+    // Real engine wall-clock throughput (host-memory copies, this machine)
+    println!("== Fig 4 (real engines, host-memory wall clock on this machine) ==");
+    println!("{:>8} {:>16} {:>16} {:>16}", "block", "memcpy GB/s", "flash-load GB/s", "flash-save GB/s");
+    for &(bs, dh) in &[(8usize, 64usize), (16, 64), (32, 64), (32, 128)] {
+        let n = 256;
+        let mut dram = BlockPool::new(n, bs, dh);
+        let mut hbm = BlockPool::new(n, bs, dh);
+        let pairs: Vec<_> = (0..n).map(|_| (dram.alloc().unwrap(), hbm.alloc().unwrap())).collect();
+        let block_bytes = dram.slot_bytes();
+        let hw = HardwareSpec::a100_40gb();
+        let mem = engine_for(TransferKind::Memcpy, hw.clone());
+        let fla = engine_for(TransferKind::Flash, hw);
+
+        let time_it = |f: &mut dyn FnMut()| {
+            let reps = 20;
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                f();
+            }
+            t0.elapsed().as_secs_f64() / reps as f64
+        };
+        let t_mem = time_it(&mut || {
+            mem.load(&dram, &mut hbm, &pairs);
+        });
+        let t_fla = time_it(&mut || {
+            fla.load(&dram, &mut hbm, &pairs);
+        });
+        let src = vec![1.0f32; n * dram.slot_floats()];
+        let entries: Vec<ScatterEntry> = pairs
+            .iter()
+            .enumerate()
+            .map(|(i, (d, _))| ScatterEntry {
+                src_off: i * dram.slot_floats(),
+                len: dram.slot_floats(),
+                dst_slot: *d,
+                dst_off: 0,
+            })
+            .collect();
+        let t_save = time_it(&mut || {
+            fla.save(&src, &mut dram, &entries);
+        });
+        let total = (n * block_bytes) as f64 / 1e9;
+        println!(
+            "{:>6}KB {:>16.2} {:>16.2} {:>16.2}",
+            block_bytes / 1024,
+            total / t_mem,
+            total / t_fla,
+            total / t_save
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! Fig. 8: block-selection overlap vs history window (REAL tiny-llm).
+use std::sync::Arc;
+use sparseserve::runtime::Runtime;
+
+fn main() {
+    let dir = Runtime::default_dir("tiny-llm");
+    if !dir.join("manifest.json").exists() {
+        println!("fig8 skipped: run `make artifacts` first");
+        return;
+    }
+    let rt = Arc::new(Runtime::load(dir).expect("artifacts"));
+    println!("{}", sparseserve::figures::fig8_overlap(rt).unwrap());
+}

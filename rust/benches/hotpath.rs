@@ -1,0 +1,147 @@
+//! Hot-path microbenchmarks (§Perf): the L3 operations on the decode
+//! critical path. Targets from DESIGN.md §Perf: scheduler decision
+//! < 10 µs/request, top-k (128 blocks) < 5 µs, engine overhead small
+//! relative to modeled PCIe time.
+
+use std::sync::Arc;
+
+use sparseserve::config::serving::TransferKind;
+use sparseserve::config::{HardwareSpec, ModelSpec, ServingConfig};
+use sparseserve::memory::transfer::{engine_for, ScatterEntry};
+use sparseserve::memory::{BlockPool, LruCache};
+use sparseserve::scheduler::{Phase, Request, Scheduler};
+use sparseserve::sim::SelectionModel;
+use sparseserve::sparse::{top_k_blocks, top_k_blocks_fast};
+use sparseserve::util::bench::bench;
+use sparseserve::util::rng::Rng;
+
+fn main() {
+    let mut results = Vec::new();
+
+    // ---- top-k selection ----
+    let mut rng = Rng::new(1);
+    let scores: Vec<f32> = (0..128).map(|_| rng.normal() as f32).collect();
+    results.push(bench("topk/128 blocks k=63 (sort)", 0.4, 100, || {
+        std::hint::black_box(top_k_blocks(&scores, 128, 63));
+    }));
+    results.push(bench("topk/128 blocks k=63 (fast)", 0.4, 100, || {
+        std::hint::black_box(top_k_blocks_fast(&scores, 128, 63));
+    }));
+    let scores_big: Vec<f32> = (0..1024).map(|_| rng.normal() as f32).collect();
+    results.push(bench("topk/1024 blocks k=64 (paper scale)", 0.4, 100, || {
+        std::hint::black_box(top_k_blocks_fast(&scores_big, 1024, 64));
+    }));
+
+    // ---- scheduler plan (Alg. 1) ----
+    let spec = ModelSpec::lwm_7b();
+    let cfg = ServingConfig::sparseserve(2048, 2048, 32);
+    let mut sched = Scheduler::new(cfg, spec.clone(), 18 << 30);
+    for id in 0..32u32 {
+        let mut r = Request::new(id, 8192, 256, 0.0);
+        r.phase = Phase::Decode;
+        sched.submit(r);
+    }
+    // move them to active decode state
+    {
+        let mut ws = |_| 0usize;
+        for _ in 0..40 {
+            let b = sched.plan(0.0, &mut ws);
+            if let Some(w) = b.prefill {
+                let last = w.is_last();
+                sched.advance_prefill(&w);
+                if last {
+                    sched.emit_token(w.req(), None, 0.0);
+                }
+            }
+        }
+    }
+    results.push(bench("scheduler/plan 32 decodes + Alg.1", 0.4, 20, || {
+        let mut ws = |_| 500 << 20;
+        std::hint::black_box(sched.plan(0.0, &mut ws));
+    }));
+
+    // ---- LRU cache ops ----
+    let mut cache: LruCache<u32> = LruCache::new(1024);
+    let mut i = 0u32;
+    results.push(bench("lru/get+insert cycle", 0.3, 100, || {
+        let key = sparseserve::memory::BlockKey::new(0, 0, 0, i % 2048);
+        if cache.get(&key).is_none() {
+            cache.insert(key, i);
+        }
+        i += 1;
+    }));
+
+    // ---- transfer engines (real copies, 16 KB paper blocks) ----
+    let mut dram = BlockPool::new(256, 32, 128);
+    let mut hbm = BlockPool::new(256, 32, 128);
+    let pairs: Vec<_> = (0..64)
+        .map(|_| (dram.alloc().unwrap(), hbm.alloc().unwrap()))
+        .collect();
+    let hw = HardwareSpec::a100_40gb();
+    let flash = engine_for(TransferKind::Flash, hw.clone());
+    let memcpy = engine_for(TransferKind::Memcpy, hw);
+    results.push(bench("transfer/flash-load 64x16KB", 0.4, 10, || {
+        std::hint::black_box(flash.load(&dram, &mut hbm, &pairs));
+    }));
+    results.push(bench("transfer/memcpy-load 64x16KB", 0.4, 10, || {
+        std::hint::black_box(memcpy.load(&dram, &mut hbm, &pairs));
+    }));
+    let src = vec![0.3f32; 64 * dram.slot_floats()];
+    let entries: Vec<ScatterEntry> = pairs
+        .iter()
+        .enumerate()
+        .map(|(i, (dslot, _))| ScatterEntry {
+            src_off: i * dram.slot_floats(),
+            len: dram.slot_floats(),
+            dst_slot: *dslot,
+            dst_off: 0,
+        })
+        .collect();
+    results.push(bench("transfer/flash-save 64x16KB (stage+scatter)", 0.4, 10, || {
+        std::hint::black_box(flash.save(&src, &mut dram, &entries));
+    }));
+
+    // ---- selection model step (sim hot loop) ----
+    let mut sel = SelectionModel::new(3);
+    results.push(bench("sim/selection step 1024 blocks budget 64", 0.3, 20, || {
+        std::hint::black_box(sel.next_selection(1024, 64));
+    }));
+
+    // ---- real decode step, if artifacts exist ----
+    let dir = sparseserve::runtime::Runtime::default_dir("tiny-llm");
+    if dir.join("manifest.json").exists() {
+        use sparseserve::engine::{Backend, PjrtBackend};
+        use sparseserve::scheduler::Batch;
+        use std::collections::HashMap;
+
+        let rt = Arc::new(sparseserve::runtime::Runtime::load(dir).unwrap());
+        let tspec = rt.manifest.model.clone();
+        let mut tcfg = ServingConfig::sparseserve(256, 64, tspec.n_layers);
+        tcfg.max_inject_tokens = tspec.max_ctx * tspec.n_layers;
+        let mut backend = PjrtBackend::new(rt, tcfg, 8 << 20, 512 << 20);
+        let prompt = sparseserve::figures::real::demo_prompt(300, tspec.vocab, 5);
+        let mut req = Request::with_prompt(1, prompt.clone(), 4096, 0.0);
+        req.phase = Phase::Prefill;
+        backend.register(&req).unwrap();
+        let mut requests = HashMap::new();
+        requests.insert(1u32, req);
+        let pf = Batch {
+            decodes: vec![],
+            prefill: Some(sparseserve::scheduler::PrefillWork::LayerSegment {
+                req: 1, layer_start: 0, layer_end: tspec.n_layers,
+                tok_start: 0, tok_len: prompt.len(), is_last: true,
+            }),
+        };
+        backend.run_batch(&pf, &requests).unwrap();
+        requests.get_mut(&1).unwrap().phase = Phase::Decode;
+        let db = Batch { decodes: vec![1], prefill: None };
+        results.push(bench("e2e/real decode step B=1 (4 layers, PJRT)", 2.0, 3, || {
+            std::hint::black_box(backend.run_batch(&db, &requests).unwrap());
+        }));
+    }
+
+    println!("== hotpath microbenchmarks ==");
+    for r in &results {
+        println!("{}", r.line());
+    }
+}

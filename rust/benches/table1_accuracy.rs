@@ -1,0 +1,14 @@
+//! Table 1 analog: sparse-attention output fidelity vs token budget on
+//! the REAL tiny-llm model.
+use std::sync::Arc;
+use sparseserve::runtime::Runtime;
+
+fn main() {
+    let dir = Runtime::default_dir("tiny-llm");
+    if !dir.join("manifest.json").exists() {
+        println!("table1 skipped: run `make artifacts` first");
+        return;
+    }
+    let rt = Arc::new(Runtime::load(dir).expect("artifacts"));
+    println!("{}", sparseserve::figures::table1_accuracy(rt).unwrap());
+}

@@ -1,0 +1,84 @@
+//! System presets: the paper's four compared systems (§4.1) plus the
+//! Fig. 13 ablation ladder.
+
+use crate::config::{PrefillMode, ServingConfig, TransferKind};
+
+/// A named system configuration.
+#[derive(Debug, Clone)]
+pub struct SystemPreset {
+    pub name: &'static str,
+    pub cfg: ServingConfig,
+}
+
+/// The paper's §4.2 comparison set for a model with `n_layers`.
+/// `token_budget`/`chunk` default to the paper's 2048/2048.
+pub fn comparison_set(token_budget: usize, chunk: usize, n_layers: usize) -> Vec<SystemPreset> {
+    vec![
+        SystemPreset { name: "vLLM", cfg: ServingConfig::vllm(chunk) },
+        SystemPreset { name: "vLLM-S", cfg: ServingConfig::vllm_s(token_budget, chunk) },
+        SystemPreset { name: "vLLM-SO", cfg: ServingConfig::vllm_so(token_budget, chunk) },
+        SystemPreset {
+            name: "SparseServe",
+            cfg: ServingConfig::sparseserve(token_budget, chunk, n_layers),
+        },
+    ]
+}
+
+/// Fig. 13's incremental ladder: vLLM -> +SA -> +Offload -> +FT -> +WC -> +LP.
+pub fn ablation_ladder(token_budget: usize, chunk: usize, n_layers: usize) -> Vec<SystemPreset> {
+    let base = ServingConfig::vllm(chunk);
+    let sa = ServingConfig::vllm_s(token_budget, chunk);
+    let offload = ServingConfig::vllm_so(token_budget, chunk);
+    let ft = ServingConfig { transfer: TransferKind::Flash, ..offload.clone() };
+    let wc = ServingConfig { ws_batch_control: true, ..ft.clone() };
+    let lp = ServingConfig {
+        prefill_mode: PrefillMode::LayerSegmented,
+        max_inject_tokens: chunk * n_layers,
+        ..wc.clone()
+    };
+    vec![
+        SystemPreset { name: "vLLM", cfg: base },
+        SystemPreset { name: "+SA", cfg: sa },
+        SystemPreset { name: "+Offload", cfg: offload },
+        SystemPreset { name: "+FT", cfg: ft },
+        SystemPreset { name: "+WC", cfg: wc },
+        SystemPreset { name: "+LP", cfg: lp },
+    ]
+}
+
+/// Look a preset up by (case-insensitive) name.
+pub fn by_name(name: &str, token_budget: usize, chunk: usize, n_layers: usize) -> Option<ServingConfig> {
+    let lower = name.to_lowercase();
+    comparison_set(token_budget, chunk, n_layers)
+        .into_iter()
+        .find(|p| p.name.to_lowercase() == lower)
+        .map(|p| p.cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_is_incremental() {
+        let l = ablation_ladder(2048, 2048, 32);
+        assert_eq!(l.len(), 6);
+        assert!(!l[0].cfg.sparse_attention);
+        assert!(l[1].cfg.sparse_attention && !l[1].cfg.offload);
+        assert!(l[2].cfg.offload && l[2].cfg.transfer == TransferKind::Memcpy);
+        assert!(l[3].cfg.transfer == TransferKind::Flash && !l[3].cfg.ws_batch_control);
+        assert!(l[4].cfg.ws_batch_control && l[4].cfg.prefill_mode == PrefillMode::Chunked);
+        assert!(l[5].cfg.prefill_mode == PrefillMode::LayerSegmented);
+        // the final rung IS SparseServe
+        let ss = ServingConfig::sparseserve(2048, 2048, 32);
+        assert_eq!(l[5].cfg.prefill_mode, ss.prefill_mode);
+        assert_eq!(l[5].cfg.max_inject_tokens, ss.max_inject_tokens);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("sparseserve", 2048, 2048, 32).is_some());
+        assert!(by_name("vLLM-SO", 2048, 2048, 32).unwrap().offload);
+        assert!(by_name("nope", 2048, 2048, 32).is_none());
+    }
+}

@@ -1,0 +1,185 @@
+//! Hardware cost models — the testbed substitute (DESIGN.md table).
+//!
+//! The paper's testbed is an A100-40GB + PCIe Gen4 (32 GB/s) + 256 GB
+//! DRAM. This repo runs on CPU, so latency/bandwidth phenomena are
+//! reproduced through calibrated cost models: every model constant below
+//! is pinned to a number the paper reports (or a public A100 datasheet
+//! figure), and the unit tests assert the derived curves match the
+//! paper's measured points (Fig. 4: memcpy < 5 GB/s vs FlashH2D > 20 GB/s
+//! and FlashD2H > 23 GB/s).
+
+/// One GPU + host testbed.
+#[derive(Debug, Clone)]
+pub struct HardwareSpec {
+    pub name: String,
+    /// HBM usable for KV cache, bytes (A100 40 GB minus weights/activations).
+    pub hbm_kv_bytes: usize,
+    /// Host DRAM for offloaded KV, bytes.
+    pub dram_bytes: usize,
+    /// PCIe peak, bytes/s (Gen4 x16 = 32 GB/s).
+    pub pcie_peak: f64,
+    /// Per-cudaMemcpy call overhead, seconds (driver + launch).
+    pub memcpy_overhead_s: f64,
+    /// Single GPU-kernel launch overhead for the fused H2D gather, seconds.
+    pub kernel_launch_s: f64,
+    /// Fraction of PCIe peak the fused UVA gather sustains (FlashH2D).
+    pub fused_h2d_eff: f64,
+    /// Fraction of PCIe peak one big contiguous D2H memcpy sustains (FlashD2H).
+    pub contig_d2h_eff: f64,
+    /// Dense-compute throughput, FLOP/s (A100 bf16 ~312e12, derated).
+    pub gpu_flops: f64,
+    /// HBM bandwidth, bytes/s (A100 40GB: 1.55e12).
+    pub hbm_bw: f64,
+    /// Slowdown multiplier on model compute while a GPU-direct *save*
+    /// kernel shares the SMs (paper Fig. 14b: prefill 1.28x with GPU-direct
+    /// saving vs 1.0x with FlashD2H).
+    pub gpu_save_interference: f64,
+}
+
+impl HardwareSpec {
+    /// The paper's A100-40GB testbed.
+    pub fn a100_40gb() -> Self {
+        Self {
+            name: "a100-40gb".into(),
+            // 40 GB minus ~13.5 GB weights (7B fp16) minus activations /
+            // workspace / fragmentation for 32k-token prefills — sized so a
+            // capped 32k-prompt request still fits (the paper prevents
+            // vLLM aborts by capping prompts, §4.1)
+            hbm_kv_bytes: 18 * (1 << 30),
+            dram_bytes: 256 * (1 << 30),
+            pcie_peak: 32e9,
+            // effective small-transfer overhead per cudaMemcpy (driver +
+            // DMA setup + sync), calibrated so the Fig. 4 memcpy series
+            // stays under 5 GB/s across 4-64 KB blocks
+            memcpy_overhead_s: 12.0e-6,
+            kernel_launch_s: 12.0e-6,
+            fused_h2d_eff: 0.70,
+            contig_d2h_eff: 0.80,
+            gpu_flops: 150e12, // achievable bf16 with real kernels (~50% MFU)
+            hbm_bw: 1.2e12,    // achievable of the 1.55 TB/s peak
+            gpu_save_interference: 1.28,
+        }
+    }
+
+    /// A tiny testbed matching the real CPU-executed tiny-llm runs
+    /// (capacities scaled so cache-pressure ratios mirror the paper).
+    pub fn tiny_testbed() -> Self {
+        Self {
+            name: "tiny".into(),
+            hbm_kv_bytes: 2 * (1 << 20), // 2 MiB "HBM" KV cache
+            dram_bytes: 256 * (1 << 20),
+            pcie_peak: 32e9,
+            memcpy_overhead_s: 12.0e-6,
+            kernel_launch_s: 12.0e-6,
+            fused_h2d_eff: 0.70,
+            contig_d2h_eff: 0.80,
+            gpu_flops: 4e9, // single CPU core at f32
+            hbm_bw: 20e9,
+            gpu_save_interference: 1.28,
+        }
+    }
+
+    /// Effective bandwidth of per-block `cudaMemcpy` transfers (Fig. 4
+    /// baseline): each block pays the call overhead.
+    pub fn memcpy_bandwidth(&self, block_bytes: usize) -> f64 {
+        let t = self.memcpy_overhead_s + block_bytes as f64 / self.pcie_peak;
+        block_bytes as f64 / t
+    }
+
+    /// Time to move `n_blocks` blocks of `block_bytes` via per-block memcpy.
+    pub fn memcpy_time(&self, n_blocks: usize, block_bytes: usize) -> f64 {
+        n_blocks as f64 * (self.memcpy_overhead_s + block_bytes as f64 / self.pcie_peak)
+    }
+
+    /// Time for the fused GPU-direct gather (FlashH2D): one launch + all
+    /// bytes at the sustained UVA rate.
+    pub fn flash_h2d_time(&self, n_blocks: usize, block_bytes: usize) -> f64 {
+        self.kernel_launch_s
+            + (n_blocks * block_bytes) as f64 / (self.pcie_peak * self.fused_h2d_eff)
+    }
+
+    /// Critical-path time of CPU-assisted saving (FlashD2H): one contiguous
+    /// D2H copy; the CPU scatter overlaps with GPU compute (paper §3.2.2).
+    pub fn flash_d2h_time(&self, total_bytes: usize) -> f64 {
+        self.memcpy_overhead_s + total_bytes as f64 / (self.pcie_peak * self.contig_d2h_eff)
+    }
+
+    /// Effective bandwidths for the Fig. 4 series. Fig. 4 streams a fixed
+    /// total volume while varying the block size, so the launch overhead
+    /// amortizes over `total / block_bytes` blocks.
+    pub const FIG4_BURST_BYTES: usize = 4 << 20;
+
+    pub fn flash_h2d_bandwidth(&self, block_bytes: usize) -> f64 {
+        let n = Self::FIG4_BURST_BYTES / block_bytes;
+        (n * block_bytes) as f64 / self.flash_h2d_time(n, block_bytes)
+    }
+
+    pub fn flash_d2h_bandwidth(&self, block_bytes: usize) -> f64 {
+        let n = Self::FIG4_BURST_BYTES / block_bytes;
+        (n * block_bytes) as f64 / self.flash_d2h_time(n * block_bytes)
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "a100-40gb" => Some(Self::a100_40gb()),
+            "tiny" => Some(Self::tiny_testbed()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GB: f64 = 1e9;
+
+    #[test]
+    fn memcpy_bandwidth_matches_fig4() {
+        let hw = HardwareSpec::a100_40gb();
+        // Paper §1: 16 KB blocks via cudaMemcpy -> < 4-5 GB/s.
+        let bw16k = hw.memcpy_bandwidth(16 * 1024);
+        assert!(bw16k < 4.0 * GB, "16KB memcpy bw {bw16k}");
+        assert!(bw16k > 0.5 * GB, "16KB memcpy bw {bw16k}");
+        // stays under 6 GB/s across Fig. 4's block sizes (4-64 KB)
+        for kb in [4, 8, 16, 32, 64] {
+            assert!(hw.memcpy_bandwidth(kb * 1024) < 6.5 * GB);
+        }
+    }
+
+    #[test]
+    fn flash_h2d_exceeds_20gbps() {
+        let hw = HardwareSpec::a100_40gb();
+        for kb in [4, 8, 16, 32, 64] {
+            let bw = hw.flash_h2d_bandwidth(kb * 1024);
+            assert!(bw > 20.0 * GB, "{kb}KB: {bw}");
+            assert!(bw <= hw.pcie_peak);
+        }
+    }
+
+    #[test]
+    fn flash_d2h_exceeds_23gbps() {
+        let hw = HardwareSpec::a100_40gb();
+        for kb in [4, 8, 16, 32, 64] {
+            let bw = hw.flash_d2h_bandwidth(kb * 1024);
+            assert!(bw > 23.0 * GB, "{kb}KB: {bw}");
+        }
+    }
+
+    #[test]
+    fn fused_beats_memcpy_at_every_block_size() {
+        let hw = HardwareSpec::a100_40gb();
+        for kb in [1, 4, 16, 64, 256] {
+            assert!(hw.flash_h2d_bandwidth(kb * 1024) > hw.memcpy_bandwidth(kb * 1024));
+        }
+    }
+
+    #[test]
+    fn loading_ratio_matches_fig14a_order() {
+        // Fig. 14a: FlashH2D cuts loading latency up to ~10x vs memcpy.
+        let hw = HardwareSpec::a100_40gb();
+        let n = 256; // blocks per iteration at batch 8
+        let ratio = hw.memcpy_time(n, 16 * 1024) / hw.flash_h2d_time(n, 16 * 1024);
+        assert!(ratio > 5.0 && ratio < 20.0, "ratio={ratio}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Configuration: model architectures, hardware cost models, serving knobs.
+
+pub mod hardware;
+pub mod model;
+pub mod serving;
+
+pub use hardware::HardwareSpec;
+pub use model::ModelSpec;
+pub use serving::{PrefillMode, ServingConfig, TransferKind};

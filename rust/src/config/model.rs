@@ -1,0 +1,169 @@
+//! Model architecture specs.
+//!
+//! `tiny-llm` / `tiny-gqa` are executed for real via PJRT artifacts;
+//! `lwm-7b` / `llama3-8b` are the paper's models, used by the simulator
+//! backend to reproduce paper-scale memory/latency dynamics.
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
+    /// Tokens per KV block (the DSA selection / paging unit).
+    pub block_size: usize,
+    pub max_ctx: usize,
+    pub rope_theta: f64,
+    /// Bytes per KV element (f16 at paper scale, f32 for tiny artifacts).
+    pub kv_dtype_bytes: usize,
+}
+
+impl ModelSpec {
+    pub fn max_blocks(&self) -> usize {
+        self.max_ctx / self.block_size
+    }
+
+    pub fn group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    /// Bytes of one KV block for ONE head and ONE layer (K and V planes).
+    /// This is the transfer granularity of the paper's fragmented access
+    /// pattern (16 KB for LWM-7B: 32 tok x 128 dim x 2 (K,V) x 2 B).
+    pub fn block_bytes(&self) -> usize {
+        self.block_size * self.head_dim * 2 * self.kv_dtype_bytes
+    }
+
+    /// KV bytes per token across all layers and kv heads.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.n_layers * self.n_kv_heads * self.head_dim * 2 * self.kv_dtype_bytes
+    }
+
+    /// Total parameters (for compute cost models).
+    pub fn n_params(&self) -> usize {
+        let attn = self.d_model
+            * (self.n_heads * self.head_dim)
+            * 2  // wq, wo
+            + self.d_model * (self.n_kv_heads * self.head_dim) * 2; // wk, wv
+        let ffn = 3 * self.d_model * self.ffn_dim;
+        self.n_layers * (attn + ffn) + 2 * self.vocab * self.d_model
+    }
+
+    /// Parse the model section of an artifacts manifest.
+    pub fn from_manifest(v: &Value) -> anyhow::Result<Self> {
+        let m = v.get("model").ok_or_else(|| anyhow::anyhow!("manifest missing 'model'"))?;
+        let f = |k: &str| -> anyhow::Result<usize> {
+            m.get(k)
+                .and_then(Value::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("model field '{k}' missing"))
+        };
+        Ok(Self {
+            name: m
+                .get("name")
+                .and_then(Value::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            vocab: f("vocab")?,
+            d_model: f("d_model")?,
+            n_layers: f("n_layers")?,
+            n_heads: f("n_heads")?,
+            n_kv_heads: f("n_kv_heads")?,
+            head_dim: f("head_dim")?,
+            ffn_dim: f("ffn_dim")?,
+            block_size: f("block_size")?,
+            max_ctx: f("max_ctx")?,
+            rope_theta: m.get("rope_theta").and_then(Value::as_f64).unwrap_or(10000.0),
+            kv_dtype_bytes: 4, // artifacts are f32
+        })
+    }
+
+    /// LWM-7B (llama2-7B architecture, 1M ctx window; paper caps at 32k).
+    pub fn lwm_7b() -> Self {
+        Self {
+            name: "lwm-7b".into(),
+            vocab: 32000,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 32, // MHA
+            head_dim: 128,
+            ffn_dim: 11008,
+            block_size: 32,
+            max_ctx: 32768,
+            rope_theta: 10000.0,
+            kv_dtype_bytes: 2, // f16 on the A100 testbed
+        }
+    }
+
+    /// Llama3-8B-262k (GQA; paper caps prompts at 128k).
+    pub fn llama3_8b() -> Self {
+        Self {
+            name: "llama3-8b".into(),
+            vocab: 128256,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 8, // GQA
+            head_dim: 128,
+            ffn_dim: 14336,
+            block_size: 32,
+            max_ctx: 131072,
+            rope_theta: 500000.0,
+            kv_dtype_bytes: 2,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "lwm-7b" => Some(Self::lwm_7b()),
+            "llama3-8b" => Some(Self::llama3_8b()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lwm_block_bytes_matches_paper() {
+        // Paper §1: "only 16 KB per block for ... LWM-7B" (32-token blocks).
+        assert_eq!(ModelSpec::lwm_7b().block_bytes(), 16 * 1024);
+    }
+
+    #[test]
+    fn lwm_param_count_is_7b_scale() {
+        let p = ModelSpec::lwm_7b().n_params();
+        assert!((6_000_000_000..8_000_000_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn gqa_group() {
+        assert_eq!(ModelSpec::llama3_8b().group(), 4);
+        assert_eq!(ModelSpec::lwm_7b().group(), 1);
+    }
+
+    #[test]
+    fn kv_bytes_per_token_lwm() {
+        // 32 layers * 32 heads * 128 dim * 2 (K,V) * 2 B = 512 KiB / token
+        assert_eq!(ModelSpec::lwm_7b().kv_bytes_per_token(), 512 * 1024);
+    }
+
+    #[test]
+    fn manifest_parse() {
+        let text = r#"{"model":{"name":"tiny-llm","vocab":256,"d_model":128,
+            "n_layers":4,"n_heads":4,"n_kv_heads":4,"head_dim":32,
+            "ffn_dim":512,"block_size":16,"max_ctx":2048,"rope_theta":10000.0}}"#;
+        let v = crate::util::json::parse(text).unwrap();
+        let spec = ModelSpec::from_manifest(&v).unwrap();
+        assert_eq!(spec.max_blocks(), 128);
+        assert_eq!(spec.name, "tiny-llm");
+    }
+}

@@ -1,0 +1,157 @@
+//! Serving configuration — every system knob of the paper, including the
+//! ablation switches of Fig. 13 (SA / Offload / FT / WC / LP).
+
+/// How prompt prefill is scheduled into hybrid batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefillMode {
+    /// Whole prompt in one iteration (plain vLLM prefill).
+    Plain,
+    /// Sarathi-style chunked prefill (baseline; paper §2.1).
+    Chunked,
+    /// The paper's layer-segmented prefill (§3.4).
+    LayerSegmented,
+}
+
+/// Which HBM<->DRAM transfer engines are used (paper §3.2 / Fig. 13 "FT").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferKind {
+    /// Per-block cudaMemcpy baseline.
+    Memcpy,
+    /// FlashH2D (GPU-direct fused gather) + FlashD2H (CPU-assisted save).
+    Flash,
+    /// GPU-direct saving (Fig. 14b middle bar): fused but steals SMs.
+    GpuDirectSave,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    // ---- base scheduler constraints (Alg. 1 inputs) ----
+    /// R_max: max requests per batch.
+    pub r_max: usize,
+    /// T_max: max tokens per batch (bounds prefill compute per iteration).
+    pub t_max: usize,
+    /// Fraction of the HBM KV pool usable as M_avl by Alg. 1.
+    pub m_avl_frac: f64,
+
+    // ---- DSA ----
+    /// Sparse attention enabled (false = full attention, vanilla vLLM).
+    pub sparse_attention: bool,
+    /// Token budget for sparse attention (paper: 2048 -> 99% accuracy).
+    pub token_budget: usize,
+    /// Working-set history window w (paper Fig. 8: w = 12).
+    pub ws_window: usize,
+
+    // ---- hierarchical memory ----
+    /// Offload KV blocks to DRAM (false = everything pinned in HBM).
+    pub offload: bool,
+    /// Transfer engine selection (FT ablation).
+    pub transfer: TransferKind,
+    /// Working-set-aware batch size control (WC ablation, Alg. 1).
+    pub ws_batch_control: bool,
+
+    // ---- prefill ----
+    pub prefill_mode: PrefillMode,
+    /// Chunk size for chunked prefill (paper: 2048).
+    pub chunk_tokens: usize,
+    /// maxInjectToken for layer-segmented prefill (paper: B * L).
+    pub max_inject_tokens: usize,
+
+    // ---- SLOs (goodput, Fig. 13) ----
+    /// P99 TBT SLO as a multiple of a plain decode-iteration time.
+    pub slo_tbt_factor: f64,
+    /// Mean scheduling (queueing) delay bound, seconds.
+    pub slo_queue_delay_s: f64,
+}
+
+impl ServingConfig {
+    /// Full SparseServe (all three contributions on).
+    pub fn sparseserve(token_budget: usize, chunk_tokens: usize, n_layers: usize) -> Self {
+        Self {
+            r_max: 64,
+            t_max: chunk_tokens,
+            m_avl_frac: 0.9,
+            sparse_attention: true,
+            token_budget,
+            ws_window: 12,
+            offload: true,
+            transfer: TransferKind::Flash,
+            ws_batch_control: true,
+            prefill_mode: PrefillMode::LayerSegmented,
+            // paper §4.2: maxInjectToken = B * L for parity with chunked
+            max_inject_tokens: chunk_tokens * n_layers,
+            chunk_tokens,
+            slo_tbt_factor: 25.0,
+            slo_queue_delay_s: 2.0,
+        }
+    }
+
+    /// Vanilla vLLM: full attention, no offload, chunked prefill.
+    pub fn vllm(chunk_tokens: usize) -> Self {
+        Self {
+            r_max: 64,
+            t_max: chunk_tokens,
+            m_avl_frac: 0.9,
+            sparse_attention: false,
+            token_budget: usize::MAX,
+            ws_window: 12,
+            offload: false,
+            transfer: TransferKind::Memcpy,
+            ws_batch_control: false,
+            prefill_mode: PrefillMode::Chunked,
+            chunk_tokens,
+            max_inject_tokens: chunk_tokens,
+            slo_tbt_factor: 25.0,
+            slo_queue_delay_s: 2.0,
+        }
+    }
+
+    /// vLLM-S: vLLM + dynamic sparse attention (KV still pinned in HBM).
+    pub fn vllm_s(token_budget: usize, chunk_tokens: usize) -> Self {
+        Self {
+            sparse_attention: true,
+            token_budget,
+            ..Self::vllm(chunk_tokens)
+        }
+    }
+
+    /// vLLM-SO: vLLM-S + naive offloading (per-block memcpy transfers,
+    /// no batch control, chunked prefill).
+    pub fn vllm_so(token_budget: usize, chunk_tokens: usize) -> Self {
+        Self {
+            offload: true,
+            ..Self::vllm_s(token_budget, chunk_tokens)
+        }
+    }
+
+    /// Budget in blocks for a given model block size (ceil).
+    pub fn budget_blocks(&self, block_size: usize) -> usize {
+        self.token_budget.div_ceil(block_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_differ_as_in_paper() {
+        let v = ServingConfig::vllm(2048);
+        let s = ServingConfig::vllm_s(2048, 2048);
+        let so = ServingConfig::vllm_so(2048, 2048);
+        let ss = ServingConfig::sparseserve(2048, 2048, 32);
+        assert!(!v.sparse_attention && !v.offload);
+        assert!(s.sparse_attention && !s.offload);
+        assert!(so.sparse_attention && so.offload && so.transfer == TransferKind::Memcpy);
+        assert!(ss.offload && ss.transfer == TransferKind::Flash && ss.ws_batch_control);
+        assert_eq!(ss.prefill_mode, PrefillMode::LayerSegmented);
+        // paper parity: maxInjectToken = B * L
+        assert_eq!(ss.max_inject_tokens, 2048 * 32);
+    }
+
+    #[test]
+    fn budget_blocks_rounds_up() {
+        let ss = ServingConfig::sparseserve(2048, 2048, 32);
+        assert_eq!(ss.budget_blocks(32), 64);
+        assert_eq!(ss.budget_blocks(30), 69); // 2048/30 = 68.27 -> 69
+    }
+}

@@ -1,0 +1,35 @@
+//! Client-facing request/response types.
+
+use std::sync::mpsc::Receiver;
+
+/// Events streamed back to a submitting client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamEvent {
+    /// A generated token (first one marks end of prefill).
+    Token { token: i32, index: usize },
+    /// Generation finished; total tokens produced.
+    Done { n_tokens: usize },
+    /// The request failed.
+    Error(String),
+}
+
+/// Handle returned on submit: stream of events for one request.
+pub struct SubmitHandle {
+    pub id: u32,
+    pub events: Receiver<StreamEvent>,
+}
+
+impl SubmitHandle {
+    /// Drain the stream to completion, returning all tokens.
+    pub fn collect_tokens(self) -> Result<Vec<i32>, String> {
+        let mut toks = Vec::new();
+        for ev in self.events.iter() {
+            match ev {
+                StreamEvent::Token { token, .. } => toks.push(token),
+                StreamEvent::Done { .. } => return Ok(toks),
+                StreamEvent::Error(e) => return Err(e),
+            }
+        }
+        Err("stream closed before Done".into())
+    }
+}

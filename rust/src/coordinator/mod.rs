@@ -1,0 +1,13 @@
+//! The serving coordinator: a threaded front-end around the engine.
+//!
+//! `Server` owns the serving thread (scheduler + backend event loop) and
+//! exposes a submit/stream API over std channels — the std-thread
+//! equivalent of the async request loop in vLLM's router (tokio is not
+//! vendored in this offline build; the event loop is single-owner and
+//! channel-driven, so threads map 1:1).
+
+pub mod api;
+pub mod server;
+
+pub use api::{StreamEvent, SubmitHandle};
+pub use server::Server;

@@ -1,0 +1,166 @@
+//! Threaded serving front-end.
+//!
+//! The engine (scheduler + backend) is constructed *inside* the serving
+//! thread by a builder closure — PJRT handles are thread-affine raw
+//! pointers and never cross threads. Clients talk to the thread through
+//! channels: submissions in, per-request token streams out.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::engine::Backend;
+use crate::scheduler::{Request, Scheduler};
+
+use super::api::{StreamEvent, SubmitHandle};
+
+struct Submission {
+    prompt: Vec<i32>,
+    max_new: usize,
+    id: u32,
+    events: Sender<StreamEvent>,
+}
+
+enum Msg {
+    Submit(Submission),
+    Shutdown,
+}
+
+pub struct Server {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<Result<()>>>,
+    next_id: AtomicU32,
+}
+
+impl Server {
+    /// Start the serving thread. `build` constructs the scheduler and
+    /// backend on that thread (PJRT state stays thread-local).
+    pub fn start<F>(build: F) -> Self
+    where
+        F: FnOnce() -> Result<(Scheduler, Box<dyn Backend>)> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Msg>();
+        let handle = std::thread::Builder::new()
+            .name("sparseserve-engine".into())
+            .spawn(move || -> Result<()> {
+                let (mut sched, mut backend) = build()?;
+                let start = Instant::now();
+                let mut streams: std::collections::HashMap<u32, Sender<StreamEvent>> =
+                    Default::default();
+                let mut emitted: std::collections::HashMap<u32, usize> = Default::default();
+                let mut open = true;
+
+                while open || sched.has_work() {
+                    // drain the submission channel (block briefly when idle)
+                    loop {
+                        let msg = if sched.has_work() {
+                            match rx.try_recv() {
+                                Ok(m) => m,
+                                Err(_) => break,
+                            }
+                        } else {
+                            match rx.recv_timeout(Duration::from_millis(50)) {
+                                Ok(m) => m,
+                                Err(_) => break,
+                            }
+                        };
+                        match msg {
+                            Msg::Shutdown => {
+                                open = false;
+                                break;
+                            }
+                            Msg::Submit(sub) => {
+                                let now = start.elapsed().as_secs_f64();
+                                let req =
+                                    Request::with_prompt(sub.id, sub.prompt, sub.max_new, now);
+                                backend.register(&req)?;
+                                streams.insert(sub.id, sub.events);
+                                emitted.insert(sub.id, 0);
+                                sched.submit(req);
+                            }
+                        }
+                    }
+                    if !sched.has_work() {
+                        continue;
+                    }
+
+                    let now = start.elapsed().as_secs_f64();
+                    let mut ws = |id| backend.decode_ws_bytes(id);
+                    let batch = sched.plan(now, &mut ws);
+                    if batch.is_empty() {
+                        std::thread::sleep(Duration::from_millis(1));
+                        continue;
+                    }
+                    let outcome = match backend.run_batch(&batch, &sched.requests) {
+                        Ok(o) => o,
+                        Err(e) => {
+                            // fail every involved request
+                            for id in batch
+                                .decodes
+                                .iter()
+                                .copied()
+                                .chain(batch.prefill.iter().map(|w| w.req()))
+                            {
+                                if let Some(s) = streams.remove(&id) {
+                                    let _ = s.send(StreamEvent::Error(e.to_string()));
+                                }
+                            }
+                            return Err(e);
+                        }
+                    };
+                    if let Some(work) = &batch.prefill {
+                        sched.advance_prefill(work);
+                    }
+                    let done_at = start.elapsed().as_secs_f64();
+                    for (id, tok) in &outcome.tokens {
+                        let finished = sched.emit_token(*id, *tok, done_at);
+                        let idx = emitted.entry(*id).or_insert(0);
+                        if let (Some(stream), Some(t)) = (streams.get(id), tok) {
+                            let _ = stream.send(StreamEvent::Token { token: *t, index: *idx });
+                        }
+                        *idx += 1;
+                        if finished {
+                            backend.release(*id);
+                            if let Some(stream) = streams.remove(id) {
+                                let _ = stream.send(StreamEvent::Done { n_tokens: *idx });
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            })
+            .expect("spawn engine thread");
+        Self { tx, handle: Some(handle), next_id: AtomicU32::new(1) }
+    }
+
+    /// Submit a prompt; returns a token stream handle.
+    pub fn submit(&self, prompt: Vec<i32>, max_new: usize) -> SubmitHandle {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::Submit(Submission { prompt, max_new, id, events: tx }))
+            .expect("engine thread alive");
+        SubmitHandle { id, events: rx }
+    }
+
+    /// Finish in-flight work and stop the engine thread.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

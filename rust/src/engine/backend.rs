@@ -1,0 +1,45 @@
+//! The execution backend interface.
+
+use anyhow::Result;
+
+use crate::memory::ReqId;
+use crate::scheduler::{Batch, Request};
+
+/// Result of executing one hybrid batch.
+#[derive(Debug, Clone, Default)]
+pub struct StepOutcome {
+    /// Iteration latency on the serving clock, seconds (modeled for the
+    /// simulator, measured for the real backend).
+    pub iter_time_s: f64,
+    /// Tokens produced this iteration: decode tokens for every decode
+    /// request, plus the first token when a prefill completed.
+    pub tokens: Vec<(ReqId, Option<i32>)>,
+    /// KV blocks loaded from DRAM (cache misses).
+    pub blocks_loaded: usize,
+    /// Modeled PCIe load time.
+    pub load_time_s: f64,
+    /// Modeled PCIe save critical-path time.
+    pub save_time_s: f64,
+}
+
+pub trait Backend {
+    /// Called when a request is admitted (allocate KV state).
+    fn register(&mut self, req: &Request) -> Result<()>;
+
+    /// Called when a request finishes or is aborted (free KV state).
+    fn release(&mut self, req: ReqId);
+
+    /// Execute one hybrid batch. `requests` gives access to prompt tokens
+    /// and progress counters.
+    fn run_batch(
+        &mut self,
+        batch: &Batch,
+        requests: &std::collections::HashMap<ReqId, Request>,
+    ) -> Result<StepOutcome>;
+
+    /// Decode working-set estimate in bytes (Alg. 1 input).
+    fn decode_ws_bytes(&mut self, req: ReqId) -> usize;
+
+    /// Human-readable backend name.
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,22 @@
+//! Model executor: drives batches from the scheduler through a backend.
+//!
+//! Two backends share the exact same scheduler / KV-manager / DSA control
+//! logic (the paper's contribution), differing only in how a batch's
+//! compute is realized:
+//!
+//! - [`PjrtBackend`]: the real three-layer path — tiny-llm AOT artifacts
+//!   executed on the PJRT CPU client, real KV bytes in the block pools,
+//!   greedy decode bit-identical to the python goldens.
+//! - [`SimBackend`]: the paper-scale testbed substitute — analytic
+//!   compute/PCIe cost models + the Fig. 8-calibrated synthetic
+//!   selection process, at LWM-7B / Llama3-8B scale.
+
+mod backend;
+mod pjrt_backend;
+mod serve_loop;
+mod sim_backend;
+
+pub use backend::{Backend, StepOutcome};
+pub use pjrt_backend::PjrtBackend;
+pub use serve_loop::{Engine, RunReport};
+pub use sim_backend::SimBackend;

@@ -1,0 +1,521 @@
+//! The real three-layer backend: tiny-llm AOT artifacts on PJRT.
+//!
+//! Mirrors `python/compile/pipeline.py` operation for operation so greedy
+//! decode reproduces the python goldens bit-for-bit:
+//!
+//! prefill (layer-segmented): embed -> per-layer `prefill_layer_{T}` ->
+//!   KV saved via the transfer engine -> `lm_head` on the last valid row;
+//! prefill (chunked baseline): per-chunk, per-layer `prefill_chunk_{T}`
+//!   with the accumulated past re-exported from DRAM each chunk;
+//! decode: `decode_qkv_{B}` (projection+RoPE+block scoring) -> host
+//!   top-k -> KV-manager gather (FlashH2D on misses) ->
+//!   `decode_attend_{B}_{K}` (sparse attention+FFN) -> `lm_head_{B}`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ServingConfig;
+use crate::memory::manager::NEG_INF;
+use crate::memory::{engine_for, KvManager, ReqId};
+use crate::runtime::{HostTensor, MixedInput, Runtime};
+use crate::scheduler::{Batch, PrefillWork, Request};
+use crate::sparse::{top_k_blocks_fast, WorkingSetTracker};
+
+use super::backend::{Backend, StepOutcome};
+
+struct RealReq {
+    last_token: i32,
+    /// Layer-segmented prefill activation carried across batches:
+    /// (data [t_pad, d], t_pad, t_real).
+    hidden: Option<(Vec<f32>, usize, usize)>,
+    ws: WorkingSetTracker,
+}
+
+pub struct PjrtBackend {
+    pub rt: Arc<Runtime>,
+    pub cfg: ServingConfig,
+    pub kv: KvManager,
+    reqs: HashMap<ReqId, RealReq>,
+    /// Precomputed per-layer weight names (device-resident buffer keys).
+    layer_wnames: Vec<Vec<String>>,
+    /// When set, every decode step's full (layer, head, block) selection is
+    /// appended to `selection_log` (single-request experiments: Fig. 8).
+    pub record_selections: bool,
+    pub selection_log: Vec<Vec<(u16, u16, u32)>>,
+}
+
+impl PjrtBackend {
+    pub fn new(rt: Arc<Runtime>, cfg: ServingConfig, hbm_kv_bytes: usize, dram_bytes: usize) -> Self {
+        let spec = rt.manifest.model.clone();
+        let engine = engine_for(cfg.transfer, crate::config::HardwareSpec::a100_40gb());
+        let layer_wnames = (0..spec.n_layers)
+            .map(|i| {
+                crate::runtime::WeightStore::layer_names(i)
+            })
+            .collect();
+        let kv = KvManager::new(spec, hbm_kv_bytes, dram_bytes, cfg.offload, engine);
+        Self {
+            rt,
+            cfg,
+            kv,
+            reqs: HashMap::new(),
+            layer_wnames,
+            record_selections: false,
+            selection_log: Vec::new(),
+        }
+    }
+
+    /// Weight name for (layer, LAYER_WEIGHT_NAMES index).
+    fn wname(&self, layer: usize, idx: usize) -> &str {
+        &self.layer_wnames[layer][idx]
+    }
+
+    fn spec(&self) -> &crate::config::ModelSpec {
+        self.kv.spec()
+    }
+
+    /// Budget in blocks, clamped to the model's max (dense = all blocks).
+    fn budget_needed(&self) -> usize {
+        let nb = self.spec().max_blocks();
+        if self.cfg.sparse_attention {
+            self.cfg.budget_blocks(self.spec().block_size).min(nb)
+        } else {
+            nb
+        }
+    }
+
+    /// Smallest compiled K bucket covering the budget.
+    fn budget_bucket(&self) -> Result<usize> {
+        let need = self.budget_needed();
+        self.rt
+            .manifest
+            .fit_bucket("budget_k", need)
+            .ok_or_else(|| anyhow!("no budget_k bucket >= {need}"))
+    }
+
+    // ------------------------------------------------------------- prefill
+
+    fn run_prefill(&mut self, work: &PrefillWork, requests: &HashMap<ReqId, Request>, out: &mut StepOutcome) -> Result<()> {
+        match work {
+            PrefillWork::LayerSegment { req, layer_start, layer_end, tok_start, tok_len, is_last } => {
+                let r = &requests[req];
+                if *tok_start != 0 || *tok_len != r.prompt_len {
+                    return Err(anyhow!(
+                        "real backend supports whole-prompt layer segments only \
+                         (hybrid within-layer chunking is simulator-only); \
+                         set max_inject_tokens >= max prompt length"
+                    ));
+                }
+                self.prefill_layers(*req, r, *layer_start, *layer_end, *is_last, out)
+            }
+            PrefillWork::Chunk { req, start, len, is_last } => {
+                let r = &requests[req];
+                if *start == 0 && *len == r.prompt_len {
+                    // plain prefill = all layers, whole prompt, no past
+                    self.prefill_layers(*req, r, 0, self.spec().n_layers, *is_last, out)
+                } else {
+                    self.prefill_chunk(*req, r, *start, *len, *is_last, out)
+                }
+            }
+        }
+    }
+
+    /// Whole-prompt prefill of layers [layer_start, layer_end).
+    fn prefill_layers(
+        &mut self,
+        id: ReqId,
+        req: &Request,
+        layer_start: usize,
+        layer_end: usize,
+        is_last: bool,
+        out: &mut StepOutcome,
+    ) -> Result<()> {
+        let d = self.spec().d_model;
+        let plen = req.prompt_len;
+        let t_pad = self
+            .rt
+            .manifest
+            .fit_bucket("prefill_t", plen)
+            .ok_or_else(|| anyhow!("prompt {plen} exceeds prefill buckets"))?;
+
+        // layer 0: embed the (padded) prompt; later segments restore the
+        // saved activation (paper Fig. 9: "activation states ... saved")
+        let mut x: Vec<f32> = if layer_start == 0 {
+            let mut toks = vec![0i32; t_pad];
+            toks[..plen].copy_from_slice(&req.prompt);
+            let tokens = HostTensor::i32(vec![t_pad], toks);
+            let outs = self
+                .rt
+                .execute(&format!("embed_{t_pad}"), &[&tokens, self.rt.weights.get("embedding")])?;
+            outs[0].as_f32().to_vec()
+        } else {
+            let (h, tp, _tr) = self
+                .reqs
+                .get_mut(&id)
+                .and_then(|r| r.hidden.take())
+                .ok_or_else(|| anyhow!("missing saved activation for req {id}"))?;
+            debug_assert_eq!(tp, t_pad);
+            h
+        };
+
+        let mut seg_mask = vec![0.0f32; t_pad];
+        seg_mask[plen..].fill(NEG_INF);
+        let seg_mask_t = HostTensor::f32(vec![t_pad], seg_mask);
+        let pos0 = HostTensor::scalar_i32(0);
+
+        for layer in layer_start..layer_end {
+            let xt = HostTensor::f32(vec![t_pad, d], x);
+            let lw = self.rt.weights.layer(layer);
+            let mut inputs: Vec<&HostTensor> = vec![&xt, &pos0, &seg_mask_t];
+            inputs.extend(lw);
+            let outs = self.rt.execute(&format!("prefill_layer_{t_pad}"), &inputs)?;
+            // outs: (k [Hkv,T,Dh], v, x2 [T,d])
+            self.kv
+                .append_prefill_layer(id, layer, outs[0].as_f32(), outs[1].as_f32(), t_pad, plen);
+            x = outs[2].as_f32().to_vec();
+        }
+
+        if is_last {
+            let tok = self.lm_head_rows(&[(&x, t_pad, plen - 1)])?[0];
+            let st = self.reqs.get_mut(&id).expect("unregistered");
+            st.last_token = tok;
+            st.hidden = None;
+            out.tokens.push((id, Some(tok)));
+        } else {
+            self.reqs.get_mut(&id).expect("unregistered").hidden = Some((x, t_pad, plen));
+        }
+        Ok(())
+    }
+
+    /// One chunk of the chunked-prefill baseline (start > 0: has past).
+    fn prefill_chunk(
+        &mut self,
+        id: ReqId,
+        req: &Request,
+        start: usize,
+        len: usize,
+        is_last: bool,
+        out: &mut StepOutcome,
+    ) -> Result<()> {
+        let spec = self.spec().clone();
+        let (d, hkv, dh) = (spec.d_model, spec.n_kv_heads, spec.head_dim);
+        let t_pad = self
+            .rt
+            .manifest
+            .fit_bucket("chunk_t", len)
+            .ok_or_else(|| anyhow!("chunk {len} exceeds chunk buckets"))?;
+        let p_max = self.rt.manifest.chunk_past;
+        if start > p_max {
+            return Err(anyhow!("past {start} exceeds chunk_past bucket {p_max}"));
+        }
+
+        let mut toks = vec![0i32; t_pad];
+        toks[..len].copy_from_slice(&req.prompt[start..start + len]);
+        let tokens = HostTensor::i32(vec![t_pad], toks);
+        let embedded = self
+            .rt
+            .execute(&format!("embed_{t_pad}"), &[&tokens, self.rt.weights.get("embedding")])?;
+        let mut x = embedded[0].as_f32().to_vec();
+
+        let mut seg_mask = vec![0.0f32; t_pad];
+        seg_mask[len..].fill(NEG_INF);
+        let seg_mask_t = HostTensor::f32(vec![t_pad], seg_mask);
+        let pos = HostTensor::scalar_i32(start as i32);
+
+        for layer in 0..spec.n_layers {
+            // export this layer's accumulated past (exactly `start` tokens)
+            let mut pk = vec![0.0f32; hkv * p_max * dh];
+            let mut pv = vec![0.0f32; hkv * p_max * dh];
+            let mut pm = vec![0.0f32; p_max];
+            self.kv.export_past(id, layer, p_max, &mut pk, &mut pv, &mut pm);
+            let pk_t = HostTensor::f32(vec![hkv, p_max, dh], pk);
+            let pv_t = HostTensor::f32(vec![hkv, p_max, dh], pv);
+            let pm_t = HostTensor::f32(vec![p_max], pm);
+
+            let xt = HostTensor::f32(vec![t_pad, d], x);
+            let lw = self.rt.weights.layer(layer);
+            let mut inputs: Vec<&HostTensor> = vec![&xt, &pos, &seg_mask_t, &pk_t, &pv_t, &pm_t];
+            inputs.extend(lw);
+            let outs = self.rt.execute(&format!("prefill_chunk_{t_pad}"), &inputs)?;
+            self.kv
+                .append_prefill_layer(id, layer, outs[0].as_f32(), outs[1].as_f32(), t_pad, len);
+            x = outs[2].as_f32().to_vec();
+        }
+
+        if is_last {
+            let tok = self.lm_head_rows(&[(&x, t_pad, len - 1)])?[0];
+            self.reqs.get_mut(&id).expect("unregistered").last_token = tok;
+            out.tokens.push((id, Some(tok)));
+        }
+        Ok(())
+    }
+
+    /// lm_head over selected rows of hidden states: (data [t_pad, d], t_pad, row).
+    fn lm_head_rows(&self, rows: &[(&Vec<f32>, usize, usize)]) -> Result<Vec<i32>> {
+        let d = self.spec().d_model;
+        let b = rows.len();
+        let b_pad = self
+            .rt
+            .manifest
+            .fit_bucket("decode_b", b)
+            .ok_or_else(|| anyhow!("no decode bucket >= {b}"))?;
+        let mut x = vec![0.0f32; b_pad * d];
+        for (i, (data, _t_pad, row)) in rows.iter().enumerate() {
+            x[i * d..(i + 1) * d].copy_from_slice(&data[row * d..(row + 1) * d]);
+        }
+        let xt = HostTensor::f32(vec![b_pad, d], x);
+        let outs = self.rt.execute_mixed(
+            &format!("lm_head_{b_pad}"),
+            &[
+                MixedInput::Tensor(&xt),
+                MixedInput::Weight("final_norm"),
+                MixedInput::Weight("lm_head"),
+            ],
+        )?;
+        Ok(outs[0].as_i32()[..b].to_vec())
+    }
+
+    // -------------------------------------------------------------- decode
+
+    /// One decode step for a group of requests (<= max decode bucket).
+    fn decode_group(&mut self, ids: &[ReqId], out: &mut StepOutcome) -> Result<()> {
+        let spec = self.spec().clone();
+        let (d, hq, hkv, dh, bs) =
+            (spec.d_model, spec.n_heads, spec.n_kv_heads, spec.head_dim, spec.block_size);
+        let nb = spec.max_blocks();
+        let b = ids.len();
+        let b_pad = self
+            .rt
+            .manifest
+            .fit_bucket("decode_b", b)
+            .ok_or_else(|| anyhow!("no decode bucket >= {b}"))?;
+        let k_bucket = self.budget_bucket()?;
+        let budget = self.budget_needed().min(k_bucket);
+        let s_len = k_bucket * bs;
+
+        // ---- embed last tokens ----
+        let mut toks = vec![0i32; b_pad];
+        for (i, id) in ids.iter().enumerate() {
+            toks[i] = self.reqs[id].last_token;
+        }
+        let tokens = HostTensor::i32(vec![b_pad], toks);
+        let emb = self.rt.execute_mixed(
+            &format!("embed_{b_pad}"),
+            &[MixedInput::Tensor(&tokens), MixedInput::Weight("embedding")],
+        )?;
+        let mut x = emb[0].as_f32().to_vec(); // [b_pad, d]
+
+        // positions: current sequence length (same for every layer)
+        let mut pos = vec![0i32; b_pad];
+        for (i, id) in ids.iter().enumerate() {
+            pos[i] = self.kv.seq_len(*id) as i32;
+        }
+        let pos_t = HostTensor::i32(vec![b_pad], pos);
+
+        // per-step working-set recordings
+        let mut ws_items: Vec<Vec<(u16, u16, u32)>> = vec![Vec::new(); b];
+
+        for layer in 0..spec.n_layers {
+            // ---- metadata tensors ----
+            let mut lo = vec![0.0f32; b_pad * hkv * nb * dh];
+            let mut hi = vec![0.0f32; b_pad * hkv * nb * dh];
+            let mut mm = vec![NEG_INF; b_pad * hkv * nb];
+            for (i, id) in ids.iter().enumerate() {
+                let lo_s = &mut lo[i * hkv * nb * dh..(i + 1) * hkv * nb * dh];
+                let hi_s = &mut hi[i * hkv * nb * dh..(i + 1) * hkv * nb * dh];
+                let mm_s = &mut mm[i * hkv * nb..(i + 1) * hkv * nb];
+                self.kv.metadata_into(*id, layer, nb, lo_s, hi_s, mm_s);
+            }
+            let xt = HostTensor::f32(vec![b_pad, d], x.clone());
+            let lo_t = HostTensor::f32(vec![b_pad, hkv, nb, dh], lo);
+            let hi_t = HostTensor::f32(vec![b_pad, hkv, nb, dh], hi);
+            let mm_t = HostTensor::f32(vec![b_pad, hkv, nb], mm);
+            let inputs = [
+                MixedInput::Tensor(&xt),
+                MixedInput::Tensor(&pos_t),
+                MixedInput::Tensor(&lo_t),
+                MixedInput::Tensor(&hi_t),
+                MixedInput::Tensor(&mm_t),
+                MixedInput::Weight(self.wname(layer, 0)), // attn_norm
+                MixedInput::Weight(self.wname(layer, 1)), // wq
+                MixedInput::Weight(self.wname(layer, 2)), // wk
+                MixedInput::Weight(self.wname(layer, 3)), // wv
+            ];
+            let outs = self.rt.execute_mixed(&format!("decode_qkv_{b_pad}"), &inputs)?;
+            // outs: q [B,Hq,Dh], k [B,Hkv,Dh], v [B,Hkv,Dh], scores [B,Hkv,NB]
+            let q = outs[0].as_f32();
+            let kk = outs[1].as_f32();
+            let vv = outs[2].as_f32();
+            let scores = outs[3].as_f32();
+
+            // ---- save new token KV ----
+            for (i, id) in ids.iter().enumerate() {
+                self.kv.append_decode_token(
+                    *id,
+                    layer,
+                    &kk[i * hkv * dh..(i + 1) * hkv * dh],
+                    &vv[i * hkv * dh..(i + 1) * hkv * dh],
+                );
+            }
+
+            // ---- select + gather ----
+            let mut gk = vec![0.0f32; b_pad * hkv * s_len * dh];
+            let mut gv = vec![0.0f32; b_pad * hkv * s_len * dh];
+            let mut gm = vec![NEG_INF; b_pad * hkv * s_len];
+            for (i, id) in ids.iter().enumerate() {
+                let n_sealed = self.kv.n_sealed(*id, layer);
+                let sel: Vec<Vec<u32>> = (0..hkv)
+                    .map(|h| {
+                        let row = &scores[(i * hkv + h) * nb..(i * hkv + h + 1) * nb];
+                        top_k_blocks_fast(row, n_sealed, budget.saturating_sub(1))
+                    })
+                    .collect();
+                for (h, sh) in sel.iter().enumerate() {
+                    for &blk in sh {
+                        ws_items[i].push((layer as u16, h as u16, blk));
+                    }
+                    // the open block is part of the working set too
+                    if self.kv.open_fill(*id, layer) > 0 {
+                        ws_items[i].push((layer as u16, h as u16, n_sealed as u32));
+                    }
+                }
+                let gk_s = &mut gk[i * hkv * s_len * dh..(i + 1) * hkv * s_len * dh];
+                let gv_s = &mut gv[i * hkv * s_len * dh..(i + 1) * hkv * s_len * dh];
+                let gm_s = &mut gm[i * hkv * s_len..(i + 1) * hkv * s_len];
+                self.kv.gather_into(*id, layer, &sel, k_bucket, gk_s, gv_s, gm_s);
+            }
+
+            // ---- sparse attention + FFN ----
+            let xt = HostTensor::f32(vec![b_pad, d], x);
+            let q_t = HostTensor::f32(vec![b_pad, hq, dh], q.to_vec());
+            let gk_t = HostTensor::f32(vec![b_pad, hkv, s_len, dh], gk);
+            let gv_t = HostTensor::f32(vec![b_pad, hkv, s_len, dh], gv);
+            let gm_t = HostTensor::f32(vec![b_pad, hkv, s_len], gm);
+            let inputs = [
+                MixedInput::Tensor(&xt),
+                MixedInput::Tensor(&q_t),
+                MixedInput::Tensor(&gk_t),
+                MixedInput::Tensor(&gv_t),
+                MixedInput::Tensor(&gm_t),
+                MixedInput::Weight(self.wname(layer, 4)), // wo
+                MixedInput::Weight(self.wname(layer, 5)), // ffn_norm
+                MixedInput::Weight(self.wname(layer, 6)), // w_gate
+                MixedInput::Weight(self.wname(layer, 7)), // w_up
+                MixedInput::Weight(self.wname(layer, 8)), // w_down
+            ];
+            let outs = self
+                .rt
+                .execute_mixed(&format!("decode_attend_{b_pad}_{k_bucket}"), &inputs)?;
+            x = outs[0].as_f32().to_vec();
+        }
+
+        // ---- next token ----
+        let xt = HostTensor::f32(vec![b_pad, d], x);
+        let outs = self.rt.execute_mixed(
+            &format!("lm_head_{b_pad}"),
+            &[
+                MixedInput::Tensor(&xt),
+                MixedInput::Weight("final_norm"),
+                MixedInput::Weight("lm_head"),
+            ],
+        )?;
+        let next = outs[0].as_i32();
+        for (i, id) in ids.iter().enumerate() {
+            let st = self.reqs.get_mut(id).unwrap();
+            st.last_token = next[i];
+            let items = std::mem::take(&mut ws_items[i]);
+            if self.record_selections {
+                self.selection_log.push(items.clone());
+            }
+            let st = self.reqs.get_mut(id).unwrap();
+            st.ws.record_step(items);
+            out.tokens.push((*id, Some(next[i])));
+        }
+        Ok(())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn register(&mut self, req: &Request) -> Result<()> {
+        self.kv.register(req.id);
+        self.reqs.insert(
+            req.id,
+            RealReq {
+                last_token: 0,
+                hidden: None,
+                ws: WorkingSetTracker::new(self.cfg.ws_window),
+            },
+        );
+        Ok(())
+    }
+
+    fn release(&mut self, req: ReqId) {
+        self.kv.release(req);
+        self.reqs.remove(&req);
+    }
+
+    fn decode_ws_bytes(&mut self, req: ReqId) -> usize {
+        let bb = self.kv.block_bytes();
+        let spec = self.kv.spec();
+        let init = {
+            let budget = if self.cfg.sparse_attention {
+                self.cfg.budget_blocks(spec.block_size)
+            } else {
+                spec.max_blocks()
+            };
+            budget.min(self.kv.n_blocks(req).max(1))
+                * spec.n_kv_heads
+                * spec.n_layers
+                * bb
+        };
+        let r = match self.reqs.get_mut(&req) {
+            Some(r) => r,
+            None => return init,
+        };
+        if r.ws.steps_recorded() == 0 {
+            init
+        } else {
+            r.ws.ws_bytes(bb)
+        }
+    }
+
+    fn run_batch(
+        &mut self,
+        batch: &Batch,
+        requests: &HashMap<ReqId, Request>,
+    ) -> Result<StepOutcome> {
+        let t0 = Instant::now();
+        let mut out = StepOutcome::default();
+
+        if let Some(work) = &batch.prefill {
+            self.run_prefill(work, requests, &mut out)?;
+        }
+
+        // split decodes into compiled batch buckets
+        let max_b = self
+            .rt
+            .manifest
+            .bucket("decode_b")
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(1);
+        for group in batch.decodes.chunks(max_b) {
+            self.decode_group(group, &mut out)?;
+        }
+
+        let iter = self.kv.end_iteration();
+        out.blocks_loaded = iter.blocks_loaded;
+        out.load_time_s = iter.load.modeled_s;
+        out.save_time_s = iter.save.modeled_s;
+        out.iter_time_s = t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+}

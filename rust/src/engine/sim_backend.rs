@@ -1,0 +1,358 @@
+//! Paper-scale simulated backend.
+//!
+//! Executes batches against the analytic cost model (sim::cost) and the
+//! Fig. 8-calibrated synthetic selection process (sim::selection), while
+//! sharing the *real* scheduler, LRU-cache accounting and working-set
+//! machinery with the PJRT backend. Selection/caching granularity is the
+//! block-index *group* (one group = that block index across all layers
+//! and KV heads); cost accounting multiplies back to per-head blocks.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::config::{HardwareSpec, ModelSpec, ServingConfig};
+use crate::memory::{BlockKey, LruCache, ReqId};
+use crate::scheduler::{Batch, PrefillWork, Request};
+use crate::sim::{CostModel, SelectionModel};
+use crate::sparse::WorkingSetTracker;
+
+use super::backend::{Backend, StepOutcome};
+
+struct SimReq {
+    /// Tokens with stored KV.
+    len: usize,
+    selection: SelectionModel,
+    ws: WorkingSetTracker,
+}
+
+pub struct SimBackend {
+    pub cfg: ServingConfig,
+    pub cost: CostModel,
+    /// HBM residency cache at block-group granularity.
+    cache: LruCache<()>,
+    reqs: HashMap<ReqId, SimReq>,
+    /// per-head blocks represented by one cached group.
+    group_blocks: usize,
+    group_bytes: usize,
+    seed: u64,
+    /// Cumulative counters.
+    pub total_blocks_loaded: u64,
+}
+
+impl SimBackend {
+    pub fn new(cfg: ServingConfig, spec: ModelSpec, hw: HardwareSpec) -> Self {
+        let group_blocks = spec.n_layers * spec.n_kv_heads;
+        let group_bytes = group_blocks * spec.block_bytes();
+        let capacity = (hw.hbm_kv_bytes / group_bytes).max(1);
+        Self {
+            cfg,
+            cost: CostModel::new(spec, hw),
+            cache: LruCache::new(capacity),
+            reqs: HashMap::new(),
+            group_blocks,
+            group_bytes,
+            seed: 0x51,
+            total_blocks_loaded: 0,
+        }
+    }
+
+    fn spec(&self) -> &ModelSpec {
+        &self.cost.spec
+    }
+
+    pub fn hbm_capacity_bytes(&self) -> usize {
+        self.cache.capacity() * self.group_bytes
+    }
+
+    /// Reference decode iteration (SLO unit).
+    pub fn decode_iter_ref(&self) -> f64 {
+        let kv = if self.cfg.sparse_attention {
+            self.cfg.token_budget.min(self.spec().max_ctx)
+        } else {
+            self.spec().max_ctx / 2
+        };
+        self.cost.decode_iter_ref(kv)
+    }
+
+    fn budget_groups(&self) -> usize {
+        self.cfg.budget_blocks(self.spec().block_size)
+    }
+
+    /// Touch the cache for a request's selected groups; returns misses.
+    fn touch_groups(&mut self, req: ReqId, groups: &[u32]) -> usize {
+        let mut misses = 0;
+        for &g in groups {
+            let key = BlockKey::new(req, 0, 0, g);
+            if self.cache.get(&key).is_none() {
+                misses += 1;
+                if let Some(_evicted) = self.cache.insert(key, ()) {}
+            }
+        }
+        misses
+    }
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn register(&mut self, req: &Request) -> Result<()> {
+        self.reqs.insert(
+            req.id,
+            SimReq {
+                len: 0,
+                selection: SelectionModel::new(self.seed ^ req.id as u64),
+                ws: WorkingSetTracker::new(self.cfg.ws_window),
+            },
+        );
+        Ok(())
+    }
+
+    fn release(&mut self, req: ReqId) {
+        self.reqs.remove(&req);
+        self.cache.remove_request(req);
+    }
+
+    fn decode_ws_bytes(&mut self, req: ReqId) -> usize {
+        let budget = self.budget_groups();
+        let group_bytes = self.group_bytes;
+        let spec_bs = self.spec().block_size;
+        let r = self.reqs.get_mut(&req).expect("unregistered");
+        if !self.cfg.sparse_attention {
+            // dense attention touches the whole context
+            return r.len.div_ceil(spec_bs) * group_bytes;
+        }
+        if r.ws.steps_recorded() == 0 {
+            // no history yet: assume the full budget is hot
+            return budget.min(r.len.div_ceil(spec_bs)).max(1) * group_bytes;
+        }
+        r.ws.ws_blocks() * group_bytes
+    }
+
+    fn run_batch(
+        &mut self,
+        batch: &Batch,
+        requests: &HashMap<ReqId, Request>,
+    ) -> Result<StepOutcome> {
+        let spec = self.spec().clone();
+        let bs = spec.block_size;
+        let mut out = StepOutcome::default();
+        let mut compute_s = 0.0;
+        let mut miss_groups_total = 0usize;
+
+        // ---------------- prefill share ----------------
+        if let Some(work) = &batch.prefill {
+            let req_id = work.req();
+            let save_f = self
+                .cost
+                .save_overhead_factor(self.cfg.transfer, self.cfg.offload);
+            match work {
+                PrefillWork::Chunk { start, len, is_last, .. } => {
+                    let t = self.cost.prefill_layer_time(*len, *start) * spec.n_layers as f64;
+                    compute_s += t * save_f;
+                    // offloaded chunked prefill re-fetches evicted past KV
+                    if self.cfg.offload && *start > 0 {
+                        let past_groups: Vec<u32> = (0..(*start / bs) as u32).collect();
+                        let misses = self.touch_groups(req_id, &past_groups);
+                        miss_groups_total += misses;
+                    }
+                    let r = self.reqs.get_mut(&req_id).expect("unregistered");
+                    r.len += len;
+                    if *is_last {
+                        out.tokens.push((req_id, None));
+                    }
+                }
+                PrefillWork::LayerSegment {
+                    layer_start, layer_end, tok_start, tok_len, is_last, ..
+                } => {
+                    let layers = (layer_end - layer_start) as f64;
+                    let t = self.cost.prefill_layer_time(*tok_len, *tok_start) * layers;
+                    compute_s += t * save_f;
+                    // layer-segmented prefill writes straight to DRAM and
+                    // evicts immediately: no cache traffic, single-layer WS
+                    if *is_last {
+                        let r = self.reqs.get_mut(&req_id).expect("unregistered");
+                        r.len = requests[&req_id].prompt_len;
+                        out.tokens.push((req_id, None));
+                    }
+                }
+            }
+        }
+
+        // ---------------- decode share ----------------
+        if !batch.decodes.is_empty() {
+            let budget_groups = self.budget_groups();
+            let mut kv_tokens = Vec::with_capacity(batch.decodes.len());
+            for &id in &batch.decodes {
+                let sparse = self.cfg.sparse_attention;
+                let offload = self.cfg.offload;
+                let (n_sealed, len) = {
+                    let r = self.reqs.get(&id).expect("unregistered");
+                    (r.len / bs, r.len)
+                };
+                if sparse {
+                    let sel = {
+                        let r = self.reqs.get_mut(&id).unwrap();
+                        r.selection.next_selection(n_sealed, budget_groups)
+                    };
+                    if offload {
+                        let misses = self.touch_groups(id, &sel);
+                        miss_groups_total += misses;
+                    }
+                    let r = self.reqs.get_mut(&id).unwrap();
+                    r.ws.record_step(sel.iter().map(|&b| (0u16, 0u16, b)).collect());
+                    kv_tokens.push((sel.len() * bs + len % bs).min(len).max(1));
+                } else {
+                    kv_tokens.push(len.max(1));
+                }
+                self.reqs.get_mut(&id).unwrap().len += 1;
+                out.tokens.push((id, None));
+            }
+            compute_s += self.cost.decode_iter_time(batch.decodes.len(), &kv_tokens);
+        }
+
+        // ---------------- PCIe loading stalls ----------------
+        let miss_blocks = miss_groups_total * self.group_blocks;
+        out.blocks_loaded = miss_blocks;
+        out.load_time_s = self.cost.load_time(self.cfg.transfer, miss_blocks);
+        self.total_blocks_loaded += miss_blocks as u64;
+
+        // Loading overlaps partially with compute (the async copy stream
+        // runs while other layers execute); only the excess stalls the
+        // iteration. 50% overlap matches the paper's observation that
+        // loading "cannot be fully hidden by computation".
+        let stall = (out.load_time_s - 0.5 * compute_s).max(0.0);
+        out.iter_time_s = compute_s + stall;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::serving::TransferKind;
+
+    fn mk(cfg: ServingConfig) -> SimBackend {
+        SimBackend::new(cfg, ModelSpec::lwm_7b(), HardwareSpec::a100_40gb())
+    }
+
+    fn prefill_all(b: &mut SimBackend, id: ReqId, plen: usize) -> HashMap<ReqId, Request> {
+        let mut reqs = HashMap::new();
+        let mut r = Request::new(id, plen, 64, 0.0);
+        r.phase = crate::scheduler::Phase::Prefill;
+        b.register(&r).unwrap();
+        reqs.insert(id, r);
+        let batch = Batch {
+            decodes: vec![],
+            prefill: Some(PrefillWork::Chunk { req: id, start: 0, len: plen, is_last: true }),
+        };
+        b.run_batch(&batch, &reqs).unwrap();
+        reqs.get_mut(&id).unwrap().phase = crate::scheduler::Phase::Decode;
+        reqs
+    }
+
+    #[test]
+    fn decode_outputs_token_per_request() {
+        let mut b = mk(ServingConfig::sparseserve(2048, 2048, 32));
+        let reqs = prefill_all(&mut b, 1, 8192);
+        let batch = Batch { decodes: vec![1], prefill: None };
+        let out = b.run_batch(&batch, &reqs).unwrap();
+        assert_eq!(out.tokens, vec![(1, None)]);
+        assert!(out.iter_time_s > 0.0);
+    }
+
+    #[test]
+    fn warm_cache_stops_loading() {
+        let mut b = mk(ServingConfig::sparseserve(2048, 2048, 32));
+        let reqs = prefill_all(&mut b, 1, 8192);
+        let batch = Batch { decodes: vec![1], prefill: None };
+        let first = b.run_batch(&batch, &reqs).unwrap();
+        assert!(first.blocks_loaded > 0, "cold start loads");
+        let mut warm_loads = 0;
+        for _ in 0..5 {
+            warm_loads = b.run_batch(&batch, &reqs).unwrap().blocks_loaded;
+        }
+        assert!(
+            warm_loads < first.blocks_loaded / 2,
+            "locality must cut loads: {warm_loads} vs {first:?}"
+        );
+    }
+
+    #[test]
+    fn dense_vllm_never_touches_pcie() {
+        let mut b = mk(ServingConfig::vllm(2048));
+        let reqs = prefill_all(&mut b, 1, 8192);
+        let batch = Batch { decodes: vec![1], prefill: None };
+        let out = b.run_batch(&batch, &reqs).unwrap();
+        assert_eq!(out.blocks_loaded, 0);
+        assert_eq!(out.load_time_s, 0.0);
+    }
+
+    #[test]
+    fn sparse_decode_iterations_are_faster_than_dense() {
+        let mut s = mk(ServingConfig::vllm_s(2048, 2048));
+        let mut d = mk(ServingConfig::vllm(2048));
+        let rs = prefill_all(&mut s, 1, 32_000);
+        let rd = prefill_all(&mut d, 1, 32_000);
+        let batch = Batch { decodes: vec![1], prefill: None };
+        let ts = s.run_batch(&batch, &rs).unwrap().iter_time_s;
+        let td = d.run_batch(&batch, &rd).unwrap().iter_time_s;
+        assert!(td > 1.25 * ts, "dense {td} vs sparse {ts}");
+    }
+
+    #[test]
+    fn memcpy_engine_amplifies_load_time() {
+        let mut flash = mk(ServingConfig::sparseserve(2048, 2048, 32));
+        let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
+        cfg.transfer = TransferKind::Memcpy;
+        let mut mem = mk(cfg);
+        let rf = prefill_all(&mut flash, 1, 16_000);
+        let rm = prefill_all(&mut mem, 1, 16_000);
+        let batch = Batch { decodes: vec![1], prefill: None };
+        let f = flash.run_batch(&batch, &rf).unwrap();
+        let m = mem.run_batch(&batch, &rm).unwrap();
+        assert_eq!(f.blocks_loaded, m.blocks_loaded);
+        assert!(m.load_time_s > 3.0 * f.load_time_s);
+    }
+
+    #[test]
+    fn ws_estimate_grows_with_history_and_caps_at_union() {
+        let mut b = mk(ServingConfig::sparseserve(2048, 2048, 32));
+        let reqs = prefill_all(&mut b, 1, 16_000);
+        let w0 = b.decode_ws_bytes(1);
+        assert!(w0 > 0);
+        let batch = Batch { decodes: vec![1], prefill: None };
+        for _ in 0..14 {
+            b.run_batch(&batch, &reqs).unwrap();
+        }
+        let w = b.decode_ws_bytes(1);
+        // union over 12 steps >= single-step budget
+        assert!(w >= w0, "w={w} w0={w0}");
+        // but bounded: locality keeps it within ~3x budget
+        assert!(w < 4 * w0, "w={w} w0={w0}");
+    }
+
+    #[test]
+    fn layer_segmented_prefill_avoids_cache_traffic() {
+        let mut b = mk(ServingConfig::sparseserve(2048, 2048, 32));
+        let mut r = Request::new(1, 8192, 8, 0.0);
+        r.phase = crate::scheduler::Phase::Prefill;
+        b.register(&r).unwrap();
+        let mut reqs = HashMap::new();
+        reqs.insert(1, r);
+        for layer in 0..32 {
+            let batch = Batch {
+                decodes: vec![],
+                prefill: Some(PrefillWork::LayerSegment {
+                    req: 1, layer_start: layer, layer_end: layer + 1,
+                    tok_start: 0, tok_len: 8192, is_last: layer == 31,
+                }),
+            };
+            let out = b.run_batch(&batch, &reqs).unwrap();
+            assert_eq!(out.blocks_loaded, 0);
+        }
+        assert_eq!(b.reqs[&1].len, 8192);
+    }
+}

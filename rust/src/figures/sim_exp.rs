@@ -1,0 +1,344 @@
+//! Simulated (paper-scale) experiments: Figs. 1, 4, 10-16.
+
+use std::collections::HashMap;
+
+use crate::baselines::{ablation_ladder, comparison_set};
+use crate::config::serving::TransferKind;
+use crate::config::{HardwareSpec, ModelSpec, PrefillMode, ServingConfig};
+use crate::engine::{Backend, Engine, SimBackend};
+use crate::metrics::RunMetrics;
+use crate::scheduler::{Batch, Phase, PrefillWork, Request, Scheduler};
+use crate::sim::CostModel;
+use crate::workload::{generate, WorkloadSpec};
+
+use super::{f, render_table};
+
+pub fn model_for(name: &str) -> ModelSpec {
+    ModelSpec::by_name(name).unwrap_or_else(|| ModelSpec::lwm_7b())
+}
+
+fn workload_for(model: &ModelSpec, rate: f64, seed: u64) -> WorkloadSpec {
+    if model.name == "llama3-8b" {
+        WorkloadSpec::paper_llama3(rate, seed)
+    } else {
+        WorkloadSpec::paper_lwm(rate, seed)
+    }
+}
+
+/// Serve a Poisson trace on the simulator; n scales with rate so every
+/// run covers a comparable wall-clock window.
+pub fn run_sim(cfg: ServingConfig, model: &ModelSpec, rate: f64, seed: u64) -> RunMetrics {
+    let hw = HardwareSpec::a100_40gb();
+    let n = ((rate * 240.0).ceil() as usize).clamp(16, 96);
+    let backend = SimBackend::new(cfg.clone(), model.clone(), hw.clone());
+    let sched = Scheduler::new(cfg, model.clone(), hw.hbm_kv_bytes);
+    let engine = Engine::new(sched, Box::new(backend));
+    let trace = generate(&workload_for(model, rate, seed), n, 0);
+    engine.run_trace(trace, 3.0e4).unwrap().metrics
+}
+
+// ------------------------------------------------------------------ Fig. 1
+
+/// Fixed-batch decode: throughput + KV blocks loaded per iteration.
+pub fn fig1_point(batch_size: usize, ctx: usize) -> (f64, f64) {
+    let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
+    cfg.ws_batch_control = false;
+    cfg.r_max = 64;
+    let spec = ModelSpec::lwm_7b();
+    let hw = HardwareSpec::a100_40gb();
+    let mut b = SimBackend::new(cfg, spec, hw);
+    let mut requests = HashMap::new();
+    for id in 0..batch_size as u32 {
+        let mut r = Request::new(id, ctx, 1024, 0.0);
+        r.phase = Phase::Prefill;
+        b.register(&r).unwrap();
+        requests.insert(id, r);
+        let batch = Batch {
+            decodes: vec![],
+            prefill: Some(PrefillWork::Chunk { req: id, start: 0, len: ctx, is_last: true }),
+        };
+        b.run_batch(&batch, &requests).unwrap();
+        requests.get_mut(&id).unwrap().phase = Phase::Decode;
+    }
+    let batch = Batch { decodes: (0..batch_size as u32).collect(), prefill: None };
+    for _ in 0..10 {
+        b.run_batch(&batch, &requests).unwrap();
+    }
+    let (mut time, mut loads, iters) = (0.0, 0usize, 40);
+    for _ in 0..iters {
+        let out = b.run_batch(&batch, &requests).unwrap();
+        time += out.iter_time_s;
+        loads += out.blocks_loaded;
+    }
+    ((batch_size * iters) as f64 / time, loads as f64 / iters as f64)
+}
+
+pub fn fig1() -> String {
+    let rows: Vec<Vec<String>> = [2usize, 4, 6, 8, 12, 16, 24, 32]
+        .iter()
+        .map(|&b| {
+            let (thpt, loads) = fig1_point(b, 31_000);
+            vec![b.to_string(), f(thpt), f(loads)]
+        })
+        .collect();
+    render_table(
+        "Fig 1: decode throughput & KV blocks loaded/iter vs batch size (LWM-7B, 31k ctx, no batch control)",
+        &["batch", "tok/s", "blocks_loaded/iter"],
+        &rows,
+    )
+}
+
+// ------------------------------------------------------------------ Fig. 4
+
+pub fn fig4() -> String {
+    let hw = HardwareSpec::a100_40gb();
+    let rows: Vec<Vec<String>> = [4usize, 8, 16, 32, 64]
+        .iter()
+        .map(|&kb| {
+            let b = kb * 1024;
+            vec![
+                format!("{kb}KB"),
+                f(hw.memcpy_bandwidth(b) / 1e9),
+                f(hw.flash_h2d_bandwidth(b) / 1e9),
+                f(hw.flash_d2h_bandwidth(b) / 1e9),
+            ]
+        })
+        .collect();
+    render_table(
+        "Fig 4: PCIe effective bandwidth (GB/s) vs block size",
+        &["block", "memcpy", "FlashH2D", "FlashD2H"],
+        &rows,
+    )
+}
+
+// ------------------------------------------------------------- Figs. 10-12
+
+/// Default rate sweeps per model: GQA shrinks Llama3's KV 4x, so every
+/// system saturates later — the paper likewise sweeps Llama3 to higher
+/// rates than LWM.
+pub fn default_rates(model_name: &str) -> Vec<f64> {
+    if model_name == "llama3-8b" {
+        vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7]
+    } else {
+        vec![0.05, 0.1, 0.15, 0.2, 0.25, 0.3]
+    }
+}
+
+pub fn fig10_11_12(model_name: &str, rates: &[f64]) -> String {
+    let model = model_for(model_name);
+    let systems = comparison_set(2048, 2048, model.n_layers);
+    let mut rows = Vec::new();
+    for &rate in rates {
+        for preset in &systems {
+            // paper caps vLLM-SO / vLLM at rates where they still terminate
+            let m = run_sim(preset.cfg.clone(), &model, rate, 11);
+            rows.push(vec![
+                format!("{rate}"),
+                preset.name.to_string(),
+                f(m.ttft.mean()),
+                f(m.throughput()),
+                f(m.tbt.mean()),
+                f(m.queue_delay.mean()),
+            ]);
+        }
+    }
+    render_table(
+        &format!("Figs 10-12: TTFT / throughput / TBT vs request rate ({model_name})"),
+        &["rate", "system", "mean_TTFT_s", "tok/s", "mean_TBT_s", "queue_s"],
+        &rows,
+    )
+}
+
+// ----------------------------------------------------------------- Fig. 13
+
+/// Goodput: max request rate satisfying the paper's SLO — P99 TBT <= 25x
+/// "the execution time of a decoding iteration" (interpreted per-system:
+/// the run's own mean decode-iteration time, so slower-but-batchier
+/// systems are judged against their own iteration, as in Sarathi-Serve's
+/// SLO definition the paper cites) AND mean queueing delay <= 2 s.
+pub fn goodput(cfg: &ServingConfig, model: &ModelSpec) -> f64 {
+    let rates = [
+        0.025, 0.05, 0.075, 0.1, 0.125, 0.15, 0.2, 0.25, 0.3, 0.35, 0.4, 0.5, 0.6, 0.8,
+    ];
+    let mut best = 0.0;
+    for &rate in &rates {
+        let m = run_sim(cfg.clone(), model, rate, 13);
+        let ref_iter = m.iter_time.mean().max(1e-6);
+        let finished_enough = m.requests_finished * 10 >= m.ttft.len() * 8;
+        if finished_enough && m.meets_slo(ref_iter, cfg.slo_tbt_factor, cfg.slo_queue_delay_s) {
+            best = rate;
+        } else if rate > best + 0.16 {
+            break; // well past the knee
+        }
+    }
+    best
+}
+
+pub fn fig13(model_name: &str) -> String {
+    let model = model_for(model_name);
+    let ladder = ablation_ladder(2048, 2048, model.n_layers);
+    let mut rows = Vec::new();
+    let mut prev = 0.0;
+    for preset in &ladder {
+        let g = goodput(&preset.cfg, &model);
+        let gain = if prev > 0.0 { g / prev } else { 1.0 };
+        rows.push(vec![preset.name.to_string(), f(g), format!("{gain:.2}x")]);
+        prev = g.max(1e-9);
+    }
+    render_table(
+        &format!("Fig 13: goodput ablation ladder ({model_name}; SLO p99 TBT<=25x iter, queue<=2s)"),
+        &["system", "goodput_rps", "step_gain"],
+        &rows,
+    )
+}
+
+// ----------------------------------------------------------------- Fig. 14
+
+pub fn fig14a() -> String {
+    let spec = ModelSpec::lwm_7b();
+    let hw = HardwareSpec::a100_40gb();
+    let cost = CostModel::new(spec.clone(), hw);
+    let mut rows = Vec::new();
+    for &batch in &[2usize, 4, 8, 16] {
+        // steady-state miss volume per iteration at this batch size
+        // (measured from the Fig. 1 harness with flash transfers)
+        let (_, loads) = fig1_point(batch, 31_000);
+        let n = loads.round() as usize;
+        let compute = cost.decode_iter_time(batch, &vec![2048; batch]);
+        let memcpy = cost.load_time(TransferKind::Memcpy, n);
+        let flash = cost.load_time(TransferKind::Flash, n);
+        rows.push(vec![
+            batch.to_string(),
+            f((compute + memcpy) * 1e3),
+            f(memcpy * 1e3),
+            f((compute + flash) * 1e3),
+            f(flash * 1e3),
+            format!("{:.1}%", 100.0 * memcpy / (compute + memcpy)),
+            format!("{:.2}x", memcpy / flash.max(1e-12)),
+        ]);
+    }
+    render_table(
+        "Fig 14a: decode batch latency & KV loading latency (ms), memcpy vs FlashH2D",
+        &["batch", "memcpy_batch", "memcpy_load", "flash_batch", "flash_load", "load_share", "speedup"],
+        &rows,
+    )
+}
+
+pub fn fig14b() -> String {
+    let spec = ModelSpec::lwm_7b();
+    let hw = HardwareSpec::a100_40gb();
+    let cost = CostModel::new(spec, hw);
+    let rows = vec![
+        vec!["memcpy-based".into(), f(cost.save_overhead_factor(TransferKind::Memcpy, true))],
+        vec![
+            "GPU-direct".into(),
+            f(cost.save_overhead_factor(TransferKind::GpuDirectSave, true)),
+        ],
+        vec!["FlashD2H".into(), f(cost.save_overhead_factor(TransferKind::Flash, true))],
+    ];
+    render_table(
+        "Fig 14b: prefill latency normalized to standalone prefill compute",
+        &["saving method", "normalized latency"],
+        &rows,
+    )
+}
+
+// ----------------------------------------------------------------- Fig. 15
+
+pub fn fig15(rates: &[f64]) -> String {
+    let model = ModelSpec::lwm_7b();
+    let mut with = ServingConfig::sparseserve(2048, 2048, 32);
+    with.r_max = 64;
+    let mut without = with.clone();
+    without.ws_batch_control = false;
+    let mut rows = Vec::new();
+    for &rate in rates {
+        let m_w = run_sim(with.clone(), &model, rate, 11);
+        let m_wo = run_sim(without.clone(), &model, rate, 11);
+        rows.push(vec![
+            format!("{rate}"),
+            f(m_w.throughput()),
+            f(m_wo.throughput()),
+            f(m_w.blocks_loaded_per_iter.mean()),
+            f(m_wo.blocks_loaded_per_iter.mean()),
+        ]);
+    }
+    render_table(
+        "Fig 15: throughput & KV loads/iter, with vs without working-set batch control (LWM-7B)",
+        &["rate", "tok/s_WC", "tok/s_noWC", "loads_WC", "loads_noWC"],
+        &rows,
+    )
+}
+
+// ----------------------------------------------------------------- Fig. 16
+
+pub fn fig16a(rates: &[f64]) -> String {
+    let model = ModelSpec::lwm_7b();
+    let ls = ServingConfig::sparseserve(2048, 2048, 32);
+    let mut chunked = ls.clone();
+    chunked.prefill_mode = PrefillMode::Chunked;
+    let mut rows = Vec::new();
+    for &rate in rates {
+        let m_ls = run_sim(ls.clone(), &model, rate, 11);
+        let m_ch = run_sim(chunked.clone(), &model, rate, 11);
+        rows.push(vec![
+            format!("{rate}"),
+            f(m_ch.ttft.mean()),
+            f(m_ls.ttft.mean()),
+            format!("{:.2}x", m_ch.ttft.mean() / m_ls.ttft.mean().max(1e-9)),
+        ]);
+    }
+    render_table(
+        "Fig 16a: mean TTFT, chunked vs layer-segmented prefill (LWM-7B)",
+        &["rate", "chunked_s", "layer_seg_s", "reduction"],
+        &rows,
+    )
+}
+
+pub fn fig16b() -> String {
+    let model = ModelSpec::lwm_7b();
+    let hw = HardwareSpec::a100_40gb();
+    let cost = CostModel::new(model, hw);
+    let prompt = 16_384;
+    let plain = cost.prefill_time_plain(prompt);
+    let rows: Vec<Vec<String>> = [512usize, 1024, 2048, 4096]
+        .iter()
+        .map(|&c| {
+            vec![
+                c.to_string(),
+                format!("{:.2}x", cost.prefill_time_chunked(prompt, c) / plain),
+                "1.00x".into(), // layer-segmented == plain per-token compute
+            ]
+        })
+        .collect();
+    render_table(
+        "Fig 16b: prefill attention overhead vs plain prefill (16k prompt)",
+        &["chunk", "chunked", "layer-segmented"],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_table_renders() {
+        let t = fig4();
+        assert!(t.contains("FlashH2D"));
+        assert!(t.lines().count() >= 7);
+    }
+
+    #[test]
+    fn fig16b_monotone() {
+        let t = fig16b();
+        assert!(t.contains("512"));
+    }
+
+    #[test]
+    fn fig14b_values() {
+        let t = fig14b();
+        assert!(t.contains("1.76"));
+        assert!(t.contains("1.28"));
+    }
+}

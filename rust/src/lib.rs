@@ -1,0 +1,38 @@
+//! # SparseServe
+//!
+//! Reproduction of *"SparseServe: Unlocking Parallelism for Dynamic Sparse
+//! Attention in Long-Context LLM Serving"* (CS.DC 2025) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)**: the serving system — FCFS continuous batching
+//!   with working-set-aware batch size control (Alg. 1), hierarchical
+//!   HBM/DRAM KV-cache management with fragmentation-aware transfer
+//!   engines (FlashH2D / FlashD2H), and layer-segmented prefill.
+//! - **L2 (python/compile/model.py)**: llama-style model split into
+//!   per-layer/per-phase entry points, AOT-lowered to HLO text.
+//! - **L1 (python/compile/kernels/)**: pallas kernels (block metadata,
+//!   block scoring, sparse decode attention, tiled causal prefill).
+//!
+//! Python never runs on the request path: artifacts are built once by
+//! `make artifacts` and executed from rust via PJRT (`runtime`).
+//!
+//! See DESIGN.md for the architecture and the per-experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod figures;
+pub mod memory;
+pub mod metrics;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod sparse;
+pub mod util;
+pub mod workload;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,275 @@
+//! LRU residency cache: which DRAM blocks currently have an HBM copy.
+//!
+//! Paper §3.1: "The remaining HBM is used to cache frequently accessed KV
+//! blocks and we employ the least recently used (LRU) cache eviction
+//! policy", justified by the temporal locality of block selection
+//! (consecutive query tokens select similar blocks, Fig. 8).
+//!
+//! Pinned entries (in use by the current iteration's gather) are never
+//! evicted. Generic over the cached value (an HBM `SlotId` for the real
+//! backend; `()` for the simulator, which only tracks residency).
+
+use std::collections::{BTreeSet, HashMap};
+
+use super::BlockKey;
+
+#[derive(Debug)]
+struct Entry<V> {
+    value: V,
+    last_use: u64,
+    pins: u32,
+}
+
+/// §Perf note: recency is indexed by a `BTreeSet<(last_use, key)>` so
+/// get/insert/evict are O(log n) instead of the original O(n)
+/// min-scan per eviction (8.8 µs -> ~0.6 µs per op at 1k residents,
+/// see EXPERIMENTS.md §Perf).
+#[derive(Debug)]
+pub struct LruCache<V> {
+    capacity: usize,
+    map: HashMap<BlockKey, Entry<V>>,
+    /// (last_use, key) ordered oldest-first.
+    order: BTreeSet<(u64, BlockKey)>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl<V> LruCache<V> {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            map: HashMap::with_capacity(capacity.min(1 << 20)),
+            order: BTreeSet::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, key: &BlockKey) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Look up a block, refreshing recency and counting hit/miss.
+    pub fn get(&mut self, key: &BlockKey) -> Option<&V> {
+        self.tick += 1;
+        match self.map.get_mut(key) {
+            Some(e) => {
+                self.order.remove(&(e.last_use, *key));
+                e.last_use = self.tick;
+                self.order.insert((e.last_use, *key));
+                self.hits += 1;
+                Some(&e.value)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Peek without touching recency or stats.
+    pub fn peek(&self, key: &BlockKey) -> Option<&V> {
+        self.map.get(key).map(|e| &e.value)
+    }
+
+    /// Insert a block. If at capacity, evicts the least recently used
+    /// unpinned entry first and returns it as `(key, value)`.
+    /// Panics if full of pinned entries (the batch-control invariant
+    /// guarantees the working set fits; violating it is a scheduler bug).
+    pub fn insert(&mut self, key: BlockKey, value: V) -> Option<(BlockKey, V)> {
+        debug_assert!(!self.map.contains_key(&key), "re-inserting resident {key:?}");
+        self.tick += 1;
+        let mut evicted = None;
+        if self.map.len() >= self.capacity {
+            let (victim, v) = self
+                .evict_lru()
+                .expect("LRU cache full of pinned entries (working set exceeds HBM)");
+            evicted = Some((victim, v));
+        }
+        self.map.insert(key, Entry { value, last_use: self.tick, pins: 0 });
+        self.order.insert((self.tick, key));
+        evicted
+    }
+
+    /// Remove a specific block (e.g. on request completion).
+    pub fn remove(&mut self, key: &BlockKey) -> Option<V> {
+        let e = self.map.remove(key)?;
+        self.order.remove(&(e.last_use, *key));
+        Some(e.value)
+    }
+
+    /// Remove every block of a request; returns the values (HBM slots to
+    /// free).
+    pub fn remove_request(&mut self, req: u32) -> Vec<V> {
+        let keys: Vec<BlockKey> =
+            self.map.keys().filter(|k| k.req == req).copied().collect();
+        keys.iter().map(|k| self.remove(k).unwrap()).collect()
+    }
+
+    /// Evict the least recently used *unpinned* entry, returning it.
+    /// O(log n) plus a skip over currently pinned entries (few: only the
+    /// in-flight gather pins).
+    pub fn evict_lru(&mut self) -> Option<(BlockKey, V)> {
+        let victim = self
+            .order
+            .iter()
+            .map(|(_, k)| *k)
+            .find(|k| self.map.get(k).map(|e| e.pins == 0).unwrap_or(false))?;
+        let e = self.map.remove(&victim).unwrap();
+        self.order.remove(&(e.last_use, victim));
+        self.evictions += 1;
+        Some((victim, e.value))
+    }
+
+    pub fn pin(&mut self, key: &BlockKey) {
+        if let Some(e) = self.map.get_mut(key) {
+            e.pins += 1;
+        }
+    }
+
+    pub fn unpin(&mut self, key: &BlockKey) {
+        if let Some(e) = self.map.get_mut(key) {
+            debug_assert!(e.pins > 0, "unpin of unpinned {key:?}");
+            e.pins = e.pins.saturating_sub(1);
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn key(b: u32) -> BlockKey {
+        BlockKey::new(0, 0, 0, b)
+    }
+
+    #[test]
+    fn hit_miss_counting() {
+        let mut c = LruCache::new(2);
+        assert!(c.get(&key(1)).is_none());
+        c.insert(key(1), 10);
+        assert_eq!(c.get(&key(1)), Some(&10));
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn evicts_lru_order() {
+        let mut c = LruCache::new(2);
+        c.insert(key(1), 1);
+        c.insert(key(2), 2);
+        c.get(&key(1)); // 2 is now LRU
+        let ev = c.insert(key(3), 3).unwrap();
+        assert_eq!(ev, (key(2), 2));
+        assert!(c.contains(&key(1)) && c.contains(&key(3)));
+    }
+
+    #[test]
+    fn pinned_entries_survive_eviction() {
+        let mut c = LruCache::new(2);
+        c.insert(key(1), 1);
+        c.insert(key(2), 2);
+        c.pin(&key(1)); // 1 is LRU but pinned
+        let ev = c.insert(key(3), 3).unwrap();
+        assert_eq!(ev.0, key(2));
+        c.unpin(&key(1));
+        let ev = c.insert(key(4), 4).unwrap();
+        assert_eq!(ev.0, key(1)); // unpinned now evictable
+    }
+
+    #[test]
+    #[should_panic(expected = "pinned")]
+    fn all_pinned_panics() {
+        let mut c = LruCache::new(1);
+        c.insert(key(1), 1);
+        c.pin(&key(1));
+        c.insert(key(2), 2);
+    }
+
+    #[test]
+    fn remove_request_clears_only_that_request() {
+        let mut c = LruCache::new(8);
+        c.insert(BlockKey::new(1, 0, 0, 0), 10);
+        c.insert(BlockKey::new(1, 1, 0, 0), 11);
+        c.insert(BlockKey::new(2, 0, 0, 0), 20);
+        let freed = c.remove_request(1);
+        assert_eq!(freed.len(), 2);
+        assert_eq!(c.len(), 1);
+        assert!(c.contains(&BlockKey::new(2, 0, 0, 0)));
+    }
+
+    #[test]
+    fn prop_never_exceeds_capacity() {
+        prop::check("lru capacity bound", 50, |rng: &mut Rng| {
+            let cap = 1 + rng.below(8);
+            let mut c = LruCache::new(cap);
+            for i in 0..100u32 {
+                let k = key(rng.below(20) as u32);
+                if c.get(&k).is_none() && !c.contains(&k) {
+                    c.insert(k, i);
+                }
+                prop::assert_prop(c.len() <= cap, "len > capacity")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_eviction_is_least_recent_unpinned() {
+        prop::check("lru order", 30, |rng: &mut Rng| {
+            let mut c = LruCache::new(4);
+            let mut uses: std::collections::HashMap<u32, u64> = Default::default();
+            let mut t = 0u64;
+            for _ in 0..60 {
+                let b = rng.below(10) as u32;
+                t += 1;
+                if c.get(&key(b)).is_some() {
+                    uses.insert(b, t);
+                } else {
+                    if let Some((ev, _)) = c.insert(key(b), 0) {
+                        // evicted block must be the min-last-use among residents+victim
+                        let ev_use = uses.get(&ev.block).copied().unwrap_or(0);
+                        // (skip the just-inserted block: its `uses` entry, if
+                        // any, is stale from a previous residency)
+                        for k in uses.keys().filter(|k| **k != b) {
+                            if c.contains(&key(*k)) {
+                                prop::assert_prop(
+                                    uses[k] >= ev_use,
+                                    "evicted a more recently used block",
+                                )?;
+                            }
+                        }
+                    }
+                    uses.insert(b, t);
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,786 @@
+//! The KV cache manager (paper §3.1, right box of Fig. 3).
+//!
+//! Owns the hierarchical HBM/DRAM block storage for every live request:
+//!
+//! - **save path**: newly generated KV (the contiguous projection output)
+//!   is scattered into per-head DRAM blocks through the configured
+//!   transfer engine (FlashD2H by default); blocks that fill up are
+//!   *sealed* and get cuboid metadata.
+//! - **load path**: before sparse attention, the blocks the DSA selected
+//!   are gathered into the attention staging tensor. With offloading,
+//!   misses are fetched DRAM -> HBM through the engine (FlashH2D) and
+//!   tracked in the LRU residency cache; hits cost nothing on PCIe.
+//! - the *open* (partially filled) block is always gathered directly —
+//!   it was just written by the model and is still device-resident.
+//!
+//! The gather layout mirrors `python/compile/pipeline.py::gather_blocks`
+//! exactly (slot order, open-block-last, additive masks) so greedy decode
+//! is bit-identical to the python goldens.
+
+use std::collections::HashMap;
+
+use crate::config::ModelSpec;
+
+use super::cache::LruCache;
+use super::metadata::Cuboid;
+use super::pool::{BlockPool, SlotId};
+use super::transfer::{ScatterEntry, TransferEngine, TransferStats};
+use super::BlockKey;
+
+pub type ReqId = u32;
+
+pub const NEG_INF: f32 = -1e30;
+
+/// Per-request block state. During a decode step layers are appended in
+/// order, so per-layer token counts may transiently differ by one; every
+/// query below is therefore layer-indexed.
+struct RequestKv {
+    /// Completed tokens (all layers stored).
+    len: usize,
+    /// Tokens stored per layer.
+    layer_len: Vec<usize>,
+    /// `[layer][head][block] -> DRAM slot`.
+    blocks: Vec<Vec<Vec<SlotId>>>,
+    /// Cuboid metadata for sealed blocks: `[layer][head][block]`.
+    meta: Vec<Vec<Vec<Cuboid>>>,
+}
+
+/// Per-iteration transfer accounting (Fig. 1 right axis, Fig. 15).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IterStats {
+    /// Blocks loaded from DRAM (cache misses) this iteration.
+    pub blocks_loaded: usize,
+    pub load: TransferStats,
+    pub save: TransferStats,
+}
+
+pub struct KvManager {
+    spec: ModelSpec,
+    /// Offloading on: DRAM is home, HBM is an LRU cache.
+    /// Off: blocks count against HBM capacity directly (vLLM mode).
+    offload: bool,
+    dram: BlockPool,
+    hbm: BlockPool,
+    cache: LruCache<SlotId>,
+    engine: Box<dyn TransferEngine>,
+    requests: HashMap<ReqId, RequestKv>,
+    iter: IterStats,
+    pinned: Vec<BlockKey>,
+}
+
+impl KvManager {
+    pub fn new(
+        spec: ModelSpec,
+        hbm_kv_bytes: usize,
+        dram_bytes: usize,
+        offload: bool,
+        engine: Box<dyn TransferEngine>,
+    ) -> Self {
+        let bs = spec.block_size;
+        let dh = spec.head_dim;
+        let hbm = BlockPool::with_capacity_bytes(hbm_kv_bytes, bs, dh);
+        let dram = BlockPool::with_capacity_bytes(dram_bytes, bs, dh);
+        let cache = LruCache::new(hbm.n_slots().max(1));
+        Self {
+            spec,
+            offload,
+            dram,
+            hbm,
+            cache,
+            engine,
+            requests: HashMap::new(),
+            iter: IterStats::default(),
+            pinned: Vec::new(),
+        }
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn offload(&self) -> bool {
+        self.offload
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    // ------------------------------------------------------------ lifecycle
+
+    pub fn register(&mut self, req: ReqId) {
+        let l = self.spec.n_layers;
+        let h = self.spec.n_kv_heads;
+        self.requests.insert(
+            req,
+            RequestKv {
+                len: 0,
+                layer_len: vec![0; l],
+                blocks: vec![vec![Vec::new(); h]; l],
+                meta: vec![vec![Vec::new(); h]; l],
+            },
+        );
+    }
+
+    pub fn release(&mut self, req: ReqId) {
+        if let Some(r) = self.requests.remove(&req) {
+            for layer in r.blocks {
+                for head in layer {
+                    for slot in head {
+                        self.dram.free(slot);
+                    }
+                }
+            }
+        }
+        for slot in self.cache.remove_request(req) {
+            self.hbm.free(slot);
+        }
+    }
+
+    pub fn is_registered(&self, req: ReqId) -> bool {
+        self.requests.contains_key(&req)
+    }
+
+    /// Completed tokens (all layers stored).
+    pub fn seq_len(&self, req: ReqId) -> usize {
+        self.requests.get(&req).map(|r| r.len).unwrap_or(0)
+    }
+
+    pub fn layer_len(&self, req: ReqId, layer: usize) -> usize {
+        self.requests
+            .get(&req)
+            .map(|r| r.layer_len[layer])
+            .unwrap_or(0)
+    }
+
+    pub fn n_sealed(&self, req: ReqId, layer: usize) -> usize {
+        self.layer_len(req, layer) / self.spec.block_size
+    }
+
+    pub fn open_fill(&self, req: ReqId, layer: usize) -> usize {
+        self.layer_len(req, layer) % self.spec.block_size
+    }
+
+    pub fn n_blocks(&self, req: ReqId) -> usize {
+        self.seq_len(req).div_ceil(self.spec.block_size)
+    }
+
+    /// Bytes a request's KV occupies across all layers/heads.
+    pub fn request_kv_bytes(&self, req: ReqId) -> usize {
+        self.n_blocks(req) * self.spec.n_layers * self.spec.n_kv_heads * self.dram.slot_bytes()
+    }
+
+    /// HBM bytes in use: with offloading, the cache population; without,
+    /// every stored block (vLLM semantics — everything pinned in HBM).
+    pub fn hbm_bytes_used(&self) -> usize {
+        if self.offload {
+            self.cache.len() * self.hbm.slot_bytes()
+        } else {
+            self.dram.n_used() * self.dram.slot_bytes()
+        }
+    }
+
+    pub fn hbm_bytes_capacity(&self) -> usize {
+        self.hbm.n_slots() * self.hbm.slot_bytes()
+    }
+
+    pub fn dram_bytes_used(&self) -> usize {
+        self.dram.n_used() * self.dram.slot_bytes()
+    }
+
+    pub fn block_bytes(&self) -> usize {
+        self.dram.slot_bytes()
+    }
+
+    /// (hits, misses, evictions) of the HBM residency cache.
+    pub fn cache_stats(&self) -> (u64, u64, u64) {
+        (self.cache.hits, self.cache.misses, self.cache.evictions)
+    }
+
+    // ------------------------------------------------------------ save path
+
+    /// Store one layer's prefill KV. `k`/`v` are `[Hkv, T_pad, Dh]`
+    /// row-major with `t_real <= t_pad` valid tokens.
+    pub fn append_prefill_layer(
+        &mut self,
+        req: ReqId,
+        layer: usize,
+        k: &[f32],
+        v: &[f32],
+        t_pad: usize,
+        t_real: usize,
+    ) {
+        let (bs, dh, hkv) = (self.spec.block_size, self.spec.head_dim, self.spec.n_kv_heads);
+        debug_assert_eq!(k.len(), hkv * t_pad * dh);
+        debug_assert_eq!(v.len(), hkv * t_pad * dh);
+        let base_len = self.layer_len(req, layer);
+
+        // contiguous source tensor (K planes then V planes) + scatter plan
+        let mut src = Vec::with_capacity(2 * hkv * t_pad * dh);
+        src.extend_from_slice(k);
+        src.extend_from_slice(v);
+        let v_base = hkv * t_pad * dh;
+        let slot_floats = self.dram.slot_floats();
+
+        let mut entries = Vec::new();
+        {
+            let spec_layers = self.spec.n_layers;
+            debug_assert!(layer < spec_layers);
+            let dram = &mut self.dram;
+            let r = self.requests.get_mut(&req).expect("unregistered request");
+            for h in 0..hkv {
+                let mut tok = 0;
+                while tok < t_real {
+                    let abs = base_len + tok;
+                    let blk = abs / bs;
+                    let off = abs % bs;
+                    let run = (bs - off).min(t_real - tok);
+                    while r.blocks[layer][h].len() <= blk {
+                        let slot = dram.alloc().expect("DRAM exhausted");
+                        r.blocks[layer][h].push(slot);
+                    }
+                    let slot = r.blocks[layer][h][blk];
+                    let src_k = h * t_pad * dh + tok * dh;
+                    entries.push(ScatterEntry {
+                        src_off: src_k,
+                        len: run * dh,
+                        dst_slot: slot,
+                        dst_off: off * dh,
+                    });
+                    entries.push(ScatterEntry {
+                        src_off: v_base + src_k,
+                        len: run * dh,
+                        dst_slot: slot,
+                        dst_off: slot_floats / 2 + off * dh,
+                    });
+                    tok += run;
+                }
+            }
+        }
+        let stats = self.engine.save(&src, &mut self.dram, &entries);
+        self.iter.save.merge(&stats);
+
+        self.advance_layer(req, layer, t_real);
+    }
+
+    /// Store one decode step's KV for one request+layer.
+    /// `k_row`/`v_row`: `[Hkv, Dh]`.
+    pub fn append_decode_token(&mut self, req: ReqId, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        let (bs, dh, hkv) = (self.spec.block_size, self.spec.head_dim, self.spec.n_kv_heads);
+        debug_assert_eq!(k_row.len(), hkv * dh);
+        let pos = self.layer_len(req, layer);
+        let blk = pos / bs;
+        let off = pos % bs;
+
+        let mut src = Vec::with_capacity(2 * hkv * dh);
+        src.extend_from_slice(k_row);
+        src.extend_from_slice(v_row);
+        let slot_floats = self.dram.slot_floats();
+        let mut entries = Vec::with_capacity(2 * hkv);
+        {
+            let dram = &mut self.dram;
+            let r = self.requests.get_mut(&req).expect("unregistered request");
+            for h in 0..hkv {
+                while r.blocks[layer][h].len() <= blk {
+                    let slot = dram.alloc().expect("DRAM exhausted");
+                    r.blocks[layer][h].push(slot);
+                }
+                let slot = r.blocks[layer][h][blk];
+                entries.push(ScatterEntry {
+                    src_off: h * dh,
+                    len: dh,
+                    dst_slot: slot,
+                    dst_off: off * dh,
+                });
+                entries.push(ScatterEntry {
+                    src_off: hkv * dh + h * dh,
+                    len: dh,
+                    dst_slot: slot,
+                    dst_off: slot_floats / 2 + off * dh,
+                });
+            }
+        }
+        let stats = self.engine.save(&src, &mut self.dram, &entries);
+        self.iter.save.merge(&stats);
+
+        self.advance_layer(req, layer, 1);
+    }
+
+    /// Advance a layer's token count, sealing metadata for every newly
+    /// complete block, and fold into the request-level `len`.
+    fn advance_layer(&mut self, req: ReqId, layer: usize, n_new: usize) {
+        let (bs, dh, hkv) = (self.spec.block_size, self.spec.head_dim, self.spec.n_kv_heads);
+        let new_len = self.layer_len(req, layer) + n_new;
+        let sealed = new_len / bs;
+        // build cuboids (reads DRAM K planes; CPU-side, matches the device
+        // block_meta kernel exactly — both are exact min/max)
+        let mut new_meta: Vec<Vec<Cuboid>> = Vec::with_capacity(hkv);
+        {
+            let r = &self.requests[&req];
+            for h in 0..hkv {
+                let mut ms = Vec::new();
+                for b in r.meta[layer][h].len()..sealed {
+                    let slot = r.blocks[layer][h][b];
+                    ms.push(Cuboid::from_k_plane(self.dram.k_plane(slot), dh, bs));
+                }
+                new_meta.push(ms);
+            }
+        }
+        let n_layers = self.spec.n_layers;
+        let r = self.requests.get_mut(&req).unwrap();
+        for (h, ms) in new_meta.into_iter().enumerate() {
+            r.meta[layer][h].extend(ms);
+        }
+        r.layer_len[layer] = new_len;
+        r.len = (0..n_layers).map(|l| r.layer_len[l]).min().unwrap_or(0);
+    }
+
+    // ------------------------------------------------------- metadata path
+
+    /// Fill the decode_qkv metadata tensors for one request+layer:
+    /// `lo`/`hi` `[Hkv, NB, Dh]` and additive `mask` `[Hkv, NB]`
+    /// (NEG_INF for blocks without metadata).
+    pub fn metadata_into(
+        &self,
+        req: ReqId,
+        layer: usize,
+        nb_max: usize,
+        lo: &mut [f32],
+        hi: &mut [f32],
+        mask: &mut [f32],
+    ) {
+        let (dh, hkv) = (self.spec.head_dim, self.spec.n_kv_heads);
+        debug_assert_eq!(lo.len(), hkv * nb_max * dh);
+        debug_assert_eq!(mask.len(), hkv * nb_max);
+        mask.fill(NEG_INF);
+        let r = &self.requests[&req];
+        for h in 0..hkv {
+            for (b, cuboid) in r.meta[layer][h].iter().enumerate() {
+                let base = (h * nb_max + b) * dh;
+                lo[base..base + dh].copy_from_slice(&cuboid.lo);
+                hi[base..base + dh].copy_from_slice(&cuboid.hi);
+                mask[h * nb_max + b] = 0.0;
+            }
+        }
+    }
+
+    /// Export a layer's whole stored KV as contiguous `[Hkv, P, Dh]`
+    /// tensors plus an additive mask (NEG_INF on unused tail slots).
+    /// Used by the chunked-prefill baseline, which re-feeds the
+    /// accumulated past KV to every chunk (the paper's Fig. 16b overhead
+    /// made concrete).
+    pub fn export_past(
+        &self,
+        req: ReqId,
+        layer: usize,
+        p_max: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+        mask_out: &mut [f32],
+    ) {
+        let (bs, dh, hkv) = (self.spec.block_size, self.spec.head_dim, self.spec.n_kv_heads);
+        debug_assert_eq!(k_out.len(), hkv * p_max * dh);
+        debug_assert_eq!(mask_out.len(), p_max);
+        let len = self.layer_len(req, layer).min(p_max);
+        for (i, m) in mask_out.iter_mut().enumerate() {
+            *m = if i < len { 0.0 } else { NEG_INF };
+        }
+        let r = &self.requests[&req];
+        for h in 0..hkv {
+            let mut tok = 0;
+            while tok < len {
+                let blk = tok / bs;
+                let off = tok % bs;
+                let run = (bs - off).min(len - tok);
+                let slot = r.blocks[layer][h][blk];
+                let plane = self.dram.slot(slot);
+                let half = plane.len() / 2;
+                let dst = (h * p_max + tok) * dh;
+                k_out[dst..dst + run * dh]
+                    .copy_from_slice(&plane[off * dh..(off + run) * dh]);
+                v_out[dst..dst + run * dh]
+                    .copy_from_slice(&plane[half + off * dh..half + (off + run) * dh]);
+                tok += run;
+            }
+        }
+    }
+
+    // --------------------------------------------------------- gather path
+
+    /// Gather the selected sealed blocks (plus the open block, always) into
+    /// the attention staging tensors for one request+layer.
+    ///
+    /// `sealed_sel[h]` lists sealed block ids in slot order (score-desc,
+    /// ties by id — computed by the executor from device scores).
+    /// `k_out`/`v_out`: `[Hkv, S, Dh]`, `mask_out`: `[Hkv, S]` with
+    /// `S = budget_blocks * block_size`. Returns sealed blocks gathered.
+    pub fn gather_into(
+        &mut self,
+        req: ReqId,
+        layer: usize,
+        sealed_sel: &[Vec<u32>],
+        budget_blocks: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+        mask_out: &mut [f32],
+    ) -> usize {
+        let (bs, dh, hkv) = (self.spec.block_size, self.spec.head_dim, self.spec.n_kv_heads);
+        let s_len = budget_blocks * bs;
+        debug_assert_eq!(sealed_sel.len(), hkv);
+        debug_assert_eq!(k_out.len(), hkv * s_len * dh);
+        debug_assert_eq!(mask_out.len(), hkv * s_len);
+        mask_out.fill(NEG_INF);
+
+        let open_fill = self.open_fill(req, layer);
+        let open_blk = self.n_sealed(req, layer) as u32;
+
+        // Phase 1: residency — batch all misses into ONE engine burst
+        // (what FlashH2D's fused kernel exploits).
+        if self.offload {
+            let mut to_load: Vec<(SlotId, SlotId)> = Vec::new();
+            let mut miss_keys: Vec<BlockKey> = Vec::new();
+            for (h, sel) in sealed_sel.iter().enumerate() {
+                for &b in sel {
+                    let key = BlockKey::new(req, layer as u16, h as u16, b);
+                    if self.cache.get(&key).is_some() {
+                        self.cache.pin(&key);
+                        self.pinned.push(key);
+                    } else {
+                        let hbm_slot = self.alloc_hbm_slot();
+                        let dram_slot = self.requests[&req].blocks[layer][h][b as usize];
+                        to_load.push((dram_slot, hbm_slot));
+                        miss_keys.push(key);
+                    }
+                }
+            }
+            if !to_load.is_empty() {
+                let stats = self.engine.load(&self.dram, &mut self.hbm, &to_load);
+                self.iter.load.merge(&stats);
+                self.iter.blocks_loaded += to_load.len();
+                for (key, &(_, hbm_slot)) in miss_keys.iter().zip(&to_load) {
+                    if let Some((_, freed)) = self.cache.insert(*key, hbm_slot) {
+                        self.hbm.free(freed);
+                    }
+                    self.cache.pin(key);
+                    self.pinned.push(*key);
+                }
+            }
+        }
+
+        // Phase 2: copy into the staging tensors (HBM-local, not PCIe).
+        let mut gathered = 0;
+        for (h, sel) in sealed_sel.iter().enumerate() {
+            debug_assert!(sel.len() + 1 <= budget_blocks, "selection exceeds budget");
+            for (slot_idx, &b) in sel.iter().enumerate() {
+                let plane: &[f32] = if self.offload {
+                    let key = BlockKey::new(req, layer as u16, h as u16, b);
+                    let hbm_slot = *self.cache.peek(&key).expect("resident after load");
+                    self.hbm.slot(hbm_slot)
+                } else {
+                    let dram_slot = self.requests[&req].blocks[layer][h][b as usize];
+                    self.dram.slot(dram_slot)
+                };
+                let half = plane.len() / 2;
+                let dst = (h * s_len + slot_idx * bs) * dh;
+                k_out[dst..dst + bs * dh].copy_from_slice(&plane[..half]);
+                v_out[dst..dst + bs * dh].copy_from_slice(&plane[half..]);
+                mask_out[h * s_len + slot_idx * bs..h * s_len + (slot_idx + 1) * bs].fill(0.0);
+            }
+            // open block last (always included; in-block padding masked)
+            if open_fill > 0 {
+                let slot_idx = budget_blocks - 1;
+                let dram_slot = self.requests[&req].blocks[layer][h][open_blk as usize];
+                let plane = self.dram.slot(dram_slot);
+                let half = plane.len() / 2;
+                let dst = (h * s_len + slot_idx * bs) * dh;
+                k_out[dst..dst + open_fill * dh].copy_from_slice(&plane[..open_fill * dh]);
+                v_out[dst..dst + open_fill * dh]
+                    .copy_from_slice(&plane[half..half + open_fill * dh]);
+                mask_out[h * s_len + slot_idx * bs..h * s_len + slot_idx * bs + open_fill]
+                    .fill(0.0);
+            }
+            gathered += sel.len();
+        }
+
+        // Copies into staging are done; the blocks no longer need to be
+        // HBM-resident (pins only protect residency across the two phases
+        // of this gather; a *single* gather's selection must fit in HBM —
+        // that is the batch-control invariant of Alg. 1).
+        for key in self.pinned.drain(..) {
+            self.cache.unpin(&key);
+        }
+        gathered
+    }
+
+    fn alloc_hbm_slot(&mut self) -> SlotId {
+        if let Some(slot) = self.hbm.alloc() {
+            return slot;
+        }
+        // HBM full: evict the LRU unpinned resident block, reuse its slot.
+        let (_, slot) = self
+            .cache
+            .evict_lru()
+            .expect("HBM exhausted with everything pinned (working set > HBM)");
+        slot
+    }
+
+    /// Finish an iteration: return (and reset) its transfer stats.
+    pub fn end_iteration(&mut self) -> IterStats {
+        debug_assert!(self.pinned.is_empty(), "gather left pins behind");
+        std::mem::take(&mut self.iter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::serving::TransferKind;
+    use crate::config::HardwareSpec;
+    use crate::memory::transfer::engine_for;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            name: "test".into(),
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 2,
+            head_dim: 4,
+            ffn_dim: 16,
+            block_size: 4,
+            max_ctx: 64,
+            rope_theta: 10000.0,
+            kv_dtype_bytes: 4,
+        }
+    }
+
+    fn mk_manager(offload: bool, hbm_blocks: usize) -> KvManager {
+        let spec = tiny_spec();
+        let slot_bytes = 2 * spec.block_size * spec.head_dim * 4;
+        KvManager::new(
+            spec,
+            hbm_blocks * slot_bytes,
+            1024 * slot_bytes,
+            offload,
+            engine_for(TransferKind::Flash, HardwareSpec::a100_40gb()),
+        )
+    }
+
+    /// k/v rows with recognizable values: k[h][t][d] = 100h + t + d/10
+    fn prefill_kv(hkv: usize, t: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut k = vec![0.0; hkv * t * dh];
+        let mut v = vec![0.0; hkv * t * dh];
+        for h in 0..hkv {
+            for tok in 0..t {
+                for d in 0..dh {
+                    k[(h * t + tok) * dh + d] = 100.0 * h as f32 + tok as f32 + d as f32 / 10.0;
+                    v[(h * t + tok) * dh + d] = -(100.0 * h as f32 + tok as f32) - d as f32 / 10.0;
+                }
+            }
+        }
+        (k, v)
+    }
+
+    #[test]
+    fn prefill_then_gather_round_trips() {
+        let mut m = mk_manager(true, 64);
+        m.register(1);
+        let (k, v) = prefill_kv(2, 12, 4); // 3 blocks of 4
+        for layer in 0..2 {
+            m.append_prefill_layer(1, layer, &k, &v, 12, 12);
+        }
+        assert_eq!(m.seq_len(1), 12);
+        assert_eq!(m.n_sealed(1, 0), 3);
+        assert_eq!(m.open_fill(1, 0), 0);
+
+        // gather blocks [2, 0] for both heads with budget 4
+        let budget = 4;
+        let s = budget * 4;
+        let mut ko = vec![0.0; 2 * s * 4];
+        let mut vo = vec![0.0; 2 * s * 4];
+        let mut mo = vec![0.0; 2 * s];
+        let sel = vec![vec![2u32, 0u32], vec![2u32, 0u32]];
+        let gathered = m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo);
+        assert_eq!(gathered, 4);
+        // head 0, slot 0 = block 2 -> tokens 8..12
+        for tok in 0..4 {
+            for d in 0..4 {
+                assert_eq!(ko[(tok) * 4 + d], (8 + tok) as f32 + d as f32 / 10.0);
+            }
+        }
+        // head 0, slot 1 = block 0 -> tokens 0..4
+        assert_eq!(ko[(4) * 4], 0.0);
+        assert_eq!(ko[(5) * 4], 1.0);
+        // masks: slots 0,1 valid; 2,3 masked (no open block)
+        assert!(mo[..8].iter().all(|&x| x == 0.0));
+        assert!(mo[8..16].iter().all(|&x| x == NEG_INF));
+        m.end_iteration();
+    }
+
+    #[test]
+    fn decode_appends_seal_blocks_and_metadata() {
+        let mut m = mk_manager(true, 64);
+        m.register(7);
+        let dh = 4;
+        for t in 0..5 {
+            // one decode step = both layers
+            for layer in 0..2 {
+                let k: Vec<f32> = (0..2 * dh).map(|i| (t * 10 + i) as f32).collect();
+                let v = vec![t as f32; 2 * dh];
+                m.append_decode_token(7, layer, &k, &v);
+            }
+            assert_eq!(m.seq_len(7), t + 1);
+        }
+        assert_eq!(m.n_sealed(7, 0), 1);
+        assert_eq!(m.open_fill(7, 0), 1);
+        // metadata exists for the sealed block only
+        let nb = 8;
+        let mut lo = vec![0.0; 2 * nb * dh];
+        let mut hi = vec![0.0; 2 * nb * dh];
+        let mut mask = vec![0.0; 2 * nb];
+        m.metadata_into(7, 0, nb, &mut lo, &mut hi, &mut mask);
+        assert_eq!(mask[0], 0.0);
+        assert_eq!(mask[1], NEG_INF);
+        // head 0 sealed block tokens t=0..4, k value at d=0 is t*10
+        assert_eq!(lo[0], 0.0);
+        assert_eq!(hi[0], 30.0);
+    }
+
+    #[test]
+    fn open_block_always_gathered_with_mask() {
+        let mut m = mk_manager(true, 64);
+        m.register(3);
+        for layer in 0..2 {
+            let k = vec![1.5; 2 * 4];
+            let v = vec![2.5; 2 * 4];
+            m.append_decode_token(3, layer, &k, &v);
+        }
+        let budget = 2;
+        let s = budget * 4;
+        let mut ko = vec![0.0; 2 * s * 4];
+        let mut vo = vec![0.0; 2 * s * 4];
+        let mut mo = vec![0.0; 2 * s];
+        let sel = vec![vec![], vec![]];
+        m.gather_into(3, 0, &sel, budget, &mut ko, &mut vo, &mut mo);
+        // open block in last slot: first token valid, rest masked
+        assert_eq!(mo[4], 0.0); // head 0, slot 1, token 0
+        assert_eq!(mo[5], NEG_INF);
+        assert_eq!(ko[4 * 4], 1.5);
+        m.end_iteration();
+    }
+
+    #[test]
+    fn cache_hits_avoid_reloads() {
+        let mut m = mk_manager(true, 64);
+        m.register(1);
+        let (k, v) = prefill_kv(2, 8, 4);
+        for layer in 0..2 {
+            m.append_prefill_layer(1, layer, &k, &v, 8, 8);
+        }
+        let budget = 3;
+        let s = budget * 4;
+        let sel = vec![vec![0u32, 1u32], vec![0u32, 1u32]];
+        let mut ko = vec![0.0; 2 * s * 4];
+        let mut vo = vec![0.0; 2 * s * 4];
+        let mut mo = vec![0.0; 2 * s];
+        m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo);
+        let s1 = m.end_iteration();
+        assert_eq!(s1.blocks_loaded, 4); // cold: all misses
+        m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo);
+        let s2 = m.end_iteration();
+        assert_eq!(s2.blocks_loaded, 0); // warm: all hits
+        assert_eq!(s2.load.modeled_s, 0.0);
+    }
+
+    #[test]
+    fn tight_hbm_causes_thrashing() {
+        // HBM cache of 2 blocks; the per-iteration selection alternates
+        // between blocks {0} and {1} on both heads, so a 2-slot cache
+        // thrashes: every iteration evicts and reloads.
+        let mut m = mk_manager(true, 2);
+        m.register(1);
+        let (k, v) = prefill_kv(2, 8, 4);
+        for layer in 0..2 {
+            m.append_prefill_layer(1, layer, &k, &v, 8, 8);
+        }
+        let budget = 3;
+        let s = budget * 4;
+        let mut ko = vec![0.0; 2 * s * 4];
+        let mut vo = vec![0.0; 2 * s * 4];
+        let mut mo = vec![0.0; 2 * s];
+        for it in 0..4 {
+            let b = (it % 2) as u32;
+            let sel = vec![vec![b], vec![b]];
+            m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo);
+            let st = m.end_iteration();
+            assert_eq!(st.blocks_loaded, 2, "thrash must keep loading (iter {it})");
+        }
+        let (_, _, evictions) = m.cache_stats();
+        assert!(evictions >= 4, "evictions={evictions}");
+    }
+
+    #[test]
+    fn release_frees_everything() {
+        let mut m = mk_manager(true, 8);
+        m.register(1);
+        let (k, v) = prefill_kv(2, 8, 4);
+        for layer in 0..2 {
+            m.append_prefill_layer(1, layer, &k, &v, 8, 8);
+        }
+        let used = m.dram_bytes_used();
+        assert!(used > 0);
+        // touch cache
+        let budget = 3;
+        let s = budget * 4;
+        let sel = vec![vec![0u32], vec![0u32]];
+        let mut ko = vec![0.0; 2 * s * 4];
+        let mut vo = vec![0.0; 2 * s * 4];
+        let mut mo = vec![0.0; 2 * s];
+        m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo);
+        m.end_iteration();
+        m.release(1);
+        assert_eq!(m.dram_bytes_used(), 0);
+        assert_eq!(m.hbm_bytes_used(), 0);
+    }
+
+    #[test]
+    fn non_offload_counts_hbm_directly() {
+        let mut m = mk_manager(false, 8);
+        m.register(1);
+        let (k, v) = prefill_kv(2, 8, 4);
+        m.append_prefill_layer(1, 0, &k, &v, 8, 8);
+        // 2 heads x 2 blocks x 1 layer
+        assert_eq!(m.hbm_bytes_used(), 4 * m.block_bytes());
+        // gather costs no PCIe
+        let budget = 3;
+        let s = budget * 4;
+        let sel = vec![vec![0u32, 1u32], vec![0u32, 1u32]];
+        let mut ko = vec![0.0; 2 * s * 4];
+        let mut vo = vec![0.0; 2 * s * 4];
+        let mut mo = vec![0.0; 2 * s];
+        m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo);
+        let st = m.end_iteration();
+        assert_eq!(st.blocks_loaded, 0);
+        assert_eq!(st.load.modeled_s, 0.0);
+    }
+
+    #[test]
+    fn chunked_prefill_appends_across_segments() {
+        let mut m = mk_manager(true, 64);
+        m.register(1);
+        let (k1, v1) = prefill_kv(2, 6, 4); // 1.5 blocks
+        let (k2, v2) = prefill_kv(2, 6, 4);
+        for layer in 0..2 {
+            m.append_prefill_layer(1, layer, &k1, &v1, 6, 6);
+        }
+        assert_eq!(m.seq_len(1), 6);
+        assert_eq!(m.open_fill(1, 0), 2);
+        for layer in 0..2 {
+            m.append_prefill_layer(1, layer, &k2, &v2, 6, 6);
+        }
+        assert_eq!(m.seq_len(1), 12);
+        assert_eq!(m.n_sealed(1, 0), 3);
+        assert_eq!(m.open_fill(1, 0), 0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Per-block cuboid metadata (ArkVale's bounding box, the paper's default).
+//!
+//! Metadata is built on-device for bulk prefill (the `block_meta_*`
+//! artifact, an L1 pallas kernel) and incrementally on the host as decode
+//! seals blocks — both produce the exact elementwise min/max, asserted by
+//! the parity test in `rust/tests/pjrt_parity.rs`.
+
+/// Bounding cuboid of a block's (roped) keys: per-dim min and max.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cuboid {
+    pub lo: Vec<f32>,
+    pub hi: Vec<f32>,
+}
+
+impl Cuboid {
+    /// Identity element for running updates.
+    pub fn empty(dim: usize) -> Self {
+        Self { lo: vec![f32::INFINITY; dim], hi: vec![f32::NEG_INFINITY; dim] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.lo.len()
+    }
+
+    /// Fold one key row into the running bounds (decode-time open block).
+    pub fn update(&mut self, key_row: &[f32]) {
+        debug_assert_eq!(key_row.len(), self.lo.len());
+        for (i, &x) in key_row.iter().enumerate() {
+            self.lo[i] = self.lo[i].min(x);
+            self.hi[i] = self.hi[i].max(x);
+        }
+    }
+
+    /// Build from a sealed block's K plane `[n_tokens, dim]`.
+    pub fn from_k_plane(k_plane: &[f32], dim: usize, n_tokens: usize) -> Self {
+        debug_assert!(k_plane.len() >= n_tokens * dim);
+        let mut c = Self::empty(dim);
+        for t in 0..n_tokens {
+            c.update(&k_plane[t * dim..(t + 1) * dim]);
+        }
+        c
+    }
+
+    /// The upper bound of q.k over the cuboid (host-side mirror of the L1
+    /// scoring kernel; used by tests and the simulator's selection model).
+    pub fn score(&self, q: &[f32]) -> f32 {
+        debug_assert_eq!(q.len(), self.lo.len());
+        q.iter()
+            .zip(self.lo.iter().zip(self.hi.iter()))
+            .map(|(&qd, (&lo, &hi))| (qd * lo).max(qd * hi))
+            .sum()
+    }
+
+    /// Does the cuboid contain the key?
+    pub fn contains(&self, key: &[f32]) -> bool {
+        key.iter()
+            .enumerate()
+            .all(|(i, &x)| self.lo[i] <= x && x <= self.hi[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn from_plane_matches_running_updates() {
+        let dim = 4;
+        let rows: Vec<f32> = (0..12).map(|i| (i as f32) * 0.7 - 3.0).collect();
+        let built = Cuboid::from_k_plane(&rows, dim, 3);
+        let mut run = Cuboid::empty(dim);
+        for t in 0..3 {
+            run.update(&rows[t * dim..(t + 1) * dim]);
+        }
+        assert_eq!(built, run);
+    }
+
+    #[test]
+    fn prop_score_upper_bounds_exact_dot() {
+        prop::check("cuboid score bound", 100, |rng: &mut Rng| {
+            let dim = 8;
+            let n = 1 + rng.below(16);
+            let rows: Vec<f32> =
+                (0..n * dim).map(|_| rng.normal() as f32).collect();
+            let c = Cuboid::from_k_plane(&rows, dim, n);
+            let q: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let bound = c.score(&q);
+            for t in 0..n {
+                let dot: f32 = q
+                    .iter()
+                    .zip(&rows[t * dim..(t + 1) * dim])
+                    .map(|(a, b)| a * b)
+                    .sum();
+                prop::assert_prop(bound >= dot - 1e-4, "score below exact dot")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_contains_all_source_keys() {
+        prop::check("cuboid containment", 50, |rng: &mut Rng| {
+            let dim = 4;
+            let n = 1 + rng.below(8);
+            let rows: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+            let c = Cuboid::from_k_plane(&rows, dim, n);
+            for t in 0..n {
+                prop::assert_prop(
+                    c.contains(&rows[t * dim..(t + 1) * dim]),
+                    "key outside cuboid",
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

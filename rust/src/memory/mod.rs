@@ -1,0 +1,40 @@
+//! Hierarchical HBM-DRAM KV cache substrate (paper §3.1-§3.2).
+//!
+//! - [`pool`]: fixed-size block arenas standing in for HBM and DRAM
+//!   (PagedAttention-style allocation; DESIGN.md substitution table)
+//! - [`cache`]: LRU residency cache of DRAM blocks in the HBM pool
+//! - [`transfer`]: the paper's transfer engines — per-block memcpy
+//!   baseline, FlashH2D (GPU-direct fused gather), FlashD2H
+//!   (CPU-assisted save), GPU-direct save — real copies plus the
+//!   calibrated PCIe cost model
+//! - [`metadata`]: per-block cuboid metadata (ArkVale default)
+//! - [`manager`]: the KV cache manager tying it together per request
+
+pub mod cache;
+pub mod manager;
+pub mod metadata;
+pub mod pool;
+pub mod transfer;
+
+pub use cache::LruCache;
+pub use manager::{KvManager, ReqId};
+pub use metadata::Cuboid;
+pub use pool::{BlockPool, SlotId};
+pub use transfer::{engine_for, TransferEngine, TransferStats};
+
+/// Identifies one logical KV block: (request, layer, kv-head, block index).
+/// DSAs select and transfer at this granularity (per-head blocks,
+/// paper §3.2: "(H, N, D) layout ... selected at the head level").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockKey {
+    pub req: u32,
+    pub layer: u16,
+    pub head: u16,
+    pub block: u32,
+}
+
+impl BlockKey {
+    pub fn new(req: u32, layer: u16, head: u16, block: u32) -> Self {
+        Self { req, layer, head, block }
+    }
+}

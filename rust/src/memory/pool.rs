@@ -1,0 +1,179 @@
+//! Fixed-size block arenas: the HBM and DRAM stand-ins.
+//!
+//! Both tiers are "organized into fixed-size blocks to mitigate memory
+//! fragmentation" (paper §3.1, after PagedAttention). A slot holds one
+//! per-head KV block: the K plane `[Bs, Dh]` followed by the V plane
+//! `[Bs, Dh]`, row-major f32.
+
+/// Index of a block slot within one pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SlotId(pub u32);
+
+#[derive(Debug)]
+pub struct BlockPool {
+    data: Vec<f32>,
+    /// Floats per slot (= 2 * block_size * head_dim).
+    slot_floats: usize,
+    free: Vec<SlotId>,
+    n_slots: usize,
+}
+
+impl BlockPool {
+    /// A pool of `n_slots` blocks of `block_size x head_dim` KV each.
+    pub fn new(n_slots: usize, block_size: usize, head_dim: usize) -> Self {
+        let slot_floats = 2 * block_size * head_dim;
+        Self {
+            data: vec![0.0; n_slots * slot_floats],
+            slot_floats,
+            free: (0..n_slots as u32).rev().map(SlotId).collect(),
+            n_slots,
+        }
+    }
+
+    /// Pool sized by a byte budget (HBM/DRAM capacity).
+    pub fn with_capacity_bytes(bytes: usize, block_size: usize, head_dim: usize) -> Self {
+        let slot_bytes = 2 * block_size * head_dim * 4;
+        Self::new(bytes / slot_bytes, block_size, head_dim)
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn n_used(&self) -> usize {
+        self.n_slots - self.free.len()
+    }
+
+    pub fn slot_floats(&self) -> usize {
+        self.slot_floats
+    }
+
+    pub fn slot_bytes(&self) -> usize {
+        self.slot_floats * 4
+    }
+
+    pub fn alloc(&mut self) -> Option<SlotId> {
+        self.free.pop()
+    }
+
+    /// Return a slot to the free list. Double frees are a logic error.
+    pub fn free(&mut self, slot: SlotId) {
+        debug_assert!(
+            !self.free.contains(&slot),
+            "double free of slot {slot:?}"
+        );
+        debug_assert!((slot.0 as usize) < self.n_slots);
+        self.free.push(slot);
+    }
+
+    #[inline]
+    fn base(&self, slot: SlotId) -> usize {
+        debug_assert!((slot.0 as usize) < self.n_slots);
+        slot.0 as usize * self.slot_floats
+    }
+
+    /// Whole slot (K plane then V plane).
+    pub fn slot(&self, slot: SlotId) -> &[f32] {
+        let b = self.base(slot);
+        &self.data[b..b + self.slot_floats]
+    }
+
+    pub fn slot_mut(&mut self, slot: SlotId) -> &mut [f32] {
+        let b = self.base(slot);
+        &mut self.data[b..b + self.slot_floats]
+    }
+
+    /// K plane of a slot: `[Bs * Dh]` floats.
+    pub fn k_plane(&self, slot: SlotId) -> &[f32] {
+        let b = self.base(slot);
+        &self.data[b..b + self.slot_floats / 2]
+    }
+
+    /// V plane of a slot.
+    pub fn v_plane(&self, slot: SlotId) -> &[f32] {
+        let b = self.base(slot) + self.slot_floats / 2;
+        &self.data[b..b + self.slot_floats / 2]
+    }
+
+    /// Raw pointer to a slot for the (disjoint-slot) parallel scatter in
+    /// FlashD2H. Safety: callers must guarantee slots are distinct.
+    pub(crate) fn slot_ptr(&self, slot: SlotId) -> *mut f32 {
+        let b = self.base(slot);
+        self.data[b..].as_ptr() as *mut f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut p = BlockPool::new(4, 2, 3);
+        assert_eq!(p.slot_floats(), 12);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.n_used(), 2);
+        p.free(a);
+        assert_eq!(p.n_free(), 3);
+        // exhaust
+        let mut got = vec![b];
+        while let Some(s) = p.alloc() {
+            got.push(s);
+        }
+        assert_eq!(got.len(), 4);
+        assert!(p.alloc().is_none());
+    }
+
+    #[test]
+    fn capacity_bytes_rounds_down() {
+        // slot = 2*16*32*4 = 4096 B
+        let p = BlockPool::with_capacity_bytes(10_000, 16, 32);
+        assert_eq!(p.n_slots(), 2);
+    }
+
+    #[test]
+    fn planes_are_disjoint_halves() {
+        let mut p = BlockPool::new(2, 2, 2);
+        let s = p.alloc().unwrap();
+        p.slot_mut(s).copy_from_slice(&[1., 2., 3., 4., 5., 6., 7., 8.]);
+        assert_eq!(p.k_plane(s), &[1., 2., 3., 4.]);
+        assert_eq!(p.v_plane(s), &[5., 6., 7., 8.]);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn double_free_panics_in_debug() {
+        let mut p = BlockPool::new(2, 2, 2);
+        let s = p.alloc().unwrap();
+        p.free(s);
+        p.free(s);
+    }
+
+    #[test]
+    fn prop_allocator_never_hands_out_duplicates() {
+        prop::check("unique live slots", 50, |rng: &mut Rng| {
+            let mut p = BlockPool::new(16, 2, 2);
+            let mut live: Vec<SlotId> = Vec::new();
+            for _ in 0..200 {
+                if !live.is_empty() && rng.f64() < 0.45 {
+                    let i = rng.below(live.len());
+                    let s = live.swap_remove(i);
+                    p.free(s);
+                } else if let Some(s) = p.alloc() {
+                    prop::assert_prop(!live.contains(&s), "duplicate live slot")?;
+                    live.push(s);
+                }
+                prop::assert_eq_prop(p.n_used(), live.len(), "used count")?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,125 @@
+//! Serving metrics: TTFT, TBT, throughput, goodput (paper §4 metrics).
+
+use crate::scheduler::Request;
+use crate::util::stats::Series;
+
+/// Aggregated metrics for one serving run.
+#[derive(Debug, Default)]
+pub struct RunMetrics {
+    pub ttft: Series,
+    pub tbt: Series,
+    pub queue_delay: Series,
+    /// Generated tokens (all requests).
+    pub tokens_generated: usize,
+    pub requests_finished: usize,
+    /// Serving-clock makespan, seconds.
+    pub makespan_s: f64,
+    /// Per-iteration KV blocks loaded from DRAM (Fig. 1 / Fig. 15 series).
+    pub blocks_loaded_per_iter: Series,
+    /// Per-iteration latency.
+    pub iter_time: Series,
+    /// Modeled PCIe load time per iteration.
+    pub load_time: Series,
+    pub iterations: usize,
+}
+
+impl RunMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold a finished (or partially served) request in.
+    pub fn record_request(&mut self, r: &Request) {
+        if let Some(t) = r.ttft() {
+            self.ttft.push(t);
+        }
+        if let Some(d) = r.queue_delay() {
+            self.queue_delay.push(d);
+        }
+        self.tbt.extend(&r.tbt);
+        self.tokens_generated += r.n_generated;
+        if r.is_done() {
+            self.requests_finished += 1;
+        }
+    }
+
+    pub fn record_iteration(&mut self, iter_time_s: f64, blocks_loaded: usize, load_s: f64) {
+        self.iterations += 1;
+        self.iter_time.push(iter_time_s);
+        self.blocks_loaded_per_iter.push(blocks_loaded as f64);
+        self.load_time.push(load_s);
+    }
+
+    /// Token generation throughput (tokens/s over the makespan).
+    pub fn throughput(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / self.makespan_s
+        }
+    }
+
+    /// The paper's SLO check (Fig. 13): P99 TBT <= factor x the reference
+    /// decode-iteration time AND mean queueing delay <= the bound.
+    pub fn meets_slo(&self, decode_iter_ref_s: f64, tbt_factor: f64, queue_bound_s: f64) -> bool {
+        let p99_ok = self.tbt.is_empty() || self.tbt.p99() <= tbt_factor * decode_iter_ref_s;
+        let queue_ok =
+            self.queue_delay.is_empty() || self.queue_delay.mean() <= queue_bound_s;
+        p99_ok && queue_ok
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "reqs={} tokens={} makespan={:.1}s thpt={:.2} tok/s | \
+             TTFT mean={:.3}s p99={:.3}s | TBT mean={:.4}s p99={:.4}s | \
+             queue mean={:.3}s | loads/iter mean={:.1}",
+            self.requests_finished,
+            self.tokens_generated,
+            self.makespan_s,
+            self.throughput(),
+            self.ttft.mean(),
+            self.ttft.p99(),
+            self.tbt.mean(),
+            self.tbt.p99(),
+            self.queue_delay.mean(),
+            self.blocks_loaded_per_iter.mean(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = RunMetrics::new();
+        let mut r = Request::new(1, 100, 3, 0.0);
+        r.admitted_s = Some(0.5);
+        r.push_token(None, 1.0);
+        r.push_token(None, 1.2);
+        r.push_token(None, 1.5);
+        m.record_request(&r);
+        m.makespan_s = 2.0;
+        assert_eq!(m.requests_finished, 1);
+        assert_eq!(m.tokens_generated, 3);
+        assert!((m.throughput() - 1.5).abs() < 1e-9);
+        assert!((m.ttft.mean() - 1.0).abs() < 1e-9);
+        assert_eq!(m.tbt.len(), 2);
+    }
+
+    #[test]
+    fn slo_check() {
+        let mut m = RunMetrics::new();
+        let mut r = Request::new(1, 10, 3, 0.0);
+        r.admitted_s = Some(0.1);
+        r.push_token(None, 0.2);
+        r.push_token(None, 0.3);
+        r.push_token(None, 0.4);
+        m.record_request(&r);
+        // p99 tbt ~= 0.1; ref iter 0.01 -> 25x = 0.25 OK; queue 0.1 <= 2 OK
+        assert!(m.meets_slo(0.01, 25.0, 2.0));
+        // tighter: 5x ref = 0.05 < 0.1 -> violated
+        assert!(!m.meets_slo(0.01, 5.0, 2.0));
+    }
+}

@@ -1,0 +1,200 @@
+//! `manifest.json` parsing: model spec, weight layout, entry points.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ModelSpec;
+use crate::util::json::{parse, Value};
+
+/// One AOT entry point (an `<entry>.hlo.txt` file + its signature).
+#[derive(Debug, Clone)]
+pub struct EntryInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    /// Shape-bucket parameters, e.g. {"b": 4} or {"t": 256}.
+    pub bucket: HashMap<String, usize>,
+    /// Parameter shapes in call order.
+    pub params: Vec<Vec<usize>>,
+}
+
+/// One weight tensor's slice of `weights.bin`.
+#[derive(Debug, Clone)]
+pub struct WeightInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_f32: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelSpec,
+    pub seed: u64,
+    pub weights_bin: String,
+    pub total_f32: usize,
+    pub weights: Vec<WeightInfo>,
+    pub entries: Vec<EntryInfo>,
+    /// prefill_t / chunk_t / decode_b / budget_k buckets.
+    pub buckets: HashMap<String, Vec<usize>>,
+    pub chunk_past: usize,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let model = ModelSpec::from_manifest(&v)?;
+
+        let weights = v
+            .get("weights")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'weights'"))?
+            .iter()
+            .map(|w| {
+                Ok(WeightInfo {
+                    name: w
+                        .get("name")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow!("weight name"))?
+                        .to_string(),
+                    shape: shape_of(w.get("shape"))?,
+                    offset_f32: w
+                        .get("offset_f32")
+                        .and_then(Value::as_usize)
+                        .ok_or_else(|| anyhow!("weight offset"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let entries = v
+            .get("entries")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'entries'"))?
+            .iter()
+            .map(|e| {
+                let bucket = e
+                    .get("bucket")
+                    .and_then(Value::as_obj)
+                    .map(|o| {
+                        o.iter()
+                            .filter_map(|(k, v)| v.as_usize().map(|n| (k.clone(), n)))
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                let params = e
+                    .get("params")
+                    .and_then(Value::as_arr)
+                    .ok_or_else(|| anyhow!("entry params"))?
+                    .iter()
+                    .map(|p| shape_of(p.get("shape")))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(EntryInfo {
+                    name: str_field(e, "name")?,
+                    file: str_field(e, "file")?,
+                    kind: str_field(e, "kind")?,
+                    bucket,
+                    params,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut buckets = HashMap::new();
+        let mut chunk_past = 0;
+        if let Some(b) = v.get("buckets").and_then(Value::as_obj) {
+            for (k, val) in b {
+                if let Some(arr) = val.as_arr() {
+                    buckets.insert(
+                        k.clone(),
+                        arr.iter().filter_map(Value::as_usize).collect(),
+                    );
+                } else if k == "chunk_past" {
+                    chunk_past = val.as_usize().unwrap_or(0);
+                }
+            }
+        }
+
+        Ok(Self {
+            model,
+            seed: v.get("seed").and_then(Value::as_usize).unwrap_or(0) as u64,
+            weights_bin: str_field(&v, "weights_bin")?,
+            total_f32: v
+                .get("total_f32")
+                .and_then(Value::as_usize)
+                .ok_or_else(|| anyhow!("total_f32"))?,
+            weights,
+            entries,
+            buckets,
+            chunk_past,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&EntryInfo> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn bucket(&self, key: &str) -> &[usize] {
+        self.buckets.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Smallest bucket >= n (batch/segment padding target).
+    pub fn fit_bucket(&self, key: &str, n: usize) -> Option<usize> {
+        let mut opts: Vec<usize> = self.bucket(key).to_vec();
+        opts.sort_unstable();
+        opts.into_iter().find(|&b| b >= n)
+    }
+}
+
+fn str_field(v: &Value, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("missing field '{key}'"))
+}
+
+fn shape_of(v: Option<&Value>) -> Result<Vec<usize>> {
+    v.and_then(Value::as_arr)
+        .map(|a| a.iter().filter_map(Value::as_usize).collect())
+        .ok_or_else(|| anyhow!("missing shape"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"name":"tiny-llm","vocab":256,"d_model":128,"n_layers":4,
+                "n_heads":4,"n_kv_heads":4,"head_dim":32,"ffn_dim":512,
+                "block_size":16,"max_ctx":2048,"rope_theta":10000.0},
+      "seed": 1234,
+      "buckets": {"prefill_t":[64,256],"decode_b":[1,2],"budget_k":[4,128],
+                  "chunk_t":[64],"chunk_past":256},
+      "weights_bin": "weights.bin",
+      "total_f32": 100,
+      "weights": [{"name":"embedding","shape":[256,128],"offset_f32":0}],
+      "entries": [{"name":"embed_1","file":"embed_1.hlo.txt","kind":"embed",
+                   "bucket":{"n":1},
+                   "params":[{"shape":[1],"dtype":"int32"},
+                             {"shape":[256,128],"dtype":"float32"}]}]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model.name, "tiny-llm");
+        assert_eq!(m.seed, 1234);
+        assert_eq!(m.weights[0].shape, vec![256, 128]);
+        let e = m.entry("embed_1").unwrap();
+        assert_eq!(e.kind, "embed");
+        assert_eq!(e.bucket["n"], 1);
+        assert_eq!(e.params[1], vec![256, 128]);
+    }
+
+    #[test]
+    fn fit_bucket_picks_smallest_geq() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.fit_bucket("prefill_t", 1), Some(64));
+        assert_eq!(m.fit_bucket("prefill_t", 64), Some(64));
+        assert_eq!(m.fit_bucket("prefill_t", 65), Some(256));
+        assert_eq!(m.fit_bucket("prefill_t", 257), None);
+    }
+}

@@ -1,0 +1,233 @@
+//! L3 <-> L2 bridge: load AOT artifacts and execute them via PJRT.
+//!
+//! The python compile path (`python/compile/aot.py`) emits, per model
+//! config:
+//!
+//! - `manifest.json` — model architecture + weight layout + entry points
+//! - `weights.bin`   — all weights, f32 LE, manifest order
+//! - `<entry>.hlo.txt` — one HLO-text module per entry point x shape bucket
+//! - `golden.json`   — greedy-token traces for parity tests
+//!
+//! This module loads all of it once at startup and exposes typed host
+//! tensors plus an `execute(entry, inputs)` call; the PJRT CPU client is
+//! the "GPU" of the testbed substitute. HLO *text* is the interchange
+//! format (xla_extension 0.5.1 rejects jax>=0.5 serialized protos).
+
+mod manifest;
+mod tensor;
+mod weights;
+
+pub use manifest::{EntryInfo, Manifest};
+pub use tensor::{HostTensor, TensorData};
+pub use weights::WeightStore;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A loaded artifact directory + PJRT client with lazily compiled
+/// executables.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    pub weights: WeightStore,
+    dir: PathBuf,
+    executables: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative PJRT executions (metrics).
+    pub exec_count: std::sync::atomic::AtomicU64,
+    /// Per-entry cumulative (calls, seconds) — §Perf profiling.
+    exec_stats: Mutex<HashMap<String, (u64, f64)>>,
+    /// Device-resident weight buffers (uploaded on first use).
+    weight_buffers: Mutex<HashMap<String, std::sync::Arc<xla::PjRtBuffer>>>,
+}
+
+/// Input to [`Runtime::execute_mixed`].
+pub enum MixedInput<'a> {
+    /// Per-call host tensor (uploaded for this execution).
+    Tensor(&'a HostTensor),
+    /// Named weight (cached device-resident buffer).
+    Weight(&'a str),
+}
+
+enum BufferSlot {
+    Owned(xla::PjRtBuffer),
+    Shared(std::sync::Arc<xla::PjRtBuffer>),
+}
+
+impl Runtime {
+    /// Load manifest + weights from an artifact directory
+    /// (e.g. `artifacts/tiny-llm`). Executables compile on first use.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let manifest = Manifest::parse(&text)?;
+        let weights = WeightStore::load(&dir, &manifest)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            weights,
+            dir,
+            executables: Mutex::new(HashMap::new()),
+            exec_count: std::sync::atomic::AtomicU64::new(0),
+            exec_stats: Mutex::new(HashMap::new()),
+            weight_buffers: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifact location for a config name, relative to the repo
+    /// root (works from `cargo test` / examples / benches).
+    pub fn default_dir(config: &str) -> PathBuf {
+        let root = std::env::var("SPARSESERVE_ARTIFACTS")
+            .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+        Path::new(&root).join(config)
+    }
+
+    /// Compile (or fetch the cached) executable for an entry point.
+    pub fn executable(&self, entry: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.lock().unwrap().get(entry) {
+            return Ok(e.clone());
+        }
+        let info = self
+            .manifest
+            .entry(entry)
+            .ok_or_else(|| anyhow!("unknown entry point '{entry}'"))?;
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {entry}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.executables
+            .lock()
+            .unwrap()
+            .insert(entry.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact (startup warm-up so the request path
+    /// never pays compilation).
+    pub fn warm_up(&self) -> Result<()> {
+        let names: Vec<String> =
+            self.manifest.entries.iter().map(|e| e.name.clone()).collect();
+        for n in names {
+            self.executable(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an entry point. Inputs are host tensors in the artifact's
+    /// parameter order; the output tuple is decomposed into host tensors.
+    pub fn execute(&self, entry: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let t0 = std::time::Instant::now();
+        let exe = self.executable(entry)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        let result = exe
+            .execute::<&xla::Literal>(&refs)
+            .map_err(|e| anyhow!("executing {entry}: {e:?}"))?;
+        self.exec_count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {entry} result: {e:?}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing {entry} tuple: {e:?}"))?;
+        let res: Result<Vec<HostTensor>> =
+            parts.into_iter().map(HostTensor::from_literal).collect();
+        {
+            let mut stats = self.exec_stats.lock().unwrap();
+            let e = stats.entry(entry.to_string()).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += t0.elapsed().as_secs_f64();
+        }
+        res
+    }
+
+    /// Upload a tensor to the device.
+    /// (Uses the typed `buffer_from_host_buffer`: the vendored crate's
+    /// `buffer_from_host_raw_bytes` passes `ElementType` where the C API
+    /// expects `PrimitiveType`, mis-sizing the buffer.)
+    fn to_buffer(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        match &t.data {
+            TensorData::F32(v) => self.client.buffer_from_host_buffer(v, &t.dims, None),
+            TensorData::I32(v) => self.client.buffer_from_host_buffer(v, &t.dims, None),
+        }
+        .map_err(|e| anyhow!("buffer upload: {e:?}"))
+    }
+
+    /// Device-resident buffer for a named weight (uploaded once, §Perf:
+    /// avoids re-staging ~1.3 MB of weights on every decode_attend call).
+    pub fn weight_buffer(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtBuffer>> {
+        if let Some(b) = self.weight_buffers.lock().unwrap().get(name) {
+            return Ok(b.clone());
+        }
+        let buf = std::sync::Arc::new(self.to_buffer(self.weights.get(name))?);
+        self.weight_buffers
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), buf.clone());
+        Ok(buf)
+    }
+
+    /// Execute with a mix of per-call host tensors and cached
+    /// device-resident weights (named).
+    pub fn execute_mixed(&self, entry: &str, inputs: &[MixedInput<'_>]) -> Result<Vec<HostTensor>> {
+        let t0 = std::time::Instant::now();
+        let exe = self.executable(entry)?;
+        let mut slots: Vec<BufferSlot> = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            match inp {
+                MixedInput::Tensor(t) => slots.push(BufferSlot::Owned(self.to_buffer(t)?)),
+                MixedInput::Weight(name) => {
+                    slots.push(BufferSlot::Shared(self.weight_buffer(name)?))
+                }
+            }
+        }
+        let refs: Vec<&xla::PjRtBuffer> = slots
+            .iter()
+            .map(|s| match s {
+                BufferSlot::Owned(b) => b,
+                BufferSlot::Shared(b) => b.as_ref(),
+            })
+            .collect();
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&refs)
+            .map_err(|e| anyhow!("executing {entry} (buffers): {e:?}"))?;
+        self.exec_count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {entry} result: {e:?}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing {entry} tuple: {e:?}"))?;
+        let res: Result<Vec<HostTensor>> =
+            parts.into_iter().map(HostTensor::from_literal).collect();
+        {
+            let mut stats = self.exec_stats.lock().unwrap();
+            let e = stats.entry(entry.to_string()).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += t0.elapsed().as_secs_f64();
+        }
+        res
+    }
+
+    /// Per-entry cumulative (calls, seconds), sorted by total time.
+    pub fn exec_stats(&self) -> Vec<(String, u64, f64)> {
+        let stats = self.exec_stats.lock().unwrap();
+        let mut v: Vec<(String, u64, f64)> =
+            stats.iter().map(|(k, (c, s))| (k.clone(), *c, *s)).collect();
+        v.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        v
+    }
+}

@@ -1,0 +1,142 @@
+//! Host tensors: the typed boundary between rust data structures and
+//! PJRT literals.
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dense host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self { dims, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self { dims, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Self::f32(dims, vec![0.0; n])
+    }
+
+    /// Filled with a constant (e.g. NEG_INF masks).
+    pub fn full(dims: Vec<usize>, v: f32) -> Self {
+        let n = dims.iter().product();
+        Self::f32(dims, vec![v; n])
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Self::i32(vec![], vec![v])
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            TensorData::F32(_) => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, bytes): (xla::ElementType, &[u8]) = match &self.data {
+            TensorData::F32(v) => (xla::ElementType::F32, bytemuck_f32(v)),
+            TensorData::I32(v) => (xla::ElementType::S32, bytemuck_i32(v)),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, &self.dims, bytes)
+            .map_err(|e| anyhow!("literal create: {e:?}"))
+    }
+
+    pub fn from_literal(lit: xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Self::f32(
+                dims,
+                lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?,
+            )),
+            xla::ElementType::S32 => Ok(Self::i32(
+                dims,
+                lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?,
+            )),
+            other => Err(anyhow!("unsupported literal element type {other:?}")),
+        }
+    }
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_check_len() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(HostTensor::zeros(vec![4]).as_f32(), &[0.0; 4]);
+        assert_eq!(HostTensor::full(vec![2], -1.0).as_f32(), &[-1.0, -1.0]);
+    }
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_round_trip_i32() {
+        let t = HostTensor::i32(vec![3], vec![-1, 0, 7]);
+        let back = HostTensor::from_literal(t.to_literal().unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_round_trip_scalar() {
+        let t = HostTensor::scalar_i32(5);
+        let back = HostTensor::from_literal(t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.as_i32(), &[5]);
+        assert!(back.dims.is_empty());
+    }
+}

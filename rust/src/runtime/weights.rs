@@ -1,0 +1,79 @@
+//! `weights.bin` loading: all model weights as host tensors, addressable
+//! by name and pre-grouped per layer in entry-point parameter order.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+
+/// Per-layer weight parameter order shared with `python/compile/model.py`
+/// (`LAYER_WEIGHT_NAMES`).
+pub const LAYER_WEIGHT_NAMES: [&str; 9] = [
+    "attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w_gate", "w_up", "w_down",
+];
+
+pub struct WeightStore {
+    by_name: HashMap<String, HostTensor>,
+}
+
+impl WeightStore {
+    pub fn load(dir: &Path, manifest: &Manifest) -> Result<Self> {
+        let path = dir.join(&manifest.weights_bin);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != manifest.total_f32 * 4 {
+            return Err(anyhow!(
+                "weights.bin is {} bytes, manifest says {}",
+                bytes.len(),
+                manifest.total_f32 * 4
+            ));
+        }
+        let all: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut by_name = HashMap::new();
+        for w in &manifest.weights {
+            let n: usize = w.shape.iter().product();
+            let slice = all
+                .get(w.offset_f32..w.offset_f32 + n)
+                .ok_or_else(|| anyhow!("weight '{}' out of range", w.name))?;
+            by_name.insert(w.name.clone(), HostTensor::f32(w.shape.clone(), slice.to_vec()));
+        }
+        Ok(Self { by_name })
+    }
+
+    pub fn get(&self, name: &str) -> &HostTensor {
+        self.by_name
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown weight '{name}'"))
+    }
+
+    /// Fully qualified weight names of layer `i` in entry-point order.
+    pub fn layer_names(i: usize) -> Vec<String> {
+        LAYER_WEIGHT_NAMES
+            .iter()
+            .map(|n| format!("l{i}.{n}"))
+            .collect()
+    }
+
+    /// The 9 per-layer attention+FFN weights in model entry-point order.
+    pub fn layer(&self, i: usize) -> Vec<&HostTensor> {
+        LAYER_WEIGHT_NAMES
+            .iter()
+            .map(|n| self.get(&format!("l{i}.{n}")))
+            .collect()
+    }
+
+    /// Subset of layer weights by name (decode_qkv needs attn_norm,wq,wk,wv;
+    /// decode_attend needs wo,ffn_norm,w_gate,w_up,w_down).
+    pub fn layer_subset(&self, i: usize, names: &[&str]) -> Vec<&HostTensor> {
+        names.iter().map(|n| self.get(&format!("l{i}.{n}"))).collect()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.by_name.keys()
+    }
+}

@@ -1,0 +1,537 @@
+//! The scheduler core: FCFS continuous batching + Algorithm 1 +
+//! prefill planning (plain / chunked / layer-segmented).
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::config::{ModelSpec, PrefillMode, ServingConfig};
+use crate::memory::ReqId;
+
+use super::plan::{Batch, PrefillWork};
+use super::request::{Phase, Request};
+
+/// Decode working-set estimator supplied by the executor:
+/// `req -> bytes` (history-window union for SparseServe, full KV for
+/// dense attention).
+pub type WsEstimate<'a> = &'a mut dyn FnMut(ReqId) -> usize;
+
+pub struct Scheduler {
+    pub cfg: ServingConfig,
+    pub spec: ModelSpec,
+    /// HBM KV capacity in bytes (M_avl = m_avl_frac * this).
+    hbm_capacity: usize,
+    pub requests: HashMap<ReqId, Request>,
+    /// FCFS admission queue.
+    queue: VecDeque<ReqId>,
+    /// Admitted requests in admission order (Prefill or Decode phase).
+    active: Vec<ReqId>,
+    /// Non-offload HBM reservations (vLLM semantics: a request's full KV
+    /// must fit in HBM for its lifetime).
+    reserved: HashMap<ReqId, usize>,
+    reserved_total: usize,
+    /// Iterations planned (diagnostics).
+    pub iterations: u64,
+    /// Requests rejected by Alg. 1 at least once this run (diagnostics).
+    pub ws_rejections: u64,
+}
+
+impl Scheduler {
+    pub fn new(cfg: ServingConfig, spec: ModelSpec, hbm_capacity: usize) -> Self {
+        Self {
+            cfg,
+            spec,
+            hbm_capacity,
+            requests: HashMap::new(),
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            reserved: HashMap::new(),
+            reserved_total: 0,
+            iterations: 0,
+            ws_rejections: 0,
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        let id = req.id;
+        self.requests.insert(id, req);
+        self.queue.push_back(id);
+    }
+
+    pub fn n_queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.active.is_empty()
+    }
+
+    pub fn m_avl(&self) -> usize {
+        (self.hbm_capacity as f64 * self.cfg.m_avl_frac) as usize
+    }
+
+    /// Full-lifetime KV bytes of a request (prompt + all output tokens) —
+    /// the vLLM-style HBM reservation.
+    pub fn full_kv_bytes(&self, prompt_len: usize, max_new: usize) -> usize {
+        let blocks = (prompt_len + max_new).div_ceil(self.spec.block_size);
+        blocks * self.spec.n_layers * self.spec.n_kv_heads * self.spec.block_bytes()
+    }
+
+    /// Prefill working set for the configured mode (paper §3.3):
+    /// chunked keeps every processed token's KV across ALL layers resident;
+    /// layer-segmented needs only ONE layer of the segment being processed.
+    pub fn prefill_ws_bytes(&self, req: &Request, work: &PrefillWork) -> usize {
+        let per_tok_layer =
+            self.spec.n_kv_heads * self.spec.head_dim * 2 * self.spec.kv_dtype_bytes;
+        match work {
+            PrefillWork::Chunk { len, .. } => {
+                (req.tokens_done + len) * per_tok_layer * self.spec.n_layers
+            }
+            PrefillWork::LayerSegment { tok_len, .. } => *tok_len * per_tok_layer,
+        }
+    }
+
+    /// Plan the next hybrid batch (Algorithm 1 + prefill planner).
+    /// `now` stamps admissions; `ws` estimates decode working sets.
+    pub fn plan(&mut self, now: f64, ws: WsEstimate) -> Batch {
+        self.iterations += 1;
+        let m_avl = self.m_avl();
+        let mut batch = Batch::default();
+        let mut ws_used = 0usize;
+        let mut tokens = 0usize;
+
+        // ---- 1. decode candidates, FCFS (Alg. 1 lines 5-14) ----
+        for &id in &self.active {
+            if self.requests[&id].phase != Phase::Decode {
+                continue;
+            }
+            if batch.decodes.len() >= self.cfg.r_max || tokens + 1 > self.cfg.t_max {
+                break;
+            }
+            if self.cfg.ws_batch_control {
+                let w = ws(id);
+                if ws_used + w > m_avl {
+                    self.ws_rejections += 1;
+                    continue; // S.reset(req): skipped this iteration
+                }
+                ws_used += w;
+            }
+            batch.decodes.push(id);
+            tokens += 1;
+        }
+
+        // ---- 2. admission (single prefill slot, strict FCFS) ----
+        let prefilling = self
+            .active
+            .iter()
+            .copied()
+            .find(|id| self.requests[id].phase == Phase::Prefill);
+        let target = match prefilling {
+            Some(id) => Some(id),
+            None => self.try_admit(now),
+        };
+
+        // ---- 3. prefill planning ----
+        if let Some(id) = target {
+            if let Some(work) = self.plan_prefill(id, tokens) {
+                let ok = if self.cfg.ws_batch_control {
+                    let w = self.prefill_ws_bytes(&self.requests[&id], &work);
+                    if ws_used + w <= m_avl {
+                        true
+                    } else {
+                        self.ws_rejections += 1;
+                        false
+                    }
+                } else {
+                    true
+                };
+                if ok {
+                    batch.prefill = Some(work);
+                }
+            }
+        }
+        batch
+    }
+
+    /// Head-of-queue admission. Non-offload systems must reserve the full
+    /// KV in HBM (head-of-line blocking when it doesn't fit — the vLLM
+    /// failure mode of Fig. 10); offloading admits into DRAM freely.
+    fn try_admit(&mut self, now: f64) -> Option<ReqId> {
+        let &id = self.queue.front()?;
+        let (plen, mnew) = {
+            let r = &self.requests[&id];
+            (r.prompt_len, r.max_new_tokens)
+        };
+        if !self.cfg.offload {
+            let need = self.full_kv_bytes(plen, mnew);
+            if self.reserved_total + need > self.hbm_capacity {
+                return None; // blocked; FCFS forbids skipping ahead
+            }
+            self.reserved.insert(id, need);
+            self.reserved_total += need;
+        }
+        self.queue.pop_front();
+        let r = self.requests.get_mut(&id).unwrap();
+        r.phase = Phase::Prefill;
+        r.admitted_s = Some(now);
+        self.active.push(id);
+        Some(id)
+    }
+
+    /// Produce the next prefill work item for an admitted request, within
+    /// the remaining token budget of this batch.
+    fn plan_prefill(&self, id: ReqId, tokens_in_batch: usize) -> Option<PrefillWork> {
+        let r = &self.requests[&id];
+        let plen = r.prompt_len;
+        match self.cfg.prefill_mode {
+            PrefillMode::Plain => {
+                if r.tokens_done > 0 {
+                    return None;
+                }
+                Some(PrefillWork::Chunk { req: id, start: 0, len: plen, is_last: true })
+            }
+            PrefillMode::Chunked => {
+                let budget = self.cfg.t_max.saturating_sub(tokens_in_batch);
+                let len = self
+                    .cfg
+                    .chunk_tokens
+                    .min(budget)
+                    .min(plen - r.tokens_done);
+                if len == 0 {
+                    return None;
+                }
+                Some(PrefillWork::Chunk {
+                    req: id,
+                    start: r.tokens_done,
+                    len,
+                    is_last: r.tokens_done + len == plen,
+                })
+            }
+            PrefillMode::LayerSegmented => {
+                let inject = self.cfg.max_inject_tokens.max(1);
+                if plen <= inject {
+                    // whole prompt per layer; possibly several layers/batch
+                    let layers_per = (inject / plen).max(1);
+                    let layer_end = (r.layers_done + layers_per).min(self.spec.n_layers);
+                    Some(PrefillWork::LayerSegment {
+                        req: id,
+                        layer_start: r.layers_done,
+                        layer_end,
+                        tok_start: 0,
+                        tok_len: plen,
+                        is_last: layer_end == self.spec.n_layers,
+                    })
+                } else {
+                    // hybrid: chunk within the current layer (§3.4 "combination
+                    // with chunked prefill")
+                    let tok_len = inject.min(plen - r.layer_tok_done);
+                    let last_chunk = r.layer_tok_done + tok_len == plen;
+                    Some(PrefillWork::LayerSegment {
+                        req: id,
+                        layer_start: r.layers_done,
+                        layer_end: r.layers_done + 1,
+                        tok_start: r.layer_tok_done,
+                        tok_len,
+                        is_last: last_chunk && r.layers_done + 1 == self.spec.n_layers,
+                    })
+                }
+            }
+        }
+    }
+
+    /// Advance prefill progress after the executor ran a work item.
+    /// (The first token is emitted separately via [`Self::emit_token`].)
+    pub fn advance_prefill(&mut self, work: &PrefillWork) {
+        let r = self.requests.get_mut(&work.req()).expect("unknown request");
+        match work {
+            PrefillWork::Chunk { len, .. } => {
+                r.tokens_done += len;
+                debug_assert!(r.tokens_done <= r.prompt_len);
+            }
+            PrefillWork::LayerSegment { layer_start, layer_end, tok_start, tok_len, .. } => {
+                debug_assert_eq!(*layer_start, r.layers_done);
+                if *tok_len == r.prompt_len {
+                    r.layers_done = *layer_end;
+                } else {
+                    debug_assert_eq!(*tok_start, r.layer_tok_done);
+                    r.layer_tok_done += tok_len;
+                    if r.layer_tok_done == r.prompt_len {
+                        r.layers_done += 1;
+                        r.layer_tok_done = 0;
+                    }
+                }
+                if r.layers_done == self.spec.n_layers {
+                    r.tokens_done = r.prompt_len;
+                }
+            }
+        }
+    }
+
+    /// Record a produced token. Returns true if the request just finished
+    /// (the executor then releases its KV).
+    pub fn emit_token(&mut self, id: ReqId, tok: Option<i32>, now: f64) -> bool {
+        let r = self.requests.get_mut(&id).expect("unknown request");
+        r.push_token(tok, now);
+        if r.phase == Phase::Finished {
+            self.active.retain(|&a| a != id);
+            if let Some(n) = self.reserved.remove(&id) {
+                self.reserved_total -= n;
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Active decode requests (executor helper).
+    pub fn decoding(&self) -> Vec<ReqId> {
+        self.active
+            .iter()
+            .copied()
+            .filter(|id| self.requests[id].phase == Phase::Decode)
+            .collect()
+    }
+
+    pub fn reserved_bytes(&self) -> usize {
+        self.reserved_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "t".into(),
+            vocab: 256,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            n_kv_heads: 4,
+            head_dim: 32,
+            ffn_dim: 512,
+            block_size: 16,
+            max_ctx: 2048,
+            rope_theta: 1e4,
+            kv_dtype_bytes: 4,
+        }
+    }
+
+    fn sched(cfg: ServingConfig, hbm: usize) -> Scheduler {
+        Scheduler::new(cfg, spec(), hbm)
+    }
+
+    fn no_ws(_: ReqId) -> usize {
+        0
+    }
+
+    #[test]
+    fn fcfs_admission_and_prefill_then_decode() {
+        let mut cfg = ServingConfig::sparseserve(256, 64, 4);
+        cfg.max_inject_tokens = 64 * 4;
+        let mut s = sched(cfg, 1 << 30);
+        s.submit(Request::new(1, 64, 3, 0.0));
+        let mut ws = |r| no_ws(r);
+        let b = s.plan(0.0, &mut ws);
+        assert!(b.decodes.is_empty());
+        let w = b.prefill.unwrap();
+        // prompt 64 <= maxInject 256 -> 4 layers per batch -> single segment
+        assert_eq!(
+            w,
+            PrefillWork::LayerSegment {
+                req: 1, layer_start: 0, layer_end: 4, tok_start: 0, tok_len: 64, is_last: true,
+            }
+        );
+        s.advance_prefill(&w);
+        assert!(!s.emit_token(1, Some(9), 0.1)); // first token
+        assert_eq!(s.requests[&1].phase, Phase::Decode);
+        let b2 = s.plan(0.2, &mut ws);
+        assert_eq!(b2.decodes, vec![1]);
+        assert!(b2.prefill.is_none());
+    }
+
+    #[test]
+    fn layer_segmented_splits_layers_across_batches() {
+        let mut cfg = ServingConfig::sparseserve(256, 64, 4);
+        cfg.max_inject_tokens = 100; // prompt 100 -> 1 layer per batch
+        let mut s = sched(cfg, 1 << 30);
+        s.submit(Request::new(1, 100, 2, 0.0));
+        let mut ws = |r| no_ws(r);
+        for layer in 0..4 {
+            let b = s.plan(0.0, &mut ws);
+            let w = b.prefill.unwrap();
+            match &w {
+                PrefillWork::LayerSegment { layer_start, layer_end, is_last, .. } => {
+                    assert_eq!(*layer_start, layer);
+                    assert_eq!(*layer_end, layer + 1);
+                    assert_eq!(*is_last, layer == 3);
+                }
+                _ => panic!("expected layer segment"),
+            }
+            s.advance_prefill(&w);
+        }
+        assert_eq!(s.requests[&1].layers_done, 4);
+    }
+
+    #[test]
+    fn layer_segmented_hybrid_chunks_long_prompts() {
+        let mut cfg = ServingConfig::sparseserve(256, 64, 4);
+        cfg.max_inject_tokens = 50; // prompt 100 > inject -> chunk within layer
+        let mut s = sched(cfg, 1 << 30);
+        s.submit(Request::new(1, 100, 2, 0.0));
+        let mut ws = |r| no_ws(r);
+        let mut work_items = Vec::new();
+        loop {
+            let b = s.plan(0.0, &mut ws);
+            match b.prefill {
+                Some(w) => {
+                    s.advance_prefill(&w);
+                    let done = w.is_last();
+                    work_items.push(w);
+                    if done {
+                        break;
+                    }
+                }
+                None => panic!("stalled"),
+            }
+        }
+        // 2 chunks per layer x 4 layers
+        assert_eq!(work_items.len(), 8);
+        assert!(matches!(
+            work_items[1],
+            PrefillWork::LayerSegment { layer_start: 0, tok_start: 50, tok_len: 50, .. }
+        ));
+    }
+
+    #[test]
+    fn chunked_respects_t_max_minus_decodes() {
+        let mut cfg = ServingConfig::vllm(64);
+        cfg.t_max = 64;
+        let mut s = sched(cfg, 1 << 30);
+        // one decoding request occupies 1 token of budget
+        s.submit(Request::new(1, 32, 8, 0.0));
+        let mut ws = |r| no_ws(r);
+        let b = s.plan(0.0, &mut ws);
+        let w = b.prefill.unwrap();
+        s.advance_prefill(&w);
+        s.emit_token(1, None, 0.1);
+        s.submit(Request::new(2, 200, 2, 0.2));
+        let b2 = s.plan(0.3, &mut ws);
+        assert_eq!(b2.decodes, vec![1]);
+        match b2.prefill.unwrap() {
+            PrefillWork::Chunk { len, .. } => assert_eq!(len, 63), // 64 - 1 decode
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn non_offload_admission_blocks_on_hbm() {
+        // vLLM: HBM fits only one request's reservation -> head-of-line block
+        let cfg = ServingConfig::vllm(2048);
+        let spec_ = spec();
+        let one_req = {
+            let s = Scheduler::new(cfg.clone(), spec_.clone(), 0);
+            s.full_kv_bytes(512, 64)
+        };
+        let mut s = Scheduler::new(cfg, spec_, one_req + one_req / 2);
+        s.submit(Request::new(1, 512, 64, 0.0));
+        s.submit(Request::new(2, 512, 64, 0.0));
+        let mut ws = |r| no_ws(r);
+        let b = s.plan(0.0, &mut ws);
+        assert_eq!(b.prefill.as_ref().unwrap().req(), 1);
+        // request 2 cannot be admitted while 1 holds its reservation
+        s.advance_prefill(&b.prefill.unwrap());
+        s.emit_token(1, None, 0.1);
+        let b2 = s.plan(0.2, &mut ws);
+        assert!(b2.prefill.is_none(), "req 2 must be blocked");
+        assert_eq!(s.n_queued(), 1);
+        // finishing request 1 releases the reservation
+        for t in 0..63 {
+            s.emit_token(1, None, 0.2 + t as f64);
+        }
+        assert_eq!(s.reserved_bytes(), 0);
+        let b3 = s.plan(70.0, &mut ws);
+        assert_eq!(b3.prefill.as_ref().unwrap().req(), 2);
+    }
+
+    #[test]
+    fn ws_control_caps_batch_size() {
+        // Alg. 1: each decode claims 40% of M_avl -> only 2 fit per batch
+        let mut cfg = ServingConfig::sparseserve(256, 64, 4);
+        cfg.r_max = 16;
+        let hbm = 1 << 20; // m_avl = 0.9 MiB
+        let mut s = sched(cfg, hbm);
+        for id in 1..=4u32 {
+            s.submit(Request::new(id, 16, 5, 0.0));
+        }
+        // drive all four through prefill
+        for _ in 0..4 {
+            let mut ws = |r| no_ws(r);
+            let b = s.plan(0.0, &mut ws);
+            if let Some(w) = b.prefill {
+                let done = w.is_last();
+                s.advance_prefill(&w);
+                if done {
+                    s.emit_token(w.req(), None, 0.1);
+                }
+            }
+        }
+        assert_eq!(s.decoding().len(), 4);
+        let ws_each = (s.m_avl() as f64 * 0.4) as usize; // 2 fit, 4 don't
+        let mut ws_big = move |_r: ReqId| ws_each;
+        let b = s.plan(1.0, &mut ws_big);
+        assert_eq!(b.decodes.len(), 2, "Alg.1 must cap at working-set fit");
+        assert!(s.ws_rejections >= 2);
+        // sanity: invariant sum(ws) <= m_avl
+        assert!(ws_each * b.decodes.len() <= s.m_avl());
+    }
+
+    #[test]
+    fn ws_control_disabled_admits_all() {
+        let mut cfg = ServingConfig::vllm_so(256, 64);
+        cfg.r_max = 16;
+        assert!(!cfg.ws_batch_control);
+        let mut s = sched(cfg, 1000);
+        for id in 1..=4u32 {
+            s.submit(Request::new(id, 16, 5, 0.0));
+            // offload mode admits immediately; drive prefill
+            let mut ws = |r| no_ws(r);
+            let b = s.plan(0.0, &mut ws);
+            if let Some(w) = b.prefill {
+                let done = w.is_last();
+                s.advance_prefill(&w);
+                if done {
+                    s.emit_token(w.req(), None, 0.1);
+                }
+            }
+        }
+        let mut ws_big = |_r: ReqId| 360usize;
+        let b = s.plan(1.0, &mut ws_big);
+        assert_eq!(b.decodes.len(), 4, "no WS control -> everything batched");
+    }
+
+    #[test]
+    fn r_max_caps_decodes() {
+        let mut cfg = ServingConfig::vllm_so(256, 2048);
+        cfg.r_max = 2;
+        let mut s = sched(cfg, 1 << 30);
+        for id in 1..=3u32 {
+            s.submit(Request::new(id, 16, 5, 0.0));
+            let mut ws = |r| no_ws(r);
+            let b = s.plan(0.0, &mut ws);
+            if let Some(w) = b.prefill {
+                let done = w.is_last();
+                s.advance_prefill(&w);
+                if done {
+                    s.emit_token(w.req(), None, 0.1);
+                }
+            }
+        }
+        let mut ws = |r| no_ws(r);
+        let b = s.plan(1.0, &mut ws);
+        assert_eq!(b.decodes.len(), 2);
+    }
+}

@@ -1,0 +1,20 @@
+//! The request scheduler (paper §3.1 left box, §3.3, §3.4).
+//!
+//! FCFS continuous batching with hybrid prefill+decode batches, extended
+//! with the paper's two scheduling contributions:
+//!
+//! - **working-set-aware batch size control** (Algorithm 1): the
+//!   candidate batch from the base FCFS policy is filtered so the sum of
+//!   per-request working sets stays within the available HBM cache,
+//!   preventing thrashing (Fig. 15);
+//! - **layer-segmented prefill** (§3.4): prefill proceeds layer by layer
+//!   over the full prompt, bounding prefill HBM to one layer and
+//!   sidestepping the chunked-prefill head-of-line blocking (Fig. 16).
+
+mod core;
+mod plan;
+mod request;
+
+pub use self::core::{Scheduler, WsEstimate};
+pub use plan::{Batch, PrefillWork};
+pub use request::{Phase, Request};

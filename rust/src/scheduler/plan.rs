@@ -1,0 +1,91 @@
+//! Batch plans: what the executor runs in one hybrid iteration.
+
+use crate::memory::ReqId;
+
+/// One unit of prefill work scheduled into a hybrid batch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PrefillWork {
+    /// Chunked (plain = one chunk covering the whole prompt): process
+    /// prompt tokens `[start, start+len)` through ALL layers.
+    Chunk {
+        req: ReqId,
+        start: usize,
+        len: usize,
+        /// Completing this chunk finishes prefill (emits the first token).
+        is_last: bool,
+    },
+    /// Layer-segmented (§3.4): process prompt tokens
+    /// `[tok_start, tok_start+tok_len)` through layers
+    /// `[layer_start, layer_end)`. `tok_len` spans the whole prompt unless
+    /// the prompt exceeds maxInjectToken (hybrid chunking).
+    LayerSegment {
+        req: ReqId,
+        layer_start: usize,
+        layer_end: usize,
+        tok_start: usize,
+        tok_len: usize,
+        is_last: bool,
+    },
+}
+
+impl PrefillWork {
+    pub fn req(&self) -> ReqId {
+        match self {
+            PrefillWork::Chunk { req, .. } | PrefillWork::LayerSegment { req, .. } => *req,
+        }
+    }
+
+    pub fn is_last(&self) -> bool {
+        match self {
+            PrefillWork::Chunk { is_last, .. } | PrefillWork::LayerSegment { is_last, .. } => {
+                *is_last
+            }
+        }
+    }
+
+    /// Tokens injected into the batch by this work item (the T_max /
+    /// maxInjectToken accounting unit).
+    pub fn injected_tokens(&self) -> usize {
+        match self {
+            PrefillWork::Chunk { len, .. } => *len,
+            PrefillWork::LayerSegment { layer_start, layer_end, tok_len, .. } => {
+                (layer_end - layer_start) * tok_len
+            }
+        }
+    }
+}
+
+/// One hybrid iteration: decode steps for `decodes` plus at most one
+/// prefill work item (paper Fig. 9 layout).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Batch {
+    pub decodes: Vec<ReqId>,
+    pub prefill: Option<PrefillWork>,
+}
+
+impl Batch {
+    pub fn is_empty(&self) -> bool {
+        self.decodes.is_empty() && self.prefill.is_none()
+    }
+
+    pub fn n_requests(&self) -> usize {
+        self.decodes.len() + usize::from(self.prefill.is_some())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn injected_tokens_accounting() {
+        let c = PrefillWork::Chunk { req: 1, start: 0, len: 256, is_last: false };
+        assert_eq!(c.injected_tokens(), 256);
+        let l = PrefillWork::LayerSegment {
+            req: 1, layer_start: 2, layer_end: 4, tok_start: 0, tok_len: 1024, is_last: true,
+        };
+        assert_eq!(l.injected_tokens(), 2048);
+        assert!(l.is_last());
+        assert_eq!(l.req(), 1);
+    }
+}

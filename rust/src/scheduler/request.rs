@@ -1,0 +1,135 @@
+//! Request state machine.
+
+use crate::memory::ReqId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting for admission.
+    Queued,
+    /// Admitted; prompt being prefilled (chunked or layer-segmented).
+    Prefill,
+    /// First token emitted; generating.
+    Decode,
+    Finished,
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: ReqId,
+    /// Prompt token ids (empty under the simulator backend).
+    pub prompt: Vec<i32>,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub arrival_s: f64,
+
+    pub phase: Phase,
+    /// Chunked-prefill progress: prompt tokens fully processed (all layers).
+    pub tokens_done: usize,
+    /// Layer-segmented progress: layers fully processed over the prompt.
+    pub layers_done: usize,
+    /// Within-layer token progress (layer-segmented x chunked hybrid).
+    pub layer_tok_done: usize,
+
+    /// Generated token ids (real backend) / count (sim tracks len only).
+    pub generated: Vec<i32>,
+    pub n_generated: usize,
+
+    // ---- timestamps (seconds on the serving clock) ----
+    pub admitted_s: Option<f64>,
+    pub first_token_s: Option<f64>,
+    pub last_token_s: Option<f64>,
+    pub finished_s: Option<f64>,
+    /// Per-token inter-arrival times (TBT samples).
+    pub tbt: Vec<f64>,
+}
+
+impl Request {
+    pub fn new(id: ReqId, prompt_len: usize, max_new_tokens: usize, arrival_s: f64) -> Self {
+        Self {
+            id,
+            prompt: Vec::new(),
+            prompt_len,
+            max_new_tokens,
+            arrival_s,
+            phase: Phase::Queued,
+            tokens_done: 0,
+            layers_done: 0,
+            layer_tok_done: 0,
+            generated: Vec::new(),
+            n_generated: 0,
+            admitted_s: None,
+            first_token_s: None,
+            last_token_s: None,
+            finished_s: None,
+            tbt: Vec::new(),
+        }
+    }
+
+    pub fn with_prompt(id: ReqId, prompt: Vec<i32>, max_new_tokens: usize, arrival_s: f64) -> Self {
+        let mut r = Self::new(id, prompt.len(), max_new_tokens, arrival_s);
+        r.prompt = prompt;
+        r
+    }
+
+    /// Record a generated token at time `now`.
+    pub fn push_token(&mut self, tok: Option<i32>, now: f64) {
+        if self.first_token_s.is_none() {
+            self.first_token_s = Some(now);
+        } else if let Some(last) = self.last_token_s {
+            self.tbt.push(now - last);
+        }
+        self.last_token_s = Some(now);
+        if let Some(t) = tok {
+            self.generated.push(t);
+        }
+        self.n_generated += 1;
+        if self.n_generated >= self.max_new_tokens {
+            self.phase = Phase::Finished;
+            self.finished_s = Some(now);
+        } else {
+            self.phase = Phase::Decode;
+        }
+    }
+
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_s.map(|t| t - self.arrival_s)
+    }
+
+    pub fn queue_delay(&self) -> Option<f64> {
+        self.admitted_s.map(|t| t - self.arrival_s)
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == Phase::Finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_lifecycle_and_metrics() {
+        let mut r = Request::new(1, 100, 3, 10.0);
+        r.admitted_s = Some(11.0);
+        r.push_token(Some(5), 12.0);
+        assert_eq!(r.phase, Phase::Decode);
+        assert_eq!(r.ttft(), Some(2.0));
+        assert_eq!(r.queue_delay(), Some(1.0));
+        r.push_token(Some(6), 12.5);
+        r.push_token(Some(7), 13.5);
+        assert!(r.is_done());
+        assert_eq!(r.finished_s, Some(13.5));
+        assert_eq!(r.tbt, vec![0.5, 1.0]);
+        assert_eq!(r.generated, vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn single_token_request_finishes_immediately() {
+        let mut r = Request::new(2, 10, 1, 0.0);
+        r.push_token(None, 1.0);
+        assert!(r.is_done());
+        assert!(r.tbt.is_empty());
+        assert_eq!(r.n_generated, 1);
+    }
+}

@@ -1,0 +1,233 @@
+//! Analytic GPU + PCIe cost model for paper-scale iterations.
+//!
+//! Compute follows the standard transformer FLOP/byte accounting with a
+//! roofline `max(flops / gpu_flops, bytes / hbm_bw)` per phase; PCIe
+//! costs come from the calibrated [`HardwareSpec`] engine models. The
+//! unit tests pin the derived *ratios* to what the paper reports
+//! (chunked prefill overhead, Fig. 16b; saving overhead, Fig. 14b).
+
+use crate::config::serving::TransferKind;
+use crate::config::{HardwareSpec, ModelSpec};
+
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub spec: ModelSpec,
+    pub hw: HardwareSpec,
+}
+
+impl CostModel {
+    pub fn new(spec: ModelSpec, hw: HardwareSpec) -> Self {
+        Self { spec, hw }
+    }
+
+    /// Weight bytes of one layer (f16 at paper scale).
+    fn layer_weight_bytes(&self) -> f64 {
+        let s = &self.spec;
+        let attn = s.d_model * (s.n_heads * s.head_dim) * 2
+            + s.d_model * (s.n_kv_heads * s.head_dim) * 2;
+        let ffn = 3 * s.d_model * s.ffn_dim;
+        ((attn + ffn) * s.kv_dtype_bytes) as f64
+    }
+
+    /// Projection+FFN FLOPs for `t` tokens through one layer.
+    fn layer_proj_flops(&self, t: usize) -> f64 {
+        let s = &self.spec;
+        let proj = 2.0
+            * t as f64
+            * (s.d_model * (s.n_heads * s.head_dim) * 2
+                + s.d_model * (s.n_kv_heads * s.head_dim) * 2) as f64;
+        let ffn = 2.0 * t as f64 * (3 * s.d_model * s.ffn_dim) as f64;
+        proj + ffn
+    }
+
+    /// Attention FLOPs: `t` queries against `kv` keys (QK^T + PV).
+    fn attn_flops(&self, t: usize, kv: usize) -> f64 {
+        4.0 * t as f64 * kv as f64 * (self.spec.n_heads * self.spec.head_dim) as f64
+    }
+
+    /// Prefill-attention GPU utilization as a function of query count.
+    /// Small chunks underutilize the SMs (few query tiles to parallelize
+    /// over), which is what makes chunked prefill re-processing of the
+    /// past KV expensive in practice; `Q_SAT` is calibrated so chunk-512
+    /// prefill attention lands ~1.5x plain (Fig. 16b's measured point).
+    const Q_SAT: f64 = 1024.0;
+
+    fn attn_util(t: usize) -> f64 {
+        t as f64 / (t as f64 + Self::Q_SAT)
+    }
+
+    /// One layer of prefill over `t` new tokens with `past` tokens of
+    /// context (past = 0 for plain/layer-segmented full-prompt layers).
+    pub fn prefill_layer_time(&self, t: usize, past: usize) -> f64 {
+        // causal self-attention within the segment: ~t*t/2 pairs
+        let proj = self.layer_proj_flops(t) / self.hw.gpu_flops;
+        let attn_flops = self.attn_flops(t, past) + 0.5 * self.attn_flops(t, t);
+        let attn_bytes = ((t + past)
+            * self.spec.n_kv_heads
+            * self.spec.head_dim
+            * 2
+            * self.spec.kv_dtype_bytes) as f64;
+        let attn = (attn_flops / (self.hw.gpu_flops * Self::attn_util(t)))
+            .max(attn_bytes / self.hw.hbm_bw);
+        let weight_read = self.layer_weight_bytes() / self.hw.hbm_bw;
+        proj.max(weight_read) + attn
+    }
+
+    /// Full prefill of a prompt, layer-segmented or plain (identical
+    /// compute: every token attends once).
+    pub fn prefill_time_plain(&self, prompt: usize) -> f64 {
+        self.spec.n_layers as f64 * self.prefill_layer_time(prompt, 0)
+    }
+
+    /// Full prefill via chunked prefill: chunk c attends to all preceding
+    /// chunks, re-reading their KV each iteration (the Fig. 16b overhead).
+    pub fn prefill_time_chunked(&self, prompt: usize, chunk: usize) -> f64 {
+        let mut total = 0.0;
+        let mut done = 0;
+        while done < prompt {
+            let c = chunk.min(prompt - done);
+            total += self.spec.n_layers as f64 * self.prefill_layer_time(c, done);
+            done += c;
+        }
+        total
+    }
+
+    /// Fixed per-decode-iteration overhead: kernel launches, block
+    /// selection, gather assembly, sampling and scheduler bookkeeping —
+    /// ~0.8 ms per layer on real serving stacks (vLLM-class systems
+    /// measure 20-40 ms iteration floors on 32-layer models).
+    pub fn decode_iter_overhead(&self) -> f64 {
+        self.spec.n_layers as f64 * 0.8e-3
+    }
+
+    /// One decode iteration for a batch: each request reads `kv_tokens`
+    /// of KV (its sparse budget, or its full context for dense attention).
+    /// Weights are read once per layer regardless of batch size.
+    pub fn decode_iter_time(&self, batch: usize, kv_tokens_per_req: &[usize]) -> f64 {
+        debug_assert_eq!(batch, kv_tokens_per_req.len());
+        if batch == 0 {
+            return 0.0;
+        }
+        let s = &self.spec;
+        let mut flops = 0.0;
+        let mut kv_bytes = 0.0;
+        for &kv in kv_tokens_per_req {
+            flops += self.layer_proj_flops(1) + self.attn_flops(1, kv);
+            kv_bytes +=
+                (kv * s.n_kv_heads * s.head_dim * 2 * s.kv_dtype_bytes) as f64;
+        }
+        flops *= s.n_layers as f64;
+        kv_bytes *= s.n_layers as f64;
+        let bytes = s.n_layers as f64 * self.layer_weight_bytes() + kv_bytes;
+        self.decode_iter_overhead() + (flops / self.hw.gpu_flops).max(bytes / self.hw.hbm_bw)
+    }
+
+    /// Reference single-request decode iteration (the SLO unit of Fig. 13:
+    /// P99 TBT <= 25x this).
+    pub fn decode_iter_ref(&self, kv_tokens: usize) -> f64 {
+        self.decode_iter_time(1, &[kv_tokens])
+    }
+
+    /// PCIe time to load `n_blocks` per-head KV blocks with the engine.
+    pub fn load_time(&self, kind: TransferKind, n_blocks: usize) -> f64 {
+        if n_blocks == 0 {
+            return 0.0;
+        }
+        match kind {
+            TransferKind::Memcpy => self.hw.memcpy_time(n_blocks, self.spec.block_bytes()),
+            TransferKind::Flash | TransferKind::GpuDirectSave => {
+                self.hw.flash_h2d_time(n_blocks, self.spec.block_bytes())
+            }
+        }
+    }
+
+    /// Extra prefill-iteration latency caused by KV *saving*, as a factor
+    /// on compute time. Calibrated to Fig. 14b: memcpy-based saving makes
+    /// prefill 1.76x the compute time, GPU-direct 1.28x, FlashD2H 1.00x.
+    pub fn save_overhead_factor(&self, kind: TransferKind, offload: bool) -> f64 {
+        if !offload {
+            return 1.0;
+        }
+        match kind {
+            TransferKind::Memcpy => 1.76,
+            TransferKind::GpuDirectSave => self.hw.gpu_save_interference,
+            TransferKind::Flash => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CostModel {
+        CostModel::new(ModelSpec::lwm_7b(), HardwareSpec::a100_40gb())
+    }
+
+    #[test]
+    fn chunked_prefill_overhead_matches_fig16b_shape() {
+        // Fig. 16b: chunk 512 slows prefill attention ~1.5x; overhead
+        // shrinks as chunks grow.
+        let m = model();
+        let prompt = 16_384;
+        let plain = m.prefill_time_plain(prompt);
+        let r512 = m.prefill_time_chunked(prompt, 512) / plain;
+        let r2048 = m.prefill_time_chunked(prompt, 2048) / plain;
+        let r4096 = m.prefill_time_chunked(prompt, 4096) / plain;
+        assert!(r512 > r2048 && r2048 > r4096, "{r512} {r2048} {r4096}");
+        assert!(r512 > 1.3 && r512 < 2.2, "chunk-512 overhead {r512}");
+        assert!(r4096 < 1.4, "chunk-4096 overhead {r4096}");
+    }
+
+    #[test]
+    fn decode_is_memory_bound_and_batching_amortizes_weights() {
+        let m = model();
+        let one = m.decode_iter_time(1, &[2048]);
+        let eight = m.decode_iter_time(8, &vec![2048; 8]);
+        // batching 8 must cost far less than 8x a single decode
+        assert!(eight < 4.0 * one, "one={one} eight={eight}");
+        assert!(eight > one);
+    }
+
+    #[test]
+    fn sparse_decode_beats_dense_decode() {
+        let m = model();
+        // single request: modest gain (iteration overhead + weight reads
+        // dominate — matches the paper's +SA goodput gain of only 1.2x)
+        let dense1 = m.decode_iter_time(1, &[32_768]);
+        let sparse1 = m.decode_iter_time(1, &[2048]);
+        assert!(dense1 / sparse1 > 1.25, "dense={dense1} sparse={sparse1}");
+        // batched: KV reads dominate and sparsity pays off severalfold
+        let dense8 = m.decode_iter_time(8, &vec![32_768; 8]);
+        let sparse8 = m.decode_iter_time(8, &vec![2048; 8]);
+        assert!(dense8 / sparse8 > 2.5, "dense={dense8} sparse={sparse8}");
+    }
+
+    #[test]
+    fn load_time_memcpy_vs_flash_matches_fig14a() {
+        let m = model();
+        let n = 256;
+        let ratio = m.load_time(TransferKind::Memcpy, n)
+            / m.load_time(TransferKind::Flash, n);
+        assert!(ratio > 5.0, "FlashH2D must cut loading severalfold: {ratio}");
+    }
+
+    #[test]
+    fn save_factors_match_fig14b() {
+        let m = model();
+        assert_eq!(m.save_overhead_factor(TransferKind::Flash, true), 1.0);
+        assert!((m.save_overhead_factor(TransferKind::Memcpy, true) - 1.76).abs() < 1e-9);
+        let g = m.save_overhead_factor(TransferKind::GpuDirectSave, true);
+        assert!(g > 1.2 && g < 1.4);
+        // no offloading -> no saving traffic at all
+        assert_eq!(m.save_overhead_factor(TransferKind::Memcpy, false), 1.0);
+    }
+
+    #[test]
+    fn prefill_scales_superlinearly_with_prompt() {
+        let m = model();
+        let t1 = m.prefill_time_plain(8192);
+        let t2 = m.prefill_time_plain(16_384);
+        assert!(t2 > 2.0 * t1, "quadratic attention term must show");
+    }
+}

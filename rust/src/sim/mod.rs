@@ -1,0 +1,16 @@
+//! Paper-scale testbed simulator (the DESIGN.md substitution for the
+//! A100 testbed).
+//!
+//! - [`cost`]: analytic GPU compute + PCIe transfer cost model for
+//!   prefill/decode iterations at LWM-7B / Llama3-8B scale, calibrated to
+//!   the paper's measured ratios (Figs. 4, 14, 16b);
+//! - [`selection`]: a synthetic block-selection process with the temporal
+//!   locality the paper measures in Fig. 8 (high step-to-step overlap
+//!   that saturates with window size), driving the LRU cache dynamics of
+//!   Figs. 1 and 15.
+
+pub mod cost;
+pub mod selection;
+
+pub use cost::CostModel;
+pub use selection::SelectionModel;

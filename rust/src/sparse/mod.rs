@@ -1,0 +1,16 @@
+//! Dynamic sparse attention (DSA) support on the coordinator side.
+//!
+//! The compute-regular parts of a DSA run on-device (L1 kernels: metadata
+//! construction, block scoring, sparse attention). What lives here is the
+//! control half the paper's system owns:
+//!
+//! - [`topk`]: select the top-k critical blocks from device scores with
+//!   deterministic tie-breaking (bit-identical to the python pipeline)
+//! - [`working_set`]: estimate each request's decode working set from the
+//!   bounded history window of past selections (paper §3.3, Fig. 8)
+
+pub mod topk;
+pub mod working_set;
+
+pub use topk::{top_k_blocks, top_k_blocks_fast};
+pub use working_set::WorkingSetTracker;

@@ -1,0 +1,92 @@
+//! Top-k block selection from device-computed criticality scores.
+//!
+//! Must be *bit-identical* to the python golden pipeline
+//! (`np.argsort(-scores, kind="stable")[:k]`): order by score descending,
+//! ties broken by lower block id. Only sealed blocks participate (the
+//! open block is always gathered separately, never scored).
+
+/// Select up to `k` block ids from `scores[..n_sealed]`, slot-ordered.
+pub fn top_k_blocks(scores: &[f32], n_sealed: usize, k: usize) -> Vec<u32> {
+    let n = n_sealed.min(scores.len());
+    if k == 0 || n == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    // stable sort by score desc == argsort(-scores, stable)
+    idx.sort_by(|&a, &b| {
+        scores[b as usize]
+            .partial_cmp(&scores[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Partial-selection variant used on the hot path: avoids the full sort
+/// when k << n via select_nth, then stable-sorts only the prefix.
+/// Produces the same result as [`top_k_blocks`].
+pub fn top_k_blocks_fast(scores: &[f32], n_sealed: usize, k: usize) -> Vec<u32> {
+    let n = n_sealed.min(scores.len());
+    if k == 0 || n == 0 {
+        return Vec::new();
+    }
+    if k >= n {
+        return top_k_blocks(scores, n_sealed, k);
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    // Partition so the k best (score desc, id asc) are in the prefix;
+    // the comparator is a total order, making the result deterministic.
+    let cmp = |a: &u32, b: &u32| {
+        scores[*b as usize]
+            .partial_cmp(&scores[*a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(b))
+    };
+    idx.select_nth_unstable_by(k - 1, cmp);
+    idx.truncate(k);
+    idx.sort_by(cmp);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn orders_by_score_then_id() {
+        let scores = [1.0, 5.0, 5.0, 3.0];
+        assert_eq!(top_k_blocks(&scores, 4, 3), vec![1, 2, 3]);
+        assert_eq!(top_k_blocks(&scores, 4, 10), vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn respects_n_sealed() {
+        let scores = [1.0, 9.0, 9.0, 9.0];
+        assert_eq!(top_k_blocks(&scores, 1, 3), vec![0]);
+        assert!(top_k_blocks(&scores, 0, 3).is_empty());
+    }
+
+    #[test]
+    fn fast_matches_reference() {
+        prop::check("topk fast == slow", 200, |rng: &mut Rng| {
+            let n = 1 + rng.below(64);
+            let scores: Vec<f32> = (0..n)
+                .map(|_| {
+                    if rng.f64() < 0.2 {
+                        -1e30
+                    } else {
+                        // coarse values to force ties
+                        (rng.below(8) as f32) - 4.0
+                    }
+                })
+                .collect();
+            let k = rng.below(n + 2);
+            prop::assert_eq_prop(
+                top_k_blocks_fast(&scores, n, k),
+                top_k_blocks(&scores, n, k),
+                "fast != reference",
+            )
+        });
+    }
+}

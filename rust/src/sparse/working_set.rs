@@ -1,0 +1,179 @@
+//! Decode working-set estimation (paper §3.3, Fig. 8).
+//!
+//! The blocks a decode step selects cannot be known in advance, but
+//! consecutive query tokens select highly overlapping sets (temporal
+//! locality). The paper therefore estimates a request's working set as
+//! the union of the blocks selected over the last `w` decode steps
+//! (w = 12 by default: Fig. 8 shows the overlap gain saturates there —
+//! +10.68% from w=1 to 12, +0.31% from 12 to 16).
+
+use std::collections::{HashSet, VecDeque};
+
+/// A (layer, head, block) selection item within one request.
+pub type SelItem = (u16, u16, u32);
+
+#[derive(Debug)]
+pub struct WorkingSetTracker {
+    window: usize,
+    history: VecDeque<Vec<SelItem>>,
+    /// Cached union (rebuilt lazily after updates).
+    union: HashSet<SelItem>,
+    dirty: bool,
+}
+
+impl WorkingSetTracker {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0);
+        Self {
+            window,
+            history: VecDeque::with_capacity(window + 1),
+            union: HashSet::new(),
+            dirty: false,
+        }
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Record one decode step's full selection (all layers/heads).
+    pub fn record_step(&mut self, items: Vec<SelItem>) {
+        self.history.push_back(items);
+        while self.history.len() > self.window {
+            self.history.pop_front();
+        }
+        self.dirty = true;
+    }
+
+    fn rebuild(&mut self) {
+        if self.dirty {
+            self.union.clear();
+            for step in &self.history {
+                self.union.extend(step.iter().copied());
+            }
+            self.dirty = false;
+        }
+    }
+
+    /// Working-set size in blocks (union over the window).
+    pub fn ws_blocks(&mut self) -> usize {
+        self.rebuild();
+        self.union.len()
+    }
+
+    /// Working-set bytes given the per-head block size.
+    pub fn ws_bytes(&mut self, block_bytes: usize) -> usize {
+        self.ws_blocks() * block_bytes
+    }
+
+    /// Overlap ratio between the last recorded step and the union of the
+    /// `w` steps before it (the Fig. 8 measurement).
+    pub fn last_overlap(&self, w: usize) -> Option<f64> {
+        if self.history.len() < 2 {
+            return None;
+        }
+        let cur = self.history.back().unwrap();
+        if cur.is_empty() {
+            return None;
+        }
+        let mut prev: HashSet<SelItem> = HashSet::new();
+        let n = self.history.len();
+        let lo = n.saturating_sub(1 + w);
+        for step in self.history.iter().skip(lo).take(n - 1 - lo) {
+            prev.extend(step.iter().copied());
+        }
+        let inter = cur.iter().filter(|i| prev.contains(*i)).count();
+        Some(inter as f64 / cur.len() as f64)
+    }
+
+    pub fn steps_recorded(&self) -> usize {
+        self.history.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn items(blocks: &[u32]) -> Vec<SelItem> {
+        blocks.iter().map(|&b| (0, 0, b)).collect()
+    }
+
+    #[test]
+    fn union_over_window() {
+        let mut t = WorkingSetTracker::new(3);
+        t.record_step(items(&[0, 1]));
+        t.record_step(items(&[1, 2]));
+        assert_eq!(t.ws_blocks(), 3);
+        t.record_step(items(&[2, 3]));
+        assert_eq!(t.ws_blocks(), 4);
+        // window slides: step {0,1} falls out
+        t.record_step(items(&[2]));
+        assert_eq!(t.ws_blocks(), 3); // {1,2,3} ∪ {2} minus {0,1}... = {1,2,3}
+    }
+
+    #[test]
+    fn ws_bytes_scales() {
+        let mut t = WorkingSetTracker::new(2);
+        t.record_step(items(&[0, 1, 2]));
+        assert_eq!(t.ws_bytes(1024), 3 * 1024);
+    }
+
+    #[test]
+    fn overlap_measures_locality() {
+        let mut t = WorkingSetTracker::new(16);
+        t.record_step(items(&[0, 1, 2, 3]));
+        t.record_step(items(&[0, 1, 2, 9]));
+        assert_eq!(t.last_overlap(1), Some(0.75));
+        // wider window can only increase overlap
+        t.record_step(items(&[3, 9]));
+        assert_eq!(t.last_overlap(1), Some(0.5)); // {0,1,2,9} ∩ {3,9}
+        assert_eq!(t.last_overlap(2), Some(1.0)); // {0..3,9} ∩ {3,9}
+    }
+
+    #[test]
+    fn prop_ws_superset_of_latest_step_and_monotone_in_window() {
+        prop::check("ws invariants", 60, |rng: &mut Rng| {
+            let w = 1 + rng.below(8);
+            let mut t = WorkingSetTracker::new(w);
+            let mut last: Vec<SelItem> = Vec::new();
+            for _ in 0..20 {
+                let n = rng.below(6);
+                last = (0..n).map(|_| (0u16, 0u16, rng.below(10) as u32)).collect();
+                t.record_step(last.clone());
+            }
+            let ws = {
+                t.rebuild();
+                t.union.clone()
+            };
+            for item in &last {
+                prop::assert_prop(ws.contains(item), "ws must contain latest step")?;
+            }
+            prop::assert_prop(
+                t.history.len() <= w,
+                "history exceeds window",
+            )?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_overlap_monotone_in_window() {
+        prop::check("overlap monotone", 40, |rng: &mut Rng| {
+            let mut t = WorkingSetTracker::new(16);
+            for _ in 0..10 {
+                let n = 1 + rng.below(5);
+                t.record_step((0..n).map(|_| (0, 0, rng.below(12) as u32)).collect());
+            }
+            let mut prev = 0.0;
+            for w in 1..=8 {
+                if let Some(o) = t.last_overlap(w) {
+                    prop::assert_prop(o + 1e-12 >= prev, "overlap decreased with window")?;
+                    prev = o;
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,73 @@
+//! Minimal benchmarking harness (criterion is not vendored offline).
+//!
+//! Warm-up + timed batches with mean/p50/p99 reporting; used by the
+//! `cargo bench` targets (all `harness = false`).
+
+use std::time::Instant;
+
+use super::stats::{fmt_duration, Series};
+
+#[derive(Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  p50 {:>12}  p99 {:>12}  ({} iters)",
+            self.name,
+            fmt_duration(self.mean_s),
+            fmt_duration(self.p50_s),
+            fmt_duration(self.p99_s),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly for ~`budget_s` seconds (after `warmup` iterations)
+/// and report per-iteration timing.
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, warmup: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Series::new();
+    let start = Instant::now();
+    let mut iters = 0usize;
+    while start.elapsed().as_secs_f64() < budget_s || iters < 10 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        iters += 1;
+        if iters >= 1_000_000 {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: samples.mean(),
+        p50_s: samples.p50(),
+        p99_s: samples.p99(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", 0.02, 2, || {
+            std::hint::black_box((0..100).sum::<usize>());
+        });
+        assert!(r.iters >= 10);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p99_s >= r.p50_s);
+        assert!(r.line().contains("noop-ish"));
+    }
+}

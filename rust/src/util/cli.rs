@@ -1,0 +1,103 @@
+//! Minimal flag-style CLI parser for the launcher and examples.
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and free
+//! positional arguments. The launcher (`main.rs`) layers subcommands on
+//! top of this.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_kinds() {
+        // NOTE: a bare `--flag` followed by a non-flag token consumes it as
+        // a value; boolean flags therefore go last or use `--flag=true`.
+        let a = parse(&["serve", "pos2", "--rate", "0.5", "--name=x", "--verbose"]);
+        assert_eq!(a.positional, vec!["serve", "pos2"]);
+        assert_eq!(a.f64("rate", 0.0), 0.5);
+        assert_eq!(a.get("name"), Some("x"));
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("missing"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.usize("n", 3), 3);
+        assert_eq!(a.get_or("mode", "sim"), "sim");
+    }
+
+    #[test]
+    fn flag_before_flag_is_boolean() {
+        let a = parse(&["--a", "--b", "v"]);
+        assert!(a.bool("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

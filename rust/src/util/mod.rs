@@ -1,0 +1,20 @@
+//! Self-contained utility substrates.
+//!
+//! This repo builds fully offline against the vendored crate set of the
+//! xla example (no serde / clap / rand / criterion / proptest), so the
+//! small pieces those crates would normally provide are implemented here:
+//!
+//! - [`json`]: minimal JSON parser/serializer (manifests, goldens, configs)
+//! - [`rng`]: splitmix/PCG PRNG + exponential/Poisson sampling (workloads)
+//! - [`stats`]: mean/percentile/throughput summaries (metrics, benches)
+//! - [`cli`]: flag-style argument parser (launcher)
+//! - [`threadpool`]: fixed worker pool (FlashD2H scatter workers)
+//! - [`prop`]: mini property-test harness (invariant tests)
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,83 @@
+//! Mini property-based testing harness (proptest is not vendored).
+//!
+//! `check` runs a property over many seeded random cases and, on failure,
+//! reports the seed so the case replays deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath in this offline image)
+//! use sparseserve::util::{prop, rng::Rng};
+//! prop::check("sum commutes", 100, |rng: &mut Rng| {
+//!     let (a, b) = (rng.below(1000), rng.below(1000));
+//!     prop::assert_prop(a + b == b + a, "a+b != b+a")
+//! });
+//! ```
+
+use super::rng::Rng;
+
+pub type PropResult = Result<(), String>;
+
+/// Assert helper returning a `PropResult`.
+pub fn assert_prop(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Assert equality with a formatted message.
+pub fn assert_eq_prop<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+/// Run `cases` random instances of a property. Panics (failing the test)
+/// with the offending seed on the first violated case.
+pub fn check<F: FnMut(&mut Rng) -> PropResult>(name: &str, cases: u64, mut property: F) {
+    // Base seed is overridable for replaying failures.
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}; \
+                 replay with PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 50, |rng| {
+            let x = rng.below(100);
+            assert_prop(x < 100, "below out of range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn failing_property_reports_seed() {
+        check("must fail", 10, |rng| {
+            assert_prop(rng.below(10) < 5, "sometimes >= 5")
+        });
+    }
+
+    #[test]
+    fn assert_eq_prop_formats() {
+        assert!(assert_eq_prop(1, 1, "eq").is_ok());
+        let err = assert_eq_prop(1, 2, "eq").unwrap_err();
+        assert!(err.contains("1") && err.contains("2"));
+    }
+}

@@ -1,0 +1,141 @@
+//! End-to-end serving on the REAL backend: multiple concurrent requests,
+//! hybrid batches, working-set control, plus the threaded coordinator.
+
+use std::sync::Arc;
+
+use sparseserve::config::ServingConfig;
+use sparseserve::coordinator::Server;
+use sparseserve::engine::{Engine, PjrtBackend};
+use sparseserve::runtime::Runtime;
+use sparseserve::scheduler::Scheduler;
+use sparseserve::workload::{generate_with_tokens, WorkloadSpec};
+
+fn artifacts_ready() -> bool {
+    Runtime::default_dir("tiny-llm").join("manifest.json").exists()
+}
+
+fn tiny_cfg(spec: &sparseserve::config::ModelSpec) -> ServingConfig {
+    let mut cfg = ServingConfig::sparseserve(256, 64, spec.n_layers);
+    cfg.max_inject_tokens = spec.max_ctx * spec.n_layers;
+    cfg.t_max = 512;
+    cfg
+}
+
+#[test]
+fn serve_trace_on_real_backend() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Arc::new(Runtime::load(Runtime::default_dir("tiny-llm")).unwrap());
+    let spec = rt.manifest.model.clone();
+    let cfg = tiny_cfg(&spec);
+    let hbm = 8 << 20;
+    let backend = PjrtBackend::new(rt.clone(), cfg.clone(), hbm, 512 << 20);
+    let sched = Scheduler::new(cfg, spec.clone(), hbm);
+    let engine = Engine::new(sched, Box::new(backend));
+
+    let wl = WorkloadSpec { max_prompt: 200, max_output: 6, prompt_scale: 200.0 / 32_768.0, output_scale: 0.05, rate_rps: 50.0, seed: 3 };
+    let trace = generate_with_tokens(&wl, 5, 1, spec.vocab);
+    let expect_tokens: usize = trace.iter().map(|r| r.max_new_tokens).sum();
+
+    let report = engine.run_trace(trace, 1e6).unwrap();
+    assert_eq!(report.metrics.requests_finished, 5);
+    assert_eq!(report.metrics.tokens_generated, expect_tokens);
+    assert!(report.metrics.ttft.len() == 5);
+    // every request produced in-vocab tokens
+    for r in report.requests.values() {
+        assert!(r.is_done());
+        assert!(r.generated.iter().all(|&t| (0..spec.vocab as i32).contains(&t)));
+        assert_eq!(r.generated.len(), r.max_new_tokens);
+    }
+}
+
+#[test]
+fn decode_batching_produces_same_tokens_as_sequential() {
+    // Batching must not change greedy outputs: run two identical prompts
+    // concurrently and compare against a solo run.
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Arc::new(Runtime::load(Runtime::default_dir("tiny-llm")).unwrap());
+    let spec = rt.manifest.model.clone();
+    let prompt: Vec<i32> = (0..40).map(|i| i * 7 % spec.vocab as i32).collect();
+
+    let run = |prompts: Vec<Vec<i32>>| -> Vec<Vec<i32>> {
+        let cfg = tiny_cfg(&spec);
+        let hbm = 8 << 20;
+        let backend = PjrtBackend::new(rt.clone(), cfg.clone(), hbm, 512 << 20);
+        let sched = Scheduler::new(cfg, spec.clone(), hbm);
+        let engine = Engine::new(sched, Box::new(backend));
+        let trace: Vec<_> = prompts
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| sparseserve::scheduler::Request::with_prompt(i as u32 + 1, p, 5, 0.0))
+            .collect();
+        let report = engine.run_trace(trace, 1e6).unwrap();
+        let mut out: Vec<(u32, Vec<i32>)> = report
+            .requests
+            .into_iter()
+            .map(|(id, r)| (id, r.generated))
+            .collect();
+        out.sort_by_key(|(id, _)| *id);
+        out.into_iter().map(|(_, g)| g).collect()
+    };
+
+    let solo = run(vec![prompt.clone()]);
+    let duo = run(vec![prompt.clone(), prompt.clone()]);
+    assert_eq!(duo[0], solo[0], "batched decode diverged from solo");
+    assert_eq!(duo[1], solo[0], "second batched request diverged");
+}
+
+#[test]
+fn coordinator_server_streams_tokens() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let server = Server::start(|| {
+        let rt = Arc::new(Runtime::load(Runtime::default_dir("tiny-llm"))?);
+        let spec = rt.manifest.model.clone();
+        let cfg = tiny_cfg(&spec);
+        let hbm = 8 << 20;
+        let backend = PjrtBackend::new(rt, cfg.clone(), hbm, 512 << 20);
+        let sched = Scheduler::new(cfg, spec, hbm);
+        Ok((sched, Box::new(backend) as Box<dyn sparseserve::engine::Backend>))
+    });
+
+    let h1 = server.submit((0..30).map(|i| i % 250).collect(), 4);
+    let h2 = server.submit((0..50).map(|i| (i * 3) % 250).collect(), 3);
+    let t1 = h1.collect_tokens().expect("stream 1");
+    let t2 = h2.collect_tokens().expect("stream 2");
+    assert_eq!(t1.len(), 4);
+    assert_eq!(t2.len(), 3);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn mixed_buffer_execution_matches_literal_path() {
+    // Device-resident weight buffers (§Perf) must be reusable across
+    // executions and numerically identical to the literal path.
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    use sparseserve::runtime::{HostTensor, MixedInput};
+    let rt = Runtime::load(Runtime::default_dir("tiny-llm")).unwrap();
+    let toks = HostTensor::i32(vec![1], vec![42]);
+    let lit = rt
+        .execute("embed_1", &[&toks, rt.weights.get("embedding")])
+        .unwrap();
+    for _ in 0..3 {
+        let mixed = rt
+            .execute_mixed(
+                "embed_1",
+                &[MixedInput::Tensor(&toks), MixedInput::Weight("embedding")],
+            )
+            .unwrap();
+        assert_eq!(mixed[0], lit[0]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Shape-level validation of the paper-scale simulator: the qualitative
+//! claims behind each figure must hold before the benches print them.
+
+use std::collections::HashMap;
+
+use sparseserve::config::{HardwareSpec, ModelSpec, ServingConfig};
+use sparseserve::engine::{Backend, Engine, SimBackend};
+use sparseserve::scheduler::{Batch, Phase, PrefillWork, Request, Scheduler};
+use sparseserve::workload::{generate, WorkloadSpec};
+
+fn lwm() -> (ModelSpec, HardwareSpec) {
+    (ModelSpec::lwm_7b(), HardwareSpec::a100_40gb())
+}
+
+/// Fixed-batch decode throughput + loads/iter (the Fig. 1 experiment:
+/// offloaded DSA serving WITHOUT batch size control).
+fn fixed_batch_decode(cfg: ServingConfig, batch_size: usize, ctx: usize, iters: usize) -> (f64, f64) {
+    let (spec, hw) = lwm();
+    let mut b = SimBackend::new(cfg, spec, hw);
+    let mut requests = HashMap::new();
+    for id in 0..batch_size as u32 {
+        let mut r = Request::new(id, ctx, 1024, 0.0);
+        r.phase = Phase::Prefill;
+        b.register(&r).unwrap();
+        requests.insert(id, r);
+        let batch = Batch {
+            decodes: vec![],
+            prefill: Some(PrefillWork::Chunk { req: id, start: 0, len: ctx, is_last: true }),
+        };
+        b.run_batch(&batch, &requests).unwrap();
+        requests.get_mut(&id).unwrap().phase = Phase::Decode;
+    }
+    let batch = Batch { decodes: (0..batch_size as u32).collect(), prefill: None };
+    // warm-up to steady state, then measure
+    for _ in 0..10 {
+        b.run_batch(&batch, &requests).unwrap();
+    }
+    let mut time = 0.0;
+    let mut loads = 0usize;
+    for _ in 0..iters {
+        let out = b.run_batch(&batch, &requests).unwrap();
+        time += out.iter_time_s;
+        loads += out.blocks_loaded;
+    }
+    let throughput = (batch_size * iters) as f64 / time;
+    (throughput, loads as f64 / iters as f64)
+}
+
+#[test]
+fn fig1_throughput_peaks_then_declines_with_batch_size() {
+    // SparseServe-style offloaded serving with fast transfers but NO batch
+    // size control: batching helps until the aggregate working set
+    // outgrows the HBM cache, then loads blow up and throughput collapses.
+    let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
+    cfg.ws_batch_control = false;
+    cfg.r_max = 64;
+    let ctx = 31_000;
+    let (t2, l2) = fixed_batch_decode(cfg.clone(), 2, ctx, 30);
+    let (t8, l8) = fixed_batch_decode(cfg.clone(), 8, ctx, 30);
+    let (t32, l32) = fixed_batch_decode(cfg.clone(), 32, ctx, 30);
+    assert!(t8 > 1.5 * t2, "batching must help initially: {t2} -> {t8}");
+    assert!(t32 < t8, "oversized batches must thrash: {t8} -> {t32}");
+    assert!(
+        l32 > 10.0 * (l8 + 1.0),
+        "loads must blow up (paper: 21x): {l2} {l8} {l32}"
+    );
+}
+
+fn run_system(cfg: ServingConfig, rate: f64, n: usize) -> sparseserve::metrics::RunMetrics {
+    let (spec, hw) = lwm();
+    let backend = SimBackend::new(cfg.clone(), spec.clone(), hw.clone());
+    let sched = Scheduler::new(cfg, spec, hw.hbm_kv_bytes);
+    let engine = Engine::new(sched, Box::new(backend));
+    let trace = generate(&WorkloadSpec::paper_lwm(rate, 11), n, 0);
+    engine.run_trace(trace, 1e7).unwrap().metrics
+}
+
+#[test]
+fn fig10_11_system_ordering_at_high_rate() {
+    let n = 30;
+    let rate = 0.25;
+    let v = run_system(ServingConfig::vllm(2048), rate, n);
+    let s = run_system(ServingConfig::vllm_s(2048, 2048), rate, n);
+    let ss = run_system(ServingConfig::sparseserve(2048, 2048, 32), rate, n);
+
+    // Fig. 10: vLLM queues explode; SparseServe keeps TTFT low
+    assert!(
+        ss.ttft.mean() < v.ttft.mean() / 2.0,
+        "SparseServe TTFT {} must be well below vLLM {}",
+        ss.ttft.mean(),
+        v.ttft.mean()
+    );
+    // Fig. 11: throughput ordering SparseServe >= vLLM-S >= vLLM (roughly)
+    assert!(
+        ss.throughput() > 1.2 * v.throughput(),
+        "{} vs {}",
+        ss.throughput(),
+        v.throughput()
+    );
+    assert!(s.throughput() >= v.throughput() * 0.95);
+}
+
+#[test]
+fn fig10_vllm_so_collapses_at_high_rate() {
+    // Paper: at high rates vLLM-SO (naive memcpy offloading) becomes worse
+    // than both vLLM and vLLM-S due to loading latency.
+    let n = 20;
+    let rate = 0.25;
+    let so = run_system(ServingConfig::vllm_so(2048, 2048), rate, n);
+    let ss = run_system(ServingConfig::sparseserve(2048, 2048, 32), rate, n);
+    assert!(
+        so.tbt.mean() > 2.0 * ss.tbt.mean(),
+        "vLLM-SO TBT {} must be far above SparseServe {}",
+        so.tbt.mean(),
+        ss.tbt.mean()
+    );
+}
+
+#[test]
+fn fig12_tbt_sparseserve_close_to_vllm() {
+    // moderate rate where vLLM still functions
+    let v = run_system(ServingConfig::vllm(2048), 0.05, 16);
+    let ss = run_system(ServingConfig::sparseserve(2048, 2048, 32), 0.05, 16);
+    // paper: SparseServe TBT within ~20% of vLLM (slightly higher is OK)
+    assert!(
+        ss.tbt.mean() < v.tbt.mean() * 1.6,
+        "SparseServe TBT {} vs vLLM {}",
+        ss.tbt.mean(),
+        v.tbt.mean()
+    );
+}
+
+#[test]
+fn fig15_ws_control_cuts_loads_at_high_rate() {
+    let mut with = ServingConfig::sparseserve(2048, 2048, 32);
+    with.r_max = 64;
+    let mut without = with.clone();
+    without.ws_batch_control = false;
+
+    let m_with = run_system(with, 0.4, 48);
+    let m_without = run_system(without, 0.4, 48);
+    let loads_with = m_with.blocks_loaded_per_iter.mean();
+    let loads_without = m_without.blocks_loaded_per_iter.mean();
+    assert!(
+        loads_without > 2.0 * (loads_with + 1.0),
+        "WS control must cut loads: {loads_without} vs {loads_with}"
+    );
+    assert!(m_with.throughput() >= m_without.throughput() * 0.95);
+}
+
+#[test]
+fn fig16a_layer_segmented_lowers_ttft_at_high_rate() {
+    let ls = ServingConfig::sparseserve(2048, 2048, 32);
+    let mut chunked = ls.clone();
+    chunked.prefill_mode = sparseserve::config::PrefillMode::Chunked;
+
+    let m_ls = run_system(ls, 0.25, 30);
+    let m_ch = run_system(chunked, 0.25, 30);
+    assert!(
+        m_ls.ttft.mean() < m_ch.ttft.mean(),
+        "layer-segmented TTFT {} must beat chunked {}",
+        m_ls.ttft.mean(),
+        m_ch.ttft.mean()
+    );
+}
+
+#[test]
+fn fig13_full_system_beats_vllm_when_saturated() {
+    // At a saturating rate the full ladder must clearly out-serve vLLM
+    // (the bench does the true goodput search; this is the smoke check).
+    let rate = 0.4;
+    let n = 36;
+    let ladder = sparseserve::baselines::ablation_ladder(2048, 2048, 32);
+    let base = run_system(ladder[0].cfg.clone(), rate, n).throughput();
+    let full = run_system(ladder[5].cfg.clone(), rate, n).throughput();
+    assert!(
+        full > 1.5 * base,
+        "full SparseServe {full} must clearly beat vLLM {base}"
+    );
+}
