@@ -1,5 +1,6 @@
 //! Quickstart: bring up the SparseServe coordinator on the real PJRT
-//! backend and stream tokens for a couple of prompts.
+//! backend, stream tokens for a couple of prompts, and exercise the
+//! request lifecycle (priorities, timing report, cancellation).
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
@@ -7,7 +8,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 use sparseserve::config::ServingConfig;
-use sparseserve::coordinator::Server;
+use sparseserve::coordinator::{Server, SubmitRequest};
 use sparseserve::engine::PjrtBackend;
 use sparseserve::figures::real::demo_prompt;
 use sparseserve::runtime::Runtime;
@@ -28,16 +29,31 @@ fn main() -> Result<()> {
         Ok((sched, Box::new(backend) as _))
     });
 
-    println!("submitting two prompts...");
-    let h1 = server.submit(demo_prompt(120, 256, 1), 8);
-    let h2 = server.submit(demo_prompt(400, 256, 2), 8);
+    println!("submitting two prompts (one interactive, one batch)...");
+    let h1 = server.submit(
+        SubmitRequest::new(demo_prompt(120, 256, 1))
+            .max_new(8)
+            .interactive()
+            .ttft_slo(5.0),
+    );
+    let h2 = server.submit(SubmitRequest::new(demo_prompt(400, 256, 2)).max_new(8));
+    // a long request we abandon immediately: its KV state is freed
+    let h3 = server.submit(SubmitRequest::new(demo_prompt(200, 256, 3)).max_new(512));
+    server.cancel(h3.id);
 
-    let t1 = h1.collect_tokens().map_err(|e| anyhow::anyhow!(e))?;
-    let t2 = h2.collect_tokens().map_err(|e| anyhow::anyhow!(e))?;
+    let (t1, timing1) = h1.collect()?;
+    let (t2, timing2) = h2.collect()?;
     println!("request 1 -> {t1:?}");
+    println!("  ttft {:.3}s, mean tbt {:.4}s", timing1.ttft_s.unwrap_or(0.0), timing1.tbt_mean_s);
     println!("request 2 -> {t2:?}");
+    println!("  ttft {:.3}s, mean tbt {:.4}s", timing2.ttft_s.unwrap_or(0.0), timing2.tbt_mean_s);
+    match h3.collect() {
+        Err(e) => println!("request 3 -> cancelled as expected: {e}"),
+        Ok((t, _)) => println!("request 3 -> finished before cancel: {t:?}"),
+    }
 
-    server.shutdown()?;
+    let metrics = server.shutdown()?;
+    println!("run metrics: {}", metrics.summary());
     println!("quickstart OK");
     Ok(())
 }

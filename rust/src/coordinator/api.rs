@@ -1,35 +1,55 @@
 //! Client-facing request/response types.
+//!
+//! Submission is expressed with the [`SubmitRequest`] builder
+//! (re-exported here); results stream back as [`StreamEvent`]s and
+//! failures are the typed [`ServeError`] taxonomy.
 
 use std::sync::mpsc::Receiver;
 
+pub use crate::engine::{ServeError, SubmitRequest};
+use crate::memory::ReqId;
+pub use crate::scheduler::RequestTiming;
+
 /// Events streamed back to a submitting client.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub enum StreamEvent {
-    /// A generated token (first one marks end of prefill).
+    /// A generated token (the first one marks end of prefill). `index`
+    /// counts actually emitted tokens, starting at 0.
     Token { token: i32, index: usize },
-    /// Generation finished; total tokens produced.
-    Done { n_tokens: usize },
-    /// The request failed.
-    Error(String),
+    /// Generation finished, with the request's timing summary
+    /// (`n_tokens` counts every produced token, `ttft_s` / `tbt_mean_s`
+    /// are on the server's wall clock).
+    Done { timing: RequestTiming },
+    /// The request failed (cancelled, backend failure, backpressure, …).
+    Error(ServeError),
 }
 
-/// Handle returned on submit: stream of events for one request.
+/// Handle returned on submit: stream of events for one request. Pass
+/// [`Self::id`] to `Server::cancel` to abort the request.
 pub struct SubmitHandle {
-    pub id: u32,
+    pub id: ReqId,
     pub events: Receiver<StreamEvent>,
 }
 
 impl SubmitHandle {
     /// Drain the stream to completion, returning all tokens.
-    pub fn collect_tokens(self) -> Result<Vec<i32>, String> {
+    pub fn collect_tokens(self) -> Result<Vec<i32>, ServeError> {
+        self.collect().map(|(toks, _)| toks)
+    }
+
+    /// Drain the stream to completion, returning tokens + timing.
+    pub fn collect(self) -> Result<(Vec<i32>, RequestTiming), ServeError> {
         let mut toks = Vec::new();
         for ev in self.events.iter() {
             match ev {
-                StreamEvent::Token { token, .. } => toks.push(token),
-                StreamEvent::Done { .. } => return Ok(toks),
+                StreamEvent::Token { token, index } => {
+                    debug_assert_eq!(index, toks.len(), "token stream out of order");
+                    toks.push(token);
+                }
+                StreamEvent::Done { timing } => return Ok((toks, timing)),
                 StreamEvent::Error(e) => return Err(e),
             }
         }
-        Err("stream closed before Done".into())
+        Err(ServeError::Disconnected)
     }
 }

@@ -1,13 +1,17 @@
 //! The serving coordinator: a threaded front-end around the engine.
 //!
-//! `Server` owns the serving thread (scheduler + backend event loop) and
-//! exposes a submit/stream API over std channels — the std-thread
-//! equivalent of the async request loop in vLLM's router (tokio is not
-//! vendored in this offline build; the event loop is single-owner and
-//! channel-driven, so threads map 1:1).
+//! `Server` owns the serving thread (an [`crate::engine::EngineCore`]
+//! event loop) and exposes a submit/stream/cancel API over std channels —
+//! the std-thread equivalent of the async request loop in vLLM's router
+//! (tokio is not vendored in this offline build; the event loop is
+//! single-owner and channel-driven, so threads map 1:1).
+//!
+//! Requests are built with [`SubmitRequest`] (priority class, stop
+//! tokens, TTFT SLO, sparse-budget override), stream back
+//! [`StreamEvent`]s, and fail with typed [`ServeError`]s.
 
 pub mod api;
 pub mod server;
 
-pub use api::{StreamEvent, SubmitHandle};
+pub use api::{ServeError, StreamEvent, SubmitHandle, SubmitRequest};
 pub use server::Server;

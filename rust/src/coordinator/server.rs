@@ -1,10 +1,22 @@
-//! Threaded serving front-end.
+//! Threaded serving front-end: an online driver over [`EngineCore`].
 //!
 //! The engine (scheduler + backend) is constructed *inside* the serving
 //! thread by a builder closure — PJRT handles are thread-affine raw
 //! pointers and never cross threads. Clients talk to the thread through
-//! channels: submissions in, per-request token streams out.
+//! channels: submissions and cancellations in, per-request token streams
+//! out. All batch/emit/release logic lives in [`EngineCore::step`]; this
+//! file only owns the wall clock, the message pump and stream fan-out.
+//!
+//! Clock semantics: the server's serving clock is the wall clock, and
+//! `EngineCore::step` stamps emissions at `now + iter_time_s`. With the
+//! real backend `iter_time_s` is measured wall time, so timings are
+//! coherent. Driving a *modeled* backend (`SimBackend`) online mixes
+//! clocks — wall-clock arrivals plus simulated iteration times — which
+//! is fine for exercising the lifecycle (tests) but the resulting
+//! TTFT/TBT numbers are not meaningful measurements; use
+//! [`crate::engine::Engine::run_trace`] for simulated timing studies.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::thread::JoinHandle;
@@ -12,59 +24,89 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::engine::Backend;
-use crate::scheduler::{Request, Scheduler};
+use crate::engine::{Backend, EngineCore, ServeError, SubmitRequest};
+use crate::memory::ReqId;
+use crate::metrics::RunMetrics;
+use crate::scheduler::Scheduler;
 
 use super::api::{StreamEvent, SubmitHandle};
 
 struct Submission {
-    prompt: Vec<i32>,
-    max_new: usize,
-    id: u32,
+    id: ReqId,
+    sub: SubmitRequest,
     events: Sender<StreamEvent>,
 }
 
 enum Msg {
     Submit(Submission),
+    Cancel(ReqId),
     Shutdown,
 }
 
 pub struct Server {
     tx: Sender<Msg>,
-    handle: Option<JoinHandle<Result<()>>>,
+    handle: Option<JoinHandle<Result<RunMetrics>>>,
     next_id: AtomicU32,
 }
 
 impl Server {
-    /// Start the serving thread. `build` constructs the scheduler and
-    /// backend on that thread (PJRT state stays thread-local).
+    /// Start the serving thread with an unbounded admission queue.
+    /// `build` constructs the scheduler and backend on that thread
+    /// (PJRT state stays thread-local).
     pub fn start<F>(build: F) -> Self
+    where
+        F: FnOnce() -> Result<(Scheduler, Box<dyn Backend>)> + Send + 'static,
+    {
+        Self::start_with(None, build)
+    }
+
+    /// Start with an admission-queue cap: submissions that would exceed
+    /// `cap` waiting requests fail fast with `ServeError::QueueFull`.
+    pub fn start_with<F>(queue_cap: Option<usize>, build: F) -> Self
     where
         F: FnOnce() -> Result<(Scheduler, Box<dyn Backend>)> + Send + 'static,
     {
         let (tx, rx) = channel::<Msg>();
         let handle = std::thread::Builder::new()
             .name("sparseserve-engine".into())
-            .spawn(move || -> Result<()> {
-                let (mut sched, mut backend) = build()?;
+            .spawn(move || -> Result<RunMetrics> {
+                let (sched, backend) = build()?;
+                // online service runs indefinitely: prune completed
+                // request records instead of holding them for a report
+                let mut core = EngineCore::new(sched, backend).retain_finished(false);
+                if let Some(cap) = queue_cap {
+                    core = core.with_queue_cap(cap);
+                }
                 let start = Instant::now();
-                let mut streams: std::collections::HashMap<u32, Sender<StreamEvent>> =
-                    Default::default();
-                let mut emitted: std::collections::HashMap<u32, usize> = Default::default();
+                let mut streams: HashMap<ReqId, Sender<StreamEvent>> = Default::default();
                 let mut open = true;
+                // consecutive no-progress iterations (work pending, empty plan)
+                let mut stalled = 0u32;
 
-                while open || sched.has_work() {
-                    // drain the submission channel (block briefly when idle)
+                while open || core.has_work() {
+                    // drain the control channel (block briefly when idle)
                     loop {
-                        let msg = if sched.has_work() {
+                        // all senders gone (Server dropped without
+                        // shutdown) => finish in-flight work and exit
+                        // instead of spinning on a dead channel
+                        use std::sync::mpsc::{RecvTimeoutError, TryRecvError};
+                        let msg = if core.has_work() {
                             match rx.try_recv() {
                                 Ok(m) => m,
-                                Err(_) => break,
+                                Err(TryRecvError::Disconnected) => {
+                                    open = false;
+                                    break;
+                                }
+                                Err(TryRecvError::Empty) => break,
                             }
                         } else {
                             match rx.recv_timeout(Duration::from_millis(50)) {
                                 Ok(m) => m,
-                                Err(_) => break,
+                                Err(RecvTimeoutError::Disconnected) => {
+                                    open = false;
+                                    break;
+                                }
+                                Err(RecvTimeoutError::Timeout) => break,
                             }
                         };
                         match msg {
@@ -72,87 +114,139 @@ impl Server {
                                 open = false;
                                 break;
                             }
-                            Msg::Submit(sub) => {
+                            Msg::Cancel(id) => {
+                                if core.cancel(id) {
+                                    if let Some(s) = streams.remove(&id) {
+                                        let _ = s.send(StreamEvent::Error(ServeError::Cancelled));
+                                    }
+                                }
+                            }
+                            Msg::Submit(s) => {
                                 let now = start.elapsed().as_secs_f64();
-                                let req =
-                                    Request::with_prompt(sub.id, sub.prompt, sub.max_new, now);
-                                backend.register(&req)?;
-                                streams.insert(sub.id, sub.events);
-                                emitted.insert(sub.id, 0);
-                                sched.submit(req);
+                                match core.submit_with_id(s.id, s.sub, now) {
+                                    Ok(()) => {
+                                        streams.insert(s.id, s.events);
+                                    }
+                                    Err(e) => {
+                                        let _ = s.events.send(StreamEvent::Error(e));
+                                    }
+                                }
                             }
                         }
                     }
-                    if !sched.has_work() {
+                    if !core.has_work() {
                         continue;
                     }
 
                     let now = start.elapsed().as_secs_f64();
-                    let mut ws = |id| backend.decode_ws_bytes(id);
-                    let batch = sched.plan(now, &mut ws);
-                    if batch.is_empty() {
+                    let outcome = match core.step(now) {
+                        Ok(o) => o,
+                        Err(e) => {
+                            // engine is dead: fail every live stream
+                            for (_, s) in streams.drain() {
+                                let _ = s.send(StreamEvent::Error(e.clone()));
+                            }
+                            return Err(anyhow::Error::new(e));
+                        }
+                    };
+                    if !outcome.ran_batch {
+                        // Work is pending but the planner produced nothing.
+                        // Two permanently-stuck shapes exist (the offline
+                        // driver bails on them; an online server must stay
+                        // up and fail only the doomed request):
+                        //  - nothing active: the head-of-queue reservation
+                        //    exceeds HBM capacity — provably permanent,
+                        //    reject immediately;
+                        //  - something active but every candidate is
+                        //    working-set-rejected (a single request's
+                        //    demand exceeds M_avl) — give it a grace
+                        //    period (a cancel could unstick it), then
+                        //    reject the prefill-slot holder (the WS hog)
+                        //    or the first stuck decode.
+                        if core.n_active() == 0 {
+                            if let Some(head) = core.sched().queued_ids().first().copied() {
+                                core.reject(head);
+                                if let Some(s) = streams.remove(&head) {
+                                    let _ = s.send(StreamEvent::Error(ServeError::rejected(
+                                        "cannot be admitted: memory demand exceeds HBM capacity",
+                                    )));
+                                }
+                                continue;
+                            }
+                        } else {
+                            stalled += 1;
+                            if stalled >= 1000 {
+                                stalled = 0;
+                                let victim = core
+                                    .sched()
+                                    .prefilling_id()
+                                    .or_else(|| core.sched().decoding().first().copied());
+                                if let Some(v) = victim {
+                                    core.reject(v);
+                                    if let Some(s) = streams.remove(&v) {
+                                        let _ = s.send(StreamEvent::Error(ServeError::Evicted {
+                                            reason: "working set exceeds available HBM".into(),
+                                        }));
+                                    }
+                                    continue;
+                                }
+                            }
+                        }
                         std::thread::sleep(Duration::from_millis(1));
                         continue;
                     }
-                    let outcome = match backend.run_batch(&batch, &sched.requests) {
-                        Ok(o) => o,
-                        Err(e) => {
-                            // fail every involved request
-                            for id in batch
-                                .decodes
-                                .iter()
-                                .copied()
-                                .chain(batch.prefill.iter().map(|w| w.req()))
-                            {
-                                if let Some(s) = streams.remove(&id) {
-                                    let _ = s.send(StreamEvent::Error(e.to_string()));
-                                }
+                    stalled = 0;
+                    for ev in &outcome.emitted {
+                        // prefill-only steps carry no payload token; only
+                        // actually emitted tokens reach the stream (and
+                        // only they advance `index`)
+                        if let Some(tok) = ev.token {
+                            if let Some(s) = streams.get(&ev.req) {
+                                let _ = s.send(StreamEvent::Token { token: tok, index: ev.index });
                             }
-                            return Err(e);
                         }
-                    };
-                    if let Some(work) = &batch.prefill {
-                        sched.advance_prefill(work);
                     }
-                    let done_at = start.elapsed().as_secs_f64();
-                    for (id, tok) in &outcome.tokens {
-                        let finished = sched.emit_token(*id, *tok, done_at);
-                        let idx = emitted.entry(*id).or_insert(0);
-                        if let (Some(stream), Some(t)) = (streams.get(id), tok) {
-                            let _ = stream.send(StreamEvent::Token { token: *t, index: *idx });
-                        }
-                        *idx += 1;
-                        if finished {
-                            backend.release(*id);
-                            if let Some(stream) = streams.remove(id) {
-                                let _ = stream.send(StreamEvent::Done { n_tokens: *idx });
-                            }
+                    for (id, timing) in &outcome.finished {
+                        if let Some(s) = streams.remove(id) {
+                            let _ = s.send(StreamEvent::Done { timing: *timing });
                         }
                     }
                 }
-                Ok(())
+                Ok(core.into_report(start.elapsed().as_secs_f64()).metrics)
             })
             .expect("spawn engine thread");
         Self { tx, handle: Some(handle), next_id: AtomicU32::new(1) }
     }
 
-    /// Submit a prompt; returns a token stream handle.
-    pub fn submit(&self, prompt: Vec<i32>, max_new: usize) -> SubmitHandle {
+    /// Submit a request; returns a token stream handle. If the engine
+    /// thread already exited (failed bring-up or a fatal backend error),
+    /// the stream yields `ServeError::Disconnected` instead of panicking.
+    pub fn submit(&self, sub: SubmitRequest) -> SubmitHandle {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let (tx, rx) = channel();
-        self.tx
-            .send(Msg::Submit(Submission { prompt, max_new, id, events: tx }))
-            .expect("engine thread alive");
+        if self
+            .tx
+            .send(Msg::Submit(Submission { id, sub, events: tx.clone() }))
+            .is_err()
+        {
+            let _ = tx.send(StreamEvent::Error(ServeError::Disconnected));
+        }
         SubmitHandle { id, events: rx }
     }
 
-    /// Finish in-flight work and stop the engine thread.
-    pub fn shutdown(mut self) -> Result<()> {
+    /// Cancel an in-flight request. Its stream receives
+    /// `StreamEvent::Error(ServeError::Cancelled)` and its KV state is
+    /// released; a no-op if the request already finished.
+    pub fn cancel(&self, id: ReqId) {
+        let _ = self.tx.send(Msg::Cancel(id));
+    }
+
+    /// Finish in-flight work, stop the engine thread and return the
+    /// run's aggregated serving metrics.
+    pub fn shutdown(mut self) -> Result<RunMetrics> {
         let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            h.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))??;
-        }
-        Ok(())
+        let h = self.handle.take().expect("shutdown called once");
+        h.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))?
     }
 }
 

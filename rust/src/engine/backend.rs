@@ -5,9 +5,12 @@ use anyhow::Result;
 use crate::memory::ReqId;
 use crate::scheduler::{Batch, Request};
 
-/// Result of executing one hybrid batch.
+/// Result of executing one hybrid batch on a backend.
+///
+/// (The engine-level result of one `EngineCore::step` — token events,
+/// finished requests — is [`crate::engine::StepOutcome`].)
 #[derive(Debug, Clone, Default)]
-pub struct StepOutcome {
+pub struct BatchOutcome {
     /// Iteration latency on the serving clock, seconds (modeled for the
     /// simulator, measured for the real backend).
     pub iter_time_s: f64,
@@ -22,11 +25,24 @@ pub struct StepOutcome {
     pub save_time_s: f64,
 }
 
+/// KV-memory occupancy snapshot (request lifecycle observability: tests
+/// assert cancellation actually frees blocks through these numbers).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemStats {
+    /// HBM bytes currently holding KV blocks (cache population with
+    /// offloading; every stored block without).
+    pub hbm_bytes_used: usize,
+    /// DRAM bytes currently holding KV blocks.
+    pub dram_bytes_used: usize,
+    /// Requests with registered (live) KV state.
+    pub n_registered: usize,
+}
+
 pub trait Backend {
     /// Called when a request is admitted (allocate KV state).
     fn register(&mut self, req: &Request) -> Result<()>;
 
-    /// Called when a request finishes or is aborted (free KV state).
+    /// Called when a request finishes or is cancelled (free KV state).
     fn release(&mut self, req: ReqId);
 
     /// Execute one hybrid batch. `requests` gives access to prompt tokens
@@ -35,10 +51,13 @@ pub trait Backend {
         &mut self,
         batch: &Batch,
         requests: &std::collections::HashMap<ReqId, Request>,
-    ) -> Result<StepOutcome>;
+    ) -> Result<BatchOutcome>;
 
     /// Decode working-set estimate in bytes (Alg. 1 input).
     fn decode_ws_bytes(&mut self, req: ReqId) -> usize;
+
+    /// KV-memory occupancy (HBM/DRAM bytes, live requests).
+    fn mem_stats(&self) -> MemStats;
 
     /// Human-readable backend name.
     fn name(&self) -> &'static str;

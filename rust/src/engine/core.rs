@@ -1,0 +1,532 @@
+//! `EngineCore`: the single per-iteration serving engine.
+//!
+//! Owns the scheduler + backend pair and the one true
+//! plan → run_batch → advance_prefill → emit → release sequence. Both
+//! serving front-ends are thin drivers over it:
+//!
+//! - [`crate::engine::Engine::run_trace`] advances a virtual clock by
+//!   each step's iteration time (offline trace replay);
+//! - [`crate::coordinator::Server`] calls [`EngineCore::step`] on a
+//!   wall-clock loop and fans token events out to client streams.
+//!
+//! The request lifecycle is explicit: [`SubmitRequest`] carries
+//! per-request parameters (max tokens, stop tokens, priority class,
+//! TTFT SLO, sparse-budget override), [`EngineCore::cancel`] frees KV
+//! state mid-flight, and failures surface as typed
+//! [`ServeError`](super::ServeError)s.
+
+use crate::memory::ReqId;
+use crate::metrics::RunMetrics;
+use crate::scheduler::{Priority, Request, RequestParams, RequestTiming, Scheduler};
+
+use super::backend::{Backend, MemStats};
+use super::error::ServeError;
+
+/// A request as submitted by a client: prompt + lifecycle parameters.
+/// Built with a fluent builder:
+///
+/// ```ignore
+/// let sub = SubmitRequest::new(prompt_tokens)
+///     .max_new(64)
+///     .stop_tokens(vec![EOS])
+///     .priority(Priority::Interactive)
+///     .ttft_slo(0.5)
+///     .sparse_budget(1024);
+/// ```
+#[derive(Debug, Clone)]
+pub struct SubmitRequest {
+    prompt: Vec<i32>,
+    prompt_len: usize,
+    params: RequestParams,
+}
+
+impl SubmitRequest {
+    /// A request with real prompt tokens (the PJRT path).
+    pub fn new(prompt: Vec<i32>) -> Self {
+        let prompt_len = prompt.len();
+        Self { prompt, prompt_len, params: RequestParams::default() }
+    }
+
+    /// A length-only request (the simulator path — no token ids).
+    pub fn synthetic(prompt_len: usize) -> Self {
+        Self { prompt: Vec::new(), prompt_len, params: RequestParams::default() }
+    }
+
+    pub fn max_new(mut self, n: usize) -> Self {
+        self.params.max_new_tokens = n;
+        self
+    }
+
+    pub fn stop_tokens(mut self, toks: Vec<i32>) -> Self {
+        self.params.stop_tokens = toks;
+        self
+    }
+
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.params.priority = p;
+        self
+    }
+
+    /// Shorthand for `.priority(Priority::Interactive)`.
+    pub fn interactive(self) -> Self {
+        self.priority(Priority::Interactive)
+    }
+
+    pub fn ttft_slo(mut self, seconds: f64) -> Self {
+        self.params.ttft_slo_s = Some(seconds);
+        self
+    }
+
+    /// Per-request DSA token-budget override (see
+    /// [`RequestParams::sparse_budget`]).
+    pub fn sparse_budget(mut self, tokens: usize) -> Self {
+        self.params.sparse_budget = Some(tokens);
+        self
+    }
+
+    /// Replace the whole parameter bundle at once.
+    pub fn params(mut self, p: RequestParams) -> Self {
+        self.params = p;
+        self
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    /// Materialize the scheduler-side request (id + arrival stamped by
+    /// the engine).
+    pub fn into_request(self, id: ReqId, arrival_s: f64) -> Request {
+        Request::with_params(id, self.prompt, self.prompt_len, self.params, arrival_s)
+    }
+}
+
+/// One token produced by a step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TokenEvent {
+    pub req: ReqId,
+    /// `None` under the simulator backend (it tracks counts only).
+    pub token: Option<i32>,
+    /// Index of this token within the request's *emitted* token stream
+    /// (0 for the first token; counts real tokens only when `token` is
+    /// `Some`, decode steps otherwise).
+    pub index: usize,
+}
+
+/// Result of one `EngineCore::step` call.
+#[derive(Debug, Clone, Default)]
+pub struct StepOutcome {
+    /// Iteration latency on the serving clock (0 when no batch ran).
+    pub iter_time_s: f64,
+    /// Whether a batch was actually executed. `false` means the engine
+    /// is idle or blocked on admission — the driver decides whether to
+    /// advance the clock, sleep, or bail.
+    pub ran_batch: bool,
+    /// Requests in the executed batch (decodes + prefill).
+    pub batch_requests: usize,
+    /// Token events emitted this step.
+    pub emitted: Vec<TokenEvent>,
+    /// Requests that finished this step, with their timing summary.
+    /// Their KV state has already been released.
+    pub finished: Vec<(ReqId, RequestTiming)>,
+}
+
+/// Outcome of a whole serving run (offline trace replay or an online
+/// session drained at shutdown).
+pub struct RunReport {
+    pub metrics: RunMetrics,
+    /// Request records with timing fields filled. With the default
+    /// `retain_finished(true)` this is every request the engine saw
+    /// (finished, cancelled and in-flight); with pruning enabled (the
+    /// online `Server` path) completed records were dropped as they
+    /// finished and only in-flight requests remain.
+    pub requests: std::collections::HashMap<ReqId, Request>,
+    pub iterations: u64,
+}
+
+/// The serving engine: one scheduler + one backend, driven step by step.
+pub struct EngineCore {
+    sched: Scheduler,
+    backend: Box<dyn Backend>,
+    metrics: RunMetrics,
+    /// Admission-queue capacity; `None` = unbounded.
+    queue_cap: Option<usize>,
+    /// Keep finished/cancelled request records (prompts, token ids,
+    /// timing series) until [`Self::into_report`]. Offline replay wants
+    /// them for the report; a long-running online server must prune
+    /// them or host memory grows without bound.
+    retain_finished: bool,
+    next_id: ReqId,
+}
+
+impl EngineCore {
+    pub fn new(sched: Scheduler, backend: Box<dyn Backend>) -> Self {
+        Self {
+            sched,
+            backend,
+            metrics: RunMetrics::new(),
+            queue_cap: None,
+            retain_finished: true,
+            next_id: 1,
+        }
+    }
+
+    /// Bound the admission queue: submissions beyond `cap` waiting
+    /// requests fail with [`ServeError::QueueFull`] (backpressure).
+    pub fn with_queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = Some(cap);
+        self
+    }
+
+    /// Drop finished/cancelled request records as soon as their metrics
+    /// are folded in (long-running online service; `into_report` then
+    /// only returns still-in-flight requests).
+    pub fn retain_finished(mut self, keep: bool) -> Self {
+        self.retain_finished = keep;
+        self
+    }
+
+    /// Submit with an engine-assigned id. Returns the id on success.
+    pub fn submit(&mut self, sub: SubmitRequest, now: f64) -> Result<ReqId, ServeError> {
+        let id = self.next_id;
+        self.submit_with_id(id, sub, now)?;
+        Ok(id)
+    }
+
+    /// Submit under a caller-chosen id (the coordinator hands ids out
+    /// before the engine thread sees the request).
+    pub fn submit_with_id(
+        &mut self,
+        id: ReqId,
+        sub: SubmitRequest,
+        now: f64,
+    ) -> Result<(), ServeError> {
+        self.submit_request(sub.into_request(id, now))
+    }
+
+    /// Lowest-level submit: a fully-formed request (trace replay keeps
+    /// its pre-assigned ids and arrival stamps).
+    pub fn submit_request(&mut self, req: Request) -> Result<(), ServeError> {
+        if let Some(cap) = self.queue_cap {
+            if self.sched.n_queued() >= cap {
+                return Err(ServeError::QueueFull { cap });
+            }
+        }
+        if self.sched.requests.contains_key(&req.id) {
+            return Err(ServeError::rejected(format!("duplicate request id {}", req.id)));
+        }
+        // a per-request registration failure rejects that request only —
+        // the engine itself stays usable (BackendFailed is reserved for
+        // batch-execution failures)
+        self.backend
+            .register(&req)
+            .map_err(|e| ServeError::rejected(format!("backend registration failed: {e:#}")))?;
+        self.next_id = self.next_id.max(req.id + 1);
+        self.sched.submit(req);
+        Ok(())
+    }
+
+    /// Cancel a request: drop it from the scheduler and free its KV
+    /// state. Returns false when there is nothing to cancel (unknown id
+    /// or already finished/cancelled).
+    pub fn cancel(&mut self, id: ReqId) -> bool {
+        if !self.sched.cancel(id) {
+            return false;
+        }
+        self.backend.release(id);
+        self.metrics.record_request(&self.sched.requests[&id]);
+        if !self.retain_finished {
+            self.sched.requests.remove(&id);
+        }
+        true
+    }
+
+    /// Drop a request the scheduler can never run (admission failure:
+    /// its memory demand exceeds capacity). Same state transition as
+    /// [`Self::cancel`] but accounted as a rejection, not a client
+    /// cancellation.
+    pub fn reject(&mut self, id: ReqId) -> bool {
+        if !self.sched.cancel(id) {
+            return false;
+        }
+        self.backend.release(id);
+        self.metrics.requests_rejected += 1;
+        if !self.retain_finished {
+            self.sched.requests.remove(&id);
+        }
+        true
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.sched.has_work()
+    }
+
+    pub fn n_queued(&self) -> usize {
+        self.sched.n_queued()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.sched.n_active()
+    }
+
+    /// Scheduler view (read-only introspection).
+    pub fn sched(&self) -> &Scheduler {
+        &self.sched
+    }
+
+    /// Backend KV-memory occupancy.
+    pub fn mem_stats(&self) -> MemStats {
+        self.backend.mem_stats()
+    }
+
+    /// Metrics accumulated so far (makespan is only set by
+    /// [`Self::into_report`]).
+    pub fn metrics(&self) -> &RunMetrics {
+        &self.metrics
+    }
+
+    /// Execute one iteration at serving-clock time `now`: plan a hybrid
+    /// batch, run it, advance prefill progress, emit tokens (stamped at
+    /// `now + iter_time_s`) and release finished requests.
+    ///
+    /// Never blocks. When the scheduler is idle or admission-blocked the
+    /// returned outcome has `ran_batch == false` and the driver chooses
+    /// the policy (jump the virtual clock / sleep / bail on deadlock).
+    pub fn step(&mut self, now: f64) -> Result<StepOutcome, ServeError> {
+        let mut out = StepOutcome::default();
+        if !self.sched.has_work() {
+            return Ok(out);
+        }
+
+        let backend = &mut self.backend;
+        let mut ws = |id| backend.decode_ws_bytes(id);
+        let batch = self.sched.plan(now, &mut ws);
+        if batch.is_empty() {
+            return Ok(out);
+        }
+
+        let bo = self
+            .backend
+            .run_batch(&batch, &self.sched.requests)
+            .map_err(ServeError::backend)?;
+        out.ran_batch = true;
+        out.iter_time_s = bo.iter_time_s;
+        out.batch_requests = batch.n_requests();
+        self.metrics
+            .record_iteration(bo.iter_time_s, bo.blocks_loaded, bo.load_time_s);
+
+        if let Some(work) = &batch.prefill {
+            self.sched.advance_prefill(work);
+        }
+
+        let t_emit = now + bo.iter_time_s;
+        for (id, tok) in &bo.tokens {
+            let finished = self.sched.emit_token(*id, *tok, t_emit);
+            let r = &self.sched.requests[id];
+            // Count only actually emitted tokens toward the stream index
+            // (a prefill-only step carries no payload token).
+            let index = match tok {
+                Some(_) => r.generated.len() - 1,
+                None => r.n_generated - 1,
+            };
+            out.emitted.push(TokenEvent { req: *id, token: *tok, index });
+            if finished {
+                self.backend.release(*id);
+                self.metrics.record_request(r);
+                out.finished.push((*id, r.timing()));
+                if !self.retain_finished {
+                    self.sched.requests.remove(id);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Finish the run: fold still-in-flight requests into the metrics
+    /// (their TTFT/queue delays matter), stamp the makespan and hand the
+    /// whole state back.
+    pub fn into_report(mut self, makespan_s: f64) -> RunReport {
+        for r in self.sched.requests.values() {
+            if !r.is_done() && !r.is_cancelled() {
+                self.metrics.record_request(r);
+            }
+        }
+        self.metrics.makespan_s = makespan_s;
+        RunReport {
+            metrics: self.metrics,
+            requests: std::mem::take(&mut self.sched.requests),
+            iterations: self.sched.iterations,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareSpec, ModelSpec, ServingConfig};
+    use crate::engine::SimBackend;
+
+    fn core(queue_cap: Option<usize>) -> EngineCore {
+        let cfg = ServingConfig::sparseserve(2048, 2048, 32);
+        let spec = ModelSpec::lwm_7b();
+        let hw = HardwareSpec::a100_40gb();
+        let backend = SimBackend::new(cfg.clone(), spec.clone(), hw.clone());
+        let sched = Scheduler::new(cfg, spec, hw.hbm_kv_bytes);
+        let mut c = EngineCore::new(sched, Box::new(backend));
+        if let Some(cap) = queue_cap {
+            c = c.with_queue_cap(cap);
+        }
+        c
+    }
+
+    /// Step until `pred` or panic after `max` iterations.
+    fn step_until(c: &mut EngineCore, max: usize, mut pred: impl FnMut(&EngineCore) -> bool) {
+        let mut now = 0.0;
+        for _ in 0..max {
+            if pred(c) {
+                return;
+            }
+            let out = c.step(now).unwrap();
+            assert!(out.ran_batch, "engine stalled");
+            now += out.iter_time_s;
+        }
+        panic!("predicate not reached in {max} steps");
+    }
+
+    #[test]
+    fn submit_step_finish_lifecycle() {
+        let mut c = core(None);
+        let id = c
+            .submit(SubmitRequest::synthetic(8192).max_new(3), 0.0)
+            .unwrap();
+        assert!(c.has_work());
+        let mut finished = Vec::new();
+        let mut now = 0.0;
+        for _ in 0..64 {
+            let out = c.step(now).unwrap();
+            assert!(out.ran_batch);
+            now += out.iter_time_s;
+            finished.extend(out.finished.iter().copied());
+            if !c.has_work() {
+                break;
+            }
+        }
+        assert_eq!(finished.len(), 1);
+        let (fid, timing) = finished[0];
+        assert_eq!(fid, id);
+        assert_eq!(timing.n_tokens, 3);
+        assert!(timing.ttft_s.unwrap() > 0.0);
+        let report = c.into_report(now);
+        assert_eq!(report.metrics.requests_finished, 1);
+        assert_eq!(report.metrics.tokens_generated, 3);
+    }
+
+    #[test]
+    fn queue_cap_backpressure() {
+        let mut c = core(Some(2));
+        c.submit(SubmitRequest::synthetic(1000).max_new(4), 0.0).unwrap();
+        c.submit(SubmitRequest::synthetic(1000).max_new(4), 0.0).unwrap();
+        let err = c
+            .submit(SubmitRequest::synthetic(1000).max_new(4), 0.0)
+            .unwrap_err();
+        assert!(matches!(err, ServeError::QueueFull { cap: 2 }));
+        // draining the queue re-opens admission
+        step_until(&mut c, 16, |c| c.n_queued() < 2);
+        c.submit(SubmitRequest::synthetic(1000).max_new(4), 0.1).unwrap();
+    }
+
+    #[test]
+    fn cancel_mid_decode_frees_backend_memory() {
+        let mut c = core(None);
+        let id = c
+            .submit(SubmitRequest::synthetic(8192).max_new(1000), 0.0)
+            .unwrap();
+        // reach decode and run a few iterations so HBM cache fills
+        step_until(&mut c, 64, |c| {
+            c.sched().requests[&id].n_generated >= 3
+        });
+        let before = c.mem_stats();
+        assert!(before.dram_bytes_used > 0, "decode must hold KV");
+        assert!(before.hbm_bytes_used > 0, "decode must populate the cache");
+        assert_eq!(before.n_registered, 1);
+
+        assert!(c.cancel(id));
+        let after = c.mem_stats();
+        assert_eq!(after.n_registered, 0);
+        assert_eq!(after.dram_bytes_used, 0, "cancel must free DRAM KV");
+        assert_eq!(after.hbm_bytes_used, 0, "cancel must evict HBM blocks");
+        assert!(!c.has_work());
+        assert!(!c.cancel(id), "second cancel is a no-op");
+
+        let report = c.into_report(1.0);
+        assert_eq!(report.metrics.requests_cancelled, 1);
+        assert_eq!(report.metrics.requests_finished, 0);
+    }
+
+    #[test]
+    fn cancel_queued_request_never_runs() {
+        let mut c = core(None);
+        let a = c.submit(SubmitRequest::synthetic(4096).max_new(2), 0.0).unwrap();
+        let b = c.submit(SubmitRequest::synthetic(4096).max_new(2), 0.0).unwrap();
+        assert!(c.cancel(b));
+        let mut now = 0.0;
+        while c.has_work() {
+            let out = c.step(now).unwrap();
+            assert!(out.ran_batch);
+            assert!(out.emitted.iter().all(|e| e.req != b));
+            now += out.iter_time_s;
+        }
+        let report = c.into_report(now);
+        assert!(report.requests[&a].is_done());
+        assert!(report.requests[&b].is_cancelled());
+        assert_eq!(report.requests[&b].n_generated, 0);
+    }
+
+    #[test]
+    fn interactive_preempts_queued_batch() {
+        let mut c = core(None);
+        // keep the prefill slot busy so later submissions stay queued
+        let _running = c
+            .submit(SubmitRequest::synthetic(20_000).max_new(4), 0.0)
+            .unwrap();
+        let out = c.step(0.0).unwrap();
+        assert!(out.ran_batch);
+        let batch_req = c
+            .submit(SubmitRequest::synthetic(4096).max_new(2), 0.1)
+            .unwrap();
+        let inter = c
+            .submit(
+                SubmitRequest::synthetic(4096).max_new(2).interactive(),
+                0.2,
+            )
+            .unwrap();
+        assert_eq!(c.sched().queued_ids(), vec![inter, batch_req]);
+    }
+
+    #[test]
+    fn retain_finished_false_prunes_request_state() {
+        let mut c = core(None).retain_finished(false);
+        let done = c.submit(SubmitRequest::synthetic(4096).max_new(2), 0.0).unwrap();
+        step_until(&mut c, 32, |c| !c.has_work());
+        assert!(!c.sched().requests.contains_key(&done), "finished record pruned");
+        let gone = c.submit(SubmitRequest::synthetic(4096).max_new(2), 1.0).unwrap();
+        assert!(c.cancel(gone));
+        assert!(!c.sched().requests.contains_key(&gone), "cancelled record pruned");
+        let report = c.into_report(2.0);
+        assert!(report.requests.is_empty());
+        // metrics survive the pruning
+        assert_eq!(report.metrics.requests_finished, 1);
+        assert_eq!(report.metrics.requests_cancelled, 1);
+    }
+
+    #[test]
+    fn duplicate_id_rejected() {
+        let mut c = core(None);
+        c.submit_with_id(7, SubmitRequest::synthetic(100).max_new(1), 0.0)
+            .unwrap();
+        let err = c
+            .submit_with_id(7, SubmitRequest::synthetic(100).max_new(1), 0.0)
+            .unwrap_err();
+        assert!(matches!(err, ServeError::AdmissionRejected { .. }));
+    }
+}

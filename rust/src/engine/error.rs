@@ -1,0 +1,76 @@
+//! Typed serving errors (the request-lifecycle error taxonomy).
+
+use std::fmt;
+use std::sync::Arc;
+
+/// Every way a request (or an engine step) can fail. Replaces the old
+/// stringly-typed `StreamEvent::Error(String)` so clients can branch on
+/// the failure class (retry on `QueueFull`, surface `BackendFailed`, …).
+#[derive(Debug, Clone)]
+pub enum ServeError {
+    /// The engine refused the request before admission (duplicate id,
+    /// registration failure, head-of-queue reservation that can never
+    /// fit). No tokens were produced; resubmitting unchanged will fail
+    /// again unless capacity changes.
+    AdmissionRejected { reason: String },
+    /// The request was cancelled by the client.
+    Cancelled,
+    /// The engine evicted an already-admitted request it could never
+    /// schedule (its working set exceeds available HBM). Tokens
+    /// streamed before the eviction were delivered.
+    Evicted { reason: String },
+    /// The backend failed executing a batch; the engine is no longer
+    /// usable. `source` carries the underlying failure chain.
+    BackendFailed { source: Arc<anyhow::Error> },
+    /// The admission queue is at its configured capacity; resubmit later
+    /// (client-side backpressure).
+    QueueFull { cap: usize },
+    /// The engine thread went away before the request completed.
+    Disconnected,
+}
+
+impl ServeError {
+    pub fn backend(err: anyhow::Error) -> Self {
+        ServeError::BackendFailed { source: Arc::new(err) }
+    }
+
+    pub fn rejected(reason: impl Into<String>) -> Self {
+        ServeError::AdmissionRejected { reason: reason.into() }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::AdmissionRejected { reason } => {
+                write!(f, "admission rejected: {reason}")
+            }
+            ServeError::Cancelled => write!(f, "request cancelled"),
+            ServeError::Evicted { reason } => write!(f, "request evicted: {reason}"),
+            ServeError::BackendFailed { source } => {
+                write!(f, "backend failed: {source:#}")
+            }
+            ServeError::QueueFull { cap } => {
+                write!(f, "admission queue full (cap {cap})")
+            }
+            ServeError::Disconnected => write!(f, "engine disconnected before completion"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_carry_context() {
+        let e = ServeError::backend(anyhow::anyhow!("pjrt exploded"));
+        assert!(e.to_string().contains("pjrt exploded"));
+        let q = ServeError::QueueFull { cap: 4 };
+        assert!(q.to_string().contains("cap 4"));
+        // cloneable (fans out to every involved request stream)
+        let _ = e.clone();
+    }
+}

@@ -1,5 +1,12 @@
 //! Model executor: drives batches from the scheduler through a backend.
 //!
+//! [`EngineCore`] owns the per-iteration serving logic (plan → run_batch
+//! → emit → release) plus the request lifecycle (submit / cancel /
+//! typed errors). Two thin drivers sit on top:
+//!
+//! - [`Engine::run_trace`]: offline, clock-driven trace replay;
+//! - [`crate::coordinator::Server`]: online, thread-driven streaming.
+//!
 //! Two backends share the exact same scheduler / KV-manager / DSA control
 //! logic (the paper's contribution), differing only in how a batch's
 //! compute is realized:
@@ -12,11 +19,15 @@
 //!   selection process, at LWM-7B / Llama3-8B scale.
 
 mod backend;
+mod core;
+mod error;
 mod pjrt_backend;
 mod serve_loop;
 mod sim_backend;
 
-pub use backend::{Backend, StepOutcome};
+pub use backend::{Backend, BatchOutcome, MemStats};
+pub use self::core::{EngineCore, RunReport, StepOutcome, SubmitRequest, TokenEvent};
+pub use error::ServeError;
 pub use pjrt_backend::PjrtBackend;
-pub use serve_loop::{Engine, RunReport};
+pub use serve_loop::Engine;
 pub use sim_backend::SimBackend;

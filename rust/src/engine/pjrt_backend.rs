@@ -24,7 +24,7 @@ use crate::runtime::{HostTensor, MixedInput, Runtime};
 use crate::scheduler::{Batch, PrefillWork, Request};
 use crate::sparse::{top_k_blocks_fast, WorkingSetTracker};
 
-use super::backend::{Backend, StepOutcome};
+use super::backend::{Backend, BatchOutcome, MemStats};
 
 struct RealReq {
     last_token: i32,
@@ -98,7 +98,7 @@ impl PjrtBackend {
 
     // ------------------------------------------------------------- prefill
 
-    fn run_prefill(&mut self, work: &PrefillWork, requests: &HashMap<ReqId, Request>, out: &mut StepOutcome) -> Result<()> {
+    fn run_prefill(&mut self, work: &PrefillWork, requests: &HashMap<ReqId, Request>, out: &mut BatchOutcome) -> Result<()> {
         match work {
             PrefillWork::LayerSegment { req, layer_start, layer_end, tok_start, tok_len, is_last } => {
                 let r = &requests[req];
@@ -131,7 +131,7 @@ impl PjrtBackend {
         layer_start: usize,
         layer_end: usize,
         is_last: bool,
-        out: &mut StepOutcome,
+        out: &mut BatchOutcome,
     ) -> Result<()> {
         let d = self.spec().d_model;
         let plen = req.prompt_len;
@@ -198,7 +198,7 @@ impl PjrtBackend {
         start: usize,
         len: usize,
         is_last: bool,
-        out: &mut StepOutcome,
+        out: &mut BatchOutcome,
     ) -> Result<()> {
         let spec = self.spec().clone();
         let (d, hkv, dh) = (spec.d_model, spec.n_kv_heads, spec.head_dim);
@@ -281,7 +281,7 @@ impl PjrtBackend {
     // -------------------------------------------------------------- decode
 
     /// One decode step for a group of requests (<= max decode bucket).
-    fn decode_group(&mut self, ids: &[ReqId], out: &mut StepOutcome) -> Result<()> {
+    fn decode_group(&mut self, ids: &[ReqId], out: &mut BatchOutcome) -> Result<()> {
         let spec = self.spec().clone();
         let (d, hq, hkv, dh, bs) =
             (spec.d_model, spec.n_heads, spec.n_kv_heads, spec.head_dim, spec.block_size);
@@ -461,6 +461,16 @@ impl Backend for PjrtBackend {
         self.reqs.remove(&req);
     }
 
+    fn mem_stats(&self) -> MemStats {
+        MemStats {
+            hbm_bytes_used: self.kv.hbm_bytes_used(),
+            // without offloading the DRAM pool *models* HBM storage and
+            // is already counted above — don't double-report it
+            dram_bytes_used: if self.kv.offload() { self.kv.dram_bytes_used() } else { 0 },
+            n_registered: self.reqs.len(),
+        }
+    }
+
     fn decode_ws_bytes(&mut self, req: ReqId) -> usize {
         let bb = self.kv.block_bytes();
         let spec = self.kv.spec();
@@ -490,9 +500,9 @@ impl Backend for PjrtBackend {
         &mut self,
         batch: &Batch,
         requests: &HashMap<ReqId, Request>,
-    ) -> Result<StepOutcome> {
+    ) -> Result<BatchOutcome> {
         let t0 = Instant::now();
-        let mut out = StepOutcome::default();
+        let mut out = BatchOutcome::default();
 
         if let Some(work) = &batch.prefill {
             self.run_prefill(work, requests, &mut out)?;

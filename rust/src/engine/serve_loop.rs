@@ -1,52 +1,41 @@
-//! The serving loop: arrivals -> scheduler -> backend -> metrics.
+//! Offline trace replay: a clock-driven driver over [`EngineCore`].
 //!
-//! Iteration-synchronous event loop shared by the real and simulated
-//! backends: the serving clock advances by each batch's iteration time
-//! (modeled or measured), and requests arrive according to their trace
-//! timestamps.
-
-use std::collections::HashMap;
+//! The serving clock advances by each batch's iteration time (modeled or
+//! measured) and requests arrive according to their trace timestamps.
+//! All batch/emit/release logic lives in [`EngineCore::step`] — this
+//! file only owns the virtual clock and arrival delivery.
 
 use anyhow::Result;
 
-use crate::engine::backend::Backend;
-use crate::metrics::RunMetrics;
 use crate::scheduler::{Request, Scheduler};
 
-pub struct Engine {
-    pub sched: Scheduler,
-    pub backend: Box<dyn Backend>,
-    pub clock_s: f64,
-}
+use super::backend::Backend;
+use super::core::{EngineCore, RunReport};
 
-/// Outcome of serving a trace.
-pub struct RunReport {
-    pub metrics: RunMetrics,
-    /// Finished requests (with their timing fields filled).
-    pub requests: HashMap<u32, Request>,
-    pub iterations: u64,
+pub struct Engine {
+    pub core: EngineCore,
+    pub clock_s: f64,
 }
 
 impl Engine {
     pub fn new(sched: Scheduler, backend: Box<dyn Backend>) -> Self {
-        Self { sched, backend, clock_s: 0.0 }
+        Self { core: EngineCore::new(sched, backend), clock_s: 0.0 }
     }
 
     /// Serve a whole trace to completion (or until `max_clock_s`).
     pub fn run_trace(mut self, mut trace: Vec<Request>, max_clock_s: f64) -> Result<RunReport> {
         trace.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
-        let mut metrics = RunMetrics::new();
         let mut next_arrival = 0usize;
 
         loop {
             // deliver due arrivals
             while next_arrival < trace.len() && trace[next_arrival].arrival_s <= self.clock_s {
-                let req = trace[next_arrival].clone();
-                self.backend.register(&req)?;
-                self.sched.submit(req);
+                self.core
+                    .submit_request(trace[next_arrival].clone())
+                    .map_err(anyhow::Error::new)?;
                 next_arrival += 1;
             }
-            if !self.sched.has_work() {
+            if !self.core.has_work() {
                 if next_arrival >= trace.len() {
                     break; // done
                 }
@@ -55,11 +44,8 @@ impl Engine {
                 continue;
             }
 
-            // plan + execute one hybrid batch
-            let backend = &mut self.backend;
-            let mut ws = |id| backend.decode_ws_bytes(id);
-            let batch = self.sched.plan(self.clock_s, &mut ws);
-            if batch.is_empty() {
+            let outcome = self.core.step(self.clock_s).map_err(anyhow::Error::new)?;
+            if !outcome.ran_batch {
                 // admission blocked and nothing running: wait for the next
                 // event (arrival won't help if HBM is the blocker, but a
                 // running request must exist whenever something is blocked;
@@ -71,45 +57,14 @@ impl Engine {
                 }
                 anyhow::bail!("scheduler deadlock: work pending but empty batch");
             }
-
-            let outcome = self.backend.run_batch(&batch, &self.sched.requests)?;
             self.clock_s += outcome.iter_time_s;
-            metrics.record_iteration(
-                outcome.iter_time_s,
-                outcome.blocks_loaded,
-                outcome.load_time_s,
-            );
-
-            // prefill progress
-            if let Some(work) = &batch.prefill {
-                self.sched.advance_prefill(work);
-            }
-            // token emissions
-            for (id, tok) in &outcome.tokens {
-                let finished = self.sched.emit_token(*id, *tok, self.clock_s);
-                if finished {
-                    self.backend.release(*id);
-                    metrics.record_request(&self.sched.requests[id]);
-                }
-            }
 
             if self.clock_s > max_clock_s {
                 break;
             }
         }
 
-        // account unfinished requests too (their TTFT/queue delays matter)
-        for r in self.sched.requests.values() {
-            if !r.is_done() {
-                metrics.record_request(r);
-            }
-        }
-        metrics.makespan_s = self.clock_s;
-        Ok(RunReport {
-            metrics,
-            requests: std::mem::take(&mut self.sched.requests),
-            iterations: self.sched.iterations,
-        })
+        Ok(self.core.into_report(self.clock_s))
     }
 }
 

@@ -17,13 +17,16 @@ use crate::scheduler::{Batch, PrefillWork, Request};
 use crate::sim::{CostModel, SelectionModel};
 use crate::sparse::WorkingSetTracker;
 
-use super::backend::{Backend, StepOutcome};
+use super::backend::{Backend, BatchOutcome, MemStats};
 
 struct SimReq {
     /// Tokens with stored KV.
     len: usize,
     selection: SelectionModel,
     ws: WorkingSetTracker,
+    /// DSA budget in block groups (per-request override or the config
+    /// default).
+    budget_groups: usize,
 }
 
 pub struct SimBackend {
@@ -99,12 +102,17 @@ impl Backend for SimBackend {
     }
 
     fn register(&mut self, req: &Request) -> Result<()> {
+        let budget_groups = match req.sparse_budget {
+            Some(tokens) => tokens.div_ceil(self.spec().block_size).max(1),
+            None => self.budget_groups(),
+        };
         self.reqs.insert(
             req.id,
             SimReq {
                 len: 0,
                 selection: SelectionModel::new(self.seed ^ req.id as u64),
                 ws: WorkingSetTracker::new(self.cfg.ws_window),
+                budget_groups,
             },
         );
         Ok(())
@@ -115,11 +123,35 @@ impl Backend for SimBackend {
         self.cache.remove_request(req);
     }
 
+    fn mem_stats(&self) -> MemStats {
+        let bs = self.cost.spec.block_size;
+        let kv_bytes: usize = self
+            .reqs
+            .values()
+            .map(|r| r.len.div_ceil(bs) * self.group_bytes)
+            .sum();
+        if self.cfg.offload {
+            // DRAM is home; HBM holds the LRU residency cache.
+            MemStats {
+                hbm_bytes_used: self.cache.len() * self.group_bytes,
+                dram_bytes_used: kv_bytes,
+                n_registered: self.reqs.len(),
+            }
+        } else {
+            // vLLM semantics: every stored block is pinned in HBM.
+            MemStats {
+                hbm_bytes_used: kv_bytes,
+                dram_bytes_used: 0,
+                n_registered: self.reqs.len(),
+            }
+        }
+    }
+
     fn decode_ws_bytes(&mut self, req: ReqId) -> usize {
-        let budget = self.budget_groups();
         let group_bytes = self.group_bytes;
         let spec_bs = self.spec().block_size;
         let r = self.reqs.get_mut(&req).expect("unregistered");
+        let budget = r.budget_groups;
         if !self.cfg.sparse_attention {
             // dense attention touches the whole context
             return r.len.div_ceil(spec_bs) * group_bytes;
@@ -135,10 +167,10 @@ impl Backend for SimBackend {
         &mut self,
         batch: &Batch,
         requests: &HashMap<ReqId, Request>,
-    ) -> Result<StepOutcome> {
+    ) -> Result<BatchOutcome> {
         let spec = self.spec().clone();
         let bs = spec.block_size;
-        let mut out = StepOutcome::default();
+        let mut out = BatchOutcome::default();
         let mut compute_s = 0.0;
         let mut miss_groups_total = 0usize;
 
@@ -183,7 +215,6 @@ impl Backend for SimBackend {
 
         // ---------------- decode share ----------------
         if !batch.decodes.is_empty() {
-            let budget_groups = self.budget_groups();
             let mut kv_tokens = Vec::with_capacity(batch.decodes.len());
             for &id in &batch.decodes {
                 let sparse = self.cfg.sparse_attention;
@@ -195,6 +226,7 @@ impl Backend for SimBackend {
                 if sparse {
                     let sel = {
                         let r = self.reqs.get_mut(&id).unwrap();
+                        let budget_groups = r.budget_groups;
                         r.selection.next_selection(n_sealed, budget_groups)
                     };
                     if offload {
@@ -332,6 +364,47 @@ mod tests {
         assert!(w >= w0, "w={w} w0={w0}");
         // but bounded: locality keeps it within ~3x budget
         assert!(w < 4 * w0, "w={w} w0={w0}");
+    }
+
+    #[test]
+    fn sparse_budget_override_cuts_decode_cost() {
+        let cfg = ServingConfig::sparseserve(2048, 2048, 32);
+        let mut full = mk(cfg.clone());
+        let mut small = mk(cfg);
+        let reqs_f = prefill_all(&mut full, 1, 32_000);
+        // same request, but submitted with a 256-token DSA budget override
+        let mut r = Request::new(1, 32_000, 64, 0.0);
+        r.sparse_budget = Some(256);
+        r.phase = crate::scheduler::Phase::Prefill;
+        small.register(&r).unwrap();
+        let mut reqs_s = HashMap::new();
+        reqs_s.insert(1, r);
+        let prefill = Batch {
+            decodes: vec![],
+            prefill: Some(PrefillWork::Chunk { req: 1, start: 0, len: 32_000, is_last: true }),
+        };
+        small.run_batch(&prefill, &reqs_s).unwrap();
+        reqs_s.get_mut(&1).unwrap().phase = crate::scheduler::Phase::Decode;
+
+        let batch = Batch { decodes: vec![1], prefill: None };
+        let tf = full.run_batch(&batch, &reqs_f).unwrap().iter_time_s;
+        let ts = small.run_batch(&batch, &reqs_s).unwrap().iter_time_s;
+        assert!(tf > 2.0 * ts, "full-budget decode {tf} vs overridden {ts}");
+        // the Alg. 1 working-set estimate shrinks with the override too
+        assert!(small.decode_ws_bytes(1) < full.decode_ws_bytes(1));
+    }
+
+    #[test]
+    fn release_clears_mem_stats() {
+        let mut b = mk(ServingConfig::sparseserve(2048, 2048, 32));
+        let reqs = prefill_all(&mut b, 1, 8192);
+        let batch = Batch { decodes: vec![1], prefill: None };
+        b.run_batch(&batch, &reqs).unwrap();
+        let before = b.mem_stats();
+        assert!(before.dram_bytes_used > 0 && before.hbm_bytes_used > 0);
+        assert_eq!(before.n_registered, 1);
+        b.release(1);
+        assert_eq!(b.mem_stats(), MemStats::default());
     }
 
     #[test]

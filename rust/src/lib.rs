@@ -4,10 +4,13 @@
 //! Attention in Long-Context LLM Serving"* (CS.DC 2025) as a three-layer
 //! rust + JAX + Pallas system:
 //!
-//! - **L3 (this crate)**: the serving system — FCFS continuous batching
-//!   with working-set-aware batch size control (Alg. 1), hierarchical
-//!   HBM/DRAM KV-cache management with fragmentation-aware transfer
-//!   engines (FlashH2D / FlashD2H), and layer-segmented prefill.
+//! - **L3 (this crate)**: the serving system — a single per-iteration
+//!   [`engine::EngineCore`] (submit / step / cancel, typed
+//!   [`engine::ServeError`]s, priority-aware admission) driving FCFS
+//!   continuous batching with working-set-aware batch size control
+//!   (Alg. 1), hierarchical HBM/DRAM KV-cache management with
+//!   fragmentation-aware transfer engines (FlashH2D / FlashD2H), and
+//!   layer-segmented prefill. See `rust/README.md` for the serving API.
 //! - **L2 (python/compile/model.py)**: llama-style model split into
 //!   per-layer/per-phase entry points, AOT-lowered to HLO text.
 //! - **L1 (python/compile/kernels/)**: pallas kernels (block metadata,
@@ -32,6 +35,7 @@ pub mod sim;
 pub mod sparse;
 pub mod util;
 pub mod workload;
+pub mod xla;
 
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")

@@ -2,9 +2,11 @@
 //!
 //! Subcommands:
 //!   info                      — print artifact + model information
-//!   serve    [--config tiny-llm] [--system sparseserve] [--rate R] [--requests N]
-//!                             — serve a synthetic trace on the REAL PJRT
-//!                               backend (tiny-llm artifacts) and report metrics
+//!   serve    [--config tiny-llm] [--system sparseserve] [--rate R]
+//!            [--requests N] [--queue-cap Q]
+//!                             — online serving on the REAL PJRT backend
+//!                               through the coordinator (priorities,
+//!                               SLOs, backpressure) + RunMetrics report
 //!   simulate [--model lwm-7b] [--system sparseserve] [--rate R] [--requests N]
 //!                             — paper-scale discrete simulation (A100 testbed
 //!                               substitute), reports TTFT/TBT/throughput
@@ -12,15 +14,17 @@
 //!
 //! Examples:
 //!   sparseserve simulate --model lwm-7b --system vllm --rate 0.125 --requests 40
-//!   sparseserve serve --rate 2 --requests 6
+//!   sparseserve serve --rate 2 --requests 6 --queue-cap 32
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use sparseserve::baselines;
 use sparseserve::config::{HardwareSpec, ModelSpec, ServingConfig};
-use sparseserve::engine::{Engine, PjrtBackend, SimBackend};
+use sparseserve::coordinator::Server;
+use sparseserve::engine::{Engine, PjrtBackend, SimBackend, SubmitRequest};
 use sparseserve::runtime::Runtime;
 use sparseserve::scheduler::Scheduler;
 use sparseserve::util::cli::Args;
@@ -45,12 +49,39 @@ const HELP: &str = "sparseserve — dynamic-sparse-attention LLM serving (paper 
 
 USAGE: sparseserve <info|serve|simulate|bench-transfer> [flags]
 
-  serve     --config tiny-llm --system sparseserve --rate 2.0 --requests 6
-  simulate  --model lwm-7b    --system sparseserve --rate 0.125 --requests 40
-  info      --config tiny-llm
-  bench-transfer
+  serve     online serving on the real PJRT backend (tiny-llm artifacts)
+            through the coordinator: every request goes through the
+            EngineCore lifecycle (SubmitRequest -> token stream -> Done
+            timing), every 3rd request is submitted as Interactive with a
+            TTFT SLO, and the run's RunMetrics are printed at shutdown.
+      --config tiny-llm     artifact directory (make artifacts)
+      --system sparseserve  serving policy (see Systems below)
+      --rate 2.0            Poisson arrival rate, requests/s
+      --requests 6          number of requests
+      --queue-cap 0         admission-queue cap (0 = unbounded); beyond
+                            it submissions fail fast with QueueFull
+      --budget 256          DSA token budget
+      --hbm-bytes 8388608   scaled-down HBM KV-cache size
 
-Systems: vllm | vllm-s | vllm-so | sparseserve";
+  simulate  offline clock-driven replay at paper scale (A100 testbed
+            substitute; LWM-7B / Llama3-8B cost models)
+      --model lwm-7b        lwm-7b | llama3-8b
+      --system sparseserve  serving policy
+      --rate 0.125          Poisson arrival rate, requests/s
+      --requests 40         number of requests
+
+  info      print artifact + model information  [--config tiny-llm]
+  bench-transfer            Fig. 4 PCIe bandwidth table
+
+Systems: vllm | vllm-s | vllm-so | sparseserve
+
+Request lifecycle (library API): build requests with the SubmitRequest
+builder — .max_new(n) .stop_tokens(v) .priority(Interactive|Batch)
+.ttft_slo(s) .sparse_budget(tokens) — submit/cancel through
+coordinator::Server or drive engine::EngineCore directly
+(submit / step / cancel / has_work). Failures are typed ServeErrors:
+AdmissionRejected, Cancelled, Evicted, BackendFailed{source},
+QueueFull, Disconnected. See rust/README.md for a runnable example.";
 
 fn info(args: &Args) -> Result<()> {
     let config = args.get_or("config", "tiny-llm");
@@ -75,30 +106,76 @@ fn serve(args: &Args) -> Result<()> {
     let rate = args.f64("rate", 2.0);
     let n = args.usize("requests", 6);
     let seed = args.usize("seed", 7) as u64;
+    let queue_cap = args.usize("queue-cap", 0);
 
-    let rt = Arc::new(Runtime::load(Runtime::default_dir(&config))?);
-    let spec = rt.manifest.model.clone();
+    // only the manifest (plain JSON) is needed on the main thread for the
+    // workload shapes; all PJRT state is loaded on the engine thread
+    // (thread-affine handles, and weights shouldn't be loaded twice).
+    let manifest_path = Runtime::default_dir(&config).join("manifest.json");
+    let text = std::fs::read_to_string(&manifest_path)
+        .map_err(|e| anyhow!("reading {manifest_path:?}: {e} (run `make artifacts`)"))?;
+    let spec = sparseserve::runtime::Manifest::parse(&text)?.model;
     let budget = args.usize("budget", 256); // tokens; 16 blocks of 16
     let mut cfg = baselines::by_name(&system, budget, 64, spec.n_layers)
         .ok_or_else(|| anyhow!("unknown system '{system}'"))?;
     cfg.max_inject_tokens = spec.max_ctx * spec.n_layers; // whole-prompt segments
     cfg.chunk_tokens = 64;
     cfg.t_max = 256;
-
     let hbm = args.usize("hbm-bytes", 8 << 20);
     let dram = 512 << 20;
-    let backend = PjrtBackend::new(rt.clone(), cfg.clone(), hbm, dram);
-    let sched = Scheduler::new(cfg, spec.clone(), hbm);
-    let engine = Engine::new(sched, Box::new(backend));
 
     let wl = WorkloadSpec::tiny(rate, seed);
     let trace = generate_with_tokens(&wl, n, 1, spec.vocab);
     println!(
-        "[serve] {} requests, rate {rate} rps, system {system}, backend pjrt/{}",
+        "[serve] {} requests, rate {rate} rps, system {system}, backend pjrt/{} (online)",
         n, spec.name
     );
-    let report = engine.run_trace(trace, 1e6)?;
-    println!("[serve] {}", report.metrics.summary());
+
+    let build_cfg = cfg.clone();
+    let build_spec = spec.clone();
+    let server = Server::start_with(
+        if queue_cap == 0 { None } else { Some(queue_cap) },
+        move || {
+            let rt = Arc::new(Runtime::load(Runtime::default_dir(&config))?);
+            let backend = PjrtBackend::new(rt, build_cfg.clone(), hbm, dram);
+            let sched = Scheduler::new(build_cfg, build_spec, hbm);
+            Ok((sched, Box::new(backend) as Box<dyn sparseserve::engine::Backend>))
+        },
+    );
+
+    // replay the trace's Poisson arrivals on the wall clock; every 3rd
+    // request is Interactive with a 2 s TTFT SLO (queue-jumping demo)
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(trace.len());
+    for (i, r) in trace.iter().enumerate() {
+        let wait = r.arrival_s - t0.elapsed().as_secs_f64();
+        if wait > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(wait));
+        }
+        let mut sub = SubmitRequest::new(r.prompt.clone()).max_new(r.max_new_tokens);
+        if i % 3 == 0 {
+            sub = sub.interactive().ttft_slo(2.0);
+        }
+        handles.push(server.submit(sub));
+    }
+    for h in handles {
+        let id = h.id;
+        match h.collect() {
+            Ok((toks, t)) => println!(
+                "[serve] req {id}: {} tokens, ttft {:.3}s, tbt {:.4}s ({} ids)",
+                t.n_tokens,
+                t.ttft_s.unwrap_or(0.0),
+                t.tbt_mean_s,
+                toks.len()
+            ),
+            Err(e) => println!("[serve] req {id} failed: {e}"),
+        }
+    }
+    let metrics = server.shutdown()?;
+    println!("[serve] {}", metrics.summary());
+    if metrics.ttft_slo_violations > 0 {
+        println!("[serve] TTFT SLO violations: {}", metrics.ttft_slo_violations);
+    }
     Ok(())
 }
 

@@ -12,6 +12,12 @@ pub struct RunMetrics {
     /// Generated tokens (all requests).
     pub tokens_generated: usize,
     pub requests_finished: usize,
+    /// Requests cancelled by the client before finishing.
+    pub requests_cancelled: usize,
+    /// Requests rejected by the engine (inadmissible memory demand).
+    pub requests_rejected: usize,
+    /// Requests whose achieved TTFT exceeded their per-request SLO.
+    pub ttft_slo_violations: usize,
     /// Serving-clock makespan, seconds.
     pub makespan_s: f64,
     /// Per-iteration KV blocks loaded from DRAM (Fig. 1 / Fig. 15 series).
@@ -24,6 +30,13 @@ pub struct RunMetrics {
 }
 
 impl RunMetrics {
+    /// Cap on per-sample series growth so a long-running online server
+    /// doesn't accumulate samples without bound. Far above any offline
+    /// replay's iteration count; aggregate counters (`iterations`,
+    /// `tokens_generated`, `requests_*`) stay exact past the cap —
+    /// only distribution samples stop being collected.
+    pub const MAX_SAMPLES: usize = 1 << 20;
+
     pub fn new() -> Self {
         Self::default()
     }
@@ -31,23 +44,38 @@ impl RunMetrics {
     /// Fold a finished (or partially served) request in.
     pub fn record_request(&mut self, r: &Request) {
         if let Some(t) = r.ttft() {
-            self.ttft.push(t);
+            if self.ttft.len() < Self::MAX_SAMPLES {
+                self.ttft.push(t);
+            }
         }
         if let Some(d) = r.queue_delay() {
-            self.queue_delay.push(d);
+            if self.queue_delay.len() < Self::MAX_SAMPLES {
+                self.queue_delay.push(d);
+            }
         }
-        self.tbt.extend(&r.tbt);
+        let room = Self::MAX_SAMPLES.saturating_sub(self.tbt.len());
+        self.tbt.extend(&r.tbt[..r.tbt.len().min(room)]);
         self.tokens_generated += r.n_generated;
         if r.is_done() {
             self.requests_finished += 1;
+        }
+        if r.is_cancelled() {
+            self.requests_cancelled += 1;
+        }
+        if let (Some(slo), Some(ttft)) = (r.ttft_slo_s, r.ttft()) {
+            if ttft > slo {
+                self.ttft_slo_violations += 1;
+            }
         }
     }
 
     pub fn record_iteration(&mut self, iter_time_s: f64, blocks_loaded: usize, load_s: f64) {
         self.iterations += 1;
-        self.iter_time.push(iter_time_s);
-        self.blocks_loaded_per_iter.push(blocks_loaded as f64);
-        self.load_time.push(load_s);
+        if self.iter_time.len() < Self::MAX_SAMPLES {
+            self.iter_time.push(iter_time_s);
+            self.blocks_loaded_per_iter.push(blocks_loaded as f64);
+            self.load_time.push(load_s);
+        }
     }
 
     /// Token generation throughput (tokens/s over the makespan).
@@ -70,10 +98,15 @@ impl RunMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "reqs={} tokens={} makespan={:.1}s thpt={:.2} tok/s | \
+            "reqs={}{} tokens={} makespan={:.1}s thpt={:.2} tok/s | \
              TTFT mean={:.3}s p99={:.3}s | TBT mean={:.4}s p99={:.4}s | \
              queue mean={:.3}s | loads/iter mean={:.1}",
             self.requests_finished,
+            if self.requests_cancelled > 0 {
+                format!(" (cancelled={})", self.requests_cancelled)
+            } else {
+                String::new()
+            },
             self.tokens_generated,
             self.makespan_s,
             self.throughput(),

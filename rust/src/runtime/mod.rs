@@ -27,6 +27,8 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::xla;
+
 /// A loaded artifact directory + PJRT client with lazily compiled
 /// executables.
 pub struct Runtime {

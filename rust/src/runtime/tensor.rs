@@ -3,6 +3,8 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::xla;
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {
     F32(Vec<f32>),

@@ -7,7 +7,7 @@ use crate::config::{ModelSpec, PrefillMode, ServingConfig};
 use crate::memory::ReqId;
 
 use super::plan::{Batch, PrefillWork};
-use super::request::{Phase, Request};
+use super::request::{Phase, Priority, Request};
 
 /// Decode working-set estimator supplied by the executor:
 /// `req -> bytes` (history-window union for SparseServe, full KV for
@@ -50,10 +50,56 @@ impl Scheduler {
         }
     }
 
+    /// Enqueue a request. The queue is priority-aware: an `Interactive`
+    /// request is placed ahead of every waiting `Batch` request (FCFS
+    /// within each class); a request already admitted keeps running.
     pub fn submit(&mut self, req: Request) {
         let id = req.id;
+        let priority = req.priority;
         self.requests.insert(id, req);
-        self.queue.push_back(id);
+        if priority == Priority::Interactive {
+            let pos = self
+                .queue
+                .iter()
+                .position(|q| self.requests[q].priority == Priority::Batch)
+                .unwrap_or(self.queue.len());
+            self.queue.insert(pos, id);
+        } else {
+            self.queue.push_back(id);
+        }
+    }
+
+    /// Cancel a request: drop it from the queue/active set and release
+    /// its HBM reservation. Returns false if the id is unknown or the
+    /// request already finished (nothing to cancel). The caller frees the
+    /// backend KV state (`Backend::release`).
+    pub fn cancel(&mut self, id: ReqId) -> bool {
+        let Some(r) = self.requests.get_mut(&id) else {
+            return false;
+        };
+        if matches!(r.phase, Phase::Finished | Phase::Cancelled) {
+            return false;
+        }
+        r.phase = Phase::Cancelled;
+        self.queue.retain(|&q| q != id);
+        self.active.retain(|&a| a != id);
+        if let Some(n) = self.reserved.remove(&id) {
+            self.reserved_total -= n;
+        }
+        true
+    }
+
+    /// Waiting request ids in admission order (diagnostics / tests).
+    pub fn queued_ids(&self) -> Vec<ReqId> {
+        self.queue.iter().copied().collect()
+    }
+
+    /// The request currently holding the (single) prefill slot, if any.
+    pub fn prefilling_id(&self) -> Option<ReqId> {
+        self.active
+            .iter()
+            .copied()
+            .find(|id| self.requests[id].phase == Phase::Prefill)
     }
 
     pub fn n_queued(&self) -> usize {
@@ -511,6 +557,56 @@ mod tests {
         let mut ws_big = |_r: ReqId| 360usize;
         let b = s.plan(1.0, &mut ws_big);
         assert_eq!(b.decodes.len(), 4, "no WS control -> everything batched");
+    }
+
+    #[test]
+    fn interactive_jumps_queued_batch_requests() {
+        let mut s = sched(ServingConfig::sparseserve(256, 64, 4), 1 << 30);
+        s.submit(Request::new(1, 64, 2, 0.0));
+        s.submit(Request::new(2, 64, 2, 0.0));
+        let mut hi = Request::new(3, 64, 2, 0.1);
+        hi.priority = Priority::Interactive;
+        s.submit(hi);
+        // Interactive lands ahead of every waiting Batch request...
+        assert_eq!(s.queued_ids(), vec![3, 1, 2]);
+        // ...but behind other Interactive requests (FCFS within class).
+        let mut hi2 = Request::new(4, 64, 2, 0.2);
+        hi2.priority = Priority::Interactive;
+        s.submit(hi2);
+        assert_eq!(s.queued_ids(), vec![3, 4, 1, 2]);
+        let mut ws = |r| no_ws(r);
+        let b = s.plan(0.2, &mut ws);
+        assert_eq!(b.prefill.unwrap().req(), 3, "interactive admitted first");
+    }
+
+    #[test]
+    fn cancel_releases_reservation_and_queue_slot() {
+        // vLLM-style reservations: cancelling the admitted request must
+        // unblock the head-of-line request behind it.
+        let cfg = ServingConfig::vllm(2048);
+        let spec_ = spec();
+        let one_req = {
+            let s = Scheduler::new(cfg.clone(), spec_.clone(), 0);
+            s.full_kv_bytes(512, 64)
+        };
+        let mut s = Scheduler::new(cfg, spec_, one_req + one_req / 2);
+        s.submit(Request::new(1, 512, 64, 0.0));
+        s.submit(Request::new(2, 512, 64, 0.0));
+        let mut ws = |r| no_ws(r);
+        let b = s.plan(0.0, &mut ws);
+        assert_eq!(b.prefill.as_ref().unwrap().req(), 1);
+        assert!(s.reserved_bytes() > 0);
+        assert!(s.cancel(1));
+        assert_eq!(s.reserved_bytes(), 0);
+        assert!(!s.cancel(1), "double cancel is a no-op");
+        assert_eq!(s.requests[&1].phase, Phase::Cancelled);
+        // request 2 is admissible now
+        let b2 = s.plan(0.1, &mut ws);
+        assert_eq!(b2.prefill.as_ref().unwrap().req(), 2);
+        // cancelling a queued-only request just drops it
+        s.submit(Request::new(3, 512, 64, 0.2));
+        assert!(s.cancel(3));
+        assert!(s.queued_ids().is_empty());
     }
 
     #[test]

@@ -17,4 +17,4 @@ mod request;
 
 pub use self::core::{Scheduler, WsEstimate};
 pub use plan::{Batch, PrefillWork};
-pub use request::{Phase, Request};
+pub use request::{Phase, Priority, Request, RequestParams, RequestTiming};

@@ -1,4 +1,5 @@
-//! Request state machine.
+//! Request state machine + the per-request lifecycle vocabulary
+//! (parameters, priority classes, timing summaries).
 
 use crate::memory::ReqId;
 
@@ -11,6 +12,66 @@ pub enum Phase {
     /// First token emitted; generating.
     Decode,
     Finished,
+    /// Client-cancelled (KV state released, no further scheduling).
+    Cancelled,
+}
+
+/// Scheduling class of a request. `Interactive` requests are queued ahead
+/// of every waiting `Batch` request (FCFS within a class); admission of a
+/// request already prefilling is never revoked.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    Interactive,
+    #[default]
+    Batch,
+}
+
+/// Per-request serving parameters, carried by `SubmitRequest` and copied
+/// into the scheduler's [`Request`] on submit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestParams {
+    /// Cap on generated tokens.
+    pub max_new_tokens: usize,
+    /// Generation stops early when one of these token ids is produced.
+    /// The matched stop token is kept in the output (unlike OpenAI's
+    /// `stop`, which omits the matched sequence). Real backend only:
+    /// the simulator emits no token ids, so stop tokens can never match
+    /// there and `max_new_tokens` is the only bound.
+    pub stop_tokens: Vec<i32>,
+    /// Scheduling class (queue ordering).
+    pub priority: Priority,
+    /// Optional TTFT service-level objective, seconds. Recorded against
+    /// the achieved TTFT in `RunMetrics` (violations counter).
+    pub ttft_slo_s: Option<f64>,
+    /// Per-request override of the DSA token budget. Honored by backends
+    /// that can re-budget per request (the simulator); the AOT-compiled
+    /// real backend has a fixed kernel budget and ignores it.
+    pub sparse_budget: Option<usize>,
+}
+
+impl Default for RequestParams {
+    fn default() -> Self {
+        Self {
+            max_new_tokens: 1,
+            stop_tokens: Vec::new(),
+            priority: Priority::Batch,
+            ttft_slo_s: None,
+            sparse_budget: None,
+        }
+    }
+}
+
+/// Timing summary of one served request (reported in `StreamEvent::Done`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct RequestTiming {
+    /// Tokens produced (decode steps, including the prefill's first token).
+    pub n_tokens: usize,
+    /// Time to first token, seconds since arrival.
+    pub ttft_s: Option<f64>,
+    /// Mean time between tokens, seconds (0 when fewer than 2 tokens).
+    pub tbt_mean_s: f64,
+    /// Admission delay, seconds since arrival.
+    pub queue_delay_s: Option<f64>,
 }
 
 #[derive(Debug, Clone)]
@@ -21,6 +82,12 @@ pub struct Request {
     pub prompt_len: usize,
     pub max_new_tokens: usize,
     pub arrival_s: f64,
+
+    // ---- lifecycle parameters (see [`RequestParams`]) ----
+    pub priority: Priority,
+    pub stop_tokens: Vec<i32>,
+    pub ttft_slo_s: Option<f64>,
+    pub sparse_budget: Option<usize>,
 
     pub phase: Phase,
     /// Chunked-prefill progress: prompt tokens fully processed (all layers).
@@ -51,6 +118,10 @@ impl Request {
             prompt_len,
             max_new_tokens,
             arrival_s,
+            priority: Priority::Batch,
+            stop_tokens: Vec::new(),
+            ttft_slo_s: None,
+            sparse_budget: None,
             phase: Phase::Queued,
             tokens_done: 0,
             layers_done: 0,
@@ -71,6 +142,34 @@ impl Request {
         r
     }
 
+    /// Build a request from lifecycle parameters (the `SubmitRequest` path).
+    pub fn with_params(
+        id: ReqId,
+        prompt: Vec<i32>,
+        prompt_len: usize,
+        params: RequestParams,
+        arrival_s: f64,
+    ) -> Self {
+        let mut r = Self::new(id, prompt_len, params.max_new_tokens, arrival_s);
+        r.prompt = prompt;
+        r.priority = params.priority;
+        r.stop_tokens = params.stop_tokens;
+        r.ttft_slo_s = params.ttft_slo_s;
+        r.sparse_budget = params.sparse_budget;
+        r
+    }
+
+    /// The lifecycle parameter bundle this request was submitted with.
+    pub fn params(&self) -> RequestParams {
+        RequestParams {
+            max_new_tokens: self.max_new_tokens,
+            stop_tokens: self.stop_tokens.clone(),
+            priority: self.priority,
+            ttft_slo_s: self.ttft_slo_s,
+            sparse_budget: self.sparse_budget,
+        }
+    }
+
     /// Record a generated token at time `now`.
     pub fn push_token(&mut self, tok: Option<i32>, now: f64) {
         if self.first_token_s.is_none() {
@@ -79,11 +178,15 @@ impl Request {
             self.tbt.push(now - last);
         }
         self.last_token_s = Some(now);
-        if let Some(t) = tok {
-            self.generated.push(t);
-        }
+        let hit_stop = match tok {
+            Some(t) => {
+                self.generated.push(t);
+                self.stop_tokens.contains(&t)
+            }
+            None => false,
+        };
         self.n_generated += 1;
-        if self.n_generated >= self.max_new_tokens {
+        if self.n_generated >= self.max_new_tokens || hit_stop {
             self.phase = Phase::Finished;
             self.finished_s = Some(now);
         } else {
@@ -101,6 +204,29 @@ impl Request {
 
     pub fn is_done(&self) -> bool {
         self.phase == Phase::Finished
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.phase == Phase::Cancelled
+    }
+
+    /// Mean inter-token time (0 with fewer than two tokens).
+    pub fn tbt_mean(&self) -> f64 {
+        if self.tbt.is_empty() {
+            0.0
+        } else {
+            self.tbt.iter().sum::<f64>() / self.tbt.len() as f64
+        }
+    }
+
+    /// Timing summary for `StreamEvent::Done` / `StepOutcome::finished`.
+    pub fn timing(&self) -> RequestTiming {
+        RequestTiming {
+            n_tokens: self.n_generated,
+            ttft_s: self.ttft(),
+            tbt_mean_s: self.tbt_mean(),
+            queue_delay_s: self.queue_delay(),
+        }
     }
 }
 
@@ -122,6 +248,10 @@ mod tests {
         assert_eq!(r.finished_s, Some(13.5));
         assert_eq!(r.tbt, vec![0.5, 1.0]);
         assert_eq!(r.generated, vec![5, 6, 7]);
+        let t = r.timing();
+        assert_eq!(t.n_tokens, 3);
+        assert_eq!(t.ttft_s, Some(2.0));
+        assert!((t.tbt_mean_s - 0.75).abs() < 1e-12);
     }
 
     #[test]
@@ -131,5 +261,35 @@ mod tests {
         assert!(r.is_done());
         assert!(r.tbt.is_empty());
         assert_eq!(r.n_generated, 1);
+    }
+
+    #[test]
+    fn stop_token_ends_generation_early() {
+        let params = RequestParams {
+            max_new_tokens: 100,
+            stop_tokens: vec![42],
+            ..Default::default()
+        };
+        let mut r = Request::with_params(3, vec![1, 2, 3], 3, params, 0.0);
+        r.push_token(Some(7), 1.0);
+        assert_eq!(r.phase, Phase::Decode);
+        r.push_token(Some(42), 2.0);
+        assert!(r.is_done(), "stop token must finish the request");
+        assert_eq!(r.generated, vec![7, 42]);
+        assert_eq!(r.timing().n_tokens, 2);
+    }
+
+    #[test]
+    fn params_round_trip() {
+        let params = RequestParams {
+            max_new_tokens: 9,
+            stop_tokens: vec![1, 2],
+            priority: Priority::Interactive,
+            ttft_slo_s: Some(0.5),
+            sparse_budget: Some(128),
+        };
+        let r = Request::with_params(4, Vec::new(), 77, params.clone(), 0.0);
+        assert_eq!(r.prompt_len, 77);
+        assert_eq!(r.params(), params);
     }
 }

@@ -1,0 +1,127 @@
+//! Request-lifecycle end-to-end tests on the simulated backend: the
+//! online coordinator over `EngineCore` (metrics, backpressure,
+//! cancellation, SLO accounting) without needing `make artifacts`.
+
+use std::time::Duration;
+
+use sparseserve::config::{HardwareSpec, ModelSpec, ServingConfig};
+use sparseserve::coordinator::{ServeError, Server, SubmitRequest};
+use sparseserve::engine::SimBackend;
+use sparseserve::scheduler::Scheduler;
+
+fn build_sim() -> anyhow::Result<(Scheduler, Box<dyn sparseserve::engine::Backend>)> {
+    let cfg = ServingConfig::sparseserve(2048, 2048, 32);
+    let spec = ModelSpec::lwm_7b();
+    let hw = HardwareSpec::a100_40gb();
+    let backend = SimBackend::new(cfg.clone(), spec.clone(), hw.clone());
+    let sched = Scheduler::new(cfg, spec, hw.hbm_kv_bytes);
+    Ok((sched, Box::new(backend) as _))
+}
+
+#[test]
+fn online_run_metrics_exposed_at_shutdown() {
+    let server = Server::start(build_sim);
+    let h1 = server.submit(SubmitRequest::synthetic(8192).max_new(4));
+    let h2 = server.submit(SubmitRequest::synthetic(4096).max_new(2).interactive());
+    let (t1, tm1) = h1.collect().expect("stream 1");
+    assert!(t1.is_empty(), "sim backend emits no token ids");
+    assert_eq!(tm1.n_tokens, 4);
+    assert!(tm1.ttft_s.expect("ttft present") > 0.0);
+    let (_, tm2) = h2.collect().expect("stream 2");
+    assert_eq!(tm2.n_tokens, 2);
+    // the online path now aggregates RunMetrics too
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests_finished, 2);
+    assert_eq!(m.tokens_generated, 6);
+    assert!(m.iterations > 0);
+    assert!(m.makespan_s > 0.0);
+    assert_eq!(m.requests_cancelled, 0);
+}
+
+#[test]
+fn queue_cap_rejects_with_typed_backpressure() {
+    // Gate engine bring-up until all three submissions are enqueued, so
+    // they are drained in one message pump before any scheduling step
+    // runs (deterministic queue occupancy: the first waits, the rest
+    // bounce).
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+    let server = Server::start_with(Some(1), move || {
+        let _ = ready_rx.recv_timeout(Duration::from_secs(30));
+        build_sim()
+    });
+    let ha = server.submit(SubmitRequest::synthetic(8192).max_new(2));
+    let hb = server.submit(SubmitRequest::synthetic(8192).max_new(2));
+    let hc = server.submit(SubmitRequest::synthetic(8192).max_new(2));
+    ready_tx.send(()).expect("engine waiting");
+    let (_, tma) = ha.collect().expect("first request runs");
+    assert_eq!(tma.n_tokens, 2);
+    match hb.collect() {
+        Err(ServeError::QueueFull { cap: 1 }) => {}
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+    match hc.collect() {
+        Err(ServeError::QueueFull { .. }) => {}
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests_finished, 1);
+}
+
+#[test]
+fn cancel_over_server_reports_cancelled() {
+    let server = Server::start(build_sim);
+    let h = server.submit(SubmitRequest::synthetic(30_000).max_new(10_000));
+    server.cancel(h.id);
+    match h.collect() {
+        Err(ServeError::Cancelled) => {}
+        other => panic!("expected Cancelled, got {other:?}"),
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests_cancelled, 1);
+    assert_eq!(m.requests_finished, 0);
+}
+
+#[test]
+fn inadmissible_request_rejected_not_hung() {
+    // Non-offload config with an HBM too small for any reservation: the
+    // online server must fail the doomed request with a typed error and
+    // keep serving, not spin forever (the offline driver bails instead).
+    let server = Server::start(|| {
+        let cfg = ServingConfig::vllm(2048);
+        let spec = ModelSpec::lwm_7b();
+        let hw = HardwareSpec::a100_40gb();
+        let backend = SimBackend::new(cfg.clone(), spec.clone(), hw.clone());
+        let sched = Scheduler::new(cfg, spec, 1 << 20); // 1 MiB: nothing fits
+        Ok((sched, Box::new(backend) as _))
+    });
+    let h = server.submit(SubmitRequest::synthetic(8192).max_new(64));
+    match h.collect() {
+        Err(ServeError::AdmissionRejected { reason }) => {
+            assert!(reason.contains("HBM capacity"), "reason: {reason}");
+        }
+        other => panic!("expected AdmissionRejected, got {other:?}"),
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests_rejected, 1);
+    assert_eq!(m.requests_cancelled, 0, "rejection is not a client cancel");
+}
+
+#[test]
+fn cancel_unknown_id_is_harmless() {
+    let server = Server::start(build_sim);
+    server.cancel(999);
+    let h = server.submit(SubmitRequest::synthetic(2048).max_new(1));
+    let (_, tm) = h.collect().unwrap();
+    assert_eq!(tm.n_tokens, 1);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn ttft_slo_violations_counted() {
+    let server = Server::start(build_sim);
+    // an impossible SLO: any positive TTFT violates it
+    let h = server.submit(SubmitRequest::synthetic(8192).max_new(2).ttft_slo(0.0));
+    h.collect().unwrap();
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.ttft_slo_violations, 1);
+}

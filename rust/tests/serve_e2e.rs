@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use sparseserve::config::ServingConfig;
 use sparseserve::coordinator::Server;
-use sparseserve::engine::{Engine, PjrtBackend};
+use sparseserve::engine::{Engine, EngineCore, PjrtBackend, SubmitRequest};
 use sparseserve::runtime::Runtime;
 use sparseserve::scheduler::Scheduler;
 use sparseserve::workload::{generate_with_tokens, WorkloadSpec};
@@ -106,13 +106,66 @@ fn coordinator_server_streams_tokens() {
         Ok((sched, Box::new(backend) as Box<dyn sparseserve::engine::Backend>))
     });
 
-    let h1 = server.submit((0..30).map(|i| i % 250).collect(), 4);
-    let h2 = server.submit((0..50).map(|i| (i * 3) % 250).collect(), 3);
-    let t1 = h1.collect_tokens().expect("stream 1");
-    let t2 = h2.collect_tokens().expect("stream 2");
+    let h1 = server.submit(SubmitRequest::new((0..30).map(|i| i % 250).collect()).max_new(4));
+    let h2 = server.submit(
+        SubmitRequest::new((0..50).map(|i| (i * 3) % 250).collect())
+            .max_new(3)
+            .interactive(),
+    );
+    let (t1, timing1) = h1.collect().expect("stream 1");
+    let (t2, timing2) = h2.collect().expect("stream 2");
     assert_eq!(t1.len(), 4);
     assert_eq!(t2.len(), 3);
-    server.shutdown().unwrap();
+    // Done must count exactly the tokens the stream delivered (a
+    // prefill-only step must not inflate the count)
+    assert_eq!(timing1.n_tokens, t1.len());
+    assert_eq!(timing2.n_tokens, t2.len());
+    assert!(timing1.ttft_s.expect("ttft") > 0.0);
+    // the online path aggregates RunMetrics now
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests_finished, 2);
+    assert_eq!(metrics.tokens_generated, 7);
+}
+
+#[test]
+fn cancellation_frees_kv_blocks_on_real_backend() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Arc::new(Runtime::load(Runtime::default_dir("tiny-llm")).unwrap());
+    let spec = rt.manifest.model.clone();
+    let cfg = tiny_cfg(&spec);
+    let hbm = 8 << 20;
+    let backend = PjrtBackend::new(rt.clone(), cfg.clone(), hbm, 512 << 20);
+    let sched = Scheduler::new(cfg, spec.clone(), hbm);
+    let mut core = EngineCore::new(sched, Box::new(backend));
+
+    let prompt: Vec<i32> = (0..64).map(|i| i * 5 % spec.vocab as i32).collect();
+    let id = core.submit(SubmitRequest::new(prompt).max_new(64), 0.0).unwrap();
+
+    // drive prefill + a few decode steps so KV blocks exist in both tiers
+    let mut now = 0.0;
+    while core.sched().requests[&id].n_generated < 3 {
+        let out = core.step(now).unwrap();
+        assert!(out.ran_batch, "engine stalled mid-request");
+        now += out.iter_time_s;
+    }
+    let before = core.mem_stats();
+    assert!(before.dram_bytes_used > 0, "decode must hold DRAM KV");
+    assert_eq!(before.n_registered, 1);
+
+    assert!(core.cancel(id));
+    let after = core.mem_stats();
+    assert_eq!(after.dram_bytes_used, 0, "cancel must free DRAM blocks");
+    assert_eq!(after.hbm_bytes_used, 0, "cancel must free HBM residency");
+    assert_eq!(after.n_registered, 0);
+    assert!(!core.has_work());
+
+    let report = core.into_report(now);
+    assert_eq!(report.metrics.requests_cancelled, 1);
+    assert_eq!(report.metrics.requests_finished, 0);
+    assert!(report.requests[&id].is_cancelled());
 }
 
 #[test]
