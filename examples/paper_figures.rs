@@ -59,5 +59,8 @@ fn main() -> Result<()> {
         println!("{}", sim_exp::fig16a(&[0.05, 0.15, 0.25, 0.35]));
         println!("{}", sim_exp::fig16b());
     }
+    if want("prefetch") {
+        println!("{}", sim_exp::fig_prefetch(&[0.2, 0.35]));
+    }
     Ok(())
 }

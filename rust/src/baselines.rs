@@ -24,7 +24,11 @@ pub fn comparison_set(token_budget: usize, chunk: usize, n_layers: usize) -> Vec
     ]
 }
 
-/// Fig. 13's incremental ladder: vLLM -> +SA -> +Offload -> +FT -> +WC -> +LP.
+/// Fig. 13's incremental ladder, extended with the working-set
+/// prefetcher as its own rung:
+/// vLLM -> +SA -> +Offload -> +FT -> +WC -> +LP -> +PF.
+/// The final rung equals the full `ServingConfig::sparseserve` system,
+/// and +LP doubles as the no-prefetch ablation (`sparseserve-np`).
 pub fn ablation_ladder(token_budget: usize, chunk: usize, n_layers: usize) -> Vec<SystemPreset> {
     let base = ServingConfig::vllm(chunk);
     let sa = ServingConfig::vllm_s(token_budget, chunk);
@@ -36,6 +40,12 @@ pub fn ablation_ladder(token_budget: usize, chunk: usize, n_layers: usize) -> Ve
         max_inject_tokens: chunk * n_layers,
         ..wc.clone()
     };
+    let full = ServingConfig::sparseserve(token_budget, chunk, n_layers);
+    let pf = ServingConfig {
+        prefetch: true,
+        max_prefetch_blocks: full.max_prefetch_blocks,
+        ..lp.clone()
+    };
     vec![
         SystemPreset { name: "vLLM", cfg: base },
         SystemPreset { name: "+SA", cfg: sa },
@@ -43,6 +53,23 @@ pub fn ablation_ladder(token_budget: usize, chunk: usize, n_layers: usize) -> Ve
         SystemPreset { name: "+FT", cfg: ft },
         SystemPreset { name: "+WC", cfg: wc },
         SystemPreset { name: "+LP", cfg: lp },
+        SystemPreset { name: "+PF", cfg: pf },
+    ]
+}
+
+/// The prefetch ablation pair: full SparseServe vs the identical system
+/// with the working-set prefetcher disabled (every miss loads on demand,
+/// on the critical path).
+pub fn prefetch_ablation(token_budget: usize, chunk: usize, n_layers: usize) -> Vec<SystemPreset> {
+    vec![
+        SystemPreset {
+            name: "SparseServe",
+            cfg: ServingConfig::sparseserve(token_budget, chunk, n_layers),
+        },
+        SystemPreset {
+            name: "SparseServe-NP",
+            cfg: ServingConfig::sparseserve_np(token_budget, chunk, n_layers),
+        },
     ]
 }
 
@@ -51,6 +78,7 @@ pub fn by_name(name: &str, token_budget: usize, chunk: usize, n_layers: usize) -
     let lower = name.to_lowercase();
     comparison_set(token_budget, chunk, n_layers)
         .into_iter()
+        .chain(prefetch_ablation(token_budget, chunk, n_layers))
         .find(|p| p.name.to_lowercase() == lower)
         .map(|p| p.cfg)
 }
@@ -62,17 +90,19 @@ mod tests {
     #[test]
     fn ladder_is_incremental() {
         let l = ablation_ladder(2048, 2048, 32);
-        assert_eq!(l.len(), 6);
+        assert_eq!(l.len(), 7);
         assert!(!l[0].cfg.sparse_attention);
         assert!(l[1].cfg.sparse_attention && !l[1].cfg.offload);
         assert!(l[2].cfg.offload && l[2].cfg.transfer == TransferKind::Memcpy);
         assert!(l[3].cfg.transfer == TransferKind::Flash && !l[3].cfg.ws_batch_control);
         assert!(l[4].cfg.ws_batch_control && l[4].cfg.prefill_mode == PrefillMode::Chunked);
-        assert!(l[5].cfg.prefill_mode == PrefillMode::LayerSegmented);
+        assert!(l[5].cfg.prefill_mode == PrefillMode::LayerSegmented && !l[5].cfg.prefetch);
+        assert!(l[6].cfg.prefetch, "final rung adds the prefetcher");
         // the final rung IS SparseServe
         let ss = ServingConfig::sparseserve(2048, 2048, 32);
-        assert_eq!(l[5].cfg.prefill_mode, ss.prefill_mode);
-        assert_eq!(l[5].cfg.max_inject_tokens, ss.max_inject_tokens);
+        assert_eq!(l[6].cfg.prefill_mode, ss.prefill_mode);
+        assert_eq!(l[6].cfg.max_inject_tokens, ss.max_inject_tokens);
+        assert_eq!(l[6].cfg.max_prefetch_blocks, ss.max_prefetch_blocks);
     }
 
     #[test]
@@ -80,5 +110,16 @@ mod tests {
         assert!(by_name("sparseserve", 2048, 2048, 32).is_some());
         assert!(by_name("vLLM-SO", 2048, 2048, 32).unwrap().offload);
         assert!(by_name("nope", 2048, 2048, 32).is_none());
+        let np = by_name("sparseserve-np", 2048, 2048, 32).unwrap();
+        assert!(!np.prefetch && np.offload && np.ws_batch_control);
+    }
+
+    #[test]
+    fn prefetch_ablation_differs_only_in_prefetch() {
+        let pair = prefetch_ablation(2048, 2048, 32);
+        assert_eq!(pair.len(), 2);
+        assert!(pair[0].cfg.prefetch && !pair[1].cfg.prefetch);
+        assert_eq!(pair[0].cfg.ws_batch_control, pair[1].cfg.ws_batch_control);
+        assert_eq!(pair[0].cfg.prefill_mode, pair[1].cfg.prefill_mode);
     }
 }

@@ -48,6 +48,19 @@ pub struct ServingConfig {
     pub transfer: TransferKind,
     /// Working-set-aware batch size control (WC ablation, Alg. 1).
     pub ws_batch_control: bool,
+    /// Consecutive WS-control skips after which a decode stops being
+    /// leapfrogged by younger requests (starvation guard: the planner
+    /// stops packing behind it so FCFS progress is guaranteed).
+    pub ws_starvation_k: usize,
+
+    // ---- working-set prefetch (PF ablation) ----
+    /// Stage each scheduled decode's predicted working set (the
+    /// recency-ranked `WorkingSetTracker` union) into HBM ahead of the
+    /// batch, so loading overlaps compute instead of stalling it.
+    pub prefetch: bool,
+    /// Cap on blocks staged per iteration: block *groups* for the
+    /// simulator, per-head blocks for the real backend.
+    pub max_prefetch_blocks: usize,
 
     // ---- prefill ----
     pub prefill_mode: PrefillMode,
@@ -76,6 +89,9 @@ impl ServingConfig {
             offload: true,
             transfer: TransferKind::Flash,
             ws_batch_control: true,
+            ws_starvation_k: 4,
+            prefetch: true,
+            max_prefetch_blocks: 4096,
             prefill_mode: PrefillMode::LayerSegmented,
             // paper §4.2: maxInjectToken = B * L for parity with chunked
             max_inject_tokens: chunk_tokens * n_layers,
@@ -97,6 +113,9 @@ impl ServingConfig {
             offload: false,
             transfer: TransferKind::Memcpy,
             ws_batch_control: false,
+            ws_starvation_k: 4,
+            prefetch: false,
+            max_prefetch_blocks: 0,
             prefill_mode: PrefillMode::Chunked,
             chunk_tokens,
             max_inject_tokens: chunk_tokens,
@@ -123,6 +142,17 @@ impl ServingConfig {
         }
     }
 
+    /// No-prefetch ablation: full SparseServe minus the working-set
+    /// prefetcher — every selection miss is loaded on demand, on the
+    /// critical path. Isolates the overlap the prefetcher earns.
+    pub fn sparseserve_np(token_budget: usize, chunk_tokens: usize, n_layers: usize) -> Self {
+        Self {
+            prefetch: false,
+            max_prefetch_blocks: 0,
+            ..Self::sparseserve(token_budget, chunk_tokens, n_layers)
+        }
+    }
+
     /// Budget in blocks for a given model block size (ceil).
     pub fn budget_blocks(&self, block_size: usize) -> usize {
         self.token_budget.div_ceil(block_size)
@@ -146,6 +176,10 @@ mod tests {
         assert_eq!(ss.prefill_mode, PrefillMode::LayerSegmented);
         // paper parity: maxInjectToken = B * L
         assert_eq!(ss.max_inject_tokens, 2048 * 32);
+        // prefetch: on for SparseServe, off for every baseline
+        assert!(ss.prefetch && !v.prefetch && !s.prefetch && !so.prefetch);
+        let np = ServingConfig::sparseserve_np(2048, 2048, 32);
+        assert!(!np.prefetch && np.offload && np.ws_batch_control);
     }
 
     #[test]

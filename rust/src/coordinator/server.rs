@@ -149,7 +149,17 @@ impl Server {
                             return Err(anyhow::Error::new(e));
                         }
                     };
+                    // typed per-request failures: fail those streams,
+                    // the server keeps serving everyone else
+                    for (id, err) in outcome.rejected.iter().chain(outcome.evicted.iter()) {
+                        if let Some(s) = streams.remove(id) {
+                            let _ = s.send(StreamEvent::Error(err.clone()));
+                        }
+                    }
                     if !outcome.ran_batch {
+                        if !outcome.rejected.is_empty() || !outcome.evicted.is_empty() {
+                            continue; // requests left the system: progress
+                        }
                         // Work is pending but the planner produced nothing.
                         // Two permanently-stuck shapes exist (the offline
                         // driver bails on them; an online server must stay

@@ -17,12 +17,22 @@ pub struct BatchOutcome {
     /// Tokens produced this iteration: decode tokens for every decode
     /// request, plus the first token when a prefill completed.
     pub tokens: Vec<(ReqId, Option<i32>)>,
-    /// KV blocks loaded from DRAM (cache misses).
+    /// KV blocks moved over PCIe this iteration (demand misses plus
+    /// prefetch stages).
     pub blocks_loaded: usize,
-    /// Modeled PCIe load time.
+    /// Modeled PCIe busy time (demand + prefetch streams).
     pub load_time_s: f64,
     /// Modeled PCIe save critical-path time.
     pub save_time_s: f64,
+    /// Iteration time lost to PCIe traffic that compute could not hide
+    /// (demand misses + prefetch spill past the compute window).
+    pub stall_time_s: f64,
+    /// Blocks staged ahead of need by the working-set prefetcher.
+    pub prefetch_blocks: usize,
+    /// Staged blocks consumed by this iteration's gathers.
+    pub prefetch_hits: usize,
+    /// Staged blocks this iteration never touched (mispredictions).
+    pub prefetch_wasted: usize,
 }
 
 /// KV-memory occupancy snapshot (request lifecycle observability: tests
@@ -55,6 +65,17 @@ pub trait Backend {
 
     /// Decode working-set estimate in bytes (Alg. 1 input).
     fn decode_ws_bytes(&mut self, req: ReqId) -> usize;
+
+    /// Stage the predicted working sets of the batch's decode requests
+    /// into HBM ahead of execution (`decodes` in plan order — earlier
+    /// FCFS requests get staging priority). Called by the engine between
+    /// planning and `run_batch`; the staged traffic overlaps the
+    /// iteration's compute. Returns blocks staged. Default: no-op for
+    /// backends without a prefetch pipeline.
+    fn prefetch(&mut self, decodes: &[ReqId]) -> usize {
+        let _ = decodes;
+        0
+    }
 
     /// KV-memory occupancy (HBM/DRAM bytes, live requests).
     fn mem_stats(&self) -> MemStats;

@@ -15,7 +15,7 @@
 //! state mid-flight, and failures surface as typed
 //! [`ServeError`](super::ServeError)s.
 
-use crate::memory::ReqId;
+use crate::memory::{MemoryError, ReqId};
 use crate::metrics::RunMetrics;
 use crate::scheduler::{Priority, Request, RequestParams, RequestTiming, Scheduler};
 
@@ -129,6 +129,14 @@ pub struct StepOutcome {
     /// Requests that finished this step, with their timing summary.
     /// Their KV state has already been released.
     pub finished: Vec<(ReqId, RequestTiming)>,
+    /// Requests rejected this step because their memory demand can never
+    /// fit (hopeless head-of-queue); oversubscription surfaces here as a
+    /// typed error instead of blocking the queue forever.
+    pub rejected: Vec<(ReqId, ServeError)>,
+    /// Requests evicted this step because a memory tier ran out while
+    /// executing them (typed `MemoryError` from the backend); their KV
+    /// state has been released and the engine stays usable.
+    pub evicted: Vec<(ReqId, ServeError)>,
 }
 
 /// Outcome of a whole serving run (offline trace replay or an online
@@ -298,6 +306,22 @@ impl EngineCore {
             return Ok(out);
         }
 
+        // A head-of-queue request whose KV can never fit its tier (HBM
+        // without offloading, DRAM with it) would block admission
+        // forever — and, unchecked, eventually exhaust DRAM mid-run.
+        // Reject it with a typed error and keep serving.
+        while let Some(id) = self.sched.hopeless_head() {
+            let reason = format!(
+                "request {id}: KV demand exceeds {} capacity",
+                if self.sched.cfg.offload { "DRAM" } else { "HBM" }
+            );
+            self.reject(id);
+            out.rejected.push((id, ServeError::rejected(reason)));
+        }
+        if !self.sched.has_work() {
+            return Ok(out);
+        }
+
         let backend = &mut self.backend;
         let mut ws = |id| backend.decode_ws_bytes(id);
         let batch = self.sched.plan(now, &mut ws);
@@ -305,15 +329,40 @@ impl EngineCore {
             return Ok(out);
         }
 
-        let bo = self
-            .backend
-            .run_batch(&batch, &self.sched.requests)
-            .map_err(ServeError::backend)?;
+        // stage predicted working sets ahead of the batch (the staged
+        // traffic overlaps this iteration's compute)
+        if !batch.decodes.is_empty() {
+            self.backend.prefetch(&batch.decodes);
+        }
+
+        let bo = match self.backend.run_batch(&batch, &self.sched.requests) {
+            Ok(bo) => bo,
+            Err(e) => {
+                // typed memory-tier exhaustion: evict the offending
+                // request (free its KV), surface a ServeError, keep the
+                // engine alive. Anything else is fatal.
+                let info = e
+                    .downcast_ref::<MemoryError>()
+                    .map(|me| (me.req(), me.to_string()));
+                let Some((victim, reason)) = info else {
+                    return Err(ServeError::backend(e));
+                };
+                let err = ServeError::Evicted { reason };
+                if self.sched.cancel(victim) {
+                    self.backend.release(victim);
+                    self.metrics.requests_evicted += 1;
+                    if !self.retain_finished {
+                        self.sched.requests.remove(&victim);
+                    }
+                }
+                out.evicted.push((victim, err));
+                return Ok(out);
+            }
+        };
         out.ran_batch = true;
         out.iter_time_s = bo.iter_time_s;
         out.batch_requests = batch.n_requests();
-        self.metrics
-            .record_iteration(bo.iter_time_s, bo.blocks_loaded, bo.load_time_s);
+        self.metrics.record_iteration(&bo);
 
         if let Some(work) = &batch.prefill {
             self.sched.advance_prefill(work);

@@ -19,7 +19,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::ServingConfig;
 use crate::memory::manager::NEG_INF;
-use crate::memory::{engine_for, KvManager, ReqId};
+use crate::memory::{engine_for, KvManager, MemoryError, ReqId};
 use crate::runtime::{HostTensor, MixedInput, Runtime};
 use crate::scheduler::{Batch, PrefillWork, Request};
 use crate::sparse::{top_k_blocks_fast, WorkingSetTracker};
@@ -174,7 +174,7 @@ impl PjrtBackend {
             let outs = self.rt.execute(&format!("prefill_layer_{t_pad}"), &inputs)?;
             // outs: (k [Hkv,T,Dh], v, x2 [T,d])
             self.kv
-                .append_prefill_layer(id, layer, outs[0].as_f32(), outs[1].as_f32(), t_pad, plen);
+                .append_prefill_layer(id, layer, outs[0].as_f32(), outs[1].as_f32(), t_pad, plen)?;
             x = outs[2].as_f32().to_vec();
         }
 
@@ -241,7 +241,7 @@ impl PjrtBackend {
             inputs.extend(lw);
             let outs = self.rt.execute(&format!("prefill_chunk_{t_pad}"), &inputs)?;
             self.kv
-                .append_prefill_layer(id, layer, outs[0].as_f32(), outs[1].as_f32(), t_pad, len);
+                .append_prefill_layer(id, layer, outs[0].as_f32(), outs[1].as_f32(), t_pad, len)?;
             x = outs[2].as_f32().to_vec();
         }
 
@@ -358,7 +358,7 @@ impl PjrtBackend {
                     layer,
                     &kk[i * hkv * dh..(i + 1) * hkv * dh],
                     &vv[i * hkv * dh..(i + 1) * hkv * dh],
-                );
+                )?;
             }
 
             // ---- select + gather ----
@@ -385,7 +385,7 @@ impl PjrtBackend {
                 let gk_s = &mut gk[i * hkv * s_len * dh..(i + 1) * hkv * s_len * dh];
                 let gv_s = &mut gv[i * hkv * s_len * dh..(i + 1) * hkv * s_len * dh];
                 let gm_s = &mut gm[i * hkv * s_len..(i + 1) * hkv * s_len];
-                self.kv.gather_into(*id, layer, &sel, k_bucket, gk_s, gv_s, gm_s);
+                self.kv.gather_into(*id, layer, &sel, k_bucket, gk_s, gv_s, gm_s)?;
             }
 
             // ---- sparse attention + FFN ----
@@ -471,6 +471,37 @@ impl Backend for PjrtBackend {
         }
     }
 
+    /// Stage each scheduled decode's predicted working set — the
+    /// recency-ranked `(layer, head, block)` union from its tracker — as
+    /// asynchronous FlashH2D copies, FCFS priority. Staged blocks are
+    /// pinned until consumed by this batch's gathers (hit) or retired at
+    /// `end_iteration` (wasted).
+    fn prefetch(&mut self, decodes: &[ReqId]) -> usize {
+        if !(self.cfg.prefetch && self.cfg.offload && self.cfg.sparse_attention) {
+            return 0;
+        }
+        // over-collect by 2x: already-resident plan entries are skipped
+        // by staging without consuming its budget
+        let plan_cap = self.cfg.max_prefetch_blocks.saturating_mul(2);
+        let mut plan = Vec::new();
+        for &id in decodes {
+            if plan.len() >= plan_cap {
+                break;
+            }
+            let Some(r) = self.reqs.get(&id) else { continue };
+            for (layer, head, block) in r.ws.ranked_blocks_capped(plan_cap - plan.len()) {
+                plan.push(crate::memory::BlockKey::new(id, layer, head, block));
+            }
+        }
+        // keep one gather's worst-case pins (every head at full budget)
+        // worth of slots free for demand misses — clamped so a small HBM
+        // cache (where that exceeds capacity) can still stage half of it
+        let headroom = (self.spec().n_kv_heads * self.budget_needed())
+            .min(self.kv.cache_capacity_slots() / 2);
+        self.kv
+            .prefetch_working_set(&plan, self.cfg.max_prefetch_blocks, headroom)
+    }
+
     fn decode_ws_bytes(&mut self, req: ReqId) -> usize {
         let bb = self.kv.block_bytes();
         let spec = self.kv.spec();
@@ -508,6 +539,24 @@ impl Backend for PjrtBackend {
             self.run_prefill(work, requests, &mut out)?;
         }
 
+        // Pre-flight: a decode step allocates DRAM blocks only for
+        // requests sitting on a block boundary. Fail typed BEFORE
+        // mutating anyone's KV so an eviction never leaves the surviving
+        // batch-mates with a half-applied step (duplicated KV on re-run).
+        let mut needed = 0usize;
+        let mut boundary_req = None;
+        for &id in &batch.decodes {
+            let n = self.kv.decode_slots_needed(id);
+            if n > 0 && boundary_req.is_none() {
+                boundary_req = Some(id);
+            }
+            needed += n;
+        }
+        if needed > self.kv.dram_free_slots() {
+            let req = boundary_req.unwrap_or(batch.decodes[0]);
+            return Err(MemoryError::DramExhausted { req }.into());
+        }
+
         // split decodes into compiled batch buckets
         let max_b = self
             .rt
@@ -522,9 +571,15 @@ impl Backend for PjrtBackend {
         }
 
         let iter = self.kv.end_iteration();
-        out.blocks_loaded = iter.blocks_loaded;
-        out.load_time_s = iter.load.modeled_s;
+        out.blocks_loaded = iter.blocks_loaded + iter.prefetch_blocks;
+        out.load_time_s = iter.load.modeled_s + iter.prefetch.modeled_s;
         out.save_time_s = iter.save.modeled_s;
+        // demand loads are the PCIe time the gather had to wait on; the
+        // staged (prefetch) stream overlapped compute
+        out.stall_time_s = iter.load.modeled_s;
+        out.prefetch_blocks = iter.prefetch_blocks;
+        out.prefetch_hits = iter.prefetch_hits;
+        out.prefetch_wasted = iter.prefetch_wasted;
         out.iter_time_s = t0.elapsed().as_secs_f64();
         Ok(out)
     }

@@ -46,6 +46,11 @@ impl Engine {
 
             let outcome = self.core.step(self.clock_s).map_err(anyhow::Error::new)?;
             if !outcome.ran_batch {
+                // typed rejections/evictions ARE progress: requests left
+                // the system, re-plan immediately
+                if !outcome.rejected.is_empty() || !outcome.evicted.is_empty() {
+                    continue;
+                }
                 // admission blocked and nothing running: wait for the next
                 // event (arrival won't help if HBM is the blocker, but a
                 // running request must exist whenever something is blocked;

@@ -31,7 +31,8 @@ pub fn run_sim(cfg: ServingConfig, model: &ModelSpec, rate: f64, seed: u64) -> R
     let hw = HardwareSpec::a100_40gb();
     let n = ((rate * 240.0).ceil() as usize).clamp(16, 96);
     let backend = SimBackend::new(cfg.clone(), model.clone(), hw.clone());
-    let sched = Scheduler::new(cfg, model.clone(), hw.hbm_kv_bytes);
+    let sched =
+        Scheduler::new(cfg, model.clone(), hw.hbm_kv_bytes).with_dram_capacity(hw.dram_bytes);
     let engine = Engine::new(sched, Box::new(backend));
     let trace = generate(&workload_for(model, rate, seed), n, 0);
     engine.run_trace(trace, 3.0e4).unwrap().metrics
@@ -266,6 +267,43 @@ pub fn fig15(rates: &[f64]) -> String {
     render_table(
         "Fig 15: throughput & KV loads/iter, with vs without working-set batch control (LWM-7B)",
         &["rate", "tok/s_WC", "tok/s_noWC", "loads_WC", "loads_noWC"],
+        &rows,
+    )
+}
+
+// ------------------------------------------------- Prefetch ablation (PF)
+
+/// Run the working-set prefetch ablation at one rate: the full system
+/// vs the identical config with prefetching off (equal workload, same
+/// seed). Returns `(prefetch_on, prefetch_off)` metrics.
+pub fn prefetch_ablation_metrics(rate: f64, seed: u64) -> (RunMetrics, RunMetrics) {
+    let model = ModelSpec::lwm_7b();
+    let pair = crate::baselines::prefetch_ablation(2048, 2048, model.n_layers);
+    let on = run_sim(pair[0].cfg.clone(), &model, rate, seed);
+    let off = run_sim(pair[1].cfg.clone(), &model, rate, seed);
+    (on, off)
+}
+
+/// Prefetch ablation table: iteration/stall time with the prefetcher on
+/// vs off, plus the staged-block hit rate and waste (the `bench`
+/// subcommand emits the same numbers as `BENCH_prefetch.json`).
+pub fn fig_prefetch(rates: &[f64]) -> String {
+    let mut rows = Vec::new();
+    for &rate in rates {
+        let (on, off) = prefetch_ablation_metrics(rate, 11);
+        rows.push(vec![
+            format!("{rate}"),
+            f(on.iter_time.mean() * 1e3),
+            f(off.iter_time.mean() * 1e3),
+            f(on.stall_time.mean() * 1e3),
+            f(off.stall_time.mean() * 1e3),
+            format!("{:.0}%", 100.0 * on.prefetch_hit_rate()),
+            on.prefetch_wasted.to_string(),
+        ]);
+    }
+    render_table(
+        "Prefetch ablation: mean iteration & stall time (ms), prefetch on vs off (LWM-7B)",
+        &["rate", "iter_on", "iter_off", "stall_on", "stall_off", "pf_hit", "pf_wasted"],
         &rows,
     )
 }

@@ -38,6 +38,7 @@ fn main() -> Result<()> {
         Some("serve") => serve(&args),
         Some("simulate") => simulate(&args),
         Some("bench-transfer") => bench_transfer(),
+        Some("bench") => bench(&args),
         _ => {
             println!("{}", HELP);
             Ok(())
@@ -72,8 +73,14 @@ USAGE: sparseserve <info|serve|simulate|bench-transfer> [flags]
 
   info      print artifact + model information  [--config tiny-llm]
   bench-transfer            Fig. 4 PCIe bandwidth table
+  bench     working-set prefetch smoke benchmark: simulates the same
+            workload with the prefetcher on and off, prints the
+            iteration/stall table and writes BENCH_prefetch.json
+      --out BENCH_prefetch.json  output path
+      --rates 0.2,0.35           comma-separated request rates
 
-Systems: vllm | vllm-s | vllm-so | sparseserve
+Systems: vllm | vllm-s | vllm-so | sparseserve | sparseserve-np
+         (sparseserve-np = full system with working-set prefetching off)
 
 Request lifecycle (library API): build requests with the SubmitRequest
 builder — .max_new(n) .stop_tokens(v) .priority(Interactive|Batch)
@@ -138,7 +145,10 @@ fn serve(args: &Args) -> Result<()> {
         move || {
             let rt = Arc::new(Runtime::load(Runtime::default_dir(&config))?);
             let backend = PjrtBackend::new(rt, build_cfg.clone(), hbm, dram);
-            let sched = Scheduler::new(build_cfg, build_spec, hbm);
+            // offload admission is bounded by the DRAM pool backing the
+            // KV manager — oversubscription backpressures instead of
+            // exhausting the pool mid-decode
+            let sched = Scheduler::new(build_cfg, build_spec, hbm).with_dram_capacity(dram);
             Ok((sched, Box::new(backend) as Box<dyn sparseserve::engine::Backend>))
         },
     );
@@ -198,11 +208,66 @@ fn simulate(args: &Args) -> Result<()> {
     };
     let trace = generate(&wl, n, 1);
     let backend = SimBackend::new(cfg.clone(), spec.clone(), hw.clone());
-    let sched = Scheduler::new(cfg, spec, hw.hbm_kv_bytes);
+    let sched =
+        Scheduler::new(cfg, spec, hw.hbm_kv_bytes).with_dram_capacity(hw.dram_bytes);
     let engine = Engine::new(sched, Box::new(backend));
     println!("[simulate] {model} x {system} @ {rate} rps, {n} requests");
     let report = engine.run_trace(trace, 1e7)?;
     println!("[simulate] {}", report.metrics.summary());
+    Ok(())
+}
+
+fn bench(args: &Args) -> Result<()> {
+    use sparseserve::util::json::Value;
+    use std::collections::BTreeMap;
+
+    let out_path = args.get_or("out", "BENCH_prefetch.json");
+    let raw = args.get_or("rates", "0.2,0.35");
+    let rates: Vec<f64> = raw
+        .split(',')
+        .map(|r| {
+            r.trim()
+                .parse::<f64>()
+                .map_err(|e| anyhow!("--rates entry '{}': {e}", r.trim()))
+        })
+        .collect::<Result<_>>()?;
+    if rates.is_empty() {
+        return Err(anyhow!("--rates must name at least one request rate"));
+    }
+
+    println!("== prefetch on/off smoke (LWM-7B, seed 11) ==");
+    let mut points = Vec::new();
+    for &rate in &rates {
+        let (on, off) = sparseserve::figures::prefetch_ablation_metrics(rate, 11);
+        println!(
+            "rate {rate}: iter {:.2}ms (on) vs {:.2}ms (off) | stall {:.2}ms vs {:.2}ms | \
+             prefetch hit {:.0}% wasted {}",
+            on.iter_time.mean() * 1e3,
+            off.iter_time.mean() * 1e3,
+            on.stall_time.mean() * 1e3,
+            off.stall_time.mean() * 1e3,
+            100.0 * on.prefetch_hit_rate(),
+            on.prefetch_wasted,
+        );
+        let mut p = BTreeMap::new();
+        p.insert("rate".into(), Value::Num(rate));
+        p.insert("iter_ms_prefetch_on".into(), Value::Num(on.iter_time.mean() * 1e3));
+        p.insert("iter_ms_prefetch_off".into(), Value::Num(off.iter_time.mean() * 1e3));
+        p.insert("stall_ms_prefetch_on".into(), Value::Num(on.stall_time.mean() * 1e3));
+        p.insert("stall_ms_prefetch_off".into(), Value::Num(off.stall_time.mean() * 1e3));
+        p.insert("throughput_on".into(), Value::Num(on.throughput()));
+        p.insert("throughput_off".into(), Value::Num(off.throughput()));
+        p.insert("prefetch_hit_rate".into(), Value::Num(on.prefetch_hit_rate()));
+        p.insert("prefetch_staged_blocks".into(), Value::Num(on.prefetch_blocks as f64));
+        p.insert("prefetch_wasted_blocks".into(), Value::Num(on.prefetch_wasted as f64));
+        points.push(Value::Obj(p));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Value::Str("prefetch_ablation".into()));
+    doc.insert("model".into(), Value::Str("lwm-7b".into()));
+    doc.insert("points".into(), Value::Arr(points));
+    std::fs::write(&out_path, Value::Obj(doc).to_string())?;
+    println!("[bench] wrote {out_path}");
     Ok(())
 }
 

@@ -9,7 +9,7 @@
 //! evicted. Generic over the cached value (an HBM `SlotId` for the real
 //! backend; `()` for the simulator, which only tracks residency).
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeSet, HashMap, HashSet};
 
 use super::BlockKey;
 
@@ -23,13 +23,18 @@ struct Entry<V> {
 /// §Perf note: recency is indexed by a `BTreeSet<(last_use, key)>` so
 /// get/insert/evict are O(log n) instead of the original O(n)
 /// min-scan per eviction (8.8 µs -> ~0.6 µs per op at 1k residents,
-/// see EXPERIMENTS.md §Perf).
+/// see EXPERIMENTS.md §Perf). `remove_request` is likewise indexed by a
+/// per-request key set instead of scanning the whole map.
 #[derive(Debug)]
 pub struct LruCache<V> {
     capacity: usize,
     map: HashMap<BlockKey, Entry<V>>,
     /// (last_use, key) ordered oldest-first.
     order: BTreeSet<(u64, BlockKey)>,
+    /// Per-request resident keys (O(request) removal on release).
+    by_req: HashMap<u32, HashSet<BlockKey>>,
+    /// Entries with `pins > 0` (cheap `can_accept` check).
+    pinned_entries: usize,
     tick: u64,
     pub hits: u64,
     pub misses: u64,
@@ -37,11 +42,17 @@ pub struct LruCache<V> {
 }
 
 impl<V> LruCache<V> {
+    /// A capacity of 0 is clamped to 1: a zero-slot cache would have to
+    /// evict from an empty order set on the first insert and violate the
+    /// `len <= capacity` invariant.
     pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
         Self {
             capacity,
             map: HashMap::with_capacity(capacity.min(1 << 20)),
             order: BTreeSet::new(),
+            by_req: HashMap::new(),
+            pinned_entries: 0,
             tick: 0,
             hits: 0,
             misses: 0,
@@ -104,41 +115,71 @@ impl<V> LruCache<V> {
         }
         self.map.insert(key, Entry { value, last_use: self.tick, pins: 0 });
         self.order.insert((self.tick, key));
+        self.by_req.entry(key.req).or_default().insert(key);
         evicted
+    }
+
+    /// Whether an insert can succeed without panicking: either there is a
+    /// free slot, or at least one resident entry is unpinned (evictable).
+    /// Prefetch staging checks this so it never stages past what the
+    /// cache can hold.
+    pub fn can_accept(&self) -> bool {
+        self.map.len() < self.capacity || self.pinned_entries < self.map.len()
+    }
+
+    /// Resident entries currently pinned (prefetch staging headroom
+    /// accounting: `capacity - pinned_len` slots remain free or
+    /// evictable for demand misses).
+    pub fn pinned_len(&self) -> usize {
+        self.pinned_entries
     }
 
     /// Remove a specific block (e.g. on request completion).
     pub fn remove(&mut self, key: &BlockKey) -> Option<V> {
         let e = self.map.remove(key)?;
         self.order.remove(&(e.last_use, *key));
+        if e.pins > 0 {
+            self.pinned_entries -= 1;
+        }
+        if let Some(set) = self.by_req.get_mut(&key.req) {
+            set.remove(key);
+            if set.is_empty() {
+                self.by_req.remove(&key.req);
+            }
+        }
         Some(e.value)
     }
 
     /// Remove every block of a request; returns the values (HBM slots to
-    /// free).
+    /// free). O(blocks of the request) via the per-request index.
     pub fn remove_request(&mut self, req: u32) -> Vec<V> {
-        let keys: Vec<BlockKey> =
-            self.map.keys().filter(|k| k.req == req).copied().collect();
+        let keys: Vec<BlockKey> = self
+            .by_req
+            .remove(&req)
+            .map(|set| set.into_iter().collect())
+            .unwrap_or_default();
         keys.iter().map(|k| self.remove(k).unwrap()).collect()
     }
 
     /// Evict the least recently used *unpinned* entry, returning it.
     /// O(log n) plus a skip over currently pinned entries (few: only the
-    /// in-flight gather pins).
+    /// in-flight gather and prefetch stages pin).
     pub fn evict_lru(&mut self) -> Option<(BlockKey, V)> {
         let victim = self
             .order
             .iter()
             .map(|(_, k)| *k)
             .find(|k| self.map.get(k).map(|e| e.pins == 0).unwrap_or(false))?;
-        let e = self.map.remove(&victim).unwrap();
-        self.order.remove(&(e.last_use, victim));
         self.evictions += 1;
-        Some((victim, e.value))
+        let value = self.remove(&victim).unwrap();
+        Some((victim, value))
     }
 
     pub fn pin(&mut self, key: &BlockKey) {
         if let Some(e) = self.map.get_mut(key) {
+            if e.pins == 0 {
+                self.pinned_entries += 1;
+            }
             e.pins += 1;
         }
     }
@@ -146,7 +187,12 @@ impl<V> LruCache<V> {
     pub fn unpin(&mut self, key: &BlockKey) {
         if let Some(e) = self.map.get_mut(key) {
             debug_assert!(e.pins > 0, "unpin of unpinned {key:?}");
-            e.pins = e.pins.saturating_sub(1);
+            if e.pins > 0 {
+                e.pins -= 1;
+                if e.pins == 0 {
+                    self.pinned_entries -= 1;
+                }
+            }
         }
     }
 
@@ -210,6 +256,38 @@ mod tests {
         c.insert(key(1), 1);
         c.pin(&key(1));
         c.insert(key(2), 2);
+    }
+
+    #[test]
+    fn capacity_zero_is_clamped_and_len_stays_bounded() {
+        // A 0-capacity cache used to evict from an empty order set and
+        // still insert, letting len > capacity. It now clamps to 1.
+        let mut c = LruCache::new(0);
+        assert_eq!(c.capacity(), 1);
+        c.insert(key(1), 1);
+        assert_eq!(c.len(), 1);
+        let ev = c.insert(key(2), 2).unwrap();
+        assert_eq!(ev, (key(1), 1));
+        assert_eq!(c.len(), 1);
+        assert!(c.len() <= c.capacity());
+    }
+
+    #[test]
+    fn can_accept_tracks_pinned_saturation() {
+        let mut c = LruCache::new(2);
+        assert!(c.can_accept());
+        c.insert(key(1), 1);
+        c.insert(key(2), 2);
+        c.pin(&key(1));
+        assert!(c.can_accept(), "one unpinned entry remains evictable");
+        c.pin(&key(2));
+        assert!(!c.can_accept(), "full of pinned entries");
+        c.unpin(&key(2));
+        assert!(c.can_accept());
+        // double-pin keeps the entry counted once
+        c.pin(&key(1));
+        c.unpin(&key(1));
+        assert!(!c.evict_lru().map(|(k, _)| k == key(1)).unwrap_or(false));
     }
 
     #[test]

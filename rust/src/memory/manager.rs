@@ -24,12 +24,17 @@ use crate::config::ModelSpec;
 use super::cache::LruCache;
 use super::metadata::Cuboid;
 use super::pool::{BlockPool, SlotId};
+use super::prefetch::{PrefetchEngine, PrefetchStats, SendConst, SendMut};
 use super::transfer::{ScatterEntry, TransferEngine, TransferStats};
-use super::BlockKey;
+use super::{BlockKey, MemoryError};
 
 pub type ReqId = u32;
 
 pub const NEG_INF: f32 = -1e30;
+
+/// Copy workers for asynchronous prefetch staging (FlashH2D runs on its
+/// own stream; here, on its own threads).
+const PREFETCH_COPY_WORKERS: usize = 2;
 
 /// Per-request block state. During a decode step layers are appended in
 /// order, so per-layer token counts may transiently differ by one; every
@@ -48,10 +53,18 @@ struct RequestKv {
 /// Per-iteration transfer accounting (Fig. 1 right axis, Fig. 15).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct IterStats {
-    /// Blocks loaded from DRAM (cache misses) this iteration.
+    /// Blocks loaded on demand from DRAM (cache misses) this iteration.
     pub blocks_loaded: usize,
     pub load: TransferStats,
     pub save: TransferStats,
+    /// Blocks staged ahead of need (overlapped with compute).
+    pub prefetch_blocks: usize,
+    /// Modeled PCIe time of the staged bytes.
+    pub prefetch: TransferStats,
+    /// Staged blocks consumed by a gather this iteration.
+    pub prefetch_hits: usize,
+    /// Staged blocks this iteration never touched.
+    pub prefetch_wasted: usize,
 }
 
 pub struct KvManager {
@@ -66,6 +79,7 @@ pub struct KvManager {
     requests: HashMap<ReqId, RequestKv>,
     iter: IterStats,
     pinned: Vec<BlockKey>,
+    prefetch: PrefetchEngine,
 }
 
 impl KvManager {
@@ -91,6 +105,7 @@ impl KvManager {
             requests: HashMap::new(),
             iter: IterStats::default(),
             pinned: Vec::new(),
+            prefetch: PrefetchEngine::new(PREFETCH_COPY_WORKERS),
         }
     }
 
@@ -123,6 +138,12 @@ impl KvManager {
     }
 
     pub fn release(&mut self, req: ReqId) {
+        // land in-flight staging copies before freeing their source
+        // (DRAM) and destination (HBM) slots
+        self.prefetch.wait_staged();
+        for key in self.prefetch.cancel_request(req) {
+            self.cache.unpin(&key);
+        }
         if let Some(r) = self.requests.remove(&req) {
             for layer in r.blocks {
                 for head in layer {
@@ -197,10 +218,41 @@ impl KvManager {
         (self.cache.hits, self.cache.misses, self.cache.evictions)
     }
 
+    /// Cumulative prefetch accounting.
+    pub fn prefetch_stats(&self) -> PrefetchStats {
+        self.prefetch.stats
+    }
+
+    /// Free DRAM block slots (pre-flight admission check input).
+    pub fn dram_free_slots(&self) -> usize {
+        self.dram.n_free()
+    }
+
+    /// HBM residency-cache capacity in block slots (prefetch headroom
+    /// sizing input).
+    pub fn cache_capacity_slots(&self) -> usize {
+        self.cache.capacity()
+    }
+
+    /// DRAM slots one decode step will allocate for `req`: a step adds
+    /// exactly one token per layer, so new blocks are needed only when
+    /// the request's length sits on a block boundary.
+    pub fn decode_slots_needed(&self, req: ReqId) -> usize {
+        let len = self.seq_len(req);
+        if len % self.spec.block_size == 0 {
+            self.spec.n_layers * self.spec.n_kv_heads
+        } else {
+            0
+        }
+    }
+
     // ------------------------------------------------------------ save path
 
     /// Store one layer's prefill KV. `k`/`v` are `[Hkv, T_pad, Dh]`
     /// row-major with `t_real <= t_pad` valid tokens.
+    ///
+    /// Errors with [`MemoryError::DramExhausted`] when the DRAM pool runs
+    /// out of slots; the engine evicts the request instead of panicking.
     pub fn append_prefill_layer(
         &mut self,
         req: ReqId,
@@ -209,7 +261,7 @@ impl KvManager {
         v: &[f32],
         t_pad: usize,
         t_real: usize,
-    ) {
+    ) -> Result<(), MemoryError> {
         let (bs, dh, hkv) = (self.spec.block_size, self.spec.head_dim, self.spec.n_kv_heads);
         debug_assert_eq!(k.len(), hkv * t_pad * dh);
         debug_assert_eq!(v.len(), hkv * t_pad * dh);
@@ -236,7 +288,9 @@ impl KvManager {
                     let off = abs % bs;
                     let run = (bs - off).min(t_real - tok);
                     while r.blocks[layer][h].len() <= blk {
-                        let slot = dram.alloc().expect("DRAM exhausted");
+                        let Some(slot) = dram.alloc() else {
+                            return Err(MemoryError::DramExhausted { req });
+                        };
                         r.blocks[layer][h].push(slot);
                     }
                     let slot = r.blocks[layer][h][blk];
@@ -261,11 +315,21 @@ impl KvManager {
         self.iter.save.merge(&stats);
 
         self.advance_layer(req, layer, t_real);
+        Ok(())
     }
 
     /// Store one decode step's KV for one request+layer.
     /// `k_row`/`v_row`: `[Hkv, Dh]`.
-    pub fn append_decode_token(&mut self, req: ReqId, layer: usize, k_row: &[f32], v_row: &[f32]) {
+    ///
+    /// Errors with [`MemoryError::DramExhausted`] when the DRAM pool runs
+    /// out of slots; the engine evicts the request instead of panicking.
+    pub fn append_decode_token(
+        &mut self,
+        req: ReqId,
+        layer: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) -> Result<(), MemoryError> {
         let (bs, dh, hkv) = (self.spec.block_size, self.spec.head_dim, self.spec.n_kv_heads);
         debug_assert_eq!(k_row.len(), hkv * dh);
         let pos = self.layer_len(req, layer);
@@ -282,7 +346,9 @@ impl KvManager {
             let r = self.requests.get_mut(&req).expect("unregistered request");
             for h in 0..hkv {
                 while r.blocks[layer][h].len() <= blk {
-                    let slot = dram.alloc().expect("DRAM exhausted");
+                    let Some(slot) = dram.alloc() else {
+                        return Err(MemoryError::DramExhausted { req });
+                    };
                     r.blocks[layer][h].push(slot);
                 }
                 let slot = r.blocks[layer][h][blk];
@@ -304,6 +370,7 @@ impl KvManager {
         self.iter.save.merge(&stats);
 
         self.advance_layer(req, layer, 1);
+        Ok(())
     }
 
     /// Advance a layer's token count, sealing metadata for every newly
@@ -414,6 +481,10 @@ impl KvManager {
     /// ties by id — computed by the executor from device scores).
     /// `k_out`/`v_out`: `[Hkv, S, Dh]`, `mask_out`: `[Hkv, S]` with
     /// `S = budget_blocks * block_size`. Returns sealed blocks gathered.
+    ///
+    /// Errors with [`MemoryError::HbmExhausted`] when a miss cannot get
+    /// an HBM slot (everything pinned — the batch-control invariant was
+    /// violated); the engine evicts the request instead of panicking.
     pub fn gather_into(
         &mut self,
         req: ReqId,
@@ -423,7 +494,7 @@ impl KvManager {
         k_out: &mut [f32],
         v_out: &mut [f32],
         mask_out: &mut [f32],
-    ) -> usize {
+    ) -> Result<usize, MemoryError> {
         let (bs, dh, hkv) = (self.spec.block_size, self.spec.head_dim, self.spec.n_kv_heads);
         let s_len = budget_blocks * bs;
         debug_assert_eq!(sealed_sel.len(), hkv);
@@ -437,21 +508,46 @@ impl KvManager {
         // Phase 1: residency — batch all misses into ONE engine burst
         // (what FlashH2D's fused kernel exploits).
         if self.offload {
+            // staged bytes must have landed before we read them
+            self.prefetch.wait_staged();
             let mut to_load: Vec<(SlotId, SlotId)> = Vec::new();
             let mut miss_keys: Vec<BlockKey> = Vec::new();
-            for (h, sel) in sealed_sel.iter().enumerate() {
+            let mut alloc_err = None;
+            'heads: for (h, sel) in sealed_sel.iter().enumerate() {
                 for &b in sel {
                     let key = BlockKey::new(req, layer as u16, h as u16, b);
                     if self.cache.get(&key).is_some() {
+                        if self.prefetch.note_access(&key) {
+                            // consume the stage pin: the prefetcher earned
+                            // this hit, the gather re-pins below
+                            self.cache.unpin(&key);
+                            self.iter.prefetch_hits += 1;
+                        }
                         self.cache.pin(&key);
                         self.pinned.push(key);
                     } else {
-                        let hbm_slot = self.alloc_hbm_slot();
+                        let hbm_slot = match self.alloc_hbm_slot(req) {
+                            Ok(s) => s,
+                            Err(e) => {
+                                alloc_err = Some(e);
+                                break 'heads;
+                            }
+                        };
                         let dram_slot = self.requests[&req].blocks[layer][h][b as usize];
                         to_load.push((dram_slot, hbm_slot));
                         miss_keys.push(key);
                     }
                 }
+            }
+            if let Some(e) = alloc_err {
+                // unwind without leaking: free unused HBM slots, drop pins
+                for &(_, hbm_slot) in &to_load {
+                    self.hbm.free(hbm_slot);
+                }
+                for key in self.pinned.drain(..) {
+                    self.cache.unpin(&key);
+                }
+                return Err(e);
             }
             if !to_load.is_empty() {
                 let stats = self.engine.load(&self.dram, &mut self.hbm, &to_load);
@@ -509,25 +605,123 @@ impl KvManager {
         for key in self.pinned.drain(..) {
             self.cache.unpin(&key);
         }
-        gathered
+        Ok(gathered)
     }
 
-    fn alloc_hbm_slot(&mut self) -> SlotId {
+    fn alloc_hbm_slot(&mut self, req: ReqId) -> Result<SlotId, MemoryError> {
         if let Some(slot) = self.hbm.alloc() {
-            return slot;
+            return Ok(slot);
         }
         // HBM full: evict the LRU unpinned resident block, reuse its slot.
-        let (_, slot) = self
-            .cache
-            .evict_lru()
-            .expect("HBM exhausted with everything pinned (working set > HBM)");
-        slot
+        // With everything pinned the tier is truly exhausted — a typed
+        // error the engine turns into an eviction, not a panic.
+        match self.cache.evict_lru() {
+            Some((_, slot)) => Ok(slot),
+            None => Err(MemoryError::HbmExhausted { req }),
+        }
     }
 
-    /// Finish an iteration: return (and reset) its transfer stats.
+    // ----------------------------------------------------- prefetch path
+
+    /// Stage `plan` (recency-ranked working-set blocks, highest priority
+    /// first) into the HBM cache ahead of the next batch, up to
+    /// `max_blocks`. Slots are reserved and cache entries pinned
+    /// synchronously; the byte movement runs on the prefetch engine's
+    /// copy workers and is awaited before any gather reads it. Returns
+    /// blocks staged. Skips blocks that are already resident, not yet
+    /// sealed, or unknown; stops while staging would leave fewer than
+    /// `headroom` free-or-evictable slots for demand misses (so a burst
+    /// of speculative stages can never pin HBM shut and turn an
+    /// unpredicted miss into a spurious `HbmExhausted` eviction).
+    pub fn prefetch_working_set(
+        &mut self,
+        plan: &[BlockKey],
+        max_blocks: usize,
+        headroom: usize,
+    ) -> usize {
+        if !self.offload || max_blocks == 0 {
+            return 0;
+        }
+        let bs = self.spec.block_size;
+        let slot_floats = self.hbm.slot_floats();
+        let mut staged = 0usize;
+        for key in plan {
+            if staged >= max_blocks {
+                break;
+            }
+            if self.cache.contains(key) {
+                continue;
+            }
+            let (layer, head, blk) =
+                (key.layer as usize, key.head as usize, key.block as usize);
+            let Some(r) = self.requests.get(&key.req) else { continue };
+            if layer >= r.blocks.len() || head >= r.blocks[layer].len() {
+                continue;
+            }
+            // only sealed blocks live in DRAM; the open block is gathered
+            // directly from its device-resident slot
+            if blk >= r.layer_len[layer] / bs {
+                continue;
+            }
+            let Some(&dram_slot) = r.blocks[layer][head].get(blk) else { continue };
+            let free_after = self
+                .cache
+                .capacity()
+                .saturating_sub(self.cache.pinned_len() + 1);
+            if !self.cache.can_accept() || free_after < headroom {
+                break; // staging further would squeeze out demand misses
+            }
+            let hbm_slot = match self.alloc_hbm_slot(key.req) {
+                Ok(s) => s,
+                Err(_) => break,
+            };
+            // async FlashH2D stage: disjoint slots, awaited by
+            // `wait_staged` before any read (see PrefetchEngine docs)
+            let src = SendConst(self.dram.slot(dram_slot).as_ptr());
+            let dst = SendMut(self.hbm.slot_mut(hbm_slot).as_mut_ptr());
+            self.prefetch.submit_copy(move || unsafe {
+                std::ptr::copy_nonoverlapping(src.0, dst.0, slot_floats);
+            });
+            if let Some((_, freed)) = self.cache.insert(*key, hbm_slot) {
+                self.hbm.free(freed);
+            }
+            self.cache.pin(key);
+            self.prefetch.mark_staged(*key, slot_floats * 4);
+            staged += 1;
+        }
+        if staged > 0 {
+            self.iter.prefetch_blocks += staged;
+            self.iter.prefetch.merge(&TransferStats {
+                blocks: staged,
+                bytes: staged * slot_floats * 4,
+                calls: 1,
+                modeled_s: self.engine.load_time_model(staged, slot_floats * 4),
+                gpu_interference: 1.0,
+            });
+        }
+        staged
+    }
+
+    /// Finish an iteration: retire unconsumed stages (wasted prefetch,
+    /// blocks stay resident but unpinned) and return (and reset) the
+    /// iteration's transfer stats.
     pub fn end_iteration(&mut self) -> IterStats {
         debug_assert!(self.pinned.is_empty(), "gather left pins behind");
+        self.prefetch.wait_staged();
+        let wasted = self.prefetch.end_iteration();
+        self.iter.prefetch_wasted += wasted.len();
+        for key in &wasted {
+            self.cache.unpin(key);
+        }
         std::mem::take(&mut self.iter)
+    }
+}
+
+impl Drop for KvManager {
+    fn drop(&mut self) {
+        // in-flight staging copies hold raw pointers into the pools;
+        // they must land before the pool buffers are freed
+        self.prefetch.wait_staged();
     }
 }
 
@@ -588,7 +782,7 @@ mod tests {
         m.register(1);
         let (k, v) = prefill_kv(2, 12, 4); // 3 blocks of 4
         for layer in 0..2 {
-            m.append_prefill_layer(1, layer, &k, &v, 12, 12);
+            m.append_prefill_layer(1, layer, &k, &v, 12, 12).unwrap();
         }
         assert_eq!(m.seq_len(1), 12);
         assert_eq!(m.n_sealed(1, 0), 3);
@@ -601,7 +795,7 @@ mod tests {
         let mut vo = vec![0.0; 2 * s * 4];
         let mut mo = vec![0.0; 2 * s];
         let sel = vec![vec![2u32, 0u32], vec![2u32, 0u32]];
-        let gathered = m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo);
+        let gathered = m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo).unwrap();
         assert_eq!(gathered, 4);
         // head 0, slot 0 = block 2 -> tokens 8..12
         for tok in 0..4 {
@@ -628,7 +822,7 @@ mod tests {
             for layer in 0..2 {
                 let k: Vec<f32> = (0..2 * dh).map(|i| (t * 10 + i) as f32).collect();
                 let v = vec![t as f32; 2 * dh];
-                m.append_decode_token(7, layer, &k, &v);
+                m.append_decode_token(7, layer, &k, &v).unwrap();
             }
             assert_eq!(m.seq_len(7), t + 1);
         }
@@ -654,7 +848,7 @@ mod tests {
         for layer in 0..2 {
             let k = vec![1.5; 2 * 4];
             let v = vec![2.5; 2 * 4];
-            m.append_decode_token(3, layer, &k, &v);
+            m.append_decode_token(3, layer, &k, &v).unwrap();
         }
         let budget = 2;
         let s = budget * 4;
@@ -662,7 +856,7 @@ mod tests {
         let mut vo = vec![0.0; 2 * s * 4];
         let mut mo = vec![0.0; 2 * s];
         let sel = vec![vec![], vec![]];
-        m.gather_into(3, 0, &sel, budget, &mut ko, &mut vo, &mut mo);
+        m.gather_into(3, 0, &sel, budget, &mut ko, &mut vo, &mut mo).unwrap();
         // open block in last slot: first token valid, rest masked
         assert_eq!(mo[4], 0.0); // head 0, slot 1, token 0
         assert_eq!(mo[5], NEG_INF);
@@ -676,7 +870,7 @@ mod tests {
         m.register(1);
         let (k, v) = prefill_kv(2, 8, 4);
         for layer in 0..2 {
-            m.append_prefill_layer(1, layer, &k, &v, 8, 8);
+            m.append_prefill_layer(1, layer, &k, &v, 8, 8).unwrap();
         }
         let budget = 3;
         let s = budget * 4;
@@ -684,10 +878,10 @@ mod tests {
         let mut ko = vec![0.0; 2 * s * 4];
         let mut vo = vec![0.0; 2 * s * 4];
         let mut mo = vec![0.0; 2 * s];
-        m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo);
+        m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo).unwrap();
         let s1 = m.end_iteration();
         assert_eq!(s1.blocks_loaded, 4); // cold: all misses
-        m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo);
+        m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo).unwrap();
         let s2 = m.end_iteration();
         assert_eq!(s2.blocks_loaded, 0); // warm: all hits
         assert_eq!(s2.load.modeled_s, 0.0);
@@ -702,7 +896,7 @@ mod tests {
         m.register(1);
         let (k, v) = prefill_kv(2, 8, 4);
         for layer in 0..2 {
-            m.append_prefill_layer(1, layer, &k, &v, 8, 8);
+            m.append_prefill_layer(1, layer, &k, &v, 8, 8).unwrap();
         }
         let budget = 3;
         let s = budget * 4;
@@ -712,7 +906,7 @@ mod tests {
         for it in 0..4 {
             let b = (it % 2) as u32;
             let sel = vec![vec![b], vec![b]];
-            m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo);
+            m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo).unwrap();
             let st = m.end_iteration();
             assert_eq!(st.blocks_loaded, 2, "thrash must keep loading (iter {it})");
         }
@@ -726,7 +920,7 @@ mod tests {
         m.register(1);
         let (k, v) = prefill_kv(2, 8, 4);
         for layer in 0..2 {
-            m.append_prefill_layer(1, layer, &k, &v, 8, 8);
+            m.append_prefill_layer(1, layer, &k, &v, 8, 8).unwrap();
         }
         let used = m.dram_bytes_used();
         assert!(used > 0);
@@ -737,7 +931,7 @@ mod tests {
         let mut ko = vec![0.0; 2 * s * 4];
         let mut vo = vec![0.0; 2 * s * 4];
         let mut mo = vec![0.0; 2 * s];
-        m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo);
+        m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo).unwrap();
         m.end_iteration();
         m.release(1);
         assert_eq!(m.dram_bytes_used(), 0);
@@ -749,7 +943,7 @@ mod tests {
         let mut m = mk_manager(false, 8);
         m.register(1);
         let (k, v) = prefill_kv(2, 8, 4);
-        m.append_prefill_layer(1, 0, &k, &v, 8, 8);
+        m.append_prefill_layer(1, 0, &k, &v, 8, 8).unwrap();
         // 2 heads x 2 blocks x 1 layer
         assert_eq!(m.hbm_bytes_used(), 4 * m.block_bytes());
         // gather costs no PCIe
@@ -759,10 +953,170 @@ mod tests {
         let mut ko = vec![0.0; 2 * s * 4];
         let mut vo = vec![0.0; 2 * s * 4];
         let mut mo = vec![0.0; 2 * s];
-        m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo);
+        m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo).unwrap();
         let st = m.end_iteration();
         assert_eq!(st.blocks_loaded, 0);
         assert_eq!(st.load.modeled_s, 0.0);
+    }
+
+    #[test]
+    fn dram_exhaustion_is_a_typed_error_not_a_panic() {
+        // 2 layers x 2 heads x N blocks: a 4-slot DRAM pool fills after
+        // one block per (layer, head)
+        let spec = tiny_spec();
+        let slot_bytes = 2 * spec.block_size * spec.head_dim * 4;
+        let mut m = KvManager::new(
+            spec,
+            8 * slot_bytes,
+            4 * slot_bytes,
+            true,
+            engine_for(TransferKind::Flash, HardwareSpec::a100_40gb()),
+        );
+        m.register(1);
+        let (k, v) = prefill_kv(2, 4, 4); // 1 block/head/layer = 4 slots
+        m.append_prefill_layer(1, 0, &k, &v, 4, 4).unwrap();
+        m.append_prefill_layer(1, 1, &k, &v, 4, 4).unwrap();
+        // the 5th slot does not exist: typed error, no panic
+        let err = m.append_decode_token(1, 0, &[0.0; 8], &[0.0; 8]).unwrap_err();
+        assert_eq!(err, MemoryError::DramExhausted { req: 1 });
+        assert_eq!(err.req(), 1);
+        assert!(err.to_string().contains("DRAM exhausted"));
+        // release still cleans up after the failure
+        m.release(1);
+        assert_eq!(m.dram_bytes_used(), 0);
+    }
+
+    #[test]
+    fn prefetched_blocks_are_staged_then_hit_on_gather() {
+        let mut m = mk_manager(true, 64);
+        m.register(1);
+        let (k, v) = prefill_kv(2, 12, 4); // 3 sealed blocks/head/layer
+        for layer in 0..2 {
+            m.append_prefill_layer(1, layer, &k, &v, 12, 12).unwrap();
+        }
+        // stage blocks 0 and 2 of layer 0 on both heads
+        let plan = [
+            BlockKey::new(1, 0, 0, 0),
+            BlockKey::new(1, 0, 1, 0),
+            BlockKey::new(1, 0, 0, 2),
+            BlockKey::new(1, 0, 1, 2),
+        ];
+        let staged = m.prefetch_working_set(&plan, 64, 0);
+        assert_eq!(staged, 4);
+        // open block / unknown blocks are skipped, residents not re-staged
+        assert_eq!(m.prefetch_working_set(&plan, 64, 0), 0);
+        // gather the staged selection: all hits, zero demand loads,
+        // bytes identical to the DRAM source
+        let budget = 4;
+        let s = budget * 4;
+        let mut ko = vec![0.0; 2 * s * 4];
+        let mut vo = vec![0.0; 2 * s * 4];
+        let mut mo = vec![0.0; 2 * s];
+        let sel = vec![vec![2u32, 0u32], vec![2u32, 0u32]];
+        let g = m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo).unwrap();
+        assert_eq!(g, 4);
+        for tok in 0..4 {
+            for d in 0..4 {
+                assert_eq!(ko[tok * 4 + d], (8 + tok) as f32 + d as f32 / 10.0);
+            }
+        }
+        let iter = m.end_iteration();
+        assert_eq!(iter.blocks_loaded, 0, "staged blocks must be hits");
+        assert_eq!(iter.prefetch_blocks, 4);
+        assert_eq!(iter.prefetch_hits, 4);
+        assert_eq!(iter.prefetch_wasted, 0);
+        assert!(iter.prefetch.modeled_s > 0.0);
+        assert_eq!(m.prefetch_stats().hits, 4);
+    }
+
+    #[test]
+    fn unused_prefetch_is_wasted_and_unpinned() {
+        let mut m = mk_manager(true, 64);
+        m.register(1);
+        let (k, v) = prefill_kv(2, 8, 4);
+        for layer in 0..2 {
+            m.append_prefill_layer(1, layer, &k, &v, 8, 8).unwrap();
+        }
+        let plan = [BlockKey::new(1, 0, 0, 0), BlockKey::new(1, 0, 1, 1)];
+        assert_eq!(m.prefetch_working_set(&plan, 64, 0), 2);
+        let iter = m.end_iteration(); // nothing gathered
+        assert_eq!(iter.prefetch_wasted, 2);
+        assert_eq!(iter.prefetch_hits, 0);
+        assert_eq!(m.prefetch_stats().wasted, 2);
+        // wasted stages stay resident but unpinned — release frees them
+        m.release(1);
+        assert_eq!(m.hbm_bytes_used(), 0);
+    }
+
+    #[test]
+    fn release_cancels_staged_blocks() {
+        let mut m = mk_manager(true, 64);
+        m.register(1);
+        let (k, v) = prefill_kv(2, 8, 4);
+        for layer in 0..2 {
+            m.append_prefill_layer(1, layer, &k, &v, 8, 8).unwrap();
+        }
+        let plan = [BlockKey::new(1, 0, 0, 0), BlockKey::new(1, 1, 0, 0)];
+        assert_eq!(m.prefetch_working_set(&plan, 64, 0), 2);
+        // release mid-flight: stage pins must not outlive the request
+        m.release(1);
+        assert_eq!(m.prefetch_stats().cancelled, 2);
+        assert_eq!(m.hbm_bytes_used(), 0);
+        assert_eq!(m.dram_bytes_used(), 0);
+        let iter = m.end_iteration();
+        assert_eq!(iter.prefetch_wasted, 0, "cancelled stages are not wasted");
+    }
+
+    #[test]
+    fn prefetch_cap_and_capacity_bound_staging() {
+        // HBM cache of 2 slots: staging must stop at capacity, not panic
+        let mut m = mk_manager(true, 2);
+        m.register(1);
+        let (k, v) = prefill_kv(2, 12, 4);
+        for layer in 0..2 {
+            m.append_prefill_layer(1, layer, &k, &v, 12, 12).unwrap();
+        }
+        let plan: Vec<BlockKey> = (0..3u32)
+            .flat_map(|b| (0..2u16).map(move |h| BlockKey::new(1, 0, h, b)))
+            .collect();
+        let staged = m.prefetch_working_set(&plan, 64, 0);
+        assert_eq!(staged, 2, "staging capped by HBM capacity");
+        // per-iteration cap is honored too
+        let mut m2 = mk_manager(true, 64);
+        m2.register(1);
+        for layer in 0..2 {
+            m2.append_prefill_layer(1, layer, &k, &v, 12, 12).unwrap();
+        }
+        assert_eq!(m2.prefetch_working_set(&plan, 3, 0), 3);
+        // headroom reserves demand-miss room: 2-slot cache, headroom 1
+        // -> only 1 slot may be pinned by stages
+        let mut m3 = mk_manager(true, 2);
+        m3.register(1);
+        for layer in 0..2 {
+            m3.append_prefill_layer(1, layer, &k, &v, 12, 12).unwrap();
+        }
+        assert_eq!(m3.prefetch_working_set(&plan, 64, 1), 1);
+        m.end_iteration();
+        m2.end_iteration();
+        m3.end_iteration();
+    }
+
+    #[test]
+    fn decode_preflight_accounting() {
+        let mut m = mk_manager(true, 8);
+        m.register(1);
+        // fresh request: the first token opens a block on every layer/head
+        assert_eq!(m.decode_slots_needed(1), 2 * 2);
+        let (k, v) = prefill_kv(2, 4, 4); // exactly one full block
+        for layer in 0..2 {
+            m.append_prefill_layer(1, layer, &k, &v, 4, 4).unwrap();
+        }
+        assert_eq!(m.decode_slots_needed(1), 4, "boundary opens new blocks");
+        for layer in 0..2 {
+            m.append_decode_token(1, layer, &[0.0; 8], &[0.0; 8]).unwrap();
+        }
+        assert_eq!(m.decode_slots_needed(1), 0, "mid-block needs no slots");
+        assert_eq!(m.dram_free_slots(), 1024 - 8);
     }
 
     #[test]
@@ -772,12 +1126,12 @@ mod tests {
         let (k1, v1) = prefill_kv(2, 6, 4); // 1.5 blocks
         let (k2, v2) = prefill_kv(2, 6, 4);
         for layer in 0..2 {
-            m.append_prefill_layer(1, layer, &k1, &v1, 6, 6);
+            m.append_prefill_layer(1, layer, &k1, &v1, 6, 6).unwrap();
         }
         assert_eq!(m.seq_len(1), 6);
         assert_eq!(m.open_fill(1, 0), 2);
         for layer in 0..2 {
-            m.append_prefill_layer(1, layer, &k2, &v2, 6, 6);
+            m.append_prefill_layer(1, layer, &k2, &v2, 6, 6).unwrap();
         }
         assert_eq!(m.seq_len(1), 12);
         assert_eq!(m.n_sealed(1, 0), 3);

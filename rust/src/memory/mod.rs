@@ -14,13 +14,54 @@ pub mod cache;
 pub mod manager;
 pub mod metadata;
 pub mod pool;
+pub mod prefetch;
 pub mod transfer;
 
 pub use cache::LruCache;
 pub use manager::{KvManager, ReqId};
 pub use metadata::Cuboid;
 pub use pool::{BlockPool, SlotId};
+pub use prefetch::{PrefetchEngine, PrefetchStats};
 pub use transfer::{engine_for, TransferEngine, TransferStats};
+
+/// Typed memory-tier exhaustion. Replaces the old `expect("DRAM
+/// exhausted")` panics: oversubscription now surfaces to the engine,
+/// which evicts the offending request with a `ServeError::Evicted`
+/// instead of crashing the server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryError {
+    /// The DRAM pool ran out of block slots while storing `req`'s KV.
+    DramExhausted { req: ReqId },
+    /// HBM is full of pinned blocks (a single gather's working set
+    /// exceeds the cache — the batch-control invariant was violated).
+    HbmExhausted { req: ReqId },
+}
+
+impl MemoryError {
+    /// The request whose allocation hit the wall (the eviction victim).
+    pub fn req(&self) -> ReqId {
+        match self {
+            MemoryError::DramExhausted { req } | MemoryError::HbmExhausted { req } => *req,
+        }
+    }
+}
+
+impl std::fmt::Display for MemoryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MemoryError::DramExhausted { req } => {
+                write!(f, "DRAM exhausted storing KV for request {req}")
+            }
+            MemoryError::HbmExhausted { req } => write!(
+                f,
+                "HBM exhausted with everything pinned gathering request {req} \
+                 (working set exceeds HBM)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MemoryError {}
 
 /// Identifies one logical KV block: (request, layer, kv-head, block index).
 /// DSAs select and transfer at this granularity (per-head blocks,

@@ -1,0 +1,225 @@
+//! Working-set prefetch engine: asynchronous HBM staging of predicted
+//! KV blocks.
+//!
+//! Between iterations, a prefetch planner ranks each scheduled decode
+//! request's `WorkingSetTracker` union (most recent step first) and
+//! stages non-resident blocks into the HBM cache ahead of the batch.
+//! Staged blocks are *pinned* in the [`super::LruCache`] until they are
+//! consumed by a gather (a prefetch **hit**) or the iteration ends
+//! without touching them (a **wasted** prefetch — the block stays
+//! resident but unpinned). This is what converts selection-time cache
+//! misses into hits and lets HBM↔DRAM traffic overlap compute instead
+//! of stalling it (the copy stream of the two-stream iteration model in
+//! `sim::cost::two_stream_iter`).
+//!
+//! The engine itself is cache-agnostic bookkeeping plus an optional
+//! [`ThreadPool`] for the real backend's asynchronous FlashH2D copies:
+//! the owner (the `KvManager` or the simulator) reserves HBM slots and
+//! pins cache entries synchronously, then hands the byte movement to the
+//! pool and calls [`PrefetchEngine::wait_staged`] before anything reads
+//! the staged slots.
+
+use std::collections::HashSet;
+
+use crate::util::threadpool::ThreadPool;
+
+use super::BlockKey;
+
+/// Cumulative prefetch accounting (surfaced in `RunMetrics`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefetchStats {
+    /// Blocks staged ahead of need.
+    pub issued_blocks: u64,
+    /// Bytes staged ahead of need.
+    pub issued_bytes: u64,
+    /// Staged blocks consumed by a gather before their iteration ended.
+    pub hits: u64,
+    /// Staged blocks their iteration never touched (misprediction).
+    pub wasted: u64,
+    /// Staged blocks dropped because their request was released first.
+    pub cancelled: u64,
+}
+
+impl PrefetchStats {
+    /// Fraction of issued blocks that were consumed (0 when none issued).
+    pub fn hit_rate(&self) -> f64 {
+        if self.issued_blocks == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.issued_blocks as f64
+        }
+    }
+}
+
+/// Raw-pointer wrappers for the disjoint-slot async copies (same pattern
+/// as FlashD2H's parallel scatter). Safety contract: the owner guarantees
+/// every in-flight job reads/writes slots no other thread touches until
+/// [`PrefetchEngine::wait_staged`] returns.
+pub struct SendConst(pub *const f32);
+unsafe impl Send for SendConst {}
+pub struct SendMut(pub *mut f32);
+unsafe impl Send for SendMut {}
+
+pub struct PrefetchEngine {
+    /// Copy workers for the real backend; `None` = bookkeeping only
+    /// (the simulator moves no real bytes).
+    pool: Option<ThreadPool>,
+    /// Blocks staged (and pinned by the owner) but not yet consumed.
+    staged: HashSet<BlockKey>,
+    pub stats: PrefetchStats,
+}
+
+impl PrefetchEngine {
+    /// `copy_workers == 0` disables the thread pool (simulator mode).
+    pub fn new(copy_workers: usize) -> Self {
+        Self {
+            pool: (copy_workers > 0).then(|| ThreadPool::new(copy_workers)),
+            staged: HashSet::new(),
+            stats: PrefetchStats::default(),
+        }
+    }
+
+    pub fn n_staged(&self) -> usize {
+        self.staged.len()
+    }
+
+    pub fn is_staged(&self, key: &BlockKey) -> bool {
+        self.staged.contains(key)
+    }
+
+    /// Record a block as staged. Returns false (and counts nothing) if it
+    /// was already staged.
+    pub fn mark_staged(&mut self, key: BlockKey, bytes: usize) -> bool {
+        if !self.staged.insert(key) {
+            return false;
+        }
+        self.stats.issued_blocks += 1;
+        self.stats.issued_bytes += bytes as u64;
+        true
+    }
+
+    /// Run a copy job: on the pool when one exists, inline otherwise.
+    pub fn submit_copy<F: FnOnce() + Send + 'static>(&self, job: F) {
+        match &self.pool {
+            Some(pool) => pool.submit(job),
+            None => job(),
+        }
+    }
+
+    /// Block until every in-flight staging copy has landed. Must be
+    /// called before reading a staged slot or freeing a source slot.
+    pub fn wait_staged(&self) {
+        if let Some(pool) = &self.pool {
+            pool.wait_idle();
+        }
+    }
+
+    /// A gather touched `key`: if it was staged, count the hit and stop
+    /// tracking it (the owner drops the stage pin). Returns whether the
+    /// access consumed a staged block.
+    pub fn note_access(&mut self, key: &BlockKey) -> bool {
+        if self.staged.remove(key) {
+            self.stats.hits += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// End the iteration: every still-staged block was mispredicted.
+    /// Returns the keys so the owner can drop their stage pins (they stay
+    /// resident as ordinary LRU entries).
+    pub fn end_iteration(&mut self) -> Vec<BlockKey> {
+        let wasted: Vec<BlockKey> = self.staged.drain().collect();
+        self.stats.wasted += wasted.len() as u64;
+        wasted
+    }
+
+    /// Drop every staged block of a released/cancelled request. Returns
+    /// the keys so the owner can release their stage pins.
+    pub fn cancel_request(&mut self, req: u32) -> Vec<BlockKey> {
+        let dropped: Vec<BlockKey> =
+            self.staged.iter().filter(|k| k.req == req).copied().collect();
+        for k in &dropped {
+            self.staged.remove(k);
+        }
+        self.stats.cancelled += dropped.len() as u64;
+        dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn key(req: u32, b: u32) -> BlockKey {
+        BlockKey::new(req, 0, 0, b)
+    }
+
+    #[test]
+    fn staged_blocks_become_hits() {
+        let mut e = PrefetchEngine::new(0);
+        assert!(e.mark_staged(key(1, 0), 100));
+        assert!(e.mark_staged(key(1, 1), 100));
+        assert!(!e.mark_staged(key(1, 0), 100), "double-stage is a no-op");
+        assert_eq!(e.stats.issued_blocks, 2);
+        assert_eq!(e.stats.issued_bytes, 200);
+        assert!(e.note_access(&key(1, 0)), "staged access is a hit");
+        assert!(!e.note_access(&key(1, 0)), "hit consumed the staging");
+        assert!(!e.note_access(&key(2, 7)), "unstaged access is not a hit");
+        assert_eq!(e.stats.hits, 1);
+        assert!((e.stats.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unconsumed_stages_count_as_wasted() {
+        let mut e = PrefetchEngine::new(0);
+        e.mark_staged(key(1, 0), 10);
+        e.mark_staged(key(1, 1), 10);
+        e.note_access(&key(1, 0));
+        let wasted = e.end_iteration();
+        assert_eq!(wasted, vec![key(1, 1)]);
+        assert_eq!(e.stats.wasted, 1);
+        assert_eq!(e.n_staged(), 0);
+    }
+
+    #[test]
+    fn cancel_drops_only_that_requests_stages() {
+        let mut e = PrefetchEngine::new(0);
+        e.mark_staged(key(1, 0), 10);
+        e.mark_staged(key(1, 1), 10);
+        e.mark_staged(key(2, 0), 10);
+        let dropped = e.cancel_request(1);
+        assert_eq!(dropped.len(), 2);
+        assert_eq!(e.stats.cancelled, 2);
+        assert_eq!(e.n_staged(), 1);
+        assert!(e.is_staged(&key(2, 0)));
+    }
+
+    #[test]
+    fn pool_runs_copies_and_wait_joins() {
+        let e = PrefetchEngine::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..16 {
+            let c = Arc::clone(&counter);
+            e.submit_copy(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        e.wait_staged();
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn no_pool_runs_inline() {
+        let e = PrefetchEngine::new(0);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&counter);
+        e.submit_copy(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+}

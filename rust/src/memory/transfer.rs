@@ -83,6 +83,16 @@ pub trait TransferEngine: Send + Sync {
     /// `src` tensor into DRAM block slots.
     fn save(&self, src: &[f32], dram: &mut BlockPool, entries: &[ScatterEntry]) -> TransferStats;
 
+    /// Modeled PCIe time to load `n_blocks` blocks of `block_bytes` with
+    /// this engine, without moving any bytes. Used by the prefetcher,
+    /// whose copies run asynchronously outside the `load` path.
+    fn load_time_model(&self, n_blocks: usize, block_bytes: usize) -> f64 {
+        if n_blocks == 0 {
+            return 0.0;
+        }
+        self.hw().flash_h2d_time(n_blocks, block_bytes)
+    }
+
     fn hw(&self) -> &HardwareSpec;
 }
 
@@ -164,6 +174,13 @@ impl TransferEngine for MemcpyEngine {
             modeled_s,
             gpu_interference: 1.0,
         }
+    }
+
+    fn load_time_model(&self, n_blocks: usize, block_bytes: usize) -> f64 {
+        if n_blocks == 0 {
+            return 0.0;
+        }
+        self.hw.memcpy_time(n_blocks, block_bytes)
     }
 
     fn hw(&self) -> &HardwareSpec {

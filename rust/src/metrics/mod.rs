@@ -1,5 +1,8 @@
-//! Serving metrics: TTFT, TBT, throughput, goodput (paper §4 metrics).
+//! Serving metrics: TTFT, TBT, throughput, goodput (paper §4 metrics),
+//! plus the prefetch/overlap accounting of the two-stream iteration
+//! model (stall time, staged blocks, hit/waste counters).
 
+use crate::engine::BatchOutcome;
 use crate::scheduler::Request;
 use crate::util::stats::Series;
 
@@ -16,6 +19,8 @@ pub struct RunMetrics {
     pub requests_cancelled: usize,
     /// Requests rejected by the engine (inadmissible memory demand).
     pub requests_rejected: usize,
+    /// Requests evicted mid-run by typed memory-tier exhaustion.
+    pub requests_evicted: usize,
     /// Requests whose achieved TTFT exceeded their per-request SLO.
     pub ttft_slo_violations: usize,
     /// Serving-clock makespan, seconds.
@@ -24,8 +29,16 @@ pub struct RunMetrics {
     pub blocks_loaded_per_iter: Series,
     /// Per-iteration latency.
     pub iter_time: Series,
-    /// Modeled PCIe load time per iteration.
+    /// Modeled PCIe busy time per iteration (demand + prefetch streams).
     pub load_time: Series,
+    /// Per-iteration stall: PCIe time compute could not hide.
+    pub stall_time: Series,
+    /// Blocks staged ahead of need by the working-set prefetcher.
+    pub prefetch_blocks: u64,
+    /// Staged blocks consumed by a gather (earned overlap).
+    pub prefetch_hits: u64,
+    /// Staged blocks their iteration never touched.
+    pub prefetch_wasted: u64,
     pub iterations: usize,
 }
 
@@ -69,12 +82,25 @@ impl RunMetrics {
         }
     }
 
-    pub fn record_iteration(&mut self, iter_time_s: f64, blocks_loaded: usize, load_s: f64) {
+    pub fn record_iteration(&mut self, out: &BatchOutcome) {
         self.iterations += 1;
+        self.prefetch_blocks += out.prefetch_blocks as u64;
+        self.prefetch_hits += out.prefetch_hits as u64;
+        self.prefetch_wasted += out.prefetch_wasted as u64;
         if self.iter_time.len() < Self::MAX_SAMPLES {
-            self.iter_time.push(iter_time_s);
-            self.blocks_loaded_per_iter.push(blocks_loaded as f64);
-            self.load_time.push(load_s);
+            self.iter_time.push(out.iter_time_s);
+            self.blocks_loaded_per_iter.push(out.blocks_loaded as f64);
+            self.load_time.push(out.load_time_s);
+            self.stall_time.push(out.stall_time_s);
+        }
+    }
+
+    /// Fraction of staged blocks that were consumed (0 when none staged).
+    pub fn prefetch_hit_rate(&self) -> f64 {
+        if self.prefetch_blocks == 0 {
+            0.0
+        } else {
+            self.prefetch_hits as f64 / self.prefetch_blocks as f64
         }
     }
 
@@ -97,16 +123,32 @@ impl RunMetrics {
     }
 
     pub fn summary(&self) -> String {
+        let mut extra = String::new();
+        if self.requests_cancelled > 0 {
+            extra.push_str(&format!(" (cancelled={})", self.requests_cancelled));
+        }
+        if self.requests_rejected > 0 {
+            extra.push_str(&format!(" (rejected={})", self.requests_rejected));
+        }
+        if self.requests_evicted > 0 {
+            extra.push_str(&format!(" (evicted={})", self.requests_evicted));
+        }
+        let prefetch = if self.prefetch_blocks > 0 {
+            format!(
+                " | prefetch staged={} hit={:.0}% wasted={}",
+                self.prefetch_blocks,
+                100.0 * self.prefetch_hit_rate(),
+                self.prefetch_wasted,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "reqs={}{} tokens={} makespan={:.1}s thpt={:.2} tok/s | \
              TTFT mean={:.3}s p99={:.3}s | TBT mean={:.4}s p99={:.4}s | \
-             queue mean={:.3}s | loads/iter mean={:.1}",
+             queue mean={:.3}s | loads/iter mean={:.1} stall mean={:.4}s{}",
             self.requests_finished,
-            if self.requests_cancelled > 0 {
-                format!(" (cancelled={})", self.requests_cancelled)
-            } else {
-                String::new()
-            },
+            extra,
             self.tokens_generated,
             self.makespan_s,
             self.throughput(),
@@ -116,6 +158,8 @@ impl RunMetrics {
             self.tbt.p99(),
             self.queue_delay.mean(),
             self.blocks_loaded_per_iter.mean(),
+            self.stall_time.mean(),
+            prefetch,
         )
     }
 }
@@ -139,6 +183,27 @@ mod tests {
         assert!((m.throughput() - 1.5).abs() < 1e-9);
         assert!((m.ttft.mean() - 1.0).abs() < 1e-9);
         assert_eq!(m.tbt.len(), 2);
+    }
+
+    #[test]
+    fn iteration_records_prefetch_counters() {
+        let mut m = RunMetrics::new();
+        let out = BatchOutcome {
+            iter_time_s: 0.1,
+            blocks_loaded: 10,
+            load_time_s: 0.05,
+            stall_time_s: 0.02,
+            prefetch_blocks: 8,
+            prefetch_hits: 6,
+            prefetch_wasted: 2,
+            ..Default::default()
+        };
+        m.record_iteration(&out);
+        assert_eq!(m.iterations, 1);
+        assert_eq!(m.prefetch_blocks, 8);
+        assert!((m.prefetch_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((m.stall_time.mean() - 0.02).abs() < 1e-12);
+        assert!(m.summary().contains("prefetch staged=8"));
     }
 
     #[test]

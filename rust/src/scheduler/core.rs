@@ -19,19 +19,26 @@ pub struct Scheduler {
     pub spec: ModelSpec,
     /// HBM KV capacity in bytes (M_avl = m_avl_frac * this).
     hbm_capacity: usize,
+    /// DRAM KV capacity in bytes (offload-mode admission bound;
+    /// `usize::MAX` = unbounded, the pre-fix behavior).
+    dram_capacity: usize,
     pub requests: HashMap<ReqId, Request>,
     /// FCFS admission queue.
     queue: VecDeque<ReqId>,
     /// Admitted requests in admission order (Prefill or Decode phase).
     active: Vec<ReqId>,
-    /// Non-offload HBM reservations (vLLM semantics: a request's full KV
-    /// must fit in HBM for its lifetime).
+    /// Full-lifetime KV reservations: against HBM without offloading
+    /// (vLLM semantics), against DRAM with it (a long-running offload
+    /// server must backpressure before the DRAM pool is exhausted).
     reserved: HashMap<ReqId, usize>,
     reserved_total: usize,
     /// Iterations planned (diagnostics).
     pub iterations: u64,
     /// Requests rejected by Alg. 1 at least once this run (diagnostics).
     pub ws_rejections: u64,
+    /// Iterations where the starvation guard stopped packing behind a
+    /// repeatedly-skipped decode (diagnostics).
+    pub ws_starvation_stops: u64,
 }
 
 impl Scheduler {
@@ -40,6 +47,7 @@ impl Scheduler {
             cfg,
             spec,
             hbm_capacity,
+            dram_capacity: usize::MAX,
             requests: HashMap::new(),
             queue: VecDeque::new(),
             active: Vec::new(),
@@ -47,7 +55,17 @@ impl Scheduler {
             reserved_total: 0,
             iterations: 0,
             ws_rejections: 0,
+            ws_starvation_stops: 0,
         }
+    }
+
+    /// Bound offload-mode admission by DRAM capacity: the scheduler
+    /// reserves each admitted request's full-lifetime KV against this
+    /// budget and blocks (FCFS) when it would not fit, instead of letting
+    /// the DRAM pool exhaust mid-decode.
+    pub fn with_dram_capacity(mut self, bytes: usize) -> Self {
+        self.dram_capacity = bytes;
+        self
     }
 
     /// Enqueue a request. The queue is priority-aware: an `Interactive`
@@ -149,6 +167,9 @@ impl Scheduler {
         let mut tokens = 0usize;
 
         // ---- 1. decode candidates, FCFS (Alg. 1 lines 5-14) ----
+        // The resulting `batch.decodes` order doubles as the prefetch
+        // priority order: earlier (older) requests get staging budget
+        // first, matching their gather order in the backend.
         for &id in &self.active {
             if self.requests[&id].phase != Phase::Decode {
                 continue;
@@ -160,9 +181,28 @@ impl Scheduler {
                 let w = ws(id);
                 if ws_used + w > m_avl {
                     self.ws_rejections += 1;
+                    let streak = {
+                        let r = self.requests.get_mut(&id).unwrap();
+                        r.ws_skip_streak += 1;
+                        r.ws_skip_streak
+                    };
+                    // Starvation guard: a decode that COULD fit an
+                    // emptier batch (w <= M_avl) must not be leapfrogged
+                    // by younger, smaller requests forever. After K
+                    // consecutive skips, stop packing behind it — its WS
+                    // share frees up as older requests finish, so FCFS
+                    // progress is guaranteed. (A request whose own WS
+                    // exceeds M_avl is hopeless, not starved; skipping
+                    // past it stays allowed and the serving layer evicts
+                    // it.)
+                    if streak as usize >= self.cfg.ws_starvation_k.max(1) && w <= m_avl {
+                        self.ws_starvation_stops += 1;
+                        break;
+                    }
                     continue; // S.reset(req): skipped this iteration
                 }
                 ws_used += w;
+                self.requests.get_mut(&id).unwrap().ws_skip_streak = 0;
             }
             batch.decodes.push(id);
             tokens += 1;
@@ -201,23 +241,44 @@ impl Scheduler {
         batch
     }
 
-    /// Head-of-queue admission. Non-offload systems must reserve the full
-    /// KV in HBM (head-of-line blocking when it doesn't fit — the vLLM
-    /// failure mode of Fig. 10); offloading admits into DRAM freely.
+    /// The admission capacity a request's full KV reserves against: HBM
+    /// without offloading (vLLM semantics), DRAM with it.
+    fn admission_capacity(&self) -> usize {
+        if self.cfg.offload {
+            self.dram_capacity
+        } else {
+            self.hbm_capacity
+        }
+    }
+
+    /// Head-of-queue request whose KV demand exceeds the *total*
+    /// admission capacity — it can never be admitted, no matter what
+    /// finishes. The engine rejects it with a typed error so it does not
+    /// block the queue forever.
+    pub fn hopeless_head(&self) -> Option<ReqId> {
+        let &id = self.queue.front()?;
+        let r = &self.requests[&id];
+        let need = self.full_kv_bytes(r.prompt_len, r.max_new_tokens);
+        (need > self.admission_capacity()).then_some(id)
+    }
+
+    /// Head-of-queue admission. The request's full-lifetime KV is
+    /// reserved against HBM without offloading (head-of-line blocking
+    /// when it doesn't fit — the vLLM failure mode of Fig. 10) or against
+    /// DRAM with it (backpressure instead of the old unbounded admission
+    /// that exhausted the DRAM pool mid-decode).
     fn try_admit(&mut self, now: f64) -> Option<ReqId> {
         let &id = self.queue.front()?;
         let (plen, mnew) = {
             let r = &self.requests[&id];
             (r.prompt_len, r.max_new_tokens)
         };
-        if !self.cfg.offload {
-            let need = self.full_kv_bytes(plen, mnew);
-            if self.reserved_total + need > self.hbm_capacity {
-                return None; // blocked; FCFS forbids skipping ahead
-            }
-            self.reserved.insert(id, need);
-            self.reserved_total += need;
+        let need = self.full_kv_bytes(plen, mnew);
+        if need > self.admission_capacity().saturating_sub(self.reserved_total) {
+            return None; // blocked; FCFS forbids skipping ahead
         }
+        self.reserved.insert(id, need);
+        self.reserved_total += need;
         self.queue.pop_front();
         let r = self.requests.get_mut(&id).unwrap();
         r.phase = Phase::Prefill;
@@ -501,6 +562,139 @@ mod tests {
         assert_eq!(s.reserved_bytes(), 0);
         let b3 = s.plan(70.0, &mut ws);
         assert_eq!(b3.prefill.as_ref().unwrap().req(), 2);
+    }
+
+    #[test]
+    fn offload_admission_blocks_on_dram_capacity() {
+        // Offload mode must reserve DRAM bytes (mirroring the non-offload
+        // HBM reservation) instead of admitting unboundedly.
+        let cfg = ServingConfig::vllm_so(256, 2048);
+        let spec_ = spec();
+        let one_req = {
+            let s = Scheduler::new(cfg.clone(), spec_.clone(), 0);
+            s.full_kv_bytes(512, 64)
+        };
+        let mut s = Scheduler::new(cfg, spec_, 1 << 30)
+            .with_dram_capacity(one_req + one_req / 2);
+        s.submit(Request::new(1, 512, 64, 0.0));
+        s.submit(Request::new(2, 512, 64, 0.0));
+        let mut ws = |r| no_ws(r);
+        let b = s.plan(0.0, &mut ws);
+        assert_eq!(b.prefill.as_ref().unwrap().req(), 1);
+        assert_eq!(s.reserved_bytes(), one_req);
+        // request 2 blocked until 1's DRAM reservation frees
+        s.advance_prefill(&b.prefill.unwrap());
+        let b2 = s.plan(0.1, &mut ws);
+        assert!(b2.prefill.is_none(), "req 2 must be DRAM-blocked");
+        for t in 0..64 {
+            s.emit_token(1, None, 0.2 + t as f64);
+        }
+        assert_eq!(s.reserved_bytes(), 0);
+        let b3 = s.plan(70.0, &mut ws);
+        assert_eq!(b3.prefill.as_ref().unwrap().req(), 2);
+    }
+
+    #[test]
+    fn hopeless_head_is_flagged_for_rejection() {
+        let cfg = ServingConfig::vllm_so(256, 2048);
+        let spec_ = spec();
+        let small = {
+            let s = Scheduler::new(cfg.clone(), spec_.clone(), 0);
+            s.full_kv_bytes(64, 8)
+        };
+        let mut s = Scheduler::new(cfg, spec_, 1 << 30).with_dram_capacity(small);
+        assert!(s.hopeless_head().is_none());
+        s.submit(Request::new(1, 512, 64, 0.0)); // needs far more than `small`
+        assert_eq!(s.hopeless_head(), Some(1));
+        // dropping it unblocks the queue for a request that fits
+        assert!(s.cancel(1));
+        s.submit(Request::new(2, 64, 8, 0.1));
+        assert!(s.hopeless_head().is_none());
+        let mut ws = |r| no_ws(r);
+        assert_eq!(s.plan(0.2, &mut ws).prefill.unwrap().req(), 2);
+    }
+
+    #[test]
+    fn starvation_guard_stops_leapfrogging_after_k_skips() {
+        let mut cfg = ServingConfig::sparseserve(256, 64, 4);
+        cfg.r_max = 16;
+        cfg.ws_starvation_k = 3;
+        let hbm = 1 << 20;
+        let mut s = sched(cfg, hbm);
+        for id in 1..=3u32 {
+            s.submit(Request::new(id, 16, 100, 0.0));
+        }
+        // drive all three through prefill into decode
+        for _ in 0..3 {
+            let mut ws = |r| no_ws(r);
+            let b = s.plan(0.0, &mut ws);
+            if let Some(w) = b.prefill {
+                let done = w.is_last();
+                s.advance_prefill(&w);
+                if done {
+                    s.emit_token(w.req(), None, 0.1);
+                }
+            }
+        }
+        assert_eq!(s.decoding().len(), 3);
+        let m_avl = s.m_avl();
+        // request 1 small, request 2 large (fits alone, not with 1),
+        // request 3 small: FCFS would leapfrog 2 with 3 forever.
+        let ws_of = move |r: ReqId| match r {
+            1 => m_avl / 4,
+            2 => m_avl, // alone it fits; never with request 1
+            _ => m_avl / 4,
+        };
+        // skips 1..K-1: request 3 still leapfrogs request 2
+        for _ in 0..2 {
+            let mut ws = ws_of;
+            let b = s.plan(1.0, &mut ws);
+            assert_eq!(b.decodes, vec![1, 3], "pre-guard: smaller reqs pack");
+        }
+        // skip K: guard trips — nothing packs behind request 2 anymore
+        let mut ws = ws_of;
+        let b = s.plan(2.0, &mut ws);
+        assert_eq!(b.decodes, vec![1], "guard must stop packing behind 2");
+        assert!(s.ws_starvation_stops >= 1);
+        // request 1 finishes -> its WS share frees -> request 2 runs
+        for _ in 0..99 {
+            s.emit_token(1, None, 3.0);
+        }
+        assert!(s.requests[&1].is_done());
+        let mut ws = ws_of;
+        let b = s.plan(4.0, &mut ws);
+        assert_eq!(b.decodes, vec![2], "starved request finally progresses");
+        assert_eq!(s.requests[&2].ws_skip_streak, 0, "streak resets on batch");
+    }
+
+    #[test]
+    fn hopeless_ws_request_does_not_trip_the_guard() {
+        // a decode whose OWN working set exceeds M_avl is hopeless, not
+        // starved: the guard must keep letting others pass it
+        let mut cfg = ServingConfig::sparseserve(256, 64, 4);
+        cfg.ws_starvation_k = 2;
+        let mut s = sched(cfg, 1 << 20);
+        for id in 1..=2u32 {
+            s.submit(Request::new(id, 16, 100, 0.0));
+        }
+        for _ in 0..2 {
+            let mut ws = |r| no_ws(r);
+            let b = s.plan(0.0, &mut ws);
+            if let Some(w) = b.prefill {
+                let done = w.is_last();
+                s.advance_prefill(&w);
+                if done {
+                    s.emit_token(w.req(), None, 0.1);
+                }
+            }
+        }
+        let m_avl = s.m_avl();
+        let ws_of = move |r: ReqId| if r == 1 { 2 * m_avl } else { m_avl / 4 };
+        for _ in 0..5 {
+            let mut ws = ws_of;
+            let b = s.plan(1.0, &mut ws);
+            assert_eq!(b.decodes, vec![2], "req 2 must keep passing the hopeless req 1");
+        }
     }
 
     #[test]

@@ -90,6 +90,9 @@ pub struct Request {
     pub sparse_budget: Option<usize>,
 
     pub phase: Phase,
+    /// Consecutive iterations WS batch control skipped this decode
+    /// (starvation-guard input; reset when it is batched).
+    pub ws_skip_streak: u32,
     /// Chunked-prefill progress: prompt tokens fully processed (all layers).
     pub tokens_done: usize,
     /// Layer-segmented progress: layers fully processed over the prompt.
@@ -123,6 +126,7 @@ impl Request {
             ttft_slo_s: None,
             sparse_budget: None,
             phase: Phase::Queued,
+            ws_skip_streak: 0,
             tokens_done: 0,
             layers_done: 0,
             layer_tok_done: 0,

@@ -15,6 +15,45 @@ pub struct CostModel {
     pub hw: HardwareSpec,
 }
 
+/// Timing of one iteration under the two-stream event model.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IterTiming {
+    /// GPU compute time of the batch.
+    pub compute_s: f64,
+    /// Copy-stream time hidden under compute (the overlap the
+    /// prefetcher earned).
+    pub hidden_s: f64,
+    /// Critical-path excess: demand loads plus prefetch spill past the
+    /// compute window.
+    pub stall_s: f64,
+    /// `compute_s + stall_s`.
+    pub iter_time_s: f64,
+}
+
+/// Two-stream (compute + copy) iteration event model.
+///
+/// The copy stream carries two kinds of traffic:
+///
+/// - **prefetch** bytes were issued *before* the batch needed them, so
+///   they run concurrently with compute: up to `compute_s` of them are
+///   hidden; anything beyond spills onto the critical path (loading
+///   "cannot be fully hidden by computation" once it outgrows the
+///   compute window).
+/// - **demand** bytes are misses discovered at selection time — the
+///   gather blocks on them, so they always stall the iteration.
+///
+/// This replaces the old hard-coded `0.5 * compute` overlap credit:
+/// overlap is now a measured property of how many bytes the prefetcher
+/// actually moved ahead of need, so the no-prefetch ablation pays the
+/// full demand stall and the prefetch-on run only pays for what staging
+/// could not hide.
+pub fn two_stream_iter(compute_s: f64, prefetch_s: f64, demand_s: f64) -> IterTiming {
+    let hidden_s = prefetch_s.min(compute_s);
+    let spill_s = prefetch_s - hidden_s;
+    let stall_s = demand_s + spill_s;
+    IterTiming { compute_s, hidden_s, stall_s, iter_time_s: compute_s + stall_s }
+}
+
 impl CostModel {
     pub fn new(spec: ModelSpec, hw: HardwareSpec) -> Self {
         Self { spec, hw }
@@ -229,5 +268,39 @@ mod tests {
         let t1 = m.prefill_time_plain(8192);
         let t2 = m.prefill_time_plain(16_384);
         assert!(t2 > 2.0 * t1, "quadratic attention term must show");
+    }
+
+    #[test]
+    fn two_stream_hides_prefetch_but_not_demand() {
+        // demand always stalls
+        let t = two_stream_iter(1.0, 0.0, 0.3);
+        assert_eq!(t.stall_s, 0.3);
+        assert_eq!(t.iter_time_s, 1.3);
+        // prefetch within the compute window is free
+        let t = two_stream_iter(1.0, 0.8, 0.0);
+        assert_eq!(t.stall_s, 0.0);
+        assert_eq!(t.hidden_s, 0.8);
+        assert_eq!(t.iter_time_s, 1.0);
+        // prefetch past the window spills
+        let t = two_stream_iter(1.0, 1.5, 0.1);
+        assert!((t.stall_s - 0.6).abs() < 1e-12);
+        assert!((t.iter_time_s - 1.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefetching_demand_bytes_never_hurts() {
+        // moving X seconds of traffic from the demand stream to the
+        // prefetch stream can only reduce the iteration time
+        for &(compute, total) in &[(1.0, 0.4), (1.0, 1.7), (0.2, 0.9)] {
+            let all_demand = two_stream_iter(compute, 0.0, total);
+            for frac in [0.25, 0.5, 0.75, 1.0] {
+                let pf = total * frac;
+                let t = two_stream_iter(compute, pf, total - pf);
+                assert!(
+                    t.iter_time_s <= all_demand.iter_time_s + 1e-12,
+                    "prefetch made it worse: {t:?} vs {all_demand:?}"
+                );
+            }
+        }
     }
 }

@@ -66,6 +66,35 @@ impl WorkingSetTracker {
         self.ws_blocks() * block_bytes
     }
 
+    /// The window union ranked for prefetch: recency-weighted — blocks
+    /// from the most recent step first (they have the highest re-selection
+    /// probability, Fig. 8), then progressively older steps, deduplicated
+    /// in first-seen order. A truncation of this list is the best
+    /// prediction of the next step's selection under the paper's
+    /// temporal-locality model.
+    pub fn ranked_blocks(&self) -> Vec<SelItem> {
+        self.ranked_blocks_capped(usize::MAX)
+    }
+
+    /// [`Self::ranked_blocks`] truncated to the first `cap` entries —
+    /// the prefetch hot path consumes only a staging budget's worth, so
+    /// stop ranking once it is filled.
+    pub fn ranked_blocks_capped(&self, cap: usize) -> Vec<SelItem> {
+        let mut seen: HashSet<SelItem> = HashSet::new();
+        let mut out = Vec::new();
+        'steps: for step in self.history.iter().rev() {
+            for &item in step {
+                if out.len() >= cap {
+                    break 'steps;
+                }
+                if seen.insert(item) {
+                    out.push(item);
+                }
+            }
+        }
+        out
+    }
+
     /// Overlap ratio between the last recorded step and the union of the
     /// `w` steps before it (the Fig. 8 measurement).
     pub fn last_overlap(&self, w: usize) -> Option<f64> {
@@ -111,6 +140,22 @@ mod tests {
         // window slides: step {0,1} falls out
         t.record_step(items(&[2]));
         assert_eq!(t.ws_blocks(), 3); // {1,2,3} ∪ {2} minus {0,1}... = {1,2,3}
+    }
+
+    #[test]
+    fn ranked_blocks_put_recent_steps_first() {
+        let mut t = WorkingSetTracker::new(4);
+        t.record_step(items(&[7, 8]));
+        t.record_step(items(&[1, 2]));
+        t.record_step(items(&[2, 3]));
+        let ranked = t.ranked_blocks();
+        // newest step {2,3} leads, then {1}, then the oldest {7,8}
+        assert_eq!(ranked, items(&[2, 3, 1, 7, 8]));
+        // dedup: union size matches ws_blocks
+        assert_eq!(ranked.len(), t.ws_blocks());
+        // capping truncates in rank order
+        assert_eq!(t.ranked_blocks_capped(2), items(&[2, 3]));
+        assert!(t.ranked_blocks_capped(0).is_empty());
     }
 
     #[test]

@@ -1,13 +1,17 @@
 //! Request-lifecycle end-to-end tests on the simulated backend: the
 //! online coordinator over `EngineCore` (metrics, backpressure,
-//! cancellation, SLO accounting) without needing `make artifacts`.
+//! cancellation, SLO accounting) without needing `make artifacts`,
+//! plus regression tests for DRAM-oversubscription backpressure,
+//! typed memory-pressure eviction and the WS starvation guard.
 
+use std::collections::HashMap;
 use std::time::Duration;
 
 use sparseserve::config::{HardwareSpec, ModelSpec, ServingConfig};
 use sparseserve::coordinator::{ServeError, Server, SubmitRequest};
-use sparseserve::engine::SimBackend;
-use sparseserve::scheduler::Scheduler;
+use sparseserve::engine::{Backend, BatchOutcome, EngineCore, MemStats, SimBackend};
+use sparseserve::memory::{MemoryError, ReqId};
+use sparseserve::scheduler::{Batch, Request, Scheduler};
 
 fn build_sim() -> anyhow::Result<(Scheduler, Box<dyn sparseserve::engine::Backend>)> {
     let cfg = ServingConfig::sparseserve(2048, 2048, 32);
@@ -124,4 +128,175 @@ fn ttft_slo_violations_counted() {
     h.collect().unwrap();
     let m = server.shutdown().unwrap();
     assert_eq!(m.ttft_slo_violations, 1);
+}
+
+// ------------------------------------------------------------------------
+// DRAM-exhaustion & starvation regression tests (ISSUE 2)
+
+/// Deterministic test backend: instant iterations, scripted working-set
+/// sizes, and an optional request whose decode trips a typed
+/// `MemoryError` (the DRAM-exhaustion failure shape).
+struct MockBackend {
+    ws: HashMap<ReqId, usize>,
+    fail_on: Option<ReqId>,
+}
+
+impl Backend for MockBackend {
+    fn name(&self) -> &'static str {
+        "mock"
+    }
+
+    fn register(&mut self, _req: &Request) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn release(&mut self, _req: ReqId) {}
+
+    fn decode_ws_bytes(&mut self, req: ReqId) -> usize {
+        self.ws.get(&req).copied().unwrap_or(0)
+    }
+
+    fn mem_stats(&self) -> MemStats {
+        MemStats::default()
+    }
+
+    fn run_batch(
+        &mut self,
+        batch: &Batch,
+        _requests: &HashMap<ReqId, Request>,
+    ) -> anyhow::Result<BatchOutcome> {
+        if let Some(f) = self.fail_on {
+            if batch.decodes.contains(&f) {
+                return Err(MemoryError::DramExhausted { req: f }.into());
+            }
+        }
+        let mut out = BatchOutcome { iter_time_s: 0.01, ..Default::default() };
+        for &id in &batch.decodes {
+            out.tokens.push((id, None));
+        }
+        if let Some(w) = &batch.prefill {
+            if w.is_last() {
+                out.tokens.push((w.req(), None));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[test]
+fn dram_oversubscribed_workload_survives_with_rejections() {
+    // A whale that can never fit DRAM plus more normal requests than
+    // DRAM holds at once: the server must reject the whale with a typed
+    // error, backpressure the rest, finish everything — and never panic.
+    let cfg = ServingConfig::sparseserve(2048, 2048, 32);
+    let spec = ModelSpec::lwm_7b();
+    let hw = HardwareSpec::a100_40gb();
+    let backend = SimBackend::new(cfg.clone(), spec.clone(), hw.clone());
+    let one = Scheduler::new(cfg.clone(), spec.clone(), hw.hbm_kv_bytes)
+        .full_kv_bytes(8192, 16);
+    let dram_cap = 2 * one + one / 2; // two requests fit, the third waits
+    let sched =
+        Scheduler::new(cfg, spec, hw.hbm_kv_bytes).with_dram_capacity(dram_cap);
+    let mut core = EngineCore::new(sched, Box::new(backend));
+
+    let whale = core
+        .submit(SubmitRequest::synthetic(4_000_000).max_new(16), 0.0)
+        .unwrap();
+    for _ in 0..4 {
+        core.submit(SubmitRequest::synthetic(8192).max_new(16), 0.0).unwrap();
+    }
+
+    let mut rejected = Vec::new();
+    let mut now = 0.0;
+    let mut steps = 0;
+    while core.has_work() {
+        steps += 1;
+        assert!(steps < 2000, "livelock under DRAM oversubscription");
+        let out = core.step(now).unwrap(); // typed errors, never a panic
+        rejected.extend(out.rejected.iter().map(|(id, _)| *id));
+        for (_, err) in &out.rejected {
+            assert!(matches!(err, ServeError::AdmissionRejected { .. }));
+        }
+        now += out.iter_time_s.max(1e-3);
+        // admission reservations never exceed the DRAM budget
+        assert!(core.sched().reserved_bytes() <= dram_cap);
+    }
+    assert_eq!(rejected, vec![whale]);
+    assert_eq!(core.metrics().requests_rejected, 1);
+    assert_eq!(core.metrics().requests_finished, 4);
+}
+
+#[test]
+fn memory_exhaustion_evicts_typed_and_engine_survives() {
+    // A backend hitting DRAM exhaustion mid-decode must surface a typed
+    // Evicted error for that request only; the engine keeps serving.
+    let cfg = ServingConfig::sparseserve(2048, 2048, 32);
+    let spec = ModelSpec::lwm_7b();
+    let sched = Scheduler::new(cfg, spec, 1 << 40);
+    let backend = MockBackend { ws: HashMap::new(), fail_on: Some(2) };
+    let mut core = EngineCore::new(sched, Box::new(backend));
+    let ok_id = core.submit(SubmitRequest::synthetic(64).max_new(5), 0.0).unwrap();
+    let doomed = core.submit(SubmitRequest::synthetic(64).max_new(5), 0.0).unwrap();
+    assert_eq!(doomed, 2);
+
+    let mut evicted = Vec::new();
+    let mut now = 0.0;
+    let mut steps = 0;
+    while core.has_work() {
+        steps += 1;
+        assert!(steps < 100, "engine must keep making progress");
+        let out = core.step(now).unwrap(); // Ok even on memory pressure
+        evicted.extend(out.evicted.clone());
+        now += out.iter_time_s.max(1e-3);
+    }
+    assert_eq!(evicted.len(), 1);
+    assert_eq!(evicted[0].0, doomed);
+    assert!(matches!(evicted[0].1, ServeError::Evicted { .. }));
+    assert!(evicted[0].1.to_string().contains("DRAM exhausted"));
+    assert_eq!(core.metrics().requests_evicted, 1);
+    assert_eq!(core.metrics().requests_finished, 1);
+    let report = core.into_report(now);
+    assert!(report.requests[&ok_id].is_done());
+}
+
+#[test]
+fn starved_decode_makes_progress_with_guard() {
+    // A large-WS decode behind one short small-WS request and ahead of
+    // two long small-WS requests: without the guard the young pair packs
+    // past it every iteration; with the guard it finishes well before
+    // them.
+    let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
+    cfg.ws_starvation_k = 3;
+    let spec = ModelSpec::lwm_7b();
+    let sched = Scheduler::new(cfg, spec, 40 << 20); // m_avl = 36 MiB
+    let mut ws = HashMap::new();
+    ws.insert(1, 12 << 20);
+    ws.insert(2, 26 << 20); // fits alone, never with request 1
+    ws.insert(3, 12 << 20);
+    ws.insert(4, 12 << 20);
+    let backend = MockBackend { ws, fail_on: None };
+    let mut core = EngineCore::new(sched, Box::new(backend));
+    core.submit(SubmitRequest::synthetic(64).max_new(6), 0.0).unwrap(); // 1: short
+    core.submit(SubmitRequest::synthetic(64).max_new(3), 0.0).unwrap(); // 2: big WS
+    core.submit(SubmitRequest::synthetic(64).max_new(30), 0.0).unwrap(); // 3: long
+    core.submit(SubmitRequest::synthetic(64).max_new(30), 0.0).unwrap(); // 4: long
+
+    let mut finish_order = Vec::new();
+    let mut now = 0.0;
+    let mut steps = 0;
+    while core.has_work() {
+        steps += 1;
+        assert!(steps < 500, "starved request livelocked");
+        let out = core.step(now).unwrap();
+        finish_order.extend(out.finished.iter().map(|(id, _)| *id));
+        now += out.iter_time_s.max(1e-3);
+    }
+    assert_eq!(core.metrics().requests_finished, 4);
+    let pos = |id: ReqId| finish_order.iter().position(|&x| x == id).unwrap();
+    assert!(
+        pos(2) < pos(3) && pos(2) < pos(4),
+        "starved request must not finish last: {finish_order:?}"
+    );
+    assert!(core.sched().ws_starvation_stops > 0, "guard must have engaged");
+    assert!(core.sched().ws_rejections > 0, "WS control must have skipped it first");
 }

@@ -172,7 +172,7 @@ fn fig13_full_system_beats_vllm_when_saturated() {
     let n = 36;
     let ladder = sparseserve::baselines::ablation_ladder(2048, 2048, 32);
     let base = run_system(ladder[0].cfg.clone(), rate, n).throughput();
-    let full = run_system(ladder[5].cfg.clone(), rate, n).throughput();
+    let full = run_system(ladder.last().unwrap().cfg.clone(), rate, n).throughput();
     assert!(
         full > 1.5 * base,
         "full SparseServe {full} must clearly beat vLLM {base}"
