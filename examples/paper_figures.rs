@@ -62,5 +62,8 @@ fn main() -> Result<()> {
     if want("prefetch") {
         println!("{}", sim_exp::fig_prefetch(&[0.2, 0.35]));
     }
+    if want("layer-model") {
+        println!("{}", sim_exp::fig_layer_model(&[0.2, 0.35]));
+    }
     Ok(())
 }

@@ -2,7 +2,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 use sparseserve::config::ServingConfig;
-use sparseserve::engine::{Backend, PjrtBackend};
+use sparseserve::engine::{drive_step, Backend, PjrtBackend, StageHints};
 use sparseserve::runtime::Runtime;
 use sparseserve::scheduler::{Batch, Phase, PrefillWork, Request};
 
@@ -20,12 +20,13 @@ fn main() {
     requests.insert(1u32, req);
     let pf = Batch { decodes: vec![], prefill: Some(PrefillWork::LayerSegment{
         req:1, layer_start:0, layer_end: spec.n_layers, tok_start:0, tok_len: prompt.len(), is_last:true}) };
-    backend.run_batch(&pf, &requests).unwrap();
+    let hints = StageHints::default();
+    drive_step(&mut backend, &pf, &requests, &hints).unwrap();
     requests.get_mut(&1).unwrap().phase = Phase::Decode;
     let db = Batch { decodes: vec![1], prefill: None };
     let t0 = std::time::Instant::now();
     let n = 100;
-    for _ in 0..n { backend.run_batch(&db, &requests).unwrap(); }
+    for _ in 0..n { drive_step(&mut backend, &db, &requests, &hints).unwrap(); }
     let total = t0.elapsed().as_secs_f64();
     println!("decode step mean: {:.3} ms", total / n as f64 * 1e3);
     println!("{:<22} {:>6} {:>10} {:>10}", "entry", "calls", "total_s", "ms/call");

@@ -110,7 +110,7 @@ fn main() {
     // ---- real decode step, if artifacts exist ----
     let dir = sparseserve::runtime::Runtime::default_dir("tiny-llm");
     if dir.join("manifest.json").exists() {
-        use sparseserve::engine::{Backend, PjrtBackend};
+        use sparseserve::engine::{drive_step, Backend, PjrtBackend, StageHints};
         use sparseserve::scheduler::Batch;
         use std::collections::HashMap;
 
@@ -132,11 +132,12 @@ fn main() {
                 tok_start: 0, tok_len: prompt.len(), is_last: true,
             }),
         };
-        backend.run_batch(&pf, &requests).unwrap();
+        let hints = StageHints::default();
+        drive_step(&mut backend, &pf, &requests, &hints).unwrap();
         requests.get_mut(&1).unwrap().phase = Phase::Decode;
         let db = Batch { decodes: vec![1], prefill: None };
         results.push(bench("e2e/real decode step B=1 (4 layers, PJRT)", 2.0, 3, || {
-            std::hint::black_box(backend.run_batch(&db, &requests).unwrap());
+            std::hint::black_box(drive_step(&mut backend, &db, &requests, &hints).unwrap());
         }));
     }
 

@@ -6,4 +6,4 @@ pub mod serving;
 
 pub use hardware::HardwareSpec;
 pub use model::ModelSpec;
-pub use serving::{PrefillMode, ServingConfig, TransferKind};
+pub use serving::{IterModel, PrefillMode, ServingConfig, TransferKind};

@@ -12,6 +12,21 @@ pub enum PrefillMode {
     LayerSegmented,
 }
 
+/// Which iteration-timing event model the simulator charges PCIe
+/// traffic with (real backends measure wall time instead).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IterModel {
+    /// Coarse two-stream model ([`crate::sim::two_stream_iter`]): demand
+    /// misses are charged wholesale to the critical path.
+    Coarse,
+    /// Per-layer event model ([`crate::sim::layered_iter`]): layer-N
+    /// misses are issued when layer N starts and overlap the remaining
+    /// layers' compute; only copy time the compute window cannot absorb
+    /// stalls the iteration.
+    #[default]
+    PerLayer,
+}
+
 /// Which HBM<->DRAM transfer engines are used (paper §3.2 / Fig. 13 "FT").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TransferKind {
@@ -62,6 +77,20 @@ pub struct ServingConfig {
     /// simulator, per-head blocks for the real backend.
     pub max_prefetch_blocks: usize,
 
+    // ---- simulator fidelity ----
+    /// Iteration event model (simulator only): per-layer overlap vs the
+    /// coarse two-stream model. The `bench` subcommand compares the two.
+    pub iter_model: IterModel,
+
+    // ---- admission ----
+    /// Reserve admitted requests' KV against an observed-completion
+    /// estimate instead of the full prompt+max_new lifetime bound, and
+    /// grow the reservation block-by-block as decoding proceeds. Admits
+    /// more aggressively for short completions; oversubscription is safe
+    /// because a mid-batch memory exhaustion now rolls back and evicts
+    /// typed instead of abandoning the batch.
+    pub admission_estimates: bool,
+
     // ---- prefill ----
     pub prefill_mode: PrefillMode,
     /// Chunk size for chunked prefill (paper: 2048).
@@ -92,6 +121,8 @@ impl ServingConfig {
             ws_starvation_k: 4,
             prefetch: true,
             max_prefetch_blocks: 4096,
+            iter_model: IterModel::PerLayer,
+            admission_estimates: false,
             prefill_mode: PrefillMode::LayerSegmented,
             // paper §4.2: maxInjectToken = B * L for parity with chunked
             max_inject_tokens: chunk_tokens * n_layers,
@@ -116,6 +147,8 @@ impl ServingConfig {
             ws_starvation_k: 4,
             prefetch: false,
             max_prefetch_blocks: 0,
+            iter_model: IterModel::PerLayer,
+            admission_estimates: false,
             prefill_mode: PrefillMode::Chunked,
             chunk_tokens,
             max_inject_tokens: chunk_tokens,

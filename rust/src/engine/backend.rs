@@ -1,9 +1,52 @@
-//! The execution backend interface.
+//! The execution backend interface: transactional, layer-phased steps.
+//!
+//! A backend executes one hybrid batch as a [`StepSession`] — an
+//! explicit, phase-structured transaction the engine drives:
+//!
+//! ```text
+//! begin_step(batch)                 // pre-flight + open the transaction
+//!   .stage(hints)                   // prefetch working sets (this batch
+//!                                   //  first, then next-batch hints)
+//!   .prefill_segment(l, l+1) ...    // per-layer prefill phases
+//!   .decode_layer(0..n_layers) ...  // per-layer decode phases
+//! -> commit()  -> BatchOutcome      // keep everything, close the step
+//!  | rollback()                     // undo partial KV appends: every
+//!                                   //  batch-mate's KV is byte-identical
+//!                                   //  to its pre-step state
+//! ```
+//!
+//! Each phase emits a [`PhaseEvent`] (compute time, misses discovered at
+//! that layer, bytes moved), which is what lets the simulator charge
+//! PCIe traffic with the per-layer overlap model
+//! ([`crate::sim::layered_iter`]) instead of stalling wholesale, and
+//! what makes layer-segmented prefill a real execution path (one layer's
+//! HBM bound enforced per segment) rather than a planner-only mode.
+//!
+//! ## Invariants
+//!
+//! - Phase order is fixed: `stage` (at most once, first), then prefill
+//!   segments in ascending layer order, then decode layers `0..n_layers`
+//!   in order, then exactly one of `commit` / `rollback`.
+//! - A failed phase leaves the session rollback-able: `rollback()` after
+//!   any phase error restores every batch participant's KV state, so the
+//!   engine can retry the surviving batch-mates *in the same iteration*
+//!   (typed [`crate::memory::MemoryError`]s name the victim to drop).
+//! - Prefetch stages survive a rollback: they reference pre-existing
+//!   sealed blocks and keep feeding the retry.
+//! - Cross-iteration staging: `stage` receives [`StageHints`] naming the
+//!   requests predicted to decode *next* iteration; their working sets
+//!   are staged with leftover budget under this batch's compute and are
+//!   retired only at the end of the iteration they were staged for.
+//!
+//! [`drive_step`] encodes the canonical order; `EngineCore::step` layers
+//! partial-batch retry on top of it.
+
+use std::collections::HashMap;
 
 use anyhow::Result;
 
 use crate::memory::ReqId;
-use crate::scheduler::{Batch, Request};
+use crate::scheduler::{Batch, PrefillWork, Request};
 
 /// Result of executing one hybrid batch on a backend.
 ///
@@ -25,14 +68,22 @@ pub struct BatchOutcome {
     /// Modeled PCIe save critical-path time.
     pub save_time_s: f64,
     /// Iteration time lost to PCIe traffic that compute could not hide
-    /// (demand misses + prefetch spill past the compute window).
+    /// (under the configured event model).
     pub stall_time_s: f64,
+    /// Copy-stream time hidden under compute (the overlap the per-layer
+    /// model + prefetcher earned).
+    pub hidden_time_s: f64,
+    /// What the coarse two-stream model would have charged as stall for
+    /// the same traffic (diagnostics; `bench` compares the two).
+    pub coarse_stall_time_s: f64,
     /// Blocks staged ahead of need by the working-set prefetcher.
     pub prefetch_blocks: usize,
     /// Staged blocks consumed by this iteration's gathers.
     pub prefetch_hits: usize,
     /// Staged blocks this iteration never touched (mispredictions).
     pub prefetch_wasted: usize,
+    /// Blocks staged for the NEXT iteration (cross-iteration hints).
+    pub prefetch_deferred: usize,
 }
 
 /// KV-memory occupancy snapshot (request lifecycle observability: tests
@@ -48,6 +99,68 @@ pub struct MemStats {
     pub n_registered: usize,
 }
 
+/// Staging hints for [`StepSession::stage`]: which requests the planner
+/// predicts will decode in the *next* iteration. The session stages the
+/// current batch's working sets first (full budget, FCFS order from
+/// `Batch::decodes`), then these with whatever budget remains — issued
+/// under the current batch's compute so next iteration's gathers start
+/// warm (cross-iteration staging).
+#[derive(Debug, Clone, Default)]
+pub struct StageHints {
+    /// Predicted next-iteration decodes not in the current batch
+    /// (e.g. decodes the WS batch control skipped this iteration).
+    pub next_decodes: Vec<ReqId>,
+}
+
+/// One phase's worth of execution telemetry, emitted by
+/// [`StepSession::prefill_segment`] / [`StepSession::decode_layer`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseEvent {
+    /// Layer range this phase covered (`[layer_start, layer_end)`).
+    pub layer_start: usize,
+    pub layer_end: usize,
+    /// GPU compute attributed to this phase, seconds (modeled for the
+    /// simulator, measured for the real backend).
+    pub compute_s: f64,
+    /// Demand misses discovered at this phase (per-head blocks).
+    pub miss_blocks: usize,
+    /// PCIe bytes this phase moved on demand.
+    pub bytes_moved: usize,
+}
+
+/// One in-flight batch execution: a transaction over the backend's KV
+/// state, driven phase by phase (see the module docs for the lifecycle
+/// and invariants). Borrows the backend exclusively, so exactly one
+/// session can exist at a time.
+pub trait StepSession {
+    /// Prefetch phase: stage the batch's predicted working sets (FCFS),
+    /// then the `hints.next_decodes`' with leftover budget. Returns
+    /// blocks staged. Call at most once, before any compute phase.
+    fn stage(&mut self, hints: &StageHints) -> usize;
+
+    /// Execute the batch's prefill work restricted to layers
+    /// `[layer_start, layer_end)`. The engine derives segment bounds from
+    /// the planned [`PrefillWork`] (a chunk spans all layers, driven one
+    /// layer at a time). Layer-segmented work enforces the single-layer
+    /// HBM bound per segment. Typed `MemoryError`s are rollback-able.
+    fn prefill_segment(&mut self, layer_start: usize, layer_end: usize) -> Result<PhaseEvent>;
+
+    /// Execute one decode layer for every decode request in the batch.
+    /// Typed `MemoryError`s (mid-gather `HbmExhausted`, append
+    /// `DramExhausted`) are rollback-able.
+    fn decode_layer(&mut self, layer: usize) -> Result<PhaseEvent>;
+
+    /// Finalize: emit tokens, close the KV transaction, return the
+    /// outcome. Consumes the session.
+    fn commit(self: Box<Self>) -> Result<BatchOutcome>;
+
+    /// Undo the step: every batch participant's KV state (lengths,
+    /// blocks, metadata, hidden prefill activations, last tokens) is
+    /// restored to its pre-step value so the batch — minus any victim —
+    /// can re-run in the same iteration. Prefetch stages survive.
+    fn rollback(self: Box<Self>);
+}
+
 pub trait Backend {
     /// Called when a request is admitted (allocate KV state).
     fn register(&mut self, req: &Request) -> Result<()>;
@@ -55,31 +168,87 @@ pub trait Backend {
     /// Called when a request finishes or is cancelled (free KV state).
     fn release(&mut self, req: ReqId);
 
-    /// Execute one hybrid batch. `requests` gives access to prompt tokens
-    /// and progress counters.
-    fn run_batch(
-        &mut self,
-        batch: &Batch,
-        requests: &std::collections::HashMap<ReqId, Request>,
-    ) -> Result<BatchOutcome>;
+    /// Open a step transaction for one hybrid batch. Pre-flight checks
+    /// (e.g. DRAM demand of the decode step) fail here, typed, with zero
+    /// side effects. `requests` gives access to prompt tokens and
+    /// progress counters for the session's lifetime.
+    fn begin_step<'s>(
+        &'s mut self,
+        batch: &'s Batch,
+        requests: &'s HashMap<ReqId, Request>,
+    ) -> Result<Box<dyn StepSession + 's>>;
+
+    /// The engine gave up on the current iteration (every batch-mate was
+    /// evicted before a session could commit): discard the aborted
+    /// attempts' per-iteration transfer accounting and retire their
+    /// prefetch stages, so the NEXT committed step's `BatchOutcome` does
+    /// not inherit traffic it never moved. Default: no-op (stateless
+    /// backends).
+    fn abort_iteration(&mut self) {}
 
     /// Decode working-set estimate in bytes (Alg. 1 input).
     fn decode_ws_bytes(&mut self, req: ReqId) -> usize;
 
-    /// Stage the predicted working sets of the batch's decode requests
-    /// into HBM ahead of execution (`decodes` in plan order — earlier
-    /// FCFS requests get staging priority). Called by the engine between
-    /// planning and `run_batch`; the staged traffic overlaps the
-    /// iteration's compute. Returns blocks staged. Default: no-op for
-    /// backends without a prefetch pipeline.
-    fn prefetch(&mut self, decodes: &[ReqId]) -> usize {
-        let _ = decodes;
-        0
-    }
+    /// Model depth: how many `decode_layer` phases one step drives.
+    fn n_layers(&self) -> usize;
 
     /// KV-memory occupancy (HBM/DRAM bytes, live requests).
     fn mem_stats(&self) -> MemStats;
 
     /// Human-readable backend name.
     fn name(&self) -> &'static str;
+}
+
+/// The layer range a prefill work item drives: a chunk runs every layer
+/// (one `prefill_segment` per layer), a layer segment runs its planned
+/// range.
+pub fn prefill_layer_range(work: &PrefillWork, n_layers: usize) -> (usize, usize) {
+    match work {
+        PrefillWork::Chunk { .. } => (0, n_layers),
+        PrefillWork::LayerSegment { layer_start, layer_end, .. } => (*layer_start, *layer_end),
+    }
+}
+
+/// Drive one batch through the canonical phase order: stage, per-layer
+/// prefill segments, per-layer decode, then commit — or rollback on the
+/// first phase error (the error is returned so the caller can evict the
+/// typed victim and retry the survivors). This is the one place the
+/// phase protocol is encoded; every direct batch executor (engine,
+/// figures, benches) goes through it.
+pub fn drive_step(
+    backend: &mut dyn Backend,
+    batch: &Batch,
+    requests: &HashMap<ReqId, Request>,
+    hints: &StageHints,
+) -> Result<BatchOutcome> {
+    let n_layers = backend.n_layers();
+    let mut sess = backend.begin_step(batch, requests)?;
+    sess.stage(hints);
+    let mut phase_err = None;
+    'phases: {
+        if let Some(work) = &batch.prefill {
+            let (l0, l1) = prefill_layer_range(work, n_layers);
+            for layer in l0..l1 {
+                if let Err(e) = sess.prefill_segment(layer, layer + 1) {
+                    phase_err = Some(e);
+                    break 'phases;
+                }
+            }
+        }
+        if !batch.decodes.is_empty() {
+            for layer in 0..n_layers {
+                if let Err(e) = sess.decode_layer(layer) {
+                    phase_err = Some(e);
+                    break 'phases;
+                }
+            }
+        }
+    }
+    match phase_err {
+        None => sess.commit(),
+        Some(e) => {
+            sess.rollback();
+            Err(e)
+        }
+    }
 }

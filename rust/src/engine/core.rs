@@ -1,8 +1,8 @@
 //! `EngineCore`: the single per-iteration serving engine.
 //!
 //! Owns the scheduler + backend pair and the one true
-//! plan → run_batch → advance_prefill → emit → release sequence. Both
-//! serving front-ends are thin drivers over it:
+//! plan → session phases → commit/rollback → advance_prefill → emit →
+//! release sequence. Both serving front-ends are thin drivers over it:
 //!
 //! - [`crate::engine::Engine::run_trace`] advances a virtual clock by
 //!   each step's iteration time (offline trace replay);
@@ -19,7 +19,7 @@ use crate::memory::{MemoryError, ReqId};
 use crate::metrics::RunMetrics;
 use crate::scheduler::{Priority, Request, RequestParams, RequestTiming, Scheduler};
 
-use super::backend::{Backend, MemStats};
+use super::backend::{drive_step, Backend, MemStats, StageHints};
 use super::error::ServeError;
 
 /// A request as submitted by a client: prompt + lifecycle parameters.
@@ -294,8 +294,14 @@ impl EngineCore {
     }
 
     /// Execute one iteration at serving-clock time `now`: plan a hybrid
-    /// batch, run it, advance prefill progress, emit tokens (stamped at
-    /// `now + iter_time_s`) and release finished requests.
+    /// batch, drive it as a backend [`super::StepSession`] (stage →
+    /// per-layer phases → commit), advance prefill progress, emit tokens
+    /// (stamped at `now + iter_time_s`) and release finished requests.
+    ///
+    /// A typed mid-batch memory exhaustion rolls the session back, evicts
+    /// the victim and *retries the surviving batch-mates in the same
+    /// iteration* — their KV state is byte-identical to pre-step after
+    /// the rollback, so nobody else loses their step.
     ///
     /// Never blocks. When the scheduler is idle or admission-blocked the
     /// returned outcome has `ran_batch == false` and the driver chooses
@@ -324,39 +330,58 @@ impl EngineCore {
 
         let backend = &mut self.backend;
         let mut ws = |id| backend.decode_ws_bytes(id);
-        let batch = self.sched.plan(now, &mut ws);
+        let mut batch = self.sched.plan(now, &mut ws);
         if batch.is_empty() {
             return Ok(out);
         }
+        // cross-iteration staging: the session stages this batch's
+        // working sets first, then (with leftover budget, under this
+        // batch's compute) the decodes predicted for the NEXT iteration
+        let hints = StageHints { next_decodes: self.sched.stage_hints(&batch) };
 
-        // stage predicted working sets ahead of the batch (the staged
-        // traffic overlaps this iteration's compute)
-        if !batch.decodes.is_empty() {
-            self.backend.prefetch(&batch.decodes);
-        }
-
-        let bo = match self.backend.run_batch(&batch, &self.sched.requests) {
-            Ok(bo) => bo,
-            Err(e) => {
-                // typed memory-tier exhaustion: evict the offending
-                // request (free its KV), surface a ServeError, keep the
-                // engine alive. Anything else is fatal.
-                let info = e
-                    .downcast_ref::<MemoryError>()
-                    .map(|me| (me.req(), me.to_string()));
-                let Some((victim, reason)) = info else {
-                    return Err(ServeError::backend(e));
-                };
-                let err = ServeError::Evicted { reason };
-                if self.sched.cancel(victim) {
-                    self.backend.release(victim);
-                    self.metrics.requests_evicted += 1;
-                    if !self.retain_finished {
-                        self.sched.requests.remove(&victim);
+        let bo = loop {
+            let res = drive_step(
+                self.backend.as_mut(),
+                &batch,
+                &self.sched.requests,
+                &hints,
+            );
+            match res {
+                Ok(bo) => break bo,
+                Err(e) => {
+                    // typed memory-tier exhaustion: the session already
+                    // rolled back, so every batch-mate's KV is pristine.
+                    // Evict the victim and retry the survivors in the
+                    // SAME iteration. Anything untyped is fatal.
+                    let info = e
+                        .downcast_ref::<MemoryError>()
+                        .map(|me| (me.req(), me.to_string()));
+                    let Some((victim, reason)) = info else {
+                        return Err(ServeError::backend(e));
+                    };
+                    let err = ServeError::Evicted { reason };
+                    if self.sched.cancel(victim) {
+                        self.backend.release(victim);
+                        self.metrics.requests_evicted += 1;
+                        if !self.retain_finished {
+                            self.sched.requests.remove(&victim);
+                        }
+                    }
+                    out.evicted.push((victim, err));
+                    let before = batch.n_requests();
+                    batch.decodes.retain(|&id| id != victim);
+                    if batch.prefill.as_ref().map_or(false, |w| w.req() == victim) {
+                        batch.prefill = None;
+                    }
+                    if batch.is_empty() || batch.n_requests() == before {
+                        // nothing left to retry, or the victim was not in
+                        // the batch (cannot shrink further) — give up on
+                        // this iteration (dropping the aborted attempts'
+                        // iteration accounting), the engine stays alive
+                        self.backend.abort_iteration();
+                        return Ok(out);
                     }
                 }
-                out.evicted.push((victim, err));
-                return Ok(out);
             }
         };
         out.ran_batch = true;

@@ -1,8 +1,9 @@
 //! Model executor: drives batches from the scheduler through a backend.
 //!
-//! [`EngineCore`] owns the per-iteration serving logic (plan → run_batch
-//! → emit → release) plus the request lifecycle (submit / cancel /
-//! typed errors). Two thin drivers sit on top:
+//! [`EngineCore`] owns the per-iteration serving logic (plan →
+//! [`StepSession`] phases → commit/rollback → emit → release) plus the
+//! request lifecycle (submit / cancel / typed errors). Two thin drivers
+//! sit on top:
 //!
 //! - [`Engine::run_trace`]: offline, clock-driven trace replay;
 //! - [`crate::coordinator::Server`]: online, thread-driven streaming.
@@ -25,7 +26,10 @@ mod pjrt_backend;
 mod serve_loop;
 mod sim_backend;
 
-pub use backend::{Backend, BatchOutcome, MemStats};
+pub use backend::{
+    drive_step, prefill_layer_range, Backend, BatchOutcome, MemStats, PhaseEvent, StageHints,
+    StepSession,
+};
 pub use self::core::{EngineCore, RunReport, StepOutcome, SubmitRequest, TokenEvent};
 pub use error::ServeError;
 pub use pjrt_backend::PjrtBackend;

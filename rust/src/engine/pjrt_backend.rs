@@ -10,6 +10,18 @@
 //! decode: `decode_qkv_{B}` (projection+RoPE+block scoring) -> host
 //!   top-k -> KV-manager gather (FlashH2D on misses) ->
 //!   `decode_attend_{B}_{K}` (sparse attention+FFN) -> `lm_head_{B}`.
+//!
+//! Execution is session-based ([`super::StepSession`]): `begin_step`
+//! pre-flights the decode step's DRAM demand (typed failure with zero
+//! side effects), opens a [`crate::memory::KvManager`] transaction and
+//! snapshots each batch participant's host-side state (last token,
+//! carried prefill activation). The engine then drives one
+//! `prefill_segment`/`decode_layer` call per layer — layer-segmented
+//! prefill is the real execution path, not a planner annotation — and a
+//! mid-batch typed `MemoryError` (mid-gather `HbmExhausted`, append
+//! `DramExhausted`) rolls the whole step back: KV truncated to pre-step
+//! lengths, stale residency purged, activations restored, so the
+//! surviving batch-mates re-run identically in the same iteration.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -19,12 +31,14 @@ use anyhow::{anyhow, Result};
 
 use crate::config::ServingConfig;
 use crate::memory::manager::NEG_INF;
-use crate::memory::{engine_for, KvManager, MemoryError, ReqId};
+use crate::memory::{engine_for, BlockKey, KvManager, MemoryError, ReqId};
 use crate::runtime::{HostTensor, MixedInput, Runtime};
 use crate::scheduler::{Batch, PrefillWork, Request};
 use crate::sparse::{top_k_blocks_fast, WorkingSetTracker};
 
-use super::backend::{Backend, BatchOutcome, MemStats};
+use super::backend::{
+    Backend, BatchOutcome, MemStats, PhaseEvent, StageHints, StepSession,
+};
 
 struct RealReq {
     last_token: i32,
@@ -96,163 +110,6 @@ impl PjrtBackend {
             .ok_or_else(|| anyhow!("no budget_k bucket >= {need}"))
     }
 
-    // ------------------------------------------------------------- prefill
-
-    fn run_prefill(&mut self, work: &PrefillWork, requests: &HashMap<ReqId, Request>, out: &mut BatchOutcome) -> Result<()> {
-        match work {
-            PrefillWork::LayerSegment { req, layer_start, layer_end, tok_start, tok_len, is_last } => {
-                let r = &requests[req];
-                if *tok_start != 0 || *tok_len != r.prompt_len {
-                    return Err(anyhow!(
-                        "real backend supports whole-prompt layer segments only \
-                         (hybrid within-layer chunking is simulator-only); \
-                         set max_inject_tokens >= max prompt length"
-                    ));
-                }
-                self.prefill_layers(*req, r, *layer_start, *layer_end, *is_last, out)
-            }
-            PrefillWork::Chunk { req, start, len, is_last } => {
-                let r = &requests[req];
-                if *start == 0 && *len == r.prompt_len {
-                    // plain prefill = all layers, whole prompt, no past
-                    self.prefill_layers(*req, r, 0, self.spec().n_layers, *is_last, out)
-                } else {
-                    self.prefill_chunk(*req, r, *start, *len, *is_last, out)
-                }
-            }
-        }
-    }
-
-    /// Whole-prompt prefill of layers [layer_start, layer_end).
-    fn prefill_layers(
-        &mut self,
-        id: ReqId,
-        req: &Request,
-        layer_start: usize,
-        layer_end: usize,
-        is_last: bool,
-        out: &mut BatchOutcome,
-    ) -> Result<()> {
-        let d = self.spec().d_model;
-        let plen = req.prompt_len;
-        let t_pad = self
-            .rt
-            .manifest
-            .fit_bucket("prefill_t", plen)
-            .ok_or_else(|| anyhow!("prompt {plen} exceeds prefill buckets"))?;
-
-        // layer 0: embed the (padded) prompt; later segments restore the
-        // saved activation (paper Fig. 9: "activation states ... saved")
-        let mut x: Vec<f32> = if layer_start == 0 {
-            let mut toks = vec![0i32; t_pad];
-            toks[..plen].copy_from_slice(&req.prompt);
-            let tokens = HostTensor::i32(vec![t_pad], toks);
-            let outs = self
-                .rt
-                .execute(&format!("embed_{t_pad}"), &[&tokens, self.rt.weights.get("embedding")])?;
-            outs[0].as_f32().to_vec()
-        } else {
-            let (h, tp, _tr) = self
-                .reqs
-                .get_mut(&id)
-                .and_then(|r| r.hidden.take())
-                .ok_or_else(|| anyhow!("missing saved activation for req {id}"))?;
-            debug_assert_eq!(tp, t_pad);
-            h
-        };
-
-        let mut seg_mask = vec![0.0f32; t_pad];
-        seg_mask[plen..].fill(NEG_INF);
-        let seg_mask_t = HostTensor::f32(vec![t_pad], seg_mask);
-        let pos0 = HostTensor::scalar_i32(0);
-
-        for layer in layer_start..layer_end {
-            let xt = HostTensor::f32(vec![t_pad, d], x);
-            let lw = self.rt.weights.layer(layer);
-            let mut inputs: Vec<&HostTensor> = vec![&xt, &pos0, &seg_mask_t];
-            inputs.extend(lw);
-            let outs = self.rt.execute(&format!("prefill_layer_{t_pad}"), &inputs)?;
-            // outs: (k [Hkv,T,Dh], v, x2 [T,d])
-            self.kv
-                .append_prefill_layer(id, layer, outs[0].as_f32(), outs[1].as_f32(), t_pad, plen)?;
-            x = outs[2].as_f32().to_vec();
-        }
-
-        if is_last {
-            let tok = self.lm_head_rows(&[(&x, t_pad, plen - 1)])?[0];
-            let st = self.reqs.get_mut(&id).expect("unregistered");
-            st.last_token = tok;
-            st.hidden = None;
-            out.tokens.push((id, Some(tok)));
-        } else {
-            self.reqs.get_mut(&id).expect("unregistered").hidden = Some((x, t_pad, plen));
-        }
-        Ok(())
-    }
-
-    /// One chunk of the chunked-prefill baseline (start > 0: has past).
-    fn prefill_chunk(
-        &mut self,
-        id: ReqId,
-        req: &Request,
-        start: usize,
-        len: usize,
-        is_last: bool,
-        out: &mut BatchOutcome,
-    ) -> Result<()> {
-        let spec = self.spec().clone();
-        let (d, hkv, dh) = (spec.d_model, spec.n_kv_heads, spec.head_dim);
-        let t_pad = self
-            .rt
-            .manifest
-            .fit_bucket("chunk_t", len)
-            .ok_or_else(|| anyhow!("chunk {len} exceeds chunk buckets"))?;
-        let p_max = self.rt.manifest.chunk_past;
-        if start > p_max {
-            return Err(anyhow!("past {start} exceeds chunk_past bucket {p_max}"));
-        }
-
-        let mut toks = vec![0i32; t_pad];
-        toks[..len].copy_from_slice(&req.prompt[start..start + len]);
-        let tokens = HostTensor::i32(vec![t_pad], toks);
-        let embedded = self
-            .rt
-            .execute(&format!("embed_{t_pad}"), &[&tokens, self.rt.weights.get("embedding")])?;
-        let mut x = embedded[0].as_f32().to_vec();
-
-        let mut seg_mask = vec![0.0f32; t_pad];
-        seg_mask[len..].fill(NEG_INF);
-        let seg_mask_t = HostTensor::f32(vec![t_pad], seg_mask);
-        let pos = HostTensor::scalar_i32(start as i32);
-
-        for layer in 0..spec.n_layers {
-            // export this layer's accumulated past (exactly `start` tokens)
-            let mut pk = vec![0.0f32; hkv * p_max * dh];
-            let mut pv = vec![0.0f32; hkv * p_max * dh];
-            let mut pm = vec![0.0f32; p_max];
-            self.kv.export_past(id, layer, p_max, &mut pk, &mut pv, &mut pm);
-            let pk_t = HostTensor::f32(vec![hkv, p_max, dh], pk);
-            let pv_t = HostTensor::f32(vec![hkv, p_max, dh], pv);
-            let pm_t = HostTensor::f32(vec![p_max], pm);
-
-            let xt = HostTensor::f32(vec![t_pad, d], x);
-            let lw = self.rt.weights.layer(layer);
-            let mut inputs: Vec<&HostTensor> = vec![&xt, &pos, &seg_mask_t, &pk_t, &pv_t, &pm_t];
-            inputs.extend(lw);
-            let outs = self.rt.execute(&format!("prefill_chunk_{t_pad}"), &inputs)?;
-            self.kv
-                .append_prefill_layer(id, layer, outs[0].as_f32(), outs[1].as_f32(), t_pad, len)?;
-            x = outs[2].as_f32().to_vec();
-        }
-
-        if is_last {
-            let tok = self.lm_head_rows(&[(&x, t_pad, len - 1)])?[0];
-            self.reqs.get_mut(&id).expect("unregistered").last_token = tok;
-            out.tokens.push((id, Some(tok)));
-        }
-        Ok(())
-    }
-
     /// lm_head over selected rows of hidden states: (data [t_pad, d], t_pad, row).
     fn lm_head_rows(&self, rows: &[(&Vec<f32>, usize, usize)]) -> Result<Vec<i32>> {
         let d = self.spec().d_model;
@@ -278,169 +135,577 @@ impl PjrtBackend {
         Ok(outs[0].as_i32()[..b].to_vec())
     }
 
+    /// Embed `tokens` padded to the named bucket family; returns the
+    /// activation and the padded length. Shared by every prefill entry
+    /// path (whole-prompt layer-segmented, plain, chunked).
+    fn embed_padded(&self, tokens: &[i32], bucket: &str) -> Result<(Vec<f32>, usize)> {
+        let t_pad = self
+            .rt
+            .manifest
+            .fit_bucket(bucket, tokens.len())
+            .ok_or_else(|| anyhow!("{} tokens exceed {bucket} buckets", tokens.len()))?;
+        let mut toks = vec![0i32; t_pad];
+        toks[..tokens.len()].copy_from_slice(tokens);
+        let tokens_t = HostTensor::i32(vec![t_pad], toks);
+        let outs = self.rt.execute(
+            &format!("embed_{t_pad}"),
+            &[&tokens_t, self.rt.weights.get("embedding")],
+        )?;
+        Ok((outs[0].as_f32().to_vec(), t_pad))
+    }
+
+    /// Recency-ranked staging plan for a set of decode requests, FCFS.
+    fn staging_plan(&self, ids: &[ReqId], cap: usize) -> Vec<BlockKey> {
+        let mut plan = Vec::new();
+        for &id in ids {
+            if plan.len() >= cap {
+                break;
+            }
+            let Some(r) = self.reqs.get(&id) else { continue };
+            for (layer, head, block) in r.ws.ranked_blocks_capped(cap - plan.len()) {
+                plan.push(BlockKey::new(id, layer, head, block));
+            }
+        }
+        plan
+    }
+}
+
+/// Which kernel family a prefill session runs per layer.
+enum PfMode {
+    /// Whole prompt, no past: `prefill_layer_{T}` (layer-segmented path
+    /// and plain prefill).
+    WholePrompt,
+    /// A chunk with accumulated past re-exported each layer:
+    /// `prefill_chunk_{T}` (chunked baseline).
+    ChunkPast,
+}
+
+/// Prefill activation carried across this session's layer phases.
+struct PfState {
+    mode: PfMode,
+    x: Vec<f32>,
+    t_pad: usize,
+    /// Valid token rows in `x` (prompt length / chunk length).
+    valid: usize,
+    /// Past tokens preceding this chunk (`ChunkPast` position offset).
+    start: usize,
+}
+
+/// Per-compiled-bucket decode group state carried across layer phases.
+struct DecGroup {
+    ids: Vec<ReqId>,
+    b_pad: usize,
+    x: Vec<f32>,
+    pos: Vec<i32>,
+    ws_items: Vec<Vec<(u16, u16, u32)>>,
+}
+
+struct DecState {
+    k_bucket: usize,
+    budget: usize,
+    groups: Vec<DecGroup>,
+}
+
+/// One in-flight real-backend batch (see [`StepSession`]).
+struct PjrtSession<'s> {
+    be: &'s mut PjrtBackend,
+    batch: &'s Batch,
+    requests: &'s HashMap<ReqId, Request>,
+    t0: Instant,
+    tokens: Vec<(ReqId, Option<i32>)>,
+    /// Pre-step host-side snapshots: (id, last_token, carried hidden).
+    snap: Vec<(ReqId, i32, Option<(Vec<f32>, usize, usize)>)>,
+    pf: Option<PfState>,
+    dec: Option<DecState>,
+    /// Phase-delta baselines into the KvManager's iteration stats.
+    last_loaded: usize,
+    last_load_bytes: usize,
+    staged: bool,
+}
+
+impl<'s> PjrtSession<'s> {
+    /// Per-phase (miss blocks, demand bytes) delta from the KV manager.
+    fn load_delta(&mut self) -> (usize, usize) {
+        let iter = self.be.kv.iter_so_far();
+        let blocks = iter.blocks_loaded - self.last_loaded;
+        let bytes = iter.load.bytes - self.last_load_bytes;
+        self.last_loaded = iter.blocks_loaded;
+        self.last_load_bytes = iter.load.bytes;
+        (blocks, bytes)
+    }
+
+    // ------------------------------------------------------------- prefill
+
+    /// First prefill phase: build the carried activation (embed, restore
+    /// a stashed hidden state, or embed a chunk).
+    fn pf_init(&mut self, layer: usize) -> Result<()> {
+        if self.pf.is_some() {
+            return Ok(());
+        }
+        let be = &mut *self.be;
+        let work = self.batch.prefill.as_ref().expect("no prefill planned");
+        let req_id = work.req();
+        let r = &self.requests[&req_id];
+        let state = match work {
+            PrefillWork::LayerSegment { tok_start, tok_len, .. } => {
+                if *tok_start != 0 || *tok_len != r.prompt_len {
+                    return Err(anyhow!(
+                        "real backend supports whole-prompt layer segments only \
+                         (hybrid within-layer chunking is simulator-only); \
+                         set max_inject_tokens >= max prompt length"
+                    ));
+                }
+                // single-layer HBM bound: the segment only keeps ONE
+                // layer of KV live, but that layer must fit (paper §3.4)
+                let spec = be.spec();
+                let seg_layer_bytes = r.prompt_len.div_ceil(spec.block_size)
+                    * spec.n_kv_heads
+                    * be.kv.block_bytes();
+                if be.cfg.offload && seg_layer_bytes > be.kv.hbm_bytes_capacity() {
+                    return Err(MemoryError::HbmExhausted { req: req_id }.into());
+                }
+                if layer == 0 {
+                    let (x, t_pad) = be.embed_padded(&r.prompt, "prefill_t")?;
+                    PfState {
+                        mode: PfMode::WholePrompt,
+                        x,
+                        t_pad,
+                        valid: r.prompt_len,
+                        start: 0,
+                    }
+                } else {
+                    // later segment batch: restore the stashed activation
+                    // (paper Fig. 9: "activation states ... saved")
+                    let (h, t_pad, tr) = be
+                        .reqs
+                        .get_mut(&req_id)
+                        .and_then(|st| st.hidden.take())
+                        .ok_or_else(|| anyhow!("missing saved activation for req {req_id}"))?;
+                    PfState { mode: PfMode::WholePrompt, x: h, t_pad, valid: tr, start: 0 }
+                }
+            }
+            PrefillWork::Chunk { start, len, .. } => {
+                if *start == 0 && *len == r.prompt_len {
+                    // plain prefill = whole prompt, no past
+                    let (x, t_pad) = be.embed_padded(&r.prompt, "prefill_t")?;
+                    PfState {
+                        mode: PfMode::WholePrompt,
+                        x,
+                        t_pad,
+                        valid: r.prompt_len,
+                        start: 0,
+                    }
+                } else {
+                    let p_max = be.rt.manifest.chunk_past;
+                    if *start > p_max {
+                        return Err(anyhow!("past {start} exceeds chunk_past bucket {p_max}"));
+                    }
+                    let (x, t_pad) =
+                        be.embed_padded(&r.prompt[*start..*start + *len], "chunk_t")?;
+                    PfState { mode: PfMode::ChunkPast, x, t_pad, valid: *len, start: *start }
+                }
+            }
+        };
+        self.pf = Some(state);
+        Ok(())
+    }
+
+    /// Run one prefill layer on the carried activation.
+    fn pf_layer(&mut self, layer: usize) -> Result<()> {
+        let be = &mut *self.be;
+        let pf = self.pf.as_mut().expect("pf_init ran");
+        let work = self.batch.prefill.as_ref().expect("no prefill planned");
+        let req_id = work.req();
+        let spec = be.spec().clone();
+        let d = spec.d_model;
+        let t_pad = pf.t_pad;
+
+        let mut seg_mask = vec![0.0f32; t_pad];
+        seg_mask[pf.valid..].fill(NEG_INF);
+        let seg_mask_t = HostTensor::f32(vec![t_pad], seg_mask);
+        let x = std::mem::take(&mut pf.x);
+        let xt = HostTensor::f32(vec![t_pad, d], x);
+
+        let outs = match pf.mode {
+            PfMode::WholePrompt => {
+                let pos0 = HostTensor::scalar_i32(0);
+                let lw = be.rt.weights.layer(layer);
+                let mut inputs: Vec<&HostTensor> = vec![&xt, &pos0, &seg_mask_t];
+                inputs.extend(lw);
+                be.rt.execute(&format!("prefill_layer_{t_pad}"), &inputs)?
+            }
+            PfMode::ChunkPast => {
+                let (hkv, dh) = (spec.n_kv_heads, spec.head_dim);
+                let p_max = be.rt.manifest.chunk_past;
+                // export this layer's accumulated past (exactly `start` tokens)
+                let mut pk = vec![0.0f32; hkv * p_max * dh];
+                let mut pv = vec![0.0f32; hkv * p_max * dh];
+                let mut pm = vec![0.0f32; p_max];
+                be.kv.export_past(req_id, layer, p_max, &mut pk, &mut pv, &mut pm);
+                let pk_t = HostTensor::f32(vec![hkv, p_max, dh], pk);
+                let pv_t = HostTensor::f32(vec![hkv, p_max, dh], pv);
+                let pm_t = HostTensor::f32(vec![p_max], pm);
+                let pos = HostTensor::scalar_i32(pf.start as i32);
+                let lw = be.rt.weights.layer(layer);
+                let mut inputs: Vec<&HostTensor> =
+                    vec![&xt, &pos, &seg_mask_t, &pk_t, &pv_t, &pm_t];
+                inputs.extend(lw);
+                be.rt.execute(&format!("prefill_chunk_{t_pad}"), &inputs)?
+            }
+        };
+        // outs: (k [Hkv,T,Dh], v, x2 [T,d])
+        be.kv
+            .append_prefill_layer(req_id, layer, outs[0].as_f32(), outs[1].as_f32(), t_pad, pf.valid)?;
+        pf.x = outs[2].as_f32().to_vec();
+        Ok(())
+    }
+
+    /// Final prefill phase of this session's work item: first token
+    /// (`is_last`) or stash the activation for the next layer batch.
+    fn pf_finish(&mut self) -> Result<()> {
+        let work = self.batch.prefill.as_ref().expect("no prefill planned");
+        let req_id = work.req();
+        let pf = self.pf.take().expect("pf_init ran");
+        if work.is_last() {
+            let tok = self.be.lm_head_rows(&[(&pf.x, pf.t_pad, pf.valid - 1)])?[0];
+            let st = self.be.reqs.get_mut(&req_id).expect("unregistered");
+            st.last_token = tok;
+            st.hidden = None;
+            self.tokens.push((req_id, Some(tok)));
+        } else if matches!(pf.mode, PfMode::WholePrompt) {
+            self.be.reqs.get_mut(&req_id).expect("unregistered").hidden =
+                Some((pf.x, pf.t_pad, pf.valid));
+        }
+        Ok(())
+    }
+
     // -------------------------------------------------------------- decode
 
-    /// One decode step for a group of requests (<= max decode bucket).
-    fn decode_group(&mut self, ids: &[ReqId], out: &mut BatchOutcome) -> Result<()> {
-        let spec = self.spec().clone();
+    /// First decode phase: split decodes into compiled batch buckets and
+    /// embed every group's last tokens.
+    fn dec_init(&mut self) -> Result<()> {
+        if self.dec.is_some() {
+            return Ok(());
+        }
+        let be = &mut *self.be;
+        let d = be.spec().d_model;
+        let k_bucket = be.budget_bucket()?;
+        let budget = be.budget_needed().min(k_bucket);
+        let max_b = be
+            .rt
+            .manifest
+            .bucket("decode_b")
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(1);
+        let mut groups = Vec::new();
+        for ids in self.batch.decodes.chunks(max_b) {
+            let b = ids.len();
+            let b_pad = be
+                .rt
+                .manifest
+                .fit_bucket("decode_b", b)
+                .ok_or_else(|| anyhow!("no decode bucket >= {b}"))?;
+            let mut toks = vec![0i32; b_pad];
+            for (i, id) in ids.iter().enumerate() {
+                toks[i] = be.reqs[id].last_token;
+            }
+            let tokens = HostTensor::i32(vec![b_pad], toks);
+            let emb = be.rt.execute_mixed(
+                &format!("embed_{b_pad}"),
+                &[MixedInput::Tensor(&tokens), MixedInput::Weight("embedding")],
+            )?;
+            let x = emb[0].as_f32().to_vec(); // [b_pad, d]
+            debug_assert_eq!(x.len(), b_pad * d);
+            // positions: current sequence length (same for every layer)
+            let mut pos = vec![0i32; b_pad];
+            for (i, id) in ids.iter().enumerate() {
+                pos[i] = be.kv.seq_len(*id) as i32;
+            }
+            groups.push(DecGroup {
+                ids: ids.to_vec(),
+                b_pad,
+                x,
+                pos,
+                ws_items: vec![Vec::new(); b],
+            });
+        }
+        self.dec = Some(DecState { k_bucket, budget, groups });
+        Ok(())
+    }
+
+    /// One decode layer for one group (projection+scoring -> save new
+    /// token KV -> select+gather -> sparse attention+FFN).
+    fn dec_group_layer(&mut self, gi: usize, layer: usize) -> Result<()> {
+        let be = &mut *self.be;
+        let dec = self.dec.as_mut().expect("dec_init ran");
+        let spec = be.spec().clone();
         let (d, hq, hkv, dh, bs) =
             (spec.d_model, spec.n_heads, spec.n_kv_heads, spec.head_dim, spec.block_size);
         let nb = spec.max_blocks();
-        let b = ids.len();
-        let b_pad = self
-            .rt
-            .manifest
-            .fit_bucket("decode_b", b)
-            .ok_or_else(|| anyhow!("no decode bucket >= {b}"))?;
-        let k_bucket = self.budget_bucket()?;
-        let budget = self.budget_needed().min(k_bucket);
+        let (k_bucket, budget) = (dec.k_bucket, dec.budget);
         let s_len = k_bucket * bs;
+        let g = &mut dec.groups[gi];
+        let b_pad = g.b_pad;
 
-        // ---- embed last tokens ----
-        let mut toks = vec![0i32; b_pad];
-        for (i, id) in ids.iter().enumerate() {
-            toks[i] = self.reqs[id].last_token;
+        // ---- metadata tensors ----
+        let mut lo = vec![0.0f32; b_pad * hkv * nb * dh];
+        let mut hi = vec![0.0f32; b_pad * hkv * nb * dh];
+        let mut mm = vec![NEG_INF; b_pad * hkv * nb];
+        for (i, id) in g.ids.iter().enumerate() {
+            let lo_s = &mut lo[i * hkv * nb * dh..(i + 1) * hkv * nb * dh];
+            let hi_s = &mut hi[i * hkv * nb * dh..(i + 1) * hkv * nb * dh];
+            let mm_s = &mut mm[i * hkv * nb..(i + 1) * hkv * nb];
+            be.kv.metadata_into(*id, layer, nb, lo_s, hi_s, mm_s);
         }
-        let tokens = HostTensor::i32(vec![b_pad], toks);
-        let emb = self.rt.execute_mixed(
-            &format!("embed_{b_pad}"),
-            &[MixedInput::Tensor(&tokens), MixedInput::Weight("embedding")],
-        )?;
-        let mut x = emb[0].as_f32().to_vec(); // [b_pad, d]
+        let xt = HostTensor::f32(vec![b_pad, d], g.x.clone());
+        let pos_t = HostTensor::i32(vec![b_pad], g.pos.clone());
+        let lo_t = HostTensor::f32(vec![b_pad, hkv, nb, dh], lo);
+        let hi_t = HostTensor::f32(vec![b_pad, hkv, nb, dh], hi);
+        let mm_t = HostTensor::f32(vec![b_pad, hkv, nb], mm);
+        let inputs = [
+            MixedInput::Tensor(&xt),
+            MixedInput::Tensor(&pos_t),
+            MixedInput::Tensor(&lo_t),
+            MixedInput::Tensor(&hi_t),
+            MixedInput::Tensor(&mm_t),
+            MixedInput::Weight(be.wname(layer, 0)), // attn_norm
+            MixedInput::Weight(be.wname(layer, 1)), // wq
+            MixedInput::Weight(be.wname(layer, 2)), // wk
+            MixedInput::Weight(be.wname(layer, 3)), // wv
+        ];
+        let outs = be.rt.execute_mixed(&format!("decode_qkv_{b_pad}"), &inputs)?;
+        // outs: q [B,Hq,Dh], k [B,Hkv,Dh], v [B,Hkv,Dh], scores [B,Hkv,NB]
+        let q = outs[0].as_f32();
+        let kk = outs[1].as_f32();
+        let vv = outs[2].as_f32();
+        let scores = outs[3].as_f32();
 
-        // positions: current sequence length (same for every layer)
-        let mut pos = vec![0i32; b_pad];
-        for (i, id) in ids.iter().enumerate() {
-            pos[i] = self.kv.seq_len(*id) as i32;
+        // ---- save new token KV ----
+        for (i, id) in g.ids.iter().enumerate() {
+            be.kv.append_decode_token(
+                *id,
+                layer,
+                &kk[i * hkv * dh..(i + 1) * hkv * dh],
+                &vv[i * hkv * dh..(i + 1) * hkv * dh],
+            )?;
         }
-        let pos_t = HostTensor::i32(vec![b_pad], pos);
 
-        // per-step working-set recordings
-        let mut ws_items: Vec<Vec<(u16, u16, u32)>> = vec![Vec::new(); b];
-
-        for layer in 0..spec.n_layers {
-            // ---- metadata tensors ----
-            let mut lo = vec![0.0f32; b_pad * hkv * nb * dh];
-            let mut hi = vec![0.0f32; b_pad * hkv * nb * dh];
-            let mut mm = vec![NEG_INF; b_pad * hkv * nb];
-            for (i, id) in ids.iter().enumerate() {
-                let lo_s = &mut lo[i * hkv * nb * dh..(i + 1) * hkv * nb * dh];
-                let hi_s = &mut hi[i * hkv * nb * dh..(i + 1) * hkv * nb * dh];
-                let mm_s = &mut mm[i * hkv * nb..(i + 1) * hkv * nb];
-                self.kv.metadata_into(*id, layer, nb, lo_s, hi_s, mm_s);
-            }
-            let xt = HostTensor::f32(vec![b_pad, d], x.clone());
-            let lo_t = HostTensor::f32(vec![b_pad, hkv, nb, dh], lo);
-            let hi_t = HostTensor::f32(vec![b_pad, hkv, nb, dh], hi);
-            let mm_t = HostTensor::f32(vec![b_pad, hkv, nb], mm);
-            let inputs = [
-                MixedInput::Tensor(&xt),
-                MixedInput::Tensor(&pos_t),
-                MixedInput::Tensor(&lo_t),
-                MixedInput::Tensor(&hi_t),
-                MixedInput::Tensor(&mm_t),
-                MixedInput::Weight(self.wname(layer, 0)), // attn_norm
-                MixedInput::Weight(self.wname(layer, 1)), // wq
-                MixedInput::Weight(self.wname(layer, 2)), // wk
-                MixedInput::Weight(self.wname(layer, 3)), // wv
-            ];
-            let outs = self.rt.execute_mixed(&format!("decode_qkv_{b_pad}"), &inputs)?;
-            // outs: q [B,Hq,Dh], k [B,Hkv,Dh], v [B,Hkv,Dh], scores [B,Hkv,NB]
-            let q = outs[0].as_f32();
-            let kk = outs[1].as_f32();
-            let vv = outs[2].as_f32();
-            let scores = outs[3].as_f32();
-
-            // ---- save new token KV ----
-            for (i, id) in ids.iter().enumerate() {
-                self.kv.append_decode_token(
-                    *id,
-                    layer,
-                    &kk[i * hkv * dh..(i + 1) * hkv * dh],
-                    &vv[i * hkv * dh..(i + 1) * hkv * dh],
-                )?;
-            }
-
-            // ---- select + gather ----
-            let mut gk = vec![0.0f32; b_pad * hkv * s_len * dh];
-            let mut gv = vec![0.0f32; b_pad * hkv * s_len * dh];
-            let mut gm = vec![NEG_INF; b_pad * hkv * s_len];
-            for (i, id) in ids.iter().enumerate() {
-                let n_sealed = self.kv.n_sealed(*id, layer);
-                let sel: Vec<Vec<u32>> = (0..hkv)
-                    .map(|h| {
-                        let row = &scores[(i * hkv + h) * nb..(i * hkv + h + 1) * nb];
-                        top_k_blocks_fast(row, n_sealed, budget.saturating_sub(1))
-                    })
-                    .collect();
-                for (h, sh) in sel.iter().enumerate() {
-                    for &blk in sh {
-                        ws_items[i].push((layer as u16, h as u16, blk));
-                    }
-                    // the open block is part of the working set too
-                    if self.kv.open_fill(*id, layer) > 0 {
-                        ws_items[i].push((layer as u16, h as u16, n_sealed as u32));
-                    }
+        // ---- select + gather ----
+        let mut gk = vec![0.0f32; b_pad * hkv * s_len * dh];
+        let mut gv = vec![0.0f32; b_pad * hkv * s_len * dh];
+        let mut gm = vec![NEG_INF; b_pad * hkv * s_len];
+        for (i, id) in g.ids.iter().enumerate() {
+            let n_sealed = be.kv.n_sealed(*id, layer);
+            let sel: Vec<Vec<u32>> = (0..hkv)
+                .map(|h| {
+                    let row = &scores[(i * hkv + h) * nb..(i * hkv + h + 1) * nb];
+                    top_k_blocks_fast(row, n_sealed, budget.saturating_sub(1))
+                })
+                .collect();
+            for (h, sh) in sel.iter().enumerate() {
+                for &blk in sh {
+                    g.ws_items[i].push((layer as u16, h as u16, blk));
                 }
-                let gk_s = &mut gk[i * hkv * s_len * dh..(i + 1) * hkv * s_len * dh];
-                let gv_s = &mut gv[i * hkv * s_len * dh..(i + 1) * hkv * s_len * dh];
-                let gm_s = &mut gm[i * hkv * s_len..(i + 1) * hkv * s_len];
-                self.kv.gather_into(*id, layer, &sel, k_bucket, gk_s, gv_s, gm_s)?;
+                // the open block is part of the working set too
+                if be.kv.open_fill(*id, layer) > 0 {
+                    g.ws_items[i].push((layer as u16, h as u16, n_sealed as u32));
+                }
             }
-
-            // ---- sparse attention + FFN ----
-            let xt = HostTensor::f32(vec![b_pad, d], x);
-            let q_t = HostTensor::f32(vec![b_pad, hq, dh], q.to_vec());
-            let gk_t = HostTensor::f32(vec![b_pad, hkv, s_len, dh], gk);
-            let gv_t = HostTensor::f32(vec![b_pad, hkv, s_len, dh], gv);
-            let gm_t = HostTensor::f32(vec![b_pad, hkv, s_len], gm);
-            let inputs = [
-                MixedInput::Tensor(&xt),
-                MixedInput::Tensor(&q_t),
-                MixedInput::Tensor(&gk_t),
-                MixedInput::Tensor(&gv_t),
-                MixedInput::Tensor(&gm_t),
-                MixedInput::Weight(self.wname(layer, 4)), // wo
-                MixedInput::Weight(self.wname(layer, 5)), // ffn_norm
-                MixedInput::Weight(self.wname(layer, 6)), // w_gate
-                MixedInput::Weight(self.wname(layer, 7)), // w_up
-                MixedInput::Weight(self.wname(layer, 8)), // w_down
-            ];
-            let outs = self
-                .rt
-                .execute_mixed(&format!("decode_attend_{b_pad}_{k_bucket}"), &inputs)?;
-            x = outs[0].as_f32().to_vec();
+            let gk_s = &mut gk[i * hkv * s_len * dh..(i + 1) * hkv * s_len * dh];
+            let gv_s = &mut gv[i * hkv * s_len * dh..(i + 1) * hkv * s_len * dh];
+            let gm_s = &mut gm[i * hkv * s_len..(i + 1) * hkv * s_len];
+            be.kv.gather_into(*id, layer, &sel, k_bucket, gk_s, gv_s, gm_s)?;
         }
 
-        // ---- next token ----
-        let xt = HostTensor::f32(vec![b_pad, d], x);
-        let outs = self.rt.execute_mixed(
-            &format!("lm_head_{b_pad}"),
-            &[
-                MixedInput::Tensor(&xt),
-                MixedInput::Weight("final_norm"),
-                MixedInput::Weight("lm_head"),
-            ],
-        )?;
-        let next = outs[0].as_i32();
-        for (i, id) in ids.iter().enumerate() {
-            let st = self.reqs.get_mut(id).unwrap();
-            st.last_token = next[i];
-            let items = std::mem::take(&mut ws_items[i]);
-            if self.record_selections {
-                self.selection_log.push(items.clone());
-            }
-            let st = self.reqs.get_mut(id).unwrap();
-            st.ws.record_step(items);
-            out.tokens.push((*id, Some(next[i])));
-        }
+        // ---- sparse attention + FFN ----
+        let x_prev = std::mem::take(&mut g.x);
+        let xt = HostTensor::f32(vec![b_pad, d], x_prev);
+        let q_t = HostTensor::f32(vec![b_pad, hq, dh], q.to_vec());
+        let gk_t = HostTensor::f32(vec![b_pad, hkv, s_len, dh], gk);
+        let gv_t = HostTensor::f32(vec![b_pad, hkv, s_len, dh], gv);
+        let gm_t = HostTensor::f32(vec![b_pad, hkv, s_len], gm);
+        let inputs = [
+            MixedInput::Tensor(&xt),
+            MixedInput::Tensor(&q_t),
+            MixedInput::Tensor(&gk_t),
+            MixedInput::Tensor(&gv_t),
+            MixedInput::Tensor(&gm_t),
+            MixedInput::Weight(be.wname(layer, 4)), // wo
+            MixedInput::Weight(be.wname(layer, 5)), // ffn_norm
+            MixedInput::Weight(be.wname(layer, 6)), // w_gate
+            MixedInput::Weight(be.wname(layer, 7)), // w_up
+            MixedInput::Weight(be.wname(layer, 8)), // w_down
+        ];
+        let outs = be
+            .rt
+            .execute_mixed(&format!("decode_attend_{b_pad}_{k_bucket}"), &inputs)?;
+        g.x = outs[0].as_f32().to_vec();
         Ok(())
+    }
+
+    /// Commit-time finalization: decode lm_head + token emission +
+    /// working-set recording, then the iteration's transfer accounting.
+    fn finalize(&mut self) -> Result<BatchOutcome> {
+        let mut out = BatchOutcome::default();
+        if let Some(dec) = self.dec.take() {
+            for mut g in dec.groups {
+                let next = {
+                    let be = &*self.be;
+                    let d = be.spec().d_model;
+                    let xt = HostTensor::f32(vec![g.b_pad, d], std::mem::take(&mut g.x));
+                    let outs = be.rt.execute_mixed(
+                        &format!("lm_head_{}", g.b_pad),
+                        &[
+                            MixedInput::Tensor(&xt),
+                            MixedInput::Weight("final_norm"),
+                            MixedInput::Weight("lm_head"),
+                        ],
+                    )?;
+                    outs[0].as_i32().to_vec()
+                };
+                for (i, id) in g.ids.iter().enumerate() {
+                    let items = std::mem::take(&mut g.ws_items[i]);
+                    if self.be.record_selections {
+                        self.be.selection_log.push(items.clone());
+                    }
+                    let st = self.be.reqs.get_mut(id).unwrap();
+                    st.last_token = next[i];
+                    st.ws.record_step(items);
+                    self.tokens.push((*id, Some(next[i])));
+                }
+            }
+        }
+        out.tokens = std::mem::take(&mut self.tokens);
+
+        let iter = self.be.kv.end_iteration();
+        out.blocks_loaded = iter.blocks_loaded + iter.prefetch_blocks;
+        out.load_time_s = iter.load.modeled_s + iter.prefetch.modeled_s;
+        out.save_time_s = iter.save.modeled_s;
+        // demand loads are the PCIe time the gathers had to wait on; the
+        // staged (prefetch) stream overlapped compute. The real backend
+        // measures wall time, so the coarse/per-layer distinction is a
+        // simulator concern — both report the demand-modeled stall here.
+        out.stall_time_s = iter.load.modeled_s;
+        out.coarse_stall_time_s = iter.load.modeled_s;
+        out.hidden_time_s = iter.prefetch.modeled_s;
+        out.prefetch_blocks = iter.prefetch_blocks;
+        out.prefetch_hits = iter.prefetch_hits;
+        out.prefetch_wasted = iter.prefetch_wasted;
+        out.prefetch_deferred = iter.prefetch_deferred;
+        out.iter_time_s = self.t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// Restore host-side snapshots and undo the KV transaction.
+    fn undo(&mut self) {
+        for (id, last_token, hidden) in self.snap.drain(..) {
+            if let Some(st) = self.be.reqs.get_mut(&id) {
+                st.last_token = last_token;
+                st.hidden = hidden;
+            }
+        }
+        self.be.kv.rollback_txn();
+    }
+}
+
+impl StepSession for PjrtSession<'_> {
+    /// Stage the batch decodes' predicted working sets — recency-ranked
+    /// `(layer, head, block)` unions — as asynchronous FlashH2D copies,
+    /// FCFS; then the next-batch hints with leftover budget, deferred.
+    fn stage(&mut self, hints: &StageHints) -> usize {
+        debug_assert!(!self.staged, "stage() called twice");
+        self.staged = true;
+        let be = &mut *self.be;
+        if !(be.cfg.prefetch && be.cfg.offload && be.cfg.sparse_attention) {
+            return 0;
+        }
+        let cap = be.cfg.max_prefetch_blocks;
+        // keep one gather's worst-case pins (every head at full budget)
+        // worth of slots free for demand misses — clamped so a small HBM
+        // cache (where that exceeds capacity) can still stage half of it
+        let headroom = (be.spec().n_kv_heads * be.budget_needed())
+            .min(be.kv.cache_capacity_slots() / 2);
+        // over-collect by 2x: already-resident plan entries are skipped
+        // by staging without consuming its budget
+        let plan = be.staging_plan(&self.batch.decodes, cap.saturating_mul(2));
+        let mut staged = be.kv.prefetch_working_set(&plan, cap, headroom, false);
+        let rem = cap.saturating_sub(staged);
+        if rem > 0 && !hints.next_decodes.is_empty() {
+            let plan = be.staging_plan(&hints.next_decodes, rem.saturating_mul(2));
+            staged += be.kv.prefetch_working_set(&plan, rem, headroom, true);
+        }
+        staged
+    }
+
+    fn prefill_segment(&mut self, layer_start: usize, layer_end: usize) -> Result<PhaseEvent> {
+        debug_assert_eq!(layer_end, layer_start + 1, "engine drives one layer per segment");
+        let t0 = Instant::now();
+        let work = self.batch.prefill.as_ref().expect("no prefill planned");
+        let (_, last_layer) =
+            super::backend::prefill_layer_range(work, self.be.spec().n_layers);
+        self.pf_init(layer_start)?;
+        self.pf_layer(layer_start)?;
+        if layer_start + 1 == last_layer {
+            self.pf_finish()?;
+        }
+        let (miss_blocks, bytes_moved) = self.load_delta();
+        Ok(PhaseEvent {
+            layer_start,
+            layer_end,
+            compute_s: t0.elapsed().as_secs_f64(),
+            miss_blocks,
+            bytes_moved,
+        })
+    }
+
+    fn decode_layer(&mut self, layer: usize) -> Result<PhaseEvent> {
+        let t0 = Instant::now();
+        if layer == 0 {
+            self.dec_init()?;
+        }
+        let n_groups = self.dec.as_ref().map(|d| d.groups.len()).unwrap_or(0);
+        for gi in 0..n_groups {
+            self.dec_group_layer(gi, layer)?;
+        }
+        let (miss_blocks, bytes_moved) = self.load_delta();
+        Ok(PhaseEvent {
+            layer_start: layer,
+            layer_end: layer + 1,
+            compute_s: t0.elapsed().as_secs_f64(),
+            miss_blocks,
+            bytes_moved,
+        })
+    }
+
+    fn commit(mut self: Box<Self>) -> Result<BatchOutcome> {
+        match self.finalize() {
+            Ok(out) => {
+                self.be.kv.commit_txn();
+                Ok(out)
+            }
+            Err(e) => {
+                // a failed finalization (lm_head execution error) is
+                // fatal to the step: leave the KV state rolled back
+                self.undo();
+                Err(e)
+            }
+        }
+    }
+
+    fn rollback(mut self: Box<Self>) {
+        self.undo();
     }
 }
 
 impl Backend for PjrtBackend {
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+
+    fn n_layers(&self) -> usize {
+        self.spec().n_layers
     }
 
     fn register(&mut self, req: &Request) -> Result<()> {
@@ -461,6 +726,15 @@ impl Backend for PjrtBackend {
         self.reqs.remove(&req);
     }
 
+    fn abort_iteration(&mut self) {
+        // discard the aborted attempts' transfer stats and retire their
+        // stages — including deferred ones, which the first
+        // end_iteration only promotes — so the next committed step's
+        // outcome starts clean
+        let _ = self.kv.end_iteration();
+        let _ = self.kv.end_iteration();
+    }
+
     fn mem_stats(&self) -> MemStats {
         MemStats {
             hbm_bytes_used: self.kv.hbm_bytes_used(),
@@ -469,37 +743,6 @@ impl Backend for PjrtBackend {
             dram_bytes_used: if self.kv.offload() { self.kv.dram_bytes_used() } else { 0 },
             n_registered: self.reqs.len(),
         }
-    }
-
-    /// Stage each scheduled decode's predicted working set — the
-    /// recency-ranked `(layer, head, block)` union from its tracker — as
-    /// asynchronous FlashH2D copies, FCFS priority. Staged blocks are
-    /// pinned until consumed by this batch's gathers (hit) or retired at
-    /// `end_iteration` (wasted).
-    fn prefetch(&mut self, decodes: &[ReqId]) -> usize {
-        if !(self.cfg.prefetch && self.cfg.offload && self.cfg.sparse_attention) {
-            return 0;
-        }
-        // over-collect by 2x: already-resident plan entries are skipped
-        // by staging without consuming its budget
-        let plan_cap = self.cfg.max_prefetch_blocks.saturating_mul(2);
-        let mut plan = Vec::new();
-        for &id in decodes {
-            if plan.len() >= plan_cap {
-                break;
-            }
-            let Some(r) = self.reqs.get(&id) else { continue };
-            for (layer, head, block) in r.ws.ranked_blocks_capped(plan_cap - plan.len()) {
-                plan.push(crate::memory::BlockKey::new(id, layer, head, block));
-            }
-        }
-        // keep one gather's worst-case pins (every head at full budget)
-        // worth of slots free for demand misses — clamped so a small HBM
-        // cache (where that exceeds capacity) can still stage half of it
-        let headroom = (self.spec().n_kv_heads * self.budget_needed())
-            .min(self.kv.cache_capacity_slots() / 2);
-        self.kv
-            .prefetch_working_set(&plan, self.cfg.max_prefetch_blocks, headroom)
     }
 
     fn decode_ws_bytes(&mut self, req: ReqId) -> usize {
@@ -527,22 +770,16 @@ impl Backend for PjrtBackend {
         }
     }
 
-    fn run_batch(
-        &mut self,
-        batch: &Batch,
-        requests: &HashMap<ReqId, Request>,
-    ) -> Result<BatchOutcome> {
-        let t0 = Instant::now();
-        let mut out = BatchOutcome::default();
-
-        if let Some(work) = &batch.prefill {
-            self.run_prefill(work, requests, &mut out)?;
-        }
-
+    fn begin_step<'s>(
+        &'s mut self,
+        batch: &'s Batch,
+        requests: &'s HashMap<ReqId, Request>,
+    ) -> Result<Box<dyn StepSession + 's>> {
         // Pre-flight: a decode step allocates DRAM blocks only for
-        // requests sitting on a block boundary. Fail typed BEFORE
-        // mutating anyone's KV so an eviction never leaves the surviving
-        // batch-mates with a half-applied step (duplicated KV on re-run).
+        // requests sitting on a block boundary. Fail typed BEFORE any
+        // side effect so an eviction never costs the surviving
+        // batch-mates anything (the retry path handles mid-step failures
+        // the pre-flight cannot see, e.g. mid-gather HbmExhausted).
         let mut needed = 0usize;
         let mut boundary_req = None;
         for &id in &batch.decodes {
@@ -557,30 +794,40 @@ impl Backend for PjrtBackend {
             return Err(MemoryError::DramExhausted { req }.into());
         }
 
-        // split decodes into compiled batch buckets
-        let max_b = self
-            .rt
-            .manifest
-            .bucket("decode_b")
-            .iter()
-            .copied()
-            .max()
-            .unwrap_or(1);
-        for group in batch.decodes.chunks(max_b) {
-            self.decode_group(group, &mut out)?;
+        // Host-side snapshots of every participant (rollback support).
+        // The carried prefill activation is cloned only when the batch
+        // has decodes: in a prefill-only batch the only possible
+        // rollback victim is the prefill request itself, which is then
+        // evicted — its pre-step activation is never needed again, so
+        // the multi-megabyte copy can be skipped on that path.
+        let keep_hidden = !batch.decodes.is_empty();
+        let mut snap = Vec::new();
+        let mut participants: Vec<ReqId> = batch.decodes.clone();
+        if let Some(w) = &batch.prefill {
+            participants.push(w.req());
+        }
+        for id in participants {
+            if let Some(st) = self.reqs.get(&id) {
+                let hidden = if keep_hidden { st.hidden.clone() } else { None };
+                snap.push((id, st.last_token, hidden));
+            }
         }
 
-        let iter = self.kv.end_iteration();
-        out.blocks_loaded = iter.blocks_loaded + iter.prefetch_blocks;
-        out.load_time_s = iter.load.modeled_s + iter.prefetch.modeled_s;
-        out.save_time_s = iter.save.modeled_s;
-        // demand loads are the PCIe time the gather had to wait on; the
-        // staged (prefetch) stream overlapped compute
-        out.stall_time_s = iter.load.modeled_s;
-        out.prefetch_blocks = iter.prefetch_blocks;
-        out.prefetch_hits = iter.prefetch_hits;
-        out.prefetch_wasted = iter.prefetch_wasted;
-        out.iter_time_s = t0.elapsed().as_secs_f64();
-        Ok(out)
+        self.kv.begin_txn();
+        let last_loaded = self.kv.iter_so_far().blocks_loaded;
+        let last_load_bytes = self.kv.iter_so_far().load.bytes;
+        Ok(Box::new(PjrtSession {
+            be: self,
+            batch,
+            requests,
+            t0: Instant::now(),
+            tokens: Vec::new(),
+            snap,
+            pf: None,
+            dec: None,
+            last_loaded,
+            last_load_bytes,
+            staged: false,
+        }))
     }
 }

@@ -8,7 +8,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::ServingConfig;
-use crate::engine::{Backend, PjrtBackend};
+use crate::engine::{drive_step, Backend, PjrtBackend, StageHints};
 use crate::runtime::Runtime;
 use crate::scheduler::{Batch, Phase, PrefillWork, Request};
 
@@ -55,13 +55,14 @@ pub fn generate_real(
             is_last: true,
         }),
     };
-    let out = backend.run_batch(&batch, &requests)?;
+    let hints = StageHints::default();
+    let out = drive_step(&mut backend, &batch, &requests, &hints)?;
     let mut tokens = vec![out.tokens[0].1.unwrap()];
     requests.get_mut(&1).unwrap().phase = Phase::Decode;
 
     for _ in 0..n_steps.saturating_sub(1) {
         let batch = Batch { decodes: vec![1], prefill: None };
-        let out = backend.run_batch(&batch, &requests)?;
+        let out = drive_step(&mut backend, &batch, &requests, &hints)?;
         tokens.push(out.tokens[0].1.unwrap());
     }
     Ok((tokens, std::mem::take(&mut backend.selection_log)))

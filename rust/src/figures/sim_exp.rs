@@ -4,8 +4,8 @@ use std::collections::HashMap;
 
 use crate::baselines::{ablation_ladder, comparison_set};
 use crate::config::serving::TransferKind;
-use crate::config::{HardwareSpec, ModelSpec, PrefillMode, ServingConfig};
-use crate::engine::{Backend, Engine, SimBackend};
+use crate::config::{HardwareSpec, IterModel, ModelSpec, PrefillMode, ServingConfig};
+use crate::engine::{drive_step, Backend, Engine, SimBackend, StageHints};
 use crate::metrics::RunMetrics;
 use crate::scheduler::{Batch, Phase, PrefillWork, Request, Scheduler};
 use crate::sim::CostModel;
@@ -41,13 +41,17 @@ pub fn run_sim(cfg: ServingConfig, model: &ModelSpec, rate: f64, seed: u64) -> R
 // ------------------------------------------------------------------ Fig. 1
 
 /// Fixed-batch decode: throughput + KV blocks loaded per iteration.
+/// (Prefetch off: Fig. 1 isolates the raw demand-load dynamics of
+/// offloaded DSA without the rest of the SparseServe machinery.)
 pub fn fig1_point(batch_size: usize, ctx: usize) -> (f64, f64) {
     let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
     cfg.ws_batch_control = false;
     cfg.r_max = 64;
+    cfg.prefetch = false;
     let spec = ModelSpec::lwm_7b();
     let hw = HardwareSpec::a100_40gb();
     let mut b = SimBackend::new(cfg, spec, hw);
+    let hints = StageHints::default();
     let mut requests = HashMap::new();
     for id in 0..batch_size as u32 {
         let mut r = Request::new(id, ctx, 1024, 0.0);
@@ -58,16 +62,16 @@ pub fn fig1_point(batch_size: usize, ctx: usize) -> (f64, f64) {
             decodes: vec![],
             prefill: Some(PrefillWork::Chunk { req: id, start: 0, len: ctx, is_last: true }),
         };
-        b.run_batch(&batch, &requests).unwrap();
+        drive_step(&mut b, &batch, &requests, &hints).unwrap();
         requests.get_mut(&id).unwrap().phase = Phase::Decode;
     }
     let batch = Batch { decodes: (0..batch_size as u32).collect(), prefill: None };
     for _ in 0..10 {
-        b.run_batch(&batch, &requests).unwrap();
+        drive_step(&mut b, &batch, &requests, &hints).unwrap();
     }
     let (mut time, mut loads, iters) = (0.0, 0usize, 40);
     for _ in 0..iters {
-        let out = b.run_batch(&batch, &requests).unwrap();
+        let out = drive_step(&mut b, &batch, &requests, &hints).unwrap();
         time += out.iter_time_s;
         loads += out.blocks_loaded;
     }
@@ -282,6 +286,43 @@ pub fn prefetch_ablation_metrics(rate: f64, seed: u64) -> (RunMetrics, RunMetric
     let on = run_sim(pair[0].cfg.clone(), &model, rate, seed);
     let off = run_sim(pair[1].cfg.clone(), &model, rate, seed);
     (on, off)
+}
+
+/// Run the iteration-model comparison at one rate: the identical full
+/// system timed with the per-layer event model vs the coarse two-stream
+/// model (equal workload, same seed). Returns `(per_layer, coarse)`
+/// metrics (the `bench` subcommand emits `BENCH_layer_model.json` from
+/// these numbers).
+pub fn layer_model_metrics(rate: f64, seed: u64) -> (RunMetrics, RunMetrics) {
+    let model = ModelSpec::lwm_7b();
+    let mut per = ServingConfig::sparseserve(2048, 2048, model.n_layers);
+    per.iter_model = IterModel::PerLayer;
+    let mut coarse = per.clone();
+    coarse.iter_model = IterModel::Coarse;
+    let p = run_sim(per, &model, rate, seed);
+    let c = run_sim(coarse, &model, rate, seed);
+    (p, c)
+}
+
+/// Iteration-model table: per-layer vs coarse stall/iteration means.
+pub fn fig_layer_model(rates: &[f64]) -> String {
+    let mut rows = Vec::new();
+    for &rate in rates {
+        let (p, c) = layer_model_metrics(rate, 11);
+        rows.push(vec![
+            format!("{rate}"),
+            f(p.iter_time.mean() * 1e3),
+            f(c.iter_time.mean() * 1e3),
+            f(p.stall_time.mean() * 1e3),
+            f(c.stall_time.mean() * 1e3),
+            f(p.hidden_time.mean() * 1e3),
+        ]);
+    }
+    render_table(
+        "Iteration model: mean iteration & stall time (ms), per-layer vs coarse (LWM-7B)",
+        &["rate", "iter_layered", "iter_coarse", "stall_layered", "stall_coarse", "hidden_ms"],
+        &rows,
+    )
 }
 
 /// Prefetch ablation table: iteration/stall time with the prefetcher on

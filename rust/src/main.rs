@@ -73,11 +73,14 @@ USAGE: sparseserve <info|serve|simulate|bench-transfer> [flags]
 
   info      print artifact + model information  [--config tiny-llm]
   bench-transfer            Fig. 4 PCIe bandwidth table
-  bench     working-set prefetch smoke benchmark: simulates the same
-            workload with the prefetcher on and off, prints the
-            iteration/stall table and writes BENCH_prefetch.json
-      --out BENCH_prefetch.json  output path
-      --rates 0.2,0.35           comma-separated request rates
+  bench     simulator smoke benchmarks: (1) the same workload with the
+            prefetcher on and off, (2) the same workload timed with the
+            per-layer iteration event model vs the coarse two-stream
+            model; prints both tables and writes BENCH_prefetch.json +
+            BENCH_layer_model.json
+      --out BENCH_prefetch.json              prefetch output path
+      --out-layer BENCH_layer_model.json     layer-model output path
+      --rates 0.2,0.35                       comma-separated request rates
 
 Systems: vllm | vllm-s | vllm-so | sparseserve | sparseserve-np
          (sparseserve-np = full system with working-set prefetching off)
@@ -268,6 +271,39 @@ fn bench(args: &Args) -> Result<()> {
     doc.insert("points".into(), Value::Arr(points));
     std::fs::write(&out_path, Value::Obj(doc).to_string())?;
     println!("[bench] wrote {out_path}");
+
+    // ---- iteration event model: per-layer overlap vs coarse ----
+    let layer_out_path = args.get_or("out-layer", "BENCH_layer_model.json");
+    println!("== iteration model: per-layer vs coarse two-stream (LWM-7B, seed 11) ==");
+    let mut points = Vec::new();
+    for &rate in &rates {
+        let (per, coarse) = sparseserve::figures::layer_model_metrics(rate, 11);
+        println!(
+            "rate {rate}: iter {:.2}ms (layered) vs {:.2}ms (coarse) | stall {:.2}ms vs {:.2}ms \
+             | hidden {:.2}ms",
+            per.iter_time.mean() * 1e3,
+            coarse.iter_time.mean() * 1e3,
+            per.stall_time.mean() * 1e3,
+            coarse.stall_time.mean() * 1e3,
+            per.hidden_time.mean() * 1e3,
+        );
+        let mut p = BTreeMap::new();
+        p.insert("rate".into(), Value::Num(rate));
+        p.insert("iter_ms_per_layer".into(), Value::Num(per.iter_time.mean() * 1e3));
+        p.insert("iter_ms_coarse".into(), Value::Num(coarse.iter_time.mean() * 1e3));
+        p.insert("stall_ms_per_layer".into(), Value::Num(per.stall_time.mean() * 1e3));
+        p.insert("stall_ms_coarse".into(), Value::Num(coarse.stall_time.mean() * 1e3));
+        p.insert("hidden_ms_per_layer".into(), Value::Num(per.hidden_time.mean() * 1e3));
+        p.insert("throughput_per_layer".into(), Value::Num(per.throughput()));
+        p.insert("throughput_coarse".into(), Value::Num(coarse.throughput()));
+        points.push(Value::Obj(p));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Value::Str("iter_model_comparison".into()));
+    doc.insert("model".into(), Value::Str("lwm-7b".into()));
+    doc.insert("points".into(), Value::Arr(points));
+    std::fs::write(&layer_out_path, Value::Obj(doc).to_string())?;
+    println!("[bench] wrote {layer_out_path}");
     Ok(())
 }
 

@@ -25,6 +25,7 @@ use super::cache::LruCache;
 use super::metadata::Cuboid;
 use super::pool::{BlockPool, SlotId};
 use super::prefetch::{PrefetchEngine, PrefetchStats, SendConst, SendMut};
+use super::staging_policy::{stage_block, StageAdmission, StagingPolicy};
 use super::transfer::{ScatterEntry, TransferEngine, TransferStats};
 use super::{BlockKey, MemoryError};
 
@@ -65,6 +66,24 @@ pub struct IterStats {
     pub prefetch_hits: usize,
     /// Staged blocks this iteration never touched.
     pub prefetch_wasted: usize,
+    /// Blocks staged for the NEXT iteration (cross-iteration hints),
+    /// issued under this iteration's compute.
+    pub prefetch_deferred: usize,
+}
+
+/// Undo log of one step transaction ([`KvManager::begin_txn`]): enough
+/// state to put every batch participant's KV back exactly where it was
+/// if the step has to roll back mid-batch.
+#[derive(Default)]
+struct TxnLog {
+    /// Pre-transaction (len, per-layer lens) of every request mutated so
+    /// far, captured lazily on first touch.
+    touched: HashMap<ReqId, (usize, Vec<usize>)>,
+    /// Residency-cache entries inserted by gathers during the
+    /// transaction (stage inserts are NOT logged — staged blocks are
+    /// pre-existing sealed blocks that survive a rollback and feed the
+    /// retry).
+    cache_inserts: Vec<BlockKey>,
 }
 
 pub struct KvManager {
@@ -80,6 +99,8 @@ pub struct KvManager {
     iter: IterStats,
     pinned: Vec<BlockKey>,
     prefetch: PrefetchEngine,
+    /// Open step transaction, if any (see [`Self::begin_txn`]).
+    txn: Option<TxnLog>,
 }
 
 impl KvManager {
@@ -106,6 +127,7 @@ impl KvManager {
             iter: IterStats::default(),
             pinned: Vec::new(),
             prefetch: PrefetchEngine::new(PREFETCH_COPY_WORKERS),
+            txn: None,
         }
     }
 
@@ -143,6 +165,10 @@ impl KvManager {
         self.prefetch.wait_staged();
         for key in self.prefetch.cancel_request(req) {
             self.cache.unpin(&key);
+        }
+        // a request released mid-transaction has nothing left to undo
+        if let Some(txn) = &mut self.txn {
+            txn.touched.remove(&req);
         }
         if let Some(r) = self.requests.remove(&req) {
             for layer in r.blocks {
@@ -246,6 +272,98 @@ impl KvManager {
         }
     }
 
+    // ------------------------------------------------------- transactions
+
+    /// Begin a step transaction: every KV append and every gather-driven
+    /// residency insert from here on is recorded in an undo log until
+    /// [`Self::commit_txn`] (drop the log) or [`Self::rollback_txn`]
+    /// (undo everything). One transaction per backend step; the engine's
+    /// partial-batch retry relies on rollback leaving every batch-mate's
+    /// KV byte-identical to its pre-step state.
+    pub fn begin_txn(&mut self) {
+        debug_assert!(self.txn.is_none(), "nested KV step transaction");
+        self.txn = Some(TxnLog::default());
+    }
+
+    /// Keep everything the transaction did and close it.
+    pub fn commit_txn(&mut self) {
+        self.txn = None;
+    }
+
+    /// Whether a step transaction is currently open.
+    pub fn txn_open(&self) -> bool {
+        self.txn.is_some()
+    }
+
+    /// Undo the open transaction: truncate every touched request's KV
+    /// back to its pre-transaction per-layer lengths (freeing the DRAM
+    /// blocks the step allocated and the cuboids it sealed) and purge
+    /// residency-cache entries whose backing block the rollback unsealed
+    /// or freed (stale copies must not survive into the retry). Entries
+    /// for blocks that remain sealed stay resident — the retry hits them
+    /// instead of re-paying PCIe. Prefetch stages are untouched: they
+    /// reference pre-existing sealed blocks and keep feeding the retry.
+    pub fn rollback_txn(&mut self) {
+        let Some(log) = self.txn.take() else { return };
+        // in-flight staging copies target disjoint, still-live slots;
+        // land them before any bookkeeping below frees a source slot
+        self.prefetch.wait_staged();
+        // a mid-gather failure path already unwinds its pins, but a
+        // failure between gathers must not leak any either
+        for key in self.pinned.drain(..) {
+            self.cache.unpin(&key);
+        }
+        let bs = self.spec.block_size;
+        let hkv = self.spec.n_kv_heads;
+        for (req, (len, layer_len)) in log.touched {
+            // a request released mid-transaction already freed everything
+            let Some(r) = self.requests.get_mut(&req) else { continue };
+            for layer in 0..layer_len.len() {
+                let keep_blocks = layer_len[layer].div_ceil(bs);
+                let keep_sealed = layer_len[layer] / bs;
+                for h in 0..hkv {
+                    while r.blocks[layer][h].len() > keep_blocks {
+                        let slot = r.blocks[layer][h].pop().expect("len checked");
+                        self.dram.free(slot);
+                    }
+                    r.meta[layer][h].truncate(keep_sealed);
+                }
+                r.layer_len[layer] = layer_len[layer];
+            }
+            r.len = len;
+        }
+        for key in log.cache_inserts {
+            let sealed = self
+                .requests
+                .get(&key.req)
+                .map(|r| r.layer_len[key.layer as usize] / bs)
+                .unwrap_or(0);
+            if (key.block as usize) >= sealed {
+                if let Some(slot) = self.cache.remove(&key) {
+                    self.hbm.free(slot);
+                }
+            }
+        }
+    }
+
+    /// Lazily capture a request's pre-transaction lengths before its
+    /// first mutation of the step.
+    fn txn_touch(&mut self, req: ReqId) {
+        let Some(txn) = &mut self.txn else { return };
+        if txn.touched.contains_key(&req) {
+            return;
+        }
+        if let Some(r) = self.requests.get(&req) {
+            txn.touched.insert(req, (r.len, r.layer_len.clone()));
+        }
+    }
+
+    /// Snapshot of the in-progress iteration's transfer stats (per-layer
+    /// `PhaseEvent` deltas; reset only by [`Self::end_iteration`]).
+    pub fn iter_so_far(&self) -> IterStats {
+        self.iter
+    }
+
     // ------------------------------------------------------------ save path
 
     /// Store one layer's prefill KV. `k`/`v` are `[Hkv, T_pad, Dh]`
@@ -265,6 +383,7 @@ impl KvManager {
         let (bs, dh, hkv) = (self.spec.block_size, self.spec.head_dim, self.spec.n_kv_heads);
         debug_assert_eq!(k.len(), hkv * t_pad * dh);
         debug_assert_eq!(v.len(), hkv * t_pad * dh);
+        self.txn_touch(req);
         let base_len = self.layer_len(req, layer);
 
         // contiguous source tensor (K planes then V planes) + scatter plan
@@ -332,6 +451,7 @@ impl KvManager {
     ) -> Result<(), MemoryError> {
         let (bs, dh, hkv) = (self.spec.block_size, self.spec.head_dim, self.spec.n_kv_heads);
         debug_assert_eq!(k_row.len(), hkv * dh);
+        self.txn_touch(req);
         let pos = self.layer_len(req, layer);
         let blk = pos / bs;
         let off = pos % bs;
@@ -557,6 +677,9 @@ impl KvManager {
                     if let Some((_, freed)) = self.cache.insert(*key, hbm_slot) {
                         self.hbm.free(freed);
                     }
+                    if let Some(txn) = &mut self.txn {
+                        txn.cache_inserts.push(*key);
+                    }
                     self.cache.pin(key);
                     self.pinned.push(*key);
                 }
@@ -629,28 +752,30 @@ impl KvManager {
     /// synchronously; the byte movement runs on the prefetch engine's
     /// copy workers and is awaited before any gather reads it. Returns
     /// blocks staged. Skips blocks that are already resident, not yet
-    /// sealed, or unknown; stops while staging would leave fewer than
-    /// `headroom` free-or-evictable slots for demand misses (so a burst
-    /// of speculative stages can never pin HBM shut and turn an
-    /// unpredicted miss into a spurious `HbmExhausted` eviction).
+    /// sealed, or unknown; admission (skip-resident, headroom,
+    /// pin+mark) is the shared [`StagingPolicy`], so the simulator
+    /// cannot drift from this path. With `defer` the stages are
+    /// cross-iteration hints: issued under the current batch's compute,
+    /// retired only at the end of the *next* iteration.
     pub fn prefetch_working_set(
         &mut self,
         plan: &[BlockKey],
         max_blocks: usize,
         headroom: usize,
+        defer: bool,
     ) -> usize {
         if !self.offload || max_blocks == 0 {
             return 0;
         }
         let bs = self.spec.block_size;
         let slot_floats = self.hbm.slot_floats();
+        let policy = StagingPolicy { max_blocks, headroom };
         let mut staged = 0usize;
         for key in plan {
-            if staged >= max_blocks {
-                break;
-            }
-            if self.cache.contains(key) {
-                continue;
+            match policy.admit(&self.cache, key, staged) {
+                StageAdmission::Stop => break,
+                StageAdmission::SkipResident => continue,
+                StageAdmission::Admit => {}
             }
             let (layer, head, blk) =
                 (key.layer as usize, key.head as usize, key.block as usize);
@@ -664,13 +789,6 @@ impl KvManager {
                 continue;
             }
             let Some(&dram_slot) = r.blocks[layer][head].get(blk) else { continue };
-            let free_after = self
-                .cache
-                .capacity()
-                .saturating_sub(self.cache.pinned_len() + 1);
-            if !self.cache.can_accept() || free_after < headroom {
-                break; // staging further would squeeze out demand misses
-            }
             let hbm_slot = match self.alloc_hbm_slot(key.req) {
                 Ok(s) => s,
                 Err(_) => break,
@@ -682,15 +800,23 @@ impl KvManager {
             self.prefetch.submit_copy(move || unsafe {
                 std::ptr::copy_nonoverlapping(src.0, dst.0, slot_floats);
             });
-            if let Some((_, freed)) = self.cache.insert(*key, hbm_slot) {
+            if let Some((_, freed)) = stage_block(
+                &mut self.cache,
+                &mut self.prefetch,
+                *key,
+                hbm_slot,
+                slot_floats * 4,
+                defer,
+            ) {
                 self.hbm.free(freed);
             }
-            self.cache.pin(key);
-            self.prefetch.mark_staged(*key, slot_floats * 4);
             staged += 1;
         }
         if staged > 0 {
             self.iter.prefetch_blocks += staged;
+            if defer {
+                self.iter.prefetch_deferred += staged;
+            }
             self.iter.prefetch.merge(&TransferStats {
                 blocks: staged,
                 bytes: staged * slot_floats * 4,
@@ -1001,10 +1127,10 @@ mod tests {
             BlockKey::new(1, 0, 0, 2),
             BlockKey::new(1, 0, 1, 2),
         ];
-        let staged = m.prefetch_working_set(&plan, 64, 0);
+        let staged = m.prefetch_working_set(&plan, 64, 0, false);
         assert_eq!(staged, 4);
         // open block / unknown blocks are skipped, residents not re-staged
-        assert_eq!(m.prefetch_working_set(&plan, 64, 0), 0);
+        assert_eq!(m.prefetch_working_set(&plan, 64, 0, false), 0);
         // gather the staged selection: all hits, zero demand loads,
         // bytes identical to the DRAM source
         let budget = 4;
@@ -1038,7 +1164,7 @@ mod tests {
             m.append_prefill_layer(1, layer, &k, &v, 8, 8).unwrap();
         }
         let plan = [BlockKey::new(1, 0, 0, 0), BlockKey::new(1, 0, 1, 1)];
-        assert_eq!(m.prefetch_working_set(&plan, 64, 0), 2);
+        assert_eq!(m.prefetch_working_set(&plan, 64, 0, false), 2);
         let iter = m.end_iteration(); // nothing gathered
         assert_eq!(iter.prefetch_wasted, 2);
         assert_eq!(iter.prefetch_hits, 0);
@@ -1057,7 +1183,7 @@ mod tests {
             m.append_prefill_layer(1, layer, &k, &v, 8, 8).unwrap();
         }
         let plan = [BlockKey::new(1, 0, 0, 0), BlockKey::new(1, 1, 0, 0)];
-        assert_eq!(m.prefetch_working_set(&plan, 64, 0), 2);
+        assert_eq!(m.prefetch_working_set(&plan, 64, 0, false), 2);
         // release mid-flight: stage pins must not outlive the request
         m.release(1);
         assert_eq!(m.prefetch_stats().cancelled, 2);
@@ -1079,7 +1205,7 @@ mod tests {
         let plan: Vec<BlockKey> = (0..3u32)
             .flat_map(|b| (0..2u16).map(move |h| BlockKey::new(1, 0, h, b)))
             .collect();
-        let staged = m.prefetch_working_set(&plan, 64, 0);
+        let staged = m.prefetch_working_set(&plan, 64, 0, false);
         assert_eq!(staged, 2, "staging capped by HBM capacity");
         // per-iteration cap is honored too
         let mut m2 = mk_manager(true, 64);
@@ -1087,7 +1213,7 @@ mod tests {
         for layer in 0..2 {
             m2.append_prefill_layer(1, layer, &k, &v, 12, 12).unwrap();
         }
-        assert_eq!(m2.prefetch_working_set(&plan, 3, 0), 3);
+        assert_eq!(m2.prefetch_working_set(&plan, 3, 0, false), 3);
         // headroom reserves demand-miss room: 2-slot cache, headroom 1
         // -> only 1 slot may be pinned by stages
         let mut m3 = mk_manager(true, 2);
@@ -1095,7 +1221,7 @@ mod tests {
         for layer in 0..2 {
             m3.append_prefill_layer(1, layer, &k, &v, 12, 12).unwrap();
         }
-        assert_eq!(m3.prefetch_working_set(&plan, 64, 1), 1);
+        assert_eq!(m3.prefetch_working_set(&plan, 64, 1, false), 1);
         m.end_iteration();
         m2.end_iteration();
         m3.end_iteration();
@@ -1117,6 +1243,177 @@ mod tests {
         }
         assert_eq!(m.decode_slots_needed(1), 0, "mid-block needs no slots");
         assert_eq!(m.dram_free_slots(), 1024 - 8);
+    }
+
+    #[test]
+    fn txn_rollback_restores_kv_and_mem_stats() {
+        let mut m = mk_manager(true, 64);
+        m.register(1);
+        let (k, v) = prefill_kv(2, 8, 4); // 2 sealed blocks/head/layer
+        for layer in 0..2 {
+            m.append_prefill_layer(1, layer, &k, &v, 8, 8).unwrap();
+        }
+        let dram_before = m.dram_bytes_used();
+        let hbm_before = m.hbm_bytes_used();
+        let len_before = m.seq_len(1);
+
+        m.begin_txn();
+        assert!(m.txn_open());
+        // a decode step: appends on both layers (opens a new block per head)
+        for layer in 0..2 {
+            m.append_decode_token(1, layer, &[9.0; 8], &[9.0; 8]).unwrap();
+        }
+        assert_eq!(m.seq_len(1), len_before + 1);
+        assert!(m.dram_bytes_used() > dram_before, "step must allocate");
+        m.rollback_txn();
+
+        assert_eq!(m.seq_len(1), len_before, "length must roll back");
+        assert_eq!(m.dram_bytes_used(), dram_before, "DRAM must roll back");
+        assert_eq!(m.hbm_bytes_used(), hbm_before, "no gather ran: HBM unchanged");
+        assert_eq!(m.layer_len(1, 0), 8);
+        assert_eq!(m.n_sealed(1, 0), 2);
+        assert_eq!(m.open_fill(1, 0), 0);
+        // the manager is fully usable afterwards: same step re-runs clean
+        m.begin_txn();
+        for layer in 0..2 {
+            m.append_decode_token(1, layer, &[9.0; 8], &[9.0; 8]).unwrap();
+        }
+        m.commit_txn();
+        assert_eq!(m.seq_len(1), len_before + 1);
+    }
+
+    #[test]
+    fn txn_rollback_purges_unsealed_cache_entries_keeps_valid_ones() {
+        let mut m = mk_manager(true, 64);
+        m.register(1);
+        let (k, v) = prefill_kv(2, 7, 4); // 1 sealed block + 3 open tokens
+        for layer in 0..2 {
+            m.append_prefill_layer(1, layer, &k, &v, 7, 7).unwrap();
+        }
+        let budget = 3;
+        let s = budget * 4;
+        let mut ko = vec![0.0; 2 * s * 4];
+        let mut vo = vec![0.0; 2 * s * 4];
+        let mut mo = vec![0.0; 2 * s];
+
+        m.begin_txn();
+        // seal block 1 (tokens 4..8) on both layers...
+        for layer in 0..2 {
+            m.append_decode_token(1, layer, &[5.0; 8], &[5.0; 8]).unwrap();
+        }
+        assert_eq!(m.n_sealed(1, 0), 2);
+        // ...and gather both block 0 (pre-txn, stays valid) and block 1
+        // (sealed inside the txn: must be purged on rollback)
+        let sel = vec![vec![0u32, 1u32], vec![0u32, 1u32]];
+        m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo).unwrap();
+        m.rollback_txn();
+
+        assert_eq!(m.n_sealed(1, 0), 1, "block 1 unsealed by rollback");
+        assert_eq!(m.open_fill(1, 0), 3);
+        // block 0 stays resident (the retry hits it for free); block 1's
+        // stale copy must be gone
+        let resident0 = BlockKey::new(1, 0, 0, 0);
+        let stale1 = BlockKey::new(1, 0, 0, 1);
+        assert!(m.cache.contains(&resident0), "valid entry survives rollback");
+        assert!(!m.cache.contains(&stale1), "unsealed entry must be purged");
+        // retry of the surviving selection: block 0 is a hit, no load
+        let sel0 = vec![vec![0u32], vec![0u32]];
+        m.gather_into(1, 0, &sel0, budget, &mut ko, &mut vo, &mut mo).unwrap();
+        let iter = m.end_iteration();
+        // first gather loaded 4 (2 heads x blocks 0,1); retry loaded 0
+        assert_eq!(iter.blocks_loaded, 4, "retry must hit the kept residency");
+    }
+
+    #[test]
+    fn txn_commit_keeps_appends() {
+        let mut m = mk_manager(true, 16);
+        m.register(1);
+        m.begin_txn();
+        let (k, v) = prefill_kv(2, 4, 4);
+        m.append_prefill_layer(1, 0, &k, &v, 4, 4).unwrap();
+        m.commit_txn();
+        assert!(!m.txn_open());
+        assert_eq!(m.layer_len(1, 0), 4);
+        // rollback with no open txn is a no-op
+        m.rollback_txn();
+        assert_eq!(m.layer_len(1, 0), 4);
+    }
+
+    /// Satellite: the PJRT prefetch path under multi-request decode load
+    /// — three concurrent decodes staging through `prefetch_working_set`
+    /// with FCFS plan priority, then gathering with hits.
+    #[test]
+    fn prefetch_three_concurrent_decodes_fcfs_priority_and_hits() {
+        let mut m = mk_manager(true, 64);
+        let (k, v) = prefill_kv(2, 12, 4); // 3 sealed blocks/head/layer
+        for req in 1..=3u32 {
+            m.register(req);
+            for layer in 0..2 {
+                m.append_prefill_layer(req, layer, &k, &v, 12, 12).unwrap();
+            }
+        }
+        // FCFS plan: request 1's working set first, then 2, then 3
+        let mut plan = Vec::new();
+        for req in 1..=3u32 {
+            for b in 0..3u32 {
+                plan.push(BlockKey::new(req, 0, 0, b));
+                plan.push(BlockKey::new(req, 0, 1, b));
+            }
+        }
+        // budget covers only the first two requests' plans (12 blocks):
+        // the earliest requests get the staging budget
+        let staged = m.prefetch_working_set(&plan, 12, 0, false);
+        assert_eq!(staged, 12);
+        for b in 0..3u32 {
+            assert!(m.cache.contains(&BlockKey::new(1, 0, 0, b)), "req 1 staged");
+            assert!(m.cache.contains(&BlockKey::new(2, 0, 0, b)), "req 2 staged");
+            assert!(!m.cache.contains(&BlockKey::new(3, 0, 0, b)), "req 3 beyond cap");
+        }
+        // all three decode: 1 and 2 all-hit, 3 pays demand loads
+        let budget = 4;
+        let s = budget * 4;
+        let mut ko = vec![0.0; 2 * s * 4];
+        let mut vo = vec![0.0; 2 * s * 4];
+        let mut mo = vec![0.0; 2 * s];
+        let sel = vec![vec![0u32, 1, 2], vec![0u32, 1, 2]];
+        for req in 1..=3u32 {
+            m.gather_into(req, 0, &sel, budget, &mut ko, &mut vo, &mut mo).unwrap();
+        }
+        let iter = m.end_iteration();
+        assert_eq!(iter.prefetch_hits, 12, "both staged requests must hit");
+        assert_eq!(iter.blocks_loaded, 6, "request 3 pays its own misses");
+        // releases under load leave nothing behind
+        for req in 1..=3u32 {
+            m.release(req);
+        }
+        assert_eq!(m.dram_bytes_used(), 0);
+        assert_eq!(m.hbm_bytes_used(), 0);
+    }
+
+    #[test]
+    fn deferred_prefetch_survives_into_next_iteration() {
+        let mut m = mk_manager(true, 64);
+        m.register(1);
+        let (k, v) = prefill_kv(2, 8, 4);
+        for layer in 0..2 {
+            m.append_prefill_layer(1, layer, &k, &v, 8, 8).unwrap();
+        }
+        let plan = [BlockKey::new(1, 0, 0, 0), BlockKey::new(1, 0, 1, 0)];
+        assert_eq!(m.prefetch_working_set(&plan, 64, 0, true), 2);
+        let iter = m.end_iteration(); // the CURRENT iteration ends...
+        assert_eq!(iter.prefetch_deferred, 2);
+        assert_eq!(iter.prefetch_wasted, 0, "deferred stages are not wasted yet");
+        // ...and the next iteration's gather consumes them as hits
+        let budget = 3;
+        let s = budget * 4;
+        let mut ko = vec![0.0; 2 * s * 4];
+        let mut vo = vec![0.0; 2 * s * 4];
+        let mut mo = vec![0.0; 2 * s];
+        let sel = vec![vec![0u32], vec![0u32]];
+        m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo).unwrap();
+        let iter = m.end_iteration();
+        assert_eq!(iter.blocks_loaded, 0);
+        assert_eq!(iter.prefetch_hits, 2, "cross-iteration stage must hit");
     }
 
     #[test]

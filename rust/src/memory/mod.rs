@@ -15,6 +15,7 @@ pub mod manager;
 pub mod metadata;
 pub mod pool;
 pub mod prefetch;
+pub mod staging_policy;
 pub mod transfer;
 
 pub use cache::LruCache;
@@ -22,6 +23,7 @@ pub use manager::{KvManager, ReqId};
 pub use metadata::Cuboid;
 pub use pool::{BlockPool, SlotId};
 pub use prefetch::{PrefetchEngine, PrefetchStats};
+pub use staging_policy::{StageAdmission, StagingPolicy};
 pub use transfer::{engine_for, TransferEngine, TransferStats};
 
 /// Typed memory-tier exhaustion. Replaces the old `expect("DRAM

@@ -9,8 +9,11 @@
 //! without touching them (a **wasted** prefetch — the block stays
 //! resident but unpinned). This is what converts selection-time cache
 //! misses into hits and lets HBM↔DRAM traffic overlap compute instead
-//! of stalling it (the copy stream of the two-stream iteration model in
-//! `sim::cost::two_stream_iter`).
+//! of stalling it (the copy stream of the iteration event models in
+//! `sim::cost` — `layered_iter` / `two_stream_iter`). Cross-iteration
+//! staging hints are marked *deferred*: issued under the current batch's
+//! compute for the NEXT iteration's gathers, retired one iteration
+//! later.
 //!
 //! The engine itself is cache-agnostic bookkeeping plus an optional
 //! [`ThreadPool`] for the real backend's asynchronous FlashH2D copies:
@@ -38,6 +41,10 @@ pub struct PrefetchStats {
     pub wasted: u64,
     /// Staged blocks dropped because their request was released first.
     pub cancelled: u64,
+    /// Blocks staged for the *next* iteration (cross-iteration staging
+    /// hints): issued under the current batch's compute, retired only at
+    /// the end of the iteration they were staged for.
+    pub deferred: u64,
 }
 
 impl PrefetchStats {
@@ -66,6 +73,11 @@ pub struct PrefetchEngine {
     pool: Option<ThreadPool>,
     /// Blocks staged (and pinned by the owner) but not yet consumed.
     staged: HashSet<BlockKey>,
+    /// Blocks staged for the NEXT iteration (cross-iteration hints):
+    /// promoted into `staged` at `end_iteration` instead of being retired
+    /// as wasted, so a hint issued under batch N's compute can earn its
+    /// hit in batch N+1.
+    staged_next: HashSet<BlockKey>,
     pub stats: PrefetchStats,
 }
 
@@ -75,26 +87,40 @@ impl PrefetchEngine {
         Self {
             pool: (copy_workers > 0).then(|| ThreadPool::new(copy_workers)),
             staged: HashSet::new(),
+            staged_next: HashSet::new(),
             stats: PrefetchStats::default(),
         }
     }
 
     pub fn n_staged(&self) -> usize {
-        self.staged.len()
+        self.staged.len() + self.staged_next.len()
     }
 
     pub fn is_staged(&self, key: &BlockKey) -> bool {
-        self.staged.contains(key)
+        self.staged.contains(key) || self.staged_next.contains(key)
     }
 
     /// Record a block as staged. Returns false (and counts nothing) if it
     /// was already staged.
     pub fn mark_staged(&mut self, key: BlockKey, bytes: usize) -> bool {
-        if !self.staged.insert(key) {
+        if self.staged_next.contains(&key) || !self.staged.insert(key) {
             return false;
         }
         self.stats.issued_blocks += 1;
         self.stats.issued_bytes += bytes as u64;
+        true
+    }
+
+    /// Record a block as staged for the *next* iteration (cross-iteration
+    /// staging hint). It survives one `end_iteration` (promoted, not
+    /// wasted) and is retired at the end of the iteration after that.
+    pub fn mark_staged_deferred(&mut self, key: BlockKey, bytes: usize) -> bool {
+        if self.staged.contains(&key) || !self.staged_next.insert(key) {
+            return false;
+        }
+        self.stats.issued_blocks += 1;
+        self.stats.issued_bytes += bytes as u64;
+        self.stats.deferred += 1;
         true
     }
 
@@ -114,11 +140,12 @@ impl PrefetchEngine {
         }
     }
 
-    /// A gather touched `key`: if it was staged, count the hit and stop
-    /// tracking it (the owner drops the stage pin). Returns whether the
-    /// access consumed a staged block.
+    /// A gather touched `key`: if it was staged (for this iteration or
+    /// deferred for the next), count the hit and stop tracking it (the
+    /// owner drops the stage pin). Returns whether the access consumed a
+    /// staged block.
     pub fn note_access(&mut self, key: &BlockKey) -> bool {
-        if self.staged.remove(key) {
+        if self.staged.remove(key) || self.staged_next.remove(key) {
             self.stats.hits += 1;
             true
         } else {
@@ -126,22 +153,27 @@ impl PrefetchEngine {
         }
     }
 
-    /// End the iteration: every still-staged block was mispredicted.
-    /// Returns the keys so the owner can drop their stage pins (they stay
-    /// resident as ordinary LRU entries).
+    /// End the iteration: every still-staged block of THIS iteration was
+    /// mispredicted; deferred (next-iteration) stages are promoted and
+    /// get one more iteration to earn their hit. Returns the wasted keys
+    /// so the owner can drop their stage pins (they stay resident as
+    /// ordinary LRU entries).
     pub fn end_iteration(&mut self) -> Vec<BlockKey> {
         let wasted: Vec<BlockKey> = self.staged.drain().collect();
         self.stats.wasted += wasted.len() as u64;
+        self.staged = std::mem::take(&mut self.staged_next);
         wasted
     }
 
     /// Drop every staged block of a released/cancelled request. Returns
     /// the keys so the owner can release their stage pins.
     pub fn cancel_request(&mut self, req: u32) -> Vec<BlockKey> {
-        let dropped: Vec<BlockKey> =
+        let mut dropped: Vec<BlockKey> =
             self.staged.iter().filter(|k| k.req == req).copied().collect();
+        dropped.extend(self.staged_next.iter().filter(|k| k.req == req).copied());
         for k in &dropped {
             self.staged.remove(k);
+            self.staged_next.remove(k);
         }
         self.stats.cancelled += dropped.len() as u64;
         dropped
@@ -183,6 +215,47 @@ mod tests {
         assert_eq!(wasted, vec![key(1, 1)]);
         assert_eq!(e.stats.wasted, 1);
         assert_eq!(e.n_staged(), 0);
+    }
+
+    #[test]
+    fn deferred_stages_survive_one_iteration_then_waste() {
+        let mut e = PrefetchEngine::new(0);
+        assert!(e.mark_staged_deferred(key(1, 0), 10));
+        assert!(!e.mark_staged_deferred(key(1, 0), 10), "double-defer is a no-op");
+        assert!(!e.mark_staged(key(1, 0), 10), "already deferred");
+        assert_eq!(e.stats.deferred, 1);
+        // first end: promoted, NOT wasted
+        assert!(e.end_iteration().is_empty());
+        assert_eq!(e.stats.wasted, 0);
+        assert!(e.is_staged(&key(1, 0)));
+        // second end without a touch: now it is a misprediction
+        assert_eq!(e.end_iteration(), vec![key(1, 0)]);
+        assert_eq!(e.stats.wasted, 1);
+    }
+
+    #[test]
+    fn deferred_stage_hit_next_iteration() {
+        let mut e = PrefetchEngine::new(0);
+        e.mark_staged_deferred(key(1, 0), 10);
+        // hit before promotion also counts (the current batch used it)
+        e.mark_staged_deferred(key(1, 1), 10);
+        assert!(e.note_access(&key(1, 1)));
+        e.end_iteration();
+        assert!(e.note_access(&key(1, 0)), "promoted stage must hit");
+        assert_eq!(e.stats.hits, 2);
+        assert!(e.end_iteration().is_empty());
+    }
+
+    #[test]
+    fn cancel_drops_deferred_stages_too() {
+        let mut e = PrefetchEngine::new(0);
+        e.mark_staged(key(1, 0), 10);
+        e.mark_staged_deferred(key(1, 1), 10);
+        e.mark_staged_deferred(key(2, 0), 10);
+        let dropped = e.cancel_request(1);
+        assert_eq!(dropped.len(), 2);
+        assert_eq!(e.stats.cancelled, 2);
+        assert_eq!(e.n_staged(), 1);
     }
 
     #[test]

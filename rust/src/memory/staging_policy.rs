@@ -1,0 +1,128 @@
+//! The shared staging-admission policy.
+//!
+//! Both staging paths — `KvManager::prefetch_working_set` (real backend,
+//! per-head blocks, async FlashH2D copies) and the simulator's
+//! group-granular staging — used to duplicate the same three rules and
+//! had already started to drift. The policy now lives here, once:
+//!
+//! 1. **skip-resident**: a block already in the HBM cache costs nothing
+//!    to "stage" — skip it without consuming the staging budget;
+//! 2. **headroom**: stop as soon as staging one more block would leave
+//!    fewer than `headroom` free-or-evictable slots, so a burst of
+//!    speculative stages can never pin HBM shut and turn an unpredicted
+//!    demand miss into a spurious `HbmExhausted` eviction;
+//! 3. **pin + mark**: a staged block is inserted, pinned until consumed
+//!    (hit) or retired (wasted), and registered with the
+//!    [`PrefetchEngine`] — for this iteration or, for cross-iteration
+//!    hints, deferred to the next one.
+
+use super::cache::LruCache;
+use super::prefetch::PrefetchEngine;
+use super::BlockKey;
+
+/// Per-call staging limits (rule 2 plus the per-iteration cap).
+#[derive(Debug, Clone, Copy)]
+pub struct StagingPolicy {
+    /// Cap on blocks staged by this staging pass.
+    pub max_blocks: usize,
+    /// Free-or-evictable slots that must remain for demand misses.
+    pub headroom: usize,
+}
+
+/// What the policy decided for one candidate block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageAdmission {
+    /// Stage it (insert + pin + mark).
+    Admit,
+    /// Already resident: skip for free, keep going.
+    SkipResident,
+    /// Budget or headroom exhausted: stop staging entirely.
+    Stop,
+}
+
+impl StagingPolicy {
+    /// Decide one candidate given `staged` blocks already admitted by
+    /// this pass.
+    pub fn admit<V>(&self, cache: &LruCache<V>, key: &BlockKey, staged: usize) -> StageAdmission {
+        if staged >= self.max_blocks {
+            return StageAdmission::Stop;
+        }
+        if cache.contains(key) {
+            return StageAdmission::SkipResident;
+        }
+        let free_after = cache.capacity().saturating_sub(cache.pinned_len() + 1);
+        if !cache.can_accept() || free_after < self.headroom {
+            return StageAdmission::Stop; // would squeeze out demand misses
+        }
+        StageAdmission::Admit
+    }
+}
+
+/// Rule 3, shared verbatim by both backends: insert the entry, pin it
+/// until consumed/retired, and register it with the prefetch engine
+/// (`defer` = cross-iteration hint, retired one iteration later).
+/// Returns the entry the insert evicted, if any (the caller frees its
+/// HBM slot; the simulator's `()` values need nothing).
+pub fn stage_block<V>(
+    cache: &mut LruCache<V>,
+    prefetcher: &mut PrefetchEngine,
+    key: BlockKey,
+    value: V,
+    bytes: usize,
+    defer: bool,
+) -> Option<(BlockKey, V)> {
+    let evicted = cache.insert(key, value);
+    cache.pin(&key);
+    if defer {
+        prefetcher.mark_staged_deferred(key, bytes);
+    } else {
+        prefetcher.mark_staged(key, bytes);
+    }
+    evicted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(b: u32) -> BlockKey {
+        BlockKey::new(1, 0, 0, b)
+    }
+
+    #[test]
+    fn admission_rules_in_order() {
+        let mut cache: LruCache<u32> = LruCache::new(4);
+        let policy = StagingPolicy { max_blocks: 2, headroom: 1 };
+        assert_eq!(policy.admit(&cache, &key(0), 0), StageAdmission::Admit);
+        cache.insert(key(0), 0);
+        // resident blocks are free skips
+        assert_eq!(policy.admit(&cache, &key(0), 1), StageAdmission::SkipResident);
+        // budget cap stops the pass
+        assert_eq!(policy.admit(&cache, &key(1), 2), StageAdmission::Stop);
+        // headroom: 4 slots, 3 pinned -> staging one more leaves 0 free
+        for b in 1..4u32 {
+            cache.insert(key(b), b);
+        }
+        for b in 0..3u32 {
+            cache.pin(&key(b));
+        }
+        assert_eq!(policy.admit(&cache, &key(9), 0), StageAdmission::Stop);
+        cache.unpin(&key(0));
+        cache.unpin(&key(1));
+        assert_eq!(policy.admit(&cache, &key(9), 0), StageAdmission::Admit);
+    }
+
+    #[test]
+    fn stage_block_pins_and_marks() {
+        let mut cache: LruCache<u32> = LruCache::new(2);
+        let mut pf = PrefetchEngine::new(0);
+        assert!(stage_block(&mut cache, &mut pf, key(0), 7, 100, false).is_none());
+        assert_eq!(cache.pinned_len(), 1);
+        assert!(pf.is_staged(&key(0)));
+        assert_eq!(pf.stats.issued_blocks, 1);
+        // deferred marking goes through the same path
+        stage_block(&mut cache, &mut pf, key(1), 8, 100, true);
+        assert_eq!(pf.stats.deferred, 1);
+        assert_eq!(cache.pinned_len(), 2);
+    }
+}

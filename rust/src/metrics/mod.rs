@@ -31,14 +31,24 @@ pub struct RunMetrics {
     pub iter_time: Series,
     /// Modeled PCIe busy time per iteration (demand + prefetch streams).
     pub load_time: Series,
-    /// Per-iteration stall: PCIe time compute could not hide.
+    /// Per-iteration stall: PCIe time compute could not hide (under the
+    /// configured iteration event model).
     pub stall_time: Series,
+    /// Per-iteration copy time hidden under compute (overlap earned by
+    /// the per-layer event model and the prefetcher).
+    pub hidden_time: Series,
+    /// Per-iteration stall the coarse two-stream model would have
+    /// charged for the same traffic (`bench` compares the two models).
+    pub coarse_stall_time: Series,
     /// Blocks staged ahead of need by the working-set prefetcher.
     pub prefetch_blocks: u64,
     /// Staged blocks consumed by a gather (earned overlap).
     pub prefetch_hits: u64,
     /// Staged blocks their iteration never touched.
     pub prefetch_wasted: u64,
+    /// Blocks staged for the following iteration (cross-iteration
+    /// staging hints issued under the current batch's compute).
+    pub prefetch_deferred: u64,
     pub iterations: usize,
 }
 
@@ -87,11 +97,14 @@ impl RunMetrics {
         self.prefetch_blocks += out.prefetch_blocks as u64;
         self.prefetch_hits += out.prefetch_hits as u64;
         self.prefetch_wasted += out.prefetch_wasted as u64;
+        self.prefetch_deferred += out.prefetch_deferred as u64;
         if self.iter_time.len() < Self::MAX_SAMPLES {
             self.iter_time.push(out.iter_time_s);
             self.blocks_loaded_per_iter.push(out.blocks_loaded as f64);
             self.load_time.push(out.load_time_s);
             self.stall_time.push(out.stall_time_s);
+            self.hidden_time.push(out.hidden_time_s);
+            self.coarse_stall_time.push(out.coarse_stall_time_s);
         }
     }
 
@@ -135,10 +148,20 @@ impl RunMetrics {
         }
         let prefetch = if self.prefetch_blocks > 0 {
             format!(
-                " | prefetch staged={} hit={:.0}% wasted={}",
+                " | prefetch staged={} hit={:.0}% wasted={} deferred={}",
                 self.prefetch_blocks,
                 100.0 * self.prefetch_hit_rate(),
                 self.prefetch_wasted,
+                self.prefetch_deferred,
+            )
+        } else {
+            String::new()
+        };
+        let overlap = if self.hidden_time.mean() > 0.0 {
+            format!(
+                " | overlap hidden mean={:.4}s (coarse stall {:.4}s)",
+                self.hidden_time.mean(),
+                self.coarse_stall_time.mean(),
             )
         } else {
             String::new()
@@ -160,7 +183,7 @@ impl RunMetrics {
             self.blocks_loaded_per_iter.mean(),
             self.stall_time.mean(),
             prefetch,
-        )
+        ) + &overlap
     }
 }
 
@@ -193,17 +216,24 @@ mod tests {
             blocks_loaded: 10,
             load_time_s: 0.05,
             stall_time_s: 0.02,
+            hidden_time_s: 0.03,
+            coarse_stall_time_s: 0.05,
             prefetch_blocks: 8,
             prefetch_hits: 6,
             prefetch_wasted: 2,
+            prefetch_deferred: 3,
             ..Default::default()
         };
         m.record_iteration(&out);
         assert_eq!(m.iterations, 1);
         assert_eq!(m.prefetch_blocks, 8);
+        assert_eq!(m.prefetch_deferred, 3);
         assert!((m.prefetch_hit_rate() - 0.75).abs() < 1e-12);
         assert!((m.stall_time.mean() - 0.02).abs() < 1e-12);
+        assert!((m.hidden_time.mean() - 0.03).abs() < 1e-12);
+        assert!((m.coarse_stall_time.mean() - 0.05).abs() < 1e-12);
         assert!(m.summary().contains("prefetch staged=8"));
+        assert!(m.summary().contains("overlap hidden"));
     }
 
     #[test]

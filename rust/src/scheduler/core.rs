@@ -39,6 +39,10 @@ pub struct Scheduler {
     /// Iterations where the starvation guard stopped packing behind a
     /// repeatedly-skipped decode (diagnostics).
     pub ws_starvation_stops: u64,
+    /// EWMA of generated-token counts observed at finish (the
+    /// `admission_estimates` input; see [`Self::expected_new_tokens`]).
+    completion_ewma: f64,
+    completion_obs: u64,
 }
 
 impl Scheduler {
@@ -56,6 +60,8 @@ impl Scheduler {
             iterations: 0,
             ws_rejections: 0,
             ws_starvation_stops: 0,
+            completion_ewma: 0.0,
+            completion_obs: 0,
         }
     }
 
@@ -141,6 +147,31 @@ impl Scheduler {
     pub fn full_kv_bytes(&self, prompt_len: usize, max_new: usize) -> usize {
         let blocks = (prompt_len + max_new).div_ceil(self.spec.block_size);
         blocks * self.spec.n_layers * self.spec.n_kv_heads * self.spec.block_bytes()
+    }
+
+    /// How many new tokens to reserve KV for at admission. Without
+    /// `admission_estimates` this is the conservative full lifetime
+    /// (`max_new`). With it, once enough completions have been observed,
+    /// the reservation shrinks to a safety-margined estimate of the
+    /// request's *actual* completion length — short completions stop
+    /// holding DRAM admission hostage for output they will never
+    /// generate. A request that outlives its estimate grows its
+    /// reservation token by token ([`Self::emit_token`]); true
+    /// oversubscription surfaces as a typed `DramExhausted` the engine
+    /// rolls back and evicts.
+    pub fn expected_new_tokens(&self, r: &Request) -> usize {
+        const MIN_OBS: u64 = 4;
+        const SAFETY: f64 = 1.5;
+        if !self.cfg.admission_estimates || self.completion_obs < MIN_OBS {
+            return r.max_new_tokens;
+        }
+        let est = (self.completion_ewma * SAFETY).ceil() as usize;
+        r.max_new_tokens.min(est.max(1))
+    }
+
+    /// Observed mean completion length (diagnostics / tests).
+    pub fn completion_estimate(&self) -> Option<f64> {
+        (self.completion_obs > 0).then_some(self.completion_ewma)
     }
 
     /// Prefill working set for the configured mode (paper §3.3):
@@ -258,7 +289,7 @@ impl Scheduler {
     pub fn hopeless_head(&self) -> Option<ReqId> {
         let &id = self.queue.front()?;
         let r = &self.requests[&id];
-        let need = self.full_kv_bytes(r.prompt_len, r.max_new_tokens);
+        let need = self.full_kv_bytes(r.prompt_len, self.expected_new_tokens(r));
         (need > self.admission_capacity()).then_some(id)
     }
 
@@ -271,7 +302,7 @@ impl Scheduler {
         let &id = self.queue.front()?;
         let (plen, mnew) = {
             let r = &self.requests[&id];
-            (r.prompt_len, r.max_new_tokens)
+            (r.prompt_len, self.expected_new_tokens(r))
         };
         let need = self.full_kv_bytes(plen, mnew);
         if need > self.admission_capacity().saturating_sub(self.reserved_total) {
@@ -381,15 +412,57 @@ impl Scheduler {
     pub fn emit_token(&mut self, id: ReqId, tok: Option<i32>, now: f64) -> bool {
         let r = self.requests.get_mut(&id).expect("unknown request");
         r.push_token(tok, now);
-        if r.phase == Phase::Finished {
+        let (finished, plen, n_gen) = (r.phase == Phase::Finished, r.prompt_len, r.n_generated);
+        if finished {
             self.active.retain(|&a| a != id);
+            // reclaim-on-finish: the whole reservation (estimate plus any
+            // decode-time growth) frees the instant the request ends —
+            // short completions release their unused headroom here
             if let Some(n) = self.reserved.remove(&id) {
                 self.reserved_total -= n;
             }
+            if self.cfg.admission_estimates {
+                // fold the observed completion length into the estimate
+                const ALPHA: f64 = 0.2;
+                self.completion_ewma = if self.completion_obs == 0 {
+                    n_gen as f64
+                } else {
+                    (1.0 - ALPHA) * self.completion_ewma + ALPHA * n_gen as f64
+                };
+                self.completion_obs += 1;
+            }
             true
         } else {
+            // decode-time DRAM growth tracking: an estimate-admitted
+            // request that outlives its estimate grows its reservation
+            // with its actual KV (plus the next token) instead of
+            // silently exceeding it
+            if self.cfg.admission_estimates {
+                let needed = self.full_kv_bytes(plen, n_gen + 1);
+                let cur = self.reserved.get(&id).copied().unwrap_or(0);
+                if needed > cur {
+                    self.reserved.insert(id, needed);
+                    self.reserved_total += needed - cur;
+                }
+            }
             false
         }
+    }
+
+    /// Cross-iteration staging hints for a planned batch: active decodes
+    /// that did NOT make it into this batch (typically skipped by the
+    /// WS batch control) — the best prediction of what the *next*
+    /// iteration will run. The backend stages their working sets with
+    /// leftover prefetch budget under the current batch's compute, so
+    /// their gathers start warm when they are finally scheduled.
+    pub fn stage_hints(&self, batch: &Batch) -> Vec<ReqId> {
+        self.active
+            .iter()
+            .copied()
+            .filter(|id| {
+                self.requests[id].phase == Phase::Decode && !batch.decodes.contains(id)
+            })
+            .collect()
     }
 
     /// Active decode requests (executor helper).
@@ -801,6 +874,130 @@ mod tests {
         s.submit(Request::new(3, 512, 64, 0.2));
         assert!(s.cancel(3));
         assert!(s.queued_ids().is_empty());
+    }
+
+    #[test]
+    fn stage_hints_name_skipped_decodes() {
+        let mut cfg = ServingConfig::sparseserve(256, 64, 4);
+        cfg.r_max = 16;
+        let hbm = 1 << 20;
+        let mut s = sched(cfg, hbm);
+        for id in 1..=3u32 {
+            s.submit(Request::new(id, 16, 100, 0.0));
+        }
+        for _ in 0..3 {
+            let mut ws = |r| no_ws(r);
+            let b = s.plan(0.0, &mut ws);
+            if let Some(w) = b.prefill {
+                let done = w.is_last();
+                s.advance_prefill(&w);
+                if done {
+                    s.emit_token(w.req(), None, 0.1);
+                }
+            }
+        }
+        let m_avl = s.m_avl();
+        // request 2's WS is too big to pack with 1: it gets skipped and
+        // must appear as the next-iteration staging hint
+        let ws_of = move |r: ReqId| if r == 2 { m_avl } else { m_avl / 4 };
+        let mut ws = ws_of;
+        let b = s.plan(1.0, &mut ws);
+        assert_eq!(b.decodes, vec![1, 3]);
+        assert_eq!(s.stage_hints(&b), vec![2], "the skipped decode is the hint");
+        // everything scheduled -> no hints
+        let mut ws_small = |_r: ReqId| 0usize;
+        let b = s.plan(2.0, &mut ws_small);
+        assert!(s.stage_hints(&b).is_empty());
+    }
+
+    #[test]
+    fn completion_estimates_admit_more_aggressively() {
+        // DRAM fits ~1.2 full-lifetime reservations (prompt 64 + 1000
+        // max_new), but completions actually stop after ~8 tokens.
+        let mut cfg = ServingConfig::vllm_so(256, 2048);
+        cfg.admission_estimates = true;
+        let spec_ = spec();
+        let full = {
+            let s = Scheduler::new(cfg.clone(), spec_.clone(), 0);
+            s.full_kv_bytes(64, 1000)
+        };
+        let mut s = Scheduler::new(cfg, spec_, 1 << 30)
+            .with_dram_capacity(full + full / 5);
+        // warm the estimator: 4 genuinely short completions (max_new 8)
+        for id in 1..=4u32 {
+            s.submit(Request::new(id, 64, 8, 0.0));
+            let mut ws = |r| no_ws(r);
+            let b = s.plan(0.0, &mut ws);
+            assert_eq!(b.prefill.as_ref().map(|w| w.req()), Some(id), "fits alone");
+            s.advance_prefill(&b.prefill.unwrap());
+            for t in 0..8 {
+                s.emit_token(id, None, 0.1 + t as f64 * 0.01);
+            }
+            assert!(s.requests[&id].is_done());
+        }
+        assert!((s.completion_estimate().unwrap() - 8.0).abs() < 1e-9);
+        // now TWO new requests with the same shape fit CONCURRENTLY:
+        // the estimate reserves ~12 tokens each instead of 1000
+        s.submit(Request::new(10, 64, 1000, 1.0));
+        s.submit(Request::new(11, 64, 1000, 1.0));
+        let mut ws = |r| no_ws(r);
+        let b = s.plan(1.0, &mut ws);
+        assert_eq!(b.prefill.as_ref().map(|w| w.req()), Some(10));
+        s.advance_prefill(&b.prefill.unwrap());
+        s.emit_token(10, None, 1.1);
+        let b2 = s.plan(1.2, &mut ws);
+        assert_eq!(
+            b2.prefill.as_ref().map(|w| w.req()),
+            Some(11),
+            "estimate-based reservation must admit the second request too"
+        );
+        assert!(s.reserved_bytes() <= full + full / 5);
+        // decode-time growth: request 10 keeps generating past the
+        // estimate; its reservation must grow with its actual KV
+        let before = s.reserved_bytes();
+        for t in 0..200 {
+            s.emit_token(10, None, 2.0 + t as f64 * 0.01);
+        }
+        assert!(
+            s.reserved_bytes() > before,
+            "long-running request must grow its reservation"
+        );
+    }
+
+    #[test]
+    fn estimates_off_keeps_full_lifetime_reservation() {
+        let cfg = ServingConfig::vllm_so(256, 2048);
+        assert!(!cfg.admission_estimates);
+        let spec_ = spec();
+        let mut s = Scheduler::new(cfg, spec_, 1 << 30);
+        s.submit(Request::new(1, 64, 1000, 0.0));
+        let mut ws = |r| no_ws(r);
+        s.plan(0.0, &mut ws);
+        assert_eq!(
+            s.reserved_bytes(),
+            s.full_kv_bytes(64, 1000),
+            "default reservation is the full lifetime"
+        );
+    }
+
+    #[test]
+    fn reservation_released_the_moment_a_request_finishes_early() {
+        // reclaim-on-finish: with estimates on, a short completion frees
+        // its whole reservation (estimate + growth) at the finish token
+        let mut cfg = ServingConfig::vllm_so(256, 2048);
+        cfg.admission_estimates = true;
+        let mut s = Scheduler::new(cfg, spec(), 1 << 30);
+        s.submit(Request::new(1, 64, 5, 0.0));
+        let mut ws = |r| no_ws(r);
+        s.plan(0.0, &mut ws);
+        assert!(s.reserved_bytes() > 0);
+        s.advance_prefill(&PrefillWork::Chunk { req: 1, start: 0, len: 64, is_last: true });
+        for t in 0..5 {
+            s.emit_token(1, None, 0.1 + t as f64 * 0.01);
+        }
+        assert!(s.requests[&1].is_done());
+        assert_eq!(s.reserved_bytes(), 0, "finish must reclaim everything");
+        assert!(s.completion_estimate().is_some());
     }
 
     #[test]

@@ -47,11 +47,62 @@ pub struct IterTiming {
 /// actually moved ahead of need, so the no-prefetch ablation pays the
 /// full demand stall and the prefetch-on run only pays for what staging
 /// could not hide.
+///
+/// This is the *coarse* reference model ([`crate::config::IterModel::
+/// Coarse`]): every demand byte stalls, no matter which layer discovered
+/// it. The default simulator timing is the per-layer event model
+/// ([`layered_iter`]); `bench` compares the two.
 pub fn two_stream_iter(compute_s: f64, prefetch_s: f64, demand_s: f64) -> IterTiming {
     let hidden_s = prefetch_s.min(compute_s);
     let spill_s = prefetch_s - hidden_s;
     let stall_s = demand_s + spill_s;
     IterTiming { compute_s, hidden_s, stall_s, iter_time_s: compute_s + stall_s }
+}
+
+/// Per-layer iteration event model ([`crate::config::IterModel::
+/// PerLayer`]).
+///
+/// The coarse model charges every demand miss wholesale to the critical
+/// path, but misses are *discovered layer by layer*: the blocks layer N's
+/// selection misses are only needed by layer N's gather, and FlashH2D's
+/// fused gather streams them while the layer computes — so a miss
+/// discovered at layer N overlaps layer N's (and, through copy-stream
+/// queueing slack, later layers') compute instead of stalling everything.
+///
+/// Mechanics — one compute stream, one copy stream:
+///
+/// - prefetch bytes were issued *before* the batch and occupy the copy
+///   stream from `t = 0`;
+/// - layer `i`'s demand bytes are enqueued on the copy stream when layer
+///   `i`'s compute begins (that is when its selection runs);
+/// - layer `i` completes when both its compute and its own demand copies
+///   are done: copy time beyond the layer's compute window spills into
+///   the next layer's start.
+///
+/// `stall = iter_time - Σ compute`: strictly less than the coarse
+/// model's whenever misses coexist with per-layer compute they can hide
+/// under, identical when there is nothing to overlap (no compute, or all
+/// traffic is prefetch spill).
+pub fn layered_iter(layer_compute: &[f64], layer_demand: &[f64], prefetch_s: f64) -> IterTiming {
+    debug_assert_eq!(layer_compute.len(), layer_demand.len());
+    let compute_s: f64 = layer_compute.iter().sum();
+    let demand_s: f64 = layer_demand.iter().sum();
+    let mut comp_t = 0.0f64;
+    let mut copy_t = prefetch_s; // prefetch drains first on the copy stream
+    for (&c, &d) in layer_compute.iter().zip(layer_demand) {
+        let start = comp_t;
+        let mut done = start + c;
+        if d > 0.0 {
+            copy_t = copy_t.max(start) + d;
+            done = done.max(copy_t);
+        }
+        comp_t = done;
+    }
+    // trailing prefetch spill past the last layer still occupies the link
+    let iter_time_s = comp_t.max(prefetch_s);
+    let stall_s = iter_time_s - compute_s;
+    let hidden_s = (prefetch_s + demand_s - stall_s).max(0.0);
+    IterTiming { compute_s, hidden_s, stall_s, iter_time_s }
 }
 
 impl CostModel {
@@ -285,6 +336,59 @@ mod tests {
         let t = two_stream_iter(1.0, 1.5, 0.1);
         assert!((t.stall_s - 0.6).abs() < 1e-12);
         assert!((t.iter_time_s - 1.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn layered_model_overlaps_layer_misses_with_compute() {
+        // misses lighter than per-layer compute hide entirely
+        let t = layered_iter(&[0.25; 4], &[0.2; 4], 0.0);
+        assert!(t.stall_s.abs() < 1e-12, "hidden misses must not stall: {t:?}");
+        assert_eq!(t.iter_time_s, 1.0);
+        // miss-heavy: still strictly less stall than the coarse model
+        let heavy = layered_iter(&[0.1; 2], &[0.5; 2], 0.0);
+        let coarse = two_stream_iter(0.2, 0.0, 1.0);
+        assert!(heavy.stall_s > 0.0);
+        assert!(
+            heavy.stall_s < coarse.stall_s,
+            "layered {heavy:?} must beat coarse {coarse:?}"
+        );
+        assert!((heavy.iter_time_s - 1.0).abs() < 1e-12); // copy-bound
+        // no compute to hide under -> both models agree
+        let bare = layered_iter(&[0.0; 3], &[0.1; 3], 0.0);
+        assert!((bare.stall_s - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn layered_model_queues_demand_behind_prefetch() {
+        // prefetch occupies the single copy stream first; layer-0 demand
+        // waits for it, so heavy staging delays demand visibly
+        let t = layered_iter(&[1.0], &[0.5], 0.8);
+        assert!((t.iter_time_s - 1.3).abs() < 1e-12); // 0.8 + 0.5 copy chain
+        assert!((t.stall_s - 0.3).abs() < 1e-12);
+        // pure prefetch spill matches the coarse model
+        let t = layered_iter(&[0.5, 0.5], &[0.0, 0.0], 1.5);
+        assert!((t.iter_time_s - 1.5).abs() < 1e-12);
+        assert!((t.stall_s - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn layered_model_prefetching_demand_never_hurts() {
+        // moving bytes from the demand stream (issued at layer start) to
+        // the prefetch stream (issued at t=0) can only help
+        for &(c, total) in &[(1.0, 0.4), (1.0, 1.7), (0.2, 0.9)] {
+            let l = 4;
+            let per = c / l as f64;
+            let all_demand = layered_iter(&vec![per; l], &vec![total / l as f64; l], 0.0);
+            for frac in [0.25, 0.5, 0.75, 1.0] {
+                let pf = total * frac;
+                let d = (total - pf) / l as f64;
+                let t = layered_iter(&vec![per; l], &vec![d; l], pf);
+                assert!(
+                    t.iter_time_s <= all_demand.iter_time_s + 1e-12,
+                    "prefetch made it worse: {t:?} vs {all_demand:?}"
+                );
+            }
+        }
     }
 
     #[test]

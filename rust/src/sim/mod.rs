@@ -12,5 +12,5 @@
 pub mod cost;
 pub mod selection;
 
-pub use cost::{two_stream_iter, CostModel, IterTiming};
+pub use cost::{layered_iter, two_stream_iter, CostModel, IterTiming};
 pub use selection::SelectionModel;

@@ -21,7 +21,7 @@
 
 use crate::util::rng::Rng;
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct SelectionModel {
     rng: Rng,
     /// Probability a selected block stays selected next step.

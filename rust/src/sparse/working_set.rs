@@ -12,7 +12,7 @@ use std::collections::{HashSet, VecDeque};
 /// A (layer, head, block) selection item within one request.
 pub type SelItem = (u16, u16, u32);
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct WorkingSetTracker {
     window: usize,
     history: VecDeque<Vec<SelItem>>,

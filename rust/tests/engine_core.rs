@@ -9,7 +9,9 @@ use std::time::Duration;
 
 use sparseserve::config::{HardwareSpec, ModelSpec, ServingConfig};
 use sparseserve::coordinator::{ServeError, Server, SubmitRequest};
-use sparseserve::engine::{Backend, BatchOutcome, EngineCore, MemStats, SimBackend};
+use sparseserve::engine::{
+    Backend, BatchOutcome, EngineCore, MemStats, PhaseEvent, SimBackend, StageHints, StepSession,
+};
 use sparseserve::memory::{MemoryError, ReqId};
 use sparseserve::scheduler::{Batch, Request, Scheduler};
 
@@ -134,11 +136,91 @@ fn ttft_slo_violations_counted() {
 // DRAM-exhaustion & starvation regression tests (ISSUE 2)
 
 /// Deterministic test backend: instant iterations, scripted working-set
-/// sizes, and an optional request whose decode trips a typed
-/// `MemoryError` (the DRAM-exhaustion failure shape).
+/// sizes, per-request KV append counters (so tests can assert rollback
+/// leaves batch-mates' state untouched), and an optional request whose
+/// decode trips a typed `MemoryError` mid-batch — AFTER earlier
+/// batch-mates already appended, the exact shape rollback exists for.
 struct MockBackend {
     ws: HashMap<ReqId, usize>,
-    fail_on: Option<ReqId>,
+    fail_on: Option<(ReqId, MemoryError)>,
+    /// Failure trigger; tests can disarm it until the interesting batch
+    /// shape has formed.
+    armed: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    /// Appended-KV counter per registered request, shared with the test
+    /// (the backend is boxed into the engine, this stays observable).
+    kv: std::sync::Arc<std::sync::Mutex<HashMap<ReqId, usize>>>,
+}
+
+impl MockBackend {
+    fn new(ws: HashMap<ReqId, usize>, fail_on: Option<(ReqId, MemoryError)>) -> Self {
+        Self {
+            ws,
+            fail_on,
+            armed: std::sync::Arc::new(std::sync::atomic::AtomicBool::new(true)),
+            kv: Default::default(),
+        }
+    }
+
+    fn kv_handle(&self) -> std::sync::Arc<std::sync::Mutex<HashMap<ReqId, usize>>> {
+        self.kv.clone()
+    }
+
+    fn armed_handle(&self) -> std::sync::Arc<std::sync::atomic::AtomicBool> {
+        self.armed.clone()
+    }
+}
+
+struct MockSession<'s> {
+    be: &'s mut MockBackend,
+    batch: &'s Batch,
+    /// Pre-step KV counters of the batch (rollback restore).
+    snap: HashMap<ReqId, usize>,
+}
+
+impl StepSession for MockSession<'_> {
+    fn stage(&mut self, _hints: &StageHints) -> usize {
+        0
+    }
+
+    fn prefill_segment(&mut self, l0: usize, l1: usize) -> anyhow::Result<PhaseEvent> {
+        Ok(PhaseEvent { layer_start: l0, layer_end: l1, ..Default::default() })
+    }
+
+    fn decode_layer(&mut self, layer: usize) -> anyhow::Result<PhaseEvent> {
+        // mid-batch failure shape: iterate decodes in order, mutate each
+        // one's KV, and only THEN fail on the victim
+        let armed = self.be.armed.load(std::sync::atomic::Ordering::SeqCst);
+        let mut kv = self.be.kv.lock().unwrap();
+        for &id in &self.batch.decodes {
+            *kv.entry(id).or_insert(0) += 1;
+            if let Some((victim, err)) = self.be.fail_on {
+                if armed && id == victim {
+                    return Err(err.into());
+                }
+            }
+        }
+        Ok(PhaseEvent { layer_start: layer, layer_end: layer + 1, ..Default::default() })
+    }
+
+    fn commit(self: Box<Self>) -> anyhow::Result<BatchOutcome> {
+        let mut out = BatchOutcome { iter_time_s: 0.01, ..Default::default() };
+        for &id in &self.batch.decodes {
+            out.tokens.push((id, None));
+        }
+        if let Some(w) = &self.batch.prefill {
+            if w.is_last() {
+                out.tokens.push((w.req(), None));
+            }
+        }
+        Ok(out)
+    }
+
+    fn rollback(self: Box<Self>) {
+        let mut kv = self.be.kv.lock().unwrap();
+        for (id, n) in self.snap {
+            kv.insert(id, n);
+        }
+    }
 }
 
 impl Backend for MockBackend {
@@ -146,11 +228,18 @@ impl Backend for MockBackend {
         "mock"
     }
 
-    fn register(&mut self, _req: &Request) -> anyhow::Result<()> {
+    fn n_layers(&self) -> usize {
+        1
+    }
+
+    fn register(&mut self, req: &Request) -> anyhow::Result<()> {
+        self.kv.lock().unwrap().insert(req.id, 0);
         Ok(())
     }
 
-    fn release(&mut self, _req: ReqId) {}
+    fn release(&mut self, req: ReqId) {
+        self.kv.lock().unwrap().remove(&req);
+    }
 
     fn decode_ws_bytes(&mut self, req: ReqId) -> usize {
         self.ws.get(&req).copied().unwrap_or(0)
@@ -160,26 +249,20 @@ impl Backend for MockBackend {
         MemStats::default()
     }
 
-    fn run_batch(
-        &mut self,
-        batch: &Batch,
-        _requests: &HashMap<ReqId, Request>,
-    ) -> anyhow::Result<BatchOutcome> {
-        if let Some(f) = self.fail_on {
-            if batch.decodes.contains(&f) {
-                return Err(MemoryError::DramExhausted { req: f }.into());
-            }
-        }
-        let mut out = BatchOutcome { iter_time_s: 0.01, ..Default::default() };
-        for &id in &batch.decodes {
-            out.tokens.push((id, None));
-        }
-        if let Some(w) = &batch.prefill {
-            if w.is_last() {
-                out.tokens.push((w.req(), None));
-            }
-        }
-        Ok(out)
+    fn begin_step<'s>(
+        &'s mut self,
+        batch: &'s Batch,
+        _requests: &'s HashMap<ReqId, Request>,
+    ) -> anyhow::Result<Box<dyn StepSession + 's>> {
+        let snap = {
+            let kv = self.kv.lock().unwrap();
+            batch
+                .decodes
+                .iter()
+                .filter_map(|id| kv.get(id).map(|n| (*id, *n)))
+                .collect()
+        };
+        Ok(Box::new(MockSession { be: self, batch, snap }))
     }
 }
 
@@ -233,7 +316,8 @@ fn memory_exhaustion_evicts_typed_and_engine_survives() {
     let cfg = ServingConfig::sparseserve(2048, 2048, 32);
     let spec = ModelSpec::lwm_7b();
     let sched = Scheduler::new(cfg, spec, 1 << 40);
-    let backend = MockBackend { ws: HashMap::new(), fail_on: Some(2) };
+    let backend =
+        MockBackend::new(HashMap::new(), Some((2, MemoryError::DramExhausted { req: 2 })));
     let mut core = EngineCore::new(sched, Box::new(backend));
     let ok_id = core.submit(SubmitRequest::synthetic(64).max_new(5), 0.0).unwrap();
     let doomed = core.submit(SubmitRequest::synthetic(64).max_new(5), 0.0).unwrap();
@@ -260,6 +344,80 @@ fn memory_exhaustion_evicts_typed_and_engine_survives() {
 }
 
 #[test]
+fn mid_batch_hbm_exhaustion_rolls_back_and_retries_same_iteration() {
+    // Acceptance criterion: a mid-batch HbmExhausted — raised AFTER an
+    // earlier batch-mate already appended KV this step — must roll the
+    // step back, evict only the victim, and re-run the surviving
+    // batch-mates in the SAME EngineCore::step call with unchanged KV
+    // state (each survivor's KV advances exactly once, not twice).
+    let cfg = ServingConfig::sparseserve(2048, 2048, 32);
+    let spec = ModelSpec::lwm_7b();
+    let sched = Scheduler::new(cfg, spec, 1 << 40);
+    let backend =
+        MockBackend::new(HashMap::new(), Some((2, MemoryError::HbmExhausted { req: 2 })));
+    let kv = backend.kv_handle();
+    let armed = backend.armed_handle();
+    armed.store(false, std::sync::atomic::Ordering::SeqCst); // no failure yet
+    let mut core = EngineCore::new(sched, Box::new(backend));
+    for _ in 0..3 {
+        core.submit(SubmitRequest::synthetic(64).max_new(8), 0.0).unwrap();
+    }
+    // drive all three through prefill into decode (one prefill slot)
+    let mut now = 0.0;
+    for _ in 0..3 {
+        let out = core.step(now).unwrap();
+        assert!(out.ran_batch);
+        now += out.iter_time_s.max(1e-3);
+    }
+    armed.store(true, std::sync::atomic::Ordering::SeqCst);
+    let decoding = core.sched().decoding();
+    assert_eq!(decoding, vec![1, 2, 3], "all three must be decoding");
+    let gen_before: Vec<usize> =
+        decoding.iter().map(|id| core.sched().requests[id].n_generated).collect();
+    let kv_before = kv.lock().unwrap().clone();
+
+    // ONE step: decode batch [1, 2, 3]; request 2 trips HbmExhausted
+    // after request 1 already appended
+    let out = core.step(now).unwrap();
+    assert!(out.ran_batch, "survivors must run in the same iteration");
+    assert_eq!(out.evicted.len(), 1);
+    assert_eq!(out.evicted[0].0, 2);
+    assert!(matches!(out.evicted[0].1, ServeError::Evicted { .. }));
+    assert!(out.evicted[0].1.to_string().contains("HBM exhausted"));
+    let emitted: Vec<ReqId> = out.emitted.iter().map(|e| e.req).collect();
+    assert_eq!(emitted, vec![1, 3], "both survivors emit in the same step");
+    // unchanged KV state: the rollback restored the aborted attempt, so
+    // each survivor's KV advanced exactly once across abort + retry
+    {
+        let kv_after = kv.lock().unwrap();
+        assert_eq!(kv_after[&1], kv_before[&1] + 1, "req 1 appends exactly once");
+        assert_eq!(kv_after[&3], kv_before[&3] + 1, "req 3 appends exactly once");
+        assert!(!kv_after.contains_key(&2), "victim's KV must be released");
+    }
+    for (&id, &before) in decoding.iter().zip(&gen_before) {
+        if id == 2 {
+            continue;
+        }
+        assert_eq!(
+            core.sched().requests[&id].n_generated,
+            before + 1,
+            "request {id} must advance exactly one token"
+        );
+    }
+    assert_eq!(core.metrics().requests_evicted, 1);
+
+    // the engine keeps serving the survivors to completion
+    let mut steps = 0;
+    while core.has_work() {
+        steps += 1;
+        assert!(steps < 100, "engine must keep making progress");
+        let out = core.step(now).unwrap();
+        now += out.iter_time_s.max(1e-3);
+    }
+    assert_eq!(core.metrics().requests_finished, 2);
+}
+
+#[test]
 fn starved_decode_makes_progress_with_guard() {
     // A large-WS decode behind one short small-WS request and ahead of
     // two long small-WS requests: without the guard the young pair packs
@@ -274,7 +432,7 @@ fn starved_decode_makes_progress_with_guard() {
     ws.insert(2, 26 << 20); // fits alone, never with request 1
     ws.insert(3, 12 << 20);
     ws.insert(4, 12 << 20);
-    let backend = MockBackend { ws, fail_on: None };
+    let backend = MockBackend::new(ws, None);
     let mut core = EngineCore::new(sched, Box::new(backend));
     core.submit(SubmitRequest::synthetic(64).max_new(6), 0.0).unwrap(); // 1: short
     core.submit(SubmitRequest::synthetic(64).max_new(3), 0.0).unwrap(); // 2: big WS

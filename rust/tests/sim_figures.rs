@@ -4,7 +4,7 @@
 use std::collections::HashMap;
 
 use sparseserve::config::{HardwareSpec, ModelSpec, ServingConfig};
-use sparseserve::engine::{Backend, Engine, SimBackend};
+use sparseserve::engine::{drive_step, Backend, Engine, SimBackend, StageHints};
 use sparseserve::scheduler::{Batch, Phase, PrefillWork, Request, Scheduler};
 use sparseserve::workload::{generate, WorkloadSpec};
 
@@ -17,6 +17,7 @@ fn lwm() -> (ModelSpec, HardwareSpec) {
 fn fixed_batch_decode(cfg: ServingConfig, batch_size: usize, ctx: usize, iters: usize) -> (f64, f64) {
     let (spec, hw) = lwm();
     let mut b = SimBackend::new(cfg, spec, hw);
+    let hints = StageHints::default();
     let mut requests = HashMap::new();
     for id in 0..batch_size as u32 {
         let mut r = Request::new(id, ctx, 1024, 0.0);
@@ -27,18 +28,18 @@ fn fixed_batch_decode(cfg: ServingConfig, batch_size: usize, ctx: usize, iters: 
             decodes: vec![],
             prefill: Some(PrefillWork::Chunk { req: id, start: 0, len: ctx, is_last: true }),
         };
-        b.run_batch(&batch, &requests).unwrap();
+        drive_step(&mut b, &batch, &requests, &hints).unwrap();
         requests.get_mut(&id).unwrap().phase = Phase::Decode;
     }
     let batch = Batch { decodes: (0..batch_size as u32).collect(), prefill: None };
     // warm-up to steady state, then measure
     for _ in 0..10 {
-        b.run_batch(&batch, &requests).unwrap();
+        drive_step(&mut b, &batch, &requests, &hints).unwrap();
     }
     let mut time = 0.0;
     let mut loads = 0usize;
     for _ in 0..iters {
-        let out = b.run_batch(&batch, &requests).unwrap();
+        let out = drive_step(&mut b, &batch, &requests, &hints).unwrap();
         time += out.iter_time_s;
         loads += out.blocks_loaded;
     }
@@ -54,6 +55,7 @@ fn fig1_throughput_peaks_then_declines_with_batch_size() {
     let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
     cfg.ws_batch_control = false;
     cfg.r_max = 64;
+    cfg.prefetch = false; // Fig. 1 isolates the raw demand-load dynamics
     let ctx = 31_000;
     let (t2, l2) = fixed_batch_decode(cfg.clone(), 2, ctx, 30);
     let (t8, l8) = fixed_batch_decode(cfg.clone(), 8, ctx, 30);
