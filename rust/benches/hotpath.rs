@@ -1,7 +1,10 @@
 //! Hot-path microbenchmarks (§Perf): the L3 operations on the decode
-//! critical path. Targets from DESIGN.md §Perf: scheduler decision
+//! critical path, plus the FULL-STEP pipeline (plan → stage → per-layer
+//! decode → commit on the SimBackend, hybrid, and rollback+retry) from
+//! `figures::hotpath`. Targets from DESIGN.md §Perf: scheduler decision
 //! < 10 µs/request, top-k (128 blocks) < 5 µs, engine overhead small
-//! relative to modeled PCIe time.
+//! relative to modeled PCIe time. The same full-step suite backs the
+//! `bench` subcommand's `BENCH_hotpath.json` CI artifact.
 
 use std::sync::Arc;
 
@@ -30,6 +33,11 @@ fn main() {
     let scores_big: Vec<f32> = (0..1024).map(|_| rng.normal() as f32).collect();
     results.push(bench("topk/1024 blocks k=64 (paper scale)", 0.4, 100, || {
         std::hint::black_box(top_k_blocks_fast(&scores_big, 1024, 64));
+    }));
+    let mut topk_buf = Vec::new();
+    results.push(bench("topk/1024 blocks k=64 (fast, into scratch)", 0.4, 100, || {
+        sparseserve::sparse::top_k_blocks_fast_into(&scores_big, 1024, 64, &mut topk_buf);
+        std::hint::black_box(topk_buf.len());
     }));
 
     // ---- scheduler plan (Alg. 1) ----
@@ -106,6 +114,15 @@ fn main() {
     results.push(bench("sim/selection step 1024 blocks budget 64", 0.3, 20, || {
         std::hint::black_box(sel.next_selection(1024, 64));
     }));
+    let mut sel2 = SelectionModel::new(3);
+    let mut sel_buf = Vec::new();
+    results.push(bench("sim/selection step (into scratch)", 0.3, 20, || {
+        sel2.next_selection_into(1024, 64, &mut sel_buf);
+        std::hint::black_box(sel_buf.len());
+    }));
+
+    // ---- full-step pipeline (plan → stage → layers → commit) ----
+    results.extend(sparseserve::figures::full_step_results(0.4));
 
     // ---- real decode step, if artifacts exist ----
     let dir = sparseserve::runtime::Runtime::default_dir("tiny-llm");

@@ -27,8 +27,15 @@ pub fn comparison_set(token_budget: usize, chunk: usize, n_layers: usize) -> Vec
 /// Fig. 13's incremental ladder, extended with the working-set
 /// prefetcher as its own rung:
 /// vLLM -> +SA -> +Offload -> +FT -> +WC -> +LP -> +PF.
-/// The final rung equals the full `ServingConfig::sparseserve` system,
-/// and +LP doubles as the no-prefetch ablation (`sparseserve-np`).
+/// Every rung keeps *pure recency* ranking and conservative admission so
+/// each step isolates exactly one mechanism; the full
+/// `ServingConfig::sparseserve` system additionally enables
+/// frequency-blended ranking (`prefetch_freq_ranking`) and
+/// estimate-based admission (`admission_estimates`). Note the
+/// no-prefetch preset (`sparseserve-np`) is "full system minus
+/// prefetching" — it KEEPS those two knobs, so the
+/// [`prefetch_ablation`] pair differs only in `prefetch` (the +LP rung
+/// is therefore *not* the same config as `sparseserve-np`).
 pub fn ablation_ladder(token_budget: usize, chunk: usize, n_layers: usize) -> Vec<SystemPreset> {
     let base = ServingConfig::vllm(chunk);
     let sa = ServingConfig::vllm_s(token_budget, chunk);
@@ -98,11 +105,15 @@ mod tests {
         assert!(l[4].cfg.ws_batch_control && l[4].cfg.prefill_mode == PrefillMode::Chunked);
         assert!(l[5].cfg.prefill_mode == PrefillMode::LayerSegmented && !l[5].cfg.prefetch);
         assert!(l[6].cfg.prefetch, "final rung adds the prefetcher");
-        // the final rung IS SparseServe
+        // +PF isolates plain recency prefetch: no frequency blending, no
+        // estimate-based admission
+        assert!(!l[6].cfg.prefetch_freq_ranking && !l[6].cfg.admission_estimates);
+        // the final rung matches SparseServe's execution shape
         let ss = ServingConfig::sparseserve(2048, 2048, 32);
         assert_eq!(l[6].cfg.prefill_mode, ss.prefill_mode);
         assert_eq!(l[6].cfg.max_inject_tokens, ss.max_inject_tokens);
         assert_eq!(l[6].cfg.max_prefetch_blocks, ss.max_prefetch_blocks);
+        assert!(ss.prefetch_freq_ranking, "full system blends frequency");
     }
 
     #[test]

@@ -76,6 +76,11 @@ pub struct ServingConfig {
     /// Cap on blocks staged per iteration: block *groups* for the
     /// simulator, per-head blocks for the real backend.
     pub max_prefetch_blocks: usize,
+    /// Blend selection frequency into the prefetch ranking: the
+    /// working-set union is ordered recency-first, then by each block's
+    /// hit EWMA within the same recency tier (off = pure recency order,
+    /// the `+PF` ablation rung).
+    pub prefetch_freq_ranking: bool,
 
     // ---- simulator fidelity ----
     /// Iteration event model (simulator only): per-layer overlap vs the
@@ -121,8 +126,13 @@ impl ServingConfig {
             ws_starvation_k: 4,
             prefetch: true,
             max_prefetch_blocks: 4096,
+            prefetch_freq_ranking: true,
             iter_model: IterModel::PerLayer,
-            admission_estimates: false,
+            // default-on (measured by the `bench` subcommand): estimate-
+            // based reservations admit short completions earlier, and
+            // oversubscription is safe because mid-batch exhaustion rolls
+            // back and evicts typed (PR 3)
+            admission_estimates: true,
             prefill_mode: PrefillMode::LayerSegmented,
             // paper §4.2: maxInjectToken = B * L for parity with chunked
             max_inject_tokens: chunk_tokens * n_layers,
@@ -147,6 +157,7 @@ impl ServingConfig {
             ws_starvation_k: 4,
             prefetch: false,
             max_prefetch_blocks: 0,
+            prefetch_freq_ranking: false,
             iter_model: IterModel::PerLayer,
             admission_estimates: false,
             prefill_mode: PrefillMode::Chunked,
@@ -211,6 +222,11 @@ mod tests {
         assert_eq!(ss.max_inject_tokens, 2048 * 32);
         // prefetch: on for SparseServe, off for every baseline
         assert!(ss.prefetch && !v.prefetch && !s.prefetch && !so.prefetch);
+        // frequency-blended prefetch ranking ships with the full system
+        assert!(ss.prefetch_freq_ranking && !v.prefetch_freq_ranking);
+        // admission estimates are default-on for the full system only
+        // (measured by `bench`; see README "Performance")
+        assert!(ss.admission_estimates && !v.admission_estimates && !so.admission_estimates);
         let np = ServingConfig::sparseserve_np(2048, 2048, 32);
         assert!(!np.prefetch && np.offload && np.ws_batch_control);
     }

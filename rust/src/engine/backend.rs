@@ -84,6 +84,12 @@ pub struct BatchOutcome {
     pub prefetch_wasted: usize,
     /// Blocks staged for the NEXT iteration (cross-iteration hints).
     pub prefetch_deferred: usize,
+    /// Compute time burnt on this iteration's rolled-back attempts
+    /// (sessions that hit a typed memory error and were retried without
+    /// the victim). The engine charges it to the serving clock on top of
+    /// `iter_time_s`, so eviction-heavy workloads stop under-reporting
+    /// latency.
+    pub abort_time_s: f64,
 }
 
 /// KV-memory occupancy snapshot (request lifecycle observability: tests
@@ -182,9 +188,12 @@ pub trait Backend {
     /// evicted before a session could commit): discard the aborted
     /// attempts' per-iteration transfer accounting and retire their
     /// prefetch stages, so the NEXT committed step's `BatchOutcome` does
-    /// not inherit traffic it never moved. Default: no-op (stateless
-    /// backends).
-    fn abort_iteration(&mut self) {}
+    /// not inherit traffic it never moved. Returns the compute time the
+    /// abandoned attempts burnt (charged to the serving clock by the
+    /// engine). Default: no-op returning 0 (stateless backends).
+    fn abort_iteration(&mut self) -> f64 {
+        0.0
+    }
 
     /// Decode working-set estimate in bytes (Alg. 1 input).
     fn decode_ws_bytes(&mut self, req: ReqId) -> usize;

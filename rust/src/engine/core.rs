@@ -17,7 +17,7 @@
 
 use crate::memory::{MemoryError, ReqId};
 use crate::metrics::RunMetrics;
-use crate::scheduler::{Priority, Request, RequestParams, RequestTiming, Scheduler};
+use crate::scheduler::{Batch, Priority, Request, RequestParams, RequestTiming, Scheduler};
 
 use super::backend::{drive_step, Backend, MemStats, StageHints};
 use super::error::ServeError;
@@ -164,6 +164,11 @@ pub struct EngineCore {
     /// them for the report; a long-running online server must prune
     /// them or host memory grows without bound.
     retain_finished: bool,
+    /// Recycled planner outputs: `Scheduler::plan_into` /
+    /// `stage_hints_into` refill these every iteration instead of
+    /// materializing fresh vectors (zero-clone step pipeline).
+    batch: Batch,
+    hints: StageHints,
     next_id: ReqId,
 }
 
@@ -175,6 +180,8 @@ impl EngineCore {
             metrics: RunMetrics::new(),
             queue_cap: None,
             retain_finished: true,
+            batch: Batch::default(),
+            hints: StageHints::default(),
             next_id: 1,
         }
     }
@@ -330,21 +337,21 @@ impl EngineCore {
 
         let backend = &mut self.backend;
         let mut ws = |id| backend.decode_ws_bytes(id);
-        let mut batch = self.sched.plan(now, &mut ws);
-        if batch.is_empty() {
+        self.sched.plan_into(now, &mut ws, &mut self.batch);
+        if self.batch.is_empty() {
             return Ok(out);
         }
         // cross-iteration staging: the session stages this batch's
         // working sets first, then (with leftover budget, under this
         // batch's compute) the decodes predicted for the NEXT iteration
-        let hints = StageHints { next_decodes: self.sched.stage_hints(&batch) };
+        self.sched.stage_hints_into(&self.batch, &mut self.hints.next_decodes);
 
         let bo = loop {
             let res = drive_step(
                 self.backend.as_mut(),
-                &batch,
+                &self.batch,
                 &self.sched.requests,
-                &hints,
+                &self.hints,
             );
             match res {
                 Ok(bo) => break bo,
@@ -368,32 +375,37 @@ impl EngineCore {
                         }
                     }
                     out.evicted.push((victim, err));
-                    let before = batch.n_requests();
-                    batch.decodes.retain(|&id| id != victim);
-                    if batch.prefill.as_ref().map_or(false, |w| w.req() == victim) {
-                        batch.prefill = None;
+                    let before = self.batch.n_requests();
+                    self.batch.decodes.retain(|&id| id != victim);
+                    if self.batch.prefill.as_ref().map_or(false, |w| w.req() == victim) {
+                        self.batch.prefill = None;
                     }
-                    if batch.is_empty() || batch.n_requests() == before {
+                    if self.batch.is_empty() || self.batch.n_requests() == before {
                         // nothing left to retry, or the victim was not in
                         // the batch (cannot shrink further) — give up on
                         // this iteration (dropping the aborted attempts'
-                        // iteration accounting), the engine stays alive
-                        self.backend.abort_iteration();
+                        // transfer accounting) but still charge their
+                        // burnt compute to the serving clock; the engine
+                        // stays alive
+                        let aborted = self.backend.abort_iteration();
+                        out.iter_time_s = aborted;
+                        self.metrics.record_abandoned_iteration(aborted);
                         return Ok(out);
                     }
                 }
             }
         };
         out.ran_batch = true;
-        out.iter_time_s = bo.iter_time_s;
-        out.batch_requests = batch.n_requests();
+        // a committed retry also pays for the attempts it rolled back
+        out.iter_time_s = bo.iter_time_s + bo.abort_time_s;
+        out.batch_requests = self.batch.n_requests();
         self.metrics.record_iteration(&bo);
 
-        if let Some(work) = &batch.prefill {
+        if let Some(work) = &self.batch.prefill {
             self.sched.advance_prefill(work);
         }
 
-        let t_emit = now + bo.iter_time_s;
+        let t_emit = now + out.iter_time_s;
         for (id, tok) in &bo.tokens {
             let finished = self.sched.emit_token(*id, *tok, t_emit);
             let r = &self.sched.requests[id];

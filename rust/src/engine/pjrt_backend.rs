@@ -14,14 +14,27 @@
 //! Execution is session-based ([`super::StepSession`]): `begin_step`
 //! pre-flights the decode step's DRAM demand (typed failure with zero
 //! side effects), opens a [`crate::memory::KvManager`] transaction and
-//! snapshots each batch participant's host-side state (last token,
-//! carried prefill activation). The engine then drives one
-//! `prefill_segment`/`decode_layer` call per layer — layer-segmented
+//! snapshots each batch participant's last token. The engine then drives
+//! one `prefill_segment`/`decode_layer` call per layer — layer-segmented
 //! prefill is the real execution path, not a planner annotation — and a
 //! mid-batch typed `MemoryError` (mid-gather `HbmExhausted`, append
 //! `DramExhausted`) rolls the whole step back: KV truncated to pre-step
 //! lengths, stale residency purged, activations restored, so the
 //! surviving batch-mates re-run identically in the same iteration.
+//!
+//! ## Zero-clone step pipeline
+//!
+//! The carried layer-segmented prefill activation is never cloned: it is
+//! *moved* out of the request at `pf_init`, recovered from the input
+//! tensor after the first layer runs, and kept aside for rollback
+//! (move-based copy-on-write) — replacing the old multi-megabyte
+//! per-hybrid-batch clone in `begin_step`. The per-layer decode hot loop
+//! builds its metadata/gather tensors and top-k selections in recycled
+//! buffers ([`GatherScratch`]) and reclaims each input tensor's storage
+//! after execution ([`HostTensor::into_f32`]), so steady-state decode
+//! allocates no fresh staging buffers. Aborted (rolled-back) sessions
+//! charge their wall time to the next commit's
+//! [`BatchOutcome::abort_time_s`].
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -34,7 +47,7 @@ use crate::memory::manager::NEG_INF;
 use crate::memory::{engine_for, BlockKey, KvManager, MemoryError, ReqId};
 use crate::runtime::{HostTensor, MixedInput, Runtime};
 use crate::scheduler::{Batch, PrefillWork, Request};
-use crate::sparse::{top_k_blocks_fast, WorkingSetTracker};
+use crate::sparse::{top_k_blocks_fast_into, WorkingSetTracker};
 
 use super::backend::{
     Backend, BatchOutcome, MemStats, PhaseEvent, StageHints, StepSession,
@@ -48,6 +61,27 @@ struct RealReq {
     ws: WorkingSetTracker,
 }
 
+/// Recycled per-step buffers for the decode hot loop and the staging
+/// planner: taken out, used, and put back each phase so steady-state
+/// decode performs no fresh tensor-staging allocations.
+#[derive(Default)]
+struct GatherScratch {
+    /// Metadata tensors for `decode_qkv` (lo/hi cuboids + mask).
+    lo: Vec<f32>,
+    hi: Vec<f32>,
+    mm: Vec<f32>,
+    /// Gather staging tensors for `decode_attend` (K/V/mask).
+    gk: Vec<f32>,
+    gv: Vec<f32>,
+    gm: Vec<f32>,
+    /// Per-head top-k output buffers.
+    sel: Vec<Vec<u32>>,
+    /// Staging plan (prefetch path).
+    plan: Vec<BlockKey>,
+    /// Ranked working-set buffer feeding the plan.
+    ranked: Vec<(u16, u16, u32)>,
+}
+
 pub struct PjrtBackend {
     pub rt: Arc<Runtime>,
     pub cfg: ServingConfig,
@@ -55,6 +89,11 @@ pub struct PjrtBackend {
     reqs: HashMap<ReqId, RealReq>,
     /// Precomputed per-layer weight names (device-resident buffer keys).
     layer_wnames: Vec<Vec<String>>,
+    /// Recycled hot-loop buffers (see [`GatherScratch`]).
+    scratch: GatherScratch,
+    /// Wall time burnt by rolled-back sessions, awaiting the next
+    /// commit's `abort_time_s` (or `abort_iteration`).
+    aborted_time_s: f64,
     /// When set, every decode step's full (layer, head, block) selection is
     /// appended to `selection_log` (single-request experiments: Fig. 8).
     pub record_selections: bool,
@@ -77,6 +116,8 @@ impl PjrtBackend {
             kv,
             reqs: HashMap::new(),
             layer_wnames,
+            scratch: GatherScratch::default(),
+            aborted_time_s: 0.0,
             record_selections: false,
             selection_log: Vec::new(),
         }
@@ -147,26 +188,30 @@ impl PjrtBackend {
         let mut toks = vec![0i32; t_pad];
         toks[..tokens.len()].copy_from_slice(tokens);
         let tokens_t = HostTensor::i32(vec![t_pad], toks);
-        let outs = self.rt.execute(
+        let mut outs = self.rt.execute(
             &format!("embed_{t_pad}"),
             &[&tokens_t, self.rt.weights.get("embedding")],
         )?;
-        Ok((outs[0].as_f32().to_vec(), t_pad))
+        Ok((outs.swap_remove(0).into_f32(), t_pad))
     }
 
-    /// Recency-ranked staging plan for a set of decode requests, FCFS.
-    fn staging_plan(&self, ids: &[ReqId], cap: usize) -> Vec<BlockKey> {
-        let mut plan = Vec::new();
+    /// Recency-ranked staging plan for a set of decode requests, FCFS,
+    /// built into a caller-owned buffer (the ranked working sets come
+    /// through the tracker's recycled `_into` path).
+    fn staging_plan_into(&mut self, ids: &[ReqId], cap: usize, plan: &mut Vec<BlockKey>) {
+        plan.clear();
+        let mut ranked = std::mem::take(&mut self.scratch.ranked);
         for &id in ids {
             if plan.len() >= cap {
                 break;
             }
-            let Some(r) = self.reqs.get(&id) else { continue };
-            for (layer, head, block) in r.ws.ranked_blocks_capped(cap - plan.len()) {
+            let Some(r) = self.reqs.get_mut(&id) else { continue };
+            r.ws.ranked_blocks_capped_into(cap - plan.len(), &mut ranked);
+            for &(layer, head, block) in &ranked {
                 plan.push(BlockKey::new(id, layer, head, block));
             }
         }
-        plan
+        self.scratch.ranked = ranked;
     }
 }
 
@@ -189,6 +234,10 @@ struct PfState {
     valid: usize,
     /// Past tokens preceding this chunk (`ChunkPast` position offset).
     start: usize,
+    /// The activation was *moved* out of the request's saved stash
+    /// (later layer-segment batch): rollback must hand the pre-step
+    /// buffer back (move-based copy-on-write, no clone taken).
+    from_stash: bool,
 }
 
 /// Per-compiled-bucket decode group state carried across layer phases.
@@ -213,8 +262,15 @@ struct PjrtSession<'s> {
     requests: &'s HashMap<ReqId, Request>,
     t0: Instant,
     tokens: Vec<(ReqId, Option<i32>)>,
-    /// Pre-step host-side snapshots: (id, last_token, carried hidden).
-    snap: Vec<(ReqId, i32, Option<(Vec<f32>, usize, usize)>)>,
+    /// Pre-step host-side snapshots: (id, last_token). The carried
+    /// prefill activation is NOT cloned here — see `hidden_orig`.
+    snap: Vec<(ReqId, i32)>,
+    /// The pre-step stashed activation, recovered by move after the
+    /// first prefill layer consumed it (rollback restore; dropped on
+    /// commit).
+    hidden_orig: Option<(ReqId, (Vec<f32>, usize, usize))>,
+    /// Prefill layers successfully run by this session.
+    pf_layers_run: usize,
     pf: Option<PfState>,
     dec: Option<DecState>,
     /// Phase-delta baselines into the KvManager's iteration stats.
@@ -256,7 +312,7 @@ impl<'s> PjrtSession<'s> {
                     ));
                 }
                 // single-layer HBM bound: the segment only keeps ONE
-                // layer of KV live, but that layer must fit (paper §3.4)
+                // layer of KV live, but that one layer must fit (paper §3.4)
                 let spec = be.spec();
                 let seg_layer_bytes = r.prompt_len.div_ceil(spec.block_size)
                     * spec.n_kv_heads
@@ -272,16 +328,25 @@ impl<'s> PjrtSession<'s> {
                         t_pad,
                         valid: r.prompt_len,
                         start: 0,
+                        from_stash: false,
                     }
                 } else {
                     // later segment batch: restore the stashed activation
-                    // (paper Fig. 9: "activation states ... saved")
+                    // (paper Fig. 9: "activation states ... saved") —
+                    // MOVED, not cloned; rollback hands it back
                     let (h, t_pad, tr) = be
                         .reqs
                         .get_mut(&req_id)
                         .and_then(|st| st.hidden.take())
                         .ok_or_else(|| anyhow!("missing saved activation for req {req_id}"))?;
-                    PfState { mode: PfMode::WholePrompt, x: h, t_pad, valid: tr, start: 0 }
+                    PfState {
+                        mode: PfMode::WholePrompt,
+                        x: h,
+                        t_pad,
+                        valid: tr,
+                        start: 0,
+                        from_stash: true,
+                    }
                 }
             }
             PrefillWork::Chunk { start, len, .. } => {
@@ -294,6 +359,7 @@ impl<'s> PjrtSession<'s> {
                         t_pad,
                         valid: r.prompt_len,
                         start: 0,
+                        from_stash: false,
                     }
                 } else {
                     let p_max = be.rt.manifest.chunk_past;
@@ -302,7 +368,14 @@ impl<'s> PjrtSession<'s> {
                     }
                     let (x, t_pad) =
                         be.embed_padded(&r.prompt[*start..*start + *len], "chunk_t")?;
-                    PfState { mode: PfMode::ChunkPast, x, t_pad, valid: *len, start: *start }
+                    PfState {
+                        mode: PfMode::ChunkPast,
+                        x,
+                        t_pad,
+                        valid: *len,
+                        start: *start,
+                        from_stash: false,
+                    }
                 }
             }
         };
@@ -310,7 +383,10 @@ impl<'s> PjrtSession<'s> {
         Ok(())
     }
 
-    /// Run one prefill layer on the carried activation.
+    /// Run one prefill layer on the carried activation. The input
+    /// tensor's storage is recovered after execution — on the first
+    /// layer of a stash-restored segment it IS the pre-step activation
+    /// and is kept aside for rollback.
     fn pf_layer(&mut self, layer: usize) -> Result<()> {
         let be = &mut *self.be;
         let pf = self.pf.as_mut().expect("pf_init ran");
@@ -326,13 +402,13 @@ impl<'s> PjrtSession<'s> {
         let x = std::mem::take(&mut pf.x);
         let xt = HostTensor::f32(vec![t_pad, d], x);
 
-        let outs = match pf.mode {
+        let res = match pf.mode {
             PfMode::WholePrompt => {
                 let pos0 = HostTensor::scalar_i32(0);
                 let lw = be.rt.weights.layer(layer);
                 let mut inputs: Vec<&HostTensor> = vec![&xt, &pos0, &seg_mask_t];
                 inputs.extend(lw);
-                be.rt.execute(&format!("prefill_layer_{t_pad}"), &inputs)?
+                be.rt.execute(&format!("prefill_layer_{t_pad}"), &inputs)
             }
             PfMode::ChunkPast => {
                 let (hkv, dh) = (spec.n_kv_heads, spec.head_dim);
@@ -350,13 +426,27 @@ impl<'s> PjrtSession<'s> {
                 let mut inputs: Vec<&HostTensor> =
                     vec![&xt, &pos, &seg_mask_t, &pk_t, &pv_t, &pm_t];
                 inputs.extend(lw);
-                be.rt.execute(&format!("prefill_chunk_{t_pad}"), &inputs)?
+                be.rt.execute(&format!("prefill_chunk_{t_pad}"), &inputs)
             }
         };
+        // recover the input activation before any error can drop it
+        let x_back = xt.into_f32();
+        let mut outs = match res {
+            Ok(outs) => outs,
+            Err(e) => {
+                pf.x = x_back;
+                return Err(e);
+            }
+        };
+        if pf.from_stash && self.pf_layers_run == 0 {
+            // move-based copy-on-write: the pre-step stash is kept aside
+            // for rollback instead of being cloned up front in begin_step
+            self.hidden_orig = Some((req_id, (x_back, t_pad, pf.valid)));
+        }
         // outs: (k [Hkv,T,Dh], v, x2 [T,d])
         be.kv
             .append_prefill_layer(req_id, layer, outs[0].as_f32(), outs[1].as_f32(), t_pad, pf.valid)?;
-        pf.x = outs[2].as_f32().to_vec();
+        pf.x = outs.swap_remove(2).into_f32();
         Ok(())
     }
 
@@ -412,11 +502,11 @@ impl<'s> PjrtSession<'s> {
                 toks[i] = be.reqs[id].last_token;
             }
             let tokens = HostTensor::i32(vec![b_pad], toks);
-            let emb = be.rt.execute_mixed(
+            let mut emb = be.rt.execute_mixed(
                 &format!("embed_{b_pad}"),
                 &[MixedInput::Tensor(&tokens), MixedInput::Weight("embedding")],
             )?;
-            let x = emb[0].as_f32().to_vec(); // [b_pad, d]
+            let x = emb.swap_remove(0).into_f32(); // [b_pad, d]
             debug_assert_eq!(x.len(), b_pad * d);
             // positions: current sequence length (same for every layer)
             let mut pos = vec![0i32; b_pad];
@@ -436,12 +526,15 @@ impl<'s> PjrtSession<'s> {
     }
 
     /// One decode layer for one group (projection+scoring -> save new
-    /// token KV -> select+gather -> sparse attention+FFN).
+    /// token KV -> select+gather -> sparse attention+FFN). Every staging
+    /// buffer comes from (and returns to) the backend's recycled
+    /// [`GatherScratch`]; input tensor storage is reclaimed after each
+    /// kernel.
     fn dec_group_layer(&mut self, gi: usize, layer: usize) -> Result<()> {
         let be = &mut *self.be;
         let dec = self.dec.as_mut().expect("dec_init ran");
         let spec = be.spec().clone();
-        let (d, hq, hkv, dh, bs) =
+        let (d, _hq, hkv, dh, bs) =
             (spec.d_model, spec.n_heads, spec.n_kv_heads, spec.head_dim, spec.block_size);
         let nb = spec.max_blocks();
         let (k_bucket, budget) = (dec.k_bucket, dec.budget);
@@ -449,18 +542,24 @@ impl<'s> PjrtSession<'s> {
         let g = &mut dec.groups[gi];
         let b_pad = g.b_pad;
 
-        // ---- metadata tensors ----
-        let mut lo = vec![0.0f32; b_pad * hkv * nb * dh];
-        let mut hi = vec![0.0f32; b_pad * hkv * nb * dh];
-        let mut mm = vec![NEG_INF; b_pad * hkv * nb];
+        // ---- metadata tensors (recycled) ----
+        let mut lo = std::mem::take(&mut be.scratch.lo);
+        let mut hi = std::mem::take(&mut be.scratch.hi);
+        let mut mm = std::mem::take(&mut be.scratch.mm);
+        lo.clear();
+        lo.resize(b_pad * hkv * nb * dh, 0.0);
+        hi.clear();
+        hi.resize(b_pad * hkv * nb * dh, 0.0);
+        mm.clear();
+        mm.resize(b_pad * hkv * nb, NEG_INF);
         for (i, id) in g.ids.iter().enumerate() {
             let lo_s = &mut lo[i * hkv * nb * dh..(i + 1) * hkv * nb * dh];
             let hi_s = &mut hi[i * hkv * nb * dh..(i + 1) * hkv * nb * dh];
             let mm_s = &mut mm[i * hkv * nb..(i + 1) * hkv * nb];
             be.kv.metadata_into(*id, layer, nb, lo_s, hi_s, mm_s);
         }
-        let xt = HostTensor::f32(vec![b_pad, d], g.x.clone());
-        let pos_t = HostTensor::i32(vec![b_pad], g.pos.clone());
+        let xt = HostTensor::f32(vec![b_pad, d], std::mem::take(&mut g.x));
+        let pos_t = HostTensor::i32(vec![b_pad], std::mem::take(&mut g.pos));
         let lo_t = HostTensor::f32(vec![b_pad, hkv, nb, dh], lo);
         let hi_t = HostTensor::f32(vec![b_pad, hkv, nb, dh], hi);
         let mm_t = HostTensor::f32(vec![b_pad, hkv, nb], mm);
@@ -475,9 +574,16 @@ impl<'s> PjrtSession<'s> {
             MixedInput::Weight(be.wname(layer, 2)), // wk
             MixedInput::Weight(be.wname(layer, 3)), // wv
         ];
-        let outs = be.rt.execute_mixed(&format!("decode_qkv_{b_pad}"), &inputs)?;
+        let res = be.rt.execute_mixed(&format!("decode_qkv_{b_pad}"), &inputs);
+        // reclaim every input buffer (even on error — the session rolls
+        // back but the scratch capacity survives)
+        be.scratch.lo = lo_t.into_f32();
+        be.scratch.hi = hi_t.into_f32();
+        be.scratch.mm = mm_t.into_f32();
+        g.x = xt.into_f32();
+        g.pos = pos_t.into_i32();
+        let outs = res?;
         // outs: q [B,Hq,Dh], k [B,Hkv,Dh], v [B,Hkv,Dh], scores [B,Hkv,NB]
-        let q = outs[0].as_f32();
         let kk = outs[1].as_f32();
         let vv = outs[2].as_f32();
         let scores = outs[3].as_f32();
@@ -492,18 +598,25 @@ impl<'s> PjrtSession<'s> {
             )?;
         }
 
-        // ---- select + gather ----
-        let mut gk = vec![0.0f32; b_pad * hkv * s_len * dh];
-        let mut gv = vec![0.0f32; b_pad * hkv * s_len * dh];
-        let mut gm = vec![NEG_INF; b_pad * hkv * s_len];
+        // ---- select + gather (recycled top-k + staging buffers) ----
+        let mut gk = std::mem::take(&mut be.scratch.gk);
+        let mut gv = std::mem::take(&mut be.scratch.gv);
+        let mut gm = std::mem::take(&mut be.scratch.gm);
+        gk.clear();
+        gk.resize(b_pad * hkv * s_len * dh, 0.0);
+        gv.clear();
+        gv.resize(b_pad * hkv * s_len * dh, 0.0);
+        gm.clear();
+        gm.resize(b_pad * hkv * s_len, NEG_INF);
+        let mut sel = std::mem::take(&mut be.scratch.sel);
+        sel.resize_with(hkv, Vec::new);
+        let mut gather_err = None;
         for (i, id) in g.ids.iter().enumerate() {
             let n_sealed = be.kv.n_sealed(*id, layer);
-            let sel: Vec<Vec<u32>> = (0..hkv)
-                .map(|h| {
-                    let row = &scores[(i * hkv + h) * nb..(i * hkv + h + 1) * nb];
-                    top_k_blocks_fast(row, n_sealed, budget.saturating_sub(1))
-                })
-                .collect();
+            for (h, out) in sel.iter_mut().enumerate() {
+                let row = &scores[(i * hkv + h) * nb..(i * hkv + h + 1) * nb];
+                top_k_blocks_fast_into(row, n_sealed, budget.saturating_sub(1), out);
+            }
             for (h, sh) in sel.iter().enumerate() {
                 for &blk in sh {
                     g.ws_items[i].push((layer as u16, h as u16, blk));
@@ -516,19 +629,29 @@ impl<'s> PjrtSession<'s> {
             let gk_s = &mut gk[i * hkv * s_len * dh..(i + 1) * hkv * s_len * dh];
             let gv_s = &mut gv[i * hkv * s_len * dh..(i + 1) * hkv * s_len * dh];
             let gm_s = &mut gm[i * hkv * s_len..(i + 1) * hkv * s_len];
-            be.kv.gather_into(*id, layer, &sel, k_bucket, gk_s, gv_s, gm_s)?;
+            if let Err(e) = be.kv.gather_into(*id, layer, &sel, k_bucket, gk_s, gv_s, gm_s) {
+                gather_err = Some(e);
+                break;
+            }
+        }
+        be.scratch.sel = sel;
+        if let Some(e) = gather_err {
+            // put the staging buffers back before failing: the typed
+            // rollback+retry path must not churn the recycled scratch
+            be.scratch.gk = gk;
+            be.scratch.gv = gv;
+            be.scratch.gm = gm;
+            return Err(e.into());
         }
 
         // ---- sparse attention + FFN ----
-        let x_prev = std::mem::take(&mut g.x);
-        let xt = HostTensor::f32(vec![b_pad, d], x_prev);
-        let q_t = HostTensor::f32(vec![b_pad, hq, dh], q.to_vec());
+        let xt = HostTensor::f32(vec![b_pad, d], std::mem::take(&mut g.x));
         let gk_t = HostTensor::f32(vec![b_pad, hkv, s_len, dh], gk);
         let gv_t = HostTensor::f32(vec![b_pad, hkv, s_len, dh], gv);
         let gm_t = HostTensor::f32(vec![b_pad, hkv, s_len], gm);
         let inputs = [
             MixedInput::Tensor(&xt),
-            MixedInput::Tensor(&q_t),
+            MixedInput::Tensor(&outs[0]), // q, straight from decode_qkv
             MixedInput::Tensor(&gk_t),
             MixedInput::Tensor(&gv_t),
             MixedInput::Tensor(&gm_t),
@@ -538,10 +661,14 @@ impl<'s> PjrtSession<'s> {
             MixedInput::Weight(be.wname(layer, 7)), // w_up
             MixedInput::Weight(be.wname(layer, 8)), // w_down
         ];
-        let outs = be
+        let res = be
             .rt
-            .execute_mixed(&format!("decode_attend_{b_pad}_{k_bucket}"), &inputs)?;
-        g.x = outs[0].as_f32().to_vec();
+            .execute_mixed(&format!("decode_attend_{b_pad}_{k_bucket}"), &inputs);
+        be.scratch.gk = gk_t.into_f32();
+        be.scratch.gv = gv_t.into_f32();
+        be.scratch.gm = gm_t.into_f32();
+        let mut aouts = res?;
+        g.x = aouts.swap_remove(0).into_f32();
         Ok(())
     }
 
@@ -595,15 +722,38 @@ impl<'s> PjrtSession<'s> {
         out.prefetch_wasted = iter.prefetch_wasted;
         out.prefetch_deferred = iter.prefetch_deferred;
         out.iter_time_s = self.t0.elapsed().as_secs_f64();
+        // rolled-back attempts of this iteration are charged on top of
+        // the committed wall time by the engine
+        out.abort_time_s = std::mem::take(&mut self.be.aborted_time_s);
         Ok(out)
     }
 
-    /// Restore host-side snapshots and undo the KV transaction.
+    /// Restore host-side snapshots (tokens + moved-out activation) and
+    /// undo the KV transaction. The aborted wall time is charged to the
+    /// serving clock via the next commit / `abort_iteration`.
     fn undo(&mut self) {
-        for (id, last_token, hidden) in self.snap.drain(..) {
+        self.be.aborted_time_s += self.t0.elapsed().as_secs_f64();
+        for (id, last_token) in self.snap.drain(..) {
             if let Some(st) = self.be.reqs.get_mut(&id) {
                 st.last_token = last_token;
-                st.hidden = hidden;
+                // stashes recorded THIS step are undone; the pre-step
+                // stash (if one was moved out) is restored below
+                st.hidden = None;
+            }
+        }
+        let mut restore = self.hidden_orig.take();
+        if restore.is_none() && self.pf_layers_run == 0 {
+            // the stash was moved into the session but no layer consumed
+            // it yet: the session state still IS the pre-step activation
+            if let (Some(pf), Some(work)) = (self.pf.take(), self.batch.prefill.as_ref()) {
+                if pf.from_stash {
+                    restore = Some((work.req(), (pf.x, pf.t_pad, pf.valid)));
+                }
+            }
+        }
+        if let Some((id, hidden)) = restore {
+            if let Some(st) = self.be.reqs.get_mut(&id) {
+                st.hidden = Some(hidden);
             }
         }
         self.be.kv.rollback_txn();
@@ -611,9 +761,10 @@ impl<'s> PjrtSession<'s> {
 }
 
 impl StepSession for PjrtSession<'_> {
-    /// Stage the batch decodes' predicted working sets — recency-ranked
-    /// `(layer, head, block)` unions — as asynchronous FlashH2D copies,
-    /// FCFS; then the next-batch hints with leftover budget, deferred.
+    /// Stage the batch decodes' predicted working sets — ranked
+    /// `(layer, head, block)` unions (recency order, frequency-blended
+    /// when configured) — as asynchronous FlashH2D copies, FCFS; then
+    /// the next-batch hints with leftover budget, deferred.
     fn stage(&mut self, hints: &StageHints) -> usize {
         debug_assert!(!self.staged, "stage() called twice");
         self.staged = true;
@@ -629,13 +780,15 @@ impl StepSession for PjrtSession<'_> {
             .min(be.kv.cache_capacity_slots() / 2);
         // over-collect by 2x: already-resident plan entries are skipped
         // by staging without consuming its budget
-        let plan = be.staging_plan(&self.batch.decodes, cap.saturating_mul(2));
+        let mut plan = std::mem::take(&mut be.scratch.plan);
+        be.staging_plan_into(&self.batch.decodes, cap.saturating_mul(2), &mut plan);
         let mut staged = be.kv.prefetch_working_set(&plan, cap, headroom, false);
         let rem = cap.saturating_sub(staged);
         if rem > 0 && !hints.next_decodes.is_empty() {
-            let plan = be.staging_plan(&hints.next_decodes, rem.saturating_mul(2));
+            be.staging_plan_into(&hints.next_decodes, rem.saturating_mul(2), &mut plan);
             staged += be.kv.prefetch_working_set(&plan, rem, headroom, true);
         }
+        be.scratch.plan = plan;
         staged
     }
 
@@ -647,6 +800,7 @@ impl StepSession for PjrtSession<'_> {
             super::backend::prefill_layer_range(work, self.be.spec().n_layers);
         self.pf_init(layer_start)?;
         self.pf_layer(layer_start)?;
+        self.pf_layers_run += 1;
         if layer_start + 1 == last_layer {
             self.pf_finish()?;
         }
@@ -715,7 +869,8 @@ impl Backend for PjrtBackend {
             RealReq {
                 last_token: 0,
                 hidden: None,
-                ws: WorkingSetTracker::new(self.cfg.ws_window),
+                ws: WorkingSetTracker::new(self.cfg.ws_window)
+                    .with_freq_ranking(self.cfg.prefetch_freq_ranking),
             },
         );
         Ok(())
@@ -726,13 +881,16 @@ impl Backend for PjrtBackend {
         self.reqs.remove(&req);
     }
 
-    fn abort_iteration(&mut self) {
+    fn abort_iteration(&mut self) -> f64 {
         // discard the aborted attempts' transfer stats and retire their
         // stages — including deferred ones, which the first
         // end_iteration only promotes — so the next committed step's
         // outcome starts clean
         let _ = self.kv.end_iteration();
         let _ = self.kv.end_iteration();
+        // the burnt wall time is handed to the engine (the serving clock
+        // still advances even though nothing committed)
+        std::mem::take(&mut self.aborted_time_s)
     }
 
     fn mem_stats(&self) -> MemStats {
@@ -794,13 +952,10 @@ impl Backend for PjrtBackend {
             return Err(MemoryError::DramExhausted { req }.into());
         }
 
-        // Host-side snapshots of every participant (rollback support).
-        // The carried prefill activation is cloned only when the batch
-        // has decodes: in a prefill-only batch the only possible
-        // rollback victim is the prefill request itself, which is then
-        // evicted — its pre-step activation is never needed again, so
-        // the multi-megabyte copy can be skipped on that path.
-        let keep_hidden = !batch.decodes.is_empty();
+        // Host-side snapshots of every participant: last tokens only.
+        // The carried prefill activation is NOT cloned (the old hybrid-
+        // batch multi-megabyte copy): it is moved out by the session on
+        // first use and moved back on rollback (copy-on-write by move).
         let mut snap = Vec::new();
         let mut participants: Vec<ReqId> = batch.decodes.clone();
         if let Some(w) = &batch.prefill {
@@ -808,8 +963,7 @@ impl Backend for PjrtBackend {
         }
         for id in participants {
             if let Some(st) = self.reqs.get(&id) {
-                let hidden = if keep_hidden { st.hidden.clone() } else { None };
-                snap.push((id, st.last_token, hidden));
+                snap.push((id, st.last_token));
             }
         }
 
@@ -823,6 +977,8 @@ impl Backend for PjrtBackend {
             t0: Instant::now(),
             tokens: Vec::new(),
             snap,
+            hidden_orig: None,
+            pf_layers_run: 0,
             pf: None,
             dec: None,
             last_loaded,

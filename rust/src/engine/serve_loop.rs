@@ -45,6 +45,10 @@ impl Engine {
             }
 
             let outcome = self.core.step(self.clock_s).map_err(anyhow::Error::new)?;
+            // the clock advances even for abandoned iterations: aborted
+            // (rolled-back) attempts burn real time (iter_time_s is 0 on
+            // a plain idle/blocked step)
+            self.clock_s += outcome.iter_time_s;
             if !outcome.ran_batch {
                 // typed rejections/evictions ARE progress: requests left
                 // the system, re-plan immediately
@@ -62,7 +66,6 @@ impl Engine {
                 }
                 anyhow::bail!("scheduler deadlock: work pending but empty batch");
             }
-            self.clock_s += outcome.iter_time_s;
 
             if self.clock_s > max_clock_s {
                 break;

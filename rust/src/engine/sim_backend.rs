@@ -16,9 +16,22 @@
 //! phases — each layer's slice of a missed group's bytes is needed when
 //! that layer's gather runs, which is exactly what the per-layer event
 //! model ([`crate::sim::layered_iter`]) overlaps with the remaining
-//! layers' compute. Rollback restores every batch request's simulated
-//! state (KV length, selection RNG, working-set history) and the
-//! residency cache, so a retried batch replays identically.
+//! layers' compute.
+//!
+//! ## Zero-clone steady state
+//!
+//! The decode critical path performs no clones and no steady-state
+//! allocation: rollback support is an incremental undo log — `len` is
+//! journaled per touched request and `SelectionModel` /
+//! `WorkingSetTracker` arm their own `begin_txn` record-and-revert
+//! scopes — instead of the old per-iteration clone snapshots, and every
+//! per-step working buffer (selection draw, working-set items, ranked
+//! staging plan, per-layer accumulators, residency log) lives in a
+//! recycled [`StepScratch`] owned by the backend. Rollback restores
+//! every batch request's simulated state (KV length, selection RNG,
+//! working-set history) and the residency cache byte-identically, so a
+//! retried batch replays exactly; the aborted attempt's burnt compute is
+//! surfaced as `BatchOutcome::abort_time_s` on the next commit.
 
 use std::collections::HashMap;
 
@@ -29,6 +42,7 @@ use crate::memory::staging_policy::{stage_block, StageAdmission, StagingPolicy};
 use crate::memory::{BlockKey, LruCache, MemoryError, PrefetchEngine, ReqId};
 use crate::scheduler::{Batch, PrefillWork, Request};
 use crate::sim::{layered_iter, two_stream_iter, CostModel, SelectionModel};
+use crate::sparse::working_set::SelItem;
 use crate::sparse::WorkingSetTracker;
 
 use super::backend::{
@@ -45,11 +59,26 @@ struct SimReq {
     budget_groups: usize,
 }
 
-/// Pre-step snapshot of one batch participant (session rollback).
-struct SimReqSnap {
-    len: usize,
-    selection: SelectionModel,
-    ws: WorkingSetTracker,
+/// Recycled per-step working buffers: cleared (never freed) by
+/// `begin_step`, so steady-state decode iterations allocate nothing.
+#[derive(Default)]
+struct StepScratch {
+    /// Undo log: (request, pre-step KV length, sel/ws txns armed).
+    touched: Vec<(ReqId, usize, bool)>,
+    /// (inserted, evicted-by-that-insert) residency log for rollback.
+    cache_log: Vec<(BlockKey, Option<BlockKey>)>,
+    /// Per-layer accumulation driving the event model.
+    layer_compute: Vec<f64>,
+    layer_miss_blocks: Vec<usize>,
+    layer_demand: Vec<f64>,
+    /// Selection-draw buffer (`next_selection_into`).
+    sel: Vec<u32>,
+    /// Working-set item buffer (`record_step_from`).
+    ws_items: Vec<SelItem>,
+    /// Ranked working-set buffer (`ranked_blocks_capped_into`).
+    ranked: Vec<SelItem>,
+    /// Per-request effective KV tokens of the decode batch.
+    kv_tokens: Vec<usize>,
 }
 
 pub struct SimBackend {
@@ -69,6 +98,11 @@ pub struct SimBackend {
     staged_groups: usize,
     /// Groups staged for the NEXT iteration (cross-iteration hints).
     staged_deferred_groups: usize,
+    /// Recycled per-step buffers (see [`StepScratch`]).
+    scratch: StepScratch,
+    /// Compute burnt by rolled-back sessions, awaiting the next commit's
+    /// `abort_time_s` (or `abort_iteration`).
+    aborted_time_s: f64,
     /// Cumulative counters.
     pub total_blocks_loaded: u64,
 }
@@ -89,6 +123,8 @@ impl SimBackend {
             prefetcher: PrefetchEngine::new(0), // no real bytes to copy
             staged_groups: 0,
             staged_deferred_groups: 0,
+            scratch: StepScratch::default(),
+            aborted_time_s: 0.0,
             total_blocks_loaded: 0,
         }
     }
@@ -118,13 +154,8 @@ impl SimBackend {
     /// Touch the cache for a request's selected groups; returns misses.
     /// Hits on staged groups consume their prefetch pin (the staged
     /// bytes already paid for the transfer on the overlapped stream).
-    /// Inserts are logged for session rollback.
-    fn touch_groups(
-        &mut self,
-        req: ReqId,
-        groups: &[u32],
-        cache_log: &mut Vec<(BlockKey, Option<BlockKey>)>,
-    ) -> usize {
+    /// Inserts are logged (in the recycled scratch) for session rollback.
+    fn touch_groups(&mut self, req: ReqId, groups: &[u32]) -> usize {
         let mut misses = 0;
         for &g in groups {
             let key = BlockKey::new(req, 0, 0, g);
@@ -139,7 +170,7 @@ impl SimBackend {
                 // the demand load)
                 if self.cache.can_accept() {
                     let evicted = self.cache.insert(key, ()).map(|(k, ())| k);
-                    cache_log.push((key, evicted));
+                    self.scratch.cache_log.push((key, evicted));
                 }
             }
         }
@@ -150,7 +181,8 @@ impl SimBackend {
     /// FCFS), then `next` (cross-iteration hints, deferred) with the
     /// leftover budget — admission through the shared
     /// [`StagingPolicy`], so this path cannot drift from
-    /// `KvManager::prefetch_working_set`.
+    /// `KvManager::prefetch_working_set`. Ranking reuses the scratch
+    /// buffer (recency order, frequency-blended when configured).
     fn stage_working_sets(&mut self, current: &[ReqId], next: &[ReqId]) -> usize {
         if !(self.cfg.prefetch && self.cfg.offload && self.cfg.sparse_attention) {
             return 0;
@@ -161,6 +193,7 @@ impl SimBackend {
             // demand misses can still become resident behind the stages
             headroom: self.budget_groups().min(self.cache.capacity() / 2),
         };
+        let mut ranked = std::mem::take(&mut self.scratch.ranked);
         let mut staged = 0usize;
         let mut deferred = 0usize;
         'all: for (ids, defer) in [(current, false), (next, true)] {
@@ -173,11 +206,11 @@ impl SimBackend {
                 if want == 0 {
                     break 'all;
                 }
-                let ranked = match self.reqs.get(&id) {
-                    Some(r) => r.ws.ranked_blocks_capped(want),
+                match self.reqs.get_mut(&id) {
+                    Some(r) => r.ws.ranked_blocks_capped_into(want, &mut ranked),
                     None => continue,
-                };
-                for (_, _, g) in ranked {
+                }
+                for &(_, _, g) in &ranked {
                     let key = BlockKey::new(id, 0, 0, g);
                     match policy.admit(&self.cache, &key, staged + deferred) {
                         StageAdmission::Stop => break 'all,
@@ -200,6 +233,7 @@ impl SimBackend {
                 }
             }
         }
+        self.scratch.ranked = ranked;
         self.staged_groups += staged;
         self.staged_deferred_groups += deferred;
         staged + deferred
@@ -211,18 +245,13 @@ impl SimBackend {
     }
 }
 
-/// One in-flight simulated batch (see [`StepSession`]).
+/// One in-flight simulated batch (see [`StepSession`]). All per-step
+/// buffers live in the backend's recycled [`StepScratch`]; the session
+/// itself holds only the aggregate decode attribution.
 struct SimSession<'s> {
     be: &'s mut SimBackend,
     batch: &'s Batch,
     requests: &'s HashMap<ReqId, Request>,
-    /// Lazily captured pre-step state of every mutated request.
-    snap: HashMap<ReqId, SimReqSnap>,
-    /// (inserted, evicted-by-that-insert) residency log for rollback.
-    cache_log: Vec<(BlockKey, Option<BlockKey>)>,
-    /// Per-layer accumulation driving the event model.
-    layer_compute: Vec<f64>,
-    layer_miss_blocks: Vec<usize>,
     tokens: Vec<(ReqId, Option<i32>)>,
     /// Aggregate decode work, computed once at `decode_layer(0)` and
     /// attributed uniformly across layers (the sim's selection process
@@ -236,48 +265,40 @@ struct SimSession<'s> {
 }
 
 impl<'s> SimSession<'s> {
-    fn snapshot(&mut self, id: ReqId) {
-        if self.snap.contains_key(&id) {
-            return;
-        }
-        if let Some(r) = self.be.reqs.get(&id) {
-            self.snap.insert(
-                id,
-                SimReqSnap {
-                    len: r.len,
-                    selection: r.selection.clone(),
-                    ws: r.ws.clone(),
-                },
-            );
-        }
-    }
-
     /// Aggregate decode work for the whole batch (selection, cache
-    /// touches, KV growth); run once when layer 0 is driven.
+    /// touches, KV growth); run once when layer 0 is driven. Arms each
+    /// decode's undo scopes (len journal + sel/ws txns) before its first
+    /// mutation — the zero-clone replacement for the old snapshots.
     fn run_decode_aggregate(&mut self) -> Result<()> {
         let bs = self.be.spec().block_size;
         let sparse = self.be.cfg.sparse_attention;
         let offload = self.be.cfg.offload;
         let n_layers = self.be.spec().n_layers;
-        let mut kv_tokens = Vec::with_capacity(self.batch.decodes.len());
+        let mut kv_tokens = std::mem::take(&mut self.be.scratch.kv_tokens);
+        let mut sel = std::mem::take(&mut self.be.scratch.sel);
+        let mut ws_items = std::mem::take(&mut self.be.scratch.ws_items);
+        kv_tokens.clear();
         let mut miss_groups = 0usize;
-        for &id in &self.batch.decodes {
-            self.snapshot(id);
+        for &id in self.batch.decodes.iter() {
             let (n_sealed, len) = {
                 let r = self.be.reqs.get(&id).expect("unregistered");
                 (r.len / bs, r.len)
             };
+            self.be.scratch.touched.push((id, len, sparse));
             if sparse {
-                let sel = {
+                {
                     let r = self.be.reqs.get_mut(&id).unwrap();
+                    r.selection.begin_txn();
+                    r.ws.begin_txn();
                     let budget_groups = r.budget_groups;
-                    r.selection.next_selection(n_sealed, budget_groups)
-                };
-                if offload {
-                    miss_groups += self.be.touch_groups(id, &sel, &mut self.cache_log);
+                    r.selection.next_selection_into(n_sealed, budget_groups, &mut sel);
                 }
-                let r = self.be.reqs.get_mut(&id).unwrap();
-                r.ws.record_step(sel.iter().map(|&b| (0u16, 0u16, b)).collect());
+                if offload {
+                    miss_groups += self.be.touch_groups(id, &sel);
+                }
+                ws_items.clear();
+                ws_items.extend(sel.iter().map(|&b| (0u16, 0u16, b)));
+                self.be.reqs.get_mut(&id).unwrap().ws.record_step_from(&ws_items);
                 kv_tokens.push((sel.len() * bs + len % bs).min(len).max(1));
             } else {
                 kv_tokens.push(len.max(1));
@@ -291,6 +312,9 @@ impl<'s> SimSession<'s> {
             .decode_iter_time(self.batch.decodes.len(), &kv_tokens);
         self.decode_compute_per_layer = compute / n_layers as f64;
         self.decode_miss_groups = miss_groups;
+        self.be.scratch.kv_tokens = kv_tokens;
+        self.be.scratch.sel = sel;
+        self.be.scratch.ws_items = ws_items;
         Ok(())
     }
 }
@@ -309,7 +333,6 @@ impl StepSession for SimSession<'_> {
         debug_assert_eq!(layer_end, layer_start + 1, "engine drives one layer per segment");
         let work = self.batch.prefill.as_ref().expect("no prefill planned");
         let req_id = work.req();
-        self.snapshot(req_id);
         let spec = self.be.spec().clone();
         let bs = spec.block_size;
         let save_f = self
@@ -326,13 +349,17 @@ impl StepSession for SimSession<'_> {
                 // the groups span all layers, so touch once (first driven
                 // layer) and attribute each layer its slice of the bytes
                 if layer == 0 && self.be.cfg.offload && *start > 0 {
-                    let past_groups: Vec<u32> = (0..(*start / bs) as u32).collect();
-                    self.chunk_miss_groups =
-                        self.be.touch_groups(req_id, &past_groups, &mut self.cache_log);
+                    let mut past = std::mem::take(&mut self.be.scratch.sel);
+                    past.clear();
+                    past.extend(0..(*start / bs) as u32);
+                    self.chunk_miss_groups = self.be.touch_groups(req_id, &past);
+                    self.be.scratch.sel = past;
                 }
                 miss_blocks += self.chunk_miss_groups * spec.n_kv_heads;
                 if layer + 1 == spec.n_layers {
-                    let r = self.be.reqs.get_mut(&req_id).expect("unregistered");
+                    let prev = self.be.reqs.get(&req_id).expect("unregistered").len;
+                    self.be.scratch.touched.push((req_id, prev, false));
+                    let r = self.be.reqs.get_mut(&req_id).unwrap();
                     r.len += len;
                     if *is_last {
                         self.tokens.push((req_id, None));
@@ -351,14 +378,16 @@ impl StepSession for SimSession<'_> {
                 // layer-segmented prefill writes straight to DRAM and
                 // evicts immediately: no cache traffic
                 if layer + 1 == *seg_end && *is_last {
-                    let r = self.be.reqs.get_mut(&req_id).expect("unregistered");
+                    let prev = self.be.reqs.get(&req_id).expect("unregistered").len;
+                    self.be.scratch.touched.push((req_id, prev, false));
+                    let r = self.be.reqs.get_mut(&req_id).unwrap();
                     r.len = self.requests[&req_id].prompt_len;
                     self.tokens.push((req_id, None));
                 }
             }
         }
-        self.layer_compute[layer] += compute_s;
-        self.layer_miss_blocks[layer] += miss_blocks;
+        self.be.scratch.layer_compute[layer] += compute_s;
+        self.be.scratch.layer_miss_blocks[layer] += miss_blocks;
         Ok(PhaseEvent {
             layer_start,
             layer_end,
@@ -376,8 +405,8 @@ impl StepSession for SimSession<'_> {
         // one missed group spans all layers: each layer's gather needs
         // its per-head slice of the group's bytes
         let miss_blocks = self.decode_miss_groups * self.be.spec().n_kv_heads;
-        self.layer_compute[layer] += compute_s;
-        self.layer_miss_blocks[layer] += miss_blocks;
+        self.be.scratch.layer_compute[layer] += compute_s;
+        self.be.scratch.layer_miss_blocks[layer] += miss_blocks;
         Ok(PhaseEvent {
             layer_start: layer,
             layer_end: layer + 1,
@@ -388,7 +417,16 @@ impl StepSession for SimSession<'_> {
     }
 
     fn commit(self: Box<Self>) -> Result<BatchOutcome> {
-        let be = self.be;
+        let SimSession { be, tokens, hits_at_start, .. } = *self;
+        // the step is final: close every armed undo scope
+        for &(id, _, armed) in &be.scratch.touched {
+            if armed {
+                if let Some(r) = be.reqs.get_mut(&id) {
+                    r.selection.commit_txn();
+                    r.ws.commit_txn();
+                }
+            }
+        }
         let mut out = BatchOutcome::default();
 
         // ------------- PCIe streams & iteration timing -------------
@@ -398,27 +436,32 @@ impl StepSession for SimSession<'_> {
         let staged_groups = std::mem::take(&mut be.staged_groups);
         let deferred_groups = std::mem::take(&mut be.staged_deferred_groups);
         let prefetch_blocks = (staged_groups + deferred_groups) * be.group_blocks;
-        let miss_blocks: usize = self.layer_miss_blocks.iter().sum();
+        let miss_blocks: usize = be.scratch.layer_miss_blocks.iter().sum();
         let prefetch_s = be.cost.load_time(be.cfg.transfer, prefetch_blocks);
         let demand_s = be.cost.load_time(be.cfg.transfer, miss_blocks);
-        let compute_s: f64 = self.layer_compute.iter().sum();
+        let compute_s: f64 = be.scratch.layer_compute.iter().sum();
         // per-layer demand slices, proportional to where the misses were
-        // discovered (the total load time stays the engine-modeled one)
-        let layer_demand: Vec<f64> = if miss_blocks == 0 {
-            vec![0.0; self.layer_miss_blocks.len()]
+        // discovered (the total load time stays the engine-modeled one);
+        // built into the recycled buffer
+        be.scratch.layer_demand.clear();
+        if miss_blocks == 0 {
+            be.scratch.layer_demand.resize(be.scratch.layer_miss_blocks.len(), 0.0);
         } else {
-            self.layer_miss_blocks
-                .iter()
-                .map(|&m| demand_s * m as f64 / miss_blocks as f64)
-                .collect()
-        };
+            for &m in &be.scratch.layer_miss_blocks {
+                be.scratch.layer_demand.push(demand_s * m as f64 / miss_blocks as f64);
+            }
+        }
         let coarse = two_stream_iter(compute_s, prefetch_s, demand_s);
         let timing = match be.cfg.iter_model {
             IterModel::Coarse => coarse,
-            IterModel::PerLayer => layered_iter(&self.layer_compute, &layer_demand, prefetch_s),
+            IterModel::PerLayer => layered_iter(
+                &be.scratch.layer_compute,
+                &be.scratch.layer_demand,
+                prefetch_s,
+            ),
         };
 
-        out.tokens = self.tokens;
+        out.tokens = tokens;
         out.blocks_loaded = miss_blocks + prefetch_blocks;
         out.load_time_s = demand_s + prefetch_s;
         out.stall_time_s = timing.stall_s;
@@ -427,6 +470,9 @@ impl StepSession for SimSession<'_> {
         out.iter_time_s = timing.iter_time_s;
         out.prefetch_blocks = prefetch_blocks;
         out.prefetch_deferred = deferred_groups * be.group_blocks;
+        // rolled-back attempts of this iteration surface here and are
+        // charged to the serving clock by the engine
+        out.abort_time_s = std::mem::take(&mut be.aborted_time_s);
         be.total_blocks_loaded += (miss_blocks + prefetch_blocks) as u64;
 
         // retire unconsumed stages: wasted this iteration, but they stay
@@ -437,28 +483,36 @@ impl StepSession for SimSession<'_> {
             be.cache.unpin(key);
         }
         out.prefetch_hits =
-            (be.prefetcher.stats.hits - self.hits_at_start) as usize * be.group_blocks;
+            (be.prefetcher.stats.hits - hits_at_start) as usize * be.group_blocks;
         out.prefetch_wasted = wasted.len() * be.group_blocks;
         Ok(out)
     }
 
-    fn rollback(mut self: Box<Self>) {
-        // restore every mutated request's simulated state; a released
-        // (evicted) victim is simply gone
-        for (id, snap) in self.snap.drain() {
-            if let Some(r) = self.be.reqs.get_mut(&id) {
-                r.len = snap.len;
-                r.selection = snap.selection;
-                r.ws = snap.ws;
+    fn rollback(self: Box<Self>) {
+        let SimSession { be, .. } = *self;
+        // the aborted attempt's burnt compute is charged to the serving
+        // clock via the next committed outcome's abort_time_s
+        be.aborted_time_s += be.scratch.layer_compute.iter().sum::<f64>();
+        // restore every mutated request's simulated state from the undo
+        // log (no clones were taken); a released (evicted) victim is
+        // simply gone
+        for &(id, len, armed) in &be.scratch.touched {
+            if let Some(r) = be.reqs.get_mut(&id) {
+                r.len = len;
+                if armed {
+                    r.selection.rollback_txn();
+                    r.ws.rollback_txn();
+                }
             }
         }
+        be.scratch.touched.clear();
         // undo residency churn in reverse order; re-inserting an evicted
         // group is free in the simulator (residency is bookkeeping only)
-        for (inserted, evicted) in self.cache_log.drain(..).rev() {
-            self.be.cache.remove(&inserted);
+        while let Some((inserted, evicted)) = be.scratch.cache_log.pop() {
+            be.cache.remove(&inserted);
             if let Some(ev) = evicted {
-                if self.be.reqs.contains_key(&ev.req) && !self.be.cache.contains(&ev) {
-                    self.be.cache.insert(ev, ());
+                if be.reqs.contains_key(&ev.req) && !be.cache.contains(&ev) {
+                    be.cache.insert(ev, ());
                 }
             }
         }
@@ -487,7 +541,8 @@ impl Backend for SimBackend {
             SimReq {
                 len: 0,
                 selection: SelectionModel::new(self.seed ^ req.id as u64),
-                ws: WorkingSetTracker::new(self.cfg.ws_window),
+                ws: WorkingSetTracker::new(self.cfg.ws_window)
+                    .with_freq_ranking(self.cfg.prefetch_freq_ranking),
                 budget_groups,
             },
         );
@@ -504,7 +559,7 @@ impl Backend for SimBackend {
         self.cache.remove_request(req);
     }
 
-    fn abort_iteration(&mut self) {
+    fn abort_iteration(&mut self) -> f64 {
         // the abandoned iteration's staging accounting must not leak
         // into the next committed step's outcome: retire the current
         // stages AND the deferred ones (the first end_iteration promotes
@@ -517,6 +572,9 @@ impl Backend for SimBackend {
                 self.cache.unpin(&key);
             }
         }
+        // the burnt compute is handed to the engine (the serving clock
+        // still advances even though nothing committed)
+        std::mem::take(&mut self.aborted_time_s)
     }
 
     fn mem_stats(&self) -> MemStats {
@@ -566,14 +624,18 @@ impl Backend for SimBackend {
     ) -> Result<Box<dyn StepSession + 's>> {
         let n_layers = self.spec().n_layers;
         let hits_at_start = self.prefetcher.stats.hits;
+        // reset the recycled per-step scratch (clear, never free)
+        let s = &mut self.scratch;
+        s.touched.clear();
+        s.cache_log.clear();
+        s.layer_compute.clear();
+        s.layer_compute.resize(n_layers, 0.0);
+        s.layer_miss_blocks.clear();
+        s.layer_miss_blocks.resize(n_layers, 0);
         Ok(Box::new(SimSession {
             be: self,
             batch,
             requests,
-            snap: HashMap::new(),
-            cache_log: Vec::new(),
-            layer_compute: vec![0.0; n_layers],
-            layer_miss_blocks: vec![0; n_layers],
             tokens: Vec::new(),
             decode_compute_per_layer: 0.0,
             decode_miss_groups: 0,
@@ -590,6 +652,8 @@ mod tests {
     use crate::config::serving::TransferKind;
     use crate::engine::backend::drive_step;
     use crate::scheduler::Phase;
+    use crate::sim::selection_clones_this_thread;
+    use crate::sparse::ws_clones_this_thread;
 
     fn mk(cfg: ServingConfig) -> SimBackend {
         SimBackend::new(cfg, ModelSpec::lwm_7b(), HardwareSpec::a100_40gb())
@@ -639,6 +703,36 @@ mod tests {
         assert!(
             warm_loads < first.blocks_loaded / 2,
             "locality must cut loads: {warm_loads} vs {first:?}"
+        );
+    }
+
+    #[test]
+    fn steady_state_decode_iterations_are_clone_free() {
+        // acceptance criterion: the decode hot path performs ZERO clones
+        // of SelectionModel / WorkingSetTracker once warm (the undo-log
+        // snapshots replaced the per-iteration clone snapshots). The
+        // probes are thread-local, so parallel tests cannot interfere.
+        let mut b = mk(ServingConfig::sparseserve(2048, 2048, 32));
+        let reqs = prefill_all(&mut b, 1, 16_000);
+        let batch = Batch { decodes: vec![1], prefill: None };
+        for _ in 0..3 {
+            run(&mut b, &batch, &reqs); // warm up
+        }
+        let sel0 = selection_clones_this_thread();
+        let ws0 = ws_clones_this_thread();
+        for _ in 0..10 {
+            let out = run(&mut b, &batch, &reqs);
+            assert_eq!(out.tokens.len(), 1);
+        }
+        assert_eq!(
+            selection_clones_this_thread(),
+            sel0,
+            "steady-state decode cloned a SelectionModel"
+        );
+        assert_eq!(
+            ws_clones_this_thread(),
+            ws0,
+            "steady-state decode cloned a WorkingSetTracker"
         );
     }
 
@@ -986,5 +1080,73 @@ mod tests {
         let out = run(&mut b, &batch, &reqs);
         assert_eq!(out.tokens, vec![(1, None)]);
         assert_eq!(b.reqs[&1].len, len_before + 1);
+    }
+
+    #[test]
+    fn undo_log_rollback_matches_clone_snapshot_byte_for_byte() {
+        // rollback-equivalence: the incremental undo logs must restore
+        // exactly what the old clone-snapshot path restored — identical
+        // working-set state AND an identical future selection sequence
+        let mut b = mk(ServingConfig::sparseserve(2048, 2048, 32));
+        let reqs = prefill_all(&mut b, 1, 16_000);
+        let batch = Batch { decodes: vec![1], prefill: None };
+        for _ in 0..4 {
+            run(&mut b, &batch, &reqs); // build history
+        }
+        // the old path: clone the whole per-request state up front
+        let sel_snapshot = b.reqs[&1].selection.clone();
+        let ws_snapshot = b.reqs[&1].ws.clone();
+        let len_snapshot = b.reqs[&1].len;
+
+        let mut sess = b.begin_step(&batch, &reqs).unwrap();
+        sess.stage(&StageHints::default());
+        for layer in 0..32 {
+            sess.decode_layer(layer).unwrap();
+        }
+        sess.rollback();
+
+        assert_eq!(b.reqs[&1].len, len_snapshot);
+        assert_eq!(b.reqs[&1].ws.steps_recorded(), ws_snapshot.steps_recorded());
+        assert_eq!(b.reqs[&1].ws.ranked_blocks(), ws_snapshot.ranked_blocks());
+        // identical future draws prove the RNG/pools were restored exactly
+        let mut restored = b.reqs[&1].selection.clone();
+        let mut reference = sel_snapshot;
+        for _ in 0..5 {
+            assert_eq!(
+                restored.next_selection(1000, 64),
+                reference.next_selection(1000, 64),
+                "selection state diverged from the clone snapshot"
+            );
+        }
+    }
+
+    #[test]
+    fn rolled_back_compute_is_charged_as_abort_time() {
+        let mut b = mk(ServingConfig::sparseserve(2048, 2048, 32));
+        let reqs = prefill_all(&mut b, 1, 8192);
+        let batch = Batch { decodes: vec![1], prefill: None };
+        run(&mut b, &batch, &reqs); // warm
+        // drive decode phases, then abort: the burnt compute must surface
+        // on the NEXT committed outcome (the engine adds it to the clock)
+        let mut sess = b.begin_step(&batch, &reqs).unwrap();
+        sess.stage(&StageHints::default());
+        for layer in 0..32 {
+            sess.decode_layer(layer).unwrap();
+        }
+        sess.rollback();
+        let out = run(&mut b, &batch, &reqs);
+        assert!(out.abort_time_s > 0.0, "aborted compute must be charged");
+        // ...and only once
+        let out2 = run(&mut b, &batch, &reqs);
+        assert_eq!(out2.abort_time_s, 0.0, "abort charge must not persist");
+        // an abandoned iteration hands the charge to abort_iteration
+        let mut sess = b.begin_step(&batch, &reqs).unwrap();
+        sess.stage(&StageHints::default());
+        for layer in 0..32 {
+            sess.decode_layer(layer).unwrap();
+        }
+        sess.rollback();
+        assert!(b.abort_iteration() > 0.0);
+        assert_eq!(run(&mut b, &batch, &reqs).abort_time_s, 0.0);
     }
 }

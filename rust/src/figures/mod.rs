@@ -6,9 +6,11 @@
 //! A100 testbed substitute); `real` experiments execute the tiny-llm
 //! artifacts on PJRT.
 
+pub mod hotpath;
 pub mod real;
 pub mod sim_exp;
 
+pub use hotpath::{full_step_results, hotpath_doc};
 pub use real::{fig8_overlap, table1_accuracy};
 pub use sim_exp::*;
 

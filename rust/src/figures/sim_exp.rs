@@ -29,10 +29,24 @@ fn workload_for(model: &ModelSpec, rate: f64, seed: u64) -> WorkloadSpec {
 /// run covers a comparable wall-clock window.
 pub fn run_sim(cfg: ServingConfig, model: &ModelSpec, rate: f64, seed: u64) -> RunMetrics {
     let hw = HardwareSpec::a100_40gb();
+    run_sim_dram(cfg, model, rate, seed, hw.dram_bytes)
+}
+
+/// [`run_sim`] with an explicit DRAM admission budget (the
+/// admission-estimates measurement constrains it so reservations
+/// actually bind).
+pub fn run_sim_dram(
+    cfg: ServingConfig,
+    model: &ModelSpec,
+    rate: f64,
+    seed: u64,
+    dram_bytes: usize,
+) -> RunMetrics {
+    let hw = HardwareSpec::a100_40gb();
     let n = ((rate * 240.0).ceil() as usize).clamp(16, 96);
     let backend = SimBackend::new(cfg.clone(), model.clone(), hw.clone());
     let sched =
-        Scheduler::new(cfg, model.clone(), hw.hbm_kv_bytes).with_dram_capacity(hw.dram_bytes);
+        Scheduler::new(cfg, model.clone(), hw.hbm_kv_bytes).with_dram_capacity(dram_bytes);
     let engine = Engine::new(sched, Box::new(backend));
     let trace = generate(&workload_for(model, rate, seed), n, 0);
     engine.run_trace(trace, 3.0e4).unwrap().metrics
@@ -302,6 +316,27 @@ pub fn layer_model_metrics(rate: f64, seed: u64) -> (RunMetrics, RunMetrics) {
     let p = run_sim(per, &model, rate, seed);
     let c = run_sim(coarse, &model, rate, seed);
     (p, c)
+}
+
+/// Measure the admission-estimates knob on the simulate path (the serve
+/// path shares the identical `Scheduler` logic): the full system with
+/// estimate-based reservations (the `sparseserve` default) vs the same
+/// config with conservative full-lifetime reservations, under a DRAM
+/// budget tight enough that admission binds. Returns `(on, off)`
+/// metrics; the `bench` subcommand prints them and folds the headline
+/// numbers into `BENCH_hotpath.json`.
+pub fn admission_estimates_metrics(rate: f64, seed: u64) -> (RunMetrics, RunMetrics) {
+    let model = ModelSpec::lwm_7b();
+    let on = ServingConfig::sparseserve(2048, 2048, model.n_layers);
+    let mut off = on.clone();
+    off.admission_estimates = false;
+    // DRAM sized to ~6 full-lifetime reservations of the mean workload
+    // shape: conservative admission leaves real headroom on the table
+    let sizer = Scheduler::new(on.clone(), model.clone(), 0);
+    let dram = 6 * sizer.full_kv_bytes(24_000, 1024);
+    let m_on = run_sim_dram(on, &model, rate, seed, dram);
+    let m_off = run_sim_dram(off, &model, rate, seed, dram);
+    (m_on, m_off)
 }
 
 /// Iteration-model table: per-layer vs coarse stall/iteration means.

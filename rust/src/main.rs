@@ -76,10 +76,15 @@ USAGE: sparseserve <info|serve|simulate|bench-transfer> [flags]
   bench     simulator smoke benchmarks: (1) the same workload with the
             prefetcher on and off, (2) the same workload timed with the
             per-layer iteration event model vs the coarse two-stream
-            model; prints both tables and writes BENCH_prefetch.json +
-            BENCH_layer_model.json
+            model, (3) the full-step hot-path microbench (plan -> stage ->
+            per-layer decode -> commit, hybrid, and rollback+retry cases;
+            panics fail CI), (4) admission estimates on vs off under a
+            binding DRAM budget; writes BENCH_prefetch.json +
+            BENCH_layer_model.json + BENCH_hotpath.json
       --out BENCH_prefetch.json              prefetch output path
       --out-layer BENCH_layer_model.json     layer-model output path
+      --out-hotpath BENCH_hotpath.json       hot-path output path
+      --hotpath-budget 0.2                   seconds per hot-path case
       --rates 0.2,0.35                       comma-separated request rates
 
 Systems: vllm | vllm-s | vllm-so | sparseserve | sparseserve-np
@@ -304,6 +309,53 @@ fn bench(args: &Args) -> Result<()> {
     doc.insert("points".into(), Value::Arr(points));
     std::fs::write(&layer_out_path, Value::Obj(doc).to_string())?;
     println!("[bench] wrote {layer_out_path}");
+
+    // ---- full-step hot path: plan → stage → layers → commit (+ rollback) ----
+    // A panic anywhere in here fails the CI job — this is the perf gate
+    // for the zero-clone step pipeline.
+    let hotpath_out = args.get_or("out-hotpath", "BENCH_hotpath.json");
+    let hotpath_budget = args.f64("hotpath-budget", 0.2);
+    println!("== full-step hot path (SimBackend, LWM-7B) ==");
+    let results = sparseserve::figures::full_step_results(hotpath_budget);
+    for r in &results {
+        println!("{}", r.line());
+    }
+    let mut doc = match sparseserve::figures::hotpath_doc(&results) {
+        Value::Obj(doc) => doc,
+        _ => unreachable!("hotpath_doc returns an object"),
+    };
+
+    // ---- admission estimates on/off (simulate path, binding DRAM) ----
+    println!("== admission estimates on/off (LWM-7B, constrained DRAM, seed 11) ==");
+    let est_rate = *rates.last().expect("non-empty rates");
+    let (on, off) = sparseserve::figures::admission_estimates_metrics(est_rate, 11);
+    println!(
+        "rate {est_rate}: thpt {:.2} tok/s (on) vs {:.2} (off) | TTFT {:.2}s vs {:.2}s | \
+         queue {:.2}s vs {:.2}s | finished {} vs {} | evicted {} vs {}",
+        on.throughput(),
+        off.throughput(),
+        on.ttft.mean(),
+        off.ttft.mean(),
+        on.queue_delay.mean(),
+        off.queue_delay.mean(),
+        on.requests_finished,
+        off.requests_finished,
+        on.requests_evicted,
+        off.requests_evicted,
+    );
+    let mut est = BTreeMap::new();
+    est.insert("rate".into(), Value::Num(est_rate));
+    est.insert("throughput_on".into(), Value::Num(on.throughput()));
+    est.insert("throughput_off".into(), Value::Num(off.throughput()));
+    est.insert("ttft_mean_on".into(), Value::Num(on.ttft.mean()));
+    est.insert("ttft_mean_off".into(), Value::Num(off.ttft.mean()));
+    est.insert("queue_mean_on".into(), Value::Num(on.queue_delay.mean()));
+    est.insert("queue_mean_off".into(), Value::Num(off.queue_delay.mean()));
+    est.insert("evicted_on".into(), Value::Num(on.requests_evicted as f64));
+    est.insert("evicted_off".into(), Value::Num(off.requests_evicted as f64));
+    doc.insert("admission_estimates".into(), Value::Obj(est));
+    std::fs::write(&hotpath_out, Value::Obj(doc).to_string())?;
+    println!("[bench] wrote {hotpath_out}");
     Ok(())
 }
 

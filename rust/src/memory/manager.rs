@@ -86,6 +86,19 @@ struct TxnLog {
     cache_inserts: Vec<BlockKey>,
 }
 
+/// Recycled gather/scatter plan buffers: the save path's contiguous
+/// source + scatter entries and the load path's miss plan are rebuilt
+/// every layer of every step, so they are taken from (and returned to)
+/// these slots instead of being reallocated — the decode hot loop
+/// allocates nothing once they are warm.
+#[derive(Default)]
+struct KvScratch {
+    src: Vec<f32>,
+    entries: Vec<ScatterEntry>,
+    to_load: Vec<(SlotId, SlotId)>,
+    miss_keys: Vec<BlockKey>,
+}
+
 pub struct KvManager {
     spec: ModelSpec,
     /// Offloading on: DRAM is home, HBM is an LRU cache.
@@ -101,6 +114,8 @@ pub struct KvManager {
     prefetch: PrefetchEngine,
     /// Open step transaction, if any (see [`Self::begin_txn`]).
     txn: Option<TxnLog>,
+    /// Recycled plan-builder buffers (see [`KvScratch`]).
+    scratch: KvScratch,
 }
 
 impl KvManager {
@@ -128,6 +143,7 @@ impl KvManager {
             pinned: Vec::new(),
             prefetch: PrefetchEngine::new(PREFETCH_COPY_WORKERS),
             txn: None,
+            scratch: KvScratch::default(),
         }
     }
 
@@ -386,20 +402,24 @@ impl KvManager {
         self.txn_touch(req);
         let base_len = self.layer_len(req, layer);
 
-        // contiguous source tensor (K planes then V planes) + scatter plan
-        let mut src = Vec::with_capacity(2 * hkv * t_pad * dh);
+        // contiguous source tensor (K planes then V planes) + scatter
+        // plan, both built in recycled buffers
+        let mut src = std::mem::take(&mut self.scratch.src);
+        let mut entries = std::mem::take(&mut self.scratch.entries);
+        src.clear();
+        entries.clear();
         src.extend_from_slice(k);
         src.extend_from_slice(v);
         let v_base = hkv * t_pad * dh;
         let slot_floats = self.dram.slot_floats();
 
-        let mut entries = Vec::new();
+        let mut exhausted = false;
         {
             let spec_layers = self.spec.n_layers;
             debug_assert!(layer < spec_layers);
             let dram = &mut self.dram;
             let r = self.requests.get_mut(&req).expect("unregistered request");
-            for h in 0..hkv {
+            'build: for h in 0..hkv {
                 let mut tok = 0;
                 while tok < t_real {
                     let abs = base_len + tok;
@@ -408,7 +428,8 @@ impl KvManager {
                     let run = (bs - off).min(t_real - tok);
                     while r.blocks[layer][h].len() <= blk {
                         let Some(slot) = dram.alloc() else {
-                            return Err(MemoryError::DramExhausted { req });
+                            exhausted = true;
+                            break 'build;
                         };
                         r.blocks[layer][h].push(slot);
                     }
@@ -430,8 +451,15 @@ impl KvManager {
                 }
             }
         }
+        if exhausted {
+            self.scratch.src = src;
+            self.scratch.entries = entries;
+            return Err(MemoryError::DramExhausted { req });
+        }
         let stats = self.engine.save(&src, &mut self.dram, &entries);
         self.iter.save.merge(&stats);
+        self.scratch.src = src;
+        self.scratch.entries = entries;
 
         self.advance_layer(req, layer, t_real);
         Ok(())
@@ -456,18 +484,23 @@ impl KvManager {
         let blk = pos / bs;
         let off = pos % bs;
 
-        let mut src = Vec::with_capacity(2 * hkv * dh);
+        // recycled source + scatter-plan buffers (decode hot loop)
+        let mut src = std::mem::take(&mut self.scratch.src);
+        let mut entries = std::mem::take(&mut self.scratch.entries);
+        src.clear();
+        entries.clear();
         src.extend_from_slice(k_row);
         src.extend_from_slice(v_row);
         let slot_floats = self.dram.slot_floats();
-        let mut entries = Vec::with_capacity(2 * hkv);
+        let mut exhausted = false;
         {
             let dram = &mut self.dram;
             let r = self.requests.get_mut(&req).expect("unregistered request");
-            for h in 0..hkv {
+            'build: for h in 0..hkv {
                 while r.blocks[layer][h].len() <= blk {
                     let Some(slot) = dram.alloc() else {
-                        return Err(MemoryError::DramExhausted { req });
+                        exhausted = true;
+                        break 'build;
                     };
                     r.blocks[layer][h].push(slot);
                 }
@@ -486,8 +519,15 @@ impl KvManager {
                 });
             }
         }
+        if exhausted {
+            self.scratch.src = src;
+            self.scratch.entries = entries;
+            return Err(MemoryError::DramExhausted { req });
+        }
         let stats = self.engine.save(&src, &mut self.dram, &entries);
         self.iter.save.merge(&stats);
+        self.scratch.src = src;
+        self.scratch.entries = entries;
 
         self.advance_layer(req, layer, 1);
         Ok(())
@@ -630,8 +670,12 @@ impl KvManager {
         if self.offload {
             // staged bytes must have landed before we read them
             self.prefetch.wait_staged();
-            let mut to_load: Vec<(SlotId, SlotId)> = Vec::new();
-            let mut miss_keys: Vec<BlockKey> = Vec::new();
+            // recycled miss-plan buffers (the gather hot loop rebuilds
+            // these every layer)
+            let mut to_load = std::mem::take(&mut self.scratch.to_load);
+            let mut miss_keys = std::mem::take(&mut self.scratch.miss_keys);
+            to_load.clear();
+            miss_keys.clear();
             let mut alloc_err = None;
             'heads: for (h, sel) in sealed_sel.iter().enumerate() {
                 for &b in sel {
@@ -667,6 +711,8 @@ impl KvManager {
                 for key in self.pinned.drain(..) {
                     self.cache.unpin(&key);
                 }
+                self.scratch.to_load = to_load;
+                self.scratch.miss_keys = miss_keys;
                 return Err(e);
             }
             if !to_load.is_empty() {
@@ -684,6 +730,8 @@ impl KvManager {
                     self.pinned.push(*key);
                 }
             }
+            self.scratch.to_load = to_load;
+            self.scratch.miss_keys = miss_keys;
         }
 
         // Phase 2: copy into the staging tensors (HBM-local, not PCIe).

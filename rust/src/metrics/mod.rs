@@ -40,6 +40,14 @@ pub struct RunMetrics {
     /// Per-iteration stall the coarse two-stream model would have
     /// charged for the same traffic (`bench` compares the two models).
     pub coarse_stall_time: Series,
+    /// Compute burnt on rolled-back (aborted) step attempts, charged to
+    /// the serving clock on top of the committed iteration time —
+    /// eviction-heavy workloads no longer under-report latency. Sampled
+    /// per committed iteration, plus one sample per fully-abandoned
+    /// iteration.
+    pub abort_time: Series,
+    /// Total serving-clock time spent on rolled-back attempts.
+    pub abort_time_total_s: f64,
     /// Blocks staged ahead of need by the working-set prefetcher.
     pub prefetch_blocks: u64,
     /// Staged blocks consumed by a gather (earned overlap).
@@ -98,6 +106,7 @@ impl RunMetrics {
         self.prefetch_hits += out.prefetch_hits as u64;
         self.prefetch_wasted += out.prefetch_wasted as u64;
         self.prefetch_deferred += out.prefetch_deferred as u64;
+        self.abort_time_total_s += out.abort_time_s;
         if self.iter_time.len() < Self::MAX_SAMPLES {
             self.iter_time.push(out.iter_time_s);
             self.blocks_loaded_per_iter.push(out.blocks_loaded as f64);
@@ -105,6 +114,17 @@ impl RunMetrics {
             self.stall_time.push(out.stall_time_s);
             self.hidden_time.push(out.hidden_time_s);
             self.coarse_stall_time.push(out.coarse_stall_time_s);
+            self.abort_time.push(out.abort_time_s);
+        }
+    }
+
+    /// Record an iteration the engine abandoned entirely (every
+    /// batch-mate evicted before a commit): nothing ran, but the aborted
+    /// attempts' burnt time still advances the serving clock.
+    pub fn record_abandoned_iteration(&mut self, aborted_s: f64) {
+        self.abort_time_total_s += aborted_s;
+        if aborted_s > 0.0 && self.abort_time.len() < Self::MAX_SAMPLES {
+            self.abort_time.push(aborted_s);
         }
     }
 
@@ -157,6 +177,11 @@ impl RunMetrics {
         } else {
             String::new()
         };
+        let abort = if self.abort_time_total_s > 0.0 {
+            format!(" | aborted-attempt time {:.4}s", self.abort_time_total_s)
+        } else {
+            String::new()
+        };
         let overlap = if self.hidden_time.mean() > 0.0 {
             format!(
                 " | overlap hidden mean={:.4}s (coarse stall {:.4}s)",
@@ -183,7 +208,8 @@ impl RunMetrics {
             self.blocks_loaded_per_iter.mean(),
             self.stall_time.mean(),
             prefetch,
-        ) + &overlap
+        ) + &abort
+            + &overlap
     }
 }
 
@@ -222,10 +248,16 @@ mod tests {
             prefetch_hits: 6,
             prefetch_wasted: 2,
             prefetch_deferred: 3,
+            abort_time_s: 0.04,
             ..Default::default()
         };
         m.record_iteration(&out);
         assert_eq!(m.iterations, 1);
+        assert!((m.abort_time_total_s - 0.04).abs() < 1e-12);
+        m.record_abandoned_iteration(0.06);
+        assert!((m.abort_time_total_s - 0.10).abs() < 1e-12);
+        assert_eq!(m.abort_time.len(), 2);
+        assert!(m.summary().contains("aborted-attempt time"));
         assert_eq!(m.prefetch_blocks, 8);
         assert_eq!(m.prefetch_deferred, 3);
         assert!((m.prefetch_hit_rate() - 0.75).abs() < 1e-12);

@@ -66,8 +66,29 @@ impl HostTensor {
         }
     }
 
+    /// Take the f32 storage back out of the tensor (buffer recovery:
+    /// the zero-clone step pipeline rebuilds input tensors from recycled
+    /// buffers and reclaims them after execution instead of reallocating
+    /// — see `PjrtBackend`'s gather scratch and carried-activation
+    /// handling).
+    pub fn into_f32(self) -> Vec<f32> {
+        match self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
     pub fn as_i32(&self) -> &[i32] {
         match &self.data {
+            TensorData::I32(v) => v,
+            TensorData::F32(_) => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Take the i32 storage back out of the tensor (see
+    /// [`Self::into_f32`]).
+    pub fn into_i32(self) -> Vec<i32> {
+        match self.data {
             TensorData::I32(v) => v,
             TensorData::F32(_) => panic!("tensor is f32, expected i32"),
         }

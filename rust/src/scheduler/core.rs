@@ -191,9 +191,20 @@ impl Scheduler {
     /// Plan the next hybrid batch (Algorithm 1 + prefill planner).
     /// `now` stamps admissions; `ws` estimates decode working sets.
     pub fn plan(&mut self, now: f64, ws: WsEstimate) -> Batch {
+        let mut batch = Batch::default();
+        self.plan_into(now, ws, &mut batch);
+        batch
+    }
+
+    /// [`Self::plan`] into a caller-owned batch (cleared first) — the
+    /// engine hands the same `Batch` back every iteration, so the
+    /// planner's materialization vector is reused instead of
+    /// reallocated (zero-clone step pipeline).
+    pub fn plan_into(&mut self, now: f64, ws: WsEstimate, batch: &mut Batch) {
+        batch.decodes.clear();
+        batch.prefill = None;
         self.iterations += 1;
         let m_avl = self.m_avl();
-        let mut batch = Batch::default();
         let mut ws_used = 0usize;
         let mut tokens = 0usize;
 
@@ -269,7 +280,6 @@ impl Scheduler {
                 }
             }
         }
-        batch
     }
 
     /// The admission capacity a request's full KV reserves against: HBM
@@ -456,13 +466,18 @@ impl Scheduler {
     /// leftover prefetch budget under the current batch's compute, so
     /// their gathers start warm when they are finally scheduled.
     pub fn stage_hints(&self, batch: &Batch) -> Vec<ReqId> {
-        self.active
-            .iter()
-            .copied()
-            .filter(|id| {
-                self.requests[id].phase == Phase::Decode && !batch.decodes.contains(id)
-            })
-            .collect()
+        let mut out = Vec::new();
+        self.stage_hints_into(batch, &mut out);
+        out
+    }
+
+    /// [`Self::stage_hints`] into a caller-owned buffer (cleared first)
+    /// — the engine reuses one hint vector across iterations.
+    pub fn stage_hints_into(&self, batch: &Batch, out: &mut Vec<ReqId>) {
+        out.clear();
+        out.extend(self.active.iter().copied().filter(|id| {
+            self.requests[id].phase == Phase::Decode && !batch.decodes.contains(id)
+        }));
     }
 
     /// Active decode requests (executor helper).
@@ -998,6 +1013,39 @@ mod tests {
         assert!(s.requests[&1].is_done());
         assert_eq!(s.reserved_bytes(), 0, "finish must reclaim everything");
         assert!(s.completion_estimate().is_some());
+    }
+
+    #[test]
+    fn plan_into_matches_plan_and_reuses_the_batch() {
+        let mut cfg = ServingConfig::sparseserve(256, 64, 4);
+        cfg.max_inject_tokens = 64 * 4;
+        let mut a = sched(cfg.clone(), 1 << 30);
+        let mut b = sched(cfg, 1 << 30);
+        for id in 1..=3u32 {
+            a.submit(Request::new(id, 64, 3, 0.0));
+            b.submit(Request::new(id, 64, 3, 0.0));
+        }
+        let mut ws = |r| no_ws(r);
+        let mut batch = Batch::default();
+        for step in 0..6 {
+            let expect = a.plan(step as f64, &mut ws);
+            b.plan_into(step as f64, &mut ws, &mut batch);
+            assert_eq!(batch.decodes, expect.decodes, "step {step}");
+            assert_eq!(batch.prefill, expect.prefill, "step {step}");
+            if let Some(w) = &expect.prefill {
+                let done = w.is_last();
+                a.advance_prefill(w);
+                b.advance_prefill(w);
+                if done {
+                    a.emit_token(w.req(), None, 0.1);
+                    b.emit_token(w.req(), None, 0.1);
+                }
+            }
+        }
+        // the hint variant matches its allocating counterpart too
+        let mut hints = vec![99];
+        b.stage_hints_into(&batch, &mut hints);
+        assert_eq!(hints, a.stage_hints(&batch));
     }
 
     #[test]

@@ -13,4 +13,4 @@ pub mod cost;
 pub mod selection;
 
 pub use cost::{layered_iter, two_stream_iter, CostModel, IterTiming};
-pub use selection::SelectionModel;
+pub use selection::{selection_clones_this_thread, SelectionModel};

@@ -18,10 +18,35 @@
 //! is the block index, shared across layers/heads (DESIGN.md notes the
 //! fidelity trade: per-(layer,head) selection multiplies cost-accounting
 //! counts but not the dynamics).
+//!
+//! ## Hot-path contract (zero-clone step pipeline)
+//!
+//! The model runs once per decode request per iteration, so it supports
+//! allocation-free steady-state operation:
+//!
+//! - [`SelectionModel::next_selection_into`] draws into a caller-owned
+//!   buffer (no per-step `Vec` churn);
+//! - `begin_txn` / `commit_txn` / `rollback_txn` form a record-and-revert
+//!   undo log (mirroring `KvManager::{begin,commit,rollback}_txn`):
+//!   `begin_txn` copies the RNG state and the small `current`/`hot`
+//!   pools into recycled buffers, `rollback_txn` swaps them back —
+//!   replacing the old clone-the-whole-model rollback snapshot.
+
+use std::cell::Cell;
 
 use crate::util::rng::Rng;
 
-#[derive(Debug, Clone)]
+thread_local! {
+    static SEL_CLONES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Clones of [`SelectionModel`] performed by the calling thread — the
+/// test hook behind the zero-clone steady-state criterion.
+pub fn selection_clones_this_thread() -> u64 {
+    SEL_CLONES.with(|c| c.get())
+}
+
+#[derive(Debug)]
 pub struct SelectionModel {
     rng: Rng,
     /// Probability a selected block stays selected next step.
@@ -32,6 +57,32 @@ pub struct SelectionModel {
     p_drift: f64,
     current: Vec<u32>,
     hot: Vec<u32>,
+    // ---- open undo scope (armed by `begin_txn`); buffers recycled ----
+    txn_open: bool,
+    undo_rng: Rng,
+    undo_current: Vec<u32>,
+    undo_hot: Vec<u32>,
+}
+
+impl Clone for SelectionModel {
+    /// Hand-written so the thread-local clone probe counts every copy:
+    /// the decode steady state must perform none.
+    fn clone(&self) -> Self {
+        SEL_CLONES.with(|c| c.set(c.get() + 1));
+        debug_assert!(!self.txn_open, "cloning a model with an open undo scope");
+        Self {
+            rng: self.rng.clone(),
+            p_keep: self.p_keep,
+            p_hot: self.p_hot,
+            p_drift: self.p_drift,
+            current: self.current.clone(),
+            hot: self.hot.clone(),
+            txn_open: false,
+            undo_rng: Rng::new(0),
+            undo_current: Vec::new(),
+            undo_hot: Vec::new(),
+        }
+    }
 }
 
 impl SelectionModel {
@@ -48,16 +99,67 @@ impl SelectionModel {
             p_drift: 0.004,
             current: Vec::new(),
             hot: Vec::new(),
+            txn_open: false,
+            undo_rng: Rng::new(0),
+            undo_current: Vec::new(),
+            undo_hot: Vec::new(),
         }
     }
+
+    // ------------------------------------------------------ undo scope
+
+    /// Begin an undo scope: the RNG state and the `current`/`hot` pools
+    /// are copied into recycled buffers (a ~1 KB memcpy, no allocation
+    /// once warm) so a subsequent [`Self::rollback_txn`] restores the
+    /// model exactly.
+    pub fn begin_txn(&mut self) {
+        debug_assert!(!self.txn_open, "nested SelectionModel txn");
+        self.txn_open = true;
+        self.undo_rng = self.rng.clone();
+        self.undo_current.clear();
+        self.undo_current.extend_from_slice(&self.current);
+        self.undo_hot.clear();
+        self.undo_hot.extend_from_slice(&self.hot);
+    }
+
+    /// Keep everything drawn since `begin_txn`. No-op without a scope.
+    pub fn commit_txn(&mut self) {
+        self.txn_open = false;
+    }
+
+    /// Revert to the `begin_txn` state: RNG, current selection and hot
+    /// pool all restored exactly (the retried step replays identically).
+    /// No-op without a scope.
+    pub fn rollback_txn(&mut self) {
+        if !self.txn_open {
+            return;
+        }
+        self.txn_open = false;
+        self.rng = self.undo_rng.clone();
+        std::mem::swap(&mut self.current, &mut self.undo_current);
+        std::mem::swap(&mut self.hot, &mut self.undo_hot);
+    }
+
+    // -------------------------------------------------------- sampling
 
     /// Draw the next step's selection of `budget` sealed blocks out of
     /// `n_sealed` (returns fewer when fewer exist).
     pub fn next_selection(&mut self, n_sealed: usize, budget: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.next_selection_into(n_sealed, budget, &mut out);
+        out
+    }
+
+    /// [`Self::next_selection`] into a caller-owned buffer (cleared
+    /// first) — the per-iteration hot path allocates nothing once the
+    /// buffer is warm. Draw-for-draw identical to the allocating
+    /// variant.
+    pub fn next_selection_into(&mut self, n_sealed: usize, budget: usize, out: &mut Vec<u32>) {
+        out.clear();
         let want = budget.min(n_sealed);
         if want == 0 {
             self.current.clear();
-            return Vec::new();
+            return;
         }
         // refresh hot pool: drift a few entries, keep size ~2.5x budget
         // (sets the window-union working set at ~1.5-2x the budget, the
@@ -76,41 +178,40 @@ impl SelectionModel {
             }
         }
 
-        let mut next: Vec<u32> = Vec::with_capacity(want);
-        // keep survivors (dedup via sorted insert; budgets are small)
+        // keep survivors (dedup via linear scan; budgets are small)
         for &b in &self.current {
             if (b as usize) < n_sealed
-                && next.len() < want
+                && out.len() < want
                 && self.rng.f64() < self.p_keep
-                && !next.contains(&b)
+                && !out.contains(&b)
             {
-                next.push(b);
+                out.push(b);
             }
         }
         // refill from hot pool / uniform
         let mut guard = 0;
-        while next.len() < want && guard < 10_000 {
+        while out.len() < want && guard < 10_000 {
             guard += 1;
             let b = if self.rng.f64() < self.p_hot {
                 *self.rng.choose(&self.hot)
             } else {
                 self.rng.below(n_sealed) as u32
             };
-            if (b as usize) < n_sealed && !next.contains(&b) {
-                next.push(b);
+            if (b as usize) < n_sealed && !out.contains(&b) {
+                out.push(b);
             }
         }
         // pathological fallback (tiny n_sealed): fill sequentially
         for b in 0..n_sealed as u32 {
-            if next.len() >= want {
+            if out.len() >= want {
                 break;
             }
-            if !next.contains(&b) {
-                next.push(b);
+            if !out.contains(&b) {
+                out.push(b);
             }
         }
-        self.current = next.clone();
-        next
+        self.current.clear();
+        self.current.extend_from_slice(out);
     }
 }
 
@@ -181,5 +282,76 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(a.next_selection(100, 10), b.next_selection(100, 10));
         }
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_draw_for_draw() {
+        let mut a = SelectionModel::new(77);
+        let mut b = SelectionModel::new(77);
+        let mut buf = Vec::new();
+        for step in 0..20 {
+            let n = 16 + step * 8;
+            b.next_selection_into(n, 12, &mut buf);
+            assert_eq!(a.next_selection(n, 12), buf, "step {step}");
+        }
+    }
+
+    #[test]
+    fn txn_rollback_restores_model_exactly() {
+        let mut m = SelectionModel::new(9);
+        for _ in 0..5 {
+            m.next_selection(512, 32);
+        }
+        let reference = m.clone(); // the old, expensive rollback path
+        m.begin_txn();
+        let drawn = m.next_selection(512, 32);
+        assert!(!drawn.is_empty());
+        m.rollback_txn();
+        assert_eq!(m.current, reference.current, "current pool restored");
+        assert_eq!(m.hot, reference.hot, "hot pool restored");
+        // identical future: the retried step replays the aborted draw
+        let mut r = reference;
+        for _ in 0..6 {
+            assert_eq!(m.next_selection(512, 32), r.next_selection(512, 32));
+        }
+    }
+
+    #[test]
+    fn txn_commit_keeps_the_draw() {
+        let mut m = SelectionModel::new(3);
+        m.next_selection(256, 16);
+        m.begin_txn();
+        let drawn = m.next_selection(256, 16);
+        m.commit_txn();
+        assert_eq!(m.current, drawn);
+        // scope-less txn calls are harmless no-ops
+        m.rollback_txn();
+        assert_eq!(m.current, drawn);
+    }
+
+    #[test]
+    fn repeated_txns_reuse_undo_buffers() {
+        let mut m = SelectionModel::new(4);
+        m.next_selection(512, 32);
+        m.begin_txn();
+        m.next_selection(512, 32);
+        m.rollback_txn();
+        let cap_cur = m.undo_current.capacity();
+        let cap_hot = m.undo_hot.capacity();
+        for _ in 0..8 {
+            m.begin_txn();
+            m.next_selection(512, 32);
+            m.rollback_txn();
+        }
+        assert_eq!(m.undo_current.capacity(), cap_cur, "undo buffer churned");
+        assert_eq!(m.undo_hot.capacity(), cap_hot, "undo buffer churned");
+    }
+
+    #[test]
+    fn clone_probe_counts_thread_local_clones() {
+        let m = SelectionModel::new(1);
+        let before = selection_clones_this_thread();
+        let _c = m.clone();
+        assert_eq!(selection_clones_this_thread(), before + 1);
     }
 }

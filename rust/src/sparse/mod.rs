@@ -12,5 +12,5 @@
 pub mod topk;
 pub mod working_set;
 
-pub use topk::{top_k_blocks, top_k_blocks_fast};
-pub use working_set::WorkingSetTracker;
+pub use topk::{top_k_blocks, top_k_blocks_fast, top_k_blocks_fast_into, top_k_blocks_into};
+pub use working_set::{ws_clones_this_thread, WorkingSetTracker};

@@ -7,33 +7,52 @@
 
 /// Select up to `k` block ids from `scores[..n_sealed]`, slot-ordered.
 pub fn top_k_blocks(scores: &[f32], n_sealed: usize, k: usize) -> Vec<u32> {
+    let mut out = Vec::new();
+    top_k_blocks_into(scores, n_sealed, k, &mut out);
+    out
+}
+
+/// [`top_k_blocks`] into a caller-owned buffer (cleared first) — the
+/// buffer doubles as the index workspace, so a warm buffer allocates
+/// nothing.
+pub fn top_k_blocks_into(scores: &[f32], n_sealed: usize, k: usize, out: &mut Vec<u32>) {
+    out.clear();
     let n = n_sealed.min(scores.len());
     if k == 0 || n == 0 {
-        return Vec::new();
+        return;
     }
-    let mut idx: Vec<u32> = (0..n as u32).collect();
+    out.extend(0..n as u32);
     // stable sort by score desc == argsort(-scores, stable)
-    idx.sort_by(|&a, &b| {
+    out.sort_by(|&a, &b| {
         scores[b as usize]
             .partial_cmp(&scores[a as usize])
             .unwrap_or(std::cmp::Ordering::Equal)
     });
-    idx.truncate(k);
-    idx
+    out.truncate(k);
 }
 
 /// Partial-selection variant used on the hot path: avoids the full sort
 /// when k << n via select_nth, then stable-sorts only the prefix.
 /// Produces the same result as [`top_k_blocks`].
 pub fn top_k_blocks_fast(scores: &[f32], n_sealed: usize, k: usize) -> Vec<u32> {
+    let mut out = Vec::new();
+    top_k_blocks_fast_into(scores, n_sealed, k, &mut out);
+    out
+}
+
+/// [`top_k_blocks_fast`] into a caller-owned buffer (cleared first) —
+/// the per-layer decode hot path holds one buffer per KV head in the
+/// session and allocates nothing once they are warm.
+pub fn top_k_blocks_fast_into(scores: &[f32], n_sealed: usize, k: usize, out: &mut Vec<u32>) {
     let n = n_sealed.min(scores.len());
-    if k == 0 || n == 0 {
-        return Vec::new();
-    }
     if k >= n {
-        return top_k_blocks(scores, n_sealed, k);
+        return top_k_blocks_into(scores, n_sealed, k, out);
     }
-    let mut idx: Vec<u32> = (0..n as u32).collect();
+    out.clear();
+    if k == 0 || n == 0 {
+        return;
+    }
+    out.extend(0..n as u32);
     // Partition so the k best (score desc, id asc) are in the prefix;
     // the comparator is a total order, making the result deterministic.
     let cmp = |a: &u32, b: &u32| {
@@ -42,10 +61,9 @@ pub fn top_k_blocks_fast(scores: &[f32], n_sealed: usize, k: usize) -> Vec<u32> 
             .unwrap_or(std::cmp::Ordering::Equal)
             .then(a.cmp(b))
     };
-    idx.select_nth_unstable_by(k - 1, cmp);
-    idx.truncate(k);
-    idx.sort_by(cmp);
-    idx
+    out.select_nth_unstable_by(k - 1, cmp);
+    out.truncate(k);
+    out.sort_by(cmp);
 }
 
 #[cfg(test)]
@@ -65,6 +83,23 @@ mod tests {
         let scores = [1.0, 9.0, 9.0, 9.0];
         assert_eq!(top_k_blocks(&scores, 1, 3), vec![0]);
         assert!(top_k_blocks(&scores, 0, 3).is_empty());
+    }
+
+    #[test]
+    fn into_variants_match_allocating_counterparts() {
+        prop::check("topk _into == allocating", 120, |rng: &mut Rng| {
+            let n = 1 + rng.below(64);
+            let scores: Vec<f32> =
+                (0..n).map(|_| (rng.below(8) as f32) - 4.0).collect();
+            let k = rng.below(n + 2);
+            // dirty, pre-warmed buffers must be fully overwritten
+            let mut buf = vec![999u32; 7];
+            top_k_blocks_into(&scores, n, k, &mut buf);
+            prop::assert_eq_prop(buf.clone(), top_k_blocks(&scores, n, k), "sort _into")?;
+            top_k_blocks_fast_into(&scores, n, k, &mut buf);
+            prop::assert_eq_prop(buf, top_k_blocks_fast(&scores, n, k), "fast _into")?;
+            Ok(())
+        });
     }
 
     #[test]

@@ -6,19 +6,120 @@
 //! the union of the blocks selected over the last `w` decode steps
 //! (w = 12 by default: Fig. 8 shows the overlap gain saturates there —
 //! +10.68% from w=1 to 12, +0.31% from 12 to 16).
+//!
+//! ## Hot-path contract (zero-clone step pipeline)
+//!
+//! The tracker sits on the per-iteration decode critical path, so it
+//! supports allocation-free steady-state operation:
+//!
+//! - [`WorkingSetTracker::record_step_from`] copies a step into recycled
+//!   storage (evicted window entries are reused, not freed);
+//! - [`WorkingSetTracker::ranked_blocks_capped_into`] ranks into a
+//!   caller-owned buffer using an internal, reused dedup set;
+//! - `begin_txn` / `commit_txn` / `rollback_txn` form an incremental
+//!   undo log (record-and-revert, mirroring
+//!   `KvManager::{begin,commit,rollback}_txn`): a rolled-back step pops
+//!   the recorded entries and restores the window-evicted ones instead
+//!   of the old clone-the-whole-tracker snapshot.
+//!
+//! ## Prefetch ranking
+//!
+//! With [`Self::with_freq_ranking`] enabled the union is ordered
+//! recency-first, then by each block's hit EWMA *within* the same
+//! recency tier — a block selected in 10 of the last 12 steps outranks a
+//! one-off from the same step (`ServingConfig::prefetch_freq_ranking`;
+//! on for the `sparseserve` preset, off for the `+PF` ablation rung so
+//! the ladder isolates plain recency prefetch).
 
-use std::collections::{HashSet, VecDeque};
+use std::cell::Cell;
+use std::collections::{HashMap, HashSet, VecDeque};
 
 /// A (layer, head, block) selection item within one request.
 pub type SelItem = (u16, u16, u32);
 
-#[derive(Debug, Clone)]
+/// EWMA smoothing for the per-block hit frequency (selected = 1.0,
+/// skipped = 0.0 per decode step).
+const FREQ_ALPHA: f32 = 0.2;
+/// Frequency entries unseen for this many windows are pruned.
+const FREQ_PRUNE_WINDOWS: u64 = 4;
+/// Recycled step buffers kept for reuse.
+const SPARE_CAP: usize = 4;
+
+thread_local! {
+    static WS_CLONES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Clones of [`WorkingSetTracker`] performed by the calling thread —
+/// the test hook behind the zero-clone steady-state criterion (cloning
+/// is counted per thread so parallel tests cannot race the counter).
+pub fn ws_clones_this_thread() -> u64 {
+    WS_CLONES.with(|c| c.get())
+}
+
+/// Per-block selection-frequency state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct FreqStat {
+    ewma: f32,
+    last_step: u64,
+}
+
+#[derive(Debug)]
 pub struct WorkingSetTracker {
     window: usize,
+    freq_ranking: bool,
     history: VecDeque<Vec<SelItem>>,
     /// Cached union (rebuilt lazily after updates).
     union: HashSet<SelItem>,
     dirty: bool,
+    /// Per-block hit EWMA (maintained only with `freq_ranking` on).
+    freq: HashMap<SelItem, FreqStat>,
+    /// Decode steps recorded over the tracker's lifetime.
+    step: u64,
+    /// Recycled step storage (window-evicted buffers awaiting reuse).
+    spare: Vec<Vec<SelItem>>,
+    /// Reused dedup scratch for `ranked_blocks_*_into`.
+    rank_seen: HashSet<SelItem>,
+    // ---- open undo scope (armed by `begin_txn`); buffers recycled ----
+    txn_open: bool,
+    /// Steps recorded by this txn that are still in the window (a txn
+    /// step evicted by a later txn step is simply recycled — there is
+    /// nothing of it to undo).
+    txn_pushed: usize,
+    /// PRE-txn steps the window evicted during the txn (restored in
+    /// order on rollback). Evictions pop the front, and the front stays
+    /// pre-txn until all `txn_len_before` of them are gone.
+    txn_evicted: Vec<Vec<SelItem>>,
+    txn_freq_undo: Vec<(SelItem, Option<FreqStat>)>,
+    txn_step_before: u64,
+    /// History length at `begin_txn` (how many evictions are pre-txn).
+    txn_len_before: usize,
+}
+
+impl Clone for WorkingSetTracker {
+    /// Deliberately hand-written so the thread-local clone probe counts
+    /// every copy: the decode steady state must perform none (scratch
+    /// and undo buffers start fresh in the clone).
+    fn clone(&self) -> Self {
+        WS_CLONES.with(|c| c.set(c.get() + 1));
+        debug_assert!(!self.txn_open, "cloning a tracker with an open undo scope");
+        Self {
+            window: self.window,
+            freq_ranking: self.freq_ranking,
+            history: self.history.clone(),
+            union: self.union.clone(),
+            dirty: self.dirty,
+            freq: self.freq.clone(),
+            step: self.step,
+            spare: Vec::new(),
+            rank_seen: HashSet::new(),
+            txn_open: false,
+            txn_pushed: 0,
+            txn_evicted: Vec::new(),
+            txn_freq_undo: Vec::new(),
+            txn_step_before: 0,
+            txn_len_before: 0,
+        }
+    }
 }
 
 impl WorkingSetTracker {
@@ -26,23 +127,199 @@ impl WorkingSetTracker {
         assert!(window > 0);
         Self {
             window,
+            freq_ranking: false,
             history: VecDeque::with_capacity(window + 1),
             union: HashSet::new(),
             dirty: false,
+            freq: HashMap::new(),
+            step: 0,
+            spare: Vec::new(),
+            rank_seen: HashSet::new(),
+            txn_open: false,
+            txn_pushed: 0,
+            txn_evicted: Vec::new(),
+            txn_freq_undo: Vec::new(),
+            txn_step_before: 0,
+            txn_len_before: 0,
         }
+    }
+
+    /// Enable recency-then-frequency prefetch ranking (per-block hit
+    /// EWMA breaks ties within a recency tier).
+    pub fn with_freq_ranking(mut self, on: bool) -> Self {
+        self.freq_ranking = on;
+        self
     }
 
     pub fn window(&self) -> usize {
         self.window
     }
 
+    // ------------------------------------------------------ undo scope
+
+    /// Begin an undo scope: subsequent [`Self::record_step`]s are
+    /// journaled (pushed count, window-evicted steps, frequency
+    /// deltas) until `commit_txn` (drop the journal, recycle buffers)
+    /// or `rollback_txn` (revert them exactly). Mirrors
+    /// `KvManager::begin_txn`; one scope per backend step.
+    pub fn begin_txn(&mut self) {
+        debug_assert!(!self.txn_open, "nested WorkingSetTracker txn");
+        debug_assert!(self.txn_evicted.is_empty() && self.txn_freq_undo.is_empty());
+        self.txn_open = true;
+        self.txn_pushed = 0;
+        self.txn_step_before = self.step;
+        self.txn_len_before = self.history.len();
+    }
+
+    /// Keep everything recorded since `begin_txn` and close the scope.
+    /// No-op without an open scope.
+    pub fn commit_txn(&mut self) {
+        if !self.txn_open {
+            return;
+        }
+        self.txn_open = false;
+        self.txn_pushed = 0;
+        while let Some(v) = self.txn_evicted.pop() {
+            self.recycle(v);
+        }
+        self.txn_freq_undo.clear();
+        self.maybe_prune_freq();
+    }
+
+    /// Revert every `record_step` since `begin_txn`: recorded steps are
+    /// popped (their storage recycled), window-evicted steps restored in
+    /// order, and frequency stats rolled back — the tracker is restored
+    /// exactly, without ever having been cloned. No-op without an open
+    /// scope.
+    pub fn rollback_txn(&mut self) {
+        if !self.txn_open {
+            return;
+        }
+        self.txn_open = false;
+        for _ in 0..self.txn_pushed {
+            if let Some(v) = self.history.pop_back() {
+                self.recycle(v);
+            }
+        }
+        self.txn_pushed = 0;
+        // evicted in eviction order (oldest first): restore newest-evicted
+        // first so the front ends up in the original order
+        while let Some(v) = self.txn_evicted.pop() {
+            self.history.push_front(v);
+        }
+        // undo frequency deltas in reverse so the first-recorded pre-state
+        // of a twice-updated block wins
+        while let Some((item, prev)) = self.txn_freq_undo.pop() {
+            match prev {
+                Some(st) => {
+                    self.freq.insert(item, st);
+                }
+                None => {
+                    self.freq.remove(&item);
+                }
+            }
+        }
+        self.step = self.txn_step_before;
+        self.dirty = true;
+    }
+
+    fn recycle(&mut self, mut v: Vec<SelItem>) {
+        if self.spare.len() < SPARE_CAP {
+            v.clear();
+            self.spare.push(v);
+        }
+    }
+
+    // ------------------------------------------------------- recording
+
     /// Record one decode step's full selection (all layers/heads).
     pub fn record_step(&mut self, items: Vec<SelItem>) {
+        if self.freq_ranking {
+            self.update_freq(&items);
+        } else {
+            self.step += 1;
+        }
         self.history.push_back(items);
+        if self.txn_open {
+            self.txn_pushed += 1;
+        }
         while self.history.len() > self.window {
-            self.history.pop_front();
+            let old = self.history.pop_front().expect("len checked");
+            if self.txn_open {
+                if self.txn_evicted.len() < self.txn_len_before {
+                    // a pre-txn step fell out: journal it for rollback
+                    self.txn_evicted.push(old);
+                } else {
+                    // every pre-txn step is already gone, so this evicts
+                    // a step recorded by THIS txn: there is nothing to
+                    // restore — forget it and stop counting it as pushed
+                    self.txn_pushed -= 1;
+                    self.recycle(old);
+                }
+            } else {
+                self.recycle(old);
+            }
         }
         self.dirty = true;
+    }
+
+    /// [`Self::record_step`] from a borrowed slice, reusing recycled
+    /// step storage — the per-iteration hot path allocates nothing once
+    /// the window is warm.
+    pub fn record_step_from(&mut self, items: &[SelItem]) {
+        let mut v = self.spare.pop().unwrap_or_default();
+        v.clear();
+        v.extend_from_slice(items);
+        self.record_step(v);
+    }
+
+    fn update_freq(&mut self, items: &[SelItem]) {
+        self.step += 1;
+        for &item in items {
+            let prev = self.freq.get(&item).copied();
+            if self.txn_open {
+                self.txn_freq_undo.push((item, prev));
+            }
+            let st = match prev {
+                Some(mut st) => {
+                    // decay the steps this block went unselected, then
+                    // fold in the hit
+                    let zero_gap = (self.step - st.last_step).saturating_sub(1).min(63) as i32;
+                    st.ewma *= (1.0 - FREQ_ALPHA).powi(zero_gap);
+                    st.ewma = (1.0 - FREQ_ALPHA) * st.ewma + FREQ_ALPHA;
+                    st.last_step = self.step;
+                    st
+                }
+                None => FreqStat { ewma: FREQ_ALPHA, last_step: self.step },
+            };
+            self.freq.insert(item, st);
+        }
+        if !self.txn_open {
+            self.maybe_prune_freq();
+        }
+    }
+
+    /// Bound the frequency map: drop entries unseen for several windows
+    /// (their EWMA has decayed to noise). Deferred while an undo scope
+    /// is open so rollback stays exact.
+    fn maybe_prune_freq(&mut self) {
+        if self.step % 64 != 0 || self.freq.is_empty() {
+            return;
+        }
+        let horizon = (FREQ_PRUNE_WINDOWS * self.window as u64).max(64);
+        let step = self.step;
+        self.freq.retain(|_, st| st.last_step + horizon >= step);
+    }
+
+    /// A block's decayed hit EWMA as of the current step.
+    fn freq_eff(&self, item: &SelItem) -> f32 {
+        match self.freq.get(item) {
+            Some(st) => {
+                let gap = (self.step - st.last_step).min(63) as i32;
+                st.ewma * (1.0 - FREQ_ALPHA).powi(gap)
+            }
+            None => 0.0,
+        }
     }
 
     fn rebuild(&mut self) {
@@ -66,10 +343,14 @@ impl WorkingSetTracker {
         self.ws_blocks() * block_bytes
     }
 
+    // --------------------------------------------------------- ranking
+
     /// The window union ranked for prefetch: recency-weighted — blocks
     /// from the most recent step first (they have the highest re-selection
     /// probability, Fig. 8), then progressively older steps, deduplicated
-    /// in first-seen order. A truncation of this list is the best
+    /// in first-seen order. With frequency ranking on, blocks within the
+    /// same recency tier are ordered by their hit EWMA (frequent
+    /// re-selections first). A truncation of this list is the best
     /// prediction of the next step's selection under the paper's
     /// temporal-locality model.
     pub fn ranked_blocks(&self) -> Vec<SelItem> {
@@ -80,19 +361,58 @@ impl WorkingSetTracker {
     /// the prefetch hot path consumes only a staging budget's worth, so
     /// stop ranking once it is filled.
     pub fn ranked_blocks_capped(&self, cap: usize) -> Vec<SelItem> {
-        let mut seen: HashSet<SelItem> = HashSet::new();
+        let mut seen = HashSet::new();
         let mut out = Vec::new();
+        self.rank_core(&mut seen, cap, &mut out);
+        out
+    }
+
+    /// [`Self::ranked_blocks`] into a caller-owned buffer (cleared
+    /// first), reusing the tracker's internal dedup scratch — the
+    /// staging hot path allocates nothing once buffers are warm.
+    pub fn ranked_blocks_into(&mut self, out: &mut Vec<SelItem>) {
+        self.ranked_blocks_capped_into(usize::MAX, out)
+    }
+
+    /// [`Self::ranked_blocks_capped`] into a caller-owned buffer.
+    pub fn ranked_blocks_capped_into(&mut self, cap: usize, out: &mut Vec<SelItem>) {
+        let mut seen = std::mem::take(&mut self.rank_seen);
+        self.rank_core(&mut seen, cap, out);
+        self.rank_seen = seen;
+    }
+
+    fn rank_core(&self, seen: &mut HashSet<SelItem>, cap: usize, out: &mut Vec<SelItem>) {
+        seen.clear();
+        out.clear();
+        if cap == 0 {
+            return;
+        }
         'steps: for step in self.history.iter().rev() {
+            let tier_start = out.len();
             for &item in step {
-                if out.len() >= cap {
+                // pure recency order truncates mid-step (first-seen wins);
+                // with frequency ranking the whole tier is collected first
+                // so the EWMA decides who makes the cut
+                if !self.freq_ranking && out.len() >= cap {
                     break 'steps;
                 }
                 if seen.insert(item) {
                     out.push(item);
                 }
             }
+            if self.freq_ranking {
+                out[tier_start..].sort_unstable_by(|a, b| {
+                    self.freq_eff(b)
+                        .partial_cmp(&self.freq_eff(a))
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then_with(|| a.cmp(b))
+                });
+                if out.len() >= cap {
+                    break 'steps;
+                }
+            }
         }
-        out
+        out.truncate(cap);
     }
 
     /// Overlap ratio between the last recorded step and the union of the
@@ -129,6 +449,15 @@ mod tests {
         blocks.iter().map(|&b| (0, 0, b)).collect()
     }
 
+    /// Byte-level state equality (undo-log tests): everything observable
+    /// plus the frequency stats and step counter.
+    fn assert_same_state(a: &WorkingSetTracker, b: &WorkingSetTracker) {
+        assert_eq!(a.history, b.history, "history diverged");
+        assert_eq!(a.step, b.step, "step counter diverged");
+        assert_eq!(a.freq, b.freq, "freq stats diverged");
+        assert_eq!(a.window, b.window);
+    }
+
     #[test]
     fn union_over_window() {
         let mut t = WorkingSetTracker::new(3);
@@ -156,6 +485,172 @@ mod tests {
         // capping truncates in rank order
         assert_eq!(t.ranked_blocks_capped(2), items(&[2, 3]));
         assert!(t.ranked_blocks_capped(0).is_empty());
+    }
+
+    #[test]
+    fn ranked_into_matches_allocating_variants() {
+        prop::check("ranked _into == ranked", 60, |rng: &mut Rng| {
+            let freq = rng.below(2) == 1;
+            let mut t = WorkingSetTracker::new(1 + rng.below(6)).with_freq_ranking(freq);
+            for _ in 0..rng.below(12) {
+                let n = rng.below(6);
+                t.record_step((0..n).map(|_| (0u16, 0u16, rng.below(10) as u32)).collect());
+            }
+            let cap = rng.below(8);
+            let mut buf = Vec::new();
+            t.ranked_blocks_capped_into(cap, &mut buf);
+            prop::assert_eq_prop(buf.clone(), t.ranked_blocks_capped(cap), "capped _into")?;
+            t.ranked_blocks_into(&mut buf);
+            prop::assert_eq_prop(buf, t.ranked_blocks(), "_into")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn record_step_from_matches_record_step() {
+        prop::check("record_step_from == record_step", 40, |rng: &mut Rng| {
+            let w = 1 + rng.below(5);
+            let mut a = WorkingSetTracker::new(w).with_freq_ranking(true);
+            let mut b = WorkingSetTracker::new(w).with_freq_ranking(true);
+            for _ in 0..12 {
+                let n = rng.below(5);
+                let step: Vec<SelItem> =
+                    (0..n).map(|_| (0u16, 0u16, rng.below(9) as u32)).collect();
+                a.record_step(step.clone());
+                b.record_step_from(&step);
+            }
+            prop::assert_eq_prop(a.history.clone(), b.history.clone(), "history")?;
+            prop::assert_eq_prop(a.ranked_blocks(), b.ranked_blocks(), "ranking")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn freq_ranking_orders_frequent_blocks_first_within_a_tier() {
+        let mut t = WorkingSetTracker::new(8).with_freq_ranking(true);
+        t.record_step(items(&[2]));
+        t.record_step(items(&[2, 1]));
+        t.record_step(items(&[2, 1]));
+        // newest tier has all three fresh: 2 (3 hits) > 1 (2 hits) > 3 (1)
+        t.record_step(items(&[3, 1, 2]));
+        assert_eq!(t.ranked_blocks(), items(&[2, 1, 3]));
+        // the cap cuts the *least frequent* of the tier, not the last seen
+        assert_eq!(t.ranked_blocks_capped(2), items(&[2, 1]));
+        // recency still dominates: a brand-new step outranks old frequents
+        t.record_step(items(&[9]));
+        assert_eq!(t.ranked_blocks_capped(1), items(&[9]));
+    }
+
+    #[test]
+    fn freq_map_is_pruned_and_bounded() {
+        let mut t = WorkingSetTracker::new(2).with_freq_ranking(true);
+        for s in 0..512u32 {
+            t.record_step(items(&[s, s + 1000]));
+        }
+        // horizon = 4 * window (>= 64): only recently-seen entries survive
+        assert!(
+            t.freq.len() <= 2 * 64 + 2 * 64,
+            "freq map must stay bounded: {}",
+            t.freq.len()
+        );
+    }
+
+    #[test]
+    fn txn_rollback_restores_tracker_exactly() {
+        let mut t = WorkingSetTracker::new(3).with_freq_ranking(true);
+        for s in 0..5u32 {
+            t.record_step(items(&[s % 4, (s + 1) % 4]));
+        }
+        let reference = t.clone();
+        t.begin_txn();
+        t.record_step(items(&[9, 10]));
+        t.record_step_from(&items(&[9]));
+        assert_eq!(t.steps_recorded(), 3);
+        assert!(t.ranked_blocks()[0] == (0, 0, 9));
+        t.rollback_txn();
+        assert_same_state(&t, &reference);
+        assert_eq!(t.ranked_blocks(), reference.ranked_blocks());
+        assert_eq!(t.ws_blocks(), t.union.len());
+        // the tracker stays fully usable: same future evolution as the
+        // never-touched reference
+        let mut r = reference;
+        t.record_step(items(&[7]));
+        r.record_step(items(&[7]));
+        assert_same_state(&t, &r);
+    }
+
+    #[test]
+    fn txn_commit_keeps_steps_and_recycles() {
+        let mut t = WorkingSetTracker::new(2).with_freq_ranking(true);
+        t.record_step(items(&[0]));
+        t.record_step(items(&[1]));
+        t.begin_txn();
+        t.record_step(items(&[2])); // evicts step {0} into the journal
+        t.commit_txn();
+        assert_eq!(t.steps_recorded(), 2);
+        assert_eq!(t.ranked_blocks(), items(&[2, 1]));
+        assert!(!t.spare.is_empty(), "committed evictions are recycled");
+        // txn calls without a scope are harmless no-ops
+        t.rollback_txn();
+        t.commit_txn();
+        assert_eq!(t.steps_recorded(), 2);
+    }
+
+    #[test]
+    fn txn_rollback_handles_more_steps_than_the_window() {
+        // regression: a txn recording MORE steps than the window evicts
+        // its own steps — those must be forgotten, not resurrected, and
+        // the pre-txn front must come back exactly
+        let mut t = WorkingSetTracker::new(1).with_freq_ranking(true);
+        t.record_step(items(&[1]));
+        let reference = t.clone();
+        t.begin_txn();
+        t.record_step(items(&[2])); // evicts pre-txn {1}
+        t.record_step(items(&[3])); // evicts txn-recorded {2}
+        assert_eq!(t.steps_recorded(), 1);
+        t.rollback_txn();
+        assert_same_state(&t, &reference);
+        assert_eq!(t.steps_recorded(), 1);
+        assert_eq!(t.ranked_blocks(), items(&[1]));
+        // commit path with the same shape keeps only the window's worth
+        t.begin_txn();
+        t.record_step(items(&[2]));
+        t.record_step(items(&[3]));
+        t.commit_txn();
+        assert_eq!(t.ranked_blocks(), items(&[3]));
+    }
+
+    #[test]
+    fn prop_txn_rollback_equals_clone_snapshot() {
+        prop::check("undo-log == clone snapshot", 50, |rng: &mut Rng| {
+            let w = 1 + rng.below(5);
+            let mut t = WorkingSetTracker::new(w).with_freq_ranking(rng.below(2) == 1);
+            for _ in 0..rng.below(10) {
+                let n = rng.below(5);
+                t.record_step((0..n).map(|_| (0u16, 0u16, rng.below(8) as u32)).collect());
+            }
+            let snapshot = t.clone(); // the old, expensive path
+            t.begin_txn();
+            for _ in 0..1 + rng.below(3) {
+                let n = rng.below(5);
+                t.record_step_from(
+                    &(0..n).map(|_| (0u16, 0u16, rng.below(8) as u32)).collect::<Vec<_>>(),
+                );
+            }
+            t.rollback_txn();
+            prop::assert_eq_prop(t.history.clone(), snapshot.history.clone(), "history")?;
+            prop::assert_eq_prop(t.step, snapshot.step, "step")?;
+            prop::assert_prop(t.freq == snapshot.freq, "freq stats")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn clone_probe_counts_thread_local_clones() {
+        let t = WorkingSetTracker::new(3);
+        let before = ws_clones_this_thread();
+        let _c = t.clone();
+        assert_eq!(ws_clones_this_thread(), before + 1);
     }
 
     #[test]

@@ -146,10 +146,17 @@ struct MockBackend {
     /// Failure trigger; tests can disarm it until the interesting batch
     /// shape has formed.
     armed: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    /// Abort charge accumulated by rolled-back sessions (a fixed 0.05 s
+    /// per rollback), surfaced as `BatchOutcome::abort_time_s` — tests
+    /// assert the engine charges it to the serving clock.
+    aborted_s: f64,
     /// Appended-KV counter per registered request, shared with the test
     /// (the backend is boxed into the engine, this stays observable).
     kv: std::sync::Arc<std::sync::Mutex<HashMap<ReqId, usize>>>,
 }
+
+/// Wall time a rolled-back mock session pretends to have burnt.
+const MOCK_ABORT_S: f64 = 0.05;
 
 impl MockBackend {
     fn new(ws: HashMap<ReqId, usize>, fail_on: Option<(ReqId, MemoryError)>) -> Self {
@@ -157,6 +164,7 @@ impl MockBackend {
             ws,
             fail_on,
             armed: std::sync::Arc::new(std::sync::atomic::AtomicBool::new(true)),
+            aborted_s: 0.0,
             kv: Default::default(),
         }
     }
@@ -202,8 +210,12 @@ impl StepSession for MockSession<'_> {
         Ok(PhaseEvent { layer_start: layer, layer_end: layer + 1, ..Default::default() })
     }
 
-    fn commit(self: Box<Self>) -> anyhow::Result<BatchOutcome> {
-        let mut out = BatchOutcome { iter_time_s: 0.01, ..Default::default() };
+    fn commit(mut self: Box<Self>) -> anyhow::Result<BatchOutcome> {
+        let mut out = BatchOutcome {
+            iter_time_s: 0.01,
+            abort_time_s: std::mem::take(&mut self.be.aborted_s),
+            ..Default::default()
+        };
         for &id in &self.batch.decodes {
             out.tokens.push((id, None));
         }
@@ -215,7 +227,8 @@ impl StepSession for MockSession<'_> {
         Ok(out)
     }
 
-    fn rollback(self: Box<Self>) {
+    fn rollback(mut self: Box<Self>) {
+        self.be.aborted_s += MOCK_ABORT_S;
         let mut kv = self.be.kv.lock().unwrap();
         for (id, n) in self.snap {
             kv.insert(id, n);
@@ -226,6 +239,12 @@ impl StepSession for MockSession<'_> {
 impl Backend for MockBackend {
     fn name(&self) -> &'static str {
         "mock"
+    }
+
+    fn abort_iteration(&mut self) -> f64 {
+        // hand the abandoned-iteration charge to the engine instead of
+        // leaking it into the next committed step's abort_time_s
+        std::mem::take(&mut self.aborted_s)
     }
 
     fn n_layers(&self) -> usize {
@@ -380,6 +399,17 @@ fn mid_batch_hbm_exhaustion_rolls_back_and_retries_same_iteration() {
     // after request 1 already appended
     let out = core.step(now).unwrap();
     assert!(out.ran_batch, "survivors must run in the same iteration");
+    // the rolled-back attempt's burnt time is charged to the serving
+    // clock on top of the committed retry (0.01 s commit + 0.05 s abort)
+    assert!(
+        (out.iter_time_s - (0.01 + MOCK_ABORT_S)).abs() < 1e-9,
+        "abort time must be charged: iter_time_s = {}",
+        out.iter_time_s
+    );
+    assert!(
+        (core.metrics().abort_time_total_s - MOCK_ABORT_S).abs() < 1e-9,
+        "metrics must record the aborted-attempt time"
+    );
     assert_eq!(out.evicted.len(), 1);
     assert_eq!(out.evicted[0].0, 2);
     assert!(matches!(out.evicted[0].1, ServeError::Evicted { .. }));
