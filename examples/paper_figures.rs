@@ -65,5 +65,8 @@ fn main() -> Result<()> {
     if want("layer-model") {
         println!("{}", sim_exp::fig_layer_model(&[0.2, 0.35]));
     }
+    if want("layer-skew") {
+        println!("{}", sim_exp::fig_layer_skew(&[0.2, 0.35]));
+    }
     Ok(())
 }

@@ -86,6 +86,19 @@ pub struct ServingConfig {
     /// Iteration event model (simulator only): per-layer overlap vs the
     /// coarse two-stream model. The `bench` subcommand compares the two.
     pub iter_model: IterModel,
+    /// Layer bands K of the synthetic selection process (simulator
+    /// only): each band draws its own selection per decode step (shared
+    /// drifting hot pool), so cache misses are discovered band by band
+    /// as the decode phases run instead of being smeared uniformly
+    /// across layers. 1 = the old iteration-granular draw. Clamped to
+    /// `n_layers` by the backend.
+    pub sim_selection_bands: usize,
+    /// Churn skew across layer bands in [-1, 1] (simulator only):
+    /// negative concentrates fresh picks — and therefore demand misses —
+    /// in EARLY bands, positive in LATE bands; 0 is uniform. The total
+    /// churn (aggregate miss volume) is preserved for any skew. The
+    /// `bench` subcommand sweeps this into `BENCH_layer_model.json`.
+    pub sim_layer_skew: f64,
 
     // ---- admission ----
     /// Reserve admitted requests' KV against an observed-completion
@@ -128,6 +141,8 @@ impl ServingConfig {
             max_prefetch_blocks: 4096,
             prefetch_freq_ranking: true,
             iter_model: IterModel::PerLayer,
+            sim_selection_bands: 4,
+            sim_layer_skew: 0.0,
             // default-on (measured by the `bench` subcommand): estimate-
             // based reservations admit short completions earlier, and
             // oversubscription is safe because mid-batch exhaustion rolls
@@ -159,6 +174,10 @@ impl ServingConfig {
             max_prefetch_blocks: 0,
             prefetch_freq_ranking: false,
             iter_model: IterModel::PerLayer,
+            // selection fidelity is uniform across every system/ladder
+            // rung (it models the WORKLOAD, not a serving mechanism)
+            sim_selection_bands: 4,
+            sim_layer_skew: 0.0,
             admission_estimates: false,
             prefill_mode: PrefillMode::Chunked,
             chunk_tokens,
@@ -229,6 +248,12 @@ mod tests {
         assert!(ss.admission_estimates && !v.admission_estimates && !so.admission_estimates);
         let np = ServingConfig::sparseserve_np(2048, 2048, 32);
         assert!(!np.prefetch && np.offload && np.ws_batch_control);
+        // selection fidelity (layer bands, no skew) is identical across
+        // every system so comparisons measure mechanisms, not workloads
+        for cfg in [&v, &s, &so, &ss, &np] {
+            assert_eq!(cfg.sim_selection_bands, 4);
+            assert_eq!(cfg.sim_layer_skew, 0.0);
+        }
     }
 
     #[test]

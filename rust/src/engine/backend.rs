@@ -153,7 +153,12 @@ pub trait StepSession {
 
     /// Execute one decode layer for every decode request in the batch.
     /// Typed `MemoryError`s (mid-gather `HbmExhausted`, append
-    /// `DramExhausted`) are rollback-able.
+    /// `DramExhausted`) are rollback-able. This phase is fallible on
+    /// BOTH backends: the simulator's per-layer-band selection touches
+    /// the residency cache as each band starts, so a batch whose
+    /// band-wide working set cannot fit HBM faults typed MID-decode,
+    /// after earlier bands' compute has been burnt (the burnt time is
+    /// charged as `BatchOutcome::abort_time_s` on the retry's commit).
     fn decode_layer(&mut self, layer: usize) -> Result<PhaseEvent>;
 
     /// Finalize: emit tokens, close the KV transaction, return the

@@ -308,7 +308,13 @@ impl EngineCore {
     /// A typed mid-batch memory exhaustion rolls the session back, evicts
     /// the victim and *retries the surviving batch-mates in the same
     /// iteration* — their KV state is byte-identical to pre-step after
-    /// the rollback, so nobody else loses their step.
+    /// the rollback, so nobody else loses their step. This path runs for
+    /// real on BOTH backends: the simulator's decode is mid-phase
+    /// fallible (a layer band whose batch-wide working set cannot fit
+    /// HBM faults typed partway through the decode), so pure-sim
+    /// eviction workloads exercise rollback, retry and abort-time
+    /// charging (`RunMetrics::abort_time_total_s` is nonzero under HBM
+    /// oversubscription).
     ///
     /// Never blocks. When the scheduler is idle or admission-blocked the
     /// returned outcome has `ran_batch == false` and the driver chooses

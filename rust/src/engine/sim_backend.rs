@@ -4,19 +4,40 @@
 //! Fig. 8-calibrated synthetic selection process (sim::selection), while
 //! sharing the *real* scheduler, LRU-cache accounting, working-set,
 //! staging-policy and prefetch machinery with the PJRT backend.
-//! Selection/caching granularity is the block-index *group* (one group =
-//! that block index across all layers and KV heads); cost accounting
-//! multiplies back to per-head blocks.
+//! Selection/caching granularity is the **layer-band group** (one group
+//! = that block index across one band of layers and all KV heads); cost
+//! accounting multiplies back to per-head blocks.
 //!
 //! Execution is session-based ([`super::StepSession`]): the engine
 //! drives `stage` → per-layer phases → `commit`/`rollback`. The
-//! simulator's selection process is iteration-granular (a group spans
-//! all layers), so the aggregate decode work is computed once and its
-//! compute/miss totals are attributed uniformly across the per-layer
-//! phases — each layer's slice of a missed group's bytes is needed when
-//! that layer's gather runs, which is exactly what the per-layer event
-//! model ([`crate::sim::layered_iter`]) overlaps with the remaining
-//! layers' compute.
+//! selection process draws **per layer band** (`ServingConfig::
+//! sim_selection_bands`, K bands over the model's layers): when a decode
+//! phase reaches a band's first layer, that band's selections are drawn
+//! and the residency cache is touched with *that band's* groups — misses
+//! land in the per-layer demand profile where they are discovered, which
+//! is exactly what the per-layer event model
+//! ([`crate::sim::layered_iter`]) overlaps with the remaining layers'
+//! compute. `ServingConfig::sim_layer_skew` tilts miss discovery toward
+//! early or late layers the way real DSAs do.
+//!
+//! ## Mid-decode fallibility
+//!
+//! A band's working set must be simultaneously resident while its gather
+//! runs, so every touched group is pinned for the duration of the band
+//! phase. When a demanded group cannot become resident (the cache is
+//! pinned shut by prefetch stages plus the executing band's own working
+//! set), `decode_layer` fails with a typed
+//! [`MemoryError::HbmExhausted`] naming the request — MID-decode, after
+//! earlier bands' compute has been burnt. This is what makes
+//! `EngineCore::step`'s evict-victim-then-retry path, the undo-log
+//! rollback and `BatchOutcome::abort_time_s` charging all real on
+//! pure-sim eviction workloads (previously the sim's only fallible phase
+//! preceded decode compute, so abort time was provably always zero).
+//! The failing band's compute is attributed *before* its touches run:
+//! the layer was executing when the gather hit the wall, so that time is
+//! burnt either way. Prefill re-fetch stays best-effort (streamed, not
+//! simultaneously resident): a non-insertable chunk re-fetch group still
+//! pays its demand load but never faults.
 //!
 //! ## Zero-clone steady state
 //!
@@ -25,13 +46,14 @@
 //! journaled per touched request and `SelectionModel` /
 //! `WorkingSetTracker` arm their own `begin_txn` record-and-revert
 //! scopes — instead of the old per-iteration clone snapshots, and every
-//! per-step working buffer (selection draw, working-set items, ranked
-//! staging plan, per-layer accumulators, residency log) lives in a
-//! recycled [`StepScratch`] owned by the backend. Rollback restores
-//! every batch request's simulated state (KV length, selection RNG,
-//! working-set history) and the residency cache byte-identically, so a
-//! retried batch replays exactly; the aborted attempt's burnt compute is
-//! surfaced as `BatchOutcome::abort_time_s` on the next commit.
+//! per-step working buffer (per-band selection draws, working-set items,
+//! ranked staging plan, per-layer accumulators, residency log, band
+//! pins) lives in a recycled [`StepScratch`] owned by the backend.
+//! Rollback restores every batch request's simulated state (KV length,
+//! selection RNG, working-set history) and the residency cache
+//! byte-identically, so a retried batch replays exactly; the aborted
+//! attempt's burnt compute is surfaced as `BatchOutcome::abort_time_s`
+//! on the next commit.
 
 use std::collections::HashMap;
 
@@ -54,8 +76,8 @@ struct SimReq {
     len: usize,
     selection: SelectionModel,
     ws: WorkingSetTracker,
-    /// DSA budget in block groups (per-request override or the config
-    /// default).
+    /// DSA budget in block groups per layer band (per-request override
+    /// or the config default).
     budget_groups: usize,
 }
 
@@ -71,27 +93,47 @@ struct StepScratch {
     layer_compute: Vec<f64>,
     layer_miss_blocks: Vec<usize>,
     layer_demand: Vec<f64>,
-    /// Selection-draw buffer (`next_selection_into`).
+    /// Per-band decode attribution (compute per layer, missed groups).
+    band_compute_per_layer: Vec<f64>,
+    band_miss_groups: Vec<usize>,
+    /// Groups pinned by the band phase currently in flight (its working
+    /// set must stay simultaneously resident); unpinned at band end.
+    band_pins: Vec<BlockKey>,
+    /// Per-decode-request selection buffers for the in-flight band.
+    band_sels: Vec<Vec<u32>>,
+    /// Per-decode-request accumulated (band, head, block) items of the
+    /// whole step (recorded as ONE working-set step at the last band).
+    ws_accum: Vec<Vec<SelItem>>,
+    /// Scratch for prefill past-group touches.
     sel: Vec<u32>,
-    /// Working-set item buffer (`record_step_from`).
-    ws_items: Vec<SelItem>,
     /// Ranked working-set buffer (`ranked_blocks_capped_into`).
     ranked: Vec<SelItem>,
-    /// Per-request effective KV tokens of the decode batch.
+    /// Per-request effective KV tokens of the decode batch (per band).
     kv_tokens: Vec<usize>,
 }
 
 pub struct SimBackend {
     pub cfg: ServingConfig,
     pub cost: CostModel,
-    /// HBM residency cache at block-group granularity.
+    /// HBM residency cache at band-group granularity.
     cache: LruCache<()>,
     reqs: HashMap<ReqId, SimReq>,
-    /// per-head blocks represented by one cached group.
+    /// Layer bands of the selection process (1..=n_layers).
+    n_bands: usize,
+    /// `[start, end)` layers of each band.
+    band_bounds: Vec<(usize, usize)>,
+    /// layer -> band lookup.
+    layer_band: Vec<usize>,
+    /// per-head blocks represented by one cached band-group (mean when
+    /// the band count does not divide the layer count).
     group_blocks: usize,
     group_bytes: usize,
     seed: u64,
-    /// Working-set staging bookkeeping (group granularity).
+    /// Monotone admission counter mixed into per-request selection
+    /// seeds, so a released request id reused by a later admission draws
+    /// a fresh RNG stream instead of replaying the old one.
+    admissions: u64,
+    /// Working-set staging bookkeeping (band-group granularity).
     prefetcher: PrefetchEngine,
     /// Groups staged for the current iteration, consumed at commit
     /// (their PCIe time overlaps that batch's compute).
@@ -109,17 +151,37 @@ pub struct SimBackend {
 
 impl SimBackend {
     pub fn new(cfg: ServingConfig, spec: ModelSpec, hw: HardwareSpec) -> Self {
-        let group_blocks = spec.n_layers * spec.n_kv_heads;
+        let n_bands = cfg.sim_selection_bands.clamp(1, spec.n_layers);
+        let group_blocks = (spec.n_layers * spec.n_kv_heads / n_bands).max(1);
         let group_bytes = group_blocks * spec.block_bytes();
         let capacity = (hw.hbm_kv_bytes / group_bytes).max(1);
+        // contiguous, near-equal layer bands
+        let mut band_bounds = Vec::with_capacity(n_bands);
+        let (base, rem) = (spec.n_layers / n_bands, spec.n_layers % n_bands);
+        let mut l = 0;
+        for b in 0..n_bands {
+            let sz = base + usize::from(b < rem);
+            band_bounds.push((l, l + sz));
+            l += sz;
+        }
+        let mut layer_band = vec![0usize; spec.n_layers];
+        for (b, &(l0, l1)) in band_bounds.iter().enumerate() {
+            for lb in layer_band.iter_mut().take(l1).skip(l0) {
+                *lb = b;
+            }
+        }
         Self {
             cfg,
             cost: CostModel::new(spec, hw),
             cache: LruCache::new(capacity),
             reqs: HashMap::new(),
+            n_bands,
+            band_bounds,
+            layer_band,
             group_blocks,
             group_bytes,
             seed: 0x51,
+            admissions: 0,
             prefetcher: PrefetchEngine::new(0), // no real bytes to copy
             staged_groups: 0,
             staged_deferred_groups: 0,
@@ -137,6 +199,13 @@ impl SimBackend {
         self.cache.capacity() * self.group_bytes
     }
 
+    /// Resident cache entries currently pinned (prefetch stages + the
+    /// in-flight band's working set) — the conservation quantity the
+    /// rollback tests assert on.
+    pub fn pinned_entries(&self) -> usize {
+        self.cache.pinned_len()
+    }
+
     /// Reference decode iteration (SLO unit).
     pub fn decode_iter_ref(&self) -> f64 {
         let kv = if self.cfg.sparse_attention {
@@ -151,23 +220,58 @@ impl SimBackend {
         self.cfg.budget_blocks(self.spec().block_size)
     }
 
-    /// Touch the cache for a request's selected groups; returns misses.
-    /// Hits on staged groups consume their prefetch pin (the staged
-    /// bytes already paid for the transfer on the overlapped stream).
-    /// Inserts are logged (in the recycled scratch) for session rollback.
-    fn touch_groups(&mut self, req: ReqId, groups: &[u32]) -> usize {
+    /// Touch the cache with one band of a decode request's selection,
+    /// pinning every touched group until the band phase ends (the
+    /// in-flight gather needs them simultaneously resident). Hits on
+    /// staged groups consume their prefetch pin (the staged bytes
+    /// already paid for the transfer on the overlapped stream). Inserts
+    /// are logged (in the recycled scratch) for session rollback.
+    ///
+    /// Returns the misses discovered, or a typed `HbmExhausted` when a
+    /// demanded group cannot become resident — the cache is pinned shut
+    /// by stages plus the executing band's own working set, i.e. HBM
+    /// cannot hold this band's batch-wide working set.
+    fn touch_band_groups(
+        &mut self,
+        req: ReqId,
+        band: u16,
+        groups: &[u32],
+    ) -> Result<usize, MemoryError> {
         let mut misses = 0;
         for &g in groups {
-            let key = BlockKey::new(req, 0, 0, g);
+            let key = BlockKey::new(req, band, 0, g);
             if self.cache.get(&key).is_some() {
                 if self.prefetcher.note_access(&key) {
                     self.cache.unpin(&key);
                 }
             } else {
                 misses += 1;
-                // residency only when the cache can take it without
-                // evicting a pinned stage (a skipped insert still pays
-                // the demand load)
+                if !self.cache.can_accept() {
+                    return Err(MemoryError::HbmExhausted { req });
+                }
+                let evicted = self.cache.insert(key, ()).map(|(k, ())| k);
+                self.scratch.cache_log.push((key, evicted));
+            }
+            self.cache.pin(&key);
+            self.scratch.band_pins.push(key);
+        }
+        Ok(misses)
+    }
+
+    /// Best-effort cache touch (prefill past-KV re-fetch): a skipped
+    /// insert still pays the demand load, and nothing is pinned —
+    /// prefill streams the past KV layer by layer instead of needing it
+    /// simultaneously resident, so it never faults on residency.
+    fn touch_groups_best_effort(&mut self, req: ReqId, band: u16, groups: &[u32]) -> usize {
+        let mut misses = 0;
+        for &g in groups {
+            let key = BlockKey::new(req, band, 0, g);
+            if self.cache.get(&key).is_some() {
+                if self.prefetcher.note_access(&key) {
+                    self.cache.unpin(&key);
+                }
+            } else {
+                misses += 1;
                 if self.cache.can_accept() {
                     let evicted = self.cache.insert(key, ()).map(|(k, ())| k);
                     self.scratch.cache_log.push((key, evicted));
@@ -175,6 +279,14 @@ impl SimBackend {
             }
         }
         misses
+    }
+
+    /// Drop the in-flight band's residency pins (its gather finished, or
+    /// the session is closing).
+    fn release_band_pins(&mut self) {
+        while let Some(key) = self.scratch.band_pins.pop() {
+            self.cache.unpin(&key);
+        }
     }
 
     /// Stage the working sets of `current` decodes (this iteration,
@@ -187,11 +299,19 @@ impl SimBackend {
         if !(self.cfg.prefetch && self.cfg.offload && self.cfg.sparse_attention) {
             return 0;
         }
+        // keep the executing batch's (and the hinted next batch's)
+        // per-band demand free-or-evictable: stages pinning HBM shut
+        // would turn a band's own working set into a spurious
+        // mid-decode HbmExhausted eviction
+        let mut demand = 0usize;
+        for &id in current.iter().chain(next) {
+            if let Some(r) = self.reqs.get(&id) {
+                demand += r.budget_groups;
+            }
+        }
         let policy = StagingPolicy {
             max_blocks: self.cfg.max_prefetch_blocks,
-            // keep one selection's worth of groups free-or-evictable so
-            // demand misses can still become resident behind the stages
-            headroom: self.budget_groups().min(self.cache.capacity() / 2),
+            headroom: demand.min(self.cache.capacity()),
         };
         let mut ranked = std::mem::take(&mut self.scratch.ranked);
         let mut staged = 0usize;
@@ -210,8 +330,8 @@ impl SimBackend {
                     Some(r) => r.ws.ranked_blocks_capped_into(want, &mut ranked),
                     None => continue,
                 }
-                for &(_, _, g) in &ranked {
-                    let key = BlockKey::new(id, 0, 0, g);
+                for &(band, head, g) in &ranked {
+                    let key = BlockKey::new(id, band, head, g);
                     match policy.admit(&self.cache, &key, staged + deferred) {
                         StageAdmission::Stop => break 'all,
                         StageAdmission::SkipResident => continue,
@@ -247,74 +367,115 @@ impl SimBackend {
 
 /// One in-flight simulated batch (see [`StepSession`]). All per-step
 /// buffers live in the backend's recycled [`StepScratch`]; the session
-/// itself holds only the aggregate decode attribution.
+/// itself holds only small per-phase state.
 struct SimSession<'s> {
     be: &'s mut SimBackend,
     batch: &'s Batch,
     requests: &'s HashMap<ReqId, Request>,
     tokens: Vec<(ReqId, Option<i32>)>,
-    /// Aggregate decode work, computed once at `decode_layer(0)` and
-    /// attributed uniformly across layers (the sim's selection process
-    /// is iteration-granular; see module docs).
-    decode_compute_per_layer: f64,
-    decode_miss_groups: usize,
-    /// Prefill chunk past-refetch misses (groups), attributed uniformly.
-    chunk_miss_groups: usize,
+    /// Prefill chunk past-refetch misses of the band currently being
+    /// driven (groups), attributed to that band's layers.
+    chunk_band_miss: usize,
     hits_at_start: u64,
     staged: bool,
 }
 
 impl<'s> SimSession<'s> {
-    /// Aggregate decode work for the whole batch (selection, cache
-    /// touches, KV growth); run once when layer 0 is driven. Arms each
-    /// decode's undo scopes (len journal + sel/ws txns) before its first
-    /// mutation — the zero-clone replacement for the old snapshots.
-    fn run_decode_aggregate(&mut self) -> Result<()> {
+    /// Run one layer band of the decode batch: draw every decode's band
+    /// selection, attribute the band's compute, then touch the residency
+    /// cache with the band's groups (fallible, typed). Undo scopes (len
+    /// journal + sel/ws txns) are armed at band 0, before any mutation —
+    /// the zero-clone replacement for the old snapshots; working-set
+    /// recording and KV growth close the step at the last band.
+    fn run_decode_band(&mut self, band: usize) -> Result<(), MemoryError> {
         let bs = self.be.spec().block_size;
+        let n_layers = self.be.spec().n_layers;
+        let heads = self.be.spec().n_kv_heads;
         let sparse = self.be.cfg.sparse_attention;
         let offload = self.be.cfg.offload;
-        let n_layers = self.be.spec().n_layers;
+        let (l0, l1) = self.be.band_bounds[band];
+        let band_layers = l1 - l0;
+        let last_band = self.be.n_bands - 1;
+
+        // 1. selection draws (per request, this band only)
         let mut kv_tokens = std::mem::take(&mut self.be.scratch.kv_tokens);
-        let mut sel = std::mem::take(&mut self.be.scratch.sel);
-        let mut ws_items = std::mem::take(&mut self.be.scratch.ws_items);
         kv_tokens.clear();
-        let mut miss_groups = 0usize;
-        for &id in self.batch.decodes.iter() {
-            let (n_sealed, len) = {
-                let r = self.be.reqs.get(&id).expect("unregistered");
-                (r.len / bs, r.len)
-            };
-            self.be.scratch.touched.push((id, len, sparse));
-            if sparse {
-                {
-                    let r = self.be.reqs.get_mut(&id).unwrap();
+        for (i, &id) in self.batch.decodes.iter().enumerate() {
+            let mut sel = std::mem::take(&mut self.be.scratch.band_sels[i]);
+            sel.clear();
+            let r = self.be.reqs.get_mut(&id).expect("unregistered");
+            if band == 0 {
+                // arm the undo scopes before this request's first mutation
+                if sparse {
                     r.selection.begin_txn();
                     r.ws.begin_txn();
-                    let budget_groups = r.budget_groups;
-                    r.selection.next_selection_into(n_sealed, budget_groups, &mut sel);
                 }
-                if offload {
-                    miss_groups += self.be.touch_groups(id, &sel);
-                }
-                ws_items.clear();
-                ws_items.extend(sel.iter().map(|&b| (0u16, 0u16, b)));
-                self.be.reqs.get_mut(&id).unwrap().ws.record_step_from(&ws_items);
+                self.be.scratch.touched.push((id, r.len, sparse));
+                self.tokens.push((id, None));
+            }
+            let len = r.len;
+            if sparse {
+                let budget = r.budget_groups;
+                r.selection.next_band_selection_into(band, len / bs, budget, &mut sel);
                 kv_tokens.push((sel.len() * bs + len % bs).min(len).max(1));
             } else {
                 kv_tokens.push(len.max(1));
             }
-            self.be.reqs.get_mut(&id).unwrap().len += 1;
-            self.tokens.push((id, None));
+            self.be.scratch.band_sels[i] = sel;
         }
+
+        // 2. the band's compute is attributed BEFORE its cache touches:
+        // on a mid-band memory fault the layer was already executing, so
+        // this time is burnt (rollback charges it as abort time)
         let compute = self
             .be
             .cost
-            .decode_iter_time(self.batch.decodes.len(), &kv_tokens);
-        self.decode_compute_per_layer = compute / n_layers as f64;
-        self.decode_miss_groups = miss_groups;
+            .decode_iter_time(self.batch.decodes.len(), &kv_tokens)
+            * band_layers as f64
+            / n_layers as f64;
+        let per_layer = compute / band_layers.max(1) as f64;
+        self.be.scratch.band_compute_per_layer[band] = per_layer;
+        for l in l0..l1 {
+            self.be.scratch.layer_compute[l] += per_layer;
+        }
         self.be.scratch.kv_tokens = kv_tokens;
-        self.be.scratch.sel = sel;
-        self.be.scratch.ws_items = ws_items;
+
+        // 3. residency touches: misses are DISCOVERED at this band's
+        // layers, and insertion faults typed when HBM cannot hold the
+        // executing band's batch-wide working set
+        let mut miss = 0usize;
+        if sparse && offload {
+            for (i, &id) in self.batch.decodes.iter().enumerate() {
+                let sel = std::mem::take(&mut self.be.scratch.band_sels[i]);
+                let res = self.be.touch_band_groups(id, band as u16, &sel);
+                self.be.scratch.band_sels[i] = sel;
+                miss += res?;
+            }
+        }
+        self.be.scratch.band_miss_groups[band] = miss;
+        for l in l0..l1 {
+            self.be.scratch.layer_miss_blocks[l] += miss * heads;
+        }
+
+        // 4. working-set recording + KV growth close the step at the
+        // last band (every band's draw used the same pre-step length)
+        for (i, &id) in self.batch.decodes.iter().enumerate() {
+            if sparse {
+                let sel = std::mem::take(&mut self.be.scratch.band_sels[i]);
+                self.be.scratch.ws_accum[i]
+                    .extend(sel.iter().map(|&b| (band as u16, 0u16, b)));
+                self.be.scratch.band_sels[i] = sel;
+            }
+            if band == last_band {
+                let items = std::mem::take(&mut self.be.scratch.ws_accum[i]);
+                let r = self.be.reqs.get_mut(&id).expect("unregistered");
+                if sparse {
+                    r.ws.record_step_from(&items);
+                }
+                r.len += 1;
+                self.be.scratch.ws_accum[i] = items;
+            }
+        }
         Ok(())
     }
 }
@@ -346,16 +507,22 @@ impl StepSession for SimSession<'_> {
             PrefillWork::Chunk { start, len, is_last, .. } => {
                 compute_s = self.be.cost.prefill_layer_time(*len, *start) * save_f;
                 // offloaded chunked prefill re-fetches evicted past KV;
-                // the groups span all layers, so touch once (first driven
-                // layer) and attribute each layer its slice of the bytes
-                if layer == 0 && self.be.cfg.offload && *start > 0 {
-                    let mut past = std::mem::take(&mut self.be.scratch.sel);
-                    past.clear();
-                    past.extend(0..(*start / bs) as u32);
-                    self.chunk_miss_groups = self.be.touch_groups(req_id, &past);
-                    self.be.scratch.sel = past;
+                // each band's groups are touched when the chunk reaches
+                // that band's first layer (best-effort: prefill streams
+                // the past, it never faults on residency), so re-fetch
+                // misses are attributed to the layers that discover them
+                if self.be.cfg.offload && *start > 0 {
+                    let band = self.be.layer_band[layer];
+                    if layer == self.be.band_bounds[band].0 {
+                        let mut past = std::mem::take(&mut self.be.scratch.sel);
+                        past.clear();
+                        past.extend(0..(*start / bs) as u32);
+                        self.chunk_band_miss =
+                            self.be.touch_groups_best_effort(req_id, band as u16, &past);
+                        self.be.scratch.sel = past;
+                    }
+                    miss_blocks += self.chunk_band_miss * spec.n_kv_heads;
                 }
-                miss_blocks += self.chunk_miss_groups * spec.n_kv_heads;
                 if layer + 1 == spec.n_layers {
                     let prev = self.be.reqs.get(&req_id).expect("unregistered").len;
                     self.be.scratch.touched.push((req_id, prev, false));
@@ -398,15 +565,16 @@ impl StepSession for SimSession<'_> {
     }
 
     fn decode_layer(&mut self, layer: usize) -> Result<PhaseEvent> {
-        if layer == 0 {
-            self.run_decode_aggregate()?;
+        let band = self.be.layer_band[layer];
+        if layer == self.be.band_bounds[band].0 {
+            // the previous band's gather is done: its residency pins drop
+            self.be.release_band_pins();
+            self.run_decode_band(band)?;
         }
-        let compute_s = self.decode_compute_per_layer;
-        // one missed group spans all layers: each layer's gather needs
-        // its per-head slice of the group's bytes
-        let miss_blocks = self.decode_miss_groups * self.be.spec().n_kv_heads;
-        self.be.scratch.layer_compute[layer] += compute_s;
-        self.be.scratch.layer_miss_blocks[layer] += miss_blocks;
+        let compute_s = self.be.scratch.band_compute_per_layer[band];
+        // one missed band-group spans the band's layers: each layer's
+        // gather needs its per-head slice of the group's bytes
+        let miss_blocks = self.be.scratch.band_miss_groups[band] * self.be.spec().n_kv_heads;
         Ok(PhaseEvent {
             layer_start: layer,
             layer_end: layer + 1,
@@ -418,6 +586,8 @@ impl StepSession for SimSession<'_> {
 
     fn commit(self: Box<Self>) -> Result<BatchOutcome> {
         let SimSession { be, tokens, hits_at_start, .. } = *self;
+        // the last band's gather is done; its residency pins drop
+        be.release_band_pins();
         // the step is final: close every armed undo scope
         for &(id, _, armed) in &be.scratch.touched {
             if armed {
@@ -432,7 +602,7 @@ impl StepSession for SimSession<'_> {
         // ------------- PCIe streams & iteration timing -------------
         // Prefetch (incl. deferred stages issued under this compute) was
         // put on the copy stream before the batch; demand misses are
-        // discovered layer by layer and charged by the configured model.
+        // discovered band by band and charged by the configured model.
         let staged_groups = std::mem::take(&mut be.staged_groups);
         let deferred_groups = std::mem::take(&mut be.staged_deferred_groups);
         let prefetch_blocks = (staged_groups + deferred_groups) * be.group_blocks;
@@ -490,6 +660,10 @@ impl StepSession for SimSession<'_> {
 
     fn rollback(self: Box<Self>) {
         let SimSession { be, .. } = *self;
+        // drop the failed band's in-flight residency pins first, so the
+        // cache-log unwind below removes unpinned entries (pin
+        // conservation: every pin this session took is released here)
+        be.release_band_pins();
         // the aborted attempt's burnt compute is charged to the serving
         // clock via the next committed outcome's abort_time_s
         be.aborted_time_s += be.scratch.layer_compute.iter().sum::<f64>();
@@ -536,11 +710,19 @@ impl Backend for SimBackend {
             Some(tokens) => tokens.div_ceil(self.spec().block_size).max(1),
             None => self.budget_groups(),
         };
+        // mix a monotone admission counter into the seed: a released id
+        // reused by a later admission must NOT replay the old request's
+        // selection stream
+        self.admissions = self.admissions.wrapping_add(1);
+        let seed = self.seed
+            ^ (req.id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ self.admissions.wrapping_mul(0xBF58_476D_1CE4_E5B9);
         self.reqs.insert(
             req.id,
             SimReq {
                 len: 0,
-                selection: SelectionModel::new(self.seed ^ req.id as u64),
+                selection: SelectionModel::new(seed)
+                    .with_bands(self.n_bands, self.cfg.sim_layer_skew),
                 ws: WorkingSetTracker::new(self.cfg.ws_window)
                     .with_freq_ranking(self.cfg.prefetch_freq_ranking),
                 budget_groups,
@@ -560,6 +742,12 @@ impl Backend for SimBackend {
     }
 
     fn abort_iteration(&mut self) -> f64 {
+        // a rolled-back session already dropped its band pins; drain
+        // defensively so an abandoned iteration can never leak one
+        debug_assert!(self.scratch.band_pins.is_empty(), "band pins leaked past rollback");
+        while let Some(key) = self.scratch.band_pins.pop() {
+            self.cache.unpin(&key);
+        }
         // the abandoned iteration's staging accounting must not leak
         // into the next committed step's outcome: retire the current
         // stages AND the deferred ones (the first end_iteration promotes
@@ -582,7 +770,7 @@ impl Backend for SimBackend {
         let kv_bytes: usize = self
             .reqs
             .values()
-            .map(|r| r.len.div_ceil(bs) * self.group_bytes)
+            .map(|r| r.len.div_ceil(bs) * self.group_bytes * self.n_bands)
             .sum();
         if self.cfg.offload {
             // DRAM is home; HBM holds the LRU residency cache.
@@ -603,17 +791,19 @@ impl Backend for SimBackend {
 
     fn decode_ws_bytes(&mut self, req: ReqId) -> usize {
         let group_bytes = self.group_bytes;
+        let n_bands = self.n_bands;
         let spec_bs = self.spec().block_size;
         let r = self.reqs.get_mut(&req).expect("unregistered");
         let budget = r.budget_groups;
         if !self.cfg.sparse_attention {
-            // dense attention touches the whole context
-            return r.len.div_ceil(spec_bs) * group_bytes;
+            // dense attention touches the whole context (every band)
+            return r.len.div_ceil(spec_bs) * group_bytes * n_bands;
         }
         if r.ws.steps_recorded() == 0 {
-            // no history yet: assume the full budget is hot
-            return budget.min(r.len.div_ceil(spec_bs)).max(1) * group_bytes;
+            // no history yet: assume the full budget is hot in every band
+            return budget.min(r.len.div_ceil(spec_bs)).max(1) * group_bytes * n_bands;
         }
+        // the union already counts band-groups across all bands
         r.ws.ws_blocks() * group_bytes
     }
 
@@ -623,7 +813,11 @@ impl Backend for SimBackend {
         requests: &'s HashMap<ReqId, Request>,
     ) -> Result<Box<dyn StepSession + 's>> {
         let n_layers = self.spec().n_layers;
+        let n_bands = self.n_bands;
         let hits_at_start = self.prefetcher.stats.hits;
+        // a previous session always drains its pins at commit/rollback
+        debug_assert!(self.scratch.band_pins.is_empty(), "stale band pins");
+        self.release_band_pins();
         // reset the recycled per-step scratch (clear, never free)
         let s = &mut self.scratch;
         s.touched.clear();
@@ -632,14 +826,25 @@ impl Backend for SimBackend {
         s.layer_compute.resize(n_layers, 0.0);
         s.layer_miss_blocks.clear();
         s.layer_miss_blocks.resize(n_layers, 0);
+        s.band_compute_per_layer.clear();
+        s.band_compute_per_layer.resize(n_bands, 0.0);
+        s.band_miss_groups.clear();
+        s.band_miss_groups.resize(n_bands, 0);
+        if s.band_sels.len() < batch.decodes.len() {
+            s.band_sels.resize_with(batch.decodes.len(), Vec::new);
+        }
+        if s.ws_accum.len() < batch.decodes.len() {
+            s.ws_accum.resize_with(batch.decodes.len(), Vec::new);
+        }
+        for v in &mut s.ws_accum {
+            v.clear();
+        }
         Ok(Box::new(SimSession {
             be: self,
             batch,
             requests,
             tokens: Vec::new(),
-            decode_compute_per_layer: 0.0,
-            decode_miss_groups: 0,
-            chunk_miss_groups: 0,
+            chunk_band_miss: 0,
             hits_at_start,
             staged: false,
         }))
@@ -704,6 +909,36 @@ mod tests {
             warm_loads < first.blocks_loaded / 2,
             "locality must cut loads: {warm_loads} vs {first:?}"
         );
+    }
+
+    #[test]
+    fn misses_are_attributed_to_the_band_that_discovers_them() {
+        // the uniform smear is gone: with K bands, a decode step's misses
+        // must land in the per-layer profile at their band's layers, and
+        // every band must discover SOME misses on a cold start
+        let mut b = mk(ServingConfig::sparseserve_np(2048, 2048, 32));
+        assert_eq!(b.n_bands, 4);
+        let reqs = prefill_all(&mut b, 1, 16_000);
+        let batch = Batch { decodes: vec![1], prefill: None };
+        let mut sess = b.begin_step(&batch, &reqs).unwrap();
+        sess.stage(&StageHints::default());
+        let mut per_layer = Vec::new();
+        for layer in 0..32 {
+            per_layer.push(sess.decode_layer(layer).unwrap().miss_blocks);
+        }
+        drop(sess.commit().unwrap());
+        // cold start: every band misses its whole selection
+        for band in 0..4 {
+            assert!(
+                per_layer[band * 8] > 0,
+                "band {band} must discover its own misses: {per_layer:?}"
+            );
+        }
+        // within a band the attribution is uniform; across band
+        // boundaries it is free to differ (independent draws)
+        for layer in 0..32 {
+            assert_eq!(per_layer[layer], per_layer[(layer / 8) * 8], "uniform within band");
+        }
     }
 
     #[test]
@@ -829,11 +1064,32 @@ mod tests {
         assert_eq!(before.n_registered, 1);
         b.release(1);
         assert_eq!(b.mem_stats(), MemStats::default());
+        assert_eq!(b.pinned_entries(), 0, "release must drop every pin");
     }
 
-    /// Backend with a deliberately small HBM cache (`groups` block
-    /// groups) to create eviction pressure — the regime the prefetcher
-    /// exists for.
+    #[test]
+    fn reused_request_id_draws_a_fresh_selection_stream() {
+        // regression: SelectionModel::new(seed ^ req.id) replayed an
+        // identical RNG stream when a released id was reused; the
+        // admission counter mixed into the seed must make them diverge
+        let mut b = mk(ServingConfig::sparseserve(2048, 2048, 32));
+        let r = Request::new(7, 8192, 64, 0.0);
+        b.register(&r).unwrap();
+        let first: Vec<Vec<u32>> = (0..4)
+            .map(|_| b.reqs.get_mut(&7).unwrap().selection.next_selection(512, 32))
+            .collect();
+        b.release(7);
+        b.register(&r).unwrap();
+        let second: Vec<Vec<u32>> = (0..4)
+            .map(|_| b.reqs.get_mut(&7).unwrap().selection.next_selection(512, 32))
+            .collect();
+        assert_ne!(first, second, "reused id must not replay the old stream");
+    }
+
+    /// Backend with a deliberately small HBM cache (`groups`
+    /// iteration-granular block groups, i.e. `groups * n_bands`
+    /// band-group slots) to create eviction pressure — the regime the
+    /// prefetcher exists for.
     fn mk_pressured(cfg: ServingConfig, groups: usize) -> SimBackend {
         let spec = ModelSpec::lwm_7b();
         let mut hw = HardwareSpec::a100_40gb();
@@ -950,6 +1206,77 @@ mod tests {
     }
 
     #[test]
+    fn layer_skew_moves_stall_early_vs_late_at_equal_totals() {
+        // acceptance criterion: per-layer stall must vary monotonically
+        // with the layer-skew knob — misses concentrated in EARLY layers
+        // keep the copy stream busy under the remaining layers' compute
+        // and stall strictly less than the same miss volume concentrated
+        // in LATE layers (the stream idles, then the copies land past
+        // the compute window). Three decodes under heavy cache pressure
+        // put per-iteration demand in the same regime as compute, where
+        // discovery timing matters.
+        let run_skewed = |skew: f64| -> (f64, usize) {
+            let mut cfg = ServingConfig::sparseserve_np(2048, 2048, 32);
+            cfg.ws_batch_control = false;
+            cfg.sim_layer_skew = skew;
+            // 224 band slots: 3 x 64 in-flight pins fit, but the window
+            // union (~1000 band-groups) thrashes hard
+            let mut b = mk_pressured(cfg, 56);
+            let mut reqs = HashMap::new();
+            for id in 1..=3u32 {
+                let mut r = Request::new(id, 16_000, 512, 0.0);
+                r.phase = Phase::Prefill;
+                b.register(&r).unwrap();
+                reqs.insert(id, r);
+                let batch = Batch {
+                    decodes: vec![],
+                    prefill: Some(PrefillWork::Chunk {
+                        req: id, start: 0, len: 16_000, is_last: true,
+                    }),
+                };
+                run(&mut b, &batch, &reqs);
+                reqs.get_mut(&id).unwrap().phase = Phase::Decode;
+            }
+            let batch = Batch { decodes: vec![1, 2, 3], prefill: None };
+            let (mut stall, mut loads) = (0.0, 0usize);
+            for _ in 0..30 {
+                let o = run(&mut b, &batch, &reqs);
+                stall += o.stall_time_s;
+                loads += o.blocks_loaded;
+            }
+            (stall, loads)
+        };
+        let (stall_early, loads_early) = run_skewed(-1.0);
+        let (stall_flat, loads_flat) = run_skewed(0.0);
+        let (stall_late, loads_late) = run_skewed(1.0);
+        // equal totals: the skew tilt preserves aggregate churn, so the
+        // three runs move comparable traffic
+        let max_loads = loads_early.max(loads_flat).max(loads_late) as f64;
+        let min_loads = loads_early.min(loads_flat).min(loads_late) as f64;
+        assert!(min_loads > 0.0, "workload must be miss-heavy");
+        assert!(
+            max_loads / min_loads < 1.5,
+            "skew must not change miss totals: {loads_early} {loads_flat} {loads_late}"
+        );
+        // strict endpoint ordering; flat sits between the tilts (ties
+        // with early allowed: once the stream saturates from the first
+        // band they price identically)
+        assert!(
+            stall_late > stall_early * 1.02 + 1e-4,
+            "late-skewed misses must stall strictly more: \
+             early={stall_early} flat={stall_flat} late={stall_late}"
+        );
+        assert!(
+            stall_early <= stall_flat + 0.05 * stall_late + 1e-9,
+            "early must not exceed flat: {stall_early} vs {stall_flat}"
+        );
+        assert!(
+            stall_flat <= stall_late + 1e-9,
+            "flat must not exceed late: {stall_flat} vs {stall_late}"
+        );
+    }
+
+    #[test]
     fn unused_stages_are_accounted_as_wasted() {
         let mut b = mk_pressured(ServingConfig::sparseserve(2048, 2048, 32), 96);
         let reqs = prefill_two(&mut b, 16_000);
@@ -966,6 +1293,7 @@ mod tests {
         let out2 = drive_step(&mut b, &idle, &reqs, &StageHints::default()).unwrap();
         assert!(out2.prefetch_wasted > 0);
         assert!(b.prefetch_stats().wasted > 0);
+        assert_eq!(b.pinned_entries(), 0, "retired stages must drop their pins");
         // wasted stages were unpinned: later batches keep running normally
         run(&mut b, &batch, &reqs);
     }
@@ -1005,6 +1333,7 @@ mod tests {
         b.release(2);
         assert!(b.prefetch_stats().cancelled > 0, "cancel must drop stages");
         assert_eq!(b.mem_stats(), MemStats::default());
+        assert_eq!(b.pinned_entries(), 0, "cancelled stages must drop their pins");
         // a fresh request can use the full cache again (nothing pinned)
         let reqs2 = prefill_all(&mut b, 9, 16_000);
         let b9 = Batch { decodes: vec![9], prefill: None };
@@ -1058,6 +1387,49 @@ mod tests {
     }
 
     #[test]
+    fn decode_band_exceeding_hbm_is_typed_mid_decode_and_charges_abort() {
+        // the tentpole's bug fix: the decode phase itself is now
+        // fallible. A batch whose per-band working set cannot fit HBM
+        // must fail typed MID-decode — after compute has been burnt — so
+        // rollback charges nonzero abort time (previously the sim's only
+        // fallible phase preceded decode compute and abort time was
+        // provably zero).
+        let mut cfg = ServingConfig::sparseserve_np(2048, 2048, 32);
+        cfg.ws_batch_control = false;
+        // 3 decodes x 64 band-groups = 192 > 40 * 4 = 160 band slots
+        let mut b = mk_pressured(cfg, 40);
+        let mut reqs = HashMap::new();
+        for id in 1..=3u32 {
+            let mut r = Request::new(id, 16_000, 512, 0.0);
+            r.phase = Phase::Prefill;
+            b.register(&r).unwrap();
+            reqs.insert(id, r);
+            let batch = Batch {
+                decodes: vec![],
+                prefill: Some(PrefillWork::Chunk { req: id, start: 0, len: 16_000, is_last: true }),
+            };
+            run(&mut b, &batch, &reqs);
+            reqs.get_mut(&id).unwrap().phase = Phase::Decode;
+        }
+        let pinned_before = b.pinned_entries();
+        let batch = Batch { decodes: vec![1, 2, 3], prefill: None };
+        let err = drive_step(&mut b, &batch, &reqs, &StageHints::default()).unwrap_err();
+        let me = err.downcast_ref::<MemoryError>().expect("typed memory error");
+        assert!(matches!(me, MemoryError::HbmExhausted { .. }));
+        assert_eq!(
+            b.pinned_entries(),
+            pinned_before,
+            "rollback must conserve cache pins"
+        );
+        // the failing band was already computing: its burnt time must
+        // surface as abort_time_s on the next committed step
+        let survivors = Batch { decodes: vec![1, 2], prefill: None };
+        let out = run(&mut b, &survivors, &reqs);
+        assert!(out.abort_time_s > 0.0, "mid-decode abort must charge burnt compute");
+        assert_eq!(out.tokens.len(), 2);
+    }
+
+    #[test]
     fn session_rollback_restores_sim_state_and_mem_stats() {
         let mut b = mk(ServingConfig::sparseserve(2048, 2048, 32));
         let reqs = prefill_all(&mut b, 1, 8192);
@@ -1065,6 +1437,7 @@ mod tests {
         run(&mut b, &batch, &reqs); // warm one iteration
         let stats_before = b.mem_stats();
         let len_before = b.reqs[&1].len;
+        let pinned_before = b.pinned_entries();
 
         // drive phases by hand, then roll back instead of committing
         let mut sess = b.begin_step(&batch, &reqs).unwrap();
@@ -1076,6 +1449,14 @@ mod tests {
 
         assert_eq!(b.reqs[&1].len, len_before, "KV length restored");
         assert_eq!(b.mem_stats().dram_bytes_used, stats_before.dram_bytes_used);
+        // pin conservation: rollback drops every pin the session took,
+        // keeping only pre-existing prefetch-stage pins (stages survive)
+        assert!(
+            b.pinned_entries() >= pinned_before,
+            "pre-existing stage pins must survive rollback"
+        );
+        b.abort_iteration();
+        assert_eq!(b.pinned_entries(), 0, "no pin survives an aborted iteration");
         // a committed re-run after rollback behaves like a fresh step
         let out = run(&mut b, &batch, &reqs);
         assert_eq!(out.tokens, vec![(1, None)]);
@@ -1097,6 +1478,7 @@ mod tests {
         let sel_snapshot = b.reqs[&1].selection.clone();
         let ws_snapshot = b.reqs[&1].ws.clone();
         let len_snapshot = b.reqs[&1].len;
+        let pins_snapshot = b.pinned_entries();
 
         let mut sess = b.begin_step(&batch, &reqs).unwrap();
         sess.stage(&StageHints::default());
@@ -1117,6 +1499,51 @@ mod tests {
                 reference.next_selection(1000, 64),
                 "selection state diverged from the clone snapshot"
             );
+        }
+        assert!(
+            b.pinned_entries() >= pins_snapshot,
+            "rollback must conserve pre-existing stage pins"
+        );
+
+        // --- part 2: the same equivalence under a MID-decode typed
+        // failure (the fallible path this PR adds): surviving
+        // batch-mates must replay byte-identically on the retry
+        let mut cfg = ServingConfig::sparseserve_np(2048, 2048, 32);
+        cfg.ws_batch_control = false;
+        let mut b = mk_pressured(cfg, 40); // 160 band slots < 3 x 64
+        let mut reqs = HashMap::new();
+        for id in 1..=3u32 {
+            let mut r = Request::new(id, 16_000, 512, 0.0);
+            r.phase = Phase::Prefill;
+            b.register(&r).unwrap();
+            reqs.insert(id, r);
+            let batch = Batch {
+                decodes: vec![],
+                prefill: Some(PrefillWork::Chunk { req: id, start: 0, len: 16_000, is_last: true }),
+            };
+            run(&mut b, &batch, &reqs);
+            reqs.get_mut(&id).unwrap().phase = Phase::Decode;
+        }
+        let snapshots: Vec<(SelectionModel, usize)> = (1..=3u32)
+            .map(|id| (b.reqs[&id].selection.clone(), b.reqs[&id].len))
+            .collect();
+        let pinned_before = b.pinned_entries();
+        let batch = Batch { decodes: vec![1, 2, 3], prefill: None };
+        drive_step(&mut b, &batch, &reqs, &StageHints::default())
+            .expect_err("oversubscribed band must fault");
+        assert_eq!(b.pinned_entries(), pinned_before, "pin conservation");
+        for (i, (snap_sel, snap_len)) in snapshots.into_iter().enumerate() {
+            let id = (i + 1) as u32;
+            assert_eq!(b.reqs[&id].len, snap_len, "req {id} KV length restored");
+            let mut restored = b.reqs[&id].selection.clone();
+            let mut reference = snap_sel;
+            for _ in 0..4 {
+                assert_eq!(
+                    restored.next_selection(500, 64),
+                    reference.next_selection(500, 64),
+                    "req {id} selection must replay byte-identically"
+                );
+            }
         }
     }
 
@@ -1147,6 +1574,7 @@ mod tests {
         }
         sess.rollback();
         assert!(b.abort_iteration() > 0.0);
+        assert_eq!(b.pinned_entries(), 0, "abort_iteration must drop all pins");
         assert_eq!(run(&mut b, &batch, &reqs).abort_time_s, 0.0);
     }
 }

@@ -99,9 +99,11 @@ pub fn full_step_results(budget_s: f64) -> Vec<BenchResult> {
         cfg.ws_batch_control = false; // let the doomed prefill into the batch
         let spec = ModelSpec::lwm_7b();
         let mut hw = HardwareSpec::a100_40gb();
-        // HBM so small that ONE whale layer segment cannot fit (but small
-        // prompts still can: segments up to 4 block groups)
-        hw.hbm_kv_bytes = 4 * spec.n_layers * spec.n_kv_heads * spec.block_bytes();
+        // HBM so small that ONE whale layer segment cannot fit, yet
+        // large enough that the four 1k-prompt decodes' per-band working
+        // sets stay resident (decode is mid-phase fallible now: too
+        // little HBM would evict the steady decodes instead of the whale)
+        hw.hbm_kv_bytes = 80 * spec.n_layers * spec.n_kv_heads * spec.block_bytes();
         let backend = SimBackend::new(cfg.clone(), spec.clone(), hw);
         let sched = Scheduler::new(cfg, spec, 1 << 40);
         let mut core = EngineCore::new(sched, Box::new(backend)).retain_finished(false);

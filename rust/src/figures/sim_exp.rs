@@ -318,6 +318,49 @@ pub fn layer_model_metrics(rate: f64, seed: u64) -> (RunMetrics, RunMetrics) {
     (p, c)
 }
 
+/// Sweep the selection layer-skew knob at one rate on the no-prefetch
+/// system (pure demand traffic, so miss-discovery timing is the only
+/// thing that moves): the same workload with miss churn concentrated in
+/// early layers (skew -1), uniform (0) and late layers (+1). The tilt
+/// preserves aggregate churn, so the runs move comparable traffic —
+/// only WHERE misses are discovered changes, and with it how much of
+/// the loading the per-layer event model can hide. Returns
+/// `(skew, metrics)` per point (the `bench` subcommand folds these into
+/// `BENCH_layer_model.json`).
+pub fn layer_skew_metrics(rate: f64, seed: u64) -> Vec<(f64, RunMetrics)> {
+    let model = ModelSpec::lwm_7b();
+    [-1.0, 0.0, 1.0]
+        .into_iter()
+        .map(|skew| {
+            let mut cfg = ServingConfig::sparseserve_np(2048, 2048, model.n_layers);
+            cfg.sim_layer_skew = skew;
+            (skew, run_sim(cfg, &model, rate, seed))
+        })
+        .collect()
+}
+
+/// Layer-skew table: stall/iteration vs the miss-discovery tilt.
+pub fn fig_layer_skew(rates: &[f64]) -> String {
+    let mut rows = Vec::new();
+    for &rate in rates {
+        for (skew, m) in layer_skew_metrics(rate, 11) {
+            rows.push(vec![
+                format!("{rate}"),
+                format!("{skew}"),
+                f(m.iter_time.mean() * 1e3),
+                f(m.stall_time.mean() * 1e3),
+                f(m.hidden_time.mean() * 1e3),
+                f(m.blocks_loaded_per_iter.mean()),
+            ]);
+        }
+    }
+    render_table(
+        "Layer skew: mean iteration/stall time (ms) vs miss-discovery tilt (LWM-7B, no prefetch)",
+        &["rate", "skew", "iter_ms", "stall_ms", "hidden_ms", "loads/iter"],
+        &rows,
+    )
+}
+
 /// Measure the admission-estimates knob on the simulate path (the serve
 /// path shares the identical `Scheduler` logic): the full system with
 /// estimate-based reservations (the `sparseserve` default) vs the same

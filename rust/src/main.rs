@@ -76,11 +76,14 @@ USAGE: sparseserve <info|serve|simulate|bench-transfer> [flags]
   bench     simulator smoke benchmarks: (1) the same workload with the
             prefetcher on and off, (2) the same workload timed with the
             per-layer iteration event model vs the coarse two-stream
-            model, (3) the full-step hot-path microbench (plan -> stage ->
-            per-layer decode -> commit, hybrid, and rollback+retry cases;
-            panics fail CI), (4) admission estimates on vs off under a
-            binding DRAM budget; writes BENCH_prefetch.json +
-            BENCH_layer_model.json + BENCH_hotpath.json
+            model, plus a selection layer-skew sweep (misses discovered
+            early vs late across the layer bands), (3) the full-step
+            hot-path microbench (plan -> stage -> per-layer decode ->
+            commit, hybrid, and rollback+retry cases; panics fail CI),
+            (4) admission estimates on vs off under a binding DRAM
+            budget; writes BENCH_prefetch.json + BENCH_layer_model.json
+            + BENCH_hotpath.json (the CI perf ratchet compares the
+            latter's steady-decode metric against the previous run)
       --out BENCH_prefetch.json              prefetch output path
       --out-layer BENCH_layer_model.json     layer-model output path
       --out-hotpath BENCH_hotpath.json       hot-path output path
@@ -307,6 +310,29 @@ fn bench(args: &Args) -> Result<()> {
     doc.insert("bench".into(), Value::Str("iter_model_comparison".into()));
     doc.insert("model".into(), Value::Str("lwm-7b".into()));
     doc.insert("points".into(), Value::Arr(points));
+
+    // ---- layer-skew sweep: where misses are discovered vs stall ----
+    println!("== selection layer skew: early vs late miss discovery (LWM-7B, seed 11) ==");
+    let skew_rate = *rates.last().expect("non-empty rates");
+    let mut skew_points = Vec::new();
+    for (skew, m) in sparseserve::figures::layer_skew_metrics(skew_rate, 11) {
+        println!(
+            "skew {skew:+.1}: iter {:.2}ms | stall {:.2}ms | hidden {:.2}ms | {:.1} loads/iter",
+            m.iter_time.mean() * 1e3,
+            m.stall_time.mean() * 1e3,
+            m.hidden_time.mean() * 1e3,
+            m.blocks_loaded_per_iter.mean(),
+        );
+        let mut p = BTreeMap::new();
+        p.insert("skew".into(), Value::Num(skew));
+        p.insert("rate".into(), Value::Num(skew_rate));
+        p.insert("iter_ms".into(), Value::Num(m.iter_time.mean() * 1e3));
+        p.insert("stall_ms".into(), Value::Num(m.stall_time.mean() * 1e3));
+        p.insert("hidden_ms".into(), Value::Num(m.hidden_time.mean() * 1e3));
+        p.insert("loads_per_iter".into(), Value::Num(m.blocks_loaded_per_iter.mean()));
+        skew_points.push(Value::Obj(p));
+    }
+    doc.insert("layer_skew_sweep".into(), Value::Arr(skew_points));
     std::fs::write(&layer_out_path, Value::Obj(doc).to_string())?;
     println!("[bench] wrote {layer_out_path}");
 

@@ -7,7 +7,9 @@
 //! - [`selection`]: a synthetic block-selection process with the temporal
 //!   locality the paper measures in Fig. 8 (high step-to-step overlap
 //!   that saturates with window size), driving the LRU cache dynamics of
-//!   Figs. 1 and 15.
+//!   Figs. 1 and 15. Selection draws per **layer band** (shared drifting
+//!   hot set, skew-tiltable churn), so miss discovery lands at the layer
+//!   that needs the bytes — see DESIGN.md for the fidelity trade.
 
 pub mod cost;
 pub mod selection;

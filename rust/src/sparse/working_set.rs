@@ -34,7 +34,12 @@
 use std::cell::Cell;
 use std::collections::{HashMap, HashSet, VecDeque};
 
-/// A (layer, head, block) selection item within one request.
+/// A (layer, head, block) selection item within one request. The
+/// simulator records at layer-BAND granularity — its items are
+/// `(band, 0, block)`, one per band of `ServingConfig::
+/// sim_selection_bands` — while the real backend records true
+/// `(layer, head, block)` triples; the tracker is granularity-agnostic
+/// (union, ranking and frequency all key on the full item).
 pub type SelItem = (u16, u16, u32);
 
 /// EWMA smoothing for the per-block hit frequency (selected = 1.0,
@@ -469,6 +474,22 @@ mod tests {
         // window slides: step {0,1} falls out
         t.record_step(items(&[2]));
         assert_eq!(t.ws_blocks(), 3); // {1,2,3} ∪ {2} minus {0,1}... = {1,2,3}
+    }
+
+    #[test]
+    fn band_granular_items_union_and_rank_per_band() {
+        // the sim's per-band recording: the same block index selected by
+        // two different bands is TWO working-set entries (each band's
+        // group is a distinct cache resident), and ranking keeps them
+        // distinct
+        let mut t = WorkingSetTracker::new(4);
+        t.record_step(vec![(0, 0, 5), (1, 0, 5), (1, 0, 9)]);
+        assert_eq!(t.ws_blocks(), 3, "same block in two bands = two entries");
+        t.record_step(vec![(0, 0, 5)]);
+        assert_eq!(t.ws_blocks(), 3);
+        let ranked = t.ranked_blocks();
+        assert_eq!(ranked[0], (0, 0, 5), "most recent step leads");
+        assert!(ranked.contains(&(1, 0, 5)) && ranked.contains(&(1, 0, 9)));
     }
 
     #[test]

@@ -286,6 +286,62 @@ impl Backend for MockBackend {
 }
 
 #[test]
+fn hbm_oversubscribed_sim_run_charges_nonzero_abort_time() {
+    // Regression test for the always-zero abort-time bug: the simulator's
+    // decode is now mid-phase fallible (per-layer-band selection touches
+    // the cache as each band runs), so a pure-sim HBM-oversubscribed run
+    // must evict typed AND report nonzero abort_time_total_s — the
+    // burnt compute of the rolled-back attempts, charged to the serving
+    // clock. No MockBackend involved: this exercises the real SimBackend
+    // rollback/retry path end to end.
+    let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
+    cfg.ws_batch_control = false; // let the oversized batch form
+    cfg.prefetch = false; // pure demand traffic
+    let spec = ModelSpec::lwm_7b();
+    let mut hw = HardwareSpec::a100_40gb();
+    // HBM of 40 iteration-granular groups (160 band slots): three
+    // decodes' per-band working sets (3 x 64 = 192) cannot fit
+    hw.hbm_kv_bytes = 40 * spec.n_layers * spec.n_kv_heads * spec.block_bytes();
+    let backend = SimBackend::new(cfg.clone(), spec.clone(), hw);
+    let sched = Scheduler::new(cfg, spec, 1 << 40); // admission unconstrained
+    let mut core = EngineCore::new(sched, Box::new(backend));
+    // long enough completions that all three decodes coexist (prefills
+    // are staggered one at a time, so short decodes would drain before
+    // the oversized batch ever forms)
+    for _ in 0..3 {
+        core.submit(SubmitRequest::synthetic(8192).max_new(64), 0.0).unwrap();
+    }
+
+    let mut evicted = Vec::new();
+    let mut now = 0.0;
+    let mut steps = 0;
+    while core.has_work() {
+        steps += 1;
+        assert!(steps < 400, "engine must keep making progress under HBM pressure");
+        let out = core.step(now).unwrap(); // typed evictions, never a panic
+        evicted.extend(out.evicted.iter().map(|(id, _)| *id));
+        for (_, err) in &out.evicted {
+            assert!(matches!(err, ServeError::Evicted { .. }));
+            assert!(err.to_string().contains("HBM exhausted"), "{err}");
+        }
+        now += out.iter_time_s.max(1e-3);
+    }
+    let m = core.metrics();
+    assert!(m.requests_evicted > 0, "oversubscription must evict typed");
+    assert_eq!(m.requests_evicted, evicted.len());
+    assert!(
+        m.abort_time_total_s > 0.0,
+        "mid-decode rollback must charge burnt compute to the serving clock"
+    );
+    assert!(
+        m.requests_finished >= 1,
+        "survivors must still finish: {} finished",
+        m.requests_finished
+    );
+    assert_eq!(m.requests_finished + m.requests_evicted, 3);
+}
+
+#[test]
 fn dram_oversubscribed_workload_survives_with_rejections() {
     // A whale that can never fit DRAM plus more normal requests than
     // DRAM holds at once: the server must reject the whale with a typed
