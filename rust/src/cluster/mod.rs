@@ -1,0 +1,33 @@
+//! Cluster serving: an N-engine routing/admission tier over
+//! [`crate::engine::EngineCore`].
+//!
+//! The subsystem has three pieces:
+//!
+//! - [`Router`]: working-set-aware placement. Each request's demand is
+//!   predicted on both memory tiers — the full-lifetime DRAM
+//!   reservation and the `min(seq_len, sparse budget)` HBM working set
+//!   that actually contends under DSA — and refined online from each
+//!   engine's `mem_stats` feedback. Fresh placements keep a DRAM
+//!   watermark (`admit_frac`) in reserve for migrations; a request no
+//!   engine can hold fails with a typed
+//!   [`ClusterError::AdmissionRejected`].
+//! - [`ClusterServer`]: the shared-clock driver. Engines overlap — the
+//!   clock always advances to the earliest arrival, migration landing,
+//!   or iteration end across the cluster.
+//! - KV migration: engines run in [`EngineCore::capture_migrations`]
+//!   mode, so memory-exhaustion victims drain into typed
+//!   [`crate::engine::MigrationCandidate`]s instead of being evicted.
+//!   The driver charges FlashD2H + FlashH2D wire time on the shared
+//!   clock and re-admits the victim at a strictly colder engine with
+//!   its selection-RNG and working-set state intact; with no colder
+//!   engine it falls back to a true eviction — the single-engine
+//!   behaviour, which is also what a cluster of one degenerates to.
+//!
+//! [`EngineCore`]: crate::engine::EngineCore
+//! [`EngineCore::capture_migrations`]: crate::engine::EngineCore::capture_migrations
+
+mod router;
+mod server;
+
+pub use router::{ClusterError, Demand, EngineSnapshot, Router, RouterConfig};
+pub use server::{ClusterConfig, ClusterReport, ClusterServer};

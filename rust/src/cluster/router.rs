@@ -1,0 +1,390 @@
+//! Working-set-aware request placement across engines.
+//!
+//! The router predicts each request's demand on both memory tiers —
+//! DRAM (the full-lifetime KV reservation admission charges) and HBM
+//! (the decode working set: the sparse attention budget, which is what
+//! actually competes for HBM under DSA) — and places it on the engine
+//! whose *post-admission* utilization is lowest. The HBM-side
+//! prediction is refined online: every step the router compares each
+//! engine's observed `mem_stats().hbm_bytes_used` (populated by that
+//! engine's working-set cache residency) against the sum of its live
+//! placements' predicted working sets and folds the ratio into an EWMA
+//! correction factor, so a model whose real working sets run hotter or
+//! colder than `min(len, budget)` converges to honest scores.
+//!
+//! Fresh placements are gated by a DRAM watermark (`admit_frac` of the
+//! engine's admission capacity) so a slice of every engine's DRAM stays
+//! in reserve for inbound migrations; migrations themselves are gated
+//! by the target scheduler's true `can_reserve`. When no engine clears
+//! the watermark the router returns a typed
+//! [`ClusterError::AdmissionRejected`] — the cluster-level analogue of
+//! the scheduler's hopeless-head-of-queue rejection.
+
+use std::collections::HashMap;
+
+use crate::memory::ReqId;
+
+/// Typed cluster-level admission failure.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterError {
+    /// No engine can take the request's DRAM reservation below its
+    /// placement watermark: the demand is reported alongside the best
+    /// headroom any engine could offer, so callers can distinguish
+    /// "cluster full right now" from "request can never fit".
+    AdmissionRejected { demand_bytes: usize, best_headroom_bytes: usize },
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::AdmissionRejected { demand_bytes, best_headroom_bytes } => write!(
+                f,
+                "cluster admission rejected: demand {demand_bytes} B exceeds every \
+                 engine's placement headroom (best {best_headroom_bytes} B)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+/// Predicted memory demand of one request, on both tiers.
+#[derive(Debug, Clone, Copy)]
+pub struct Demand {
+    /// Full-lifetime KV bytes (prompt + all output tokens): what the
+    /// target scheduler will reserve against DRAM at admission.
+    pub dram_bytes: usize,
+    /// Decode working-set bytes: `min(seq_len, sparse budget)` worth of
+    /// KV blocks — the request's steady HBM footprint under DSA.
+    pub ws_bytes: usize,
+}
+
+/// A point-in-time view of one engine, captured by the cluster driver.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineSnapshot {
+    /// The scheduler's admission capacity (DRAM with offloading).
+    pub dram_capacity: usize,
+    /// HBM bytes available to decode working sets (`Scheduler::m_avl`).
+    pub ws_capacity: usize,
+    /// Live requests (queued + active) — the least-loaded tiebreak.
+    pub n_live: usize,
+    /// Observed HBM residency (`MemStats::hbm_bytes_used`): the online
+    /// feedback that calibrates the working-set prediction.
+    pub hbm_bytes_used: usize,
+    /// Whether the engine's scheduler can take `reserve_bytes` right
+    /// now without displacement (migration gate; fresh placements use
+    /// the router's own watermark accounting instead).
+    pub can_reserve: bool,
+}
+
+/// Router tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// Fraction of each engine's DRAM admission capacity fresh
+    /// placements may fill; the rest is headroom kept for migrations.
+    pub admit_frac: f64,
+    /// EWMA weight of each new observed/predicted working-set ratio.
+    pub feedback_alpha: f64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self { admit_frac: 0.85, feedback_alpha: 0.25 }
+    }
+}
+
+struct Placement {
+    engine: usize,
+    demand: Demand,
+}
+
+/// Working-set-aware placement state over `n` engines.
+pub struct Router {
+    cfg: RouterConfig,
+    /// Per-engine EWMA of observed HBM bytes / predicted WS bytes.
+    correction: Vec<f64>,
+    /// Live placements: requests routed and not yet finished/evicted.
+    placed: HashMap<ReqId, Placement>,
+    /// Per-engine sums over `placed` (kept incrementally).
+    dram_placed: Vec<usize>,
+    ws_placed: Vec<usize>,
+}
+
+impl Router {
+    pub fn new(n_engines: usize, cfg: RouterConfig) -> Self {
+        Self {
+            cfg,
+            correction: vec![1.0; n_engines],
+            placed: HashMap::new(),
+            dram_placed: vec![0; n_engines],
+            ws_placed: vec![0; n_engines],
+        }
+    }
+
+    pub fn n_engines(&self) -> usize {
+        self.correction.len()
+    }
+
+    /// Live requests the router believes engine `i` is holding.
+    pub fn n_placed(&self, i: usize) -> usize {
+        self.placed.values().filter(|p| p.engine == i).count()
+    }
+
+    /// Current working-set correction factor for engine `i` (starts at
+    /// 1.0, refined by [`Router::observe`]).
+    pub fn correction(&self, i: usize) -> f64 {
+        self.correction[i]
+    }
+
+    /// Corrected working-set utilization engine `i` would run at after
+    /// absorbing `extra_ws` more working-set bytes.
+    fn ws_util(&self, i: usize, snap: &EngineSnapshot, extra_ws: usize) -> f64 {
+        let predicted = (self.ws_placed[i] + extra_ws) as f64 * self.correction[i];
+        predicted / snap.ws_capacity.max(1) as f64
+    }
+
+    /// DRAM bytes engine `i` can still take below its fresh-placement
+    /// watermark (router-side accounting: counts queued placements the
+    /// scheduler has not reserved for yet).
+    fn watermark_headroom(&self, i: usize, snap: &EngineSnapshot) -> usize {
+        let mark = (snap.dram_capacity as f64 * self.cfg.admit_frac) as usize;
+        mark.saturating_sub(self.dram_placed[i])
+    }
+
+    /// Place a fresh request: among the engines whose DRAM watermark
+    /// fits `demand`, pick the lowest post-admission utilization (the
+    /// max of DRAM-watermark and corrected working-set pressure),
+    /// breaking ties toward the least-loaded engine by live requests.
+    pub fn place(
+        &mut self,
+        req: ReqId,
+        demand: Demand,
+        snaps: &[EngineSnapshot],
+    ) -> Result<usize, ClusterError> {
+        debug_assert_eq!(snaps.len(), self.n_engines());
+        debug_assert!(!self.placed.contains_key(&req), "request {req} already placed");
+        let mut best: Option<(usize, f64, usize)> = None; // (engine, score, n_live)
+        let mut best_headroom = 0usize;
+        for (i, snap) in snaps.iter().enumerate() {
+            let headroom = self.watermark_headroom(i, snap);
+            best_headroom = best_headroom.max(headroom);
+            if demand.dram_bytes > headroom {
+                continue;
+            }
+            let dram_util = (self.dram_placed[i] + demand.dram_bytes) as f64
+                / ((snaps[i].dram_capacity as f64 * self.cfg.admit_frac).max(1.0));
+            let score = dram_util.max(self.ws_util(i, snap, demand.ws_bytes));
+            let better = match best {
+                None => true,
+                Some((_, s, live)) => {
+                    score < s - 1e-12 || ((score - s).abs() <= 1e-12 && snap.n_live < live)
+                }
+            };
+            if better {
+                best = Some((i, score, snap.n_live));
+            }
+        }
+        let Some((engine, _, _)) = best else {
+            return Err(ClusterError::AdmissionRejected {
+                demand_bytes: demand.dram_bytes,
+                best_headroom_bytes: best_headroom,
+            });
+        };
+        self.insert(req, engine, demand);
+        Ok(engine)
+    }
+
+    /// Pick a migration target for a victim drained off `source`: an
+    /// engine (never the source) whose scheduler can truly reserve the
+    /// victim's bytes *and* whose corrected working-set pressure after
+    /// absorbing it stays below the source's — migrating onto an
+    /// equally-hot engine only bounces the victim. `None` means the
+    /// caller should finalize the eviction instead.
+    pub fn migration_target(
+        &self,
+        demand: Demand,
+        source: usize,
+        snaps: &[EngineSnapshot],
+    ) -> Option<usize> {
+        let source_util = self.ws_util(source, &snaps[source], 0);
+        let mut best: Option<(usize, f64)> = None;
+        for (i, snap) in snaps.iter().enumerate() {
+            if i == source || !snap.can_reserve {
+                continue;
+            }
+            let util = self.ws_util(i, snap, demand.ws_bytes);
+            if util >= source_util {
+                continue;
+            }
+            match best {
+                Some((_, u)) if util >= u => {}
+                _ => best = Some((i, util)),
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Move a live placement to `target` (called when a migration is
+    /// dispatched, so the in-transit victim already counts against the
+    /// target and a burst of fresh arrivals cannot strand it).
+    pub fn on_migrated(&mut self, req: ReqId, target: usize) {
+        if let Some(p) = self.remove(req) {
+            self.insert(req, target, p.demand);
+        }
+    }
+
+    /// Drop a placement: the request finished, was evicted, or was
+    /// rejected by its engine.
+    pub fn on_departed(&mut self, req: ReqId) {
+        self.remove(req);
+    }
+
+    /// Fold one round of per-engine feedback into the working-set
+    /// corrections: the ratio of observed HBM residency to predicted
+    /// working-set bytes, EWMA-smoothed and clamped so a transient
+    /// (e.g. an engine mid-prefill with no decodes resident) cannot
+    /// swing placement wildly.
+    pub fn observe(&mut self, snaps: &[EngineSnapshot]) {
+        debug_assert_eq!(snaps.len(), self.n_engines());
+        let a = self.cfg.feedback_alpha;
+        for (i, snap) in snaps.iter().enumerate() {
+            if self.ws_placed[i] == 0 || snap.hbm_bytes_used == 0 {
+                continue;
+            }
+            let ratio = snap.hbm_bytes_used as f64 / self.ws_placed[i] as f64;
+            self.correction[i] = ((1.0 - a) * self.correction[i] + a * ratio).clamp(0.25, 4.0);
+        }
+    }
+
+    fn insert(&mut self, req: ReqId, engine: usize, demand: Demand) {
+        self.dram_placed[engine] += demand.dram_bytes;
+        self.ws_placed[engine] += demand.ws_bytes;
+        self.placed.insert(req, Placement { engine, demand });
+    }
+
+    fn remove(&mut self, req: ReqId) -> Option<Placement> {
+        let p = self.placed.remove(&req)?;
+        self.dram_placed[p.engine] -= p.demand.dram_bytes;
+        self.ws_placed[p.engine] -= p.demand.ws_bytes;
+        Some(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(dram: usize, ws: usize) -> EngineSnapshot {
+        EngineSnapshot {
+            dram_capacity: dram,
+            ws_capacity: ws,
+            n_live: 0,
+            hbm_bytes_used: 0,
+            can_reserve: true,
+        }
+    }
+
+    fn d(dram: usize, ws: usize) -> Demand {
+        Demand { dram_bytes: dram, ws_bytes: ws }
+    }
+
+    #[test]
+    fn balances_by_predicted_working_set() {
+        let mut r = Router::new(2, RouterConfig::default());
+        let snaps = [snap(1 << 30, 1000), snap(1 << 30, 1000)];
+        // equal engines: four identical requests alternate
+        let a = r.place(1, d(100, 400), &snaps).unwrap();
+        let b = r.place(2, d(100, 400), &snaps).unwrap();
+        let c = r.place(3, d(100, 400), &snaps).unwrap();
+        let e = r.place(4, d(100, 400), &snaps).unwrap();
+        assert_ne!(a, b);
+        assert_ne!(c, e);
+        assert_eq!(r.n_placed(0) + r.n_placed(1), 4);
+    }
+
+    #[test]
+    fn prefers_the_engine_with_working_set_headroom() {
+        let mut r = Router::new(2, RouterConfig::default());
+        // engine 0 has 10x the HBM working-set room
+        let snaps = [snap(1 << 30, 10_000), snap(1 << 30, 1000)];
+        for id in 0..4u32 {
+            assert_eq!(r.place(id, d(100, 600), &snaps).unwrap(), 0);
+        }
+    }
+
+    #[test]
+    fn watermark_rejection_is_typed_and_names_best_headroom() {
+        let mut r = Router::new(2, RouterConfig { admit_frac: 0.5, feedback_alpha: 0.25 });
+        let snaps = [snap(1000, 100), snap(2000, 100)];
+        // watermarks: 500 and 1000 bytes
+        let err = r.place(1, d(1500, 10), &snaps).unwrap_err();
+        assert_eq!(
+            err,
+            ClusterError::AdmissionRejected { demand_bytes: 1500, best_headroom_bytes: 1000 }
+        );
+        // fits under engine 1's watermark only
+        assert_eq!(r.place(2, d(800, 10), &snaps).unwrap(), 1);
+        // engine 1's watermark is now spent; 400 B only fits on engine 0
+        assert_eq!(r.place(3, d(400, 10), &snaps).unwrap(), 0);
+    }
+
+    #[test]
+    fn feedback_calibrates_working_set_correction() {
+        let mut r = Router::new(2, RouterConfig::default());
+        let snaps = [snap(1 << 30, 1000), snap(1 << 30, 1000)];
+        r.place(1, d(100, 400), &snaps).unwrap();
+        let placed_on = if r.n_placed(0) == 1 { 0 } else { 1 };
+        // engine reports 2x the predicted residency -> correction rises
+        let mut fed = snaps;
+        fed[placed_on].hbm_bytes_used = 800;
+        let before = r.correction(placed_on);
+        r.observe(&fed);
+        assert!(r.correction(placed_on) > before);
+        // repeated observation converges toward the true 2.0 ratio
+        for _ in 0..50 {
+            r.observe(&fed);
+        }
+        assert!((r.correction(placed_on) - 2.0).abs() < 0.05);
+        // the untouched engine never moves off 1.0
+        assert_eq!(r.correction(1 - placed_on), 1.0);
+    }
+
+    #[test]
+    fn migration_target_wants_a_strictly_colder_engine() {
+        let mut r = Router::new(3, RouterConfig::default());
+        let snaps = [snap(1 << 30, 1000), snap(1 << 30, 1000), snap(1 << 30, 1000)];
+        // load engine 0 heavily, engine 1 lightly, engine 2 idle
+        for id in 0..3u32 {
+            r.insert(id, 0, d(100, 500));
+        }
+        r.insert(10, 1, d(100, 300));
+        let target = r.migration_target(d(100, 500), 0, &snaps);
+        assert_eq!(target, Some(2), "idle engine is the coldest target");
+        // an engine that cannot reserve is skipped even when coldest
+        let mut gated = snaps;
+        gated[2].can_reserve = false;
+        assert_eq!(r.migration_target(d(100, 500), 0, &gated), Some(1));
+        // no admissible engine left -> None (fall back to eviction)
+        let mut hot = gated;
+        hot[1].can_reserve = false;
+        assert_eq!(r.migration_target(d(100, 500), 0, &hot), None);
+        // a cold source has no strictly colder peer -> None: migrating
+        // off an idle engine would only bounce the victim
+        assert_eq!(r.migration_target(d(100, 500), 2, &snaps), None);
+    }
+
+    #[test]
+    fn departures_and_migrations_move_the_books() {
+        let mut r = Router::new(2, RouterConfig::default());
+        let snaps = [snap(1 << 30, 1000), snap(1 << 30, 1000)];
+        r.place(1, d(100, 400), &snaps).unwrap();
+        let src = if r.n_placed(0) == 1 { 0 } else { 1 };
+        r.on_migrated(1, 1 - src);
+        assert_eq!(r.n_placed(src), 0);
+        assert_eq!(r.n_placed(1 - src), 1);
+        r.on_departed(1);
+        assert_eq!(r.n_placed(0) + r.n_placed(1), 0);
+        // departing an unknown request is a no-op
+        r.on_departed(99);
+    }
+}

@@ -1,0 +1,439 @@
+//! N-engine cluster serving on one shared clock.
+//!
+//! [`ClusterServer`] stands N independent [`EngineCore`]s (each with its
+//! own scheduler budgets and backend) behind a [`Router`] and replays a
+//! trace against them on a single shared serving clock. Engines overlap
+//! in time: each has its own next-ready timestamp (start of its next
+//! iteration) and the driver always advances the shared clock to the
+//! earliest pending event — an arrival, a migration landing, or an
+//! engine finishing its iteration — so a long prefill on one engine
+//! never serializes its neighbours.
+//!
+//! KV migration rides the typed-eviction seam: engines run with
+//! [`EngineCore::capture_migrations`] so a memory-exhaustion victim is
+//! drained into a [`MigrationCandidate`] instead of destroyed. The
+//! driver picks a strictly colder target through the router, charges
+//! the FlashD2H + FlashH2D wire time on the shared clock (the victim is
+//! in flight and unservable until `ready_at`), and re-admits it with
+//! its RNG/working-set state intact — the migrated request replays
+//! byte-identically (see `engine::sim_backend` tests). When no engine
+//! has headroom the candidate falls back to a true eviction at the
+//! source, which is exactly the single-engine behaviour.
+
+use anyhow::Result;
+
+use crate::engine::{EngineCore, MigrationCandidate};
+use crate::memory::ReqId;
+use crate::scheduler::Request;
+use crate::sim::CostModel;
+
+use super::router::{ClusterError, Demand, EngineSnapshot, Router, RouterConfig};
+
+/// Cluster-level configuration (engine budgets live in each engine's
+/// own `ServingConfig` / scheduler; these are the knobs of the tier
+/// above them).
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterConfig {
+    /// DSA token budget used to predict decode working sets (mirror of
+    /// the engines' `ServingConfig::token_budget`; per-request
+    /// `sparse_budget` overrides still win).
+    pub ws_budget_tokens: usize,
+    /// Drain memory-exhaustion victims across engines instead of
+    /// evicting them. Off = the scale-out-without-migration baseline.
+    pub migrate: bool,
+    pub router: RouterConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self { ws_budget_tokens: 2048, migrate: true, router: RouterConfig::default() }
+    }
+}
+
+/// A drained victim on the wire between two engines.
+struct PendingMigration {
+    ready_at_s: f64,
+    source: usize,
+    target: usize,
+    candidate: MigrationCandidate,
+}
+
+/// Outcome of a whole cluster run.
+pub struct ClusterReport {
+    /// Per-engine run reports, in engine order.
+    pub engines: Vec<crate::engine::RunReport>,
+    pub makespan_s: f64,
+    /// Requests the router could place on no engine (typed).
+    pub rejected: Vec<(ReqId, ClusterError)>,
+}
+
+impl ClusterReport {
+    pub fn requests_finished(&self) -> usize {
+        self.engines.iter().map(|r| r.metrics.requests_finished).sum()
+    }
+
+    pub fn requests_evicted(&self) -> usize {
+        self.engines.iter().map(|r| r.metrics.requests_evicted).sum()
+    }
+
+    pub fn requests_migrated(&self) -> usize {
+        self.engines.iter().map(|r| r.metrics.requests_migrated).sum()
+    }
+
+    pub fn migration_transfer_s(&self) -> f64 {
+        self.engines.iter().map(|r| r.metrics.migration_transfer_total_s).sum()
+    }
+
+    pub fn migration_bytes(&self) -> u64 {
+        self.engines.iter().map(|r| r.metrics.migration_bytes_total).sum()
+    }
+
+    /// Aggregate token throughput (shared clock, so per-engine rates add).
+    pub fn throughput(&self) -> f64 {
+        self.engines.iter().map(|r| r.metrics.throughput()).sum()
+    }
+
+    /// Served-to-completion request rate over the shared clock: the
+    /// cluster's goodput. Evicted and rejected requests produced tokens
+    /// the client never got a completion for, so only finishes count.
+    pub fn goodput_rps(&self) -> f64 {
+        self.requests_finished() as f64 / self.makespan_s.max(1e-9)
+    }
+}
+
+/// N engines + router + migration plane on one shared clock.
+pub struct ClusterServer {
+    engines: Vec<EngineCore>,
+    cost: CostModel,
+    cfg: ClusterConfig,
+    router: Router,
+    clock_s: f64,
+    in_flight: Vec<PendingMigration>,
+    rejected: Vec<(ReqId, ClusterError)>,
+}
+
+impl ClusterServer {
+    /// Build a cluster over caller-constructed engines (per-engine
+    /// scheduler budgets and backends are the caller's degrees of
+    /// freedom). Engines are switched into migration-capture mode iff
+    /// `cfg.migrate`.
+    pub fn new(engines: Vec<EngineCore>, cost: CostModel, cfg: ClusterConfig) -> Self {
+        assert!(!engines.is_empty(), "a cluster needs at least one engine");
+        let n = engines.len();
+        let engines =
+            engines.into_iter().map(|e| e.capture_migrations(cfg.migrate)).collect();
+        Self {
+            engines,
+            cost,
+            cfg,
+            router: Router::new(n, cfg.router),
+            clock_s: 0.0,
+            in_flight: Vec::new(),
+            rejected: Vec::new(),
+        }
+    }
+
+    pub fn n_engines(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Predicted two-tier demand of a request: the conservative
+    /// full-lifetime DRAM reservation, and `min(seq_len, sparse
+    /// budget)` worth of KV blocks as the decode working set.
+    fn demand_of(&self, req: &Request) -> Demand {
+        let sched = self.engines[0].sched();
+        let budget = req.sparse_budget.unwrap_or(self.cfg.ws_budget_tokens);
+        let seq = req.prompt_len + req.max_new_tokens;
+        Demand {
+            dram_bytes: sched.full_kv_bytes(req.prompt_len, req.max_new_tokens),
+            ws_bytes: sched.full_kv_bytes(seq.min(budget), 0),
+        }
+    }
+
+    /// Point-in-time router inputs. `reserve_bytes` parameterizes the
+    /// migration gate: each snapshot reports whether that engine's
+    /// scheduler can truly reserve that many bytes right now.
+    fn snapshots(&self, reserve_bytes: usize) -> Vec<EngineSnapshot> {
+        self.engines
+            .iter()
+            .map(|e| {
+                let sched = e.sched();
+                EngineSnapshot {
+                    dram_capacity: sched.admission_capacity(),
+                    ws_capacity: sched.m_avl(),
+                    n_live: e.n_active() + e.n_queued(),
+                    hbm_bytes_used: e.mem_stats().hbm_bytes_used,
+                    can_reserve: sched.can_reserve(reserve_bytes),
+                }
+            })
+            .collect()
+    }
+
+    /// Route one arrival; a placement failure is recorded as a typed
+    /// cluster rejection (the request never reaches an engine).
+    fn route(&mut self, req: Request, ready: &mut [f64]) -> Result<()> {
+        let demand = self.demand_of(&req);
+        let snaps = self.snapshots(0);
+        match self.router.place(req.id, demand, &snaps) {
+            Ok(i) => {
+                self.engines[i].submit_request(req).map_err(anyhow::Error::new)?;
+                if ready[i].is_infinite() {
+                    ready[i] = self.clock_s;
+                }
+            }
+            Err(e) => self.rejected.push((req.id, e)),
+        }
+        Ok(())
+    }
+
+    /// Dispatch a drained victim: pick a strictly colder target that
+    /// can reserve its bytes, charge the wire time at the source, and
+    /// put it in flight. No such target -> finalize as a true eviction.
+    fn dispatch_migration(&mut self, source: usize, candidate: MigrationCandidate) {
+        let mut demand = self.demand_of(&candidate.request);
+        demand.dram_bytes = candidate.reserve_bytes;
+        let snaps = self.snapshots(candidate.reserve_bytes);
+        match self.router.migration_target(demand, source, &snaps) {
+            Some(target) => {
+                let bytes = candidate.payload.kv_bytes;
+                let transfer_s = self.cost.migration_time(bytes);
+                self.engines[source].record_migration(transfer_s, bytes);
+                self.router.on_migrated(candidate.request.id, target);
+                self.in_flight.push(PendingMigration {
+                    ready_at_s: self.clock_s + transfer_s,
+                    source,
+                    target,
+                    candidate,
+                });
+            }
+            None => {
+                self.router.on_departed(candidate.request.id);
+                self.engines[source].finalize_eviction(candidate);
+            }
+        }
+    }
+
+    /// Land a migration that finished its transfer: re-admit at the
+    /// planned target, falling back to any engine that can still
+    /// reserve the bytes (the target may have filled mid-flight), and
+    /// finally to a true eviction at the source.
+    fn land_migration(&mut self, m: PendingMigration, ready: &mut [f64]) {
+        let PendingMigration { source, target, mut candidate, .. } = m;
+        let id = candidate.request.id;
+        match self.engines[target].admit_migration(candidate) {
+            Ok(()) => {
+                if ready[target].is_infinite() {
+                    ready[target] = self.clock_s;
+                }
+                return;
+            }
+            Err(back) => candidate = back,
+        }
+        for i in 0..self.engines.len() {
+            if i == target || i == source {
+                continue;
+            }
+            if !self.engines[i].sched().can_reserve(candidate.reserve_bytes) {
+                continue;
+            }
+            match self.engines[i].admit_migration(candidate) {
+                Ok(()) => {
+                    self.router.on_migrated(id, i);
+                    if ready[i].is_infinite() {
+                        ready[i] = self.clock_s;
+                    }
+                    return;
+                }
+                Err(back) => candidate = back,
+            }
+        }
+        self.router.on_departed(id);
+        self.engines[source].finalize_eviction(candidate);
+    }
+
+    /// Serve a whole trace to completion (or `max_clock_s`) and report.
+    pub fn run_trace(mut self, mut trace: Vec<Request>, max_clock_s: f64) -> Result<ClusterReport> {
+        trace.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let mut next_arrival = 0usize;
+        let n = self.engines.len();
+        // per-engine next-iteration start; infinity = admission-blocked
+        // until a new arrival or migration lands on that engine
+        let mut ready = vec![0.0f64; n];
+
+        loop {
+            while next_arrival < trace.len() && trace[next_arrival].arrival_s <= self.clock_s {
+                let req = trace[next_arrival].clone();
+                next_arrival += 1;
+                self.route(req, &mut ready)?;
+            }
+
+            if !self.in_flight.is_empty() {
+                let clock = self.clock_s;
+                let (due, rest): (Vec<_>, Vec<_>) =
+                    std::mem::take(&mut self.in_flight).into_iter().partition(|m| m.ready_at_s <= clock);
+                self.in_flight = rest;
+                for m in due {
+                    self.land_migration(m, &mut ready);
+                }
+            }
+
+            let mut stepped = false;
+            for i in 0..n {
+                if !(self.engines[i].has_work() && ready[i] <= self.clock_s) {
+                    continue;
+                }
+                stepped = true;
+                let out = self.engines[i].step(self.clock_s).map_err(anyhow::Error::new)?;
+                for (id, _) in &out.finished {
+                    self.router.on_departed(*id);
+                }
+                for (id, _) in &out.rejected {
+                    self.router.on_departed(*id);
+                }
+                for (id, _) in &out.evicted {
+                    self.router.on_departed(*id);
+                }
+                let progressed = out.ran_batch
+                    || !out.rejected.is_empty()
+                    || !out.evicted.is_empty()
+                    || !out.migratable.is_empty();
+                ready[i] = if progressed { self.clock_s + out.iter_time_s } else { f64::INFINITY };
+                for candidate in out.migratable {
+                    self.dispatch_migration(i, candidate);
+                }
+            }
+            if stepped {
+                let snaps = self.snapshots(0);
+                self.router.observe(&snaps);
+            }
+            if self.clock_s > max_clock_s {
+                break;
+            }
+
+            // advance the shared clock to the earliest pending event
+            let mut horizon = f64::INFINITY;
+            if next_arrival < trace.len() {
+                horizon = horizon.min(trace[next_arrival].arrival_s);
+            }
+            for m in &self.in_flight {
+                horizon = horizon.min(m.ready_at_s);
+            }
+            for i in 0..n {
+                if self.engines[i].has_work() && ready[i].is_finite() {
+                    horizon = horizon.min(ready[i]);
+                }
+            }
+            if horizon.is_infinite() {
+                break; // no event will ever fire again
+            }
+            self.clock_s = self.clock_s.max(horizon);
+        }
+
+        // the makespan covers every engine's final iteration (a ready
+        // timestamp is the END of the last step an engine ran)
+        let clock = ready
+            .iter()
+            .copied()
+            .filter(|r| r.is_finite())
+            .fold(self.clock_s, f64::max);
+        // victims still on the wire at shutdown are true evictions
+        for m in std::mem::take(&mut self.in_flight) {
+            self.router.on_departed(m.candidate.request.id);
+            self.engines[m.source].finalize_eviction(m.candidate);
+        }
+        Ok(ClusterReport {
+            engines: self.engines.into_iter().map(|e| e.into_report(clock)).collect(),
+            makespan_s: clock,
+            rejected: self.rejected,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareSpec, ModelSpec, ServingConfig};
+    use crate::engine::SimBackend;
+    use crate::scheduler::Scheduler;
+    use crate::workload::{generate, WorkloadSpec};
+
+    fn roomy_engine(cfg: &ServingConfig, spec: &ModelSpec, hw: &HardwareSpec) -> EngineCore {
+        let backend = SimBackend::new(cfg.clone(), spec.clone(), hw.clone());
+        let sched = Scheduler::new(cfg.clone(), spec.clone(), hw.hbm_kv_bytes);
+        EngineCore::new(sched, Box::new(backend))
+    }
+
+    fn cluster_of(n: usize) -> ClusterServer {
+        let cfg = ServingConfig::sparseserve(2048, 2048, 32);
+        let spec = ModelSpec::lwm_7b();
+        let hw = HardwareSpec::a100_40gb();
+        let engines = (0..n).map(|_| roomy_engine(&cfg, &spec, &hw)).collect();
+        let cost = CostModel::new(spec, hw);
+        ClusterServer::new(engines, cost, ClusterConfig::default())
+    }
+
+    #[test]
+    fn two_engines_split_a_trace_and_finish_it() {
+        let trace = generate(&WorkloadSpec::paper_lwm(0.1, 7), 12, 0);
+        let rep = cluster_of(2).run_trace(trace, 1e7).unwrap();
+        assert_eq!(rep.requests_finished(), 12);
+        assert!(rep.rejected.is_empty());
+        assert_eq!(rep.requests_migrated(), 0, "roomy engines never migrate");
+        assert_eq!(rep.requests_evicted(), 0);
+        // the router actually spread the load
+        let busy = rep.engines.iter().filter(|r| r.metrics.requests_finished > 0).count();
+        assert_eq!(busy, 2, "both engines must serve part of the trace");
+        assert!(rep.goodput_rps() > 0.0);
+        assert!(rep.makespan_s > 0.0);
+    }
+
+    #[test]
+    fn one_engine_cluster_matches_the_plain_engine_driver() {
+        let trace = generate(&WorkloadSpec::paper_lwm(0.1, 7), 8, 0);
+        let rep = cluster_of(1).run_trace(trace.clone(), 1e7).unwrap();
+
+        let cfg = ServingConfig::sparseserve(2048, 2048, 32);
+        let spec = ModelSpec::lwm_7b();
+        let hw = HardwareSpec::a100_40gb();
+        let backend = SimBackend::new(cfg.clone(), spec.clone(), hw.clone());
+        let sched = Scheduler::new(cfg, spec, hw.hbm_kv_bytes);
+        let single = crate::engine::Engine::new(sched, Box::new(backend))
+            .run_trace(trace, 1e7)
+            .unwrap();
+
+        assert_eq!(rep.requests_finished(), single.metrics.requests_finished);
+        // same engine, same trace, same admissions -> same serving clock
+        assert!(
+            (rep.engines[0].metrics.ttft.mean() - single.metrics.ttft.mean()).abs() < 1e-9,
+            "cluster-of-one must reproduce the single-engine TTFTs: {} vs {}",
+            rep.engines[0].metrics.ttft.mean(),
+            single.metrics.ttft.mean()
+        );
+    }
+
+    #[test]
+    fn oversized_request_is_rejected_with_a_typed_error() {
+        let cfg = ServingConfig::sparseserve(2048, 2048, 32);
+        let spec = ModelSpec::lwm_7b();
+        let hw = HardwareSpec::a100_40gb();
+        let mk = || {
+            let backend = SimBackend::new(cfg.clone(), spec.clone(), hw.clone());
+            let sched = Scheduler::new(cfg.clone(), spec.clone(), hw.hbm_kv_bytes)
+                .with_dram_capacity(1 << 20);
+            EngineCore::new(sched, Box::new(backend))
+        };
+        let cost = CostModel::new(spec.clone(), hw.clone());
+        let cluster = ClusterServer::new(vec![mk(), mk()], cost, ClusterConfig::default());
+        let trace = vec![crate::scheduler::Request::new(1, 8192, 64, 0.0)];
+        let rep = cluster.run_trace(trace, 1e7).unwrap();
+        assert_eq!(rep.requests_finished(), 0);
+        assert_eq!(rep.rejected.len(), 1);
+        let (id, err) = &rep.rejected[0];
+        assert_eq!(*id, 1);
+        match err {
+            ClusterError::AdmissionRejected { demand_bytes, best_headroom_bytes } => {
+                assert!(demand_bytes > best_headroom_bytes);
+            }
+        }
+    }
+}

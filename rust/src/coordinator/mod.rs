@@ -9,6 +9,15 @@
 //! Requests are built with [`SubmitRequest`] (priority class, stop
 //! tokens, TTFT SLO, sparse-budget override), stream back
 //! [`StreamEvent`]s, and fail with typed [`ServeError`]s.
+//!
+//! `Server` fronts exactly one engine. Scale-out lives one tier up in
+//! [`crate::cluster`]: [`crate::cluster::ClusterServer`] routes across
+//! N engines with working-set-aware placement and drains
+//! memory-exhaustion victims across engines as typed KV migrations;
+//! its admission failures surface as
+//! [`crate::cluster::ClusterError::AdmissionRejected`], the
+//! cluster-level analogue of this module's `AdmissionRejected`
+//! [`ServeError`].
 
 pub mod api;
 pub mod server;

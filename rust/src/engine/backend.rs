@@ -47,6 +47,8 @@ use anyhow::Result;
 
 use crate::memory::ReqId;
 use crate::scheduler::{Batch, PrefillWork, Request};
+use crate::sim::SelectionModel;
+use crate::sparse::WorkingSetTracker;
 
 /// Result of executing one hybrid batch on a backend.
 ///
@@ -90,6 +92,13 @@ pub struct BatchOutcome {
     /// `iter_time_s`, so eviction-heavy workloads stop under-reporting
     /// latency.
     pub abort_time_s: f64,
+    /// Per-phase telemetry in execution order (prefill segments, then
+    /// decode layers), collected by [`drive_step`] from the events each
+    /// phase returned. This is what feeds the per-layer
+    /// compute-vs-transfer-wait profile on `RunMetrics` — the measured
+    /// `PhaseEvent::compute_s` of the real backend and the modeled one
+    /// of the simulator both land here instead of being discarded.
+    pub phases: Vec<PhaseEvent>,
 }
 
 /// KV-memory occupancy snapshot (request lifecycle observability: tests
@@ -132,6 +141,36 @@ pub struct PhaseEvent {
     pub miss_blocks: usize,
     /// PCIe bytes this phase moved on demand.
     pub bytes_moved: usize,
+}
+
+/// Serialized cross-engine state of one in-flight request: what a
+/// cluster tier drains from a hot engine's backend
+/// ([`Backend::export_migration`]) and re-admits at a cold one
+/// ([`Backend::import_migration`]).
+///
+/// The payload carries everything the simulator needs to *replay the
+/// request byte-identically* on the target engine: the sealed KV length,
+/// the per-request DSA budget, and — crucially — the live
+/// [`SelectionModel`] (its RNG stream, seeded from the source engine's
+/// monotone admission counter, moves wholesale so post-migration draws
+/// match an unmigrated run draw-for-draw) and [`WorkingSetTracker`]
+/// (recency window + frequency EWMAs, so prefetch ranking does not
+/// restart cold). `kv_bytes` is the DRAM-tier footprint serialized over
+/// the wire; the cluster prices it as FlashD2H at the source plus
+/// FlashH2D at the target on the shared clock.
+#[derive(Debug, Clone)]
+pub struct MigrationPayload {
+    pub req: ReqId,
+    /// Sealed KV tokens (prompt progress + generated) at drain time.
+    pub len: usize,
+    /// Per-request working-set budget, in band groups.
+    pub budget_groups: usize,
+    /// Live selection state, moved (not cloned) off the source engine.
+    pub selection: SelectionModel,
+    /// Live working-set history, moved off the source engine.
+    pub ws: WorkingSetTracker,
+    /// DRAM-tier KV bytes serialized across engines.
+    pub kv_bytes: usize,
 }
 
 /// One in-flight batch execution: a transaction over the backend's KV
@@ -200,6 +239,28 @@ pub trait Backend {
         0.0
     }
 
+    /// Drain a live request's cross-engine state for KV migration.
+    /// Returns `None` when the backend cannot migrate (the real backend's
+    /// kernel-resident KV has no re-seed path yet — `KvManager::
+    /// drain_request` is the block-level seam, but selection state is
+    /// synthetic-only) or the request is unknown. On `Some`, the
+    /// request's local state is gone exactly as after [`Backend::release`]
+    /// (pins dropped, residency purged) — the caller owns the payload.
+    fn export_migration(&mut self, _req: ReqId) -> Option<MigrationPayload> {
+        None
+    }
+
+    /// Re-admit a migrated request's state on this backend, preserving
+    /// its RNG stream and working-set history (the inverse of
+    /// [`Backend::export_migration`]; must NOT re-seed like `register`).
+    /// Errors typed when unsupported or the id is already live here.
+    fn import_migration(&mut self, payload: MigrationPayload) -> Result<()> {
+        anyhow::bail!(
+            "backend does not support KV migration (req {})",
+            payload.req
+        )
+    }
+
     /// Decode working-set estimate in bytes (Alg. 1 input).
     fn decode_ws_bytes(&mut self, req: ReqId) -> usize;
 
@@ -238,28 +299,38 @@ pub fn drive_step(
     let n_layers = backend.n_layers();
     let mut sess = backend.begin_step(batch, requests)?;
     sess.stage(hints);
+    let mut events: Vec<PhaseEvent> = Vec::new();
     let mut phase_err = None;
     'phases: {
         if let Some(work) = &batch.prefill {
             let (l0, l1) = prefill_layer_range(work, n_layers);
             for layer in l0..l1 {
-                if let Err(e) = sess.prefill_segment(layer, layer + 1) {
-                    phase_err = Some(e);
-                    break 'phases;
+                match sess.prefill_segment(layer, layer + 1) {
+                    Ok(ev) => events.push(ev),
+                    Err(e) => {
+                        phase_err = Some(e);
+                        break 'phases;
+                    }
                 }
             }
         }
         if !batch.decodes.is_empty() {
             for layer in 0..n_layers {
-                if let Err(e) = sess.decode_layer(layer) {
-                    phase_err = Some(e);
-                    break 'phases;
+                match sess.decode_layer(layer) {
+                    Ok(ev) => events.push(ev),
+                    Err(e) => {
+                        phase_err = Some(e);
+                        break 'phases;
+                    }
                 }
             }
         }
     }
     match phase_err {
-        None => sess.commit(),
+        None => sess.commit().map(|mut out| {
+            out.phases = events;
+            out
+        }),
         Some(e) => {
             sess.rollback();
             Err(e)

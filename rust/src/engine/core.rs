@@ -17,9 +17,11 @@
 
 use crate::memory::{MemoryError, ReqId};
 use crate::metrics::RunMetrics;
-use crate::scheduler::{Batch, Priority, Request, RequestParams, RequestTiming, Scheduler};
+use crate::scheduler::{
+    Batch, Phase, Priority, Request, RequestParams, RequestTiming, Scheduler,
+};
 
-use super::backend::{drive_step, Backend, MemStats, StageHints};
+use super::backend::{drive_step, Backend, MemStats, MigrationPayload, StageHints};
 use super::error::ServeError;
 
 /// A request as submitted by a client: prompt + lifecycle parameters.
@@ -113,6 +115,26 @@ pub struct TokenEvent {
     pub index: usize,
 }
 
+/// A victim drained for cross-engine migration instead of destroyed:
+/// the scheduler-side request record (reservation already released at
+/// the source), the DRAM bytes a target must re-reserve, and the
+/// backend payload whose RNG/working-set state replays byte-identically
+/// after [`EngineCore::admit_migration`]. Produced only in
+/// [`EngineCore::capture_migrations`] mode; a candidate no engine can
+/// take is finalized as a true eviction via
+/// [`EngineCore::finalize_eviction`].
+#[derive(Debug, Clone)]
+pub struct MigrationCandidate {
+    pub request: Request,
+    /// Scheduler admission reservation the target must re-take (the
+    /// source released exactly this many bytes at drain time).
+    pub reserve_bytes: usize,
+    pub payload: MigrationPayload,
+    /// The typed memory-exhaustion message that made this request the
+    /// victim.
+    pub reason: String,
+}
+
 /// Result of one `EngineCore::step` call.
 #[derive(Debug, Clone, Default)]
 pub struct StepOutcome {
@@ -137,6 +159,10 @@ pub struct StepOutcome {
     /// executing them (typed `MemoryError` from the backend); their KV
     /// state has been released and the engine stays usable.
     pub evicted: Vec<(ReqId, ServeError)>,
+    /// Victims drained for migration instead of evicted (capture mode
+    /// only, see [`EngineCore::capture_migrations`]): the caller owns
+    /// re-admission at a target or eviction finalization at the source.
+    pub migratable: Vec<MigrationCandidate>,
 }
 
 /// Outcome of a whole serving run (offline trace replay or an online
@@ -169,6 +195,11 @@ pub struct EngineCore {
     /// materializing fresh vectors (zero-clone step pipeline).
     batch: Batch,
     hints: StageHints,
+    /// Drain memory-exhaustion victims into
+    /// [`StepOutcome::migratable`] instead of evicting them (cluster
+    /// serving; single-engine drivers leave this off and keep the PR 2
+    /// evict-victim-then-retry semantics).
+    capture_migrations: bool,
     next_id: ReqId,
 }
 
@@ -182,8 +213,19 @@ impl EngineCore {
             retain_finished: true,
             batch: Batch::default(),
             hints: StageHints::default(),
+            capture_migrations: false,
             next_id: 1,
         }
+    }
+
+    /// Enable migration capture: a typed memory-exhaustion victim is
+    /// drained ([`Backend::export_migration`] +
+    /// [`Scheduler::extract_for_migration`]) into
+    /// [`StepOutcome::migratable`] instead of destroyed. Falls back to
+    /// plain eviction per victim when either side cannot drain it.
+    pub fn capture_migrations(mut self, on: bool) -> Self {
+        self.capture_migrations = on;
+        self
     }
 
     /// Bound the admission queue: submissions beyond `cap` waiting
@@ -372,15 +414,48 @@ impl EngineCore {
                     let Some((victim, reason)) = info else {
                         return Err(ServeError::backend(e));
                     };
-                    let err = ServeError::Evicted { reason };
-                    if self.sched.cancel(victim) {
-                        self.backend.release(victim);
-                        self.metrics.requests_evicted += 1;
-                        if !self.retain_finished {
-                            self.sched.requests.remove(&victim);
+                    // capture mode: drain the victim for re-admission
+                    // elsewhere — scheduler reservation released first,
+                    // then the backend state moves out wholesale. Either
+                    // side refusing falls back to a true eviction.
+                    let mut captured = false;
+                    if self.capture_migrations {
+                        if let Some((request, reserve_bytes)) =
+                            self.sched.extract_for_migration(victim)
+                        {
+                            match self.backend.export_migration(victim) {
+                                Some(payload) => {
+                                    out.migratable.push(MigrationCandidate {
+                                        request,
+                                        reserve_bytes,
+                                        payload,
+                                        reason: reason.clone(),
+                                    });
+                                    captured = true;
+                                }
+                                None => {
+                                    // the backend cannot drain: restore
+                                    // the reservation (the bytes were
+                                    // just freed, so this cannot fail)
+                                    // and evict normally below
+                                    let _ = self
+                                        .sched
+                                        .admit_migrated(request, reserve_bytes);
+                                }
+                            }
                         }
                     }
-                    out.evicted.push((victim, err));
+                    if !captured {
+                        let err = ServeError::Evicted { reason };
+                        if self.sched.cancel(victim) {
+                            self.backend.release(victim);
+                            self.metrics.requests_evicted += 1;
+                            if !self.retain_finished {
+                                self.sched.requests.remove(&victim);
+                            }
+                        }
+                        out.evicted.push((victim, err));
+                    }
                     let before = self.batch.n_requests();
                     self.batch.decodes.retain(|&id| id != victim);
                     if self.batch.prefill.as_ref().map_or(false, |w| w.req() == victim) {
@@ -432,6 +507,56 @@ impl EngineCore {
             }
         }
         Ok(out)
+    }
+
+    /// Re-admit a drained [`MigrationCandidate`] on THIS engine: take
+    /// the scheduler reservation (`reserve_bytes`, atomically with the
+    /// source's release — single-threaded cluster sequencing means no
+    /// double-count window ever exists), then land the backend payload.
+    /// On failure the candidate is handed back unchanged so the caller
+    /// can try another target or finalize the eviction at the source.
+    pub fn admit_migration(
+        &mut self,
+        candidate: MigrationCandidate,
+    ) -> Result<(), MigrationCandidate> {
+        let MigrationCandidate { request, reserve_bytes, payload, reason } = candidate;
+        let id = request.id;
+        match self.sched.admit_migrated(request, reserve_bytes) {
+            Err(request) => Err(MigrationCandidate { request, reserve_bytes, payload, reason }),
+            Ok(()) => {
+                // scheduler admission guarantees the id was not live
+                // here, and live backend entries are a subset of live
+                // scheduler entries — the import cannot collide
+                self.backend
+                    .import_migration(payload)
+                    .unwrap_or_else(|e| {
+                        panic!("backend refused an admitted migration (req {id}): {e:#}")
+                    });
+                self.next_id = self.next_id.max(id + 1);
+                Ok(())
+            }
+        }
+    }
+
+    /// No engine could take this drained candidate: finalize it as a
+    /// true eviction at the source (the drain already released all of
+    /// its state; this accounts it and keeps the record for the report).
+    pub fn finalize_eviction(&mut self, candidate: MigrationCandidate) {
+        let MigrationCandidate { mut request, .. } = candidate;
+        request.phase = Phase::Cancelled;
+        // accounted exactly like the in-step eviction path: the evicted
+        // counter, not a client cancellation
+        self.metrics.requests_evicted += 1;
+        if self.retain_finished {
+            self.sched.requests.insert(request.id, request);
+        }
+    }
+
+    /// Account one outbound migration on this (source) engine's metrics:
+    /// the FlashD2H + FlashH2D transfer time charged to the shared
+    /// cluster clock, and the DRAM-tier bytes that moved.
+    pub fn record_migration(&mut self, transfer_s: f64, bytes: usize) {
+        self.metrics.record_migration(transfer_s, bytes);
     }
 
     /// Finish the run: fold still-in-flight requests into the metrics
@@ -609,6 +734,95 @@ mod tests {
         // metrics survive the pruning
         assert_eq!(report.metrics.requests_finished, 1);
         assert_eq!(report.metrics.requests_cancelled, 1);
+    }
+
+    /// HBM-oversubscribed engine (the tests/engine_core.rs eviction
+    /// recipe): three 64-band-group decodes cannot share 160 band slots.
+    fn pressured_core(capture: bool) -> EngineCore {
+        let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
+        cfg.ws_batch_control = false; // let the oversized batch form
+        cfg.prefetch = false; // pure demand traffic
+        let spec = ModelSpec::lwm_7b();
+        let mut hw = HardwareSpec::a100_40gb();
+        hw.hbm_kv_bytes = 40 * spec.n_layers * spec.n_kv_heads * spec.block_bytes();
+        let backend = SimBackend::new(cfg.clone(), spec.clone(), hw);
+        let sched = Scheduler::new(cfg, spec, 1 << 40); // admission unconstrained
+        EngineCore::new(sched, Box::new(backend)).capture_migrations(capture)
+    }
+
+    /// Step a pressured source until it drains its first victim.
+    fn first_candidate(src: &mut EngineCore) -> MigrationCandidate {
+        for _ in 0..3 {
+            src.submit(SubmitRequest::synthetic(8192).max_new(64), 0.0).unwrap();
+        }
+        let mut now = 0.0;
+        for _ in 0..400 {
+            let out = src.step(now).unwrap();
+            assert!(
+                out.evicted.is_empty(),
+                "capture mode must drain, not evict: {:?}",
+                out.evicted
+            );
+            now += out.iter_time_s.max(1e-3);
+            if let Some(c) = out.migratable.into_iter().next() {
+                return c;
+            }
+        }
+        panic!("HBM pressure must produce a migration candidate");
+    }
+
+    #[test]
+    fn capture_mode_drains_victim_and_target_finishes_it() {
+        let mut src = pressured_core(true);
+        let cand = first_candidate(&mut src);
+        let id = cand.request.id;
+        assert!(cand.reserve_bytes > 0, "drain must carry the DRAM reservation");
+        assert!(cand.payload.kv_bytes > 0, "mid-flight victim has DRAM KV");
+        assert!(cand.reason.contains("HBM exhausted"), "{}", cand.reason);
+        assert_eq!(src.metrics().requests_evicted, 0);
+        assert!(!src.sched().requests.contains_key(&id), "victim left the source");
+
+        // a roomy target re-admits it and runs it to completion
+        let mut dst = core(None);
+        dst.admit_migration(cand).unwrap();
+        assert!(dst.sched().requests.contains_key(&id));
+        let mut now = 0.0;
+        let mut steps = 0;
+        while dst.has_work() {
+            steps += 1;
+            assert!(steps < 400, "migrated request must make progress");
+            let out = dst.step(now).unwrap();
+            now += out.iter_time_s.max(1e-3);
+        }
+        let r = &dst.sched().requests[&id];
+        assert!(r.is_done(), "migrated request must finish at the target");
+        assert_eq!(dst.metrics().requests_finished, 1);
+    }
+
+    #[test]
+    fn failed_target_admission_hands_candidate_back_for_finalize() {
+        let mut src = pressured_core(true);
+        let cand = first_candidate(&mut src);
+        let id = cand.request.id;
+
+        // a target with a 1 MiB DRAM budget cannot reserve the KV
+        let cfg = ServingConfig::sparseserve(2048, 2048, 32);
+        let spec = ModelSpec::lwm_7b();
+        let hw = HardwareSpec::a100_40gb();
+        let backend = SimBackend::new(cfg.clone(), spec.clone(), hw.clone());
+        let sched =
+            Scheduler::new(cfg, spec, hw.hbm_kv_bytes).with_dram_capacity(1 << 20);
+        let mut tiny = EngineCore::new(sched, Box::new(backend));
+        let cand = tiny.admit_migration(cand).expect_err("must hand the candidate back");
+        assert_eq!(cand.request.id, id, "candidate returned unchanged");
+        assert_eq!(tiny.sched().reserved_bytes(), 0, "failed admit reserves nothing");
+        assert_eq!(tiny.mem_stats().n_registered, 0);
+
+        // no engine had headroom: finalize as a true eviction at source
+        src.finalize_eviction(cand);
+        assert_eq!(src.metrics().requests_evicted, 1);
+        let rec = &src.sched().requests[&id];
+        assert!(rec.is_cancelled(), "finalized candidate is recorded as destroyed");
     }
 
     #[test]

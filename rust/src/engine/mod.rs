@@ -27,10 +27,12 @@ mod serve_loop;
 mod sim_backend;
 
 pub use backend::{
-    drive_step, prefill_layer_range, Backend, BatchOutcome, MemStats, PhaseEvent, StageHints,
-    StepSession,
+    drive_step, prefill_layer_range, Backend, BatchOutcome, MemStats, MigrationPayload,
+    PhaseEvent, StageHints, StepSession,
 };
-pub use self::core::{EngineCore, RunReport, StepOutcome, SubmitRequest, TokenEvent};
+pub use self::core::{
+    EngineCore, MigrationCandidate, RunReport, StepOutcome, SubmitRequest, TokenEvent,
+};
 pub use error::ServeError;
 pub use pjrt_backend::PjrtBackend;
 pub use serve_loop::Engine;

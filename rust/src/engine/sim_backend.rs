@@ -741,6 +741,52 @@ impl Backend for SimBackend {
         self.cache.remove_request(req);
     }
 
+    fn export_migration(&mut self, req: ReqId) -> Option<super::backend::MigrationPayload> {
+        // Drain the request for re-admission elsewhere. HBM residency
+        // does not travel — stage pins are cancelled and cached groups
+        // dropped exactly like `release` — but the DRAM-tier KV plus the
+        // selection RNG and working-set history move WHOLESALE (no
+        // clone), so the target resumes the identical stream.
+        let r = self.reqs.remove(&req)?;
+        for key in self.prefetcher.cancel_request(req) {
+            self.cache.unpin(&key);
+        }
+        self.cache.remove_request(req);
+        let bs = self.spec().block_size;
+        // mirror mem_stats(): the DRAM tier holds every band's groups
+        let kv_bytes = r.len.div_ceil(bs) * self.group_bytes * self.n_bands;
+        Some(super::backend::MigrationPayload {
+            req,
+            len: r.len,
+            budget_groups: r.budget_groups,
+            selection: r.selection,
+            ws: r.ws,
+            kv_bytes,
+        })
+    }
+
+    fn import_migration(&mut self, payload: super::backend::MigrationPayload) -> Result<()> {
+        if self.reqs.contains_key(&payload.req) {
+            anyhow::bail!(
+                "migration target already serves request {}",
+                payload.req
+            );
+        }
+        // Deliberately NOT a register(): the admission counter is not
+        // bumped and no seed is drawn — the payload's SelectionModel
+        // resumes the source's RNG stream exactly where it stopped.
+        self.reqs.insert(
+            payload.req,
+            SimReq {
+                len: payload.len,
+                selection: payload.selection,
+                ws: payload.ws,
+                budget_groups: payload.budget_groups,
+            },
+        );
+        Ok(())
+    }
+
     fn abort_iteration(&mut self) -> f64 {
         // a rolled-back session already dropped its band pins; drain
         // defensively so an abandoned iteration can never leak one
@@ -1545,6 +1591,107 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn migrated_mid_decode_request_replays_byte_identically() {
+        // part 3 of the rollback-equivalence harness: a DRAIN must be as
+        // exact as a rollback. A request migrated mid-decode carries its
+        // SelectionModel + WorkingSetTracker wholesale, so its future
+        // selection stream at the target is byte-identical to the
+        // unmigrated counterfactual's.
+        let cfg = ServingConfig::sparseserve(2048, 2048, 32);
+        let mut src = mk(cfg.clone());
+        let reqs = prefill_all(&mut src, 1, 16_000);
+        let batch = Batch { decodes: vec![1], prefill: None };
+        for _ in 0..4 {
+            run(&mut src, &batch, &reqs); // mid-decode with history
+        }
+        // the unmigrated counterfactual: clone the state that would have
+        // kept running at the source
+        let mut ref_sel = src.reqs[&1].selection.clone();
+        let ref_len = src.reqs[&1].len;
+        let ref_ws_steps = src.reqs[&1].ws.steps_recorded();
+        let ref_ws_blocks = src.reqs[&1].ws.ranked_blocks();
+
+        let payload = src.export_migration(1).expect("live decode must drain");
+        assert_eq!(payload.req, 1);
+        assert_eq!(payload.len, ref_len);
+        assert!(payload.kv_bytes > 0, "mid-decode KV must have DRAM bytes");
+        assert_eq!(src.mem_stats(), MemStats::default(), "source fully drained");
+        assert_eq!(src.pinned_entries(), 0, "drain must leave no pin behind");
+        assert!(src.export_migration(1).is_none(), "double drain refused");
+
+        let mut dst = mk(cfg);
+        dst.import_migration(payload).unwrap();
+        assert_eq!(dst.reqs[&1].len, ref_len);
+        assert_eq!(dst.reqs[&1].ws.steps_recorded(), ref_ws_steps);
+        assert_eq!(dst.reqs[&1].ws.ranked_blocks(), ref_ws_blocks);
+        // identical future draws prove the RNG stream moved exactly —
+        // the monotone-counter seed was preserved, not redrawn
+        let mut migrated = dst.reqs[&1].selection.clone();
+        for _ in 0..5 {
+            assert_eq!(
+                migrated.next_selection(1000, 64),
+                ref_sel.next_selection(1000, 64),
+                "migrated selection stream diverged from the unmigrated run"
+            );
+        }
+        // the request keeps decoding at the target
+        let out = run(&mut dst, &batch, &reqs);
+        assert_eq!(out.tokens, vec![(1, None)]);
+        assert_eq!(dst.reqs[&1].len, ref_len + 1);
+        // a second import onto the now-live id must refuse, handing the
+        // payload back intact via the error path
+        let clash = super::backend::MigrationPayload {
+            req: 1,
+            len: 8,
+            budget_groups: 1,
+            selection: SelectionModel::new(9),
+            ws: WorkingSetTracker::new(4),
+            kv_bytes: 0,
+        };
+        assert!(dst.import_migration(clash).is_err(), "id collision refused");
+    }
+
+    #[test]
+    fn drain_conserves_pins_of_surviving_requests() {
+        // pin conservation across the drain: exporting one request under
+        // active prefetch staging must cancel ONLY the victim's stage
+        // pins — the survivor's stages stay pinned and still earn hits
+        let mut b = mk_pressured(ServingConfig::sparseserve(2048, 2048, 32), 96);
+        let reqs = prefill_two(&mut b, 16_000);
+        let batch = Batch { decodes: vec![1, 2], prefill: None };
+        run(&mut b, &batch, &reqs); // build working-set history
+        // stage both requests' working sets under an idle batch
+        let idle = Batch { decodes: vec![], prefill: None };
+        let hints = StageHints { next_decodes: vec![1, 2] };
+        let staged = drive_step(&mut b, &idle, &reqs, &hints).unwrap().prefetch_blocks;
+        assert!(staged > 0, "pressure must trigger staging");
+        let pins_before = b.pinned_entries();
+        assert!(pins_before > 0, "stages must hold pins");
+
+        let cancelled_before = b.prefetch_stats().cancelled;
+        let payload = b.export_migration(1).expect("staged request must drain");
+        assert!(payload.kv_bytes > 0);
+        assert!(
+            b.prefetch_stats().cancelled > cancelled_before,
+            "the victim's in-flight stages must be cancelled by the drain"
+        );
+        let pins_after = b.pinned_entries();
+        assert!(pins_after < pins_before, "victim pins must drop");
+        assert!(pins_after > 0, "survivor stage pins must be conserved");
+        // the survivor keeps decoding and consumes its surviving stages
+        let hits_before = b.prefetch_stats().hits;
+        let b2 = Batch { decodes: vec![2], prefill: None };
+        let out = run(&mut b, &b2, &reqs);
+        assert_eq!(out.tokens, vec![(2, None)]);
+        assert!(
+            b.prefetch_stats().hits > hits_before,
+            "surviving stages must still earn hits after the drain"
+        );
+        b.release(2);
+        assert_eq!(b.pinned_entries(), 0, "no pin outlives its request");
     }
 
     #[test]

@@ -1,0 +1,152 @@
+//! Cluster serving experiments: goodput vs tenant skew for one engine,
+//! N engines without migration, and N engines with KV migration.
+//!
+//! The testbed is deliberately heterogeneous — the shape that makes
+//! migration matter:
+//!
+//! - engine 0 ("capacity engine"): a deep DRAM pool behind a small HBM
+//!   working-set cache (the tests/engine_core.rs eviction recipe: 40
+//!   band-group slots). It admits nearly everything and is where
+//!   memory-exhaustion victims appear.
+//! - engine 1 ("spill engine"): a full-size HBM working-set cache
+//!   behind a shallow DRAM pool (~4 largest-request reservations). The
+//!   router can only place a few requests here, but its HBM headroom
+//!   makes it the natural migration target.
+//!
+//! Under skewed multi-tenant arrivals the hot tenant's stretched
+//! prompts pile onto engine 0, its HBM thrashes, and the three
+//! variants separate: single-engine and no-migration clusters evict
+//! the victims; the migrating cluster drains them to engine 1 and
+//! finishes them. `bench --out-cluster` folds these numbers into
+//! `BENCH_cluster.json`.
+
+use crate::cluster::{ClusterConfig, ClusterReport, ClusterServer};
+use crate::config::{HardwareSpec, ModelSpec, ServingConfig};
+use crate::engine::{EngineCore, SimBackend};
+use crate::scheduler::{Request, Scheduler};
+use crate::sim::CostModel;
+use crate::workload::{generate, WorkloadSpec};
+
+use super::{f, render_table};
+
+/// The three systems the cluster experiment compares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterVariant {
+    /// One capacity engine serving the whole trace.
+    Single,
+    /// Capacity + spill engine, victims evicted (no migration).
+    ScaleOut,
+    /// Capacity + spill engine with typed KV migration.
+    ScaleOutMigrate,
+}
+
+impl ClusterVariant {
+    pub const ALL: [ClusterVariant; 3] =
+        [ClusterVariant::Single, ClusterVariant::ScaleOut, ClusterVariant::ScaleOutMigrate];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ClusterVariant::Single => "1-engine",
+            ClusterVariant::ScaleOut => "2-engine",
+            ClusterVariant::ScaleOutMigrate => "2-engine+migration",
+        }
+    }
+}
+
+/// Serving policy shared by every engine in the experiment: the
+/// eviction recipe (no working-set batch control, pure demand traffic)
+/// so HBM pressure surfaces as typed victims instead of being planned
+/// around.
+fn cluster_cfg() -> ServingConfig {
+    let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
+    cfg.ws_batch_control = false;
+    cfg.prefetch = false;
+    cfg
+}
+
+/// Engine 0: deep DRAM, 40-band-group HBM (three 64-group decodes
+/// cannot coexist).
+fn capacity_engine() -> EngineCore {
+    let cfg = cluster_cfg();
+    let spec = ModelSpec::lwm_7b();
+    let mut hw = HardwareSpec::a100_40gb();
+    hw.hbm_kv_bytes = 40 * spec.n_layers * spec.n_kv_heads * spec.block_bytes();
+    let backend = SimBackend::new(cfg.clone(), spec.clone(), hw.clone());
+    // honest HBM capacity: the router reads `m_avl` off this scheduler
+    let sched = Scheduler::new(cfg, spec, hw.hbm_kv_bytes).with_dram_capacity(1 << 40);
+    EngineCore::new(sched, Box::new(backend))
+}
+
+/// Engine 1: full-size HBM, DRAM sized to ~4 largest reservations —
+/// shallow enough that the router's watermark caps fresh placements at
+/// a handful of requests, deep enough that the 15% reserve above the
+/// watermark can hold a drained mid-size victim.
+fn spill_engine() -> EngineCore {
+    let cfg = cluster_cfg();
+    let spec = ModelSpec::lwm_7b();
+    let hw = HardwareSpec::a100_40gb();
+    let backend = SimBackend::new(cfg.clone(), spec.clone(), hw.clone());
+    let sizer = Scheduler::new(cfg.clone(), spec.clone(), hw.hbm_kv_bytes);
+    let dram = 4 * sizer.full_kv_bytes(32_768, 64);
+    let sched = Scheduler::new(cfg, spec, hw.hbm_kv_bytes).with_dram_capacity(dram);
+    EngineCore::new(sched, Box::new(backend))
+}
+
+/// The skewed multi-tenant trace every variant replays: 4 tenants, the
+/// hot one stretched by `skew`, outputs capped short so goodput
+/// differences come from admission/eviction dynamics rather than
+/// decode tails.
+pub fn cluster_trace(skew: f64, seed: u64, n: usize) -> Vec<Request> {
+    let mut spec = WorkloadSpec::paper_lwm(0.25, seed).with_tenant_skew(4, skew);
+    spec.max_output = 64;
+    generate(&spec, n, 0)
+}
+
+/// Run one variant over a trace on the shared cluster clock.
+pub fn run_cluster_variant(variant: ClusterVariant, trace: Vec<Request>) -> ClusterReport {
+    let spec = ModelSpec::lwm_7b();
+    let hw = HardwareSpec::a100_40gb();
+    let cost = CostModel::new(spec, hw);
+    let engines = match variant {
+        ClusterVariant::Single => vec![capacity_engine()],
+        _ => vec![capacity_engine(), spill_engine()],
+    };
+    let cfg = ClusterConfig {
+        migrate: variant == ClusterVariant::ScaleOutMigrate,
+        ..ClusterConfig::default()
+    };
+    ClusterServer::new(engines, cost, cfg)
+        .run_trace(trace, 1e5)
+        .expect("cluster trace replay")
+}
+
+/// One goodput-vs-skew point: the three variants on the same trace.
+pub fn cluster_skew_metrics(skew: f64, seed: u64) -> Vec<(&'static str, ClusterReport)> {
+    ClusterVariant::ALL
+        .iter()
+        .map(|&v| (v.name(), run_cluster_variant(v, cluster_trace(skew, seed, 14))))
+        .collect()
+}
+
+/// Cluster table: goodput / finished / evicted / migrated vs skew.
+pub fn fig_cluster(skews: &[f64]) -> String {
+    let mut rows = Vec::new();
+    for &skew in skews {
+        for (name, rep) in cluster_skew_metrics(skew, 7) {
+            rows.push(vec![
+                format!("{skew}"),
+                name.to_string(),
+                f(rep.goodput_rps() * 1e3),
+                rep.requests_finished().to_string(),
+                rep.requests_evicted().to_string(),
+                rep.requests_migrated().to_string(),
+                f(rep.migration_transfer_s()),
+            ]);
+        }
+    }
+    render_table(
+        "Cluster: goodput (finishes/ks) vs tenant skew — 1 engine vs 2 engines ± KV migration",
+        &["skew", "system", "goodput", "finished", "evicted", "migrated", "transfer_s"],
+        &rows,
+    )
+}

@@ -6,10 +6,14 @@
 //! A100 testbed substitute); `real` experiments execute the tiny-llm
 //! artifacts on PJRT.
 
+pub mod cluster_exp;
 pub mod hotpath;
 pub mod real;
 pub mod sim_exp;
 
+pub use cluster_exp::{
+    cluster_skew_metrics, cluster_trace, fig_cluster, run_cluster_variant, ClusterVariant,
+};
 pub use hotpath::{full_step_results, hotpath_doc};
 pub use real::{fig8_overlap, table1_accuracy};
 pub use sim_exp::*;

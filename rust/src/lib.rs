@@ -10,7 +10,9 @@
 //!   continuous batching with working-set-aware batch size control
 //!   (Alg. 1), hierarchical HBM/DRAM KV-cache management with
 //!   fragmentation-aware transfer engines (FlashH2D / FlashD2H), and
-//!   layer-segmented prefill. See `rust/README.md` for the serving API.
+//!   layer-segmented prefill; the [`cluster`] tier routes across N
+//!   engines with working-set-aware placement and typed KV migration.
+//!   See `rust/README.md` for the serving API.
 //! - **L2 (python/compile/model.py)**: llama-style model split into
 //!   per-layer/per-phase entry points, AOT-lowered to HLO text.
 //! - **L1 (python/compile/kernels/)**: pallas kernels (block metadata,
@@ -23,6 +25,7 @@
 //! EXPERIMENTS.md for paper-vs-measured results.
 
 pub mod baselines;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod engine;

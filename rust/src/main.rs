@@ -81,12 +81,16 @@ USAGE: sparseserve <info|serve|simulate|bench-transfer> [flags]
             hot-path microbench (plan -> stage -> per-layer decode ->
             commit, hybrid, and rollback+retry cases; panics fail CI),
             (4) admission estimates on vs off under a binding DRAM
-            budget; writes BENCH_prefetch.json + BENCH_layer_model.json
-            + BENCH_hotpath.json (the CI perf ratchet compares the
-            latter's steady-decode metric against the previous run)
+            budget, (5) cluster goodput vs tenant skew: 1 engine vs 2
+            engines with and without typed KV migration; writes
+            BENCH_prefetch.json + BENCH_layer_model.json +
+            BENCH_hotpath.json + BENCH_cluster.json (the CI perf
+            ratchet compares the hot-path steady-decode metric against
+            the previous run)
       --out BENCH_prefetch.json              prefetch output path
       --out-layer BENCH_layer_model.json     layer-model output path
       --out-hotpath BENCH_hotpath.json       hot-path output path
+      --out-cluster BENCH_cluster.json       cluster output path
       --hotpath-budget 0.2                   seconds per hot-path case
       --rates 0.2,0.35                       comma-separated request rates
 
@@ -382,6 +386,44 @@ fn bench(args: &Args) -> Result<()> {
     doc.insert("admission_estimates".into(), Value::Obj(est));
     std::fs::write(&hotpath_out, Value::Obj(doc).to_string())?;
     println!("[bench] wrote {hotpath_out}");
+
+    // ---- cluster serving: goodput vs tenant skew, ± KV migration ----
+    let cluster_out = args.get_or("out-cluster", "BENCH_cluster.json");
+    println!("== cluster: 1 engine vs 2 engines +/- KV migration (LWM-7B, seed 7) ==");
+    let mut points = Vec::new();
+    for &skew in &[0.0, 0.4, 0.8] {
+        for (name, rep) in sparseserve::figures::cluster_skew_metrics(skew, 7) {
+            println!(
+                "skew {skew:.1} {name:>18}: goodput {:.3}/ks | finished {} evicted {} \
+                 migrated {} | transfer {:.3}s | makespan {:.0}s",
+                rep.goodput_rps() * 1e3,
+                rep.requests_finished(),
+                rep.requests_evicted(),
+                rep.requests_migrated(),
+                rep.migration_transfer_s(),
+                rep.makespan_s,
+            );
+            let mut p = BTreeMap::new();
+            p.insert("skew".into(), Value::Num(skew));
+            p.insert("system".into(), Value::Str(name.into()));
+            p.insert("goodput_rps".into(), Value::Num(rep.goodput_rps()));
+            p.insert("throughput".into(), Value::Num(rep.throughput()));
+            p.insert("finished".into(), Value::Num(rep.requests_finished() as f64));
+            p.insert("evicted".into(), Value::Num(rep.requests_evicted() as f64));
+            p.insert("migrated".into(), Value::Num(rep.requests_migrated() as f64));
+            p.insert("router_rejected".into(), Value::Num(rep.rejected.len() as f64));
+            p.insert("migration_transfer_s".into(), Value::Num(rep.migration_transfer_s()));
+            p.insert("migration_bytes".into(), Value::Num(rep.migration_bytes() as f64));
+            p.insert("makespan_s".into(), Value::Num(rep.makespan_s));
+            points.push(Value::Obj(p));
+        }
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Value::Str("cluster_goodput_vs_skew".into()));
+    doc.insert("model".into(), Value::Str("lwm-7b".into()));
+    doc.insert("points".into(), Value::Arr(points));
+    std::fs::write(&cluster_out, Value::Obj(doc).to_string())?;
+    println!("[bench] wrote {cluster_out}");
     Ok(())
 }
 

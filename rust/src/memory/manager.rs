@@ -99,6 +99,43 @@ struct KvScratch {
     miss_keys: Vec<BlockKey>,
 }
 
+/// A request's serialized DRAM-tier KV state — the real-backend
+/// migration seam. [`KvManager::drain_request`] copies every stored
+/// block's plane out of the source pools (then frees them);
+/// [`KvManager::import_request`] re-allocates and fills pool slots on
+/// the target. The cluster prices [`DrainedKv::total_bytes`] as
+/// FlashD2H at the source plus FlashH2D at the target.
+pub struct DrainedKv {
+    pub req: ReqId,
+    len: usize,
+    layer_len: Vec<usize>,
+    /// `[layer][head][block]` -> the block's full K+V plane floats.
+    planes: Vec<Vec<Vec<Vec<f32>>>>,
+    /// Sealed-block cuboid metadata, moved wholesale (rebuilding it on
+    /// the target would re-read every K plane for nothing).
+    meta: Vec<Vec<Vec<Cuboid>>>,
+    block_bytes: usize,
+}
+
+impl DrainedKv {
+    /// Completed tokens at drain time.
+    pub fn seq_len(&self) -> usize {
+        self.len
+    }
+
+    /// DRAM-tier bytes on the wire (every stored block, all layers).
+    pub fn total_bytes(&self) -> usize {
+        self.n_blocks() * self.block_bytes
+    }
+
+    fn n_blocks(&self) -> usize {
+        self.planes
+            .iter()
+            .map(|l| l.iter().map(|h| h.len()).sum::<usize>())
+            .sum()
+    }
+}
+
 pub struct KvManager {
     spec: ModelSpec,
     /// Offloading on: DRAM is home, HBM is an LRU cache.
@@ -202,6 +239,86 @@ impl KvManager {
 
     pub fn is_registered(&self, req: ReqId) -> bool {
         self.requests.contains_key(&req)
+    }
+
+    /// Drain a request for migration: copy every DRAM-tier block plane
+    /// (and move the sealed-block metadata) into a [`DrainedKv`], then
+    /// free all of its local state exactly like [`Self::release`] — HBM
+    /// residency and stage pins do not travel. A between-steps
+    /// operation: must not run inside an open step transaction.
+    pub fn drain_request(&mut self, req: ReqId) -> Option<DrainedKv> {
+        debug_assert!(self.txn.is_none(), "drain inside a step transaction");
+        // land in-flight staging copies before freeing their slots, and
+        // drop the victim's stage pins (pin conservation across drains)
+        self.prefetch.wait_staged();
+        for key in self.prefetch.cancel_request(req) {
+            self.cache.unpin(&key);
+        }
+        let r = self.requests.remove(&req)?;
+        let mut planes = Vec::with_capacity(r.blocks.len());
+        for layer in &r.blocks {
+            let mut heads = Vec::with_capacity(layer.len());
+            for head in layer {
+                heads.push(
+                    head.iter().map(|&slot| self.dram.slot(slot).to_vec()).collect::<Vec<_>>(),
+                );
+            }
+            planes.push(heads);
+        }
+        for layer in r.blocks {
+            for head in layer {
+                for slot in head {
+                    self.dram.free(slot);
+                }
+            }
+        }
+        for slot in self.cache.remove_request(req) {
+            self.hbm.free(slot);
+        }
+        Some(DrainedKv {
+            req,
+            len: r.len,
+            layer_len: r.layer_len,
+            planes,
+            meta: r.meta,
+            block_bytes: self.dram.slot_bytes(),
+        })
+    }
+
+    /// Land a drained request on this manager: allocate DRAM slots for
+    /// every block and copy the planes in (the inverse of
+    /// [`Self::drain_request`]). Preflighted against the free-slot
+    /// count, so a typed [`MemoryError::DramExhausted`] allocates
+    /// nothing. Panics on an id collision — cluster sequencing must
+    /// never import over a live request.
+    pub fn import_request(&mut self, kv: DrainedKv) -> Result<(), MemoryError> {
+        assert!(
+            !self.requests.contains_key(&kv.req),
+            "migration import collides with live request {}",
+            kv.req
+        );
+        if kv.n_blocks() > self.dram.n_free() {
+            return Err(MemoryError::DramExhausted { req: kv.req });
+        }
+        let mut blocks = Vec::with_capacity(kv.planes.len());
+        for layer in &kv.planes {
+            let mut heads = Vec::with_capacity(layer.len());
+            for head in layer {
+                let mut slots = Vec::with_capacity(head.len());
+                for plane in head {
+                    let slot = self.dram.alloc().expect("preflight counted free slots");
+                    self.dram.slot_mut(slot).copy_from_slice(plane);
+                    slots.push(slot);
+                }
+                heads.push(slots);
+            }
+            blocks.push(heads);
+        }
+        self.requests.insert(
+            kv.req,
+            RequestKv { len: kv.len, layer_len: kv.layer_len, blocks, meta: kv.meta },
+        );
+        Ok(())
     }
 
     /// Completed tokens (all layers stored).
@@ -1462,6 +1579,88 @@ mod tests {
         let iter = m.end_iteration();
         assert_eq!(iter.blocks_loaded, 0);
         assert_eq!(iter.prefetch_hits, 2, "cross-iteration stage must hit");
+    }
+
+    #[test]
+    fn drain_then_import_round_trips_gathers_byte_identically() {
+        let mut src = mk_manager(true, 64);
+        src.register(1);
+        let (k, v) = prefill_kv(2, 12, 4); // 3 sealed blocks/head/layer
+        for layer in 0..2 {
+            src.append_prefill_layer(1, layer, &k, &v, 12, 12).unwrap();
+        }
+        // warm the source cache + stage pins so the drain has residency
+        // state to clean up
+        let plan = [BlockKey::new(1, 0, 0, 0), BlockKey::new(1, 0, 1, 0)];
+        assert_eq!(src.prefetch_working_set(&plan, 64, 0, false), 2);
+        // the reference gather (what an unmigrated run would read)
+        let budget = 4;
+        let s = budget * 4;
+        let sel = vec![vec![2u32, 0u32], vec![2u32, 0u32]];
+        let (mut kr, mut vr, mut mr) =
+            (vec![0.0; 2 * s * 4], vec![0.0; 2 * s * 4], vec![0.0; 2 * s]);
+        src.gather_into(1, 0, &sel, budget, &mut kr, &mut vr, &mut mr).unwrap();
+        src.end_iteration();
+
+        let drained = src.drain_request(1).expect("live request must drain");
+        assert_eq!(drained.seq_len(), 12);
+        // 2 layers x 2 heads x 3 blocks
+        assert_eq!(drained.total_bytes(), 12 * src.block_bytes());
+        assert_eq!(src.dram_bytes_used(), 0, "drain frees the source DRAM");
+        assert_eq!(src.hbm_bytes_used(), 0, "residency does not travel");
+        assert!(src.drain_request(1).is_none(), "double drain refused");
+
+        let mut dst = mk_manager(true, 64);
+        dst.import_request(drained).unwrap();
+        assert_eq!(dst.seq_len(1), 12);
+        assert_eq!(dst.n_sealed(1, 0), 3);
+        // the migrated gather reads byte-identical planes AND identical
+        // sealed-block metadata
+        let (mut kd, mut vd, mut md) =
+            (vec![0.0; 2 * s * 4], vec![0.0; 2 * s * 4], vec![0.0; 2 * s]);
+        dst.gather_into(1, 0, &sel, budget, &mut kd, &mut vd, &mut md).unwrap();
+        dst.end_iteration();
+        assert_eq!(kd, kr, "migrated K planes must be byte-identical");
+        assert_eq!(vd, vr, "migrated V planes must be byte-identical");
+        assert_eq!(md, mr);
+        let dh = 4;
+        let nb = 8;
+        let (mut lo, mut hi, mut mask) =
+            (vec![0.0; 2 * nb * dh], vec![0.0; 2 * nb * dh], vec![0.0; 2 * nb]);
+        dst.metadata_into(1, 0, nb, &mut lo, &mut hi, &mut mask);
+        assert_eq!(mask[..3], [0.0, 0.0, 0.0], "sealed meta moved with the KV");
+        // decode continues where the source stopped
+        for layer in 0..2 {
+            dst.append_decode_token(1, layer, &[0.5; 8], &[0.5; 8]).unwrap();
+        }
+        assert_eq!(dst.seq_len(1), 13);
+        dst.release(1);
+        assert_eq!(dst.dram_bytes_used(), 0);
+    }
+
+    #[test]
+    fn import_into_exhausted_dram_is_typed_and_allocates_nothing() {
+        let mut src = mk_manager(true, 8);
+        src.register(1);
+        let (k, v) = prefill_kv(2, 8, 4); // 2 blocks/head/layer = 8 slots
+        for layer in 0..2 {
+            src.append_prefill_layer(1, layer, &k, &v, 8, 8).unwrap();
+        }
+        let drained = src.drain_request(1).unwrap();
+        // a target with only 4 DRAM slots cannot take 8 blocks
+        let spec = tiny_spec();
+        let slot_bytes = 2 * spec.block_size * spec.head_dim * 4;
+        let mut dst = KvManager::new(
+            spec,
+            8 * slot_bytes,
+            4 * slot_bytes,
+            true,
+            engine_for(TransferKind::Flash, HardwareSpec::a100_40gb()),
+        );
+        let err = dst.import_request(drained).unwrap_err();
+        assert_eq!(err, MemoryError::DramExhausted { req: 1 });
+        assert_eq!(dst.dram_bytes_used(), 0, "failed import must allocate nothing");
+        assert!(!dst.is_registered(1));
     }
 
     #[test]

@@ -2,9 +2,117 @@
 //! plus the prefetch/overlap accounting of the two-stream iteration
 //! model (stall time, staged blocks, hit/waste counters).
 
-use crate::engine::BatchOutcome;
+use crate::engine::{BatchOutcome, PhaseEvent};
 use crate::scheduler::Request;
 use crate::util::stats::Series;
+
+/// Per-layer compute-vs-transfer-wait profile, accumulated from the
+/// [`PhaseEvent`]s each committed iteration carries (`BatchOutcome::
+/// phases`). This is the observability lens ROADMAP item 5 names as a
+/// prerequisite for adaptive policies: the real backend's *measured*
+/// `PhaseEvent::compute_s` and the simulator's modeled one both land
+/// here, layer by layer, instead of being discarded by `drive_step`.
+#[derive(Debug, Default, Clone)]
+pub struct LayerProfile {
+    /// GPU compute attributed to each layer, seconds (prefill segments
+    /// and decode layers both fold into the layer they ran).
+    pub compute_s: Vec<f64>,
+    /// Demand PCIe bytes each layer moved.
+    pub bytes_moved: Vec<u64>,
+    /// Demand misses discovered at each layer (per-head blocks).
+    pub miss_blocks: Vec<u64>,
+    /// Transfer wait attributed to each layer: the iteration's unhidden
+    /// copy time (`BatchOutcome::stall_time_s`) apportioned over layers
+    /// by their share of the iteration's demand bytes. An attribution,
+    /// not a measurement — the event models overlap copies across layer
+    /// boundaries, so a single layer's true wait is not separable; the
+    /// byte-weighted split conserves total stall while still showing
+    /// WHERE the traffic that caused it was discovered.
+    pub transfer_wait_s: Vec<f64>,
+    /// Phase events folded in.
+    pub phases: u64,
+}
+
+impl LayerProfile {
+    fn ensure(&mut self, n_layers: usize) {
+        if self.compute_s.len() < n_layers {
+            self.compute_s.resize(n_layers, 0.0);
+            self.bytes_moved.resize(n_layers, 0);
+            self.miss_blocks.resize(n_layers, 0);
+            self.transfer_wait_s.resize(n_layers, 0.0);
+        }
+    }
+
+    /// Fold one committed iteration's phase events in.
+    pub fn record_outcome(&mut self, out: &BatchOutcome) {
+        if out.phases.is_empty() {
+            return;
+        }
+        let total_bytes: u64 = out.phases.iter().map(|e| e.bytes_moved as u64).sum();
+        for ev in &out.phases {
+            self.record_event(ev, out.stall_time_s, total_bytes);
+        }
+    }
+
+    fn record_event(&mut self, ev: &PhaseEvent, iter_stall_s: f64, total_bytes: u64) {
+        // phases are driven one layer at a time; a multi-layer event is
+        // attributed to its first layer
+        let layer = ev.layer_start;
+        self.ensure(layer + 1);
+        self.compute_s[layer] += ev.compute_s;
+        self.bytes_moved[layer] += ev.bytes_moved as u64;
+        self.miss_blocks[layer] += ev.miss_blocks as u64;
+        if total_bytes > 0 {
+            self.transfer_wait_s[layer] +=
+                iter_stall_s * ev.bytes_moved as f64 / total_bytes as f64;
+        }
+        self.phases += 1;
+    }
+
+    /// Layers observed so far.
+    pub fn n_layers(&self) -> usize {
+        self.compute_s.len()
+    }
+
+    pub fn total_compute_s(&self) -> f64 {
+        self.compute_s.iter().sum()
+    }
+
+    pub fn total_transfer_wait_s(&self) -> f64 {
+        self.transfer_wait_s.iter().sum()
+    }
+
+    /// Compact per-run rendering: totals plus the most compute- and most
+    /// transfer-bound layers (the signal the router and the adaptive
+    /// policies of ROADMAP item 5 read).
+    pub fn summary(&self) -> String {
+        if self.phases == 0 {
+            return "layer profile: no phase events recorded".into();
+        }
+        let argmax = |v: &[f64]| -> usize {
+            v.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        };
+        let lc = argmax(&self.compute_s);
+        let lw = argmax(&self.transfer_wait_s);
+        format!(
+            "layer profile: {} layers, compute {:.4}s vs transfer wait {:.4}s \
+             | hottest compute layer {} ({:.4}s) | hottest wait layer {} \
+             ({:.4}s, {} miss blocks)",
+            self.n_layers(),
+            self.total_compute_s(),
+            self.total_transfer_wait_s(),
+            lc,
+            self.compute_s.get(lc).copied().unwrap_or(0.0),
+            lw,
+            self.transfer_wait_s.get(lw).copied().unwrap_or(0.0),
+            self.miss_blocks.get(lw).copied().unwrap_or(0),
+        )
+    }
+}
 
 /// Aggregated metrics for one serving run.
 #[derive(Debug, Default)]
@@ -21,6 +129,14 @@ pub struct RunMetrics {
     pub requests_rejected: usize,
     /// Requests evicted mid-run by typed memory-tier exhaustion.
     pub requests_evicted: usize,
+    /// Requests drained off this engine by the cluster tier's KV
+    /// migration instead of being evicted (counted at the source).
+    pub requests_migrated: usize,
+    /// Serving-clock time this engine's migrations spent on the wire
+    /// (FlashD2H drain at the source + FlashH2D fill at the target).
+    pub migration_transfer_total_s: f64,
+    /// DRAM-tier KV bytes serialized across engines by migrations.
+    pub migration_bytes_total: u64,
     /// Requests whose achieved TTFT exceeded their per-request SLO.
     pub ttft_slo_violations: usize,
     /// Serving-clock makespan, seconds.
@@ -58,6 +174,8 @@ pub struct RunMetrics {
     /// staging hints issued under the current batch's compute).
     pub prefetch_deferred: u64,
     pub iterations: usize,
+    /// Per-layer compute-vs-transfer-wait profile (see [`LayerProfile`]).
+    pub layer_profile: LayerProfile,
 }
 
 impl RunMetrics {
@@ -107,6 +225,7 @@ impl RunMetrics {
         self.prefetch_wasted += out.prefetch_wasted as u64;
         self.prefetch_deferred += out.prefetch_deferred as u64;
         self.abort_time_total_s += out.abort_time_s;
+        self.layer_profile.record_outcome(out);
         if self.iter_time.len() < Self::MAX_SAMPLES {
             self.iter_time.push(out.iter_time_s);
             self.blocks_loaded_per_iter.push(out.blocks_loaded as f64);
@@ -126,6 +245,15 @@ impl RunMetrics {
         if aborted_s > 0.0 && self.abort_time.len() < Self::MAX_SAMPLES {
             self.abort_time.push(aborted_s);
         }
+    }
+
+    /// Record one KV migration drained off this engine: `transfer_s` is
+    /// the FlashD2H + FlashH2D wire time the shared cluster clock was
+    /// charged, `bytes` the serialized DRAM-tier footprint.
+    pub fn record_migration(&mut self, transfer_s: f64, bytes: usize) {
+        self.requests_migrated += 1;
+        self.migration_transfer_total_s += transfer_s;
+        self.migration_bytes_total += bytes as u64;
     }
 
     /// Fraction of staged blocks that were consumed (0 when none staged).
@@ -165,6 +293,12 @@ impl RunMetrics {
         }
         if self.requests_evicted > 0 {
             extra.push_str(&format!(" (evicted={})", self.requests_evicted));
+        }
+        if self.requests_migrated > 0 {
+            extra.push_str(&format!(
+                " (migrated={} transfer {:.4}s)",
+                self.requests_migrated, self.migration_transfer_total_s
+            ));
         }
         let prefetch = if self.prefetch_blocks > 0 {
             format!(
@@ -266,6 +400,57 @@ mod tests {
         assert!((m.coarse_stall_time.mean() - 0.05).abs() < 1e-12);
         assert!(m.summary().contains("prefetch staged=8"));
         assert!(m.summary().contains("overlap hidden"));
+    }
+
+    #[test]
+    fn layer_profile_accumulates_phase_events() {
+        let mut m = RunMetrics::new();
+        let out = BatchOutcome {
+            iter_time_s: 0.1,
+            stall_time_s: 0.03,
+            phases: vec![
+                PhaseEvent {
+                    layer_start: 0,
+                    layer_end: 1,
+                    compute_s: 0.01,
+                    miss_blocks: 2,
+                    bytes_moved: 100,
+                },
+                PhaseEvent {
+                    layer_start: 1,
+                    layer_end: 2,
+                    compute_s: 0.02,
+                    miss_blocks: 6,
+                    bytes_moved: 300,
+                },
+            ],
+            ..Default::default()
+        };
+        m.record_iteration(&out);
+        let p = &m.layer_profile;
+        assert_eq!(p.n_layers(), 2);
+        assert_eq!(p.phases, 2);
+        assert!((p.compute_s[0] - 0.01).abs() < 1e-12);
+        assert!((p.compute_s[1] - 0.02).abs() < 1e-12);
+        assert_eq!(p.bytes_moved, vec![100, 300]);
+        assert_eq!(p.miss_blocks, vec![2, 6]);
+        // stall apportioned by byte share: 25% / 75%
+        assert!((p.transfer_wait_s[0] - 0.03 * 0.25).abs() < 1e-12);
+        assert!((p.transfer_wait_s[1] - 0.03 * 0.75).abs() < 1e-12);
+        // total stall is conserved across the attribution
+        assert!((p.total_transfer_wait_s() - 0.03).abs() < 1e-12);
+        assert!(p.summary().contains("2 layers"));
+    }
+
+    #[test]
+    fn migration_counters_recorded_and_summarized() {
+        let mut m = RunMetrics::new();
+        m.record_migration(0.25, 1 << 20);
+        m.record_migration(0.50, 1 << 20);
+        assert_eq!(m.requests_migrated, 2);
+        assert!((m.migration_transfer_total_s - 0.75).abs() < 1e-12);
+        assert_eq!(m.migration_bytes_total, 2 << 20);
+        assert!(m.summary().contains("migrated=2"));
     }
 
     #[test]

@@ -283,8 +283,9 @@ impl Scheduler {
     }
 
     /// The admission capacity a request's full KV reserves against: HBM
-    /// without offloading (vLLM semantics), DRAM with it.
-    fn admission_capacity(&self) -> usize {
+    /// without offloading (vLLM semantics), DRAM with it. Public so the
+    /// cluster router can size its per-engine placement watermarks.
+    pub fn admission_capacity(&self) -> usize {
         if self.cfg.offload {
             self.dram_capacity
         } else {
@@ -491,6 +492,74 @@ impl Scheduler {
 
     pub fn reserved_bytes(&self) -> usize {
         self.reserved_total
+    }
+
+    /// Admission headroom left under the reserving capacity (HBM without
+    /// offloading, DRAM with it) — the cluster router's placement bound.
+    pub fn admission_headroom(&self) -> usize {
+        self.admission_capacity().saturating_sub(self.reserved_total)
+    }
+
+    /// Whether `bytes` can be reserved right now without displacement.
+    pub fn can_reserve(&self, bytes: usize) -> bool {
+        bytes <= self.admission_headroom()
+    }
+
+    /// The reservation a live request currently holds (0 when none).
+    pub fn reservation_of(&self, id: ReqId) -> usize {
+        self.reserved.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Atomically remove an admitted request AND release its admission
+    /// reservation, for cross-engine KV migration: the request's
+    /// scheduler state (phase, prefill/decode progress, timing) moves to
+    /// the target engine wholesale, and the freed bytes are visible to
+    /// this engine's very next admission decision. Returns the request
+    /// and the reservation it held; `None` when the id is unknown, not
+    /// yet admitted, or already finished/cancelled (queued requests are
+    /// re-routed, not migrated — they hold no reservation).
+    ///
+    /// Pairs with [`Self::admit_migrated`] on the target: the caller
+    /// reserves there in the same scheduling instant, so the bytes are
+    /// never double-counted (held at both engines) nor dropped (held at
+    /// neither) across the move.
+    pub fn extract_for_migration(&mut self, id: ReqId) -> Option<(Request, usize)> {
+        let r = self.requests.get(&id)?;
+        if !matches!(r.phase, Phase::Prefill | Phase::Decode) {
+            return None;
+        }
+        self.active.retain(|&a| a != id);
+        let bytes = self.reserved.remove(&id).unwrap_or(0);
+        self.reserved_total -= bytes;
+        let req = self.requests.remove(&id).unwrap();
+        Some((req, bytes))
+    }
+
+    /// Admit a migrated request at this (target) engine, re-reserving
+    /// exactly the bytes its source reservation held. The request keeps
+    /// its phase, progress counters and timestamps (its TTFT clock keeps
+    /// running from the original arrival; it rejoins the active set at
+    /// the back, behind this engine's older residents). On insufficient
+    /// headroom or an id collision the request is handed back unchanged
+    /// (`Err`), so the caller can fall back to true eviction — at no
+    /// point is the reservation counted at both engines or at neither.
+    pub fn admit_migrated(
+        &mut self,
+        req: Request,
+        reserve_bytes: usize,
+    ) -> std::result::Result<(), Request> {
+        if self.requests.contains_key(&req.id)
+            || !matches!(req.phase, Phase::Prefill | Phase::Decode)
+            || !self.can_reserve(reserve_bytes)
+        {
+            return Err(req);
+        }
+        let id = req.id;
+        self.reserved.insert(id, reserve_bytes);
+        self.reserved_total += reserve_bytes;
+        self.active.push(id);
+        self.requests.insert(id, req);
+        Ok(())
     }
 }
 
@@ -1046,6 +1115,64 @@ mod tests {
         let mut hints = vec![99];
         b.stage_hints_into(&batch, &mut hints);
         assert_eq!(hints, a.stage_hints(&batch));
+    }
+
+    #[test]
+    fn migration_moves_reservation_atomically_under_binding_dram() {
+        // Two engines' schedulers with binding DRAM (each fits ~1.5
+        // requests). Migrating a request must release the source
+        // reservation and re-reserve at the target with no window where
+        // the bytes are double-counted (blocking a source admission) or
+        // dropped (letting the target oversubscribe).
+        let cfg = ServingConfig::vllm_so(256, 2048);
+        let spec_ = spec();
+        let one = {
+            let s = Scheduler::new(cfg.clone(), spec_.clone(), 0);
+            s.full_kv_bytes(512, 64)
+        };
+        let cap = one + one / 2;
+        let mut src =
+            Scheduler::new(cfg.clone(), spec_.clone(), 1 << 30).with_dram_capacity(cap);
+        let mut dst = Scheduler::new(cfg, spec_, 1 << 30).with_dram_capacity(cap);
+
+        src.submit(Request::new(1, 512, 64, 0.0));
+        src.submit(Request::new(2, 512, 64, 0.0));
+        let mut ws = |r| no_ws(r);
+        let b = src.plan(0.0, &mut ws);
+        assert_eq!(b.prefill.as_ref().unwrap().req(), 1);
+        assert_eq!(src.reserved_bytes(), one);
+        // request 2 is DRAM-blocked behind request 1
+        src.advance_prefill(&b.prefill.unwrap());
+        assert!(src.plan(0.1, &mut ws).prefill.is_none());
+
+        // queued requests are not migratable (no reservation to move)
+        assert!(src.extract_for_migration(2).is_none());
+
+        // extract request 1: the source frees INSTANTLY — its very next
+        // plan admits the blocked request (no double-count window)
+        let (req, bytes) = src.extract_for_migration(1).expect("live request");
+        assert_eq!(bytes, one);
+        assert_eq!(src.reserved_bytes(), 0);
+        assert_eq!(src.plan(0.2, &mut ws).prefill.as_ref().unwrap().req(), 2);
+
+        // target re-reserves the exact same bytes
+        dst.admit_migrated(req, bytes).expect("target has headroom");
+        assert_eq!(dst.reserved_bytes(), one);
+        assert_eq!(dst.n_active(), 1);
+        // cluster-wide invariant: exactly `2 * one` reserved in total
+        assert_eq!(src.reserved_bytes() + dst.reserved_bytes(), 2 * one);
+
+        // a second migrated request does NOT fit the target's remaining
+        // half-reservation: it is handed back unchanged, reserving
+        // nothing (the caller falls back to true eviction)
+        let (req2, bytes2) = src.extract_for_migration(2).expect("admitted above");
+        let back = dst.admit_migrated(req2, bytes2).expect_err("must not fit");
+        assert_eq!(back.id, 2);
+        assert_eq!(dst.reserved_bytes(), one, "failed admit reserves nothing");
+        // an id collision is also refused
+        let mut dup = Request::new(1, 512, 64, 0.0);
+        dup.phase = Phase::Decode;
+        assert!(dst.admit_migrated(dup, 0).is_err());
     }
 
     #[test]

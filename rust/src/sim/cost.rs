@@ -238,6 +238,20 @@ impl CostModel {
         }
     }
 
+    /// Wire time of one cross-engine KV migration: the victim's
+    /// DRAM-tier footprint drains over FlashD2H at the source, then
+    /// fills over FlashH2D at the target. The two hops are sequential
+    /// (the target cannot start loading blocks the source has not yet
+    /// serialized), so the shared cluster clock is charged their sum.
+    pub fn migration_time(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let block = self.spec.block_bytes();
+        let n_blocks = bytes.div_ceil(block);
+        self.hw.flash_d2h_time(bytes) + self.hw.flash_h2d_time(n_blocks, block)
+    }
+
     /// Extra prefill-iteration latency caused by KV *saving*, as a factor
     /// on compute time. Calibrated to Fig. 14b: memcpy-based saving makes
     /// prefill 1.76x the compute time, GPU-direct 1.28x, FlashD2H 1.00x.
@@ -307,6 +321,22 @@ mod tests {
         let ratio = m.load_time(TransferKind::Memcpy, n)
             / m.load_time(TransferKind::Flash, n);
         assert!(ratio > 5.0, "FlashH2D must cut loading severalfold: {ratio}");
+    }
+
+    #[test]
+    fn migration_time_prices_both_hops() {
+        let m = model();
+        let block = m.spec.block_bytes();
+        let bytes = 256 * block;
+        let t = m.migration_time(bytes);
+        // strictly more than either hop alone, exactly their sum
+        let d2h = m.hw.flash_d2h_time(bytes);
+        let h2d = m.hw.flash_h2d_time(256, block);
+        assert!(t > d2h && t > h2d);
+        assert!((t - (d2h + h2d)).abs() < 1e-12);
+        assert_eq!(m.migration_time(0), 0.0);
+        // monotone in the footprint
+        assert!(m.migration_time(2 * bytes) > t);
     }
 
     #[test]

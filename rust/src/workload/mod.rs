@@ -63,6 +63,16 @@ pub struct WorkloadSpec {
     /// Mean request arrival rate (Poisson), requests/second.
     pub rate_rps: f64,
     pub seed: u64,
+    /// Logical tenants sharing the trace (1 = single-tenant; only
+    /// matters with `tenant_skew > 0`).
+    pub tenants: usize,
+    /// Multi-tenant working-set skew in `[0, 1]`. `0.0` leaves the
+    /// trace **byte-identical** to the single-tenant one (no transform,
+    /// no extra RNG draws). Larger values stretch the hot tenant's
+    /// (tenant 0) prompts toward the context cap, concentrating KV
+    /// demand on whichever engine admits them — the knob behind the
+    /// cluster goodput-vs-skew experiments.
+    pub tenant_skew: f64,
 }
 
 impl WorkloadSpec {
@@ -75,6 +85,8 @@ impl WorkloadSpec {
             output_scale: 1.0,
             rate_rps,
             seed,
+            tenants: 1,
+            tenant_skew: 0.0,
         }
     }
 
@@ -88,6 +100,8 @@ impl WorkloadSpec {
             output_scale: 1.0,
             rate_rps,
             seed,
+            tenants: 1,
+            tenant_skew: 0.0,
         }
     }
 
@@ -100,7 +114,16 @@ impl WorkloadSpec {
             output_scale: 0.12,
             rate_rps,
             seed,
+            tenants: 1,
+            tenant_skew: 0.0,
         }
+    }
+
+    /// Multi-tenant skew knob (see [`WorkloadSpec::tenant_skew`]).
+    pub fn with_tenant_skew(mut self, tenants: usize, skew: f64) -> Self {
+        self.tenants = tenants.max(1);
+        self.tenant_skew = skew.clamp(0.0, 1.0);
+        self
     }
 }
 
@@ -111,7 +134,7 @@ pub fn generate(spec: &WorkloadSpec, n: usize, id_base: u32) -> Vec<Request> {
     let mut arr_rng = Rng::with_stream(spec.seed, 101);
     let mut len_rng = Rng::with_stream(spec.seed, 202);
     let mut t = 0.0;
-    (0..n)
+    let mut reqs: Vec<Request> = (0..n)
         .map(|i| {
             t += arr_rng.exponential(spec.rate_rps);
             let task = *len_rng.choose(&TaskKind::ALL);
@@ -125,7 +148,28 @@ pub fn generate(spec: &WorkloadSpec, n: usize, id_base: u32) -> Vec<Request> {
                 .clamp(2, spec.max_output);
             Request::new(id_base + i as u32, prompt_len, out, t)
         })
-        .collect()
+        .collect();
+    apply_tenant_skew(spec, &mut reqs);
+    reqs
+}
+
+/// Stretch the hot tenant's prompts toward the context cap. Tenant
+/// assignment draws from a dedicated RNG stream (505), so arrivals and
+/// the base length mix are invariant to the knob; with `tenant_skew ==
+/// 0.0` (or a single tenant) NOTHING runs and the trace stays
+/// byte-identical to the single-tenant one.
+fn apply_tenant_skew(spec: &WorkloadSpec, reqs: &mut [Request]) {
+    if spec.tenants <= 1 || spec.tenant_skew <= 0.0 {
+        return;
+    }
+    let mut ten_rng = Rng::with_stream(spec.seed, 505);
+    for r in reqs {
+        if ten_rng.below(spec.tenants) == 0 {
+            let stretched =
+                (r.prompt_len as f64 * (1.0 + 3.0 * spec.tenant_skew)).round() as usize;
+            r.prompt_len = stretched.clamp(16, spec.max_prompt);
+        }
+    }
 }
 
 /// Same trace but with concrete (deterministic) prompt token ids for the
@@ -184,6 +228,43 @@ mod tests {
         let long = reqs.iter().filter(|r| r.prompt_len > 2 * mean).count();
         let short = reqs.iter().filter(|r| r.prompt_len < mean / 2).count();
         assert!(long > 0 && short > 0, "length mix must be heavy-tailed");
+    }
+
+    #[test]
+    fn zero_tenant_skew_is_byte_identical() {
+        let base = WorkloadSpec::paper_lwm(0.1, 7);
+        let multi = WorkloadSpec::paper_lwm(0.1, 7).with_tenant_skew(4, 0.0);
+        for (x, y) in generate(&base, 50, 0).iter().zip(&generate(&multi, 50, 0)) {
+            assert_eq!(x.prompt_len, y.prompt_len);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+            assert_eq!(x.arrival_s, y.arrival_s);
+        }
+    }
+
+    #[test]
+    fn tenant_skew_concentrates_prompt_demand_without_touching_arrivals() {
+        let base = WorkloadSpec::paper_lwm(0.1, 7);
+        let skewed = WorkloadSpec::paper_lwm(0.1, 7).with_tenant_skew(4, 0.8);
+        let a = generate(&base, 300, 0);
+        let b = generate(&skewed, 300, 0);
+        let (mut grew, mut same) = (0usize, 0usize);
+        let (mut sum_a, mut sum_b) = (0usize, 0usize);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s, "arrival process is invariant");
+            assert!(y.prompt_len >= x.prompt_len, "stretch never shrinks a prompt");
+            assert!(y.prompt_len <= skewed.max_prompt);
+            if y.prompt_len > x.prompt_len {
+                grew += 1;
+            } else {
+                same += 1;
+            }
+            sum_a += x.prompt_len;
+            sum_b += y.prompt_len;
+        }
+        // ~1/4 of requests belong to the hot tenant and stretch; the
+        // cold tenants stay untouched
+        assert!(grew > 30 && same > 150, "grew={grew} same={same}");
+        assert!(sum_b > sum_a, "skew must concentrate aggregate KV demand");
     }
 
     #[test]

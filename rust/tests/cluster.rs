@@ -1,0 +1,120 @@
+//! Cluster serving end-to-end: the PR's acceptance experiment.
+//!
+//! One skewed multi-tenant trace, one shared clock, three systems —
+//! a single capacity engine, a two-engine cluster without migration,
+//! and the same two engines with typed KV migration. Migration must
+//! strictly win on goodput AND finished requests, with nonzero
+//! migration counters and accounted wire time; the no-migration
+//! variants must show the evictions it rescued.
+
+use sparseserve::cluster::ClusterReport;
+use sparseserve::figures::{cluster_trace, run_cluster_variant, ClusterVariant};
+
+fn run_all(skew: f64, seed: u64) -> (ClusterReport, ClusterReport, ClusterReport) {
+    let trace = cluster_trace(skew, seed, 14);
+    let single = run_cluster_variant(ClusterVariant::Single, trace.clone());
+    let scale = run_cluster_variant(ClusterVariant::ScaleOut, trace.clone());
+    let migrate = run_cluster_variant(ClusterVariant::ScaleOutMigrate, trace);
+    (single, scale, migrate)
+}
+
+#[test]
+fn migration_strictly_beats_both_baselines_under_skew() {
+    let (single, scale, migrate) = run_all(0.8, 7);
+
+    // the pressure is real: the no-migration systems evict
+    assert!(
+        single.requests_evicted() > 0,
+        "one pressured engine must evict under this trace"
+    );
+    assert!(
+        scale.requests_evicted() > 0,
+        "scale-out alone must still evict (the spill engine's DRAM is shallow)"
+    );
+
+    // migration actually ran, with accounted wire time and bytes
+    assert!(migrate.requests_migrated() > 0, "no migrations happened");
+    assert!(migrate.migration_transfer_s() > 0.0);
+    assert!(migrate.migration_bytes() > 0);
+
+    // ...and it strictly wins on both finished requests and goodput
+    assert!(
+        migrate.requests_finished() > scale.requests_finished(),
+        "migration must rescue victims scale-out evicts: {} vs {}",
+        migrate.requests_finished(),
+        scale.requests_finished()
+    );
+    assert!(
+        migrate.requests_finished() > single.requests_finished(),
+        "migration must beat the single engine: {} vs {}",
+        migrate.requests_finished(),
+        single.requests_finished()
+    );
+    assert!(
+        migrate.goodput_rps() > scale.goodput_rps(),
+        "goodput: migration {} vs scale-out {}",
+        migrate.goodput_rps(),
+        scale.goodput_rps()
+    );
+    assert!(
+        migrate.goodput_rps() > single.goodput_rps(),
+        "goodput: migration {} vs single {}",
+        migrate.goodput_rps(),
+        single.goodput_rps()
+    );
+
+    // migration never destroys a request the baselines would have kept
+    assert!(migrate.requests_evicted() <= scale.requests_evicted());
+
+    // conservation: every request finished, was evicted, was rejected
+    // (by the router or an engine), or is still live at shutdown —
+    // nothing vanishes across the migration plane
+    for rep in [&single, &scale, &migrate] {
+        let engine_rejects: usize =
+            rep.engines.iter().map(|r| r.metrics.requests_rejected).sum();
+        let cancels: usize = rep.engines.iter().map(|r| r.metrics.requests_cancelled).sum();
+        let live = rep
+            .engines
+            .iter()
+            .flat_map(|r| r.requests.values())
+            .filter(|r| !r.is_done() && !r.is_cancelled())
+            .count();
+        let accounted = rep.requests_finished()
+            + rep.requests_evicted()
+            + rep.rejected.len()
+            + engine_rejects
+            + cancels
+            + live;
+        assert_eq!(accounted, 14, "request conservation broke");
+    }
+}
+
+#[test]
+fn unskewed_trace_still_orders_the_variants_sanely() {
+    let (single, scale, migrate) = run_all(0.0, 7);
+    // scale-out never does worse than one engine on the same trace
+    assert!(scale.requests_finished() >= single.requests_finished());
+    assert!(migrate.requests_finished() >= scale.requests_finished());
+    // the shared clock is one clock: every per-engine report got the
+    // same makespan stamp
+    for rep in [&single, &scale, &migrate] {
+        for e in &rep.engines {
+            assert!((e.metrics.makespan_s - rep.makespan_s).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn migration_counters_live_at_the_source_engine() {
+    let trace = cluster_trace(0.8, 7, 14);
+    let rep = run_cluster_variant(ClusterVariant::ScaleOutMigrate, trace);
+    assert!(rep.requests_migrated() > 0);
+    // engine 0 is the pressured capacity engine: every drain starts
+    // there, so it owns the migration counters...
+    assert_eq!(rep.engines[0].metrics.requests_migrated, rep.requests_migrated());
+    assert!(rep.engines[0].metrics.migration_transfer_total_s > 0.0);
+    // ...and the spill engine only receives (imports are not drains)
+    assert_eq!(rep.engines[1].metrics.requests_migrated, 0);
+    // rescued victims really finish on the spill engine
+    assert!(rep.engines[1].metrics.requests_finished > 0);
+}
