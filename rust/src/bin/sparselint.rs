@@ -1,0 +1,153 @@
+//! `sparselint` driver: walk the repo's Rust sources, run the lint
+//! passes, report `file:line: [pass] message` diagnostics.
+//!
+//! Usage:
+//!   cargo run --release --bin sparselint [-- --config PATH --json PATH]
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 config/IO error.
+
+use sparseserve::lint::{analyze, Config, SourceFile};
+use sparseserve::util::cli::Args;
+use sparseserve::util::json;
+use std::path::{Path, PathBuf};
+
+const USAGE: &str = "\
+sparselint: repo-invariant static analysis for SparseServe
+
+USAGE:
+    sparselint [--config PATH] [--json PATH]
+
+FLAGS:
+    --config PATH   lint config (default: <manifest>/lint.toml)
+    --json PATH     also write diagnostics as a JSON artifact
+    --help          this text
+
+Walks rust/src, rust/tests, rust/benches and examples/. Passes:
+txn-pairing, pin-conservation, no-panic, hot-path, dead-knob,
+dead-counter (plus allow-grammar on the suppression comments
+themselves). Suppress a finding in place with
+    // sparselint: allow(<pass>) -- <reason>
+or with a [[allow]] entry (with a reason) in lint.toml.
+
+Exit codes: 0 clean, 1 violations, 2 config/IO error.";
+
+fn main() {
+    let args = Args::from_env();
+    if args.bool("help") {
+        println!("{USAGE}");
+        return;
+    }
+    std::process::exit(run(&args));
+}
+
+fn run(args: &Args) -> i32 {
+    let default_cfg = concat!(env!("CARGO_MANIFEST_DIR"), "/lint.toml").to_string();
+    let cfg_path = args.get_or("config", &default_cfg);
+    let cfg = match std::fs::read_to_string(&cfg_path) {
+        Ok(text) => match Config::from_toml(&text) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("sparselint: {cfg_path}: {e}");
+                return 2;
+            }
+        },
+        Err(e) => {
+            // The embedded copy of rust/lint.toml keeps the tool usable
+            // from an unusual cwd, but an explicit --config must exist.
+            if args.get("config").is_some() {
+                eprintln!("sparselint: cannot read {cfg_path}: {e}");
+                return 2;
+            }
+            eprintln!("sparselint: {cfg_path} not readable ({e}); using embedded config");
+            Config::repo_default()
+        }
+    };
+
+    // Scan roots relative to the config file's directory (the cargo
+    // manifest dir), displayed relative to the repository root.
+    let base = Path::new(&cfg_path)
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."));
+    let roots: [(&str, &str); 4] = [
+        ("src", "rust/src"),
+        ("tests", "rust/tests"),
+        ("benches", "rust/benches"),
+        ("../examples", "examples"),
+    ];
+    let mut files = Vec::new();
+    for (rel, display) in roots {
+        let root = base.join(rel);
+        if !root.is_dir() {
+            continue;
+        }
+        let mut paths = Vec::new();
+        if let Err(e) = collect_rs(&root, &mut paths) {
+            eprintln!("sparselint: walking {}: {e}", root.display());
+            return 2;
+        }
+        paths.sort();
+        for p in paths {
+            let src = match std::fs::read_to_string(&p) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("sparselint: reading {}: {e}", p.display());
+                    return 2;
+                }
+            };
+            let rel_path = p.strip_prefix(&root).unwrap_or(&p);
+            let shown = format!("{display}/{}", rel_path.display()).replace('\\', "/");
+            files.push(SourceFile { path: shown, src });
+        }
+    }
+    if files.is_empty() {
+        eprintln!("sparselint: no .rs files found under {}", base.display());
+        return 2;
+    }
+
+    let diags = analyze(&files, &cfg);
+    for d in &diags {
+        println!("{d}");
+    }
+    if let Some(json_path) = args.get("json") {
+        let doc = json::obj(vec![
+            ("files_scanned", json::num(files.len() as f64)),
+            ("violations", json::num(diags.len() as f64)),
+            (
+                "diagnostics",
+                json::arr(diags.iter().map(|d| {
+                    json::obj(vec![
+                        ("pass", json::s(&d.pass)),
+                        ("file", json::s(&d.file)),
+                        ("line", json::num(d.line as f64)),
+                        ("msg", json::s(&d.msg)),
+                    ])
+                })),
+            ),
+        ]);
+        if let Err(e) = std::fs::write(json_path, format!("{doc}\n")) {
+            eprintln!("sparselint: writing {json_path}: {e}");
+            return 2;
+        }
+    }
+    if diags.is_empty() {
+        println!("sparselint: clean ({} files)", files.len());
+        0
+    } else {
+        eprintln!("sparselint: {} violation(s) in {} files scanned", diags.len(), files.len());
+        1
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

@@ -26,6 +26,12 @@
 //! [`EngineCore`]: crate::engine::EngineCore
 //! [`EngineCore::capture_migrations`]: crate::engine::EngineCore::capture_migrations
 
+// Serving-path no-panic discipline (satellite of sparselint's
+// `no-panic` pass): unwrap/expect in this module tree is a clippy
+// warning, denied under CI's `-D warnings`. The few justified
+// sites carry fn-level allows next to their sparselint comments.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 mod router;
 mod server;
 

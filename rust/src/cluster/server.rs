@@ -141,6 +141,7 @@ impl ClusterServer {
     /// full-lifetime DRAM reservation, and `min(seq_len, sparse
     /// budget)` worth of KV blocks as the decode working set.
     fn demand_of(&self, req: &Request) -> Demand {
+        // sparselint: allow(no-panic) -- ClusterServer::new requires >= 1 engine; all engines share one ModelSpec, so any sched() gives the same byte math
         let sched = self.engines[0].sched();
         let budget = req.sparse_budget.unwrap_or(self.cfg.ws_budget_tokens);
         let seq = req.prompt_len + req.max_new_tokens;
@@ -253,7 +254,7 @@ impl ClusterServer {
 
     /// Serve a whole trace to completion (or `max_clock_s`) and report.
     pub fn run_trace(mut self, mut trace: Vec<Request>, max_clock_s: f64) -> Result<ClusterReport> {
-        trace.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        trace.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         let mut next_arrival = 0usize;
         let n = self.engines.len();
         // per-engine next-iteration start; infinity = admission-blocked
@@ -350,6 +351,7 @@ impl ClusterServer {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::config::{HardwareSpec, ModelSpec, ServingConfig};

@@ -19,6 +19,12 @@
 //! cluster-level analogue of this module's `AdmissionRejected`
 //! [`ServeError`].
 
+// Serving-path no-panic discipline (satellite of sparselint's
+// `no-panic` pass): unwrap/expect in this module tree is a clippy
+// warning, denied under CI's `-D warnings`. The few justified
+// sites carry fn-level allows next to their sparselint comments.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod api;
 pub mod server;
 

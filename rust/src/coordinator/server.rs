@@ -62,6 +62,7 @@ impl Server {
 
     /// Start with an admission-queue cap: submissions that would exceed
     /// `cap` waiting requests fail fast with `ServeError::QueueFull`.
+    #[allow(clippy::expect_used)]
     pub fn start_with<F>(queue_cap: Option<usize>, build: F) -> Self
     where
         F: FnOnce() -> Result<(Scheduler, Box<dyn Backend>)> + Send + 'static,
@@ -224,6 +225,7 @@ impl Server {
                 }
                 Ok(core.into_report(start.elapsed().as_secs_f64()).metrics)
             })
+            // sparselint: allow(no-panic) -- process bring-up, before any request is accepted: a host that cannot spawn one thread cannot serve at all
             .expect("spawn engine thread");
         Self { tx, handle: Some(handle), next_id: AtomicU32::new(1) }
     }
@@ -255,7 +257,10 @@ impl Server {
     /// run's aggregated serving metrics.
     pub fn shutdown(mut self) -> Result<RunMetrics> {
         let _ = self.tx.send(Msg::Shutdown);
-        let h = self.handle.take().expect("shutdown called once");
+        let h = self
+            .handle
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("engine thread already shut down"))?;
         h.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))?
     }
 }

@@ -61,6 +61,7 @@ impl fmt::Display for ServeError {
 impl std::error::Error for ServeError {}
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -19,6 +19,12 @@
 //!   compute/PCIe cost models + the Fig. 8-calibrated synthetic
 //!   selection process, at LWM-7B / Llama3-8B scale.
 
+// Serving-path no-panic discipline (satellite of sparselint's
+// `no-panic` pass): unwrap/expect in this module tree is a clippy
+// warning, denied under CI's `-D warnings`. The few justified
+// sites carry fn-level allows next to their sparselint comments.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 mod backend;
 mod core;
 mod error;

@@ -53,6 +53,16 @@ use super::backend::{
     Backend, BatchOutcome, MemStats, PhaseEvent, StageHints, StepSession,
 };
 
+/// Fallible positional access into a kernel's output list. Each kernel's
+/// output arity is fixed by the compiled manifest, so a short list means
+/// the loaded artifact disagrees with this driver — surfaced as a typed
+/// error instead of an index panic on the serving path.
+fn nth<'a>(outs: &'a [HostTensor], i: usize) -> Result<&'a HostTensor> {
+    outs.get(i).ok_or_else(|| {
+        anyhow!("kernel returned {} outputs, expected at least {}", outs.len(), i + 1)
+    })
+}
+
 struct RealReq {
     last_token: i32,
     /// Layer-segmented prefill activation carried across batches:
@@ -173,7 +183,7 @@ impl PjrtBackend {
                 MixedInput::Weight("lm_head"),
             ],
         )?;
-        Ok(outs[0].as_i32()[..b].to_vec())
+        Ok(nth(&outs, 0)?.as_i32()[..b].to_vec())
     }
 
     /// Embed `tokens` padded to the named bucket family; returns the
@@ -299,7 +309,9 @@ impl<'s> PjrtSession<'s> {
             return Ok(());
         }
         let be = &mut *self.be;
-        let work = self.batch.prefill.as_ref().expect("no prefill planned");
+        let Some(work) = self.batch.prefill.as_ref() else {
+            return Err(anyhow!("prefill phase driven with no prefill planned"));
+        };
         let req_id = work.req();
         let r = &self.requests[&req_id];
         let state = match work {
@@ -389,8 +401,12 @@ impl<'s> PjrtSession<'s> {
     /// and is kept aside for rollback.
     fn pf_layer(&mut self, layer: usize) -> Result<()> {
         let be = &mut *self.be;
-        let pf = self.pf.as_mut().expect("pf_init ran");
-        let work = self.batch.prefill.as_ref().expect("no prefill planned");
+        let Some(pf) = self.pf.as_mut() else {
+            return Err(anyhow!("pf_layer driven before pf_init"));
+        };
+        let Some(work) = self.batch.prefill.as_ref() else {
+            return Err(anyhow!("prefill phase driven with no prefill planned"));
+        };
         let req_id = work.req();
         let spec = be.spec().clone();
         let d = spec.d_model;
@@ -444,8 +460,14 @@ impl<'s> PjrtSession<'s> {
             self.hidden_orig = Some((req_id, (x_back, t_pad, pf.valid)));
         }
         // outs: (k [Hkv,T,Dh], v, x2 [T,d])
-        be.kv
-            .append_prefill_layer(req_id, layer, outs[0].as_f32(), outs[1].as_f32(), t_pad, pf.valid)?;
+        be.kv.append_prefill_layer(
+            req_id,
+            layer,
+            nth(&outs, 0)?.as_f32(),
+            nth(&outs, 1)?.as_f32(),
+            t_pad,
+            pf.valid,
+        )?;
         pf.x = outs.swap_remove(2).into_f32();
         Ok(())
     }
@@ -453,18 +475,26 @@ impl<'s> PjrtSession<'s> {
     /// Final prefill phase of this session's work item: first token
     /// (`is_last`) or stash the activation for the next layer batch.
     fn pf_finish(&mut self) -> Result<()> {
-        let work = self.batch.prefill.as_ref().expect("no prefill planned");
+        let Some(work) = self.batch.prefill.as_ref() else {
+            return Err(anyhow!("prefill phase driven with no prefill planned"));
+        };
         let req_id = work.req();
-        let pf = self.pf.take().expect("pf_init ran");
+        let Some(pf) = self.pf.take() else {
+            return Err(anyhow!("pf_finish driven before pf_init"));
+        };
         if work.is_last() {
             let tok = self.be.lm_head_rows(&[(&pf.x, pf.t_pad, pf.valid - 1)])?[0];
-            let st = self.be.reqs.get_mut(&req_id).expect("unregistered");
+            let Some(st) = self.be.reqs.get_mut(&req_id) else {
+                return Err(MemoryError::Unregistered { req: req_id }.into());
+            };
             st.last_token = tok;
             st.hidden = None;
             self.tokens.push((req_id, Some(tok)));
         } else if matches!(pf.mode, PfMode::WholePrompt) {
-            self.be.reqs.get_mut(&req_id).expect("unregistered").hidden =
-                Some((pf.x, pf.t_pad, pf.valid));
+            let Some(st) = self.be.reqs.get_mut(&req_id) else {
+                return Err(MemoryError::Unregistered { req: req_id }.into());
+            };
+            st.hidden = Some((pf.x, pf.t_pad, pf.valid));
         }
         Ok(())
     }
@@ -532,7 +562,9 @@ impl<'s> PjrtSession<'s> {
     /// kernel.
     fn dec_group_layer(&mut self, gi: usize, layer: usize) -> Result<()> {
         let be = &mut *self.be;
-        let dec = self.dec.as_mut().expect("dec_init ran");
+        let Some(dec) = self.dec.as_mut() else {
+            return Err(anyhow!("dec_group_layer driven before dec_init"));
+        };
         let spec = be.spec().clone();
         let (d, _hq, hkv, dh, bs) =
             (spec.d_model, spec.n_heads, spec.n_kv_heads, spec.head_dim, spec.block_size);
@@ -584,9 +616,10 @@ impl<'s> PjrtSession<'s> {
         g.pos = pos_t.into_i32();
         let outs = res?;
         // outs: q [B,Hq,Dh], k [B,Hkv,Dh], v [B,Hkv,Dh], scores [B,Hkv,NB]
-        let kk = outs[1].as_f32();
-        let vv = outs[2].as_f32();
-        let scores = outs[3].as_f32();
+        let q = nth(&outs, 0)?;
+        let kk = nth(&outs, 1)?.as_f32();
+        let vv = nth(&outs, 2)?.as_f32();
+        let scores = nth(&outs, 3)?.as_f32();
 
         // ---- save new token KV ----
         for (i, id) in g.ids.iter().enumerate() {
@@ -651,7 +684,7 @@ impl<'s> PjrtSession<'s> {
         let gm_t = HostTensor::f32(vec![b_pad, hkv, s_len], gm);
         let inputs = [
             MixedInput::Tensor(&xt),
-            MixedInput::Tensor(&outs[0]), // q, straight from decode_qkv
+            MixedInput::Tensor(q), // straight from decode_qkv
             MixedInput::Tensor(&gk_t),
             MixedInput::Tensor(&gv_t),
             MixedInput::Tensor(&gm_t),
@@ -690,14 +723,17 @@ impl<'s> PjrtSession<'s> {
                             MixedInput::Weight("lm_head"),
                         ],
                     )?;
-                    outs[0].as_i32().to_vec()
+                    nth(&outs, 0)?.as_i32().to_vec()
                 };
                 for (i, id) in g.ids.iter().enumerate() {
                     let items = std::mem::take(&mut g.ws_items[i]);
                     if self.be.record_selections {
                         self.be.selection_log.push(items.clone());
                     }
-                    let st = self.be.reqs.get_mut(id).unwrap();
+                    let Some(st) = self.be.reqs.get_mut(id) else {
+                        debug_assert!(false, "decoded id {id} has no request record");
+                        continue;
+                    };
                     st.last_token = next[i];
                     st.ws.record_step(items);
                     self.tokens.push((*id, Some(next[i])));
@@ -795,7 +831,9 @@ impl StepSession for PjrtSession<'_> {
     fn prefill_segment(&mut self, layer_start: usize, layer_end: usize) -> Result<PhaseEvent> {
         debug_assert_eq!(layer_end, layer_start + 1, "engine drives one layer per segment");
         let t0 = Instant::now();
-        let work = self.batch.prefill.as_ref().expect("no prefill planned");
+        let Some(work) = self.batch.prefill.as_ref() else {
+            return Err(anyhow!("prefill phase driven with no prefill planned"));
+        };
         let (_, last_layer) =
             super::backend::prefill_layer_range(work, self.be.spec().n_layers);
         self.pf_init(layer_start)?;
@@ -948,7 +986,10 @@ impl Backend for PjrtBackend {
             needed += n;
         }
         if needed > self.kv.dram_free_slots() {
-            let req = boundary_req.unwrap_or(batch.decodes[0]);
+            // needed > 0 here, so at least one decode sat on a boundary
+            let Some(req) = boundary_req else {
+                return Err(anyhow!("DRAM pre-flight overflow with no boundary request"));
+            };
             return Err(MemoryError::DramExhausted { req }.into());
         }
 

@@ -24,7 +24,7 @@ impl Engine {
 
     /// Serve a whole trace to completion (or until `max_clock_s`).
     pub fn run_trace(mut self, mut trace: Vec<Request>, max_clock_s: f64) -> Result<RunReport> {
-        trace.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        trace.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         let mut next_arrival = 0usize;
 
         loop {
@@ -83,6 +83,7 @@ fn next_arrival_guard(clock: &mut f64) {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::config::{HardwareSpec, ModelSpec, ServingConfig};

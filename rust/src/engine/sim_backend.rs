@@ -387,6 +387,7 @@ impl<'s> SimSession<'s> {
     /// journal + sel/ws txns) are armed at band 0, before any mutation —
     /// the zero-clone replacement for the old snapshots; working-set
     /// recording and KV growth close the step at the last band.
+    // sparselint: hot
     fn run_decode_band(&mut self, band: usize) -> Result<(), MemoryError> {
         let bs = self.be.spec().block_size;
         let n_layers = self.be.spec().n_layers;
@@ -403,7 +404,9 @@ impl<'s> SimSession<'s> {
         for (i, &id) in self.batch.decodes.iter().enumerate() {
             let mut sel = std::mem::take(&mut self.be.scratch.band_sels[i]);
             sel.clear();
-            let r = self.be.reqs.get_mut(&id).expect("unregistered");
+            let Some(r) = self.be.reqs.get_mut(&id) else {
+                return Err(MemoryError::Unregistered { req: id });
+            };
             if band == 0 {
                 // arm the undo scopes before this request's first mutation
                 if sparse {
@@ -468,7 +471,9 @@ impl<'s> SimSession<'s> {
             }
             if band == last_band {
                 let items = std::mem::take(&mut self.be.scratch.ws_accum[i]);
-                let r = self.be.reqs.get_mut(&id).expect("unregistered");
+                let Some(r) = self.be.reqs.get_mut(&id) else {
+                    return Err(MemoryError::Unregistered { req: id });
+                };
                 if sparse {
                     r.ws.record_step_from(&items);
                 }
@@ -492,7 +497,9 @@ impl StepSession for SimSession<'_> {
 
     fn prefill_segment(&mut self, layer_start: usize, layer_end: usize) -> Result<PhaseEvent> {
         debug_assert_eq!(layer_end, layer_start + 1, "engine drives one layer per segment");
-        let work = self.batch.prefill.as_ref().expect("no prefill planned");
+        let Some(work) = self.batch.prefill.as_ref() else {
+            return Err(anyhow::anyhow!("prefill_segment driven with no prefill planned"));
+        };
         let req_id = work.req();
         let spec = self.be.spec().clone();
         let bs = spec.block_size;
@@ -524,10 +531,12 @@ impl StepSession for SimSession<'_> {
                     miss_blocks += self.chunk_band_miss * spec.n_kv_heads;
                 }
                 if layer + 1 == spec.n_layers {
-                    let prev = self.be.reqs.get(&req_id).expect("unregistered").len;
-                    self.be.scratch.touched.push((req_id, prev, false));
-                    let r = self.be.reqs.get_mut(&req_id).unwrap();
+                    let Some(r) = self.be.reqs.get_mut(&req_id) else {
+                        return Err(MemoryError::Unregistered { req: req_id }.into());
+                    };
+                    let prev = r.len;
                     r.len += len;
+                    self.be.scratch.touched.push((req_id, prev, false));
                     if *is_last {
                         self.tokens.push((req_id, None));
                     }
@@ -545,10 +554,13 @@ impl StepSession for SimSession<'_> {
                 // layer-segmented prefill writes straight to DRAM and
                 // evicts immediately: no cache traffic
                 if layer + 1 == *seg_end && *is_last {
-                    let prev = self.be.reqs.get(&req_id).expect("unregistered").len;
+                    let prompt_len = self.requests[&req_id].prompt_len;
+                    let Some(r) = self.be.reqs.get_mut(&req_id) else {
+                        return Err(MemoryError::Unregistered { req: req_id }.into());
+                    };
+                    let prev = r.len;
+                    r.len = prompt_len;
                     self.be.scratch.touched.push((req_id, prev, false));
-                    let r = self.be.reqs.get_mut(&req_id).unwrap();
-                    r.len = self.requests[&req_id].prompt_len;
                     self.tokens.push((req_id, None));
                 }
             }
@@ -839,7 +851,10 @@ impl Backend for SimBackend {
         let group_bytes = self.group_bytes;
         let n_bands = self.n_bands;
         let spec_bs = self.spec().block_size;
-        let r = self.reqs.get_mut(&req).expect("unregistered");
+        let Some(r) = self.reqs.get_mut(&req) else {
+            debug_assert!(false, "decode_ws_bytes for unregistered request {req}");
+            return 0;
+        };
         let budget = r.budget_groups;
         if !self.cfg.sparse_attention {
             // dense attention touches the whole context (every band)
@@ -898,6 +913,7 @@ impl Backend for SimBackend {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::config::serving::TransferKind;
@@ -966,6 +982,7 @@ mod tests {
         assert_eq!(b.n_bands, 4);
         let reqs = prefill_all(&mut b, 1, 16_000);
         let batch = Batch { decodes: vec![1], prefill: None };
+        // sparselint: allow(txn-pairing) -- test drives phases by hand to read per-layer misses; commit() below closes the step
         let mut sess = b.begin_step(&batch, &reqs).unwrap();
         sess.stage(&StageHints::default());
         let mut per_layer = Vec::new();
@@ -1486,6 +1503,7 @@ mod tests {
         let pinned_before = b.pinned_entries();
 
         // drive phases by hand, then roll back instead of committing
+        // sparselint: allow(txn-pairing) -- rollback() below closes the step; the test exists to observe the rollback
         let mut sess = b.begin_step(&batch, &reqs).unwrap();
         sess.stage(&StageHints::default());
         for layer in 0..32 {
@@ -1526,6 +1544,7 @@ mod tests {
         let len_snapshot = b.reqs[&1].len;
         let pins_snapshot = b.pinned_entries();
 
+        // sparselint: allow(txn-pairing) -- rollback-equivalence test: rollback() below closes the step
         let mut sess = b.begin_step(&batch, &reqs).unwrap();
         sess.stage(&StageHints::default());
         for layer in 0..32 {
@@ -1702,6 +1721,7 @@ mod tests {
         run(&mut b, &batch, &reqs); // warm
         // drive decode phases, then abort: the burnt compute must surface
         // on the NEXT committed outcome (the engine adds it to the clock)
+        // sparselint: allow(txn-pairing) -- rollback() below closes the step; the abort charge is the assertion target
         let mut sess = b.begin_step(&batch, &reqs).unwrap();
         sess.stage(&StageHints::default());
         for layer in 0..32 {
@@ -1714,6 +1734,7 @@ mod tests {
         let out2 = run(&mut b, &batch, &reqs);
         assert_eq!(out2.abort_time_s, 0.0, "abort charge must not persist");
         // an abandoned iteration hands the charge to abort_iteration
+        // sparselint: allow(txn-pairing) -- rollback() + abort_iteration() below close the step
         let mut sess = b.begin_step(&batch, &reqs).unwrap();
         sess.stage(&StageHints::default());
         for layer in 0..32 {

@@ -30,6 +30,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod figures;
+pub mod lint;
 pub mod memory;
 pub mod metrics;
 pub mod runtime;

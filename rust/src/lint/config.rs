@@ -1,0 +1,397 @@
+//! `lint.toml` loading: a deliberately tiny TOML subset parser (no
+//! external crates) plus the typed `Config` the passes consume.
+//!
+//! Supported TOML subset: `[section]`, `[[array.of.tables]]`,
+//! `key = "string" | 123 | true | ["a", "b", ...]` (arrays of strings
+//! only, single- or multi-line), `#` comments. That is everything the
+//! checked-in `rust/lint.toml` needs; anything fancier is a config
+//! error, not a silent skip.
+
+/// One `key = value` entry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlVal {
+    Str(String),
+    Int(i64),
+    Bool(bool),
+    Arr(Vec<String>),
+}
+
+/// One `[name]` or `[[name]]` table, entries in file order.
+#[derive(Debug, Clone)]
+pub struct TomlTable {
+    pub name: String,
+    pub entries: Vec<(String, TomlVal)>,
+}
+
+/// Parse the TOML subset. Returns tables in order; repeated `[[x]]`
+/// headers produce one table each.
+pub fn parse_toml(src: &str) -> Result<Vec<TomlTable>, String> {
+    let mut tables: Vec<TomlTable> = vec![TomlTable { name: String::new(), entries: Vec::new() }];
+    let mut lines = src.lines().enumerate().peekable();
+    while let Some((ln, raw)) = lines.next() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let lineno = ln + 1;
+        if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            tables.push(TomlTable { name: name.trim().to_string(), entries: Vec::new() });
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            tables.push(TomlTable { name: name.trim().to_string(), entries: Vec::new() });
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(format!("line {lineno}: expected `key = value`, got `{line}`"));
+        };
+        let key = line[..eq].trim().to_string();
+        let mut val = line[eq + 1..].trim().to_string();
+        // Multi-line array: keep consuming lines until brackets close.
+        if val.starts_with('[') {
+            while !array_closed(&val) {
+                let Some((_, next)) = lines.next() else {
+                    return Err(format!("line {lineno}: unterminated array for `{key}`"));
+                };
+                val.push(' ');
+                val.push_str(strip_comment(next).trim());
+            }
+        }
+        let parsed = parse_value(&val).map_err(|e| format!("line {lineno}: {e}"))?;
+        let Some(tbl) = tables.last_mut() else {
+            return Err(format!("line {lineno}: entry before any table"));
+        };
+        tbl.entries.push((key, parsed));
+    }
+    Ok(tables)
+}
+
+/// `#` starts a comment unless inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn array_closed(val: &str) -> bool {
+    let mut depth = 0isize;
+    let mut in_str = false;
+    for c in val.chars() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            _ => {}
+        }
+    }
+    depth == 0
+}
+
+fn parse_value(v: &str) -> Result<TomlVal, String> {
+    let v = v.trim();
+    if let Some(s) = v.strip_prefix('"') {
+        let Some(s) = s.strip_suffix('"') else {
+            return Err(format!("unterminated string `{v}`"));
+        };
+        return Ok(TomlVal::Str(s.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if v == "true" {
+        return Ok(TomlVal::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlVal::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            match parse_value(p)? {
+                TomlVal::Str(s) => items.push(s),
+                other => return Err(format!("arrays hold strings only, got {other:?}")),
+            }
+        }
+        return Ok(TomlVal::Arr(items));
+    }
+    v.parse::<i64>().map(TomlVal::Int).map_err(|_| format!("unrecognized value `{v}`"))
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Typed config
+// ---------------------------------------------------------------------------
+
+/// One begin/commit/rollback function-name triple for txn-pairing.
+#[derive(Debug, Clone)]
+pub struct TxnPair {
+    pub begin: String,
+    pub commit: String,
+    pub rollback: String,
+}
+
+/// Pin-conservation scope: in `file`, every function calling an
+/// `acquire` method must also call a `release` method, push into a
+/// `tracker` collection, or hand off via a `delegate` registration.
+#[derive(Debug, Clone)]
+pub struct PinScope {
+    pub file: String,
+    pub acquire: Vec<String>,
+    pub release: Vec<String>,
+    pub trackers: Vec<String>,
+    pub delegates: Vec<String>,
+}
+
+/// Pin-conservation definitions check: `file` must define all of
+/// `must_define` (the drain-side API the scopes above delegate to).
+#[derive(Debug, Clone)]
+pub struct PinDefs {
+    pub file: String,
+    pub must_define: Vec<String>,
+}
+
+/// Struct-liveness targets for the dead-knob / dead-counter pass.
+#[derive(Debug, Clone, Default)]
+pub struct DeadKnobCfg {
+    pub struct_file: String,
+    pub struct_name: String,
+    pub exclude_dir: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct DeadCounterCfg {
+    pub struct_file: String,
+    pub struct_name: String,
+    pub report_dirs: Vec<String>,
+    pub report_fns: Vec<String>,
+}
+
+/// File-level allowlist entry from `lint.toml` (`[[allow]]`). A
+/// missing/empty `reason` is a config error: the acceptance bar is
+/// zero bare allowlist entries.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub pass: String,
+    pub file: String,
+    pub line: Option<u32>,
+    pub reason: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub no_panic_modules: Vec<String>,
+    pub txn_driver: String,
+    /// The phase-entry method only `txn_driver` may call directly
+    /// (`begin_step`): everyone else must go through the driver.
+    pub txn_step_begin: String,
+    pub txn_pairs: Vec<TxnPair>,
+    pub pin_scopes: Vec<PinScope>,
+    pub pin_defs: Vec<PinDefs>,
+    pub hot_banned_methods: Vec<String>,
+    pub hot_banned_ctors: Vec<String>,
+    pub dead_knob: Option<DeadKnobCfg>,
+    pub dead_counter: Option<DeadCounterCfg>,
+    pub allows: Vec<AllowEntry>,
+}
+
+fn get_str(t: &TomlTable, key: &str) -> Result<String, String> {
+    match t.entries.iter().find(|(k, _)| k == key) {
+        Some((_, TomlVal::Str(s))) => Ok(s.clone()),
+        Some(_) => Err(format!("[{}] `{key}` must be a string", t.name)),
+        None => Err(format!("[{}] missing required key `{key}`", t.name)),
+    }
+}
+
+fn get_str_opt(t: &TomlTable, key: &str) -> Option<String> {
+    match t.entries.iter().find(|(k, _)| k == key) {
+        Some((_, TomlVal::Str(s))) => Some(s.clone()),
+        _ => None,
+    }
+}
+
+fn get_int_opt(t: &TomlTable, key: &str) -> Option<i64> {
+    match t.entries.iter().find(|(k, _)| k == key) {
+        Some((_, TomlVal::Int(i))) => Some(*i),
+        _ => None,
+    }
+}
+
+fn get_arr(t: &TomlTable, key: &str) -> Vec<String> {
+    match t.entries.iter().find(|(k, _)| k == key) {
+        Some((_, TomlVal::Arr(a))) => a.clone(),
+        _ => Vec::new(),
+    }
+}
+
+impl Config {
+    /// Parse a full config from TOML text.
+    pub fn from_toml(src: &str) -> Result<Config, String> {
+        let tables = parse_toml(src)?;
+        let mut cfg = Config::default();
+        for t in &tables {
+            match t.name.as_str() {
+                "" => {}
+                "no_panic" => cfg.no_panic_modules = get_arr(t, "modules"),
+                "txn" => {
+                    cfg.txn_driver = get_str_opt(t, "driver").unwrap_or_default();
+                    cfg.txn_step_begin = get_str_opt(t, "step_begin").unwrap_or_default();
+                }
+                "txn.pair" => cfg.txn_pairs.push(TxnPair {
+                    begin: get_str(t, "begin")?,
+                    commit: get_str(t, "commit")?,
+                    rollback: get_str(t, "rollback")?,
+                }),
+                "pins.scope" => cfg.pin_scopes.push(PinScope {
+                    file: get_str(t, "file")?,
+                    acquire: get_arr(t, "acquire"),
+                    release: get_arr(t, "release"),
+                    trackers: get_arr(t, "trackers"),
+                    delegates: get_arr(t, "delegates"),
+                }),
+                "pins.defs" => cfg.pin_defs.push(PinDefs {
+                    file: get_str(t, "file")?,
+                    must_define: get_arr(t, "must_define"),
+                }),
+                "hot" => {
+                    cfg.hot_banned_methods = get_arr(t, "banned_methods");
+                    cfg.hot_banned_ctors = get_arr(t, "banned_ctors");
+                }
+                "dead_knob" => {
+                    cfg.dead_knob = Some(DeadKnobCfg {
+                        struct_file: get_str(t, "struct_file")?,
+                        struct_name: get_str(t, "struct_name")?,
+                        exclude_dir: get_str(t, "exclude_dir")?,
+                    })
+                }
+                "dead_counter" => {
+                    cfg.dead_counter = Some(DeadCounterCfg {
+                        struct_file: get_str(t, "struct_file")?,
+                        struct_name: get_str(t, "struct_name")?,
+                        report_dirs: get_arr(t, "report_dirs"),
+                        report_fns: get_arr(t, "report_fns"),
+                    })
+                }
+                "allow" => {
+                    let entry = AllowEntry {
+                        pass: get_str(t, "pass")?,
+                        file: get_str(t, "file")?,
+                        line: get_int_opt(t, "line").map(|i| i as u32),
+                        reason: get_str_opt(t, "reason").unwrap_or_default(),
+                    };
+                    if entry.reason.trim().is_empty() {
+                        return Err(format!(
+                            "[[allow]] for pass `{}` on `{}` has no reason — every \
+                             allowlist entry must carry a justification",
+                            entry.pass, entry.file
+                        ));
+                    }
+                    cfg.allows.push(entry);
+                }
+                other => return Err(format!("unknown config table `[{other}]`")),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// The repo's checked-in configuration. `rust/lint.toml` is the
+    /// single source of truth; it is embedded so library users (the
+    /// test suite) and the binary agree even when cwd differs.
+    pub fn repo_default() -> Config {
+        match Config::from_toml(include_str!("../../lint.toml")) {
+            Ok(c) => c,
+            Err(e) => panic!("rust/lint.toml is invalid: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subset() {
+        let src = r#"
+# comment
+[no_panic]
+modules = ["engine", "scheduler"] # trailing
+
+[txn]
+driver = "drive_step"
+
+[[txn.pair]]
+begin = "begin_txn"
+commit = "commit_txn"
+rollback = "rollback_txn"
+
+[hot]
+banned_methods = [
+    "clone",
+    "to_vec",
+]
+banned_ctors = ["Vec"]
+"#;
+        let cfg = Config::from_toml(src).unwrap();
+        assert_eq!(cfg.no_panic_modules, vec!["engine", "scheduler"]);
+        assert_eq!(cfg.txn_driver, "drive_step");
+        assert_eq!(cfg.txn_pairs.len(), 1);
+        assert_eq!(cfg.txn_pairs[0].commit, "commit_txn");
+        assert_eq!(cfg.hot_banned_methods, vec!["clone", "to_vec"]);
+    }
+
+    #[test]
+    fn allow_without_reason_is_config_error() {
+        let src = "[[allow]]\npass = \"no-panic\"\nfile = \"src/x.rs\"\n";
+        let err = Config::from_toml(src).unwrap_err();
+        assert!(err.contains("no reason"), "{err}");
+    }
+
+    #[test]
+    fn allow_with_reason_and_line() {
+        let src = "[[allow]]\npass = \"no-panic\"\nfile = \"src/x.rs\"\nline = 7\nreason = \"why\"\n";
+        let cfg = Config::from_toml(src).unwrap();
+        assert_eq!(cfg.allows.len(), 1);
+        assert_eq!(cfg.allows[0].line, Some(7));
+    }
+
+    #[test]
+    fn unknown_table_rejected() {
+        assert!(Config::from_toml("[wat]\nx = 1\n").is_err());
+    }
+
+    #[test]
+    fn repo_default_parses() {
+        let cfg = Config::repo_default();
+        assert!(!cfg.no_panic_modules.is_empty());
+        assert!(!cfg.txn_pairs.is_empty());
+        assert!(cfg.dead_knob.is_some());
+        assert!(cfg.dead_counter.is_some());
+    }
+}

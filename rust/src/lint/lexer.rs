@@ -1,0 +1,313 @@
+//! Hand-rolled token-level Rust lexer for `sparselint`.
+//!
+//! Deliberately NOT a parser: the repo's invariants (txn pairing, pin
+//! conservation, panic bans, allocation bans, struct-field liveness)
+//! are all expressible over the token stream plus brace nesting, and a
+//! token lexer has no grammar to fall behind as the language or the
+//! codebase evolves (see DESIGN.md "What sparselint checks, and why
+//! token-level analysis is enough"). The lexer must get exactly four
+//! things right so the passes never misfire inside literals:
+//! comments, strings (cooked / raw / byte), char-vs-lifetime
+//! disambiguation, and line numbers.
+
+/// Token kinds the passes discriminate on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `return`, `begin_txn`, ...).
+    Ident,
+    /// Numeric literal (`0`, `1e-9`, `0x1F`, `1_000`).
+    Num,
+    /// Any string literal (`"..."`, `r#"..."#`, `b"..."`). Text dropped.
+    Str,
+    /// Char literal (`'a'`, `'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Single punctuation character (`.`, `(`, `?`, `!`, ...).
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.as_bytes()[0] == c as u8
+    }
+}
+
+/// One comment (line or block) with the 1-based line it starts on.
+/// Doc comments are included — the allow grammar does not care.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Lex `src` into (tokens, comments). Never fails: unterminated
+/// constructs are consumed to end-of-input (a file that does not parse
+/// will fail `cargo build` long before the linter's verdict matters).
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+
+    let bump = |c: char, line: &mut u32| {
+        if c == '\n' {
+            *line += 1;
+        }
+    };
+
+    while i < n {
+        let c = b[i];
+        // whitespace
+        if c.is_whitespace() {
+            bump(c, &mut line);
+            i += 1;
+            continue;
+        }
+        // line comment (incl. /// and //!)
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            comments.push(Comment { line, text: b[start..i].iter().collect() });
+            continue;
+        }
+        // block comment, nested
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    bump(b[i], &mut line);
+                    i += 1;
+                }
+            }
+            comments.push(Comment { line: start_line, text: b[start..i.min(n)].iter().collect() });
+            continue;
+        }
+        // raw / byte / raw-byte strings: r"..", r#".."#, b"..", br#".."#
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            if b[j] == 'b' && j + 1 < n && b[j + 1] == 'r' {
+                j += 1;
+            }
+            if b[j] == 'r' || b[j] == 'b' {
+                let mut k = j + 1;
+                let mut hashes = 0usize;
+                while b[j] == 'r' && k < n && b[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && b[k] == '"' && (b[j] == 'r' || hashes == 0) {
+                    // raw string (hashes >= 0) or byte string b"..."
+                    let raw = b[j] == 'r';
+                    let tline = line;
+                    k += 1;
+                    loop {
+                        if k >= n {
+                            break;
+                        }
+                        if raw {
+                            if b[k] == '"' {
+                                let mut h = 0usize;
+                                while h < hashes && k + 1 + h < n && b[k + 1 + h] == '#' {
+                                    h += 1;
+                                }
+                                if h == hashes {
+                                    k += 1 + hashes;
+                                    break;
+                                }
+                            }
+                        } else {
+                            if b[k] == '\\' && k + 1 < n {
+                                bump(b[k + 1], &mut line);
+                                k += 2;
+                                continue;
+                            }
+                            if b[k] == '"' {
+                                k += 1;
+                                break;
+                            }
+                        }
+                        bump(b[k], &mut line);
+                        k += 1;
+                    }
+                    toks.push(Tok { kind: TokKind::Str, text: String::new(), line: tline });
+                    i = k;
+                    continue;
+                }
+            }
+            // plain identifier starting with r/b: fall through
+        }
+        // cooked string
+        if c == '"' {
+            let tline = line;
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    bump(b[i + 1], &mut line);
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                bump(b[i], &mut line);
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Str, text: String::new(), line: tline });
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            // '\x' escape or 'c' closed by ' -> char; otherwise lifetime
+            let is_char = if i + 1 < n && b[i + 1] == '\\' {
+                true
+            } else {
+                i + 2 < n && b[i + 2] == '\''
+            };
+            if is_char {
+                i += 1; // opening quote
+                if i < n && b[i] == '\\' {
+                    i += 2; // escape head ('\n', '\u{..}' head)
+                    while i < n && b[i] != '\'' {
+                        i += 1;
+                    }
+                } else if i < n {
+                    i += 1;
+                }
+                if i < n && b[i] == '\'' {
+                    i += 1;
+                }
+                toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+            } else {
+                let start = i;
+                i += 1;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: b[start..i].iter().collect(),
+                    line,
+                });
+            }
+            continue;
+        }
+        // identifier / keyword
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        // number: digits, then alnum/_ (type suffixes, hex) and `.`
+        // only when followed by a digit (so `0..n` stays three tokens)
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n {
+                if b[i].is_alphanumeric() || b[i] == '_' {
+                    i += 1;
+                } else if b[i] == '.' && i + 1 < n && b[i + 1].is_ascii_digit() {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Num, text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        // single punctuation char
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    (toks, comments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).0.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_numbers() {
+        let ks = kinds("let x = a.unwrap() + 0x1F;");
+        assert!(ks.contains(&(TokKind::Ident, "unwrap".into())));
+        assert!(ks.contains(&(TokKind::Num, "0x1F".into())));
+        assert!(ks.contains(&(TokKind::Punct, ".".into())));
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let (toks, _) = lex(r#"let s = "a.unwrap() panic!";"#);
+        assert!(!toks.iter().any(|t| t.is_ident("unwrap")));
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Str).count(), 1);
+    }
+
+    #[test]
+    fn raw_strings_and_hashes() {
+        let (toks, _) = lex(r##"let s = r#"no "unwrap()" here"#; x.y"##);
+        assert!(!toks.iter().any(|t| t.is_ident("unwrap")));
+        assert!(toks.iter().any(|t| t.is_ident("y")));
+    }
+
+    #[test]
+    fn comments_are_collected_not_tokenized() {
+        let (toks, comments) = lex("a // sparselint: allow(no-panic) -- reason\nb");
+        assert!(toks.iter().any(|t| t.is_ident("a")));
+        assert!(toks.iter().any(|t| t.is_ident("b")));
+        assert_eq!(comments.len(), 1);
+        assert!(comments[0].text.contains("allow(no-panic)"));
+        assert_eq!(comments[0].line, 1);
+    }
+
+    #[test]
+    fn lifetime_vs_char() {
+        let (toks, _) = lex("fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\\n'; }");
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Lifetime).count(), 2);
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Char).count(), 2);
+    }
+
+    #[test]
+    fn line_numbers_advance_through_strings_and_comments() {
+        let (toks, _) = lex("a\n\"x\ny\"\n/* b\nc */ d");
+        let d = toks.iter().find(|t| t.is_ident("d")).unwrap();
+        assert_eq!(d.line, 5);
+    }
+
+    #[test]
+    fn range_numbers_stay_separate() {
+        let ks = kinds("0..n");
+        assert_eq!(ks[0], (TokKind::Num, "0".into()));
+        assert_eq!(ks[1], (TokKind::Punct, ".".into()));
+    }
+}

@@ -1,0 +1,136 @@
+//! `sparselint`: repo-invariant static analysis.
+//!
+//! A zero-dependency, token-level linter for the cross-cutting
+//! contracts the runtime tests cannot own per-file: txn pairing
+//! (begin must reach commit/rollback on every path), pin conservation
+//! across aborts, the no-panic serving-path contract, the zero-alloc
+//! hot-path contract from PR 4, and dead-knob/dead-counter liveness
+//! (the `compute_s` lesson from PR 6). Driven by the `sparselint`
+//! binary (`cargo run --release --bin sparselint`), configured by the
+//! checked-in `rust/lint.toml`, suppressed site-by-site with
+//! `// sparselint: allow(<pass>) -- <reason>` comments.
+//!
+//! Design rationale (why tokens, not an AST) lives in DESIGN.md.
+
+pub mod config;
+pub mod lexer;
+pub mod model;
+pub mod passes;
+
+pub use config::Config;
+pub use model::FileModel;
+
+/// One finding: `file:line: [pass] msg`.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub pass: String,
+    pub file: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.pass, self.msg)
+    }
+}
+
+/// A file handed to the analyzer: repo-relative path + contents.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub path: String,
+    pub src: String,
+}
+
+/// Run every pass over `files` under `cfg`, apply allow-comment and
+/// allowlist suppression, and return the surviving diagnostics sorted
+/// by (file, line). Allow-grammar findings are never suppressible.
+pub fn analyze(files: &[SourceFile], cfg: &Config) -> Vec<Diagnostic> {
+    let models: Vec<FileModel> =
+        files.iter().map(|f| FileModel::build(&f.path, &f.src)).collect();
+    let mut raw = Vec::new();
+    passes::txn_pairing(&models, cfg, &mut raw);
+    passes::pin_conservation(&models, cfg, &mut raw);
+    passes::no_panic(&models, cfg, &mut raw);
+    passes::hot_path(&models, cfg, &mut raw);
+    passes::dead_knob(&models, cfg, &mut raw);
+    passes::dead_counter(&models, cfg, &mut raw);
+    let mut kept: Vec<Diagnostic> =
+        raw.into_iter().filter(|d| !suppressed(d, &models, cfg)).collect();
+    passes::allow_grammar(&models, &mut kept);
+    kept.sort_by(|a, b| (&a.file, a.line, &a.pass).cmp(&(&b.file, b.line, &b.pass)));
+    kept
+}
+
+/// A diagnostic is suppressed by a well-formed allow comment for the
+/// same pass whose target line matches, or by a `[[allow]]` config
+/// entry matching (pass, file[, line]).
+fn suppressed(d: &Diagnostic, models: &[FileModel], cfg: &Config) -> bool {
+    if let Some(m) = models.iter().find(|m| m.path == d.file) {
+        let by_comment = m.allows.iter().any(|a| {
+            a.malformed.is_none()
+                && a.pass == d.pass
+                && (a.applies_to == d.line || a.line == d.line)
+        });
+        if by_comment {
+            return true;
+        }
+    }
+    cfg.allows.iter().any(|a| {
+        a.pass == d.pass
+            && d.file.ends_with(&a.file)
+            && a.line.map(|l| l == d.line).unwrap_or(true)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(path: &str, src: &str) -> Vec<SourceFile> {
+        vec![SourceFile { path: path.into(), src: src.into() }]
+    }
+
+    fn cfg_no_panic() -> Config {
+        Config::from_toml("[no_panic]\nmodules = [\"engine\"]\n").unwrap()
+    }
+
+    #[test]
+    fn no_panic_fires_and_allow_comment_suppresses() {
+        let bad = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        let d = analyze(&one("src/engine/core.rs", bad), &cfg_no_panic());
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].pass, "no-panic");
+
+        let allowed = "// sparselint: allow(no-panic) -- proven nonempty by caller\nfn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        let d = analyze(&one("src/engine/core.rs", allowed), &cfg_no_panic());
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn bare_allow_is_reported_and_does_not_suppress() {
+        let src = "// sparselint: allow(no-panic)\nfn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        let d = analyze(&one("src/engine/core.rs", src), &cfg_no_panic());
+        let passes: Vec<&str> = d.iter().map(|x| x.pass.as_str()).collect();
+        assert!(passes.contains(&"no-panic"), "{d:?}");
+        assert!(passes.contains(&"allow-grammar"), "{d:?}");
+    }
+
+    #[test]
+    fn config_allowlist_suppresses() {
+        let toml = "[no_panic]\nmodules = [\"engine\"]\n\n[[allow]]\npass = \"no-panic\"\nfile = \"src/engine/core.rs\"\nreason = \"fixture\"\n";
+        let cfg = Config::from_toml(toml).unwrap();
+        let bad = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        let d = analyze(&one("src/engine/core.rs", bad), &cfg);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn diagnostics_sorted_and_display() {
+        let src = "fn f(a: Vec<u32>) -> u32 { a[0] + a.clone()[1] }";
+        let d = analyze(&one("src/engine/x.rs", src), &cfg_no_panic());
+        assert!(!d.is_empty());
+        let s = d[0].to_string();
+        assert!(s.starts_with("src/engine/x.rs:1: [no-panic]"), "{s}");
+    }
+}

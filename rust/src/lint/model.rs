@@ -1,0 +1,455 @@
+//! Per-file structural model built from the token stream.
+//!
+//! `FileModel` slices a lexed file into functions (token ranges found
+//! by brace matching), marks which token ranges are test code
+//! (`#[cfg(test)]` / `#[test]` items), and parses the two comment
+//! grammars the passes consume:
+//!
+//! * `// sparselint: allow(<pass>) -- <reason>` — suppress one pass on
+//!   the same line or the line(s) immediately below the comment run.
+//! * `// sparselint: hot` — marks the *next* function as a steady-state
+//!   hot path; the clone-ban pass checks its whole body.
+
+use super::lexer::{lex, Comment, Tok, TokKind};
+
+/// One extracted function: `name` plus the token index range of its
+/// body (exclusive of the outer braces) and the full item range
+/// starting at the `fn` keyword.
+#[derive(Debug, Clone)]
+pub struct FnInfo {
+    pub name: String,
+    /// Index of the `fn` token.
+    pub start: usize,
+    /// Token range of the body, `{`-exclusive. Empty for bodiless
+    /// trait-method declarations.
+    pub body: std::ops::Range<usize>,
+    /// 1-based line of the `fn` keyword.
+    pub line: u32,
+    /// Inside `#[cfg(test)]` / under `#[test]`, or in a test/driver file.
+    pub is_test: bool,
+    /// Preceded by a `// sparselint: hot` marker.
+    pub is_hot: bool,
+}
+
+/// Parsed `// sparselint: allow(pass) -- reason` comment.
+#[derive(Debug, Clone)]
+pub struct AllowComment {
+    /// Line the comment sits on.
+    pub line: u32,
+    /// First code line the allow applies to (the line below the
+    /// comment run, or the comment's own line for trailing comments).
+    pub applies_to: u32,
+    pub pass: String,
+    pub reason: String,
+    /// Grammar violation detected while parsing (missing reason, ...).
+    pub malformed: Option<String>,
+}
+
+#[derive(Debug)]
+pub struct FileModel {
+    /// Repo-relative path, `/`-separated.
+    pub path: String,
+    pub toks: Vec<Tok>,
+    pub fns: Vec<FnInfo>,
+    pub allows: Vec<AllowComment>,
+    /// Whole file is test/driver code (tests/, benches/, examples/,
+    /// src/bin/).
+    pub file_is_test: bool,
+}
+
+impl FileModel {
+    pub fn build(path: &str, src: &str) -> FileModel {
+        let (toks, comments) = lex(src);
+        let file_is_test = is_test_path(path);
+        let (allows, hot_lines) = parse_markers(&comments, src);
+        let test_spans = find_test_spans(&toks);
+        let fns = extract_fns(&toks, &test_spans, &hot_lines, file_is_test);
+        FileModel { path: path.to_string(), toks, fns, allows, file_is_test }
+    }
+
+    /// The function whose body contains token index `ti`, if any.
+    /// Nested functions resolve to the innermost enclosing one.
+    pub fn fn_at(&self, ti: usize) -> Option<&FnInfo> {
+        self.fns
+            .iter()
+            .filter(|f| f.body.contains(&ti))
+            .min_by_key(|f| f.body.end - f.body.start)
+    }
+
+    /// True if token index `ti` is inside test code.
+    pub fn is_test_at(&self, ti: usize) -> bool {
+        self.file_is_test || self.fn_at(ti).map(|f| f.is_test).unwrap_or(false)
+    }
+}
+
+/// Files whose entire contents are test or driver code.
+pub fn is_test_path(path: &str) -> bool {
+    let p = path.replace('\\', "/");
+    p.contains("/tests/")
+        || p.starts_with("tests/")
+        || p.contains("/benches/")
+        || p.starts_with("benches/")
+        || p.contains("/examples/")
+        || p.starts_with("examples/")
+        || p.contains("/src/bin/")
+}
+
+/// Scan comments for the two sparselint marker grammars. Returns the
+/// parsed allow comments and the set of lines carrying a `hot` marker.
+fn parse_markers(comments: &[Comment], src: &str) -> (Vec<AllowComment>, Vec<u32>) {
+    // Record which lines contain any code (non-whitespace outside
+    // comments is approximated by: line appears in a token). Cheaper:
+    // map each comment line; `applies_to` is resolved against the raw
+    // source below.
+    let line_count = src.lines().count() as u32;
+    let line_has_code: Vec<bool> = {
+        let (toks, _) = lex(src);
+        let mut v = vec![false; (line_count + 2) as usize];
+        for t in &toks {
+            // Multi-line tokens (strings) mark only their start line;
+            // good enough — an allow comment never sits mid-string.
+            if (t.line as usize) < v.len() {
+                v[t.line as usize] = true;
+            }
+        }
+        v
+    };
+
+    let mut allows = Vec::new();
+    let mut hot_lines = Vec::new();
+    for c in comments {
+        let Some(rest) = strip_marker(&c.text) else { continue };
+        if rest.trim() == "hot" {
+            hot_lines.push(c.line);
+            continue;
+        }
+        let applies_to = resolve_applies_to(c.line, &line_has_code, line_count);
+        allows.push(parse_allow(rest, c.line, applies_to));
+    }
+    (allows, hot_lines)
+}
+
+/// Strip a leading `// sparselint:` (or `/* sparselint:`) header,
+/// returning the remainder, or None for ordinary comments.
+fn strip_marker(text: &str) -> Option<&str> {
+    let t = text.trim_start_matches('/').trim_start_matches('*').trim_start();
+    let rest = t.strip_prefix("sparselint")?;
+    let rest = rest.trim_start().strip_prefix(':')?;
+    Some(rest.trim())
+}
+
+/// An allow comment on its own line applies to the next line that has
+/// code; a trailing comment applies to its own line. Comment runs
+/// chain: each comment line counts as "no code", so a block of allow
+/// comments above one statement all reach it.
+fn resolve_applies_to(comment_line: u32, line_has_code: &[bool], line_count: u32) -> u32 {
+    if line_has_code.get(comment_line as usize).copied().unwrap_or(false) {
+        return comment_line; // trailing comment
+    }
+    let mut l = comment_line + 1;
+    while l <= line_count {
+        if line_has_code.get(l as usize).copied().unwrap_or(false) {
+            return l;
+        }
+        l += 1;
+    }
+    comment_line
+}
+
+/// Parse `allow(<pass>) -- <reason>`; malformed variants are kept with
+/// a description so the allow-grammar pass can report them.
+fn parse_allow(rest: &str, line: u32, applies_to: u32) -> AllowComment {
+    let mut out = AllowComment {
+        line,
+        applies_to,
+        pass: String::new(),
+        reason: String::new(),
+        malformed: None,
+    };
+    let Some(body) = rest.strip_prefix("allow") else {
+        out.malformed = Some(format!("unknown sparselint directive `{rest}`"));
+        return out;
+    };
+    let body = body.trim_start();
+    let Some(body) = body.strip_prefix('(') else {
+        out.malformed = Some("expected `allow(<pass>)`".into());
+        return out;
+    };
+    let Some(close) = body.find(')') else {
+        out.malformed = Some("unclosed `allow(` — expected `allow(<pass>)`".into());
+        return out;
+    };
+    out.pass = body[..close].trim().to_string();
+    let tail = body[close + 1..].trim();
+    match tail.strip_prefix("--") {
+        Some(reason) if !reason.trim().is_empty() => out.reason = reason.trim().to_string(),
+        _ => {
+            out.malformed = Some(
+                "allow comment missing justification: use `allow(<pass>) -- <reason>`".into(),
+            );
+        }
+    }
+    out
+}
+
+/// Token index ranges that belong to test code: a `#[cfg(test)]` or
+/// `#[test]` attribute marks the following item (through its matching
+/// closing brace or terminating `;`).
+fn find_test_spans(toks: &[Tok]) -> Vec<std::ops::Range<usize>> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !toks[i].is_punct('#') {
+            i += 1;
+            continue;
+        }
+        // `#[ ... ]` — check for cfg(test) or test inside.
+        let Some(open) = toks.get(i + 1).filter(|t| t.is_punct('[')) else {
+            i += 1;
+            continue;
+        };
+        let _ = open;
+        let mut depth = 0usize;
+        let mut j = i + 1;
+        let mut is_test_attr = false;
+        let mut saw_cfg = false;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.is_punct('[') {
+                depth += 1;
+            } else if t.is_punct(']') {
+                depth -= 1;
+                if depth == 0 {
+                    j += 1;
+                    break;
+                }
+            } else if t.is_ident("cfg") {
+                saw_cfg = true;
+            } else if t.is_ident("test") {
+                // `#[test]`, `#[cfg(test)]`, `#[tokio::test]`-style
+                is_test_attr = true;
+            } else if t.is_ident("should_panic") {
+                is_test_attr = true;
+            }
+            j += 1;
+        }
+        let _ = saw_cfg;
+        if !is_test_attr {
+            i = j;
+            continue;
+        }
+        // Skip any further attributes, then consume the item.
+        let mut k = j;
+        while k < toks.len() && toks[k].is_punct('#') {
+            let mut d = 0usize;
+            k += 1;
+            while k < toks.len() {
+                if toks[k].is_punct('[') {
+                    d += 1;
+                } else if toks[k].is_punct(']') {
+                    d -= 1;
+                    if d == 0 {
+                        k += 1;
+                        break;
+                    }
+                }
+                k += 1;
+            }
+        }
+        // Item body: first `{` at brace depth 0 before a `;`.
+        let start = i;
+        let mut d = 0usize;
+        let mut end = k;
+        while end < toks.len() {
+            let t = &toks[end];
+            if t.is_punct('{') {
+                d += 1;
+            } else if t.is_punct('}') {
+                d -= 1;
+                if d == 0 {
+                    end += 1;
+                    break;
+                }
+            } else if t.is_punct(';') && d == 0 {
+                end += 1;
+                break;
+            }
+            end += 1;
+        }
+        spans.push(start..end);
+        i = end;
+    }
+    spans
+}
+
+/// Extract all `fn` items (free functions, methods, nested fns) by
+/// scanning for the `fn` keyword and brace-matching the body. The
+/// signature is skipped with paren/bracket depth tracking; a `;`
+/// before the body brace means a bodiless trait declaration.
+fn extract_fns(
+    toks: &[Tok],
+    test_spans: &[std::ops::Range<usize>],
+    hot_lines: &[u32],
+    file_is_test: bool,
+) -> Vec<FnInfo> {
+    let in_test = |ti: usize| file_is_test || test_spans.iter().any(|s| s.contains(&ti));
+    let mut fns = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(toks[i].is_ident("fn")) {
+            i += 1;
+            continue;
+        }
+        let fn_ix = i;
+        let Some(name_tok) = toks.get(i + 1) else { break };
+        if name_tok.kind != TokKind::Ident {
+            // `fn` inside a type position (`fn(...)` pointer) — skip.
+            i += 1;
+            continue;
+        }
+        let name = name_tok.text.clone();
+        let line = toks[fn_ix].line;
+        // A fn is hot if a `hot` marker sits within the 3 lines above
+        // its `fn` keyword (attributes/doc lines may intervene).
+        let is_hot =
+            hot_lines.iter().any(|&hl| hl < line && line - hl <= 3) || hot_lines.contains(&line);
+        // Walk the signature to the body `{` or a `;`.
+        let mut j = i + 2;
+        let mut paren = 0isize;
+        let mut bracket = 0isize;
+        let mut body = 0..0;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.is_punct('(') {
+                paren += 1;
+            } else if t.is_punct(')') {
+                paren -= 1;
+            } else if t.is_punct('[') {
+                bracket += 1;
+            } else if t.is_punct(']') {
+                bracket -= 1;
+            } else if paren == 0 && bracket == 0 {
+                if t.is_punct(';') {
+                    // trait method declaration without body
+                    j += 1;
+                    break;
+                }
+                if t.is_punct('{') {
+                    // brace-match the body
+                    let body_start = j + 1;
+                    let mut d = 1isize;
+                    let mut k = body_start;
+                    while k < toks.len() && d > 0 {
+                        if toks[k].is_punct('{') {
+                            d += 1;
+                        } else if toks[k].is_punct('}') {
+                            d -= 1;
+                        }
+                        k += 1;
+                    }
+                    body = body_start..k.saturating_sub(1);
+                    j = k;
+                    break;
+                }
+            }
+            j += 1;
+        }
+        fns.push(FnInfo { name, start: fn_ix, body, line, is_test: in_test(fn_ix), is_hot });
+        // Continue from just after the signature so nested fns inside
+        // this body are also found.
+        i = fn_ix + 2;
+    }
+    fns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_fns_and_bodies() {
+        let m = FileModel::build(
+            "src/x.rs",
+            "fn a() { b(); }\nimpl T { fn c(&self) -> u32 { 1 } }\n",
+        );
+        let names: Vec<&str> = m.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "c"]);
+        assert!(!m.fns[0].body.is_empty());
+    }
+
+    #[test]
+    fn nested_fns_found_and_innermost_wins() {
+        let m = FileModel::build("src/x.rs", "fn outer() { fn inner() { q(); } inner(); }");
+        assert_eq!(m.fns.len(), 2);
+        let qi = m.toks.iter().position(|t| t.is_ident("q")).unwrap();
+        assert_eq!(m.fn_at(qi).unwrap().name, "inner");
+    }
+
+    #[test]
+    fn cfg_test_marks_module_fns() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests { fn helper() {} }\n";
+        let m = FileModel::build("src/x.rs", src);
+        let live = m.fns.iter().find(|f| f.name == "live").unwrap();
+        let helper = m.fns.iter().find(|f| f.name == "helper").unwrap();
+        assert!(!live.is_test);
+        assert!(helper.is_test);
+    }
+
+    #[test]
+    fn test_attr_marks_single_fn() {
+        let src = "#[test]\nfn t() {}\nfn live() {}\n";
+        let m = FileModel::build("src/x.rs", src);
+        assert!(m.fns.iter().find(|f| f.name == "t").unwrap().is_test);
+        assert!(!m.fns.iter().find(|f| f.name == "live").unwrap().is_test);
+    }
+
+    #[test]
+    fn driver_paths_are_all_test() {
+        for p in ["tests/a.rs", "rust/tests/a.rs", "examples/e.rs", "src/bin/b.rs", "benches/z.rs"]
+        {
+            assert!(is_test_path(p), "{p}");
+        }
+        assert!(!is_test_path("src/engine/core.rs"));
+    }
+
+    #[test]
+    fn allow_comment_parses() {
+        let src = "// sparselint: allow(no-panic) -- documented invariant\nlet x = y.unwrap();\n";
+        let m = FileModel::build("src/x.rs", src);
+        assert_eq!(m.allows.len(), 1);
+        let a = &m.allows[0];
+        assert_eq!(a.pass, "no-panic");
+        assert_eq!(a.reason, "documented invariant");
+        assert!(a.malformed.is_none());
+        assert_eq!(a.applies_to, 2);
+    }
+
+    #[test]
+    fn trailing_allow_applies_to_own_line() {
+        let src = "let x = y.unwrap(); // sparselint: allow(no-panic) -- fine\n";
+        let m = FileModel::build("src/x.rs", src);
+        assert_eq!(m.allows[0].applies_to, 1);
+    }
+
+    #[test]
+    fn bare_allow_is_malformed() {
+        let src = "// sparselint: allow(no-panic)\nlet x = y.unwrap();\n";
+        let m = FileModel::build("src/x.rs", src);
+        assert!(m.allows[0].malformed.is_some());
+    }
+
+    #[test]
+    fn hot_marker_tags_next_fn() {
+        let src = "// sparselint: hot\nfn decode_inner() {}\nfn cold() {}\n";
+        let m = FileModel::build("src/x.rs", src);
+        assert!(m.fns.iter().find(|f| f.name == "decode_inner").unwrap().is_hot);
+        assert!(!m.fns.iter().find(|f| f.name == "cold").unwrap().is_hot);
+    }
+
+    #[test]
+    fn comment_run_chains_to_code_below() {
+        let src = "// sparselint: allow(hot-path) -- amortized, grows once\n// more prose\nlet v = Vec::new();\n";
+        let m = FileModel::build("src/x.rs", src);
+        assert_eq!(m.allows[0].applies_to, 3);
+    }
+}

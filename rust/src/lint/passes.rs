@@ -1,0 +1,626 @@
+//! The five sparselint passes.
+//!
+//! Every pass walks token streams and the per-file function model —
+//! no AST. Each diagnostic carries the pass name so allow comments
+//! (`// sparselint: allow(<pass>) -- <reason>`) and `[[allow]]`
+//! config entries can target it.
+
+use super::config::Config;
+use super::lexer::{Tok, TokKind};
+use super::model::FileModel;
+use super::Diagnostic;
+
+pub const PASS_TXN: &str = "txn-pairing";
+pub const PASS_PINS: &str = "pin-conservation";
+pub const PASS_NO_PANIC: &str = "no-panic";
+pub const PASS_HOT: &str = "hot-path";
+pub const PASS_DEAD_KNOB: &str = "dead-knob";
+pub const PASS_DEAD_COUNTER: &str = "dead-counter";
+pub const PASS_ALLOW_GRAMMAR: &str = "allow-grammar";
+
+/// Pass names an allow comment may reference.
+pub const KNOWN_PASSES: &[&str] = &[
+    PASS_TXN,
+    PASS_PINS,
+    PASS_NO_PANIC,
+    PASS_HOT,
+    PASS_DEAD_KNOB,
+    PASS_DEAD_COUNTER,
+];
+
+fn diag(out: &mut Vec<Diagnostic>, pass: &str, file: &str, line: u32, msg: String) {
+    out.push(Diagnostic { pass: pass.to_string(), file: file.to_string(), line, msg });
+}
+
+/// `toks[i]` is a *call* of `name`: ident with that text, followed by
+/// `(`, not preceded by `fn` (definition). Method calls (`x.name(`)
+/// and free calls both match.
+fn is_call(toks: &[Tok], i: usize, name: &str) -> bool {
+    if !toks[i].is_ident(name) {
+        return false;
+    }
+    let called = toks.get(i + 1).map(|t| t.is_punct('(')).unwrap_or(false);
+    let defined = i > 0 && toks[i - 1].is_ident("fn");
+    called && !defined
+}
+
+/// Any call of `name` inside token range `r`.
+fn range_has_call(toks: &[Tok], r: &std::ops::Range<usize>, name: &str) -> bool {
+    r.clone().any(|i| is_call(toks, i, name))
+}
+
+/// First call of any of `names` inside `r`, by token index.
+fn first_call(toks: &[Tok], r: &std::ops::Range<usize>, names: &[&str]) -> Option<usize> {
+    r.clone().find(|&i| names.iter().any(|n| is_call(toks, i, n)))
+}
+
+// ---------------------------------------------------------------------------
+// Pass 1: txn-pairing
+// ---------------------------------------------------------------------------
+
+/// Two rules, applied to ALL code including tests (figures, benches
+/// and tests drive backends directly and must uphold phase order):
+///
+/// 1. Only the configured driver (`drive_step`) may call the
+///    phase-entry method (`begin_step`) directly — anything else is a
+///    hand-rolled phase order.
+/// 2. For each begin/commit/rollback triple: a function calling
+///    `begin` must either (a) contain `commit` or `rollback` with no
+///    `?`/`return` escape between the begin and the first
+///    commit/rollback, (b) delegate to the driver, or (c) live in a
+///    file that implements the split-phase pattern (the file defines
+///    paths through both `commit` and `rollback` call sites, i.e. the
+///    session object begun here is finished by its commit/rollback
+///    methods).
+pub fn txn_pairing(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>) {
+    for m in models {
+        let toks = &m.toks;
+        // Rule 1: direct step_begin callers.
+        if !cfg.txn_step_begin.is_empty() {
+            for f in &m.fns {
+                if f.name == cfg.txn_driver {
+                    continue;
+                }
+                for i in f.body.clone() {
+                    if is_call(toks, i, &cfg.txn_step_begin) {
+                        diag(
+                            out,
+                            PASS_TXN,
+                            &m.path,
+                            toks[i].line,
+                            format!(
+                                "`{}` calls `{}` directly — phase order must go through \
+                                 `{}` (hand-rolled begin/stage/layer/commit sequences \
+                                 drift from the canonical driver)",
+                                f.name, cfg.txn_step_begin, cfg.txn_driver
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+        // Rule 2: begin/commit/rollback triples.
+        for pair in &cfg.txn_pairs {
+            let file_has_commit =
+                m.fns.iter().any(|f| range_has_call(toks, &f.body, &pair.commit));
+            let file_has_rollback =
+                m.fns.iter().any(|f| range_has_call(toks, &f.body, &pair.rollback));
+            for f in &m.fns {
+                let Some(begin_ix) = first_call(toks, &f.body, &[&pair.begin]) else {
+                    continue;
+                };
+                let finish = first_call(toks, &f.body, &[&pair.commit, &pair.rollback]);
+                if let Some(fin_ix) = finish {
+                    // Same-function pairing: no escape between begin
+                    // and the first commit/rollback.
+                    for i in begin_ix + 1..fin_ix {
+                        if toks[i].is_punct('?') || toks[i].is_ident("return") {
+                            diag(
+                                out,
+                                PASS_TXN,
+                                &m.path,
+                                toks[i].line,
+                                format!(
+                                    "`{}` can exit between `{}` and `{}`/`{}` — every \
+                                     return path must settle the transaction",
+                                    f.name, pair.begin, pair.commit, pair.rollback
+                                ),
+                            );
+                        }
+                    }
+                    continue;
+                }
+                if range_has_call(toks, &f.body, &cfg.txn_driver) {
+                    continue; // delegated to the canonical driver
+                }
+                if file_has_commit && file_has_rollback {
+                    continue; // split-phase session: finished elsewhere in this file
+                }
+                diag(
+                    out,
+                    PASS_TXN,
+                    &m.path,
+                    toks[begin_ix].line,
+                    format!(
+                        "`{}` calls `{}` but neither this function nor this file \
+                         reaches `{}`/`{}` — unfinished transaction",
+                        f.name, pair.begin, pair.commit, pair.rollback
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass 2: pin-conservation
+// ---------------------------------------------------------------------------
+
+/// Per configured scope file: every non-test function that acquires a
+/// pin (calls an `acquire` method) must, in the same function, either
+/// release it (`release` call), record it in a tracked collection
+/// (`trackers` identifier — e.g. `band_pins`, drained by a paired
+/// release helper), or hand it to a tracked drain-side registry
+/// (`delegates` call — e.g. `mark_staged`, drained at
+/// `end_iteration`). Plus a definitions check: the drain-side file
+/// must actually define the registry API the scopes rely on.
+pub fn pin_conservation(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>) {
+    for scope in &cfg.pin_scopes {
+        let Some(m) = models.iter().find(|m| m.path.ends_with(&scope.file)) else {
+            continue;
+        };
+        let toks = &m.toks;
+        for f in &m.fns {
+            if f.is_test || m.file_is_test {
+                continue;
+            }
+            let acquires: Vec<&str> = scope.acquire.iter().map(|s| s.as_str()).collect();
+            let Some(acq_ix) = first_call(toks, &f.body, &acquires) else { continue };
+            // Acquire *definitions* are exempt via is_call; also exempt
+            // the release helpers themselves if they re-pin internally.
+            let conserves = scope.release.iter().any(|r| range_has_call(toks, &f.body, r))
+                || scope.delegates.iter().any(|d| range_has_call(toks, &f.body, d))
+                || scope
+                    .trackers
+                    .iter()
+                    .any(|t| f.body.clone().any(|i| toks[i].is_ident(t)));
+            if !conserves {
+                diag(
+                    out,
+                    PASS_PINS,
+                    &m.path,
+                    toks[acq_ix].line,
+                    format!(
+                        "`{}` acquires a pin ({}) but neither releases it ({}), \
+                         records it in a tracker ({}), nor delegates it ({}) in \
+                         this function — pins leak across aborts",
+                        f.name,
+                        scope.acquire.join("/"),
+                        or_none(&scope.release),
+                        or_none(&scope.trackers),
+                        or_none(&scope.delegates),
+                    ),
+                );
+            }
+        }
+    }
+    for defs in &cfg.pin_defs {
+        let Some(m) = models.iter().find(|m| m.path.ends_with(&defs.file)) else {
+            // A configured drain-side file that does not exist is
+            // itself a violation: the conservation argument depends
+            // on it.
+            diag(
+                out,
+                PASS_PINS,
+                &defs.file,
+                1,
+                format!("configured drain-side file `{}` not found in scan set", defs.file),
+            );
+            continue;
+        };
+        for name in &defs.must_define {
+            let defined = m
+                .fns
+                .iter()
+                .any(|f| f.name == *name);
+            if !defined {
+                diag(
+                    out,
+                    PASS_PINS,
+                    &m.path,
+                    1,
+                    format!(
+                        "drain-side API `{}` is not defined in `{}` — pin \
+                         delegation has no drain",
+                        name, defs.file
+                    ),
+                );
+            }
+        }
+    }
+}
+
+fn or_none(v: &[String]) -> String {
+    if v.is_empty() {
+        "none configured".to_string()
+    } else {
+        v.join("/")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass 3: no-panic serving paths
+// ---------------------------------------------------------------------------
+
+/// In non-test code under the configured modules: forbid `.unwrap()`,
+/// `.expect(`, `panic!`, and indexing by integer literal
+/// (`xs[0]`). Typed `ServeError`/`MemoryError`/`ClusterError` is the
+/// serving-path contract.
+pub fn no_panic(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>) {
+    for m in models {
+        let in_scope = cfg
+            .no_panic_modules
+            .iter()
+            .any(|md| m.path.contains(&format!("src/{md}/")) || m.path.ends_with(&format!("src/{md}.rs")));
+        if !in_scope || m.file_is_test {
+            continue;
+        }
+        let toks = &m.toks;
+        for i in 0..toks.len() {
+            if m.is_test_at(i) {
+                continue;
+            }
+            let t = &toks[i];
+            if t.kind != TokKind::Ident && !t.is_punct('[') {
+                continue;
+            }
+            let prev_dot = i > 0 && toks[i - 1].is_punct('.');
+            let next_open = toks.get(i + 1).map(|n| n.is_punct('(')).unwrap_or(false);
+            if prev_dot && next_open && (t.is_ident("unwrap") || t.is_ident("expect")) {
+                diag(
+                    out,
+                    PASS_NO_PANIC,
+                    &m.path,
+                    t.line,
+                    format!(
+                        "`.{}(` on a serving path — return a typed error instead \
+                         (ServeError/MemoryError/ClusterError)",
+                        t.text
+                    ),
+                );
+                continue;
+            }
+            let next_bang = toks.get(i + 1).map(|n| n.is_punct('!')).unwrap_or(false);
+            if next_bang && (t.is_ident("panic") || t.is_ident("todo") || t.is_ident("unimplemented"))
+            {
+                diag(
+                    out,
+                    PASS_NO_PANIC,
+                    &m.path,
+                    t.line,
+                    format!("`{}!` on a serving path — return a typed error instead", t.text),
+                );
+                continue;
+            }
+            // Indexing by integer literal: `ident[0]` / `)[0]` / `][0]`.
+            if t.is_punct('[') && i > 0 {
+                let indexable = toks[i - 1].kind == TokKind::Ident
+                    || toks[i - 1].is_punct(')')
+                    || toks[i - 1].is_punct(']');
+                let lit_index = toks.get(i + 1).map(|n| n.kind == TokKind::Num).unwrap_or(false)
+                    && toks.get(i + 2).map(|n| n.is_punct(']')).unwrap_or(false);
+                if indexable && lit_index {
+                    diag(
+                        out,
+                        PASS_NO_PANIC,
+                        &m.path,
+                        t.line,
+                        "indexing by integer literal on a serving path — use \
+                         `.get(n)` / `.first()` and handle the miss"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass 4: hot-path clone ban
+// ---------------------------------------------------------------------------
+
+/// Inside any function tagged `// sparselint: hot`: forbid the
+/// configured allocating method calls (`.clone()`, `.to_vec()`), the
+/// configured container constructors (`Vec::new`,
+/// `Vec::with_capacity`, ...), and their macro forms (`vec!` when
+/// `vec` is listed). Complements the runtime clone-probe: the probe
+/// proves a run was clone-free, this proves the code cannot regress.
+pub fn hot_path(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>) {
+    for m in models {
+        let toks = &m.toks;
+        for f in m.fns.iter().filter(|f| f.is_hot) {
+            for i in f.body.clone() {
+                let t = &toks[i];
+                if t.kind != TokKind::Ident {
+                    continue;
+                }
+                let prev_dot = i > 0 && toks[i - 1].is_punct('.');
+                let next_open = toks.get(i + 1).map(|n| n.is_punct('(')).unwrap_or(false);
+                if prev_dot && next_open && cfg.hot_banned_methods.iter().any(|b| t.is_ident(b)) {
+                    diag(
+                        out,
+                        PASS_HOT,
+                        &m.path,
+                        t.line,
+                        format!(
+                            "`.{}(` inside hot function `{}` — steady-decode loops \
+                             are zero-alloc (reuse scratch buffers)",
+                            t.text, f.name
+                        ),
+                    );
+                    continue;
+                }
+                if cfg.hot_banned_ctors.iter().any(|b| t.is_ident(b)) {
+                    // `Ctor::new(` / `Ctor::with_capacity(` / `ctor!`
+                    let ctor_call = toks.get(i + 1).map(|n| n.is_punct(':')).unwrap_or(false)
+                        && toks.get(i + 2).map(|n| n.is_punct(':')).unwrap_or(false)
+                        && toks
+                            .get(i + 3)
+                            .map(|n| n.is_ident("new") || n.is_ident("with_capacity"))
+                            .unwrap_or(false);
+                    let macro_call = toks.get(i + 1).map(|n| n.is_punct('!')).unwrap_or(false);
+                    if ctor_call || macro_call {
+                        diag(
+                            out,
+                            PASS_HOT,
+                            &m.path,
+                            t.line,
+                            format!(
+                                "fresh `{}` allocation inside hot function `{}` — \
+                                 steady-decode loops reuse scratch buffers",
+                                t.text, f.name
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass 5: dead-knob / dead-counter
+// ---------------------------------------------------------------------------
+
+/// Fields of `struct_name` in `struct_file`, with the struct-body
+/// line of each. Token scan: inside the struct braces at depth 1, an
+/// `ident :` where the previous significant token is `{`, `,` or
+/// `pub` is a field. Attribute contents are skipped.
+fn struct_fields(m: &FileModel, struct_name: &str) -> Vec<(String, u32)> {
+    let toks = &m.toks;
+    let mut fields = Vec::new();
+    let mut i = 0usize;
+    while i + 2 < toks.len() {
+        if toks[i].is_ident("struct") && toks[i + 1].is_ident(struct_name) {
+            // find `{` (skip generics), then scan depth-1 entries
+            let mut j = i + 2;
+            while j < toks.len() && !toks[j].is_punct('{') && !toks[j].is_punct(';') {
+                j += 1;
+            }
+            if j >= toks.len() || toks[j].is_punct(';') {
+                return fields; // tuple/unit struct: nothing to check
+            }
+            let mut depth = 1usize;
+            let mut k = j + 1;
+            let mut prev_sig: Option<&Tok> = Some(&toks[j]);
+            while k < toks.len() && depth > 0 {
+                let t = &toks[k];
+                if t.is_punct('#') && toks.get(k + 1).map(|n| n.is_punct('[')).unwrap_or(false) {
+                    // skip attribute
+                    let mut d = 0usize;
+                    k += 1;
+                    while k < toks.len() {
+                        if toks[k].is_punct('[') {
+                            d += 1;
+                        } else if toks[k].is_punct(']') {
+                            d -= 1;
+                            if d == 0 {
+                                k += 1;
+                                break;
+                            }
+                        }
+                        k += 1;
+                    }
+                    continue;
+                }
+                if t.is_punct('{') {
+                    depth += 1;
+                } else if t.is_punct('}') {
+                    depth -= 1;
+                }
+                if depth == 1
+                    && t.kind == TokKind::Ident
+                    && toks.get(k + 1).map(|n| n.is_punct(':')).unwrap_or(false)
+                    && prev_sig
+                        .map(|p| p.is_punct('{') || p.is_punct(',') || p.is_ident("pub"))
+                        .unwrap_or(false)
+                {
+                    fields.push((t.text.clone(), t.line));
+                }
+                prev_sig = Some(t);
+                k += 1;
+            }
+            return fields;
+        }
+        i += 1;
+    }
+    fields
+}
+
+/// A `.field` occurrence at token index `i` (ident preceded by `.`,
+/// not a method call).
+fn is_field_access(toks: &[Tok], i: usize, field: &str) -> bool {
+    toks[i].is_ident(field)
+        && i > 0
+        && toks[i - 1].is_punct('.')
+        && !toks.get(i + 1).map(|n| n.is_punct('(')).unwrap_or(false)
+}
+
+/// Classify the access at `i` as a write (assignment, compound
+/// assignment, or mutating method call on the field).
+fn is_write_access(toks: &[Tok], i: usize) -> bool {
+    const WRITE_METHODS: &[&str] = &[
+        "push",
+        "extend",
+        "insert",
+        "record",
+        "record_outcome",
+        "observe",
+        "add",
+        "merge",
+        "set",
+        "clear",
+    ];
+    match toks.get(i + 1) {
+        Some(n) if n.is_punct('=') => {
+            // `=` yes, `==` no
+            !toks.get(i + 2).map(|m| m.is_punct('=')).unwrap_or(false)
+        }
+        Some(n) if n.is_punct('+') || n.is_punct('-') || n.is_punct('*') || n.is_punct('/') => {
+            toks.get(i + 2).map(|m| m.is_punct('=')).unwrap_or(false)
+        }
+        Some(n) if n.is_punct('.') => toks
+            .get(i + 2)
+            .map(|m| m.kind == TokKind::Ident && WRITE_METHODS.contains(&m.text.as_str()))
+            .unwrap_or(false),
+        _ => false,
+    }
+}
+
+/// Every `ServingConfig` knob must be read outside the config module:
+/// a knob nobody consults silently no-ops (exactly how `compute_s`
+/// sat dead until PR 6).
+pub fn dead_knob(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>) {
+    let Some(dk) = &cfg.dead_knob else { return };
+    let Some(def) = models.iter().find(|m| m.path.ends_with(&dk.struct_file)) else {
+        return;
+    };
+    for (field, line) in struct_fields(def, &dk.struct_name) {
+        let live = models.iter().any(|m| {
+            if m.path.contains(&dk.exclude_dir) {
+                return false;
+            }
+            (0..m.toks.len()).any(|i| is_field_access(&m.toks, i, &field))
+        });
+        if !live {
+            diag(
+                out,
+                PASS_DEAD_KNOB,
+                &def.path,
+                line,
+                format!(
+                    "`{}.{}` is never read outside `{}` — dead knob (wire it or \
+                     delete it)",
+                    dk.struct_name, field, dk.exclude_dir
+                ),
+            );
+        }
+    }
+}
+
+/// Every `RunMetrics` counter must be written somewhere AND read by a
+/// reporting surface (a `report_fns` method in the metrics file, or
+/// any code under `report_dirs`). A counter that is incremented but
+/// never reported is measurement theater; one that is reported but
+/// never incremented reports garbage.
+pub fn dead_counter(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>) {
+    let Some(dc) = &cfg.dead_counter else { return };
+    let Some(def) = models.iter().find(|m| m.path.ends_with(&dc.struct_file)) else {
+        return;
+    };
+    for (field, line) in struct_fields(def, &dc.struct_name) {
+        let mut written = false;
+        let mut reported = false;
+        for m in models {
+            let in_report_dir = dc.report_dirs.iter().any(|d| m.path.contains(d.as_str()));
+            let is_struct_file = m.path.ends_with(&dc.struct_file);
+            for i in 0..m.toks.len() {
+                if !is_field_access(&m.toks, i, &field) {
+                    continue;
+                }
+                if is_write_access(&m.toks, i) {
+                    written = true;
+                    continue;
+                }
+                if in_report_dir {
+                    reported = true;
+                } else if is_struct_file {
+                    if let Some(f) = m.fn_at(i) {
+                        if dc.report_fns.iter().any(|rf| f.name == *rf) {
+                            reported = true;
+                        }
+                    }
+                }
+            }
+        }
+        if !written {
+            diag(
+                out,
+                PASS_DEAD_COUNTER,
+                &def.path,
+                line,
+                format!(
+                    "`{}.{}` is never written — the counter reports a constant",
+                    dc.struct_name, field
+                ),
+            );
+        }
+        if !reported {
+            diag(
+                out,
+                PASS_DEAD_COUNTER,
+                &def.path,
+                line,
+                format!(
+                    "`{}.{}` is never read by a reporting surface ({} / {}) — \
+                     measurement theater",
+                    dc.struct_name,
+                    field,
+                    dc.report_fns.join("/"),
+                    dc.report_dirs.join(", ")
+                ),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Allow-grammar pass (meta)
+// ---------------------------------------------------------------------------
+
+/// Malformed allow comments (missing `-- <reason>`, unknown
+/// directive) and unknown pass names are diagnostics themselves, and
+/// cannot be suppressed.
+pub fn allow_grammar(models: &[FileModel], out: &mut Vec<Diagnostic>) {
+    for m in models {
+        for a in &m.allows {
+            if let Some(why) = &a.malformed {
+                diag(out, PASS_ALLOW_GRAMMAR, &m.path, a.line, why.clone());
+                continue;
+            }
+            if !KNOWN_PASSES.contains(&a.pass.as_str()) {
+                diag(
+                    out,
+                    PASS_ALLOW_GRAMMAR,
+                    &m.path,
+                    a.line,
+                    format!(
+                        "allow names unknown pass `{}` (known: {})",
+                        a.pass,
+                        KNOWN_PASSES.join(", ")
+                    ),
+                );
+            }
+        }
+    }
+}

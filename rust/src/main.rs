@@ -54,7 +54,11 @@ USAGE: sparseserve <info|serve|simulate|bench-transfer> [flags]
             through the coordinator: every request goes through the
             EngineCore lifecycle (SubmitRequest -> token stream -> Done
             timing), every 3rd request is submitted as Interactive with a
-            TTFT SLO, and the run's RunMetrics are printed at shutdown.
+            TTFT SLO, and the run's RunMetrics are printed at shutdown:
+            throughput, TTFT/TBT percentiles, queue wait, iteration
+            count, per-iteration block loads with mean load and stall
+            time, aborted-attempt decode time, and the per-layer-band
+            selection profile on its own [serve]/[simulate] line.
       --config tiny-llm     artifact directory (make artifacts)
       --system sparseserve  serving policy (see Systems below)
       --rate 2.0            Poisson arrival rate, requests/s
@@ -198,6 +202,7 @@ fn serve(args: &Args) -> Result<()> {
     }
     let metrics = server.shutdown()?;
     println!("[serve] {}", metrics.summary());
+    println!("[serve] {}", metrics.layer_profile.summary());
     if metrics.ttft_slo_violations > 0 {
         println!("[serve] TTFT SLO violations: {}", metrics.ttft_slo_violations);
     }
@@ -229,6 +234,7 @@ fn simulate(args: &Args) -> Result<()> {
     println!("[simulate] {model} x {system} @ {rate} rps, {n} requests");
     let report = engine.run_trace(trace, 1e7)?;
     println!("[simulate] {}", report.metrics.summary());
+    println!("[simulate] {}", report.metrics.layer_profile.summary());
     Ok(())
 }
 

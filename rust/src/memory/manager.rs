@@ -291,6 +291,7 @@ impl KvManager {
     /// count, so a typed [`MemoryError::DramExhausted`] allocates
     /// nothing. Panics on an id collision — cluster sequencing must
     /// never import over a live request.
+    #[allow(clippy::expect_used)]
     pub fn import_request(&mut self, kv: DrainedKv) -> Result<(), MemoryError> {
         assert!(
             !self.requests.contains_key(&kv.req),
@@ -306,6 +307,7 @@ impl KvManager {
             for head in layer {
                 let mut slots = Vec::with_capacity(head.len());
                 for plane in head {
+                    // sparselint: allow(no-panic) -- the preflight above counted free slots; failing mid-loop would leak a partially imported request, so a broken pool invariant must fail fast
                     let slot = self.dram.alloc().expect("preflight counted free slots");
                     self.dram.slot_mut(slot).copy_from_slice(plane);
                     slots.push(slot);
@@ -456,7 +458,7 @@ impl KvManager {
                 let keep_sealed = layer_len[layer] / bs;
                 for h in 0..hkv {
                     while r.blocks[layer][h].len() > keep_blocks {
-                        let slot = r.blocks[layer][h].pop().expect("len checked");
+                        let Some(slot) = r.blocks[layer][h].pop() else { break };
                         self.dram.free(slot);
                     }
                     r.meta[layer][h].truncate(keep_sealed);
@@ -535,7 +537,11 @@ impl KvManager {
             let spec_layers = self.spec.n_layers;
             debug_assert!(layer < spec_layers);
             let dram = &mut self.dram;
-            let r = self.requests.get_mut(&req).expect("unregistered request");
+            let Some(r) = self.requests.get_mut(&req) else {
+                self.scratch.src = src;
+                self.scratch.entries = entries;
+                return Err(MemoryError::Unregistered { req });
+            };
             'build: for h in 0..hkv {
                 let mut tok = 0;
                 while tok < t_real {
@@ -612,7 +618,11 @@ impl KvManager {
         let mut exhausted = false;
         {
             let dram = &mut self.dram;
-            let r = self.requests.get_mut(&req).expect("unregistered request");
+            let Some(r) = self.requests.get_mut(&req) else {
+                self.scratch.src = src;
+                self.scratch.entries = entries;
+                return Err(MemoryError::Unregistered { req });
+            };
             'build: for h in 0..hkv {
                 while r.blocks[layer][h].len() <= blk {
                     let Some(slot) = dram.alloc() else {
@@ -671,7 +681,10 @@ impl KvManager {
             }
         }
         let n_layers = self.spec.n_layers;
-        let r = self.requests.get_mut(&req).unwrap();
+        let Some(r) = self.requests.get_mut(&req) else {
+            debug_assert!(false, "advance_layer for unregistered request {req}");
+            return;
+        };
         for (h, ms) in new_meta.into_iter().enumerate() {
             r.meta[layer][h].extend(ms);
         }
@@ -762,6 +775,7 @@ impl KvManager {
     /// Errors with [`MemoryError::HbmExhausted`] when a miss cannot get
     /// an HBM slot (everything pinned — the batch-control invariant was
     /// violated); the engine evicts the request instead of panicking.
+    #[allow(clippy::expect_used)]
     pub fn gather_into(
         &mut self,
         req: ReqId,
@@ -858,6 +872,7 @@ impl KvManager {
             for (slot_idx, &b) in sel.iter().enumerate() {
                 let plane: &[f32] = if self.offload {
                     let key = BlockKey::new(req, layer as u16, h as u16, b);
+                    // sparselint: allow(no-panic) -- phase 1 of this gather loaded and PINNED every selected block; a pinned entry cannot be evicted, so absence here is a cache-accounting bug that must fail fast
                     let hbm_slot = *self.cache.peek(&key).expect("resident after load");
                     self.hbm.slot(hbm_slot)
                 } else {
@@ -1017,6 +1032,7 @@ impl Drop for KvManager {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::config::serving::TransferKind;

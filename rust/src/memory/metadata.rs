@@ -60,6 +60,7 @@ impl Cuboid {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::util::{prop, rng::Rng};

@@ -10,6 +10,12 @@
 //! - [`metadata`]: per-block cuboid metadata (ArkVale default)
 //! - [`manager`]: the KV cache manager tying it together per request
 
+// Serving-path no-panic discipline (satellite of sparselint's
+// `no-panic` pass): unwrap/expect in this module tree is a clippy
+// warning, denied under CI's `-D warnings`. The few justified
+// sites carry fn-level allows next to their sparselint comments.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod cache;
 pub mod manager;
 pub mod metadata;
@@ -37,13 +43,20 @@ pub enum MemoryError {
     /// HBM is full of pinned blocks (a single gather's working set
     /// exceeds the cache — the batch-control invariant was violated).
     HbmExhausted { req: ReqId },
+    /// An append referenced a request id with no registered KV state
+    /// (stale id after release/eviction). A driver-level bug surfaced
+    /// as a typed error: the engine evicts the phantom instead of
+    /// panicking mid-batch.
+    Unregistered { req: ReqId },
 }
 
 impl MemoryError {
     /// The request whose allocation hit the wall (the eviction victim).
     pub fn req(&self) -> ReqId {
         match self {
-            MemoryError::DramExhausted { req } | MemoryError::HbmExhausted { req } => *req,
+            MemoryError::DramExhausted { req }
+            | MemoryError::HbmExhausted { req }
+            | MemoryError::Unregistered { req } => *req,
         }
     }
 }
@@ -59,6 +72,9 @@ impl std::fmt::Display for MemoryError {
                 "HBM exhausted with everything pinned gathering request {req} \
                  (working set exceeds HBM)"
             ),
+            MemoryError::Unregistered { req } => {
+                write!(f, "KV append for unregistered request {req}")
+            }
         }
     }
 }

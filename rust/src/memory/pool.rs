@@ -108,6 +108,7 @@ impl BlockPool {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::util::{prop, rng::Rng};

@@ -82,6 +82,7 @@ pub fn stage_block<V>(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -296,7 +296,10 @@ fn ranges_disjoint(entries: &[ScatterEntry]) -> bool {
         .map(|e| (e.dst_slot.0, e.dst_off, e.dst_off + e.len))
         .collect();
     spans.sort_unstable();
-    spans.windows(2).all(|w| w[0].0 != w[1].0 || w[0].2 <= w[1].1)
+    spans.windows(2).all(|w| match w {
+        [a, b] => a.0 != b.0 || a.2 <= b.1,
+        _ => true,
+    })
 }
 
 // ---------------------------------------------------- GpuDirectSaveEngine
@@ -350,6 +353,7 @@ impl TransferEngine for GpuDirectSaveEngine {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -312,7 +312,11 @@ impl RunMetrics {
             String::new()
         };
         let abort = if self.abort_time_total_s > 0.0 {
-            format!(" | aborted-attempt time {:.4}s", self.abort_time_total_s)
+            format!(
+                " | aborted-attempt time {:.4}s (mean {:.4}s/iter)",
+                self.abort_time_total_s,
+                self.abort_time.mean()
+            )
         } else {
             String::new()
         };
@@ -326,13 +330,15 @@ impl RunMetrics {
             String::new()
         };
         format!(
-            "reqs={}{} tokens={} makespan={:.1}s thpt={:.2} tok/s | \
+            "reqs={}{} tokens={} makespan={:.1}s iters={} thpt={:.2} tok/s | \
              TTFT mean={:.3}s p99={:.3}s | TBT mean={:.4}s p99={:.4}s | \
-             queue mean={:.3}s | loads/iter mean={:.1} stall mean={:.4}s{}",
+             queue mean={:.3}s | loads/iter mean={:.1} load mean={:.4}s \
+             stall mean={:.4}s{}",
             self.requests_finished,
             extra,
             self.tokens_generated,
             self.makespan_s,
+            self.iterations,
             self.throughput(),
             self.ttft.mean(),
             self.ttft.p99(),
@@ -340,6 +346,7 @@ impl RunMetrics {
             self.tbt.p99(),
             self.queue_delay.mean(),
             self.blocks_loaded_per_iter.mean(),
+            self.load_time.mean(),
             self.stall_time.mean(),
             prefetch,
         ) + &abort

@@ -200,6 +200,7 @@ impl Scheduler {
     /// engine hands the same `Batch` back every iteration, so the
     /// planner's materialization vector is reused instead of
     /// reallocated (zero-clone step pipeline).
+    // sparselint: hot
     pub fn plan_into(&mut self, now: f64, ws: WsEstimate, batch: &mut Batch) {
         batch.decodes.clear();
         batch.prefill = None;
@@ -223,11 +224,12 @@ impl Scheduler {
                 let w = ws(id);
                 if ws_used + w > m_avl {
                     self.ws_rejections += 1;
-                    let streak = {
-                        let r = self.requests.get_mut(&id).unwrap();
-                        r.ws_skip_streak += 1;
-                        r.ws_skip_streak
+                    let Some(r) = self.requests.get_mut(&id) else {
+                        debug_assert!(false, "active id {id} has no request record");
+                        continue;
                     };
+                    r.ws_skip_streak += 1;
+                    let streak = r.ws_skip_streak;
                     // Starvation guard: a decode that COULD fit an
                     // emptier batch (w <= M_avl) must not be leapfrogged
                     // by younger, smaller requests forever. After K
@@ -244,7 +246,9 @@ impl Scheduler {
                     continue; // S.reset(req): skipped this iteration
                 }
                 ws_used += w;
-                self.requests.get_mut(&id).unwrap().ws_skip_streak = 0;
+                if let Some(r) = self.requests.get_mut(&id) {
+                    r.ws_skip_streak = 0;
+                }
             }
             batch.decodes.push(id);
             tokens += 1;
@@ -322,9 +326,12 @@ impl Scheduler {
         self.reserved.insert(id, need);
         self.reserved_total += need;
         self.queue.pop_front();
-        let r = self.requests.get_mut(&id).unwrap();
-        r.phase = Phase::Prefill;
-        r.admitted_s = Some(now);
+        // presence is guaranteed: `need` above was computed from this
+        // request's own record
+        if let Some(r) = self.requests.get_mut(&id) {
+            r.phase = Phase::Prefill;
+            r.admitted_s = Some(now);
+        }
         self.active.push(id);
         Some(id)
     }
@@ -393,7 +400,10 @@ impl Scheduler {
     /// Advance prefill progress after the executor ran a work item.
     /// (The first token is emitted separately via [`Self::emit_token`].)
     pub fn advance_prefill(&mut self, work: &PrefillWork) {
-        let r = self.requests.get_mut(&work.req()).expect("unknown request");
+        let Some(r) = self.requests.get_mut(&work.req()) else {
+            debug_assert!(false, "prefill work for unknown request {}", work.req());
+            return;
+        };
         match work {
             PrefillWork::Chunk { len, .. } => {
                 r.tokens_done += len;
@@ -421,7 +431,10 @@ impl Scheduler {
     /// Record a produced token. Returns true if the request just finished
     /// (the executor then releases its KV).
     pub fn emit_token(&mut self, id: ReqId, tok: Option<i32>, now: f64) -> bool {
-        let r = self.requests.get_mut(&id).expect("unknown request");
+        let Some(r) = self.requests.get_mut(&id) else {
+            debug_assert!(false, "token emitted for unknown request {id}");
+            return false;
+        };
         r.push_token(tok, now);
         let (finished, plen, n_gen) = (r.phase == Phase::Finished, r.prompt_len, r.n_generated);
         if finished {
@@ -474,6 +487,7 @@ impl Scheduler {
 
     /// [`Self::stage_hints`] into a caller-owned buffer (cleared first)
     /// — the engine reuses one hint vector across iterations.
+    // sparselint: hot
     pub fn stage_hints_into(&self, batch: &Batch, out: &mut Vec<ReqId>) {
         out.clear();
         out.extend(self.active.iter().copied().filter(|id| {
@@ -528,10 +542,12 @@ impl Scheduler {
         if !matches!(r.phase, Phase::Prefill | Phase::Decode) {
             return None;
         }
+        // remove the record first (presence was just checked), THEN the
+        // bookkeeping — so a miss cannot strand half-released state
+        let req = self.requests.remove(&id)?;
         self.active.retain(|&a| a != id);
         let bytes = self.reserved.remove(&id).unwrap_or(0);
         self.reserved_total -= bytes;
-        let req = self.requests.remove(&id).unwrap();
         Some((req, bytes))
     }
 
@@ -564,6 +580,7 @@ impl Scheduler {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -11,6 +11,12 @@
 //!   over the full prompt, bounding prefill HBM to one layer and
 //!   sidestepping the chunked-prefill head-of-line blocking (Fig. 16).
 
+// Serving-path no-panic discipline (satellite of sparselint's
+// `no-panic` pass): unwrap/expect in this module tree is a clippy
+// warning, denied under CI's `-D warnings`. The few justified
+// sites carry fn-level allows next to their sparselint comments.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 mod core;
 mod plan;
 mod request;

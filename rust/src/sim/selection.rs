@@ -218,6 +218,7 @@ impl SelectionModel {
     /// first) — the per-iteration hot path allocates nothing once the
     /// buffer is warm. Draw-for-draw identical to the allocating
     /// variant.
+    // sparselint: hot
     pub fn next_selection_into(&mut self, n_sealed: usize, budget: usize, out: &mut Vec<u32>) {
         self.next_band_selection_into(0, n_sealed, budget, out);
     }
@@ -249,6 +250,7 @@ impl SelectionModel {
     /// band 0 advances the shared hot pool (one drift per step). For
     /// `bands == 1` this is draw-for-draw the old iteration-granular
     /// process.
+    // sparselint: hot
     pub fn next_band_selection_into(
         &mut self,
         band: usize,

@@ -271,6 +271,7 @@ impl WorkingSetTracker {
     /// [`Self::record_step`] from a borrowed slice, reusing recycled
     /// step storage — the per-iteration hot path allocates nothing once
     /// the window is warm.
+    // sparselint: hot
     pub fn record_step_from(&mut self, items: &[SelItem]) {
         let mut v = self.spare.pop().unwrap_or_default();
         v.clear();
@@ -375,6 +376,7 @@ impl WorkingSetTracker {
     /// [`Self::ranked_blocks`] into a caller-owned buffer (cleared
     /// first), reusing the tracker's internal dedup scratch — the
     /// staging hot path allocates nothing once buffers are warm.
+    // sparselint: hot
     pub fn ranked_blocks_into(&mut self, out: &mut Vec<SelItem>) {
         self.ranked_blocks_capped_into(usize::MAX, out)
     }

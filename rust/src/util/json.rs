@@ -69,12 +69,19 @@ impl Value {
 }
 
 /// Parse error with byte offset for debuggability.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 pub fn parse(text: &str) -> Result<Value, ParseError> {
     let mut p = Parser { b: text.as_bytes(), pos: 0 };

@@ -1,0 +1,492 @@
+//! Golden-fixture suite for `sparselint` (src/lint/) plus the
+//! repo-cleanliness meta-test.
+//!
+//! Each fixture is a small source file with a known violation: the
+//! test pins the pass name, file, and 1-based line of the diagnostic,
+//! then shows the repaired (or suppressed) variant is silent. The
+//! final test replicates the `sparselint` binary's file walk over the
+//! real tree with the checked-in `rust/lint.toml` and asserts zero
+//! findings — the same gate CI runs via `cargo run --bin sparselint`.
+
+use sparseserve::lint::{analyze, Config, Diagnostic, SourceFile};
+
+fn file(path: &str, src: &str) -> SourceFile {
+    SourceFile { path: path.into(), src: src.into() }
+}
+
+fn run(cfg_toml: &str, files: &[SourceFile]) -> Vec<Diagnostic> {
+    let cfg = Config::from_toml(cfg_toml).expect("fixture config parses");
+    analyze(files, &cfg)
+}
+
+/// `(pass, line)` pairs of every diagnostic in `file_path`.
+fn hits(diags: &[Diagnostic], file_path: &str) -> Vec<(String, u32)> {
+    diags
+        .iter()
+        .filter(|d| d.file == file_path)
+        .map(|d| (d.pass.clone(), d.line))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// txn-pairing
+// ---------------------------------------------------------------------------
+
+const TXN_CFG: &str = "\
+[txn]
+driver = \"drive_step\"
+step_begin = \"begin_step\"
+
+[[txn.pair]]
+begin = \"begin_txn\"
+commit = \"commit_txn\"
+rollback = \"rollback_txn\"
+";
+
+#[test]
+fn txn_only_driver_may_begin_step() {
+    let src = "\
+fn sneaky(b: &mut B) {
+    b.begin_step();
+}
+fn drive_step(b: &mut B) {
+    b.begin_step();
+}
+";
+    let d = run(TXN_CFG, &[file("src/engine/x.rs", src)]);
+    assert_eq!(hits(&d, "src/engine/x.rs"), vec![("txn-pairing".into(), 2)], "{d:?}");
+    assert!(d[0].msg.contains("drive_step"), "{}", d[0].msg);
+}
+
+#[test]
+fn txn_escape_between_begin_and_commit_fires() {
+    let src = "\
+fn risky(s: &mut S) -> R {
+    s.begin_txn();
+    s.step()?;
+    s.commit_txn();
+    done()
+}
+";
+    let d = run(TXN_CFG, &[file("src/engine/x.rs", src)]);
+    assert_eq!(hits(&d, "src/engine/x.rs"), vec![("txn-pairing".into(), 3)], "{d:?}");
+
+    // Repaired: the fallible work happens before the transaction opens.
+    let fixed = "\
+fn safe(s: &mut S) -> R {
+    s.step()?;
+    s.begin_txn();
+    s.commit_txn();
+    done()
+}
+";
+    let d = run(TXN_CFG, &[file("src/engine/x.rs", fixed)]);
+    assert!(d.is_empty(), "{d:?}");
+}
+
+#[test]
+fn txn_unfinished_begin_fires_and_split_phase_file_is_clean() {
+    let src = "\
+fn open_only(s: &mut S) {
+    s.begin_txn();
+}
+";
+    let d = run(TXN_CFG, &[file("src/engine/x.rs", src)]);
+    assert_eq!(hits(&d, "src/engine/x.rs"), vec![("txn-pairing".into(), 2)], "{d:?}");
+    assert!(d[0].msg.contains("unfinished transaction"), "{}", d[0].msg);
+
+    // Split-phase session object: begin in one method, commit and
+    // rollback paths defined elsewhere in the same file.
+    let split = "\
+fn open_only(s: &mut S) {
+    s.begin_txn();
+}
+fn finish_ok(s: &mut S) {
+    s.commit_txn();
+}
+fn finish_err(s: &mut S) {
+    s.rollback_txn();
+}
+";
+    let d = run(TXN_CFG, &[file("src/engine/x.rs", split)]);
+    assert!(d.is_empty(), "{d:?}");
+}
+
+#[test]
+fn txn_delegation_to_driver_is_clean() {
+    let src = "\
+fn outer(s: &mut S) {
+    s.begin_txn();
+    drive_step(s);
+}
+";
+    let d = run(TXN_CFG, &[file("src/engine/x.rs", src)]);
+    assert!(d.is_empty(), "{d:?}");
+}
+
+// ---------------------------------------------------------------------------
+// pin-conservation
+// ---------------------------------------------------------------------------
+
+const PINS_CFG: &str = "\
+[[pins.scope]]
+file = \"src/mem/stage.rs\"
+acquire = [\"pin\"]
+release = [\"unpin\"]
+trackers = [\"pins_out\"]
+delegates = [\"mark_staged\"]
+
+[[pins.defs]]
+file = \"src/mem/drain.rs\"
+must_define = [\"mark_staged\", \"end_iteration\"]
+";
+
+const DRAIN_OK: &str = "\
+fn mark_staged(k: K) {}
+fn end_iteration() {}
+";
+
+#[test]
+fn pin_leak_fires_and_each_conservation_shape_is_clean() {
+    let src = "\
+fn leak(c: &mut C, k: K) {
+    c.pin(k);
+}
+fn ok_release(c: &mut C, k: K) {
+    c.pin(k);
+    c.unpin(k);
+}
+fn ok_tracker(c: &mut C, k: K, pins_out: &mut V) {
+    c.pin(k);
+    pins_out.push(k);
+}
+fn ok_delegate(c: &mut C, k: K) {
+    c.pin(k);
+    mark_staged(k);
+}
+#[test]
+fn test_pins_are_exempt(c: &mut C, k: K) {
+    c.pin(k);
+}
+";
+    let d = run(PINS_CFG, &[file("src/mem/stage.rs", src), file("src/mem/drain.rs", DRAIN_OK)]);
+    assert_eq!(hits(&d, "src/mem/stage.rs"), vec![("pin-conservation".into(), 2)], "{d:?}");
+    assert!(d[0].msg.contains("leak"), "{}", d[0].msg);
+}
+
+#[test]
+fn pin_drain_side_must_define_its_api() {
+    let drain_missing = "fn mark_staged(k: K) {}\n";
+    let d = run(PINS_CFG, &[file("src/mem/drain.rs", drain_missing)]);
+    assert_eq!(hits(&d, "src/mem/drain.rs"), vec![("pin-conservation".into(), 1)], "{d:?}");
+    assert!(d[0].msg.contains("end_iteration"), "{}", d[0].msg);
+
+    // The configured drain file being absent from the scan set is a
+    // finding in its own right, attributed to the configured path.
+    let d = run(PINS_CFG, &[file("src/mem/other.rs", "fn f() {}\n")]);
+    assert_eq!(hits(&d, "src/mem/drain.rs"), vec![("pin-conservation".into(), 1)], "{d:?}");
+    assert!(d[0].msg.contains("not found"), "{}", d[0].msg);
+}
+
+// ---------------------------------------------------------------------------
+// no-panic
+// ---------------------------------------------------------------------------
+
+const NO_PANIC_CFG: &str = "[no_panic]\nmodules = [\"engine\"]\n";
+
+#[test]
+fn no_panic_fires_on_unwrap_expect_panic_and_literal_index() {
+    let src = "\
+fn f(x: Option<u32>, msg: &str) -> u32 {
+    let a = x.unwrap();
+    let b = x.expect(msg);
+    a + b
+}
+fn g(v: &[u32]) -> u32 {
+    v[0]
+}
+fn h() {
+    panic!()
+}
+";
+    let d = run(NO_PANIC_CFG, &[file("src/engine/x.rs", src)]);
+    let expect: Vec<(String, u32)> = [(2u32), 3, 7, 10]
+        .iter()
+        .map(|&l| ("no-panic".to_string(), l))
+        .collect();
+    assert_eq!(hits(&d, "src/engine/x.rs"), expect, "{d:?}");
+}
+
+#[test]
+fn no_panic_repaired_code_and_out_of_scope_modules_are_clean() {
+    let fixed = "\
+fn f(x: Option<u32>) -> Result<u32, E> {
+    x.ok_or(E::Missing)
+}
+fn g(v: &[u32]) -> Option<u32> {
+    v.first().copied()
+}
+fn range_slices_are_fine(v: &[u32], n: usize) -> &[u32] {
+    &v[..n]
+}
+";
+    let d = run(NO_PANIC_CFG, &[file("src/engine/x.rs", fixed)]);
+    assert!(d.is_empty(), "{d:?}");
+
+    // Same panicky code outside the configured module set: no finding.
+    let panicky = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    let d = run(NO_PANIC_CFG, &[file("src/figures/x.rs", panicky)]);
+    assert!(d.is_empty(), "{d:?}");
+}
+
+#[test]
+fn no_panic_test_code_is_exempt() {
+    let src = "\
+fn live(x: Option<u32>) -> Option<u32> {
+    x
+}
+#[cfg(test)]
+mod tests {
+    fn t(x: Option<u32>) -> u32 {
+        x.unwrap()
+    }
+}
+";
+    let d = run(NO_PANIC_CFG, &[file("src/engine/x.rs", src)]);
+    assert!(d.is_empty(), "{d:?}");
+}
+
+#[test]
+fn no_panic_trailing_allow_suppresses_in_place() {
+    let src = "\
+fn f(x: Option<u32>) -> u32 {
+    x.unwrap() // sparselint: allow(no-panic) -- caller proved Some
+}
+";
+    let d = run(NO_PANIC_CFG, &[file("src/engine/x.rs", src)]);
+    assert!(d.is_empty(), "{d:?}");
+}
+
+// ---------------------------------------------------------------------------
+// hot-path
+// ---------------------------------------------------------------------------
+
+const HOT_CFG: &str = "\
+[hot]
+banned_methods = [\"clone\", \"to_vec\"]
+banned_ctors = [\"Vec\", \"vec\"]
+";
+
+#[test]
+fn hot_marker_bans_clones_and_fresh_containers() {
+    let src = "\
+// sparselint: hot
+fn hot_fn(xs: &[u32]) {
+    let a = xs.to_vec();
+    let b = Vec::new();
+    let c = vec![];
+}
+fn cold(xs: &[u32]) {
+    let a = xs.to_vec();
+}
+";
+    let d = run(HOT_CFG, &[file("src/engine/x.rs", src)]);
+    let expect: Vec<(String, u32)> =
+        [(3u32), 4, 5].iter().map(|&l| ("hot-path".to_string(), l)).collect();
+    assert_eq!(hits(&d, "src/engine/x.rs"), expect, "{d:?}");
+    assert!(d[0].msg.contains("hot_fn"), "{}", d[0].msg);
+}
+
+#[test]
+fn hot_allow_comment_suppresses_one_line() {
+    let src = "\
+// sparselint: hot
+fn hot_fn(xs: &[u32]) {
+    // sparselint: allow(hot-path) -- grows once, then amortized
+    let a = xs.to_vec();
+    let b = Vec::new();
+}
+";
+    let d = run(HOT_CFG, &[file("src/engine/x.rs", src)]);
+    assert_eq!(hits(&d, "src/engine/x.rs"), vec![("hot-path".into(), 5)], "{d:?}");
+}
+
+// ---------------------------------------------------------------------------
+// dead-knob
+// ---------------------------------------------------------------------------
+
+const DEAD_KNOB_CFG: &str = "\
+[dead_knob]
+struct_file = \"src/config/knobs.rs\"
+struct_name = \"Knobs\"
+exclude_dir = \"src/config\"
+";
+
+#[test]
+fn unread_knob_fires_at_its_field_line() {
+    let knobs = "\
+pub struct Knobs {
+    pub used: u32,
+    pub dead: u32,
+}
+";
+    // A read inside the excluded config dir does not make `dead` live.
+    let config_side = "fn d(k: &Knobs) -> u32 { k.dead }\n";
+    let consumer = "fn f(k: &Knobs) -> u32 { k.used }\n";
+    let d = run(
+        DEAD_KNOB_CFG,
+        &[
+            file("src/config/knobs.rs", knobs),
+            file("src/config/defaults.rs", config_side),
+            file("src/engine/x.rs", consumer),
+        ],
+    );
+    assert_eq!(hits(&d, "src/config/knobs.rs"), vec![("dead-knob".into(), 3)], "{d:?}");
+    assert!(d[0].msg.contains("dead"), "{}", d[0].msg);
+}
+
+// ---------------------------------------------------------------------------
+// dead-counter
+// ---------------------------------------------------------------------------
+
+const DEAD_COUNTER_CFG: &str = "\
+[dead_counter]
+struct_file = \"src/stats.rs\"
+struct_name = \"Metrics\"
+report_dirs = [\"src/report\"]
+report_fns = [\"summary\"]
+";
+
+#[test]
+fn counters_must_be_written_and_reported() {
+    let stats = "\
+pub struct Metrics {
+    pub hits: u64,
+    pub ghost_w: u64,
+    pub ghost_r: u64,
+    pub log: Vec<u64>,
+}
+impl Metrics {
+    pub fn summary(&self) -> u64 {
+        self.hits + self.ghost_r
+    }
+}
+";
+    // `hits` and `log` are written in the engine and read by a
+    // reporting surface; `ghost_w` is write-only measurement theater;
+    // `ghost_r` is reported but never incremented.
+    let writer = "\
+fn w(m: &mut Metrics, x: u64) {
+    m.hits += 1;
+    m.ghost_w += 1;
+    m.log.push(x);
+}
+";
+    let reporter = "fn p(m: &Metrics) -> usize { m.log.len() }\n";
+    let d = run(
+        DEAD_COUNTER_CFG,
+        &[
+            file("src/stats.rs", stats),
+            file("src/engine/x.rs", writer),
+            file("src/report/out.rs", reporter),
+        ],
+    );
+    let got = hits(&d, "src/stats.rs");
+    assert_eq!(
+        got,
+        vec![("dead-counter".into(), 3), ("dead-counter".into(), 4)],
+        "{d:?}"
+    );
+    let msgs: Vec<&str> = d.iter().map(|x| x.msg.as_str()).collect();
+    assert!(msgs.iter().any(|m| m.contains("ghost_w") && m.contains("never read")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("ghost_r") && m.contains("never written")), "{msgs:?}");
+}
+
+// ---------------------------------------------------------------------------
+// allow-grammar
+// ---------------------------------------------------------------------------
+
+#[test]
+fn malformed_allows_are_reported_and_do_not_suppress() {
+    let src = "\
+// sparselint: allow(no-panic)
+fn f(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+// sparselint: allow(bogus-pass) -- justified at length
+// sparselint: frobnicate
+fn g() {}
+";
+    let d = run(NO_PANIC_CFG, &[file("src/engine/x.rs", src)]);
+    let got = hits(&d, "src/engine/x.rs");
+    assert!(got.contains(&("no-panic".into(), 3)), "bare allow must not suppress: {d:?}");
+    assert!(got.contains(&("allow-grammar".into(), 1)), "{d:?}");
+    assert!(got.contains(&("allow-grammar".into(), 5)), "{d:?}");
+    assert!(got.contains(&("allow-grammar".into(), 6)), "{d:?}");
+    assert_eq!(got.len(), 4, "{d:?}");
+}
+
+#[test]
+fn config_allowlist_requires_a_reason() {
+    let toml = "\
+[no_panic]
+modules = [\"engine\"]
+
+[[allow]]
+pass = \"no-panic\"
+file = \"src/engine/x.rs\"
+";
+    let err = Config::from_toml(toml).expect_err("bare allowlist entry must be rejected");
+    assert!(err.contains("no reason"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Repo cleanliness: the same walk the sparselint binary does.
+// ---------------------------------------------------------------------------
+
+fn collect_rs(dir: &std::path::Path, out: &mut Vec<std::path::PathBuf>) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    for entry in rd.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+}
+
+#[test]
+fn repo_is_lint_clean() {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let roots: [(&str, &str); 4] = [
+        ("src", "rust/src"),
+        ("tests", "rust/tests"),
+        ("benches", "rust/benches"),
+        ("../examples", "examples"),
+    ];
+    let mut files = Vec::new();
+    for (rel, display) in roots {
+        let root = manifest.join(rel);
+        let mut paths = Vec::new();
+        collect_rs(&root, &mut paths);
+        paths.sort();
+        for p in &paths {
+            let src = std::fs::read_to_string(p).expect("source file readable");
+            let rel_path = p.strip_prefix(&root).expect("under root");
+            let shown = format!("{display}/{}", rel_path.display()).replace('\\', "/");
+            files.push(file(&shown, &src));
+        }
+    }
+    assert!(files.len() > 30, "walk found only {} files", files.len());
+
+    let cfg = Config::repo_default();
+    let diags = analyze(&files, &cfg);
+    let listing: Vec<String> = diags.iter().map(|d| d.to_string()).collect();
+    assert!(
+        diags.is_empty(),
+        "sparselint found {} violation(s) at HEAD:\n{}",
+        diags.len(),
+        listing.join("\n")
+    );
+}
