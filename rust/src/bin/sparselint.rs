@@ -2,11 +2,12 @@
 //! passes, report `file:line: [pass] message` diagnostics.
 //!
 //! Usage:
-//!   cargo run --release --bin sparselint [-- --config PATH --json PATH]
+//!   cargo run --release --bin sparselint
+//!       [-- --config PATH --json PATH --pass NAME --emit-callgraph PATH]
 //!
 //! Exit codes: 0 clean, 1 violations found, 2 config/IO error.
 
-use sparseserve::lint::{analyze, Config, SourceFile};
+use sparseserve::lint::{analyze_with, emit_callgraph, passes, Config, SourceFile};
 use sparseserve::util::cli::Args;
 use sparseserve::util::json;
 use std::path::{Path, PathBuf};
@@ -15,17 +16,23 @@ const USAGE: &str = "\
 sparselint: repo-invariant static analysis for SparseServe
 
 USAGE:
-    sparselint [--config PATH] [--json PATH]
+    sparselint [--config PATH] [--json PATH] [--pass NAME]
+               [--emit-callgraph PATH]
 
 FLAGS:
-    --config PATH   lint config (default: <manifest>/lint.toml)
-    --json PATH     also write diagnostics as a JSON artifact
-    --help          this text
+    --config PATH          lint config (default: <manifest>/lint.toml)
+    --json PATH            also write diagnostics + per-pass stats as JSON
+    --pass NAME            run only the named pass
+    --emit-callgraph PATH  dump the crate-wide call graph as JSON
+    --help                 this text
 
 Walks rust/src, rust/tests, rust/benches and examples/. Passes:
-txn-pairing, pin-conservation, no-panic, hot-path, dead-knob,
-dead-counter (plus allow-grammar on the suppression comments
-themselves). Suppress a finding in place with
+txn-pairing, pin-conservation, no-panic, hot-path, panic-path,
+hot-path-reach, step-typestate, unit-dim, dead-knob, dead-counter
+(plus allow-grammar on the suppression comments themselves). The
+interprocedural passes resolve obligations over a crate-wide call
+graph; split-phase transactions and pin delegation settle across
+files. Suppress a finding in place with
     // sparselint: allow(<pass>) -- <reason>
 or with a [[allow]] entry (with a reason) in lint.toml.
 
@@ -105,13 +112,39 @@ fn run(args: &Args) -> i32 {
         return 2;
     }
 
-    let diags = analyze(&files, &cfg);
-    for d in &diags {
+    let only = args.get("pass");
+    if let Some(name) = &only {
+        let known = passes::KNOWN_PASSES.contains(&name.as_str())
+            || name == passes::PASS_ALLOW_GRAMMAR;
+        if !known {
+            eprintln!(
+                "sparselint: unknown pass `{name}` (known: {}, {})",
+                passes::KNOWN_PASSES.join(", "),
+                passes::PASS_ALLOW_GRAMMAR
+            );
+            return 2;
+        }
+    }
+
+    if let Some(cg_path) = args.get("emit-callgraph") {
+        let js = emit_callgraph(&files);
+        if let Err(e) = std::fs::write(&cg_path, format!("{js}\n")) {
+            eprintln!("sparselint: writing {cg_path}: {e}");
+            return 2;
+        }
+        println!("sparselint: call graph written to {cg_path}");
+    }
+
+    let analysis = analyze_with(&files, &cfg, only.as_deref());
+    let diags = &analysis.diags;
+    for d in diags {
         println!("{d}");
     }
     if let Some(json_path) = args.get("json") {
         let doc = json::obj(vec![
             ("files_scanned", json::num(files.len() as f64)),
+            ("fns", json::num(analysis.n_fns as f64)),
+            ("call_edges", json::num(analysis.n_edges as f64)),
             ("violations", json::num(diags.len() as f64)),
             (
                 "diagnostics",
@@ -121,6 +154,17 @@ fn run(args: &Args) -> i32 {
                         ("file", json::s(&d.file)),
                         ("line", json::num(d.line as f64)),
                         ("msg", json::s(&d.msg)),
+                    ])
+                })),
+            ),
+            (
+                "passes",
+                json::arr(analysis.stats.iter().map(|s| {
+                    json::obj(vec![
+                        ("name", json::s(&s.name)),
+                        ("raw", json::num(s.raw as f64)),
+                        ("kept", json::num(s.kept as f64)),
+                        ("duration_us", json::num(s.micros as f64)),
                     ])
                 })),
             ),

@@ -17,6 +17,7 @@ use crate::engine::{EngineCore, SimBackend, SubmitRequest};
 use crate::scheduler::Scheduler;
 use crate::util::bench::{bench, BenchResult};
 use crate::util::json::Value;
+use crate::util::stats::secs_to_us;
 
 /// An engine with `n` long-lived decodes in steady state (LWM-7B, full
 /// SparseServe config) and the serving clock it reached.
@@ -148,9 +149,9 @@ pub fn hotpath_doc(results: &[BenchResult]) -> Value {
         .map(|r| {
             let mut p = BTreeMap::new();
             p.insert("name".into(), Value::Str(r.name.clone()));
-            p.insert("mean_us".into(), Value::Num(r.mean_s * 1e6));
-            p.insert("p50_us".into(), Value::Num(r.p50_s * 1e6));
-            p.insert("p99_us".into(), Value::Num(r.p99_s * 1e6));
+            p.insert("mean_us".into(), Value::Num(secs_to_us(r.mean_s)));
+            p.insert("p50_us".into(), Value::Num(secs_to_us(r.p50_s)));
+            p.insert("p99_us".into(), Value::Num(secs_to_us(r.p99_s)));
             p.insert("iters".into(), Value::Num(r.iters as f64));
             Value::Obj(p)
         })

@@ -194,6 +194,27 @@ pub struct DeadCounterCfg {
     pub report_fns: Vec<String>,
 }
 
+/// StepSession protocol names for the step-typestate pass. Armed by
+/// the presence of a `[step_session]` table.
+#[derive(Debug, Clone)]
+pub struct StepSessionCfg {
+    pub begin: String,
+    pub stage: String,
+    pub prefill: String,
+    pub decode: String,
+    pub commit: String,
+    pub rollback: String,
+}
+
+/// Unit-dimension pass scope: `files` are path substrings selecting
+/// the cost-model surface; `converter` is the sanctioned s→us helper
+/// (`secs_to_us`). Armed by the presence of a `[units]` table.
+#[derive(Debug, Clone)]
+pub struct UnitsCfg {
+    pub files: Vec<String>,
+    pub converter: String,
+}
+
 /// File-level allowlist entry from `lint.toml` (`[[allow]]`). A
 /// missing/empty `reason` is a config error: the acceptance bar is
 /// zero bare allowlist entries.
@@ -217,6 +238,13 @@ pub struct Config {
     pub pin_defs: Vec<PinDefs>,
     pub hot_banned_methods: Vec<String>,
     pub hot_banned_ctors: Vec<String>,
+    /// Modules whose non-test fns must not *reach* a panic through any
+    /// resolved call chain (interprocedural no-panic). Empty = pass off.
+    pub panic_path_modules: Vec<String>,
+    /// Arm the interprocedural hot-path allocation pass.
+    pub hot_reach: bool,
+    pub step_session: Option<StepSessionCfg>,
+    pub units: Option<UnitsCfg>,
     pub dead_knob: Option<DeadKnobCfg>,
     pub dead_counter: Option<DeadCounterCfg>,
     pub allows: Vec<AllowEntry>,
@@ -241,6 +269,13 @@ fn get_int_opt(t: &TomlTable, key: &str) -> Option<i64> {
     match t.entries.iter().find(|(k, _)| k == key) {
         Some((_, TomlVal::Int(i))) => Some(*i),
         _ => None,
+    }
+}
+
+fn get_bool_or(t: &TomlTable, key: &str, default: bool) -> bool {
+    match t.entries.iter().find(|(k, _)| k == key) {
+        Some((_, TomlVal::Bool(b))) => *b,
+        _ => default,
     }
 }
 
@@ -283,6 +318,25 @@ impl Config {
                 "hot" => {
                     cfg.hot_banned_methods = get_arr(t, "banned_methods");
                     cfg.hot_banned_ctors = get_arr(t, "banned_ctors");
+                }
+                "panic_path" => cfg.panic_path_modules = get_arr(t, "modules"),
+                "hot_reach" => cfg.hot_reach = get_bool_or(t, "enabled", true),
+                "step_session" => {
+                    cfg.step_session = Some(StepSessionCfg {
+                        begin: get_str(t, "begin")?,
+                        stage: get_str(t, "stage")?,
+                        prefill: get_str(t, "prefill")?,
+                        decode: get_str(t, "decode")?,
+                        commit: get_str(t, "commit")?,
+                        rollback: get_str(t, "rollback")?,
+                    })
+                }
+                "units" => {
+                    cfg.units = Some(UnitsCfg {
+                        files: get_arr(t, "files"),
+                        converter: get_str_opt(t, "converter")
+                            .unwrap_or_else(|| "secs_to_us".to_string()),
+                    })
                 }
                 "dead_knob" => {
                     cfg.dead_knob = Some(DeadKnobCfg {
@@ -393,5 +447,39 @@ banned_ctors = ["Vec"]
         assert!(!cfg.txn_pairs.is_empty());
         assert!(cfg.dead_knob.is_some());
         assert!(cfg.dead_counter.is_some());
+        // v2: the interprocedural + typestate + dimension passes are
+        // armed by the checked-in config.
+        assert!(!cfg.panic_path_modules.is_empty());
+        assert!(cfg.hot_reach);
+        let ss = cfg.step_session.as_ref().expect("[step_session] armed");
+        assert_eq!(ss.begin, "begin_step");
+        let units = cfg.units.as_ref().expect("[units] armed");
+        assert!(!units.files.is_empty());
+        assert_eq!(units.converter, "secs_to_us");
+        assert!(cfg.allows.is_empty(), "acceptance bar: zero [[allow]] entries");
+    }
+
+    #[test]
+    fn step_session_and_units_tables_parse() {
+        let src = r#"
+[step_session]
+begin = "begin_step"
+stage = "stage"
+prefill = "prefill_segment"
+decode = "decode_layer"
+commit = "commit"
+rollback = "rollback"
+
+[units]
+files = ["src/sim/cost.rs"]
+
+[hot_reach]
+enabled = true
+"#;
+        let cfg = Config::from_toml(src).unwrap();
+        assert_eq!(cfg.step_session.unwrap().decode, "decode_layer");
+        let units = cfg.units.unwrap();
+        assert_eq!(units.converter, "secs_to_us", "converter defaults");
+        assert!(cfg.hot_reach);
     }
 }

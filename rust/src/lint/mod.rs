@@ -1,22 +1,44 @@
 //! `sparselint`: repo-invariant static analysis.
 //!
 //! A zero-dependency, token-level linter for the cross-cutting
-//! contracts the runtime tests cannot own per-file: txn pairing
-//! (begin must reach commit/rollback on every path), pin conservation
-//! across aborts, the no-panic serving-path contract, the zero-alloc
-//! hot-path contract from PR 4, and dead-knob/dead-counter liveness
-//! (the `compute_s` lesson from PR 6). Driven by the `sparselint`
-//! binary (`cargo run --release --bin sparselint`), configured by the
-//! checked-in `rust/lint.toml`, suppressed site-by-site with
-//! `// sparselint: allow(<pass>) -- <reason>` comments.
+//! contracts the runtime tests cannot own per-file. v2 builds a
+//! crate-wide program model — every file's `FileModel` plus a
+//! heuristic [`callgraph::CallGraph`] over all of them — and checks:
 //!
-//! Design rationale (why tokens, not an AST) lives in DESIGN.md.
+//! - **txn-pairing**: begin must reach commit/rollback on every path;
+//!   split-phase sessions are resolved through the call graph (some
+//!   caller chain must reach both settles), not a same-file guess.
+//! - **pin-conservation**: pins settle in-function, in a tracker, or
+//!   in a callee reachable through the graph (cross-file delegation).
+//! - **no-panic** / **panic-path**: direct panics on serving paths,
+//!   plus interprocedural reachability — a serving fn is flagged when
+//!   any callee transitively reaches an unjustified `.unwrap()`.
+//! - **hot-path** / **hot-path-reach**: the zero-alloc contract from
+//!   PR 4, direct sites and through helpers.
+//! - **step-typestate**: linear begin → stage → prefill/decode* →
+//!   commit|rollback order over the StepSession protocol.
+//! - **unit-dim**: suffix-convention dimensional analysis over the
+//!   cost model (`_s`, `_us`, `_bytes`, `_blocks`, `_per_s`; knows
+//!   `bytes / bytes_per_s = s` and `* 1e6` / `secs_to_us` as the only
+//!   s→us conversions).
+//! - **dead-knob** / **dead-counter** liveness (the `compute_s`
+//!   lesson from PR 6).
+//!
+//! Driven by the `sparselint` binary (`cargo run --release --bin
+//! sparselint`), configured by the checked-in `rust/lint.toml`,
+//! suppressed site-by-site with `// sparselint: allow(<pass>) --
+//! <reason>` comments. Design rationale (why tokens, not an AST; why
+//! a heuristic call graph is enough) lives in DESIGN.md.
 
+pub mod callgraph;
 pub mod config;
 pub mod lexer;
 pub mod model;
 pub mod passes;
 
+use std::time::Instant;
+
+pub use callgraph::CallGraph;
 pub use config::Config;
 pub use model::FileModel;
 
@@ -42,24 +64,98 @@ pub struct SourceFile {
     pub src: String,
 }
 
-/// Run every pass over `files` under `cfg`, apply allow-comment and
-/// allowlist suppression, and return the surviving diagnostics sorted
-/// by (file, line). Allow-grammar findings are never suppressible.
-pub fn analyze(files: &[SourceFile], cfg: &Config) -> Vec<Diagnostic> {
+/// Per-pass accounting for the CI stats artifact.
+#[derive(Debug, Clone)]
+pub struct PassStat {
+    pub name: String,
+    /// Findings before suppression.
+    pub raw: usize,
+    /// Findings surviving allow comments / allowlist entries.
+    pub kept: usize,
+    /// Wall-clock of the pass body (excludes model/graph build).
+    pub micros: u128,
+}
+
+/// Full analysis result: diagnostics plus the program-model shape and
+/// per-pass stats the CI job uploads.
+#[derive(Debug)]
+pub struct Analysis {
+    pub diags: Vec<Diagnostic>,
+    pub stats: Vec<PassStat>,
+    pub n_files: usize,
+    pub n_fns: usize,
+    pub n_edges: usize,
+}
+
+/// Run every armed pass over `files` under `cfg`, apply allow-comment
+/// and allowlist suppression, and return diagnostics sorted by (file,
+/// line) plus per-pass stats. `only` restricts to a single pass by
+/// name (the `--pass` flag). The four v2 passes arm themselves on
+/// their config tables; the v1 passes always run, so a config without
+/// the new tables behaves exactly as before. Allow-grammar findings
+/// are never suppressible.
+pub fn analyze_with(files: &[SourceFile], cfg: &Config, only: Option<&str>) -> Analysis {
     let models: Vec<FileModel> =
         files.iter().map(|f| FileModel::build(&f.path, &f.src)).collect();
-    let mut raw = Vec::new();
-    passes::txn_pairing(&models, cfg, &mut raw);
-    passes::pin_conservation(&models, cfg, &mut raw);
-    passes::no_panic(&models, cfg, &mut raw);
-    passes::hot_path(&models, cfg, &mut raw);
-    passes::dead_knob(&models, cfg, &mut raw);
-    passes::dead_counter(&models, cfg, &mut raw);
-    let mut kept: Vec<Diagnostic> =
-        raw.into_iter().filter(|d| !suppressed(d, &models, cfg)).collect();
-    passes::allow_grammar(&models, &mut kept);
-    kept.sort_by(|a, b| (&a.file, a.line, &a.pass).cmp(&(&b.file, b.line, &b.pass)));
-    kept
+    let graph = CallGraph::build(&models);
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut stats: Vec<PassStat> = Vec::new();
+
+    let mut run = |name: &str, body: &mut dyn FnMut(&mut Vec<Diagnostic>)| {
+        if only.map(|o| o != name).unwrap_or(false) {
+            return;
+        }
+        let t0 = Instant::now();
+        let mut raw: Vec<Diagnostic> = Vec::new();
+        body(&mut raw);
+        let n_raw = raw.len();
+        let kept: Vec<Diagnostic> = if name == passes::PASS_ALLOW_GRAMMAR {
+            raw // meta-pass: unsuppressible
+        } else {
+            raw.into_iter().filter(|d| !suppressed(d, &models, cfg)).collect()
+        };
+        stats.push(PassStat {
+            name: name.to_string(),
+            raw: n_raw,
+            kept: kept.len(),
+            micros: t0.elapsed().as_micros(),
+        });
+        diags.extend(kept);
+    };
+
+    run(passes::PASS_TXN, &mut |out| passes::txn_pairing(&models, &graph, cfg, out));
+    run(passes::PASS_PINS, &mut |out| passes::pin_conservation(&models, &graph, cfg, out));
+    run(passes::PASS_NO_PANIC, &mut |out| passes::no_panic(&models, cfg, out));
+    run(passes::PASS_HOT, &mut |out| passes::hot_path(&models, cfg, out));
+    run(passes::PASS_PANIC_PATH, &mut |out| passes::panic_path(&models, &graph, cfg, out));
+    run(passes::PASS_HOT_REACH, &mut |out| passes::hot_path_reach(&models, &graph, cfg, out));
+    run(passes::PASS_STEP, &mut |out| passes::step_typestate(&models, cfg, out));
+    run(passes::PASS_UNIT, &mut |out| passes::unit_dim(&models, cfg, out));
+    run(passes::PASS_DEAD_KNOB, &mut |out| passes::dead_knob(&models, cfg, out));
+    run(passes::PASS_DEAD_COUNTER, &mut |out| passes::dead_counter(&models, cfg, out));
+    run(passes::PASS_ALLOW_GRAMMAR, &mut |out| passes::allow_grammar(&models, out));
+
+    diags.sort_by(|a, b| (&a.file, a.line, &a.pass).cmp(&(&b.file, b.line, &b.pass)));
+    Analysis {
+        diags,
+        stats,
+        n_files: models.len(),
+        n_fns: graph.nodes.len(),
+        n_edges: graph.n_edges(),
+    }
+}
+
+/// Back-compat entry: all passes, diagnostics only.
+pub fn analyze(files: &[SourceFile], cfg: &Config) -> Vec<Diagnostic> {
+    analyze_with(files, cfg, None).diags
+}
+
+/// Build the crate-wide call graph and dump it as JSON (the
+/// `--emit-callgraph` CI artifact).
+pub fn emit_callgraph(files: &[SourceFile]) -> String {
+    let models: Vec<FileModel> =
+        files.iter().map(|f| FileModel::build(&f.path, &f.src)).collect();
+    CallGraph::build(&models).dump_json(&models)
 }
 
 /// A diagnostic is suppressed by a well-formed allow comment for the
@@ -132,5 +228,33 @@ mod tests {
         assert!(!d.is_empty());
         let s = d[0].to_string();
         assert!(s.starts_with("src/engine/x.rs:1: [no-panic]"), "{s}");
+    }
+
+    #[test]
+    fn pass_filter_restricts_and_stats_cover_armed_passes() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        let files = one("src/engine/core.rs", src);
+        let cfg = cfg_no_panic();
+        let all = analyze_with(&files, &cfg, None);
+        assert!(all.stats.iter().any(|s| s.name == "no-panic" && s.kept == 1));
+        assert!(all.n_fns >= 1 && all.n_files == 1);
+        let only = analyze_with(&files, &cfg, Some("txn-pairing"));
+        assert!(only.diags.is_empty(), "{:?}", only.diags);
+        assert_eq!(only.stats.len(), 1);
+        assert_eq!(only.stats[0].name, "txn-pairing");
+    }
+
+    #[test]
+    fn emit_callgraph_names_fns_and_edges() {
+        let files = vec![
+            SourceFile {
+                path: "src/a.rs".into(),
+                src: "fn outer() { helper(); }\nfn helper() {}\n".into(),
+            },
+        ];
+        let js = emit_callgraph(&files);
+        assert!(js.contains("\"outer\""), "{js}");
+        assert!(js.contains("\"helper\""), "{js}");
+        assert!(js.contains("\"n_edges\""), "{js}");
     }
 }

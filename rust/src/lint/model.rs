@@ -29,6 +29,15 @@ pub struct FnInfo {
     pub is_test: bool,
     /// Preceded by a `// sparselint: hot` marker.
     pub is_hot: bool,
+    /// Self type of the innermost enclosing `impl`/`trait` block, if
+    /// any (`impl Foo`, `impl Trait for Foo`, `trait Bar` all record
+    /// the last path ident). The call graph uses this to type method
+    /// receivers.
+    pub impl_type: Option<String>,
+    /// Exclusive end of the signature token range (the body `{`, or
+    /// the `fn` token itself for bodiless declarations). The call
+    /// graph scans `start..sig_end` for parameter types.
+    pub sig_end: usize,
 }
 
 /// Parsed `// sparselint: allow(pass) -- reason` comment.
@@ -63,7 +72,8 @@ impl FileModel {
         let file_is_test = is_test_path(path);
         let (allows, hot_lines) = parse_markers(&comments, src);
         let test_spans = find_test_spans(&toks);
-        let fns = extract_fns(&toks, &test_spans, &hot_lines, file_is_test);
+        let impl_spans = find_impl_spans(&toks);
+        let fns = extract_fns(&toks, &test_spans, &hot_lines, &impl_spans, file_is_test);
         FileModel { path: path.to_string(), toks, fns, allows, file_is_test }
     }
 
@@ -282,6 +292,105 @@ fn find_test_spans(toks: &[Tok]) -> Vec<std::ops::Range<usize>> {
     spans
 }
 
+/// Body token ranges of every `impl`/`trait` block, with the self
+/// type name: `impl Foo`, `impl Trait for Foo` and `trait Bar` record
+/// `Foo`/`Foo`/`Bar` (last ident of the path after `for` when
+/// present, generics skipped by angle-depth tracking). Fns inside
+/// these spans get the name as their `impl_type`.
+fn find_impl_spans(toks: &[Tok]) -> Vec<(std::ops::Range<usize>, Option<String>)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if !(t.is_ident("impl") || t.is_ident("trait")) {
+            i += 1;
+            continue;
+        }
+        let is_trait = t.is_ident("trait");
+        // Walk the header to its `{` (skip parenthesized/bracketed
+        // groups; a `;` first means no body — bail).
+        let mut j = i + 1;
+        let mut depth_p = 0isize;
+        let mut header: Vec<usize> = Vec::new();
+        let mut found = false;
+        while j < toks.len() {
+            let tj = &toks[j];
+            if tj.is_punct('(') || tj.is_punct('[') {
+                depth_p += 1;
+            } else if tj.is_punct(')') || tj.is_punct(']') {
+                depth_p -= 1;
+            } else if tj.is_punct('{') && depth_p == 0 {
+                found = true;
+                break;
+            } else if tj.is_punct(';') && depth_p == 0 {
+                break;
+            }
+            header.push(j);
+            j += 1;
+        }
+        if !found {
+            i = j + 1;
+            continue;
+        }
+        // Self type: the path after `for` (impl Trait for Type), else
+        // the whole header; within it, the last ident outside angle
+        // brackets.
+        let mut for_ix: Option<usize> = None;
+        let mut angle = 0isize;
+        for (k, &hi) in header.iter().enumerate() {
+            let ht = &toks[hi];
+            if ht.is_punct('<') {
+                angle += 1;
+            } else if ht.is_punct('>') {
+                angle = (angle - 1).max(0);
+            } else if angle == 0 && !is_trait && ht.is_ident("for") {
+                for_ix = Some(k);
+            }
+        }
+        let seg = match for_ix {
+            Some(k) => &header[k + 1..],
+            None => &header[..],
+        };
+        let mut name: Option<String> = None;
+        let mut angle = 0isize;
+        for &hi in seg {
+            let ht = &toks[hi];
+            if ht.is_punct('<') {
+                angle += 1;
+                continue;
+            }
+            if ht.is_punct('>') {
+                angle = (angle - 1).max(0);
+                continue;
+            }
+            if angle > 0 {
+                continue;
+            }
+            if ht.is_ident("where") {
+                break;
+            }
+            if ht.kind == TokKind::Ident && !ht.is_ident("mut") && !ht.is_ident("dyn") {
+                name = Some(ht.text.clone());
+            }
+        }
+        // Brace-match the body.
+        let mut d = 1isize;
+        let mut k = j + 1;
+        while k < toks.len() && d > 0 {
+            if toks[k].is_punct('{') {
+                d += 1;
+            } else if toks[k].is_punct('}') {
+                d -= 1;
+            }
+            k += 1;
+        }
+        spans.push((j + 1..k.saturating_sub(1), name));
+        // Continue just inside the body so nested impls are found too.
+        i = j + 1;
+    }
+    spans
+}
+
 /// Extract all `fn` items (free functions, methods, nested fns) by
 /// scanning for the `fn` keyword and brace-matching the body. The
 /// signature is skipped with paren/bracket depth tracking; a `;`
@@ -290,9 +399,18 @@ fn extract_fns(
     toks: &[Tok],
     test_spans: &[std::ops::Range<usize>],
     hot_lines: &[u32],
+    impl_spans: &[(std::ops::Range<usize>, Option<String>)],
     file_is_test: bool,
 ) -> Vec<FnInfo> {
     let in_test = |ti: usize| file_is_test || test_spans.iter().any(|s| s.contains(&ti));
+    // Innermost enclosing impl/trait block wins (nested impls in fns).
+    let impl_of = |ti: usize| -> Option<String> {
+        impl_spans
+            .iter()
+            .filter(|(s, _)| s.contains(&ti))
+            .min_by_key(|(s, _)| s.end - s.start)
+            .and_then(|(_, n)| n.clone())
+    };
     let mut fns = Vec::new();
     let mut i = 0usize;
     while i < toks.len() {
@@ -318,6 +436,7 @@ fn extract_fns(
         let mut paren = 0isize;
         let mut bracket = 0isize;
         let mut body = 0..0;
+        let mut sig_end = fn_ix;
         while j < toks.len() {
             let t = &toks[j];
             if t.is_punct('(') {
@@ -336,6 +455,7 @@ fn extract_fns(
                 }
                 if t.is_punct('{') {
                     // brace-match the body
+                    sig_end = j;
                     let body_start = j + 1;
                     let mut d = 1isize;
                     let mut k = body_start;
@@ -354,7 +474,16 @@ fn extract_fns(
             }
             j += 1;
         }
-        fns.push(FnInfo { name, start: fn_ix, body, line, is_test: in_test(fn_ix), is_hot });
+        fns.push(FnInfo {
+            name,
+            start: fn_ix,
+            body,
+            line,
+            is_test: in_test(fn_ix),
+            is_hot,
+            impl_type: impl_of(fn_ix),
+            sig_end,
+        });
         // Continue from just after the signature so nested fns inside
         // this body are also found.
         i = fn_ix + 2;
@@ -444,6 +573,33 @@ mod tests {
         let m = FileModel::build("src/x.rs", src);
         assert!(m.fns.iter().find(|f| f.name == "decode_inner").unwrap().is_hot);
         assert!(!m.fns.iter().find(|f| f.name == "cold").unwrap().is_hot);
+    }
+
+    #[test]
+    fn impl_type_resolves_for_inherent_trait_and_generic_blocks() {
+        let src = "\
+fn free() {}
+impl Foo { fn a(&self) {} }
+impl Display for Bar { fn fmt(&self) {} }
+impl<'a, T: Clone> Iterator for Baz<'a, T> { fn next(&mut self) {} }
+trait Backend { fn step(&mut self); fn with_default(&self) -> u32 { 0 } }
+";
+        let m = FileModel::build("src/x.rs", src);
+        let ty = |name: &str| {
+            m.fns.iter().find(|f| f.name == name).unwrap().impl_type.clone()
+        };
+        assert_eq!(ty("free"), None);
+        assert_eq!(ty("a"), Some("Foo".into()));
+        assert_eq!(ty("fmt"), Some("Bar".into()));
+        assert_eq!(ty("next"), Some("Baz".into()));
+        assert_eq!(ty("step"), Some("Backend".into()));
+        assert_eq!(ty("with_default"), Some("Backend".into()));
+        // bodiless trait declaration: empty body, sig intact
+        let step = m.fns.iter().find(|f| f.name == "step").unwrap();
+        assert!(step.body.is_empty());
+        let with_default = m.fns.iter().find(|f| f.name == "with_default").unwrap();
+        assert!(!with_default.body.is_empty());
+        assert!(with_default.sig_end > with_default.start);
     }
 
     #[test]

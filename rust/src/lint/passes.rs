@@ -1,10 +1,15 @@
-//! The five sparselint passes.
+//! The sparselint passes.
 //!
-//! Every pass walks token streams and the per-file function model —
-//! no AST. Each diagnostic carries the pass name so allow comments
-//! (`// sparselint: allow(<pass>) -- <reason>`) and `[[allow]]`
-//! config entries can target it.
+//! Per-file passes walk token streams and the per-file function model;
+//! the interprocedural passes (txn-pairing rule 2, pin delegation,
+//! panic-path, hot-path-reach) additionally consult the crate-wide
+//! [`CallGraph`]. No AST anywhere. Each diagnostic carries the pass
+//! name so allow comments (`// sparselint: allow(<pass>) -- <reason>`)
+//! and `[[allow]]` config entries can target it.
 
+use std::collections::HashSet;
+
+use super::callgraph::CallGraph;
 use super::config::Config;
 use super::lexer::{Tok, TokKind};
 use super::model::FileModel;
@@ -14,6 +19,10 @@ pub const PASS_TXN: &str = "txn-pairing";
 pub const PASS_PINS: &str = "pin-conservation";
 pub const PASS_NO_PANIC: &str = "no-panic";
 pub const PASS_HOT: &str = "hot-path";
+pub const PASS_PANIC_PATH: &str = "panic-path";
+pub const PASS_HOT_REACH: &str = "hot-path-reach";
+pub const PASS_STEP: &str = "step-typestate";
+pub const PASS_UNIT: &str = "unit-dim";
 pub const PASS_DEAD_KNOB: &str = "dead-knob";
 pub const PASS_DEAD_COUNTER: &str = "dead-counter";
 pub const PASS_ALLOW_GRAMMAR: &str = "allow-grammar";
@@ -24,6 +33,10 @@ pub const KNOWN_PASSES: &[&str] = &[
     PASS_PINS,
     PASS_NO_PANIC,
     PASS_HOT,
+    PASS_PANIC_PATH,
+    PASS_HOT_REACH,
+    PASS_STEP,
+    PASS_UNIT,
     PASS_DEAD_KNOB,
     PASS_DEAD_COUNTER,
 ];
@@ -54,6 +67,35 @@ fn first_call(toks: &[Tok], r: &std::ops::Range<usize>, names: &[&str]) -> Optio
     r.clone().find(|&i| names.iter().any(|n| is_call(toks, i, n)))
 }
 
+/// A well-formed allow comment for any of `passes` whose target line
+/// is `line`. The interprocedural passes consult this at direct sites
+/// so a justified marker stops obligation propagation at its source
+/// (the generic per-diagnostic suppression in `mod.rs` only covers the
+/// *report* line, which for a propagated finding is a call site far
+/// from the marker).
+fn justified(m: &FileModel, line: u32, passes: &[&str]) -> bool {
+    m.allows.iter().any(|a| {
+        a.malformed.is_none()
+            && passes.contains(&a.pass.as_str())
+            && (a.applies_to == line || a.line == line)
+    })
+}
+
+/// `path` is inside one of the configured `src/<module>` scopes.
+fn in_module_scope(path: &str, modules: &[String]) -> bool {
+    modules.iter().any(|md| {
+        path.contains(&format!("src/{md}/")) || path.ends_with(&format!("src/{md}.rs"))
+    })
+}
+
+/// Repo-relative display of a path (the `src/...` suffix).
+fn short_path(p: &str) -> &str {
+    match p.find("src/") {
+        Some(i) => &p[i..],
+        None => p,
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Pass 1: txn-pairing
 // ---------------------------------------------------------------------------
@@ -67,16 +109,22 @@ fn first_call(toks: &[Tok], r: &std::ops::Range<usize>, names: &[&str]) -> Optio
 /// 2. For each begin/commit/rollback triple: a function calling
 ///    `begin` must either (a) contain `commit` or `rollback` with no
 ///    `?`/`return` escape between the begin and the first
-///    commit/rollback, (b) delegate to the driver, or (c) live in a
-///    file that implements the split-phase pattern (the file defines
-///    paths through both `commit` and `rollback` call sites, i.e. the
-///    session object begun here is finished by its commit/rollback
-///    methods).
-pub fn txn_pairing(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>) {
-    for m in models {
-        let toks = &m.toks;
-        // Rule 1: direct step_begin callers.
-        if !cfg.txn_step_begin.is_empty() {
+///    commit/rollback, (b) delegate to the driver, or (c) be settled
+///    by the call graph: some ancestor (a function that can reach this
+///    one, or the function itself) must reach both a `commit` and a
+///    `rollback` call site through resolved calls — the split-phase
+///    session shape, now resolved across files instead of by the old
+///    same-file heuristic.
+pub fn txn_pairing(
+    models: &[FileModel],
+    graph: &CallGraph,
+    cfg: &Config,
+    out: &mut Vec<Diagnostic>,
+) {
+    // Rule 1: direct step_begin callers.
+    if !cfg.txn_step_begin.is_empty() {
+        for m in models {
+            let toks = &m.toks;
             for f in &m.fns {
                 if f.name == cfg.txn_driver {
                     continue;
@@ -99,55 +147,69 @@ pub fn txn_pairing(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>
                 }
             }
         }
-        // Rule 2: begin/commit/rollback triples.
-        for pair in &cfg.txn_pairs {
-            let file_has_commit =
-                m.fns.iter().any(|f| range_has_call(toks, &f.body, &pair.commit));
-            let file_has_rollback =
-                m.fns.iter().any(|f| range_has_call(toks, &f.body, &pair.rollback));
-            for f in &m.fns {
-                let Some(begin_ix) = first_call(toks, &f.body, &[&pair.begin]) else {
-                    continue;
-                };
-                let finish = first_call(toks, &f.body, &[&pair.commit, &pair.rollback]);
-                if let Some(fin_ix) = finish {
-                    // Same-function pairing: no escape between begin
-                    // and the first commit/rollback.
-                    for i in begin_ix + 1..fin_ix {
-                        if toks[i].is_punct('?') || toks[i].is_ident("return") {
-                            diag(
-                                out,
-                                PASS_TXN,
-                                &m.path,
-                                toks[i].line,
-                                format!(
-                                    "`{}` can exit between `{}` and `{}`/`{}` — every \
-                                     return path must settle the transaction",
-                                    f.name, pair.begin, pair.commit, pair.rollback
-                                ),
-                            );
-                        }
+    }
+    // Rule 2: begin/commit/rollback triples, split-phase resolved over
+    // the call graph.
+    for pair in &cfg.txn_pairs {
+        let body_calls = |name: &str| -> Vec<bool> {
+            graph
+                .nodes
+                .iter()
+                .map(|n| {
+                    let m = &models[n.file_ix];
+                    range_has_call(&m.toks, &m.fns[n.fn_ix].body, name)
+                })
+                .collect()
+        };
+        let reach_commit = graph.propagate(body_calls(&pair.commit));
+        let reach_rollback = graph.propagate(body_calls(&pair.rollback));
+        for (ix, n) in graph.nodes.iter().enumerate() {
+            let m = &models[n.file_ix];
+            let f = &m.fns[n.fn_ix];
+            let toks = &m.toks;
+            let Some(begin_ix) = first_call(toks, &f.body, &[pair.begin.as_str()]) else {
+                continue;
+            };
+            let settles = [pair.commit.as_str(), pair.rollback.as_str()];
+            if let Some(fin_ix) = first_call(toks, &f.body, &settles) {
+                // Same-function pairing: no escape between begin and
+                // the first commit/rollback.
+                for i in begin_ix + 1..fin_ix {
+                    if toks[i].is_punct('?') || toks[i].is_ident("return") {
+                        diag(
+                            out,
+                            PASS_TXN,
+                            &m.path,
+                            toks[i].line,
+                            format!(
+                                "`{}` can exit between `{}` and `{}`/`{}` — every \
+                                 return path must settle the transaction",
+                                f.name, pair.begin, pair.commit, pair.rollback
+                            ),
+                        );
                     }
-                    continue;
                 }
-                if range_has_call(toks, &f.body, &cfg.txn_driver) {
-                    continue; // delegated to the canonical driver
-                }
-                if file_has_commit && file_has_rollback {
-                    continue; // split-phase session: finished elsewhere in this file
-                }
-                diag(
-                    out,
-                    PASS_TXN,
-                    &m.path,
-                    toks[begin_ix].line,
-                    format!(
-                        "`{}` calls `{}` but neither this function nor this file \
-                         reaches `{}`/`{}` — unfinished transaction",
-                        f.name, pair.begin, pair.commit, pair.rollback
-                    ),
-                );
+                continue;
             }
+            if range_has_call(toks, &f.body, &cfg.txn_driver) {
+                continue; // delegated to the canonical driver
+            }
+            let mut ancestors = graph.callers_of(ix);
+            ancestors.insert(ix);
+            if ancestors.iter().any(|&a| reach_commit[a] && reach_rollback[a]) {
+                continue; // split-phase: some caller chain settles it
+            }
+            diag(
+                out,
+                PASS_TXN,
+                &m.path,
+                toks[begin_ix].line,
+                format!(
+                    "`{}` calls `{}` but no caller chain settles it (no path through \
+                     the call graph reaches both `{}` and `{}`)",
+                    f.name, pair.begin, pair.commit, pair.rollback
+                ),
+            );
         }
     }
 }
@@ -157,20 +219,28 @@ pub fn txn_pairing(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>
 // ---------------------------------------------------------------------------
 
 /// Per configured scope file: every non-test function that acquires a
-/// pin (calls an `acquire` method) must, in the same function, either
-/// release it (`release` call), record it in a tracked collection
-/// (`trackers` identifier — e.g. `band_pins`, drained by a paired
-/// release helper), or hand it to a tracked drain-side registry
-/// (`delegates` call — e.g. `mark_staged`, drained at
-/// `end_iteration`). Plus a definitions check: the drain-side file
-/// must actually define the registry API the scopes rely on.
-pub fn pin_conservation(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>) {
+/// pin (calls an `acquire` method) must either release it (`release`
+/// call), record it in a tracked collection (`trackers` identifier —
+/// e.g. `band_pins`, drained by a paired release helper), or hand it
+/// to a tracked drain-side registry (`delegates` call — e.g.
+/// `mark_staged`, drained at `end_iteration`) — in the same function,
+/// OR in a callee reachable through the call graph (pin delegation
+/// across files: acquiring here and settling in a helper is
+/// conserving). Plus a definitions check: the drain-side file must
+/// actually define the registry API the scopes rely on.
+pub fn pin_conservation(
+    models: &[FileModel],
+    graph: &CallGraph,
+    cfg: &Config,
+    out: &mut Vec<Diagnostic>,
+) {
     for scope in &cfg.pin_scopes {
-        let Some(m) = models.iter().find(|m| m.path.ends_with(&scope.file)) else {
+        let Some(mi) = models.iter().position(|m| m.path.ends_with(&scope.file)) else {
             continue;
         };
+        let m = &models[mi];
         let toks = &m.toks;
-        for f in &m.fns {
+        for (fi, f) in m.fns.iter().enumerate() {
             if f.is_test || m.file_is_test {
                 continue;
             }
@@ -184,7 +254,26 @@ pub fn pin_conservation(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagno
                     .trackers
                     .iter()
                     .any(|t| f.body.clone().any(|i| toks[i].is_ident(t)));
-            if !conserves {
+            // Transitive delegation: a callee (any depth) whose body
+            // settles the pin also conserves.
+            let settles_downstream = !conserves
+                && graph.node_of(mi, fi).is_some_and(|ix| {
+                    let reach = graph.reachable(ix);
+                    reach.iter().enumerate().any(|(t, &r)| {
+                        if !r {
+                            return false;
+                        }
+                        let tn = &graph.nodes[t];
+                        let tm = &models[tn.file_ix];
+                        let tf = &tm.fns[tn.fn_ix];
+                        scope
+                            .release
+                            .iter()
+                            .chain(scope.delegates.iter())
+                            .any(|name| range_has_call(&tm.toks, &tf.body, name))
+                    })
+                });
+            if !conserves && !settles_downstream {
                 diag(
                     out,
                     PASS_PINS,
@@ -192,8 +281,8 @@ pub fn pin_conservation(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagno
                     toks[acq_ix].line,
                     format!(
                         "`{}` acquires a pin ({}) but neither releases it ({}), \
-                         records it in a tracker ({}), nor delegates it ({}) in \
-                         this function — pins leak across aborts",
+                         records it in a tracker ({}), delegates it ({}), nor hands \
+                         it to a callee that settles it — pins leak across aborts",
                         f.name,
                         scope.acquire.join("/"),
                         or_none(&scope.release),
@@ -219,10 +308,7 @@ pub fn pin_conservation(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagno
             continue;
         };
         for name in &defs.must_define {
-            let defined = m
-                .fns
-                .iter()
-                .any(|f| f.name == *name);
+            let defined = m.fns.iter().any(|f| f.name == *name);
             if !defined {
                 diag(
                     out,
@@ -258,11 +344,7 @@ fn or_none(v: &[String]) -> String {
 /// serving-path contract.
 pub fn no_panic(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>) {
     for m in models {
-        let in_scope = cfg
-            .no_panic_modules
-            .iter()
-            .any(|md| m.path.contains(&format!("src/{md}/")) || m.path.ends_with(&format!("src/{md}.rs")));
-        if !in_scope || m.file_is_test {
+        if !in_module_scope(&m.path, &cfg.no_panic_modules) || m.file_is_test {
             continue;
         }
         let toks = &m.toks;
@@ -326,7 +408,7 @@ pub fn no_panic(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>) {
 }
 
 // ---------------------------------------------------------------------------
-// Pass 4: hot-path clone ban
+// Pass 4: hot-path clone ban (direct sites)
 // ---------------------------------------------------------------------------
 
 /// Inside any function tagged `// sparselint: hot`: forbid the
@@ -335,6 +417,7 @@ pub fn no_panic(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>) {
 /// `Vec::with_capacity`, ...), and their macro forms (`vec!` when
 /// `vec` is listed). Complements the runtime clone-probe: the probe
 /// proves a run was clone-free, this proves the code cannot regress.
+/// `hot-path-reach` below extends the same ban through callees.
 pub fn hot_path(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>) {
     for m in models {
         let toks = &m.toks;
@@ -383,6 +466,806 @@ pub fn hot_path(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>) {
                         );
                     }
                 }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Interprocedural obligation propagation (panic-path, hot-path-reach)
+// ---------------------------------------------------------------------------
+
+/// Human-readable dirty chain from `start` down to a direct site:
+/// `helper -> deep (src/util/stats.rs:12 .unwrap())`. Bounded so a
+/// cycle or a pathological chain cannot explode the message.
+fn trace_chain(
+    models: &[FileModel],
+    graph: &CallGraph,
+    start: usize,
+    direct: &[Option<(u32, String)>],
+    dirty: &[bool],
+) -> String {
+    let mut chain: Vec<String> = Vec::new();
+    let mut seen: HashSet<usize> = HashSet::new();
+    let mut cur = Some(start);
+    while let Some(ix) = cur {
+        if seen.contains(&ix) || chain.len() >= 6 {
+            break;
+        }
+        seen.insert(ix);
+        let n = &graph.nodes[ix];
+        if let Some((line, what)) = &direct[ix] {
+            chain.push(format!(
+                "{} ({}:{} {})",
+                n.name,
+                short_path(&models[n.file_ix].path),
+                line,
+                what
+            ));
+            break;
+        }
+        chain.push(n.name.clone());
+        cur = n.resolved.iter().copied().find(|&t| dirty[t] && !seen.contains(&t));
+    }
+    chain.join(" -> ")
+}
+
+/// Interprocedural no-panic: a serving-scope function is flagged at
+/// the call site of any callee that *transitively* reaches an
+/// unjustified `.unwrap()` / `.expect(` / `panic!` / `todo!` /
+/// `unimplemented!`. Reported only at the serving-scope frontier —
+/// callees that are themselves in scope get their own report (or are
+/// caught by the direct `no-panic` pass), so one panic does not fan
+/// out into a report per transitive caller. A justified allow at the
+/// marker (`no-panic` or `panic-path`) stops propagation at the
+/// source; an allow at the frontier call line suppresses that edge.
+pub fn panic_path(
+    models: &[FileModel],
+    graph: &CallGraph,
+    cfg: &Config,
+    out: &mut Vec<Diagnostic>,
+) {
+    if cfg.panic_path_modules.is_empty() {
+        return;
+    }
+    let n_nodes = graph.nodes.len();
+    let mut direct: Vec<Option<(u32, String)>> = vec![None; n_nodes];
+    for (ix, node) in graph.nodes.iter().enumerate() {
+        if node.is_test {
+            continue;
+        }
+        let m = &models[node.file_ix];
+        let f = &m.fns[node.fn_ix];
+        let toks = &m.toks;
+        let (s, e) = (f.body.start, f.body.end);
+        for i in s..e {
+            let t = &toks[i];
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            let mut hit: Option<String> = None;
+            if t.is_ident("unwrap") || t.is_ident("expect") {
+                if i > 0 && toks[i - 1].is_punct('.') && i + 1 < e && toks[i + 1].is_punct('(') {
+                    hit = Some(format!(".{}()", t.text));
+                }
+            } else if (t.is_ident("panic") || t.is_ident("todo") || t.is_ident("unimplemented"))
+                && i + 1 < e
+                && toks[i + 1].is_punct('!')
+            {
+                hit = Some(format!("{}!", t.text));
+            }
+            if let Some(what) = hit {
+                if !justified(m, t.line, &[PASS_NO_PANIC, PASS_PANIC_PATH]) {
+                    direct[ix] = Some((t.line, what));
+                    break;
+                }
+            }
+        }
+    }
+    let dirty = graph.propagate(direct.iter().map(Option::is_some).collect());
+    for node in &graph.nodes {
+        if node.is_test {
+            continue;
+        }
+        let m = &models[node.file_ix];
+        if !in_module_scope(&m.path, &cfg.panic_path_modules) {
+            continue;
+        }
+        let mut reported: HashSet<(u32, String)> = HashSet::new();
+        for site in &node.resolved_sites {
+            if justified(m, site.line, &[PASS_NO_PANIC, PASS_PANIC_PATH]) {
+                continue;
+            }
+            for &t in &site.targets {
+                if !dirty[t] {
+                    continue;
+                }
+                let tn = &graph.nodes[t];
+                if in_module_scope(&models[tn.file_ix].path, &cfg.panic_path_modules) {
+                    continue; // reported at its own frontier
+                }
+                if !reported.insert((site.line, tn.name.clone())) {
+                    continue;
+                }
+                let chain = trace_chain(models, graph, t, &direct, &dirty);
+                diag(
+                    out,
+                    PASS_PANIC_PATH,
+                    &m.path,
+                    site.line,
+                    format!("`{}` calls `{}` which can panic: {}", node.name, tn.name, chain),
+                );
+            }
+        }
+    }
+}
+
+/// Interprocedural hot-path allocation ban: a `// sparselint: hot`
+/// function is flagged at the call site of any callee that
+/// transitively reaches an unjustified banned method/ctor. Direct
+/// sites inside the hot function are the `hot-path` pass's job; this
+/// one closes the "hide the clone in a helper" loophole.
+pub fn hot_path_reach(
+    models: &[FileModel],
+    graph: &CallGraph,
+    cfg: &Config,
+    out: &mut Vec<Diagnostic>,
+) {
+    if !cfg.hot_reach {
+        return;
+    }
+    let n_nodes = graph.nodes.len();
+    let mut direct: Vec<Option<(u32, String)>> = vec![None; n_nodes];
+    for (ix, node) in graph.nodes.iter().enumerate() {
+        if node.is_test {
+            continue;
+        }
+        let m = &models[node.file_ix];
+        let f = &m.fns[node.fn_ix];
+        let toks = &m.toks;
+        let (s, e) = (f.body.start, f.body.end);
+        for i in s..e {
+            let t = &toks[i];
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            let mut hit: Option<String> = None;
+            if cfg.hot_banned_methods.iter().any(|b| t.is_ident(b)) {
+                if i > 0 && toks[i - 1].is_punct('.') && i + 1 < e && toks[i + 1].is_punct('(') {
+                    hit = Some(format!(".{}()", t.text));
+                }
+            } else if cfg.hot_banned_ctors.iter().any(|b| t.is_ident(b)) {
+                if t.is_ident("vec") {
+                    if i + 1 < e && toks[i + 1].is_punct('!') {
+                        hit = Some("vec![]".to_string());
+                    }
+                } else if i + 3 < e && toks[i + 1].is_punct(':') && toks[i + 2].is_punct(':') {
+                    let nx = &toks[i + 3];
+                    if nx.is_ident("new") || nx.is_ident("with_capacity") || nx.is_ident("from") {
+                        hit = Some(format!("{}::{}", t.text, nx.text));
+                    }
+                }
+            }
+            if let Some(what) = hit {
+                if !justified(m, t.line, &[PASS_HOT, PASS_HOT_REACH]) {
+                    direct[ix] = Some((t.line, what));
+                    break;
+                }
+            }
+        }
+    }
+    let dirty = graph.propagate(direct.iter().map(Option::is_some).collect());
+    for node in &graph.nodes {
+        if !node.is_hot {
+            continue;
+        }
+        let m = &models[node.file_ix];
+        let mut reported: HashSet<(u32, String)> = HashSet::new();
+        for site in &node.resolved_sites {
+            for &t in &site.targets {
+                if !dirty[t] {
+                    continue;
+                }
+                let tn = &graph.nodes[t];
+                if !reported.insert((site.line, tn.name.clone())) {
+                    continue;
+                }
+                let chain = trace_chain(models, graph, t, &direct, &dirty);
+                diag(
+                    out,
+                    PASS_HOT_REACH,
+                    &m.path,
+                    site.line,
+                    format!(
+                        "hot fn `{}` calls `{}` which can allocate: {}",
+                        node.name, tn.name, chain
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass: step-typestate
+// ---------------------------------------------------------------------------
+
+#[derive(PartialEq, Clone, Copy)]
+enum StepState {
+    Closed,
+    Open,
+    Settled,
+}
+
+/// Linear typestate over the StepSession protocol, per function, in
+/// body token order: `begin_step` opens; `stage` happens once, before
+/// any phase call; `prefill_segment` precedes every `decode_layer`;
+/// `commit`/`rollback` settle an open session. Only functions that
+/// call the configured `begin` are checked — `stage`/`commit`/
+/// `rollback` are generic method names elsewhere. A settled session
+/// may settle again (branch arms commit/rollback on different paths),
+/// and a function ending with the session open is flagged at its last
+/// `begin` line.
+pub fn step_typestate(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>) {
+    let Some(ss) = &cfg.step_session else { return };
+    let names = [
+        ss.begin.as_str(),
+        ss.stage.as_str(),
+        ss.prefill.as_str(),
+        ss.decode.as_str(),
+        ss.commit.as_str(),
+        ss.rollback.as_str(),
+    ];
+    for m in models {
+        let toks = &m.toks;
+        for f in &m.fns {
+            let seq: Vec<usize> = f
+                .body
+                .clone()
+                .filter(|&i| names.iter().any(|n| is_call(toks, i, n)))
+                .collect();
+            if !seq.iter().any(|&i| toks[i].is_ident(&ss.begin)) {
+                continue;
+            }
+            let mut state = StepState::Closed;
+            let mut staged = false;
+            let mut saw_decode = false;
+            for &i in &seq {
+                let t = &toks[i];
+                let line = t.line;
+                if t.is_ident(&ss.begin) {
+                    if state == StepState::Open {
+                        diag(
+                            out,
+                            PASS_STEP,
+                            &m.path,
+                            line,
+                            format!(
+                                "`{}`: `{}` while a session is already open",
+                                f.name, ss.begin
+                            ),
+                        );
+                    }
+                    state = StepState::Open;
+                    staged = false;
+                    saw_decode = false;
+                } else if t.is_ident(&ss.stage) {
+                    if state != StepState::Open {
+                        diag(
+                            out,
+                            PASS_STEP,
+                            &m.path,
+                            line,
+                            format!("`{}`: `{}` outside an open session", f.name, ss.stage),
+                        );
+                    } else if staged {
+                        diag(
+                            out,
+                            PASS_STEP,
+                            &m.path,
+                            line,
+                            format!("`{}`: `{}` called twice in one session", f.name, ss.stage),
+                        );
+                    } else if saw_decode {
+                        diag(
+                            out,
+                            PASS_STEP,
+                            &m.path,
+                            line,
+                            format!("`{}`: `{}` after a phase call", f.name, ss.stage),
+                        );
+                    }
+                    staged = true;
+                } else if t.is_ident(&ss.prefill) {
+                    if state != StepState::Open {
+                        diag(
+                            out,
+                            PASS_STEP,
+                            &m.path,
+                            line,
+                            format!("`{}`: `{}` outside an open session", f.name, ss.prefill),
+                        );
+                    }
+                    if saw_decode {
+                        diag(
+                            out,
+                            PASS_STEP,
+                            &m.path,
+                            line,
+                            format!(
+                                "`{}`: `{}` after `{}` — prefill precedes decode",
+                                f.name, ss.prefill, ss.decode
+                            ),
+                        );
+                    }
+                } else if t.is_ident(&ss.decode) {
+                    if state != StepState::Open {
+                        diag(
+                            out,
+                            PASS_STEP,
+                            &m.path,
+                            line,
+                            format!("`{}`: `{}` outside an open session", f.name, ss.decode),
+                        );
+                    }
+                    saw_decode = true;
+                } else {
+                    // commit or rollback
+                    if state == StepState::Closed {
+                        diag(
+                            out,
+                            PASS_STEP,
+                            &m.path,
+                            line,
+                            format!("`{}`: `{}` with no open session", f.name, t.text),
+                        );
+                    }
+                    state = StepState::Settled;
+                }
+            }
+            if state == StepState::Open {
+                let last_begin = seq
+                    .iter()
+                    .filter(|&&i| toks[i].is_ident(&ss.begin))
+                    .map(|&i| toks[i].line)
+                    .max()
+                    .unwrap_or(f.line);
+                diag(
+                    out,
+                    PASS_STEP,
+                    &m.path,
+                    last_begin,
+                    format!("`{}`: session opened but never committed or rolled back", f.name),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass: unit-dim
+// ---------------------------------------------------------------------------
+
+/// Suffix-convention dimensions. `Numeric` is a bare literal;
+/// `NoDim` an ident without a recognized suffix. Only the five unit
+/// dims ever appear in a diagnostic — mixing with an unknown term is
+/// never reported (sound: no claim without evidence).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Dim {
+    S,
+    Us,
+    Bytes,
+    Blocks,
+    PerS,
+    Numeric,
+    NoDim,
+}
+
+impl Dim {
+    fn is_unit(self) -> bool {
+        matches!(self, Dim::S | Dim::Us | Dim::Bytes | Dim::Blocks | Dim::PerS)
+    }
+    fn name(self) -> &'static str {
+        match self {
+            Dim::S => "S",
+            Dim::Us => "US",
+            Dim::Bytes => "BYTES",
+            Dim::Blocks => "BLOCKS",
+            Dim::PerS => "PER_S",
+            Dim::Numeric => "NUMERIC",
+            Dim::NoDim => "NODIM",
+        }
+    }
+}
+
+/// Longest suffix first: `_bytes_per_s` must win over `_bytes`/`_s`.
+const DIM_SUFFIXES: &[(&str, Dim)] = &[
+    ("_bytes_per_s", Dim::PerS),
+    ("_per_s", Dim::PerS),
+    ("_us", Dim::Us),
+    ("_bytes", Dim::Bytes),
+    ("_blocks", Dim::Blocks),
+    ("_s", Dim::S),
+];
+
+fn ident_dim(name: &str) -> Option<Dim> {
+    DIM_SUFFIXES.iter().find(|(suf, _)| name.ends_with(suf)).map(|&(_, d)| d)
+}
+
+/// Dim of the term ending just before `toks[i]`, or None if unknown.
+/// Matched `[...]` index chains are skipped so `xs[i]` types by `xs`.
+fn term_before(toks: &[Tok], i: usize, lo: usize) -> Option<Dim> {
+    let lo = lo as isize;
+    let mut j = i as isize - 1;
+    while j >= lo && toks[j as usize].is_punct(']') {
+        let mut d = 1i32;
+        j -= 1;
+        while j >= lo && d > 0 {
+            if toks[j as usize].is_punct(']') {
+                d += 1;
+            } else if toks[j as usize].is_punct('[') {
+                d -= 1;
+            }
+            j -= 1;
+        }
+    }
+    if j < lo {
+        return None;
+    }
+    let t = &toks[j as usize];
+    if t.kind == TokKind::Num {
+        return Some(Dim::Numeric);
+    }
+    if t.kind != TokKind::Ident {
+        return None; // `)` etc: a call result, unknown
+    }
+    Some(ident_dim(&t.text).unwrap_or(Dim::NoDim))
+}
+
+/// Dim of the term starting just after `toks[i]`. Walks dotted /
+/// `::` chains to the last ident (`self.stall_s`, `r.mean_s`); a
+/// trailing `(` makes it a call — unknown.
+fn term_after(toks: &[Tok], i: usize, hi: usize) -> Option<Dim> {
+    let mut j = i + 1;
+    while j < hi && (toks[j].is_punct('&') || toks[j].is_ident("mut")) {
+        j += 1;
+    }
+    if j >= hi {
+        return None;
+    }
+    let t = &toks[j];
+    if t.kind == TokKind::Num {
+        return Some(Dim::Numeric);
+    }
+    if t.kind != TokKind::Ident {
+        return None;
+    }
+    let mut last = j;
+    let mut k = j;
+    while k + 2 < hi
+        && (toks[k + 1].is_punct('.') || (toks[k + 1].is_punct(':') && toks[k + 2].is_punct(':')))
+    {
+        let step = if toks[k + 1].is_punct('.') { 2 } else { 3 };
+        if k + step < hi && toks[k + step].kind == TokKind::Ident {
+            k += step;
+            last = k;
+        } else {
+            break;
+        }
+    }
+    if last + 1 < hi && toks[last + 1].is_punct('(') {
+        return None; // call result unknown
+    }
+    Some(ident_dim(&toks[last].text).unwrap_or(Dim::NoDim))
+}
+
+enum RhsTerm {
+    D(Dim),
+    Num(String),
+    Op(char),
+}
+
+/// Dim of a SIMPLE rhs expression (terms and `+ - * /`, no parens
+/// except the sanctioned converter call). Knows the algebra the cost
+/// model uses: `bytes / bytes_per_s = s`, `s * 1e6 = us` (the sole
+/// legal conversion, alongside `secs_to_us(..)`), same-dim ratio is
+/// dimensionless. Returns None on anything it cannot prove — an
+/// unknown rhs never produces a finding.
+fn rhs_dim(toks: &[Tok], start: usize, hi: usize, converter: &str) -> Option<Dim> {
+    let mut terms: Vec<RhsTerm> = Vec::new();
+    let mut i = start;
+    while i < hi {
+        let t = &toks[i];
+        if t.is_punct(';') {
+            break;
+        }
+        if t.kind == TokKind::Ident
+            && t.text == converter
+            && i + 1 < hi
+            && toks[i + 1].is_punct('(')
+        {
+            // sanctioned converter: a US term; skip its arguments
+            let mut d = 1i32;
+            let mut j = i + 2;
+            while j < hi && d > 0 {
+                if toks[j].is_punct('(') {
+                    d += 1;
+                } else if toks[j].is_punct(')') {
+                    d -= 1;
+                }
+                j += 1;
+            }
+            terms.push(RhsTerm::D(Dim::Us));
+            i = j;
+            continue;
+        }
+        if t.is_punct('(') || t.is_punct('[') {
+            return None; // complex expression: bail, no claim
+        }
+        if t.kind == TokKind::Ident {
+            if t.is_ident("as") {
+                i += 2; // skip the cast type
+                continue;
+            }
+            let mut last = i;
+            let mut k = i;
+            while k + 2 < hi
+                && (toks[k + 1].is_punct('.')
+                    || (toks[k + 1].is_punct(':') && toks[k + 2].is_punct(':')))
+            {
+                let step = if toks[k + 1].is_punct('.') { 2 } else { 3 };
+                if k + step < hi && toks[k + step].kind == TokKind::Ident {
+                    k += step;
+                    last = k;
+                } else {
+                    break;
+                }
+            }
+            if last + 1 < hi && toks[last + 1].is_punct('(') {
+                return None; // method call: unknown
+            }
+            let d = ident_dim(&toks[last].text)?; // undimensioned ident: bail
+            terms.push(RhsTerm::D(d));
+            i = last + 1;
+            continue;
+        }
+        if t.kind == TokKind::Num {
+            terms.push(RhsTerm::Num(t.text.clone()));
+            i += 1;
+            continue;
+        }
+        if t.is_punct('+') || t.is_punct('-') || t.is_punct('*') || t.is_punct('/') {
+            if i + 1 < hi && toks[i + 1].is_punct('>') {
+                return None; // `->`: we ran off the expression
+            }
+            terms.push(RhsTerm::Op(t.text.as_bytes()[0] as char));
+            i += 1;
+            continue;
+        }
+        if t.is_punct('.') {
+            i += 1;
+            continue;
+        }
+        return None; // anything else: bail
+    }
+    let mut cur = match terms.first()? {
+        RhsTerm::Op(_) => return None,
+        RhsTerm::Num(_) => Dim::Numeric,
+        RhsTerm::D(d) => *d,
+    };
+    if terms.len() % 2 == 0 {
+        return None; // trailing operator: malformed, no claim
+    }
+    let mut j = 1;
+    while j < terms.len() {
+        let op = match &terms[j] {
+            RhsTerm::Op(c) => *c,
+            _ => return None,
+        };
+        let (rd, rnum) = match &terms[j + 1] {
+            RhsTerm::Num(s) => (Dim::Numeric, Some(s.as_str())),
+            RhsTerm::D(d) => (*d, None),
+            RhsTerm::Op(_) => return None,
+        };
+        match op {
+            '+' | '-' => {
+                if rd == Dim::Numeric || cur == Dim::Numeric {
+                    // additive with a bare number keeps the dim
+                } else if rd != cur {
+                    return Some(cur); // mixed add: the binary check reports it
+                }
+            }
+            '*' => {
+                let is_mega = rnum
+                    .map(|s| {
+                        let n = s.replace('_', "");
+                        n == "1e6" || n == "1000000" || n == "1e6f64"
+                    })
+                    .unwrap_or(false);
+                if cur == Dim::S && is_mega {
+                    cur = Dim::Us; // the one sanctioned inline conversion
+                } else if rd == Dim::Numeric {
+                    // scaling keeps the dim
+                } else if cur == Dim::Numeric {
+                    cur = rd;
+                } else {
+                    return None; // dim * dim: unknown product
+                }
+            }
+            '/' => {
+                if rd == Dim::Numeric {
+                    // scaling keeps the dim
+                } else if cur == Dim::Bytes && rd == Dim::PerS {
+                    cur = Dim::S; // bytes / bytes_per_s = seconds
+                } else if rd == cur {
+                    cur = Dim::Numeric; // same-dim ratio
+                } else {
+                    return None;
+                }
+            }
+            _ => return None,
+        }
+        j += 2;
+    }
+    if cur == Dim::Numeric {
+        None
+    } else {
+        Some(cur)
+    }
+}
+
+/// Unit-dimension checking over the configured cost-model files.
+/// Reports binary `+`/`-` (and their compound assignments), `<`/`>`/
+/// `==` comparisons mixing two *known* dims, and simple assignments
+/// that put a provably-S expression into a `_us` lvalue (or any other
+/// cross-dim pair) without going through `* 1e6` or the sanctioned
+/// converter. Anything the little algebra cannot prove is silent.
+pub fn unit_dim(models: &[FileModel], cfg: &Config, out: &mut Vec<Diagnostic>) {
+    let Some(units) = &cfg.units else { return };
+    for m in models {
+        if !units.files.iter().any(|seg| m.path.contains(seg.as_str())) {
+            continue;
+        }
+        let toks = &m.toks;
+        for f in &m.fns {
+            let (s, e) = (f.body.start, f.body.end);
+            let mut i = s;
+            while i < e {
+                let t = &toks[i];
+                if t.is_punct('+') || t.is_punct('-') {
+                    if i + 1 < e && toks[i + 1].is_punct('>') {
+                        i += 2; // `->`
+                        continue;
+                    }
+                    if i + 1 < e && toks[i + 1].is_punct('=') {
+                        // compound assign: lhs op= rhs
+                        let l = term_before(toks, i, s);
+                        let r = term_after(toks, i + 1, e);
+                        if let (Some(l), Some(r)) = (l, r) {
+                            if l.is_unit() && r.is_unit() && l != r {
+                                diag(
+                                    out,
+                                    PASS_UNIT,
+                                    &m.path,
+                                    t.line,
+                                    format!(
+                                        "`{}`: `{}=` mixes {} and {}",
+                                        f.name,
+                                        t.text,
+                                        l.name(),
+                                        r.name()
+                                    ),
+                                );
+                            }
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    let l = term_before(toks, i, s);
+                    let r = term_after(toks, i, e);
+                    if let (Some(l), Some(r)) = (l, r) {
+                        if l.is_unit() && r.is_unit() && l != r {
+                            diag(
+                                out,
+                                PASS_UNIT,
+                                &m.path,
+                                t.line,
+                                format!(
+                                    "`{}`: `{}` mixes {} and {}",
+                                    f.name,
+                                    t.text,
+                                    l.name(),
+                                    r.name()
+                                ),
+                            );
+                        }
+                    }
+                } else if t.is_punct('<') || t.is_punct('>') {
+                    // generics produce undimensioned sides and stay silent
+                    let r = if i + 1 < e && toks[i + 1].is_punct('=') {
+                        term_after(toks, i + 1, e) // <= / >=
+                    } else {
+                        term_after(toks, i, e)
+                    };
+                    let l = term_before(toks, i, s);
+                    if let (Some(l), Some(r)) = (l, r) {
+                        if l.is_unit() && r.is_unit() && l != r {
+                            diag(
+                                out,
+                                PASS_UNIT,
+                                &m.path,
+                                t.line,
+                                format!(
+                                    "`{}`: comparison mixes {} and {}",
+                                    f.name,
+                                    l.name(),
+                                    r.name()
+                                ),
+                            );
+                        }
+                    }
+                } else if t.is_punct('=') {
+                    let prev_is_op_tail = i > s
+                        && toks[i - 1].kind == TokKind::Punct
+                        && matches!(
+                            toks[i - 1].text.as_str(),
+                            "=" | "!" | "<" | ">" | "+" | "-" | "*" | "/"
+                        );
+                    if prev_is_op_tail {
+                        i += 1; // second char of a 2-char operator
+                        continue;
+                    }
+                    if i + 1 < e && toks[i + 1].is_punct('=') {
+                        // `==` comparison
+                        let l = term_before(toks, i, s);
+                        let r = term_after(toks, i + 1, e);
+                        if let (Some(l), Some(r)) = (l, r) {
+                            if l.is_unit() && r.is_unit() && l != r {
+                                diag(
+                                    out,
+                                    PASS_UNIT,
+                                    &m.path,
+                                    t.line,
+                                    format!(
+                                        "`{}`: `==` mixes {} and {}",
+                                        f.name,
+                                        l.name(),
+                                        r.name()
+                                    ),
+                                );
+                            }
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    if i + 1 < e && toks[i + 1].is_punct('>') {
+                        i += 2; // `=>` match arm
+                        continue;
+                    }
+                    // simple assignment: lhs = rhs ;
+                    if let Some(l) = term_before(toks, i, s) {
+                        if l.is_unit() {
+                            if let Some(r) = rhs_dim(toks, i + 1, e, &units.converter) {
+                                if r.is_unit() && r != l {
+                                    diag(
+                                        out,
+                                        PASS_UNIT,
+                                        &m.path,
+                                        t.line,
+                                        format!(
+                                            "`{}`: assigns {} expression to {} lvalue \
+                                             without conversion",
+                                            f.name,
+                                            r.name(),
+                                            l.name()
+                                        ),
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+                i += 1;
             }
         }
     }

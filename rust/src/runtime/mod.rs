@@ -23,7 +23,7 @@ pub use weights::WeightStore;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -56,6 +56,14 @@ pub enum MixedInput<'a> {
 enum BufferSlot {
     Owned(xla::PjRtBuffer),
     Shared(std::sync::Arc<xla::PjRtBuffer>),
+}
+
+/// Poison-tolerant lock for the runtime's caches: the executable,
+/// weight-buffer, and stats maps stay internally consistent even if a
+/// panic unwinds through a holder, so recover the guard instead of
+/// propagating the poison as a second panic on the serving path.
+fn lock_cache<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 impl Runtime {
@@ -91,7 +99,7 @@ impl Runtime {
 
     /// Compile (or fetch the cached) executable for an entry point.
     pub fn executable(&self, entry: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.executables.lock().unwrap().get(entry) {
+        if let Some(e) = lock_cache(&self.executables).get(entry) {
             return Ok(e.clone());
         }
         let info = self
@@ -107,10 +115,7 @@ impl Runtime {
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {entry}: {e:?}"))?;
         let exe = std::sync::Arc::new(exe);
-        self.executables
-            .lock()
-            .unwrap()
-            .insert(entry.to_string(), exe.clone());
+        lock_cache(&self.executables).insert(entry.to_string(), exe.clone());
         Ok(exe)
     }
 
@@ -147,7 +152,7 @@ impl Runtime {
         let res: Result<Vec<HostTensor>> =
             parts.into_iter().map(HostTensor::from_literal).collect();
         {
-            let mut stats = self.exec_stats.lock().unwrap();
+            let mut stats = lock_cache(&self.exec_stats);
             let e = stats.entry(entry.to_string()).or_insert((0, 0.0));
             e.0 += 1;
             e.1 += t0.elapsed().as_secs_f64();
@@ -170,14 +175,11 @@ impl Runtime {
     /// Device-resident buffer for a named weight (uploaded once, §Perf:
     /// avoids re-staging ~1.3 MB of weights on every decode_attend call).
     pub fn weight_buffer(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtBuffer>> {
-        if let Some(b) = self.weight_buffers.lock().unwrap().get(name) {
+        if let Some(b) = lock_cache(&self.weight_buffers).get(name) {
             return Ok(b.clone());
         }
         let buf = std::sync::Arc::new(self.to_buffer(self.weights.get(name))?);
-        self.weight_buffers
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), buf.clone());
+        lock_cache(&self.weight_buffers).insert(name.to_string(), buf.clone());
         Ok(buf)
     }
 
@@ -216,7 +218,7 @@ impl Runtime {
         let res: Result<Vec<HostTensor>> =
             parts.into_iter().map(HostTensor::from_literal).collect();
         {
-            let mut stats = self.exec_stats.lock().unwrap();
+            let mut stats = lock_cache(&self.exec_stats);
             let e = stats.entry(entry.to_string()).or_insert((0, 0.0));
             e.0 += 1;
             e.1 += t0.elapsed().as_secs_f64();
@@ -226,10 +228,10 @@ impl Runtime {
 
     /// Per-entry cumulative (calls, seconds), sorted by total time.
     pub fn exec_stats(&self) -> Vec<(String, u64, f64)> {
-        let stats = self.exec_stats.lock().unwrap();
+        let stats = lock_cache(&self.exec_stats);
         let mut v: Vec<(String, u64, f64)> =
             stats.iter().map(|(k, (c, s))| (k.clone(), *c, *s)).collect();
-        v.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        v.sort_by(|a, b| b.2.total_cmp(&a.2));
         v
     }
 }

@@ -55,6 +55,7 @@ impl HostTensor {
     pub fn as_f32(&self) -> &[f32] {
         match &self.data {
             TensorData::F32(v) => v,
+            // sparselint: allow(panic-path) -- dtype is fixed by the compiled entry-point signature; a mismatch is a build/manifest bug caught by the golden parity tests, not a serving state
             TensorData::I32(_) => panic!("tensor is i32, expected f32"),
         }
     }
@@ -62,6 +63,7 @@ impl HostTensor {
     pub fn as_f32_mut(&mut self) -> &mut [f32] {
         match &mut self.data {
             TensorData::F32(v) => v,
+            // sparselint: allow(panic-path) -- dtype is fixed by the compiled entry-point signature; a mismatch is a build/manifest bug caught by the golden parity tests, not a serving state
             TensorData::I32(_) => panic!("tensor is i32, expected f32"),
         }
     }
@@ -74,6 +76,7 @@ impl HostTensor {
     pub fn into_f32(self) -> Vec<f32> {
         match self.data {
             TensorData::F32(v) => v,
+            // sparselint: allow(panic-path) -- dtype is fixed by the compiled entry-point signature; a mismatch is a build/manifest bug caught by the golden parity tests, not a serving state
             TensorData::I32(_) => panic!("tensor is i32, expected f32"),
         }
     }
@@ -81,6 +84,7 @@ impl HostTensor {
     pub fn as_i32(&self) -> &[i32] {
         match &self.data {
             TensorData::I32(v) => v,
+            // sparselint: allow(panic-path) -- dtype is fixed by the compiled entry-point signature; a mismatch is a build/manifest bug caught by the golden parity tests, not a serving state
             TensorData::F32(_) => panic!("tensor is f32, expected i32"),
         }
     }
@@ -90,6 +94,7 @@ impl HostTensor {
     pub fn into_i32(self) -> Vec<i32> {
         match self.data {
             TensorData::I32(v) => v,
+            // sparselint: allow(panic-path) -- dtype is fixed by the compiled entry-point signature; a mismatch is a build/manifest bug caught by the golden parity tests, not a serving state
             TensorData::F32(_) => panic!("tensor is f32, expected i32"),
         }
     }

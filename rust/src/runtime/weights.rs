@@ -48,6 +48,7 @@ impl WeightStore {
     pub fn get(&self, name: &str) -> &HostTensor {
         self.by_name
             .get(name)
+            // sparselint: allow(panic-path) -- weight names come from the manifest's static entry-point layout, validated when the store loads; a miss is a build bug, not a serving state
             .unwrap_or_else(|| panic!("unknown weight '{name}'"))
     }
 

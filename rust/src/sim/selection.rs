@@ -97,7 +97,7 @@ impl Clone for SelectionModel {
         SEL_CLONES.with(|c| c.set(c.get() + 1));
         debug_assert!(!self.txn_open, "cloning a model with an open undo scope");
         Self {
-            rng: self.rng.clone(),
+            rng: self.rng,
             p_keep: self.p_keep,
             p_hot: self.p_hot,
             p_drift: self.p_drift,
@@ -173,7 +173,8 @@ impl SelectionModel {
     pub fn begin_txn(&mut self) {
         debug_assert!(!self.txn_open, "nested SelectionModel txn");
         self.txn_open = true;
-        self.undo_rng = self.rng.clone();
+        self.undo_rng = self.rng;
+        // sparselint: allow(hot-path-reach) -- empty-vec filler for recycled undo buffers: resize never allocates element storage, and the outer vec grows once then stays
         self.undo_current.resize(self.current.len(), Vec::new());
         for (u, c) in self.undo_current.iter_mut().zip(&self.current) {
             u.clear();
@@ -196,7 +197,7 @@ impl SelectionModel {
             return;
         }
         self.txn_open = false;
-        self.rng = self.undo_rng.clone();
+        self.rng = self.undo_rng;
         for (c, u) in self.current.iter_mut().zip(&mut self.undo_current) {
             std::mem::swap(c, u);
         }

@@ -249,7 +249,7 @@ impl WorkingSetTracker {
             self.txn_pushed += 1;
         }
         while self.history.len() > self.window {
-            let old = self.history.pop_front().expect("len checked");
+            let Some(old) = self.history.pop_front() else { break };
             if self.txn_open {
                 if self.txn_evicted.len() < self.txn_len_before {
                     // a pre-txn step fell out: journal it for rollback

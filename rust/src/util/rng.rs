@@ -4,8 +4,10 @@
 //! simulation workloads, and fully reproducible across runs — every
 //! experiment in EXPERIMENTS.md fixes its seed.
 
-/// PCG32 generator.
-#[derive(Debug, Clone)]
+/// PCG32 generator. `Copy`: two words of state, so undo scopes snapshot
+/// it by value instead of `clone()` (which the hot-path allocation lint
+/// would otherwise have to reason about).
+#[derive(Debug, Clone, Copy)]
 pub struct Rng {
     state: u64,
     inc: u64,

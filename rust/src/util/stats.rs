@@ -86,6 +86,15 @@ impl Series {
     }
 }
 
+/// The one sanctioned seconds→microseconds conversion point. The
+/// `unit-dim` lint pass knows `* 1e6` (and this helper) as the only
+/// legal way to move a `_s` value into a `_us` slot — route every
+/// conversion through here so the scattered-literal drift the pass
+/// exists to catch can't reappear.
+pub const fn secs_to_us(secs: f64) -> f64 {
+    secs * 1e6
+}
+
 /// Pretty-print seconds adaptively (benches + reports).
 pub fn fmt_duration(secs: f64) -> String {
     if secs >= 1.0 {
@@ -93,7 +102,7 @@ pub fn fmt_duration(secs: f64) -> String {
     } else if secs >= 1e-3 {
         format!("{:.3} ms", secs * 1e3)
     } else if secs >= 1e-6 {
-        format!("{:.3} µs", secs * 1e6)
+        format!("{:.3} µs", secs_to_us(secs))
     } else {
         format!("{:.1} ns", secs * 1e9)
     }

@@ -5,10 +5,16 @@
 //! staged KV rows into their DRAM blocks off the critical path.
 
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Poison-tolerant lock: a job that panicked must not wedge the pool's
+/// bookkeeping (the counter itself is a plain usize, always valid).
+fn lock_pending<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
@@ -30,14 +36,14 @@ impl ThreadPool {
                     .name(format!("d2h-worker-{i}"))
                     .spawn(move || loop {
                         let job = {
-                            let guard = rx.lock().unwrap();
+                            let guard = lock_pending(&rx);
                             guard.recv()
                         };
                         match job {
                             Ok(job) => {
                                 job();
                                 let (lock, cv) = &*pending;
-                                let mut n = lock.lock().unwrap();
+                                let mut n = lock_pending(lock);
                                 *n -= 1;
                                 if *n == 0 {
                                     cv.notify_all();
@@ -46,6 +52,7 @@ impl ThreadPool {
                             Err(_) => break, // channel closed: shut down
                         }
                     })
+                    // sparselint: allow(panic-path) -- pool construction happens at engine startup, before any request is admitted; failing to spawn OS threads is fatal by design
                     .expect("spawn worker")
             })
             .collect();
@@ -56,21 +63,23 @@ impl ThreadPool {
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
         {
             let (lock, _) = &*self.pending;
-            *lock.lock().unwrap() += 1;
+            *lock_pending(lock) += 1;
         }
         self.tx
             .as_ref()
+            // sparselint: allow(panic-path) -- tx is only None after Drop::drop; submitting to a dropped pool is a use-after-shutdown bug, not a serving state
             .expect("pool shut down")
             .send(Box::new(f))
+            // sparselint: allow(panic-path) -- workers only exit when the channel closes on Drop, so a send failure means the same use-after-shutdown bug
             .expect("workers alive");
     }
 
     /// Block until every submitted job has finished.
     pub fn wait_idle(&self) {
         let (lock, cv) = &*self.pending;
-        let mut n = lock.lock().unwrap();
+        let mut n = lock_pending(lock);
         while *n > 0 {
-            n = cv.wait(n).unwrap();
+            n = cv.wait(n).unwrap_or_else(PoisonError::into_inner);
         }
     }
 

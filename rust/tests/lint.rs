@@ -85,7 +85,7 @@ fn safe(s: &mut S) -> R {
 }
 
 #[test]
-fn txn_unfinished_begin_fires_and_split_phase_file_is_clean() {
+fn txn_unsettled_begin_fires_even_next_to_commit_and_rollback_fns() {
     let src = "\
 fn open_only(s: &mut S) {
     s.begin_txn();
@@ -93,10 +93,12 @@ fn open_only(s: &mut S) {
 ";
     let d = run(TXN_CFG, &[file("src/engine/x.rs", src)]);
     assert_eq!(hits(&d, "src/engine/x.rs"), vec![("txn-pairing".into(), 2)], "{d:?}");
-    assert!(d[0].msg.contains("unfinished transaction"), "{}", d[0].msg);
+    assert!(d[0].msg.contains("no caller chain settles"), "{}", d[0].msg);
 
-    // Split-phase session object: begin in one method, commit and
-    // rollback paths defined elsewhere in the same file.
+    // v1 had a same-file escape hatch: commit and rollback existing
+    // ANYWHERE in the file excused an unsettled begin, even with no
+    // caller connecting them. v2 demands an actual call-graph path,
+    // so this file now (correctly) fires: nothing calls open_only.
     let split = "\
 fn open_only(s: &mut S) {
     s.begin_txn();
@@ -109,7 +111,51 @@ fn finish_err(s: &mut S) {
 }
 ";
     let d = run(TXN_CFG, &[file("src/engine/x.rs", split)]);
+    assert_eq!(hits(&d, "src/engine/x.rs"), vec![("txn-pairing".into(), 2)], "{d:?}");
+}
+
+#[test]
+fn txn_split_phase_settled_through_cross_file_caller_is_clean() {
+    // The split-phase shape the call graph exists to resolve: the
+    // begin lives in one file, and a driver in ANOTHER file calls it
+    // and settles both ways. v1's same-file heuristic could not see
+    // this; v2 accepts it because the driver is an ancestor of
+    // `open_only` that reaches both commit_txn and rollback_txn.
+    let opener = "\
+pub fn open_only(s: &mut S) {
+    s.begin_txn();
+}
+";
+    let driver = "\
+fn settle(s: &mut S, ok: bool) {
+    open_only(s);
+    if ok {
+        s.commit_txn();
+    } else {
+        s.rollback_txn();
+    }
+}
+";
+    let d = run(
+        TXN_CFG,
+        &[file("src/engine/open.rs", opener), file("src/engine/settle.rs", driver)],
+    );
     assert!(d.is_empty(), "{d:?}");
+
+    // A caller that only ever commits is NOT a settlement: the
+    // rollback half of the obligation is unreachable.
+    let commit_only = "\
+fn settle(s: &mut S) {
+    open_only(s);
+    s.commit_txn();
+}
+";
+    let d = run(
+        TXN_CFG,
+        &[file("src/engine/open.rs", opener), file("src/engine/settle.rs", commit_only)],
+    );
+    assert_eq!(hits(&d, "src/engine/open.rs"), vec![("txn-pairing".into(), 2)], "{d:?}");
+    assert!(d[0].msg.contains("rollback_txn"), "{}", d[0].msg);
 }
 
 #[test]
@@ -186,6 +232,40 @@ fn pin_drain_side_must_define_its_api() {
     let d = run(PINS_CFG, &[file("src/mem/other.rs", "fn f() {}\n")]);
     assert_eq!(hits(&d, "src/mem/drain.rs"), vec![("pin-conservation".into(), 1)], "{d:?}");
     assert!(d[0].msg.contains("not found"), "{}", d[0].msg);
+}
+
+#[test]
+fn pin_delegation_through_cross_file_helper_is_conserving() {
+    // v2: acquiring here and settling in a callee — even one defined
+    // in another file — conserves. A helper that merely logs does not.
+    let stage = "\
+fn ok_cross(c: &mut C, k: K) {
+    c.pin(k);
+    hand_off(c, k);
+}
+fn still_leaks(c: &mut C, k: K) {
+    c.pin(k);
+    log_it(k);
+}
+";
+    let helper = "\
+pub fn hand_off(c: &mut C, k: K) {
+    mark_staged(k);
+}
+pub fn log_it(k: K) {
+    let _ = k;
+}
+";
+    let d = run(
+        PINS_CFG,
+        &[
+            file("src/mem/stage.rs", stage),
+            file("src/mem/helper.rs", helper),
+            file("src/mem/drain.rs", DRAIN_OK),
+        ],
+    );
+    assert_eq!(hits(&d, "src/mem/stage.rs"), vec![("pin-conservation".into(), 6)], "{d:?}");
+    assert!(d[0].msg.contains("still_leaks"), "{}", d[0].msg);
 }
 
 // ---------------------------------------------------------------------------
@@ -309,6 +389,330 @@ fn hot_fn(xs: &[u32]) {
 ";
     let d = run(HOT_CFG, &[file("src/engine/x.rs", src)]);
     assert_eq!(hits(&d, "src/engine/x.rs"), vec![("hot-path".into(), 5)], "{d:?}");
+}
+
+// ---------------------------------------------------------------------------
+// panic-path (interprocedural)
+// ---------------------------------------------------------------------------
+
+const PANIC_PATH_CFG: &str = "[panic_path]\nmodules = [\"engine\"]\n";
+
+#[test]
+fn panic_path_fires_at_the_serving_frontier_call_site() {
+    // The panic lives in util/ (out of scope for the direct no-panic
+    // pass); the serving fn that *reaches* it is flagged at its call
+    // site, with the chain down to the marker in the message.
+    let engine = "\
+fn step_once(v: &[f64]) -> f64 {
+    helper_mean(v)
+}
+";
+    let util = "\
+pub fn helper_mean(v: &[f64]) -> f64 {
+    *v.first().unwrap()
+}
+";
+    let d = run(
+        PANIC_PATH_CFG,
+        &[file("src/engine/core.rs", engine), file("src/util/stats2.rs", util)],
+    );
+    assert_eq!(hits(&d, "src/engine/core.rs"), vec![("panic-path".into(), 2)], "{d:?}");
+    assert!(d[0].msg.contains("helper_mean"), "{}", d[0].msg);
+    assert!(d[0].msg.contains("can panic"), "{}", d[0].msg);
+    assert!(d[0].msg.contains(".unwrap()"), "{}", d[0].msg);
+
+    // Repaired: the callee handles the miss; nothing propagates.
+    let fixed = "\
+pub fn helper_mean(v: &[f64]) -> f64 {
+    v.first().copied().unwrap_or(0.0)
+}
+";
+    let d = run(
+        PANIC_PATH_CFG,
+        &[file("src/engine/core.rs", engine), file("src/util/stats2.rs", fixed)],
+    );
+    assert!(d.is_empty(), "{d:?}");
+
+    // Suppressed at the SOURCE: a justified allow on the marker line
+    // stops propagation for every transitive caller at once.
+    let allowed = "\
+pub fn helper_mean(v: &[f64]) -> f64 {
+    *v.first().unwrap() // sparselint: allow(panic-path) -- callers check non-empty
+}
+";
+    let d = run(
+        PANIC_PATH_CFG,
+        &[file("src/engine/core.rs", engine), file("src/util/stats2.rs", allowed)],
+    );
+    assert!(d.is_empty(), "{d:?}");
+}
+
+#[test]
+fn panic_path_traces_multi_hop_chains() {
+    let engine = "\
+fn top(x: u32) -> u32 {
+    mid(x)
+}
+";
+    let util = "\
+pub fn mid(x: u32) -> u32 {
+    deep(x)
+}
+pub fn deep(x: u32) -> u32 {
+    if x == 0 { panic!() }
+    x
+}
+";
+    let d = run(
+        PANIC_PATH_CFG,
+        &[file("src/engine/core.rs", engine), file("src/util/helpers.rs", util)],
+    );
+    assert_eq!(hits(&d, "src/engine/core.rs"), vec![("panic-path".into(), 2)], "{d:?}");
+    assert!(d[0].msg.contains("mid"), "{}", d[0].msg);
+    assert!(d[0].msg.contains("deep"), "{}", d[0].msg);
+    assert!(d[0].msg.contains("src/util/helpers.rs:5"), "{}", d[0].msg);
+}
+
+// ---------------------------------------------------------------------------
+// hot-path-reach (interprocedural)
+// ---------------------------------------------------------------------------
+
+const HOT_REACH_CFG: &str = "\
+[hot]
+banned_methods = [\"clone\", \"to_vec\"]
+banned_ctors = [\"Vec\", \"vec\"]
+
+[hot_reach]
+enabled = true
+";
+
+#[test]
+fn hot_reach_closes_the_helper_loophole() {
+    // The clone hides inside a method; the hot loop only sees a tidy
+    // `snapshot()` call. The call graph types `s` by its parameter
+    // annotation and follows the edge to the impl.
+    let src = "\
+struct S {
+    xs: Vec<u32>,
+}
+impl S {
+    fn snapshot(&self) -> Vec<u32> {
+        self.xs.clone()
+    }
+}
+// sparselint: hot
+fn hot_loop(s: &S) {
+    let a = s.snapshot();
+}
+";
+    let d = run(HOT_REACH_CFG, &[file("src/engine/x.rs", src)]);
+    assert_eq!(hits(&d, "src/engine/x.rs"), vec![("hot-path-reach".into(), 11)], "{d:?}");
+    assert!(d[0].msg.contains("hot_loop"), "{}", d[0].msg);
+    assert!(d[0].msg.contains("can allocate"), "{}", d[0].msg);
+    assert!(d[0].msg.contains(".clone()"), "{}", d[0].msg);
+
+    // A justified allow at the allocation site clears every hot
+    // caller — the helper's amortization argument is made once.
+    let allowed = "\
+struct S {
+    xs: Vec<u32>,
+}
+impl S {
+    fn snapshot(&self) -> Vec<u32> {
+        // sparselint: allow(hot-path-reach) -- snapshot is once-per-epoch, not per-step
+        self.xs.clone()
+    }
+}
+// sparselint: hot
+fn hot_loop(s: &S) {
+    let a = s.snapshot();
+}
+";
+    let d = run(HOT_REACH_CFG, &[file("src/engine/x.rs", allowed)]);
+    assert!(d.is_empty(), "{d:?}");
+}
+
+// ---------------------------------------------------------------------------
+// step-typestate
+// ---------------------------------------------------------------------------
+
+const STEP_CFG: &str = "\
+[step_session]
+begin = \"begin_step\"
+stage = \"stage\"
+prefill = \"prefill_segment\"
+decode = \"decode_layer\"
+commit = \"commit\"
+rollback = \"rollback\"
+";
+
+#[test]
+fn step_typestate_accepts_the_canonical_order() {
+    let src = "\
+fn good(b: &mut B) {
+    b.begin_step();
+    b.stage();
+    b.prefill_segment();
+    b.decode_layer();
+    b.decode_layer();
+    if ok() {
+        b.commit();
+    } else {
+        b.rollback();
+    }
+}
+";
+    let d = run(STEP_CFG, &[file("src/engine/x.rs", src)]);
+    assert!(d.is_empty(), "{d:?}");
+}
+
+#[test]
+fn step_typestate_rejects_phase_calls_after_settle() {
+    let src = "\
+fn bad(b: &mut B) {
+    b.begin_step();
+    b.stage();
+    b.decode_layer();
+    b.commit();
+    b.decode_layer();
+}
+";
+    let d = run(STEP_CFG, &[file("src/engine/x.rs", src)]);
+    assert_eq!(hits(&d, "src/engine/x.rs"), vec![("step-typestate".into(), 6)], "{d:?}");
+    assert!(d[0].msg.contains("outside an open session"), "{}", d[0].msg);
+}
+
+#[test]
+fn step_typestate_rejects_double_stage_and_unsettled_sessions() {
+    let double = "\
+fn twice(b: &mut B) {
+    b.begin_step();
+    b.stage();
+    b.stage();
+    b.commit();
+}
+";
+    let d = run(STEP_CFG, &[file("src/engine/x.rs", double)]);
+    assert_eq!(hits(&d, "src/engine/x.rs"), vec![("step-typestate".into(), 4)], "{d:?}");
+    assert!(d[0].msg.contains("twice in one session"), "{}", d[0].msg);
+
+    let leaky = "\
+fn leaky(b: &mut B) {
+    b.begin_step();
+    b.stage();
+    b.decode_layer();
+}
+";
+    let d = run(STEP_CFG, &[file("src/engine/x.rs", leaky)]);
+    assert_eq!(hits(&d, "src/engine/x.rs"), vec![("step-typestate".into(), 2)], "{d:?}");
+    assert!(d[0].msg.contains("never committed or rolled back"), "{}", d[0].msg);
+}
+
+#[test]
+fn step_typestate_rejects_prefill_after_decode() {
+    let src = "\
+fn reordered(b: &mut B) {
+    b.begin_step();
+    b.stage();
+    b.decode_layer();
+    b.prefill_segment();
+    b.commit();
+}
+";
+    let d = run(STEP_CFG, &[file("src/engine/x.rs", src)]);
+    assert_eq!(hits(&d, "src/engine/x.rs"), vec![("step-typestate".into(), 5)], "{d:?}");
+    assert!(d[0].msg.contains("prefill precedes decode"), "{}", d[0].msg);
+}
+
+// ---------------------------------------------------------------------------
+// unit-dim
+// ---------------------------------------------------------------------------
+
+const UNIT_CFG: &str = "\
+[units]
+files = [\"src/sim/cost.rs\", \"src/metrics/\"]
+converter = \"secs_to_us\"
+";
+
+#[test]
+fn unit_dim_rejects_seconds_plus_bytes() {
+    let src = "\
+fn bad_add(stall_s: f64, demand_bytes: f64) -> f64 {
+    stall_s + demand_bytes
+}
+";
+    let d = run(UNIT_CFG, &[file("src/sim/cost.rs", src)]);
+    assert_eq!(hits(&d, "src/sim/cost.rs"), vec![("unit-dim".into(), 2)], "{d:?}");
+    assert!(d[0].msg.contains("S") && d[0].msg.contains("BYTES"), "{}", d[0].msg);
+}
+
+#[test]
+fn unit_dim_knows_the_cost_model_algebra() {
+    // bytes / bytes_per_s = s; `* 1e6` and `secs_to_us(..)` are the
+    // sanctioned s -> us conversions; same-dim sums stay legal.
+    let src = "\
+fn ok_conversions(total_bytes: f64, link_bytes_per_s: f64, also_us: f64) -> f64 {
+    let wait_s = total_bytes / link_bytes_per_s;
+    let wait_us = wait_s * 1e6;
+    let conv_us = secs_to_us(wait_s);
+    let sum_us = wait_us + also_us;
+    sum_us + conv_us
+}
+";
+    let d = run(UNIT_CFG, &[file("src/sim/cost.rs", src)]);
+    assert!(d.is_empty(), "{d:?}");
+}
+
+#[test]
+fn unit_dim_rejects_unconverted_assignment_and_mixed_comparisons() {
+    let src = "\
+fn bad_assign(wait_s: f64) -> f64 {
+    let mut out_us = 0.0;
+    out_us = wait_s;
+    out_us
+}
+fn cmp_bad(stall_s: f64, cap_bytes: f64) -> bool {
+    stall_s < cap_bytes
+}
+fn eq_bad(stall_s: f64, cap_bytes: f64) -> bool {
+    stall_s == cap_bytes
+}
+";
+    let d = run(UNIT_CFG, &[file("src/sim/cost.rs", src)]);
+    let got = hits(&d, "src/sim/cost.rs");
+    assert_eq!(
+        got,
+        vec![("unit-dim".into(), 3), ("unit-dim".into(), 7), ("unit-dim".into(), 10)],
+        "{d:?}"
+    );
+    assert!(d[0].msg.contains("assigns S expression to US lvalue"), "{}", d[0].msg);
+    assert!(d[1].msg.contains("comparison mixes"), "{}", d[1].msg);
+    assert!(d[2].msg.contains("`==` mixes"), "{}", d[2].msg);
+}
+
+#[test]
+fn unit_dim_stays_silent_on_generics_and_unknown_terms() {
+    // `<` and `>` in generic position see undimensioned idents; calls
+    // and parenthesized expressions make the rhs unknown — the pass
+    // never claims what it cannot prove.
+    let src = "\
+fn generics_ok(xs: Vec<f64>) -> usize {
+    let m: HashMap<String, Vec<f64>> = HashMap::new();
+    let total_s = compute(xs);
+    m.len() + total_s as usize
+}
+";
+    let d = run(UNIT_CFG, &[file("src/metrics/agg.rs", src)]);
+    assert!(d.is_empty(), "{d:?}");
+
+    // Out of the configured file scope: the same mixing is silent.
+    let bad = "\
+fn bad_add(stall_s: f64, demand_bytes: f64) -> f64 {
+    stall_s + demand_bytes
+}
+";
+    let d = run(UNIT_CFG, &[file("src/engine/x.rs", bad)]);
+    assert!(d.is_empty(), "{d:?}");
 }
 
 // ---------------------------------------------------------------------------
