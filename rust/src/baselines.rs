@@ -25,8 +25,8 @@ pub fn comparison_set(token_budget: usize, chunk: usize, n_layers: usize) -> Vec
 }
 
 /// Fig. 13's incremental ladder, extended with the working-set
-/// prefetcher as its own rung:
-/// vLLM -> +SA -> +Offload -> +FT -> +WC -> +LP -> +PF.
+/// prefetcher and the pipelined step executor as their own rungs:
+/// vLLM -> +SA -> +Offload -> +FT -> +WC -> +LP -> +PF -> +PIPE.
 /// Every rung keeps *pure recency* ranking and conservative admission so
 /// each step isolates exactly one mechanism; the full
 /// `ServingConfig::sparseserve` system additionally enables
@@ -53,6 +53,10 @@ pub fn ablation_ladder(token_budget: usize, chunk: usize, n_layers: usize) -> Ve
         max_prefetch_blocks: full.max_prefetch_blocks,
         ..lp.clone()
     };
+    // +PIPE: the two-stage pipelined executor (iteration N+1's
+    // plan/stage under iteration N's compute) — an engine-structure
+    // rung, not a paper mechanism, so it rides on top of the full stack
+    let pipe = ServingConfig { pipeline_depth: 2, ..pf.clone() };
     vec![
         SystemPreset { name: "vLLM", cfg: base },
         SystemPreset { name: "+SA", cfg: sa },
@@ -61,6 +65,7 @@ pub fn ablation_ladder(token_budget: usize, chunk: usize, n_layers: usize) -> Ve
         SystemPreset { name: "+WC", cfg: wc },
         SystemPreset { name: "+LP", cfg: lp },
         SystemPreset { name: "+PF", cfg: pf },
+        SystemPreset { name: "+PIPE", cfg: pipe },
     ]
 }
 
@@ -97,7 +102,7 @@ mod tests {
     #[test]
     fn ladder_is_incremental() {
         let l = ablation_ladder(2048, 2048, 32);
-        assert_eq!(l.len(), 7);
+        assert_eq!(l.len(), 8);
         assert!(!l[0].cfg.sparse_attention);
         assert!(l[1].cfg.sparse_attention && !l[1].cfg.offload);
         assert!(l[2].cfg.offload && l[2].cfg.transfer == TransferKind::Memcpy);
@@ -114,6 +119,11 @@ mod tests {
         assert_eq!(l[6].cfg.max_inject_tokens, ss.max_inject_tokens);
         assert_eq!(l[6].cfg.max_prefetch_blocks, ss.max_prefetch_blocks);
         assert!(ss.prefetch_freq_ranking, "full system blends frequency");
+        // +PIPE differs from +PF only in the executor's pipeline depth
+        assert_eq!(l[6].cfg.pipeline_depth, 1);
+        assert_eq!(l[7].cfg.pipeline_depth, 2, "+PIPE enables the pipelined executor");
+        assert!(l[7].cfg.prefetch);
+        assert_eq!(l[7].cfg.prefill_mode, l[6].cfg.prefill_mode);
     }
 
     #[test]

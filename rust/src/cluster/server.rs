@@ -414,6 +414,34 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_engines_serve_the_cluster_and_hide_plan_time() {
+        // depth-2 engines under the cluster driver: same completions as
+        // the synchronous cluster, with the overlap counters earning it
+        let trace = generate(&WorkloadSpec::paper_lwm(0.1, 7), 8, 0);
+        let sync = cluster_of(2).run_trace(trace.clone(), 1e7).unwrap();
+        let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
+        cfg.pipeline_depth = 2;
+        let spec = ModelSpec::lwm_7b();
+        let hw = HardwareSpec::a100_40gb();
+        let engines = (0..2).map(|_| roomy_engine(&cfg, &spec, &hw)).collect();
+        let cost = CostModel::new(spec, hw);
+        let piped = ClusterServer::new(engines, cost, ClusterConfig::default())
+            .run_trace(trace, 1e7)
+            .unwrap();
+        assert_eq!(piped.requests_finished(), sync.requests_finished());
+        assert!(piped.rejected.is_empty());
+        let hidden: f64 =
+            piped.engines.iter().map(|r| r.metrics.plan_stage_hidden_s).sum();
+        let primed: usize =
+            piped.engines.iter().map(|r| r.metrics.pipeline_spec_used).sum();
+        assert!(primed > 0, "cluster decode must prime the pipeline");
+        assert!(hidden > 0.0, "pipelined engines must hide plan/stage time");
+        let sync_hidden: f64 =
+            sync.engines.iter().map(|r| r.metrics.plan_stage_hidden_s).sum();
+        assert_eq!(sync_hidden, 0.0, "depth 1 never reports overlap");
+    }
+
+    #[test]
     fn oversized_request_is_rejected_with_a_typed_error() {
         let cfg = ServingConfig::sparseserve(2048, 2048, 32);
         let spec = ModelSpec::lwm_7b();

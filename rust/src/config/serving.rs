@@ -121,6 +121,19 @@ pub struct ServingConfig {
     pub slo_tbt_factor: f64,
     /// Mean scheduling (queueing) delay bound, seconds.
     pub slo_queue_delay_s: f64,
+
+    // ---- execution pipelining ----
+    /// Step-executor pipeline depth. 1 = today's fully synchronous
+    /// order (plan -> stage -> per-layer phases -> commit on one
+    /// thread). 2 = two-stage pipelined executor: while the backend
+    /// drives iteration N's `StepSession`, the scheduler speculatively
+    /// plans iteration N+1's decode batch and stage hints into
+    /// double-buffered slots, and the cost model charges the pipelined
+    /// bound `iter = max(compute_N, plan_stage_{N+1})` instead of
+    /// serializing plan+stage onto the critical path (the `+PIPE`
+    /// ablation rung rides this knob). Values above 2 behave as 2:
+    /// with one in-flight session there is only one plan to hide.
+    pub pipeline_depth: usize,
 }
 
 impl ServingConfig {
@@ -154,6 +167,9 @@ impl ServingConfig {
             chunk_tokens,
             slo_tbt_factor: 25.0,
             slo_queue_delay_s: 2.0,
+            // synchronous by default: the pipelined executor is its own
+            // ablation rung (+PIPE), not part of the paper's system
+            pipeline_depth: 1,
         }
     }
 
@@ -184,6 +200,7 @@ impl ServingConfig {
             max_inject_tokens: chunk_tokens,
             slo_tbt_factor: 25.0,
             slo_queue_delay_s: 2.0,
+            pipeline_depth: 1,
         }
     }
 
@@ -253,6 +270,9 @@ mod tests {
         for cfg in [&v, &s, &so, &ss, &np] {
             assert_eq!(cfg.sim_selection_bands, 4);
             assert_eq!(cfg.sim_layer_skew, 0.0);
+            // every preset is synchronous: the pipelined executor is a
+            // separate ablation rung (+PIPE), never an implicit default
+            assert_eq!(cfg.pipeline_depth, 1);
         }
     }
 

@@ -21,7 +21,9 @@ use crate::scheduler::{
     Batch, Phase, Priority, Request, RequestParams, RequestTiming, Scheduler,
 };
 
-use super::backend::{drive_step, Backend, MemStats, MigrationPayload, StageHints};
+use super::backend::{
+    drive_step, drive_step_pipelined, Backend, MemStats, MigrationPayload, StageHints,
+};
 use super::error::ServeError;
 
 /// A request as submitted by a client: prompt + lifecycle parameters.
@@ -195,6 +197,20 @@ pub struct EngineCore {
     /// materializing fresh vectors (zero-clone step pipeline).
     batch: Batch,
     hints: StageHints,
+    /// Double-buffered speculation slots of the pipelined executor
+    /// (`ServingConfig::pipeline_depth >= 2`): iteration N+1's decode
+    /// packing and staging hints, computed under iteration N's compute
+    /// via the read-only `Scheduler::preview_decodes_into`. Stamped with
+    /// the scheduler's plan version at speculation time; consumed at the
+    /// next step only if nothing staled them (version unchanged AND the
+    /// real plan's decode list matches). The real `plan_into` ALWAYS
+    /// runs, so executed batches are identical at every depth — the
+    /// speculation only decides whether the plan/stage share was already
+    /// hidden under the predecessor's compute.
+    spec_batch: Batch,
+    spec_hints: Vec<ReqId>,
+    spec_valid: bool,
+    spec_version: u64,
     /// Drain memory-exhaustion victims into
     /// [`StepOutcome::migratable`] instead of evicting them (cluster
     /// serving; single-engine drivers leave this off and keep the PR 2
@@ -213,6 +229,10 @@ impl EngineCore {
             retain_finished: true,
             batch: Batch::default(),
             hints: StageHints::default(),
+            spec_batch: Batch::default(),
+            spec_hints: Vec::new(),
+            spec_valid: false,
+            spec_version: 0,
             capture_migrations: false,
             next_id: 1,
         }
@@ -389,18 +409,71 @@ impl EngineCore {
         if self.batch.is_empty() {
             return Ok(out);
         }
-        // cross-iteration staging: the session stages this batch's
-        // working sets first, then (with leftover budget, under this
-        // batch's compute) the decodes predicted for the NEXT iteration
-        self.sched.stage_hints_into(&self.batch, &mut self.hints.next_decodes);
+
+        // ---- pipelined executor: consume the speculative plan ----
+        // The real plan above ALWAYS ran, so the executed batch is the
+        // synchronous one at any depth. The speculation taken under the
+        // PREVIOUS iteration's compute decides only whether this
+        // iteration's plan/stage share was already paid there: it is
+        // trusted iff nothing staled it — the scheduler's plan version
+        // is unchanged AND its decode packing equals the real plan's.
+        let depth = self.sched.cfg.pipeline_depth;
+        let primed = depth > 1
+            && self.spec_valid
+            && self.spec_version == self.sched.plan_version()
+            && self.spec_batch.decodes == self.batch.decodes;
+        if primed {
+            // reuse the hints precomputed with the speculation: with an
+            // unchanged version and an identical batch they are provably
+            // equal to a fresh `stage_hints_into`
+            std::mem::swap(&mut self.hints.next_decodes, &mut self.spec_hints);
+            self.metrics.pipeline_spec_used += 1;
+        } else {
+            // cross-iteration staging: the session stages this batch's
+            // working sets first, then (with leftover budget, under this
+            // batch's compute) the decodes predicted to run NEXT
+            self.sched.stage_hints_into(&self.batch, &mut self.hints.next_decodes);
+            if depth > 1 && self.spec_valid {
+                // a speculative plan existed but went stale (eviction,
+                // finish, graduation, migration): re-planned, never
+                // executed
+                self.metrics.pipeline_replans += 1;
+            }
+        }
+        self.hints.pipelined = primed;
+        self.spec_valid = false;
+
+        // ---- speculate iteration N+1 under this one's compute ----
+        // Read-only preview of the next plan's decode packing plus its
+        // staging hints, stamped with the current plan version. On the
+        // modeled clock this work overlaps the batch driven below; the
+        // cost model prices the overlap at consume time (`primed`).
+        if depth > 1 {
+            let backend = &mut self.backend;
+            let mut ws = |id| backend.decode_ws_bytes(id);
+            self.sched.preview_decodes_into(&mut ws, &mut self.spec_batch.decodes);
+            self.spec_batch.prefill = None;
+            self.sched.stage_hints_into(&self.spec_batch, &mut self.spec_hints);
+            self.spec_version = self.sched.plan_version();
+            self.spec_valid = true;
+        }
 
         let bo = loop {
-            let res = drive_step(
-                self.backend.as_mut(),
-                &self.batch,
-                &self.sched.requests,
-                &self.hints,
-            );
+            let res = if depth > 1 {
+                drive_step_pipelined(
+                    self.backend.as_mut(),
+                    &self.batch,
+                    &self.sched.requests,
+                    &self.hints,
+                )
+            } else {
+                drive_step(
+                    self.backend.as_mut(),
+                    &self.batch,
+                    &self.sched.requests,
+                    &self.hints,
+                )
+            };
             match res {
                 Ok(bo) => break bo,
                 Err(e) => {
@@ -461,6 +534,19 @@ impl EngineCore {
                     if self.batch.prefill.as_ref().map_or(false, |w| w.req() == victim) {
                         self.batch.prefill = None;
                     }
+                    // the staging hints were computed BEFORE this attempt
+                    // and may still name the evicted victim: staging a
+                    // released request's working set would repopulate the
+                    // cache with unreachable groups and skew the prefetch
+                    // counters — repair them before the retry, and price
+                    // the retry synchronously (the speculated plan this
+                    // iteration consumed no longer matches what runs)
+                    self.hints.next_decodes.retain(|&id| id != victim);
+                    debug_assert!(
+                        !self.hints.next_decodes.contains(&victim),
+                        "evicted victim must not be re-staged"
+                    );
+                    self.hints.pipelined = false;
                     if self.batch.is_empty() || self.batch.n_requests() == before {
                         // nothing left to retry, or the victim was not in
                         // the batch (cannot shrink further) — give up on
@@ -825,6 +911,89 @@ mod tests {
         assert_eq!(src.metrics().requests_evicted, 1);
         let rec = &src.sched().requests[&id];
         assert!(rec.is_cancelled(), "finalized candidate is recorded as destroyed");
+    }
+
+    /// The `pressured_core` recipe at pipeline depth 2: speculative
+    /// plans form every step and mid-batch evictions must stale them.
+    fn pressured_pipelined_core() -> EngineCore {
+        let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
+        cfg.ws_batch_control = false;
+        cfg.prefetch = false;
+        cfg.pipeline_depth = 2;
+        let spec = ModelSpec::lwm_7b();
+        let mut hw = HardwareSpec::a100_40gb();
+        hw.hbm_kv_bytes = 40 * spec.n_layers * spec.n_kv_heads * spec.block_bytes();
+        let backend = SimBackend::new(cfg.clone(), spec.clone(), hw);
+        let sched = Scheduler::new(cfg, spec, 1 << 40);
+        EngineCore::new(sched, Box::new(backend))
+    }
+
+    #[test]
+    fn mid_batch_eviction_stales_the_speculative_plan() {
+        let mut c = pressured_pipelined_core();
+        for _ in 0..3 {
+            c.submit(SubmitRequest::synthetic(8192).max_new(64), 0.0).unwrap();
+        }
+        let mut now = 0.0;
+        let mut victim = None;
+        for _ in 0..400 {
+            let out = c.step(now).unwrap();
+            now += out.iter_time_s.max(1e-3);
+            if let Some((id, _)) = out.evicted.first() {
+                victim = Some(*id);
+                break;
+            }
+        }
+        let victim = victim.expect("HBM pressure must evict");
+        // the eviction bumped the plan version mid-step, so the next
+        // step must RE-PLAN instead of executing the stale speculation
+        let replans_before = c.metrics().pipeline_replans;
+        let out = c.step(now).unwrap();
+        now += out.iter_time_s.max(1e-3);
+        assert!(
+            c.metrics().pipeline_replans > replans_before,
+            "stale speculation must be re-planned, not executed"
+        );
+        assert!(
+            out.emitted.iter().all(|e| e.req != victim),
+            "no stale victim in the executed batch"
+        );
+        // the engine keeps serving after the repair (the sim backend's
+        // begin_step pin-conservation debug_assert rides every step)
+        for _ in 0..50 {
+            if !c.has_work() {
+                break;
+            }
+            let out = c.step(now).unwrap();
+            assert!(out.emitted.iter().all(|e| e.req != victim));
+            now += out.iter_time_s.max(1e-3);
+        }
+    }
+
+    #[test]
+    fn steady_decode_primes_the_pipeline() {
+        // unpressured depth-2 engine: once decodes reach steady state the
+        // speculation survives validation and the overlap is earned
+        let cfg = {
+            let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
+            cfg.pipeline_depth = 2;
+            cfg
+        };
+        let spec = ModelSpec::lwm_7b();
+        let hw = HardwareSpec::a100_40gb();
+        let backend = SimBackend::new(cfg.clone(), spec.clone(), hw.clone());
+        let sched = Scheduler::new(cfg, spec, hw.hbm_kv_bytes);
+        let mut c = EngineCore::new(sched, Box::new(backend));
+        c.submit(SubmitRequest::synthetic(8192).max_new(32), 0.0).unwrap();
+        let mut now = 0.0;
+        while c.has_work() {
+            let out = c.step(now).unwrap();
+            assert!(out.ran_batch);
+            now += out.iter_time_s;
+        }
+        let m = c.metrics();
+        assert!(m.pipeline_spec_used > 0, "steady decode must prime the pipeline");
+        assert!(m.plan_stage_hidden_s > 0.0, "primed iterations must hide plan/stage time");
     }
 
     #[test]

@@ -33,8 +33,8 @@ mod serve_loop;
 mod sim_backend;
 
 pub use backend::{
-    drive_step, prefill_layer_range, Backend, BatchOutcome, MemStats, MigrationPayload,
-    PhaseEvent, StageHints, StepSession,
+    drive_step, drive_step_pipelined, prefill_layer_range, Backend, BatchOutcome, MemStats,
+    MigrationPayload, PhaseEvent, StageHints, StepSession,
 };
 pub use self::core::{
     EngineCore, MigrationCandidate, RunReport, StepOutcome, SubmitRequest, TokenEvent,

@@ -101,6 +101,12 @@ pub struct PjrtBackend {
     layer_wnames: Vec<Vec<String>>,
     /// Recycled hot-loop buffers (see [`GatherScratch`]).
     scratch: GatherScratch,
+    /// Second scratch slot of the pipelined executor's double buffer:
+    /// `begin_step` rotates the two so the previous iteration's gather
+    /// buffers stay intact while the engine speculatively plans the
+    /// next batch. Both slots are warm after two iterations, keeping
+    /// steady-state decode allocation-free.
+    scratch_spare: GatherScratch,
     /// Wall time burnt by rolled-back sessions, awaiting the next
     /// commit's `abort_time_s` (or `abort_iteration`).
     aborted_time_s: f64,
@@ -127,6 +133,7 @@ impl PjrtBackend {
             reqs: HashMap::new(),
             layer_wnames,
             scratch: GatherScratch::default(),
+            scratch_spare: GatherScratch::default(),
             aborted_time_s: 0.0,
             record_selections: false,
             selection_log: Vec::new(),
@@ -971,6 +978,11 @@ impl Backend for PjrtBackend {
         batch: &'s Batch,
         requests: &'s HashMap<ReqId, Request>,
     ) -> Result<Box<dyn StepSession + 's>> {
+        // Rotate the double-buffered scratch slots (see `scratch_spare`):
+        // the previous session's buffers are left untouched for one more
+        // iteration while this session reuses the other slot's capacity.
+        std::mem::swap(&mut self.scratch, &mut self.scratch_spare);
+
         // Pre-flight: a decode step allocates DRAM blocks only for
         // requests sitting on a block boundary. Fail typed BEFORE any
         // side effect so an eviction never costs the surviving

@@ -126,6 +126,63 @@ mod tests {
         );
     }
 
+    /// Tentpole equivalence: the pipelined executor changes WHEN the
+    /// plan/stage share is charged, never WHAT executes. With every
+    /// arrival at t=0 the batch sequence depends only on iteration
+    /// count, so depth 1 and depth 2 must produce identical tokens,
+    /// finished sets and KV byte-state step by step — while depth 2
+    /// finishes no later on the serving clock.
+    #[test]
+    fn pipeline_depth_changes_timing_not_behavior() {
+        let mk = |depth: usize| {
+            let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
+            cfg.pipeline_depth = depth;
+            let spec = ModelSpec::lwm_7b();
+            let hw = HardwareSpec::a100_40gb();
+            let backend = SimBackend::new(cfg.clone(), spec.clone(), hw.clone());
+            let sched = Scheduler::new(cfg, spec, hw.hbm_kv_bytes);
+            let mut core = EngineCore::new(sched, Box::new(backend));
+            for _ in 0..3 {
+                core.submit(
+                    crate::engine::SubmitRequest::synthetic(12_000).max_new(24),
+                    0.0,
+                )
+                .unwrap();
+            }
+            core
+        };
+        let (mut c1, mut c2) = (mk(1), mk(2));
+        let (mut t1, mut t2) = (0.0_f64, 0.0_f64);
+        for _ in 0..500 {
+            if !c1.has_work() {
+                break;
+            }
+            let o1 = c1.step(t1).unwrap();
+            let o2 = c2.step(t2).unwrap();
+            t1 += o1.iter_time_s;
+            t2 += o2.iter_time_s;
+            // identical execution...
+            let e1: Vec<_> = o1.emitted.iter().map(|e| (e.req, e.token, e.index)).collect();
+            let e2: Vec<_> = o2.emitted.iter().map(|e| (e.req, e.token, e.index)).collect();
+            assert_eq!(e1, e2, "pipelining must not change emitted tokens");
+            let f1: Vec<_> = o1.finished.iter().map(|(id, _)| *id).collect();
+            let f2: Vec<_> = o2.finished.iter().map(|(id, _)| *id).collect();
+            assert_eq!(f1, f2, "pipelining must not change the finished set");
+            let (m1, m2) = (c1.mem_stats(), c2.mem_stats());
+            assert_eq!(m1.hbm_bytes_used, m2.hbm_bytes_used, "identical HBM byte-state");
+            assert_eq!(m1.dram_bytes_used, m2.dram_bytes_used, "identical DRAM byte-state");
+            // ...on a never-slower serving clock
+            assert!(t2 <= t1 + 1e-12, "depth 2 must not be slower: {t2} vs {t1}");
+        }
+        assert!(!c1.has_work() && !c2.has_work(), "both engines drained");
+        assert_eq!(c1.metrics().tokens_generated, c2.metrics().tokens_generated);
+        assert!(
+            c2.metrics().plan_stage_hidden_s > 0.0,
+            "steady decode must hide plan/stage time"
+        );
+        assert!(t2 < t1, "hidden plan/stage time must shorten the makespan");
+    }
+
     #[test]
     fn sparseserve_beats_vllm_at_high_rate() {
         let v = run(ServingConfig::vllm(2048), 0.15, 16);

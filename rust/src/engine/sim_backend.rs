@@ -63,7 +63,7 @@ use crate::config::{HardwareSpec, IterModel, ModelSpec, ServingConfig};
 use crate::memory::staging_policy::{stage_block, StageAdmission, StagingPolicy};
 use crate::memory::{BlockKey, LruCache, MemoryError, PrefetchEngine, ReqId};
 use crate::scheduler::{Batch, PrefillWork, Request};
-use crate::sim::{layered_iter, two_stream_iter, CostModel, SelectionModel};
+use crate::sim::{layered_iter, pipelined_iter, two_stream_iter, CostModel, SelectionModel};
 use crate::sparse::working_set::SelItem;
 use crate::sparse::WorkingSetTracker;
 
@@ -142,6 +142,18 @@ pub struct SimBackend {
     staged_deferred_groups: usize,
     /// Recycled per-step buffers (see [`StepScratch`]).
     scratch: StepScratch,
+    /// Second scratch slot of the pipelined executor's double buffer:
+    /// `begin_step` rotates the two, so the slot a just-settled session
+    /// filled (per-layer telemetry, undo/residency logs) stays intact
+    /// while the engine speculatively plans the next iteration against
+    /// it — the next session never clears buffers a pipelined consumer
+    /// may still read. Both slots are warm after two iterations, so
+    /// steady-state decode still allocates nothing.
+    scratch_spare: StepScratch,
+    /// Backend-only execution window of the last committed iteration
+    /// (`PipelinedTiming::exec_s`): the window the NEXT iteration's
+    /// speculative plan/stage hides under when `StageHints::pipelined`.
+    prev_exec_s: f64,
     /// Compute burnt by rolled-back sessions, awaiting the next commit's
     /// `abort_time_s` (or `abort_iteration`).
     aborted_time_s: f64,
@@ -186,6 +198,8 @@ impl SimBackend {
             staged_groups: 0,
             staged_deferred_groups: 0,
             scratch: StepScratch::default(),
+            scratch_spare: StepScratch::default(),
+            prev_exec_s: 0.0,
             aborted_time_s: 0.0,
             total_blocks_loaded: 0,
         }
@@ -378,6 +392,11 @@ struct SimSession<'s> {
     chunk_band_miss: usize,
     hits_at_start: u64,
     staged: bool,
+    /// This batch's plan + hints were speculatively computed under the
+    /// previous iteration's compute ([`StageHints::pipelined`]): commit
+    /// charges the pipelined iteration bound instead of the serialized
+    /// one.
+    pipelined: bool,
 }
 
 impl<'s> SimSession<'s> {
@@ -489,6 +508,7 @@ impl StepSession for SimSession<'_> {
     fn stage(&mut self, hints: &StageHints) -> usize {
         debug_assert!(!self.staged, "stage() called twice");
         self.staged = true;
+        self.pipelined = hints.pipelined;
         let groups = self
             .be
             .stage_working_sets(&self.batch.decodes, &hints.next_decodes);
@@ -597,7 +617,7 @@ impl StepSession for SimSession<'_> {
     }
 
     fn commit(self: Box<Self>) -> Result<BatchOutcome> {
-        let SimSession { be, tokens, hits_at_start, .. } = *self;
+        let SimSession { be, batch, tokens, hits_at_start, pipelined, .. } = *self;
         // the last band's gather is done; its residency pins drop
         be.release_band_pins();
         // the step is final: close every armed undo scope
@@ -650,6 +670,28 @@ impl StepSession for SimSession<'_> {
         out.hidden_time_s = timing.hidden_s;
         out.coarse_stall_time_s = coarse.stall_s;
         out.iter_time_s = timing.iter_time_s;
+
+        // ------------- pipelined executor accounting -------------
+        // The host-side plan/stage share of this iteration is a slice of
+        // the decode overhead already inside `compute_s`. When the engine
+        // pre-planned this batch under the predecessor's compute
+        // (`pipeline_depth >= 2` and the speculation survived), charge
+        // the pipelined bound: the share hides under the previous
+        // execution window and any overhang is a fill bubble. A
+        // synchronous iteration keeps the serialized bound bit-identical
+        // — but still records its execution window, so a pipelined
+        // successor knows what it can hide under.
+        let plan_stage_s = be.cost.plan_stage_time(batch.decodes.len(), prefetch_blocks);
+        if pipelined {
+            let pt = pipelined_iter(timing.iter_time_s, plan_stage_s, be.prev_exec_s);
+            out.iter_time_s = pt.iter_time_s;
+            out.plan_stage_hidden_s = pt.plan_stage_hidden_s;
+            out.pipeline_bubble_s = pt.pipeline_bubble_s;
+            be.prev_exec_s = pt.exec_s;
+        } else {
+            be.prev_exec_s = (timing.iter_time_s - plan_stage_s).max(0.0);
+        }
+
         out.prefetch_blocks = prefetch_blocks;
         out.prefetch_deferred = deferred_groups * be.group_blocks;
         // rolled-back attempts of this iteration surface here and are
@@ -879,6 +921,10 @@ impl Backend for SimBackend {
         // a previous session always drains its pins at commit/rollback
         debug_assert!(self.scratch.band_pins.is_empty(), "stale band pins");
         self.release_band_pins();
+        // rotate the double-buffered scratch slots (see `scratch_spare`):
+        // the previous session's slot is left untouched for one more
+        // iteration while the slot cleared below hosts this one
+        std::mem::swap(&mut self.scratch, &mut self.scratch_spare);
         // reset the recycled per-step scratch (clear, never free)
         let s = &mut self.scratch;
         s.touched.clear();
@@ -908,6 +954,7 @@ impl Backend for SimBackend {
             chunk_band_miss: 0,
             hits_at_start,
             staged: false,
+            pipelined: false,
         }))
     }
 }
@@ -954,6 +1001,41 @@ mod tests {
         let out = run(&mut b, &batch, &reqs);
         assert_eq!(out.tokens, vec![(1, None)]);
         assert!(out.iter_time_s > 0.0);
+    }
+
+    /// Pipelined pricing: a twin backend pair runs the same decode
+    /// stream, one synchronous and one with `StageHints::pipelined`.
+    /// The pipelined twin's iteration is cheaper by exactly the hidden
+    /// plan/stage share (a deep decode window hides all of it, so the
+    /// bubble is zero), and the synchronous twin never reports overlap.
+    #[test]
+    fn pipelined_hints_charge_the_overlapped_bound() {
+        use crate::engine::backend::drive_step_pipelined;
+        let cfg = ServingConfig::sparseserve(2048, 2048, 32);
+        let mut bs = mk(cfg.clone());
+        let mut bp = mk(cfg);
+        let rs = prefill_all(&mut bs, 1, 16_000);
+        let rp = prefill_all(&mut bp, 1, 16_000);
+        let batch = Batch { decodes: vec![1], prefill: None };
+        // pipeline fill: the first decode pays its plan serially on both
+        // twins and records the window the next plan can hide under
+        let fill_s = run(&mut bs, &batch, &rs);
+        let fill_p = run(&mut bp, &batch, &rp);
+        assert_eq!(fill_p.plan_stage_hidden_s, 0.0);
+        assert_eq!(fill_p.pipeline_bubble_s, 0.0);
+        assert_eq!(fill_s.iter_time_s, fill_p.iter_time_s);
+        let hints = StageHints { pipelined: true, ..Default::default() };
+        for _ in 0..4 {
+            let sync = run(&mut bs, &batch, &rs);
+            let piped = drive_step_pipelined(&mut bp, &batch, &rp, &hints).unwrap();
+            assert_eq!(piped.tokens, sync.tokens);
+            assert!(piped.plan_stage_hidden_s > 0.0, "{piped:?}");
+            assert_eq!(piped.pipeline_bubble_s, 0.0, "{piped:?}");
+            // hidden + iter == the serialized bound the sync twin paid
+            let serialized_s = piped.iter_time_s + piped.plan_stage_hidden_s;
+            assert!((serialized_s - sync.iter_time_s).abs() < 1e-12);
+            assert!(piped.iter_time_s < sync.iter_time_s);
+        }
     }
 
     #[test]
@@ -1347,7 +1429,7 @@ mod tests {
         run(&mut b, &batch, &reqs); // build history
         // cross-iteration hints on an idle batch: stages are deferred...
         let idle = Batch { decodes: vec![], prefill: None };
-        let hints = StageHints { next_decodes: vec![1, 2] };
+        let hints = StageHints { next_decodes: vec![1, 2], ..Default::default() };
         let out = drive_step(&mut b, &idle, &reqs, &hints).unwrap();
         assert!(out.prefetch_blocks > 0, "hints must stage");
         assert_eq!(out.prefetch_deferred, out.prefetch_blocks);
@@ -1369,7 +1451,7 @@ mod tests {
         run(&mut b, &batch, &reqs); // build history
         // stage NEXT iteration's working sets under an idle batch
         let idle = Batch { decodes: vec![], prefill: None };
-        let hints = StageHints { next_decodes: vec![1, 2] };
+        let hints = StageHints { next_decodes: vec![1, 2], ..Default::default() };
         let staged = drive_step(&mut b, &idle, &reqs, &hints).unwrap().prefetch_deferred;
         assert!(staged > 0);
         let hits_before = b.prefetch_stats().hits;
@@ -1389,7 +1471,7 @@ mod tests {
         // stage for a batch, then release mid-flight: stage pins must be
         // released with the requests
         let idle = Batch { decodes: vec![], prefill: None };
-        let hints = StageHints { next_decodes: vec![1, 2] };
+        let hints = StageHints { next_decodes: vec![1, 2], ..Default::default() };
         let staged = drive_step(&mut b, &idle, &reqs, &hints).unwrap().prefetch_blocks;
         assert!(staged > 0);
         b.release(1);
@@ -1684,7 +1766,7 @@ mod tests {
         run(&mut b, &batch, &reqs); // build working-set history
         // stage both requests' working sets under an idle batch
         let idle = Batch { decodes: vec![], prefill: None };
-        let hints = StageHints { next_decodes: vec![1, 2] };
+        let hints = StageHints { next_decodes: vec![1, 2], ..Default::default() };
         let staged = drive_step(&mut b, &idle, &reqs, &hints).unwrap().prefetch_blocks;
         assert!(staged > 0, "pressure must trigger staging");
         let pins_before = b.pinned_entries();

@@ -22,7 +22,15 @@ use crate::util::stats::secs_to_us;
 /// An engine with `n` long-lived decodes in steady state (LWM-7B, full
 /// SparseServe config) and the serving clock it reached.
 fn decode_core(n: usize) -> (EngineCore, f64) {
-    let cfg = ServingConfig::sparseserve(2048, 2048, 32);
+    decode_core_at_depth(n, 1)
+}
+
+/// Same steady-decode engine at an explicit executor pipeline depth
+/// (1 = synchronous plan→stage→compute, 2 = N+1's plan/stage staged
+/// under N's compute).
+fn decode_core_at_depth(n: usize, depth: usize) -> (EngineCore, f64) {
+    let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
+    cfg.pipeline_depth = depth;
     let spec = ModelSpec::lwm_7b();
     let hw = HardwareSpec::a100_40gb();
     let backend = SimBackend::new(cfg.clone(), spec.clone(), hw.clone());
@@ -71,6 +79,32 @@ pub fn full_step_results(budget_s: f64) -> Vec<BenchResult> {
                 now += out.iter_time_s.max(1e-6);
             },
         ));
+    }
+
+    // ---- pipelined steady-state decode: same batch shape as the row
+    // above at pipeline_depth 2, so the pair reads as a direct depth-1
+    // vs depth-2 comparison. Besides p50, the point reports how much
+    // modeled plan/stage time the overlap hid per iteration. ----
+    {
+        let (mut core, mut now) = decode_core_at_depth(8, 2);
+        let hidden_before = core.metrics().plan_stage_hidden_s;
+        let iters_before = core.metrics().iterations;
+        let r = bench(
+            "fullstep/pipelined B=8 (depth-2 plan/stage overlap)",
+            budget_s,
+            5,
+            || {
+                let out = core.step(now).expect("pipelined step");
+                debug_assert!(out.ran_batch);
+                now += out.iter_time_s.max(1e-6);
+            },
+        );
+        let hidden = core.metrics().plan_stage_hidden_s - hidden_before;
+        let iters = (core.metrics().iterations - iters_before).max(1);
+        results.push(
+            r.with_extra("plan_stage_hidden_s", hidden)
+                .with_extra("plan_stage_hidden_us_per_iter", secs_to_us(hidden / iters as f64)),
+        );
     }
 
     // ---- hybrid step: a layer-segmented prefill rides along ----
@@ -153,6 +187,9 @@ pub fn hotpath_doc(results: &[BenchResult]) -> Value {
             p.insert("p50_us".into(), Value::Num(secs_to_us(r.p50_s)));
             p.insert("p99_us".into(), Value::Num(secs_to_us(r.p99_s)));
             p.insert("iters".into(), Value::Num(r.iters as f64));
+            for (key, value) in &r.extra {
+                p.insert(key.clone(), Value::Num(*value));
+            }
             Value::Obj(p)
         })
         .collect();
@@ -169,16 +206,30 @@ mod tests {
 
     #[test]
     fn full_step_bench_smoke() {
-        // tiny budget: exercises all three cases end-to-end (the CI gate
+        // tiny budget: exercises all four cases end-to-end (the CI gate
         // runs the same suite via `bench` and fails the job on panic)
         let results = full_step_results(0.01);
-        assert_eq!(results.len(), 3);
+        assert_eq!(results.len(), 4);
         for r in &results {
             assert!(r.iters >= 10, "{} ran {} iters", r.name, r.iters);
             assert!(r.mean_s >= 0.0 && r.p99_s >= r.p50_s);
         }
+        // the depth-2 row carries its overlap side-metric and actually
+        // hid plan/stage time in steady decode
+        let piped = results
+            .iter()
+            .find(|r| r.name.starts_with("fullstep/pipelined"))
+            .expect("pipelined row");
+        let hidden = piped
+            .extra
+            .iter()
+            .find(|(k, _)| k == "plan_stage_hidden_s")
+            .map(|(_, v)| *v)
+            .expect("hidden side-metric");
+        assert!(hidden > 0.0, "depth-2 steady decode must hide plan/stage time");
         let doc = hotpath_doc(&results).to_string();
         assert!(doc.contains("hotpath_full_step"));
         assert!(doc.contains("rollback"));
+        assert!(doc.contains("plan_stage_hidden_s"));
     }
 }

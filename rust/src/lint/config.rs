@@ -229,9 +229,17 @@ pub struct AllowEntry {
 #[derive(Debug, Clone, Default)]
 pub struct Config {
     pub no_panic_modules: Vec<String>,
+    /// Primary driver name, used in diagnostics ("go through the
+    /// driver"). Always the first entry of `txn_drivers`.
     pub txn_driver: String,
-    /// The phase-entry method only `txn_driver` may call directly
-    /// (`begin_step`): everyone else must go through the driver.
+    /// Every sanctioned step driver (`[txn] drivers = [...]`, plus the
+    /// back-compat singular `driver` key). The synchronous and
+    /// pipelined executors are separate functions held to the same
+    /// contract, so the pass accepts any of them as a begin_step
+    /// caller or a delegation target.
+    pub txn_drivers: Vec<String>,
+    /// The phase-entry method only `txn_drivers` may call directly
+    /// (`begin_step`): everyone else must go through a driver.
     pub txn_step_begin: String,
     pub txn_pairs: Vec<TxnPair>,
     pub pin_scopes: Vec<PinScope>,
@@ -298,6 +306,17 @@ impl Config {
                 "txn" => {
                     cfg.txn_driver = get_str_opt(t, "driver").unwrap_or_default();
                     cfg.txn_step_begin = get_str_opt(t, "step_begin").unwrap_or_default();
+                    cfg.txn_drivers = get_arr(t, "drivers");
+                    // back-compat: the singular `driver` key is the
+                    // primary driver and always a member of the set
+                    if !cfg.txn_driver.is_empty()
+                        && !cfg.txn_drivers.iter().any(|d| d == &cfg.txn_driver)
+                    {
+                        cfg.txn_drivers.insert(0, cfg.txn_driver.clone());
+                    }
+                    if cfg.txn_driver.is_empty() {
+                        cfg.txn_driver = cfg.txn_drivers.first().cloned().unwrap_or_default();
+                    }
                 }
                 "txn.pair" => cfg.txn_pairs.push(TxnPair {
                     begin: get_str(t, "begin")?,
@@ -415,9 +434,35 @@ banned_ctors = ["Vec"]
         let cfg = Config::from_toml(src).unwrap();
         assert_eq!(cfg.no_panic_modules, vec!["engine", "scheduler"]);
         assert_eq!(cfg.txn_driver, "drive_step");
+        // the singular key alone still yields a one-element driver set
+        assert_eq!(cfg.txn_drivers, vec!["drive_step"]);
         assert_eq!(cfg.txn_pairs.len(), 1);
         assert_eq!(cfg.txn_pairs[0].commit, "commit_txn");
         assert_eq!(cfg.hot_banned_methods, vec!["clone", "to_vec"]);
+    }
+
+    #[test]
+    fn txn_drivers_array_parses_and_merges_the_singular_key() {
+        let src = "\
+[txn]
+driver = \"drive_step\"
+drivers = [\"drive_step\", \"drive_step_pipelined\"]
+step_begin = \"begin_step\"
+";
+        let cfg = Config::from_toml(src).unwrap();
+        assert_eq!(cfg.txn_driver, "drive_step");
+        assert_eq!(cfg.txn_drivers, vec!["drive_step", "drive_step_pipelined"]);
+
+        // drivers-only config: the first entry becomes the primary
+        let src = "[txn]\ndrivers = [\"a\", \"b\"]\n";
+        let cfg = Config::from_toml(src).unwrap();
+        assert_eq!(cfg.txn_driver, "a");
+        assert_eq!(cfg.txn_drivers, vec!["a", "b"]);
+
+        // singular key absent from the array: merged in front
+        let src = "[txn]\ndriver = \"c\"\ndrivers = [\"a\"]\n";
+        let cfg = Config::from_toml(src).unwrap();
+        assert_eq!(cfg.txn_drivers, vec!["c", "a"]);
     }
 
     #[test]
@@ -445,6 +490,13 @@ banned_ctors = ["Vec"]
         let cfg = Config::repo_default();
         assert!(!cfg.no_panic_modules.is_empty());
         assert!(!cfg.txn_pairs.is_empty());
+        // both the synchronous and the pipelined executor are sanctioned
+        assert_eq!(cfg.txn_driver, "drive_step");
+        assert!(
+            cfg.txn_drivers.iter().any(|d| d == "drive_step_pipelined"),
+            "pipelined driver missing: {:?}",
+            cfg.txn_drivers
+        );
         assert!(cfg.dead_knob.is_some());
         assert!(cfg.dead_counter.is_some());
         // v2: the interprocedural + typestate + dimension passes are

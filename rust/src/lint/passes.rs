@@ -103,9 +103,9 @@ fn short_path(p: &str) -> &str {
 /// Two rules, applied to ALL code including tests (figures, benches
 /// and tests drive backends directly and must uphold phase order):
 ///
-/// 1. Only the configured driver (`drive_step`) may call the
-///    phase-entry method (`begin_step`) directly — anything else is a
-///    hand-rolled phase order.
+/// 1. Only the configured drivers (`drive_step` and its pipelined
+///    twin) may call the phase-entry method (`begin_step`) directly —
+///    anything else is a hand-rolled phase order.
 /// 2. For each begin/commit/rollback triple: a function calling
 ///    `begin` must either (a) contain `commit` or `rollback` with no
 ///    `?`/`return` escape between the begin and the first
@@ -121,12 +121,19 @@ pub fn txn_pairing(
     cfg: &Config,
     out: &mut Vec<Diagnostic>,
 ) {
+    // The sanctioned driver set: `[txn] drivers` when configured, else
+    // the singular `driver` (configs built through `from_toml` always
+    // populate the set; this fallback covers hand-built `Config`s).
+    let mut drivers: Vec<&str> = cfg.txn_drivers.iter().map(|s| s.as_str()).collect();
+    if drivers.is_empty() && !cfg.txn_driver.is_empty() {
+        drivers.push(cfg.txn_driver.as_str());
+    }
     // Rule 1: direct step_begin callers.
     if !cfg.txn_step_begin.is_empty() {
         for m in models {
             let toks = &m.toks;
             for f in &m.fns {
-                if f.name == cfg.txn_driver {
+                if drivers.iter().any(|d| f.name == *d) {
                     continue;
                 }
                 for i in f.body.clone() {
@@ -139,8 +146,10 @@ pub fn txn_pairing(
                             format!(
                                 "`{}` calls `{}` directly — phase order must go through \
                                  `{}` (hand-rolled begin/stage/layer/commit sequences \
-                                 drift from the canonical driver)",
-                                f.name, cfg.txn_step_begin, cfg.txn_driver
+                                 drift from the canonical drivers)",
+                                f.name,
+                                cfg.txn_step_begin,
+                                drivers.join("`/`")
                             ),
                         );
                     }
@@ -191,8 +200,8 @@ pub fn txn_pairing(
                 }
                 continue;
             }
-            if range_has_call(toks, &f.body, &cfg.txn_driver) {
-                continue; // delegated to the canonical driver
+            if drivers.iter().any(|d| range_has_call(toks, &f.body, d)) {
+                continue; // delegated to a canonical driver
             }
             let mut ancestors = graph.callers_of(ix);
             ancestors.insert(ix);

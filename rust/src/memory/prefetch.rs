@@ -158,10 +158,19 @@ impl PrefetchEngine {
     /// get one more iteration to earn their hit. Returns the wasted keys
     /// so the owner can drop their stage pins (they stay resident as
     /// ordinary LRU entries).
+    ///
+    /// Under the pipelined executor this is the seam where deferred
+    /// stages cross the pipeline boundary: a hint staged for a
+    /// speculatively-planned batch is promoted here even if that
+    /// speculation is later invalidated — the bytes are already resident
+    /// and the re-planned batch consumes them (hit) or retires them as
+    /// wasted one iteration later. Only `cancel_request` (eviction of
+    /// the hinted request) removes them early.
     pub fn end_iteration(&mut self) -> Vec<BlockKey> {
         let wasted: Vec<BlockKey> = self.staged.drain().collect();
         self.stats.wasted += wasted.len() as u64;
         self.staged = std::mem::take(&mut self.staged_next);
+        self.debug_assert_conserved();
         wasted
     }
 
@@ -176,7 +185,23 @@ impl PrefetchEngine {
             self.staged_next.remove(k);
         }
         self.stats.cancelled += dropped.len() as u64;
+        self.debug_assert_conserved();
         dropped
+    }
+
+    /// Counter conservation: every issued block is, at any instant,
+    /// exactly one of still-staged / hit / wasted / cancelled. The
+    /// pipelined executor makes this load-bearing: deferred stages
+    /// issued for a speculatively-planned batch retire one iteration
+    /// AFTER the one that issued them, and a mid-pipeline eviction must
+    /// route them through `cancel_request` — never strand them staged
+    /// forever nor count them both wasted and cancelled.
+    fn debug_assert_conserved(&self) {
+        debug_assert_eq!(
+            self.stats.issued_blocks,
+            self.stats.hits + self.stats.wasted + self.stats.cancelled + self.n_staged() as u64,
+            "prefetch counter conservation violated"
+        );
     }
 }
 
@@ -270,6 +295,27 @@ mod tests {
         assert_eq!(e.stats.cancelled, 2);
         assert_eq!(e.n_staged(), 1);
         assert!(e.is_staged(&key(2, 0)));
+    }
+
+    #[test]
+    fn counters_conserve_across_the_pipeline_boundary() {
+        let mut e = PrefetchEngine::new(0);
+        e.mark_staged(key(1, 0), 10);
+        e.mark_staged_deferred(key(1, 1), 10); // crosses the boundary
+        e.mark_staged_deferred(key(2, 0), 10);
+        e.end_iteration(); // retires key(1,0), promotes both deferred
+        // mid-pipeline eviction: request 1's surviving stage must be
+        // cancelled, not stranded staged or double-counted
+        e.cancel_request(1);
+        assert!(e.note_access(&key(2, 0)));
+        let s = e.stats;
+        assert_eq!(s.wasted, 1);
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.hits, 1);
+        assert_eq!(
+            s.issued_blocks,
+            s.hits + s.wasted + s.cancelled + e.n_staged() as u64
+        );
     }
 
     #[test]

@@ -174,6 +174,22 @@ pub struct RunMetrics {
     /// staging hints issued under the current batch's compute).
     pub prefetch_deferred: u64,
     pub iterations: usize,
+    /// Serving-clock time the pipelined executor hid: plan/stage work
+    /// for iteration N+1 that ran under iteration N's compute instead of
+    /// serializing before N+1 (`BatchOutcome::plan_stage_hidden_s`
+    /// totals; zero at `pipeline_depth` 1).
+    pub plan_stage_hidden_s: f64,
+    /// Plan/stage time the pipeline could NOT hide — overhang past the
+    /// predecessor's execution window, paid as a stall
+    /// (`BatchOutcome::pipeline_bubble_s` totals).
+    pub pipeline_bubble_s: f64,
+    /// Iterations that consumed a still-valid speculative plan
+    /// (pipelined pricing applied).
+    pub pipeline_spec_used: usize,
+    /// Iterations whose speculative plan went stale (eviction, finish,
+    /// prefill graduation, migration) and was re-planned synchronously
+    /// instead of executed.
+    pub pipeline_replans: usize,
     /// Per-layer compute-vs-transfer-wait profile (see [`LayerProfile`]).
     pub layer_profile: LayerProfile,
 }
@@ -225,6 +241,8 @@ impl RunMetrics {
         self.prefetch_wasted += out.prefetch_wasted as u64;
         self.prefetch_deferred += out.prefetch_deferred as u64;
         self.abort_time_total_s += out.abort_time_s;
+        self.plan_stage_hidden_s += out.plan_stage_hidden_s;
+        self.pipeline_bubble_s += out.pipeline_bubble_s;
         self.layer_profile.record_outcome(out);
         if self.iter_time.len() < Self::MAX_SAMPLES {
             self.iter_time.push(out.iter_time_s);
@@ -329,6 +347,17 @@ impl RunMetrics {
         } else {
             String::new()
         };
+        let pipeline = if self.pipeline_spec_used + self.pipeline_replans > 0 {
+            format!(
+                " | pipeline primed={} replans={} hidden {:.4}s bubble {:.4}s",
+                self.pipeline_spec_used,
+                self.pipeline_replans,
+                self.plan_stage_hidden_s,
+                self.pipeline_bubble_s,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "reqs={}{} tokens={} makespan={:.1}s iters={} thpt={:.2} tok/s | \
              TTFT mean={:.3}s p99={:.3}s | TBT mean={:.4}s p99={:.4}s | \
@@ -351,6 +380,7 @@ impl RunMetrics {
             prefetch,
         ) + &abort
             + &overlap
+            + &pipeline
     }
 }
 
@@ -407,6 +437,27 @@ mod tests {
         assert!((m.coarse_stall_time.mean() - 0.05).abs() < 1e-12);
         assert!(m.summary().contains("prefetch staged=8"));
         assert!(m.summary().contains("overlap hidden"));
+    }
+
+    #[test]
+    fn pipeline_counters_recorded_and_summarized() {
+        let mut m = RunMetrics::new();
+        // a synchronous iteration reports no pipeline segment at all
+        m.record_iteration(&BatchOutcome { iter_time_s: 0.1, ..Default::default() });
+        assert!(!m.summary().contains("pipeline"));
+        let out = BatchOutcome {
+            iter_time_s: 0.08,
+            plan_stage_hidden_s: 0.02,
+            pipeline_bubble_s: 0.005,
+            ..Default::default()
+        };
+        m.record_iteration(&out);
+        m.record_iteration(&out);
+        m.pipeline_spec_used = 2;
+        m.pipeline_replans = 1;
+        assert!((m.plan_stage_hidden_s - 0.04).abs() < 1e-12);
+        assert!((m.pipeline_bubble_s - 0.01).abs() < 1e-12);
+        assert!(m.summary().contains("pipeline primed=2 replans=1"));
     }
 
     #[test]

@@ -43,6 +43,13 @@ pub struct Scheduler {
     /// `admission_estimates` input; see [`Self::expected_new_tokens`]).
     completion_ewma: f64,
     completion_obs: u64,
+    /// Monotone counter bumped whenever the active set's composition
+    /// changes outside planning itself (cancel, finish, prefill→decode
+    /// graduation, migration in either direction). The pipelined
+    /// executor stamps its speculative next-iteration plan with this
+    /// version: a speculation taken at version V is stale — and must be
+    /// re-planned, never executed — once the version moves.
+    plan_version: u64,
 }
 
 impl Scheduler {
@@ -62,7 +69,14 @@ impl Scheduler {
             ws_starvation_stops: 0,
             completion_ewma: 0.0,
             completion_obs: 0,
+            plan_version: 0,
         }
+    }
+
+    /// Current plan version (see the field doc): speculative plans
+    /// stamped with an older version are stale.
+    pub fn plan_version(&self) -> u64 {
+        self.plan_version
     }
 
     /// Bound offload-mode admission by DRAM capacity: the scheduler
@@ -110,6 +124,7 @@ impl Scheduler {
         if let Some(n) = self.reserved.remove(&id) {
             self.reserved_total -= n;
         }
+        self.plan_version += 1;
         true
     }
 
@@ -435,9 +450,17 @@ impl Scheduler {
             debug_assert!(false, "token emitted for unknown request {id}");
             return false;
         };
+        let was_prefill = r.phase == Phase::Prefill;
         r.push_token(tok, now);
-        let (finished, plen, n_gen) = (r.phase == Phase::Finished, r.prompt_len, r.n_generated);
+        let (finished, now_decode, plen, n_gen) =
+            (r.phase == Phase::Finished, r.phase == Phase::Decode, r.prompt_len, r.n_generated);
+        if was_prefill && now_decode {
+            // prefill→decode graduation adds a decode candidate the next
+            // plan must see: stale out any speculative plan
+            self.plan_version += 1;
+        }
         if finished {
+            self.plan_version += 1;
             self.active.retain(|&a| a != id);
             // reclaim-on-finish: the whole reservation (estimate plus any
             // decode-time growth) frees the instant the request ends —
@@ -495,6 +518,47 @@ impl Scheduler {
         }));
     }
 
+    /// Read-only preview of the decode half of the NEXT [`Self::plan`]:
+    /// the same Algorithm 1 packing walk (FCFS order, WS batch control,
+    /// starvation guard), predicting the streak a skip WOULD reach
+    /// instead of recording it. The pipelined executor speculates
+    /// iteration N+1's batch under iteration N's compute, and a preview
+    /// that mutated `ws_skip_streak`, `iterations` or the diagnostics
+    /// counters would make speculation observable at `pipeline_depth`
+    /// 1 vs 2. The caller must validate the preview before trusting it
+    /// ([`Self::plan_version`] unchanged + decode-list equality with the
+    /// real plan).
+    // sparselint: hot
+    pub fn preview_decodes_into(&self, ws: WsEstimate, out: &mut Vec<ReqId>) {
+        out.clear();
+        let m_avl = self.m_avl();
+        let mut ws_used = 0usize;
+        let mut tokens = 0usize;
+        for &id in &self.active {
+            if self.requests[&id].phase != Phase::Decode {
+                continue;
+            }
+            if out.len() >= self.cfg.r_max || tokens + 1 > self.cfg.t_max {
+                break;
+            }
+            if self.cfg.ws_batch_control {
+                let w = ws(id);
+                if ws_used + w > m_avl {
+                    // the real plan would bump this request's skip streak
+                    // before testing the starvation guard
+                    let streak = self.requests[&id].ws_skip_streak + 1;
+                    if streak as usize >= self.cfg.ws_starvation_k.max(1) && w <= m_avl {
+                        break;
+                    }
+                    continue;
+                }
+                ws_used += w;
+            }
+            out.push(id);
+            tokens += 1;
+        }
+    }
+
     /// Active decode requests (executor helper).
     pub fn decoding(&self) -> Vec<ReqId> {
         self.active
@@ -548,6 +612,7 @@ impl Scheduler {
         self.active.retain(|&a| a != id);
         let bytes = self.reserved.remove(&id).unwrap_or(0);
         self.reserved_total -= bytes;
+        self.plan_version += 1;
         Some((req, bytes))
     }
 
@@ -575,6 +640,7 @@ impl Scheduler {
         self.reserved_total += reserve_bytes;
         self.active.push(id);
         self.requests.insert(id, req);
+        self.plan_version += 1;
         Ok(())
     }
 }
@@ -839,6 +905,74 @@ mod tests {
         let b = s.plan(4.0, &mut ws);
         assert_eq!(b.decodes, vec![2], "starved request finally progresses");
         assert_eq!(s.requests[&2].ws_skip_streak, 0, "streak resets on batch");
+    }
+
+    #[test]
+    fn preview_decodes_matches_the_next_plan_without_mutating() {
+        let mut cfg = ServingConfig::sparseserve(256, 64, 4);
+        cfg.r_max = 16;
+        cfg.ws_starvation_k = 3;
+        let mut s = sched(cfg, 1 << 20);
+        for id in 1..=3u32 {
+            s.submit(Request::new(id, 16, 100, 0.0));
+        }
+        for _ in 0..3 {
+            let mut ws = |r| no_ws(r);
+            let b = s.plan(0.0, &mut ws);
+            if let Some(w) = b.prefill {
+                let done = w.is_last();
+                s.advance_prefill(&w);
+                if done {
+                    s.emit_token(w.req(), None, 0.1);
+                }
+            }
+        }
+        assert_eq!(s.decoding().len(), 3);
+        let m_avl = s.m_avl();
+        // request 2 never fits with request 1: rejections and (after K
+        // skips) the starvation guard shape the packing
+        let ws_of = move |r: ReqId| if r == 2 { m_avl } else { m_avl / 4 };
+        for now in 0..4u32 {
+            let mut pv = Vec::new();
+            let iters = s.iterations;
+            let rej = s.ws_rejections;
+            let streak = s.requests[&2].ws_skip_streak;
+            let mut ws = ws_of;
+            s.preview_decodes_into(&mut ws, &mut pv);
+            assert_eq!(s.iterations, iters, "preview must not count an iteration");
+            assert_eq!(s.ws_rejections, rej, "preview must not record rejections");
+            assert_eq!(s.requests[&2].ws_skip_streak, streak, "preview must not touch streaks");
+            let mut ws = ws_of;
+            let b = s.plan(now as f64, &mut ws);
+            assert_eq!(pv, b.decodes, "preview must match the real plan");
+        }
+    }
+
+    #[test]
+    fn plan_version_moves_on_active_set_changes() {
+        let mut s = sched(ServingConfig::sparseserve(256, 64, 4), 1 << 20);
+        s.submit(Request::new(1, 16, 3, 0.0));
+        let v0 = s.plan_version();
+        let mut ws = |r| no_ws(r);
+        let b = s.plan(0.0, &mut ws);
+        assert_eq!(s.plan_version(), v0, "planning itself never bumps the version");
+        let w = b.prefill.unwrap();
+        s.advance_prefill(&w);
+        s.emit_token(1, None, 0.1); // prefill -> decode graduation
+        let v1 = s.plan_version();
+        assert!(v1 > v0, "graduation stales speculative plans");
+        s.emit_token(1, None, 0.2); // mid-decode token: plan-neutral
+        assert_eq!(s.plan_version(), v1);
+        s.emit_token(1, None, 0.3); // max_new reached -> finish
+        assert!(s.plan_version() > v1, "finish stales speculative plans");
+        let v2 = s.plan_version();
+        assert!(!s.cancel(99), "unknown id: no-op");
+        assert_eq!(s.plan_version(), v2);
+        s.submit(Request::new(3, 16, 4, 1.0));
+        let mut ws = |r| no_ws(r);
+        s.plan(1.0, &mut ws);
+        assert!(s.cancel(3));
+        assert!(s.plan_version() > v2, "cancel stales speculative plans");
     }
 
     #[test]

@@ -14,5 +14,7 @@
 pub mod cost;
 pub mod selection;
 
-pub use cost::{layered_iter, two_stream_iter, CostModel, IterTiming};
+pub use cost::{
+    layered_iter, pipelined_iter, two_stream_iter, CostModel, IterTiming, PipelinedTiming,
+};
 pub use selection::{selection_clones_this_thread, SelectionModel};

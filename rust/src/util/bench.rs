@@ -14,9 +14,19 @@ pub struct BenchResult {
     pub mean_s: f64,
     pub p50_s: f64,
     pub p99_s: f64,
+    /// Case-specific side metrics (key, value) carried into the JSON
+    /// point alongside the timing percentiles — e.g. the pipelined
+    /// full-step row reports how much plan/stage time it hid.
+    pub extra: Vec<(String, f64)>,
 }
 
 impl BenchResult {
+    /// Attach a side metric to the result (builder-style).
+    pub fn with_extra(mut self, key: &str, value: f64) -> Self {
+        self.extra.push((key.to_string(), value));
+        self
+    }
+
     pub fn line(&self) -> String {
         format!(
             "{:<44} {:>12}/iter  p50 {:>12}  p99 {:>12}  ({} iters)",
@@ -53,6 +63,7 @@ pub fn bench<F: FnMut()>(name: &str, budget_s: f64, warmup: usize, mut f: F) -> 
         mean_s: samples.mean(),
         p50_s: samples.p50(),
         p99_s: samples.p99(),
+        extra: Vec::new(),
     }
 }
 
@@ -69,5 +80,7 @@ mod tests {
         assert!(r.mean_s >= 0.0);
         assert!(r.p99_s >= r.p50_s);
         assert!(r.line().contains("noop-ish"));
+        let r = r.with_extra("hidden_s", 0.25);
+        assert_eq!(r.extra, vec![("hidden_s".to_string(), 0.25)]);
     }
 }

@@ -58,6 +58,59 @@ fn drive_step(b: &mut B) {
     assert!(d[0].msg.contains("drive_step"), "{}", d[0].msg);
 }
 
+const TXN_MULTI_CFG: &str = "\
+[txn]
+driver = \"drive_step\"
+drivers = [\"drive_step\", \"drive_step_pipelined\"]
+step_begin = \"begin_step\"
+
+[[txn.pair]]
+begin = \"begin_txn\"
+commit = \"commit_txn\"
+rollback = \"rollback_txn\"
+";
+
+#[test]
+fn txn_every_configured_driver_may_begin_step() {
+    // Both executors open sessions legitimately; anything else still
+    // fires, and the message names the whole sanctioned set.
+    let src = "\
+fn drive_step(b: &mut B) {
+    b.begin_step();
+}
+fn drive_step_pipelined(b: &mut B) {
+    b.begin_step();
+}
+fn sneaky(b: &mut B) {
+    b.begin_step();
+}
+";
+    let d = run(TXN_MULTI_CFG, &[file("src/engine/x.rs", src)]);
+    assert_eq!(hits(&d, "src/engine/x.rs"), vec![("txn-pairing".into(), 8)], "{d:?}");
+    assert!(d[0].msg.contains("drive_step_pipelined"), "{}", d[0].msg);
+
+    // Under the singular-driver config the pipelined twin is NOT
+    // exempt — the drivers array is what sanctions it.
+    let d = run(TXN_CFG, &[file("src/engine/x.rs", src)]);
+    assert_eq!(
+        hits(&d, "src/engine/x.rs"),
+        vec![("txn-pairing".into(), 5), ("txn-pairing".into(), 8)],
+        "{d:?}"
+    );
+}
+
+#[test]
+fn txn_delegation_to_any_configured_driver_is_clean() {
+    let src = "\
+fn outer(s: &mut S) {
+    s.begin_txn();
+    drive_step_pipelined(s);
+}
+";
+    let d = run(TXN_MULTI_CFG, &[file("src/engine/x.rs", src)]);
+    assert!(d.is_empty(), "{d:?}");
+}
+
 #[test]
 fn txn_escape_between_begin_and_commit_fires() {
     let src = "\
@@ -606,6 +659,50 @@ fn leaky(b: &mut B) {
     let d = run(STEP_CFG, &[file("src/engine/x.rs", leaky)]);
     assert_eq!(hits(&d, "src/engine/x.rs"), vec![("step-typestate".into(), 2)], "{d:?}");
     assert!(d[0].msg.contains("never committed or rolled back"), "{}", d[0].msg);
+}
+
+#[test]
+fn step_typestate_forbids_interleaved_sessions() {
+    // The pipelined executor overlaps the SCHEDULER's plan/stage with
+    // the backend's compute — it never holds two backend sessions at
+    // once. A second `begin_step` while one is open is exactly the
+    // interleaving the exclusive borrow forbids; machine-check it.
+    let overlapped = "\
+fn interleaved(b: &mut B) {
+    b.begin_step();
+    b.stage();
+    b.decode_layer();
+    b.begin_step();
+    b.stage();
+    b.decode_layer();
+    b.commit();
+    b.commit();
+}
+";
+    let d = run(STEP_CFG, &[file("src/engine/x.rs", overlapped)]);
+    let got = hits(&d, "src/engine/x.rs");
+    assert!(
+        got.contains(&("step-typestate".into(), 5)),
+        "second begin while open must fire: {d:?}"
+    );
+    assert!(d.iter().any(|x| x.msg.contains("already open")), "{d:?}");
+
+    // Back-to-back sessions — settle, then reopen — are the sanctioned
+    // pipelined shape and stay clean.
+    let sequential = "\
+fn two_iterations(b: &mut B) {
+    b.begin_step();
+    b.stage();
+    b.decode_layer();
+    b.commit();
+    b.begin_step();
+    b.stage();
+    b.decode_layer();
+    b.rollback();
+}
+";
+    let d = run(STEP_CFG, &[file("src/engine/x.rs", sequential)]);
+    assert!(d.is_empty(), "{d:?}");
 }
 
 #[test]
