@@ -25,8 +25,9 @@ pub fn comparison_set(token_budget: usize, chunk: usize, n_layers: usize) -> Vec
 }
 
 /// Fig. 13's incremental ladder, extended with the working-set
-/// prefetcher and the pipelined step executor as their own rungs:
-/// vLLM -> +SA -> +Offload -> +FT -> +WC -> +LP -> +PF -> +PIPE.
+/// prefetcher, the pipelined step executor and cross-request prefix
+/// sharing as their own rungs:
+/// vLLM -> +SA -> +Offload -> +FT -> +WC -> +LP -> +PF -> +PIPE -> +PFX.
 /// Every rung keeps *pure recency* ranking and conservative admission so
 /// each step isolates exactly one mechanism; the full
 /// `ServingConfig::sparseserve` system additionally enables
@@ -57,6 +58,11 @@ pub fn ablation_ladder(token_budget: usize, chunk: usize, n_layers: usize) -> Ve
     // plan/stage under iteration N's compute) — an engine-structure
     // rung, not a paper mechanism, so it rides on top of the full stack
     let pipe = ServingConfig { pipeline_depth: 2, ..pf.clone() };
+    // +PFX: refcounted cross-request KV prefix sharing (radix index at
+    // admission, copy-on-write tails). Off on every lower rung, so the
+    // whole ladder below this line keeps exclusive per-request block
+    // ownership byte-identically.
+    let pfx = ServingConfig { prefix_sharing: true, ..pipe.clone() };
     vec![
         SystemPreset { name: "vLLM", cfg: base },
         SystemPreset { name: "+SA", cfg: sa },
@@ -66,6 +72,7 @@ pub fn ablation_ladder(token_budget: usize, chunk: usize, n_layers: usize) -> Ve
         SystemPreset { name: "+LP", cfg: lp },
         SystemPreset { name: "+PF", cfg: pf },
         SystemPreset { name: "+PIPE", cfg: pipe },
+        SystemPreset { name: "+PFX", cfg: pfx },
     ]
 }
 
@@ -102,7 +109,7 @@ mod tests {
     #[test]
     fn ladder_is_incremental() {
         let l = ablation_ladder(2048, 2048, 32);
-        assert_eq!(l.len(), 8);
+        assert_eq!(l.len(), 9);
         assert!(!l[0].cfg.sparse_attention);
         assert!(l[1].cfg.sparse_attention && !l[1].cfg.offload);
         assert!(l[2].cfg.offload && l[2].cfg.transfer == TransferKind::Memcpy);
@@ -124,6 +131,13 @@ mod tests {
         assert_eq!(l[7].cfg.pipeline_depth, 2, "+PIPE enables the pipelined executor");
         assert!(l[7].cfg.prefetch);
         assert_eq!(l[7].cfg.prefill_mode, l[6].cfg.prefill_mode);
+        // +PFX differs from +PIPE only in prefix sharing; every lower
+        // rung keeps exclusive block ownership
+        assert!(!l[7].cfg.prefix_sharing);
+        assert!(l[8].cfg.prefix_sharing, "+PFX enables cross-request prefix sharing");
+        assert_eq!(l[8].cfg.pipeline_depth, l[7].cfg.pipeline_depth);
+        assert_eq!(l[8].cfg.prefill_mode, l[7].cfg.prefill_mode);
+        assert!(l[..8].iter().all(|p| !p.cfg.prefix_sharing));
     }
 
     #[test]

@@ -19,6 +19,16 @@
 //! byte-identically (see `engine::sim_backend` tests). When no engine
 //! has headroom the candidate falls back to a true eviction at the
 //! source, which is exactly the single-engine behaviour.
+//!
+//! **Cross-request KV prefix sharing stops at the engine boundary.**
+//! A migrated request's payload carries its FULL KV bytes — the shared
+//! prefix is deep-copied out (the scheduler folds the path's shared
+//! bytes back into the private reservation in `extract_for_migration`,
+//! the backend drops its namespace reference in `export_migration`) and
+//! the request lands at the target fully private. Engines never share
+//! KV with each other; the candidate's `reserve_bytes` and the wire
+//! time both price the unshared footprint, so a migration can never
+//! under-reserve at the target by assuming a sharer that is not there.
 
 use anyhow::Result;
 
@@ -439,6 +449,37 @@ mod tests {
         let sync_hidden: f64 =
             sync.engines.iter().map(|r| r.metrics.plan_stage_hidden_s).sum();
         assert_eq!(sync_hidden, 0.0, "depth 1 never reports overlap");
+    }
+
+    #[test]
+    fn sharing_engines_serve_a_shared_prompt_trace_and_report_hits() {
+        // ten conversations over the same system prompt: with
+        // prefix_sharing on, every admission after the first matches the
+        // shared path and the per-engine metrics say so
+        let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
+        cfg.prefix_sharing = true;
+        let spec = ModelSpec::lwm_7b();
+        let hw = HardwareSpec::a100_40gb();
+        let engines = (0..1).map(|_| roomy_engine(&cfg, &spec, &hw)).collect();
+        let cost = CostModel::new(spec.clone(), hw);
+        let system: Vec<i32> = (0..4096).map(|t| (t % 8191) as i32).collect();
+        let trace: Vec<Request> = (1..=10u32)
+            .map(|id| {
+                let mut prompt = system.clone();
+                prompt.extend((0..256).map(|t| (id as i32) * 10_000 + t));
+                Request::with_prompt(id, prompt, 8, 0.1 * id as f64)
+            })
+            .collect();
+        let rep = ClusterServer::new(engines, cost, ClusterConfig::default())
+            .run_trace(trace, 1e7)
+            .unwrap();
+        assert_eq!(rep.requests_finished(), 10);
+        assert!(rep.rejected.is_empty());
+        let hits: u64 = rep.engines.iter().map(|r| r.metrics.prefix_hits).sum();
+        let matched: u64 =
+            rep.engines.iter().map(|r| r.metrics.prefix_matched_tokens).sum();
+        assert!(hits >= 9, "every follower must hit the shared path: {hits}");
+        assert!(matched >= 9 * 4096, "block-aligned system prompt adopted: {matched}");
     }
 
     #[test]

@@ -108,6 +108,14 @@ pub struct ServingConfig {
     /// because a mid-batch memory exhaustion now rolls back and evicts
     /// typed instead of abandoning the batch.
     pub admission_estimates: bool,
+    /// Cross-request KV prefix sharing: admission consults a
+    /// radix/longest-common-prefix index over block-aligned prompt
+    /// hashes, matched prefix blocks are shared (refcounted, COW at the
+    /// open tail) instead of re-prefilled, and the request reserves only
+    /// its unmatched-suffix KV against the DRAM tier. Off by default:
+    /// every pre-existing preset keeps exclusive per-request ownership
+    /// byte-identically (`+PFX` is its own ablation rung).
+    pub prefix_sharing: bool,
 
     // ---- prefill ----
     pub prefill_mode: PrefillMode,
@@ -161,6 +169,7 @@ impl ServingConfig {
             // oversubscription is safe because mid-batch exhaustion rolls
             // back and evicts typed (PR 3)
             admission_estimates: true,
+            prefix_sharing: false,
             prefill_mode: PrefillMode::LayerSegmented,
             // paper §4.2: maxInjectToken = B * L for parity with chunked
             max_inject_tokens: chunk_tokens * n_layers,
@@ -195,6 +204,7 @@ impl ServingConfig {
             sim_selection_bands: 4,
             sim_layer_skew: 0.0,
             admission_estimates: false,
+            prefix_sharing: false,
             prefill_mode: PrefillMode::Chunked,
             chunk_tokens,
             max_inject_tokens: chunk_tokens,
@@ -273,6 +283,9 @@ mod tests {
             // every preset is synchronous: the pipelined executor is a
             // separate ablation rung (+PIPE), never an implicit default
             assert_eq!(cfg.pipeline_depth, 1);
+            // prefix sharing is its own ablation rung (+PFX): with the
+            // knob off every preset keeps exclusive block ownership
+            assert!(!cfg.prefix_sharing);
         }
     }
 

@@ -236,6 +236,25 @@ pub trait Backend {
     /// Called when a request finishes or is cancelled (free KV state).
     fn release(&mut self, req: ReqId);
 
+    /// Admission matched `matched_tokens` of `req`'s prompt against the
+    /// shared prefix path tailed at `group`. Registration happens at
+    /// submit time — before admission resolves the match — so the engine
+    /// forwards the adoption here right after planning, before the batch
+    /// runs. The backend joins the path's shared residency namespace and
+    /// starts `req`'s stored KV past the matched tokens (their prefill
+    /// is skipped). Default: no-op (backends without shared-residency
+    /// modeling still run correctly — they just re-prefill nothing,
+    /// because the scheduler never plans the matched span).
+    fn adopt_prefix(&mut self, _req: ReqId, _matched_tokens: usize, _group: u32) {}
+
+    /// Whether this backend implements [`Backend::adopt_prefix`]. The
+    /// engine disables the scheduler's prefix index against backends
+    /// that do not: admission-time prefill skipping is only sound when
+    /// the backend can seed the matched span's KV from the shared path.
+    fn supports_prefix_sharing(&self) -> bool {
+        false
+    }
+
     /// Open a step transaction for one hybrid batch. Pre-flight checks
     /// (e.g. DRAM demand of the decode step) fail here, typed, with zero
     /// side effects. `requests` gives access to prompt tokens and

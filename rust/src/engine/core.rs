@@ -220,7 +220,13 @@ pub struct EngineCore {
 }
 
 impl EngineCore {
-    pub fn new(sched: Scheduler, backend: Box<dyn Backend>) -> Self {
+    pub fn new(mut sched: Scheduler, backend: Box<dyn Backend>) -> Self {
+        // A backend without an adoption path cannot seed matched-span KV
+        // from the shared prefix pool; skipping that span's prefill would
+        // leave it unwritten. Serve correct-but-unshared instead.
+        if sched.cfg.prefix_sharing && !backend.supports_prefix_sharing() {
+            sched.disable_prefix_sharing();
+        }
         Self {
             sched,
             backend,
@@ -406,6 +412,13 @@ impl EngineCore {
         let backend = &mut self.backend;
         let mut ws = |id| backend.decode_ws_bytes(id);
         self.sched.plan_into(now, &mut ws, &mut self.batch);
+        // planning may have admitted requests whose prompts matched the
+        // shared prefix index: forward each adoption before the batch
+        // runs, so the matched groups resolve to the shared residency
+        // namespace from the very first gather
+        while let Some((id, matched, group)) = self.sched.pop_adoption() {
+            self.backend.adopt_prefix(id, matched, group);
+        }
         if self.batch.is_empty() {
             return Ok(out);
         }
@@ -656,6 +669,12 @@ impl EngineCore {
             }
         }
         self.metrics.makespan_s = makespan_s;
+        // fold the scheduler's admission-time prefix accounting in: the
+        // hit/skipped-token counters accumulate over the run, the
+        // resident-bytes figure is the shared pool's end-of-run charge
+        self.metrics.prefix_hits = self.sched.prefix_hits;
+        self.metrics.prefix_matched_tokens = self.sched.prefix_matched_tokens;
+        self.metrics.prefix_resident_bytes = self.sched.prefix_resident_bytes() as u64;
         RunReport {
             metrics: self.metrics,
             requests: std::mem::take(&mut self.sched.requests),

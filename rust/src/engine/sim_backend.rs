@@ -61,7 +61,7 @@ use anyhow::Result;
 
 use crate::config::{HardwareSpec, IterModel, ModelSpec, ServingConfig};
 use crate::memory::staging_policy::{stage_block, StageAdmission, StagingPolicy};
-use crate::memory::{BlockKey, LruCache, MemoryError, PrefetchEngine, ReqId};
+use crate::memory::{BlockKey, LruCache, MemoryError, PrefetchEngine, ReqId, PREFIX_NS};
 use crate::scheduler::{Batch, PrefillWork, Request};
 use crate::sim::{layered_iter, pipelined_iter, two_stream_iter, CostModel, SelectionModel};
 use crate::sparse::working_set::SelItem;
@@ -79,6 +79,15 @@ struct SimReq {
     /// DSA budget in block groups per layer band (per-request override
     /// or the config default).
     budget_groups: usize,
+    /// Band-groups covered by the shared KV prefix adopted at admission:
+    /// group indices below this are keyed by `prefix_ns` (one residency
+    /// entry serves every sharer), the rest by the request id. 0 = fully
+    /// private.
+    prefix_groups: usize,
+    /// Shared residency namespace (`PREFIX_NS | path tail id`); 0 when
+    /// private. Requests sharing the same matched path share the
+    /// namespace, so one sharer's load/stage is every sharer's hit.
+    prefix_ns: u32,
 }
 
 /// Recycled per-step working buffers: cleared (never freed) by
@@ -133,6 +142,11 @@ pub struct SimBackend {
     /// seeds, so a released request id reused by a later admission draws
     /// a fresh RNG stream instead of replaying the old one.
     admissions: u64,
+    /// Live shared-prefix namespaces: ns -> (sharers, shared groups).
+    /// The DRAM charge in `mem_stats` counts each namespace ONCE (the
+    /// whole point of sharing); the last sharer's release tears down the
+    /// namespace's stages and residency entries.
+    prefix_refs: HashMap<u32, (u32, usize)>,
     /// Working-set staging bookkeeping (band-group granularity).
     prefetcher: PrefetchEngine,
     /// Groups staged for the current iteration, consumed at commit
@@ -194,6 +208,7 @@ impl SimBackend {
             group_bytes,
             seed: 0x51,
             admissions: 0,
+            prefix_refs: HashMap::new(),
             prefetcher: PrefetchEngine::new(0), // no real bytes to copy
             staged_groups: 0,
             staged_deferred_groups: 0,
@@ -252,8 +267,18 @@ impl SimBackend {
         groups: &[u32],
     ) -> Result<usize, MemoryError> {
         let mut misses = 0;
+        let (pns, pgroups) = self
+            .reqs
+            .get(&req)
+            .map(|r| (r.prefix_ns, r.prefix_groups))
+            .unwrap_or((0, 0));
         for &g in groups {
-            let key = BlockKey::new(req, band, 0, g);
+            // shared-prefix groups are keyed by namespace, not request
+            let key = if (g as usize) < pgroups {
+                BlockKey::new(pns, band, 0, g)
+            } else {
+                BlockKey::new(req, band, 0, g)
+            };
             if self.cache.get(&key).is_some() {
                 if self.prefetcher.note_access(&key) {
                     self.cache.unpin(&key);
@@ -278,8 +303,17 @@ impl SimBackend {
     /// simultaneously resident, so it never faults on residency.
     fn touch_groups_best_effort(&mut self, req: ReqId, band: u16, groups: &[u32]) -> usize {
         let mut misses = 0;
+        let (pns, pgroups) = self
+            .reqs
+            .get(&req)
+            .map(|r| (r.prefix_ns, r.prefix_groups))
+            .unwrap_or((0, 0));
         for &g in groups {
-            let key = BlockKey::new(req, band, 0, g);
+            let key = if (g as usize) < pgroups {
+                BlockKey::new(pns, band, 0, g)
+            } else {
+                BlockKey::new(req, band, 0, g)
+            };
             if self.cache.get(&key).is_some() {
                 if self.prefetcher.note_access(&key) {
                     self.cache.unpin(&key);
@@ -340,12 +374,21 @@ impl SimBackend {
                 if want == 0 {
                     break 'all;
                 }
-                match self.reqs.get_mut(&id) {
-                    Some(r) => r.ws.ranked_blocks_capped_into(want, &mut ranked),
+                let (pns, pgroups) = match self.reqs.get_mut(&id) {
+                    Some(r) => {
+                        r.ws.ranked_blocks_capped_into(want, &mut ranked);
+                        (r.prefix_ns, r.prefix_groups)
+                    }
                     None => continue,
-                }
+                };
                 for &(band, head, g) in &ranked {
-                    let key = BlockKey::new(id, band, head, g);
+                    // shared-prefix groups stage under their namespace:
+                    // skip-resident sees (and serves) other sharers
+                    let key = if (g as usize) < pgroups {
+                        BlockKey::new(pns, band, head, g)
+                    } else {
+                        BlockKey::new(id, band, head, g)
+                    };
                     match policy.admit(&self.cache, &key, staged + deferred) {
                         StageAdmission::Stop => break 'all,
                         StageAdmission::SkipResident => continue,
@@ -376,6 +419,25 @@ impl SimBackend {
     /// Prefetch hit/waste totals (tests + figures).
     pub fn prefetch_stats(&self) -> crate::memory::PrefetchStats {
         self.prefetcher.stats
+    }
+
+    /// Drop one sharer of a prefix namespace. At the LAST sharer the
+    /// namespace dies: its stages are cancelled (stage pins returned —
+    /// pin conservation at shared teardown) and its residency entries
+    /// evicted. Until then everything stays for the surviving sharers.
+    fn drop_prefix_ref(&mut self, ns: u32) {
+        let Some(e) = self.prefix_refs.get_mut(&ns) else {
+            debug_assert!(false, "prefix deref without a live namespace");
+            return;
+        };
+        e.0 -= 1;
+        if e.0 == 0 {
+            self.prefix_refs.remove(&ns);
+            for key in self.prefetcher.cancel_request(ns) {
+                self.cache.unpin(&key);
+            }
+            self.cache.remove_request(ns);
+        }
     }
 }
 
@@ -739,7 +801,11 @@ impl StepSession for SimSession<'_> {
         while let Some((inserted, evicted)) = be.scratch.cache_log.pop() {
             be.cache.remove(&inserted);
             if let Some(ev) = evicted {
-                if be.reqs.contains_key(&ev.req) && !be.cache.contains(&ev) {
+                // an evicted key is restorable while its owner lives — a
+                // request for private keys, a prefix namespace for shared
+                let live = be.reqs.contains_key(&ev.req)
+                    || be.prefix_refs.contains_key(&ev.req);
+                if live && !be.cache.contains(&ev) {
                     be.cache.insert(ev, ());
                 }
             }
@@ -764,6 +830,25 @@ impl Backend for SimBackend {
             Some(tokens) => tokens.div_ceil(self.spec().block_size).max(1),
             None => self.budget_groups(),
         };
+        // shared-prefix adoption: the scheduler matched `prefix_matched`
+        // prompt tokens against a prior request's path. KV for those
+        // tokens already exists — seed the stored length there (prefill
+        // starts past them) and join the path's residency namespace so
+        // the matched groups' loads/stages are shared with every sharer.
+        let shared = (self.cfg.prefix_sharing && req.prefix_matched > 0)
+            .then_some(req.prefix_group)
+            .flatten();
+        let (prefix_ns, prefix_groups, len) = match shared {
+            Some(g) => {
+                let ns = PREFIX_NS | g;
+                let groups = req.prefix_matched / self.spec().block_size;
+                let e = self.prefix_refs.entry(ns).or_insert((0, groups));
+                e.0 += 1;
+                e.1 = e.1.max(groups);
+                (ns, groups, req.prefix_matched)
+            }
+            None => (0, 0, 0),
+        };
         // mix a monotone admission counter into the seed: a released id
         // reused by a later admission must NOT replay the old request's
         // selection stream
@@ -774,12 +859,14 @@ impl Backend for SimBackend {
         self.reqs.insert(
             req.id,
             SimReq {
-                len: 0,
+                len,
                 selection: SelectionModel::new(seed)
                     .with_bands(self.n_bands, self.cfg.sim_layer_skew),
                 ws: WorkingSetTracker::new(self.cfg.ws_window)
                     .with_freq_ranking(self.cfg.prefetch_freq_ranking),
                 budget_groups,
+                prefix_groups,
+                prefix_ns,
             },
         );
         Ok(())
@@ -791,8 +878,43 @@ impl Backend for SimBackend {
         for key in self.prefetcher.cancel_request(req) {
             self.cache.unpin(&key);
         }
-        self.reqs.remove(&req);
+        if let Some(r) = self.reqs.remove(&req) {
+            if r.prefix_groups > 0 {
+                self.drop_prefix_ref(r.prefix_ns);
+            }
+        }
         self.cache.remove_request(req);
+    }
+
+    fn supports_prefix_sharing(&self) -> bool {
+        true
+    }
+
+    fn adopt_prefix(&mut self, req: ReqId, matched_tokens: usize, group: u32) {
+        // admission-time adoption: registration ran at submit, before the
+        // scheduler matched the prompt, so the prefix fields land here.
+        // Idempotent against the register-time path (migrated/test
+        // requests arrive with the fields already set and the reference
+        // already held).
+        if !self.cfg.prefix_sharing || matched_tokens == 0 {
+            return;
+        }
+        let bs = self.spec().block_size;
+        let ns = PREFIX_NS | group;
+        let groups = matched_tokens / bs;
+        match self.reqs.get_mut(&req) {
+            Some(r) if r.prefix_groups == 0 => {
+                r.prefix_ns = ns;
+                r.prefix_groups = groups;
+                // the matched span's KV already exists on the shared
+                // path: stored length starts past it (prefill skipped)
+                r.len = r.len.max(matched_tokens);
+            }
+            _ => return,
+        }
+        let e = self.prefix_refs.entry(ns).or_insert((0, groups));
+        e.0 += 1;
+        e.1 = e.1.max(groups);
     }
 
     fn export_migration(&mut self, req: ReqId) -> Option<super::backend::MigrationPayload> {
@@ -805,9 +927,17 @@ impl Backend for SimBackend {
         for key in self.prefetcher.cancel_request(req) {
             self.cache.unpin(&key);
         }
+        // sharing is dropped at the migration boundary: the payload is a
+        // deep copy of the FULL KV (shared prefix included), so the
+        // namespace reference is returned here and the target sees a
+        // fully private request
+        if r.prefix_groups > 0 {
+            self.drop_prefix_ref(r.prefix_ns);
+        }
         self.cache.remove_request(req);
         let bs = self.spec().block_size;
-        // mirror mem_stats(): the DRAM tier holds every band's groups
+        // mirror mem_stats(): the DRAM tier holds every band's groups —
+        // full bytes, NOT the shared-suffix delta
         let kv_bytes = r.len.div_ceil(bs) * self.group_bytes * self.n_bands;
         Some(super::backend::MigrationPayload {
             req,
@@ -829,6 +959,8 @@ impl Backend for SimBackend {
         // Deliberately NOT a register(): the admission counter is not
         // bumped and no seed is drawn — the payload's SelectionModel
         // resumes the source's RNG stream exactly where it stopped.
+        // Migrated KV is fully private: prefix sharing never crosses
+        // the cluster boundary (the payload carried full bytes).
         self.reqs.insert(
             payload.req,
             SimReq {
@@ -836,6 +968,8 @@ impl Backend for SimBackend {
                 selection: payload.selection,
                 ws: payload.ws,
                 budget_groups: payload.budget_groups,
+                prefix_groups: 0,
+                prefix_ns: 0,
             },
         );
         Ok(())
@@ -867,11 +1001,23 @@ impl Backend for SimBackend {
 
     fn mem_stats(&self) -> MemStats {
         let bs = self.cost.spec.block_size;
+        // each request is charged its PRIVATE suffix; every live shared
+        // namespace is charged exactly once — that accounting delta is
+        // the capacity benefit prefix sharing exists for
         let kv_bytes: usize = self
             .reqs
             .values()
-            .map(|r| r.len.div_ceil(bs) * self.group_bytes * self.n_bands)
-            .sum();
+            .map(|r| {
+                r.len.div_ceil(bs).saturating_sub(r.prefix_groups)
+                    * self.group_bytes
+                    * self.n_bands
+            })
+            .sum::<usize>()
+            + self
+                .prefix_refs
+                .values()
+                .map(|&(_, groups)| groups * self.group_bytes * self.n_bands)
+                .sum::<usize>();
         if self.cfg.offload {
             // DRAM is home; HBM holds the LRU residency cache.
             MemStats {
@@ -1826,5 +1972,121 @@ mod tests {
         assert!(b.abort_iteration() > 0.0);
         assert_eq!(b.pinned_entries(), 0, "abort_iteration must drop all pins");
         assert_eq!(run(&mut b, &batch, &reqs).abort_time_s, 0.0);
+    }
+
+    // ------------------------------------------ cross-request prefix sharing
+
+    /// Register `id` as admitted with `matched` prompt tokens covered by
+    /// shared path `group` (what the scheduler's admission match sets).
+    fn register_sharer(
+        b: &mut SimBackend,
+        reqs: &mut HashMap<ReqId, Request>,
+        id: ReqId,
+        plen: usize,
+        matched: usize,
+        group: u32,
+    ) {
+        let mut r = Request::new(id, plen, 64, 0.0);
+        r.prefix_matched = matched;
+        r.prefix_group = Some(group);
+        r.tokens_done = matched;
+        r.phase = Phase::Decode;
+        b.register(&r).unwrap();
+        reqs.insert(id, r);
+    }
+
+    fn sharing_cfg() -> ServingConfig {
+        let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
+        cfg.prefix_sharing = true;
+        cfg
+    }
+
+    #[test]
+    fn shared_namespace_is_charged_once_and_dies_with_its_last_sharer() {
+        let mut b = mk(sharing_cfg());
+        let bs = b.spec().block_size;
+        let matched = 32 * bs;
+        let mut reqs = HashMap::new();
+        register_sharer(&mut b, &mut reqs, 1, matched + bs, matched, 7);
+        let one = b.mem_stats().dram_bytes_used;
+        assert!(one > 0, "the shared prefix KV is charged");
+        register_sharer(&mut b, &mut reqs, 2, matched + bs, matched, 7);
+        // the second sharer adds NO bytes: its prefix region is the same
+        // namespace, and its private suffix has not been prefilled yet
+        assert_eq!(b.mem_stats().dram_bytes_used, one, "shared region charged once");
+        // the first release keeps the namespace alive for the survivor...
+        b.release(1);
+        assert_eq!(b.mem_stats().dram_bytes_used, one);
+        // ...and the last one tears it down
+        b.release(2);
+        assert_eq!(b.mem_stats(), MemStats::default());
+    }
+
+    #[test]
+    fn one_sharers_demand_load_is_every_sharers_hit() {
+        let mut cfg = sharing_cfg();
+        cfg.prefetch = false; // isolate the demand path
+        let mut b = mk(cfg);
+        let bs = b.spec().block_size;
+        // context well under the DSA budget: selection deterministically
+        // covers every group, so the sharers' working sets are identical
+        let matched = b.budget_groups().min(24) * bs;
+        let mut reqs = HashMap::new();
+        register_sharer(&mut b, &mut reqs, 1, matched + bs, matched, 3);
+        register_sharer(&mut b, &mut reqs, 2, matched + bs, matched, 3);
+        let cold = run(&mut b, &Batch { decodes: vec![1], prefill: None }, &reqs);
+        assert!(cold.blocks_loaded > 0, "first sharer pays the demand loads");
+        let warm = run(&mut b, &Batch { decodes: vec![2], prefill: None }, &reqs);
+        assert_eq!(warm.blocks_loaded, 0, "second sharer rides shared residency");
+    }
+
+    #[test]
+    fn sharing_off_keys_stay_private_and_pay_their_own_loads() {
+        // the control for the test above: identical setup minus the knob
+        let mut cfg = ServingConfig::sparseserve(2048, 2048, 32);
+        cfg.prefetch = false;
+        let mut b = mk(cfg);
+        let bs = b.spec().block_size;
+        let matched = b.budget_groups().min(24) * bs;
+        let mut reqs = HashMap::new();
+        for id in 1..=2u32 {
+            // prefix fields are set, but the knob is off: ignored
+            register_sharer(&mut b, &mut reqs, id, matched + bs, matched, 3);
+            // without sharing nothing seeds the stored length; simulate
+            // the finished prefill so decode has KV to select over
+            b.reqs.get_mut(&id).unwrap().len = matched;
+        }
+        let cold = run(&mut b, &Batch { decodes: vec![1], prefill: None }, &reqs);
+        let second = run(&mut b, &Batch { decodes: vec![2], prefill: None }, &reqs);
+        assert!(cold.blocks_loaded > 0);
+        assert_eq!(
+            second.blocks_loaded, cold.blocks_loaded,
+            "private keys cannot share residency"
+        );
+    }
+
+    #[test]
+    fn export_migration_drops_sharing_and_carries_full_bytes() {
+        let mut b = mk(sharing_cfg());
+        let bs = b.spec().block_size;
+        let matched = 16 * bs;
+        let mut reqs = HashMap::new();
+        register_sharer(&mut b, &mut reqs, 1, matched + bs, matched, 5);
+        register_sharer(&mut b, &mut reqs, 2, matched + bs, matched, 5);
+        let shared_bytes = b.mem_stats().dram_bytes_used;
+        let payload = b.export_migration(2).expect("sharer must export");
+        // the payload deep-copies the FULL KV, shared prefix included —
+        // the target pays full freight (cluster reservations match)
+        assert_eq!(payload.kv_bytes, shared_bytes, "full bytes, not the delta");
+        // the donor side keeps the namespace for the survivor
+        assert_eq!(b.mem_stats().dram_bytes_used, shared_bytes);
+        let mut dst = mk(sharing_cfg());
+        dst.import_migration(payload).unwrap();
+        // fully private on the far side: charged as plain KV
+        assert_eq!(dst.mem_stats().dram_bytes_used, shared_bytes);
+        b.release(1);
+        assert_eq!(b.mem_stats().dram_bytes_used, 0);
+        dst.release(2);
+        assert_eq!(dst.mem_stats().dram_bytes_used, 0);
     }
 }

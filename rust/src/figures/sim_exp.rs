@@ -427,6 +427,118 @@ pub fn fig_prefetch(rates: &[f64]) -> String {
     )
 }
 
+// -------------------------------------------- Prefix sharing ablation (PFX)
+
+/// Headline numbers for one side of the prefix-sharing measurement:
+/// latency plus the byte traffic the run actually paid.
+///
+/// * `prefill_compute_s` — modeled prefill seconds the run paid,
+///   summed per request from [`CostModel::prefill_time_suffix`] over
+///   the suffix each request actually prefilled (`prompt_len -
+///   prefix_matched`); with sharing off every suffix is the full
+///   prompt.
+/// * `hbm_in_bytes` — everything HBM ingested from DRAM: demand PCIe
+///   traffic (`LayerProfile::bytes_moved`) plus prefetch staging.
+/// * `dram_written_bytes` — KV written to the DRAM tier (prefilled
+///   suffix + generated tokens, at the model's per-token KV cost);
+///   adopted prefixes write nothing — sharers reuse the pool's blocks.
+#[derive(Debug, Clone)]
+pub struct PrefixSharingPoint {
+    pub ttft_mean_s: f64,
+    pub prefill_compute_s: f64,
+    pub hbm_in_bytes: u64,
+    pub dram_written_bytes: u64,
+    pub prefix_hits: u64,
+    pub prefix_matched_tokens: u64,
+    pub tokens_generated: usize,
+    pub requests_finished: usize,
+}
+
+fn prefix_point(cfg: ServingConfig, model: &ModelSpec, trace: Vec<Request>) -> PrefixSharingPoint {
+    let hw = HardwareSpec::a100_40gb();
+    let backend = SimBackend::new(cfg.clone(), model.clone(), hw.clone());
+    let sched = Scheduler::new(cfg, model.clone(), hw.hbm_kv_bytes);
+    let report = Engine::new(sched, Box::new(backend)).run_trace(trace, 3.0e4).unwrap();
+    let cost = CostModel::new(model.clone(), hw);
+    let kv_token_bytes = model.kv_bytes_per_token() as u64;
+    let mut prefill_compute_s = 0.0;
+    let mut dram_written_bytes = report.metrics.tokens_generated as u64 * kv_token_bytes;
+    for r in report.requests.values() {
+        let plen = r.prompt_len;
+        let suffix = plen.saturating_sub(r.prefix_matched);
+        prefill_compute_s += cost.prefill_time_suffix(plen, r.prefix_matched, plen.max(1));
+        dram_written_bytes += suffix as u64 * kv_token_bytes;
+    }
+    let demand_bytes: u64 = report.metrics.layer_profile.bytes_moved.iter().sum();
+    let staged_bytes = report.metrics.prefetch_blocks * model.block_bytes() as u64;
+    PrefixSharingPoint {
+        ttft_mean_s: report.metrics.ttft.mean(),
+        prefill_compute_s,
+        hbm_in_bytes: demand_bytes + staged_bytes,
+        dram_written_bytes,
+        prefix_hits: report.metrics.prefix_hits,
+        prefix_matched_tokens: report.metrics.prefix_matched_tokens,
+        tokens_generated: report.metrics.tokens_generated,
+        requests_finished: report.metrics.requests_finished,
+    }
+}
+
+/// Run the prefix-sharing ablation at one pool hit rate: an identical
+/// token-filled trace (4 shared 4096-token system prompts, `hit_frac`
+/// of requests opening with one) served with the prefix index on vs
+/// off. Both runs see the exact same requests — only block ownership
+/// changes. Returns `(sharing_on, sharing_off)` points (the `bench`
+/// subcommand emits `BENCH_prefix.json` from these numbers).
+pub fn prefix_sharing_metrics(
+    rate: f64,
+    hit_frac: f64,
+    seed: u64,
+) -> (PrefixSharingPoint, PrefixSharingPoint) {
+    let model = ModelSpec::lwm_7b();
+    let n = ((rate * 240.0).ceil() as usize).clamp(16, 96);
+    let wl = WorkloadSpec::paper_lwm(rate, seed).with_prefix_pools(4, 4096, hit_frac);
+    let trace = generate(&wl, n, 0);
+    let mut on = ServingConfig::sparseserve(2048, 2048, model.n_layers);
+    on.prefix_sharing = true;
+    let mut off = on.clone();
+    off.prefix_sharing = false;
+    let p_on = prefix_point(on, &model, trace.clone());
+    let p_off = prefix_point(off, &model, trace);
+    (p_on, p_off)
+}
+
+/// Prefix-sharing table: TTFT, modeled prefill compute and byte
+/// traffic, sharing on vs off across pool hit rates.
+pub fn fig_prefix(rates: &[f64]) -> String {
+    let mut rows = Vec::new();
+    for &rate in rates {
+        for hit in [0.0, 0.3, 0.7] {
+            let (on, off) = prefix_sharing_metrics(rate, hit, 11);
+            rows.push(vec![
+                format!("{rate}"),
+                format!("{hit}"),
+                f(on.ttft_mean_s),
+                f(off.ttft_mean_s),
+                f(on.prefill_compute_s),
+                f(off.prefill_compute_s),
+                f(on.hbm_in_bytes as f64 / 1e9),
+                f(off.hbm_in_bytes as f64 / 1e9),
+                f(on.dram_written_bytes as f64 / 1e9),
+                f(off.dram_written_bytes as f64 / 1e9),
+                on.prefix_hits.to_string(),
+            ]);
+        }
+    }
+    render_table(
+        "Prefix sharing: TTFT (s), prefill compute (s) and HBM/DRAM traffic (GB), sharing on vs off (LWM-7B)",
+        &[
+            "rate", "hit", "ttft_on", "ttft_off", "pf_on", "pf_off", "hbm_on", "hbm_off",
+            "dram_on", "dram_off", "hits",
+        ],
+        &rows,
+    )
+}
+
 // ----------------------------------------------------------------- Fig. 16
 
 pub fn fig16a(rates: &[f64]) -> String {
@@ -497,5 +609,58 @@ mod tests {
         let t = fig14b();
         assert!(t.contains("1.76"));
         assert!(t.contains("1.28"));
+    }
+
+    /// The tentpole's acceptance bar: on a warm-prefix workload the
+    /// sharing run must pay strictly less TTFT, prefill compute and
+    /// HBM/DRAM byte traffic than the exclusive-ownership run over the
+    /// SAME trace — at equal generated output.
+    #[test]
+    fn prefix_sharing_strictly_wins_on_warm_traffic() {
+        let (on, off) = prefix_sharing_metrics(0.05, 0.7, 11);
+        assert_eq!(on.tokens_generated, off.tokens_generated, "equal output");
+        assert_eq!(on.requests_finished, off.requests_finished);
+        assert!(on.prefix_hits > 0, "pools must produce index hits");
+        assert!(on.prefix_matched_tokens > 0);
+        assert!(
+            on.ttft_mean_s < off.ttft_mean_s,
+            "TTFT: {} !< {}",
+            on.ttft_mean_s,
+            off.ttft_mean_s
+        );
+        assert!(
+            on.prefill_compute_s < off.prefill_compute_s,
+            "prefill: {} !< {}",
+            on.prefill_compute_s,
+            off.prefill_compute_s
+        );
+        assert!(
+            on.hbm_in_bytes < off.hbm_in_bytes,
+            "HBM bytes: {} !< {}",
+            on.hbm_in_bytes,
+            off.hbm_in_bytes
+        );
+        assert!(
+            on.dram_written_bytes < off.dram_written_bytes,
+            "DRAM bytes: {} !< {}",
+            on.dram_written_bytes,
+            off.dram_written_bytes
+        );
+    }
+
+    /// With zero pool hits every prompt is unique: the index never
+    /// matches, and the sharing run must be indistinguishable from the
+    /// exclusive run on the same trace.
+    #[test]
+    fn prefix_sharing_at_zero_hit_rate_changes_nothing() {
+        let (on, off) = prefix_sharing_metrics(0.05, 0.0, 11);
+        assert_eq!(on.prefix_hits, 0);
+        assert_eq!(on.prefix_matched_tokens, 0);
+        assert_eq!(on.tokens_generated, off.tokens_generated);
+        assert_eq!(on.requests_finished, off.requests_finished);
+        assert_eq!(on.ttft_mean_s, off.ttft_mean_s, "bit-identical TTFT");
+        assert_eq!(on.prefill_compute_s, off.prefill_compute_s);
+        assert_eq!(on.hbm_in_bytes, off.hbm_in_bytes);
+        assert_eq!(on.dram_written_bytes, off.dram_written_bytes);
     }
 }

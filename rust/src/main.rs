@@ -86,15 +86,19 @@ USAGE: sparseserve <info|serve|simulate|bench-transfer> [flags]
             commit, hybrid, and rollback+retry cases; panics fail CI),
             (4) admission estimates on vs off under a binding DRAM
             budget, (5) cluster goodput vs tenant skew: 1 engine vs 2
-            engines with and without typed KV migration; writes
-            BENCH_prefetch.json + BENCH_layer_model.json +
-            BENCH_hotpath.json + BENCH_cluster.json (the CI perf
-            ratchet compares the hot-path steady-decode metric against
-            the previous run)
+            engines with and without typed KV migration, (6) prefix
+            sharing on vs off over an identical shared-system-prompt
+            trace at pool hit rates 0 / 0.3 / 0.7 (TTFT, modeled
+            prefill compute, HBM ingress and DRAM KV-write bytes);
+            writes BENCH_prefetch.json + BENCH_layer_model.json +
+            BENCH_hotpath.json + BENCH_cluster.json +
+            BENCH_prefix.json (the CI perf ratchet compares the
+            hot-path steady-decode metric against the previous run)
       --out BENCH_prefetch.json              prefetch output path
       --out-layer BENCH_layer_model.json     layer-model output path
       --out-hotpath BENCH_hotpath.json       hot-path output path
       --out-cluster BENCH_cluster.json       cluster output path
+      --out-prefix BENCH_prefix.json         prefix-sharing output path
       --hotpath-budget 0.2                   seconds per hot-path case
       --rates 0.2,0.35                       comma-separated request rates
 
@@ -430,6 +434,51 @@ fn bench(args: &Args) -> Result<()> {
     doc.insert("points".into(), Value::Arr(points));
     std::fs::write(&cluster_out, Value::Obj(doc).to_string())?;
     println!("[bench] wrote {cluster_out}");
+
+    // ---- prefix sharing: TTFT / prefill compute / bytes vs pool hit rate ----
+    let prefix_out = args.get_or("out-prefix", "BENCH_prefix.json");
+    let prefix_rate = *rates.first().expect("non-empty rates");
+    println!("== prefix sharing on/off vs pool hit rate (LWM-7B, seed 11) ==");
+    let mut points = Vec::new();
+    for &hit in &[0.0, 0.3, 0.7] {
+        let (on, off) = sparseserve::figures::prefix_sharing_metrics(prefix_rate, hit, 11);
+        println!(
+            "hit {hit:.1}: TTFT {:.2}s (on) vs {:.2}s (off) | prefill {:.1}s vs {:.1}s | \
+             HBM {:.2}GB vs {:.2}GB | DRAM {:.2}GB vs {:.2}GB | {} hits, {} tok matched",
+            on.ttft_mean_s,
+            off.ttft_mean_s,
+            on.prefill_compute_s,
+            off.prefill_compute_s,
+            on.hbm_in_bytes as f64 / 1e9,
+            off.hbm_in_bytes as f64 / 1e9,
+            on.dram_written_bytes as f64 / 1e9,
+            off.dram_written_bytes as f64 / 1e9,
+            on.prefix_hits,
+            on.prefix_matched_tokens,
+        );
+        let mut p = BTreeMap::new();
+        p.insert("hit_rate".into(), Value::Num(hit));
+        p.insert("rate".into(), Value::Num(prefix_rate));
+        p.insert("ttft_mean_s_on".into(), Value::Num(on.ttft_mean_s));
+        p.insert("ttft_mean_s_off".into(), Value::Num(off.ttft_mean_s));
+        p.insert("prefill_compute_s_on".into(), Value::Num(on.prefill_compute_s));
+        p.insert("prefill_compute_s_off".into(), Value::Num(off.prefill_compute_s));
+        p.insert("hbm_in_bytes_on".into(), Value::Num(on.hbm_in_bytes as f64));
+        p.insert("hbm_in_bytes_off".into(), Value::Num(off.hbm_in_bytes as f64));
+        p.insert("dram_written_bytes_on".into(), Value::Num(on.dram_written_bytes as f64));
+        p.insert("dram_written_bytes_off".into(), Value::Num(off.dram_written_bytes as f64));
+        p.insert("prefix_hits".into(), Value::Num(on.prefix_hits as f64));
+        p.insert("prefix_matched_tokens".into(), Value::Num(on.prefix_matched_tokens as f64));
+        p.insert("tokens_generated_on".into(), Value::Num(on.tokens_generated as f64));
+        p.insert("tokens_generated_off".into(), Value::Num(off.tokens_generated as f64));
+        points.push(Value::Obj(p));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Value::Str("prefix_sharing_ablation".into()));
+    doc.insert("model".into(), Value::Str("lwm-7b".into()));
+    doc.insert("points".into(), Value::Arr(points));
+    std::fs::write(&prefix_out, Value::Obj(doc).to_string())?;
+    println!("[bench] wrote {prefix_out}");
     Ok(())
 }
 

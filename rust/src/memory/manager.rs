@@ -25,6 +25,7 @@ use super::cache::LruCache;
 use super::metadata::Cuboid;
 use super::pool::{BlockPool, SlotId};
 use super::prefetch::{PrefetchEngine, PrefetchStats, SendConst, SendMut};
+use super::prefix::PREFIX_NS;
 use super::staging_policy::{stage_block, StageAdmission, StagingPolicy};
 use super::transfer::{ScatterEntry, TransferEngine, TransferStats};
 use super::{BlockKey, MemoryError};
@@ -84,6 +85,13 @@ struct TxnLog {
     /// pre-existing sealed blocks that survive a rollback and feed the
     /// retry).
     cache_inserts: Vec<BlockKey>,
+    /// Copy-on-write journal: `(req, layer, head, block, old_slot,
+    /// fresh_slot)` for every shared tail block this transaction
+    /// privatized before writing. Commit derefs the old (shared) slot;
+    /// rollback restores it in the block table and frees the fresh copy
+    /// — so refcounts and block tables are byte-identical to the
+    /// pre-step state after a mid-batch rollback.
+    cow: Vec<(ReqId, usize, usize, usize, SlotId, SlotId)>,
 }
 
 /// Recycled gather/scatter plan buffers: the save path's contiguous
@@ -146,6 +154,14 @@ pub struct KvManager {
     cache: LruCache<SlotId>,
     engine: Box<dyn TransferEngine>,
     requests: HashMap<ReqId, RequestKv>,
+    /// Refcounts of ever-shared DRAM block slots ([`Self::adopt_prefix`]).
+    /// ABSENT means exclusive-from-birth (the common case — freeing is
+    /// unconditional); PRESENT means the slot appeared in more than one
+    /// request's block table at some point, and the count is the number
+    /// of tables currently holding it. Every free site routes through
+    /// [`Self::free_dram_slot`], which frees the slot (and drops its
+    /// shared HBM residency) only when the count reaches zero.
+    slot_refs: HashMap<SlotId, u32>,
     iter: IterStats,
     pinned: Vec<BlockKey>,
     prefetch: PrefetchEngine,
@@ -176,6 +192,7 @@ impl KvManager {
             cache,
             engine,
             requests: HashMap::new(),
+            slot_refs: HashMap::new(),
             iter: IterStats::default(),
             pinned: Vec::new(),
             prefetch: PrefetchEngine::new(PREFETCH_COPY_WORKERS),
@@ -227,7 +244,9 @@ impl KvManager {
             for layer in r.blocks {
                 for head in layer {
                     for slot in head {
-                        self.dram.free(slot);
+                        // refcounted: a slot shared with a live sharer
+                        // stays allocated (and HBM-resident) for them
+                        self.free_dram_slot(slot);
                     }
                 }
             }
@@ -239,6 +258,198 @@ impl KvManager {
 
     pub fn is_registered(&self, req: ReqId) -> bool {
         self.requests.contains_key(&req)
+    }
+
+    // ------------------------------------------------- shared block refs
+
+    /// Canonical residency key of an ever-shared DRAM slot: HBM entries
+    /// for shared blocks are keyed by the slot itself under the
+    /// [`PREFIX_NS`] namespace instead of any one sharer's request id,
+    /// so one sharer's demand load or stage is every sharer's hit and
+    /// the entry outlives any individual sharer's release.
+    fn shared_key(slot: SlotId) -> BlockKey {
+        BlockKey::new(PREFIX_NS, 0, 0, slot.0)
+    }
+
+    /// Take one additional ownership reference on a DRAM slot that is
+    /// entering a second (or later) request's block table. An
+    /// exclusive-from-birth slot implicitly holds one reference; the
+    /// first retain materializes the map entry at 2 (creator + adopter).
+    /// Balanced by [`Self::free_dram_slot`] at every table-removal site.
+    fn retain_slot(&mut self, slot: SlotId) {
+        *self.slot_refs.entry(slot).or_insert(1) += 1;
+    }
+
+    /// Drop one ownership reference and free the slot when the last
+    /// reference goes: the single funnel every DRAM free routes through
+    /// (release / drain / rollback / COW commit). On the final free of
+    /// an ever-shared slot its shared HBM residency is torn down too —
+    /// the stage is cancelled (stage pin returned), the cache entry
+    /// removed and the HBM slot freed. Never called twice for one
+    /// table-removal: refcount conservation is `map count == number of
+    /// block tables holding the slot`.
+    fn free_dram_slot(&mut self, slot: SlotId) {
+        match self.slot_refs.get_mut(&slot) {
+            None => self.dram.free(slot),
+            Some(c) => {
+                *c -= 1;
+                if *c == 0 {
+                    self.slot_refs.remove(&slot);
+                    self.dram.free(slot);
+                    let skey = Self::shared_key(slot);
+                    if self.prefetch.cancel_key(&skey) {
+                        self.cache.unpin(&skey);
+                    }
+                    if let Some(hs) = self.cache.remove(&skey) {
+                        self.hbm.free(hs);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Current ownership references on a slot (1 for exclusive slots).
+    /// Test/diagnostic accessor for refcount-conservation checks.
+    pub fn slot_ref_count(&self, slot: SlotId) -> u32 {
+        self.slot_refs.get(&slot).copied().unwrap_or(1)
+    }
+
+    /// Number of ever-shared slots currently tracked.
+    pub fn n_shared_slots(&self) -> usize {
+        self.slot_refs.len()
+    }
+
+    /// Adopt the first `n_tokens` of `src`'s stored KV into the freshly
+    /// registered, still-empty request `dst` by SHARING the underlying
+    /// DRAM slots (refcounted) instead of copying — the cross-request
+    /// prefix-sharing seam. Covers every layer and head, including a
+    /// partially filled tail block when `n_tokens` is not block-aligned:
+    /// writes into that open tail (by either sharer) privatize it first
+    /// via copy-on-write ([`Self::cow_unshare_tail`]); fully sealed
+    /// shared blocks are immutable by construction, since appends only
+    /// ever extend past them. Sealed-block cuboid metadata is copied
+    /// (cheap, per-block min/max corners). Journaled through the open
+    /// step transaction when one is active, so a rollback returns every
+    /// refcount exactly.
+    ///
+    /// Errors: `Unregistered{dst}` when `dst` is unknown or non-empty,
+    /// `Unregistered{src}` when `src` is unknown or holds fewer than
+    /// `n_tokens` tokens on any layer.
+    pub fn adopt_prefix(
+        &mut self,
+        dst: ReqId,
+        src: ReqId,
+        n_tokens: usize,
+    ) -> Result<(), MemoryError> {
+        if n_tokens == 0 || dst == src {
+            return Ok(());
+        }
+        let bs = self.spec.block_size;
+        let hkv = self.spec.n_kv_heads;
+        let n_layers = self.spec.n_layers;
+        let n_blocks = n_tokens.div_ceil(bs);
+        let sealed = n_tokens / bs;
+        match self.requests.get(&dst) {
+            None => return Err(MemoryError::Unregistered { req: dst }),
+            Some(d) => {
+                if d.len != 0 || d.layer_len.iter().any(|&l| l != 0) {
+                    debug_assert!(false, "adopt_prefix into non-empty request {dst}");
+                    return Err(MemoryError::Unregistered { req: dst });
+                }
+            }
+        }
+        // collect the slots + metadata to adopt (src borrowed immutably)
+        let mut adopted: Vec<Vec<(Vec<SlotId>, Vec<Cuboid>)>> = Vec::with_capacity(n_layers);
+        {
+            let Some(s) = self.requests.get(&src) else {
+                return Err(MemoryError::Unregistered { req: src });
+            };
+            if s.layer_len.iter().any(|&l| l < n_tokens) {
+                return Err(MemoryError::Unregistered { req: src });
+            }
+            for layer in 0..n_layers {
+                let mut heads = Vec::with_capacity(hkv);
+                for h in 0..hkv {
+                    let slots: Vec<SlotId> = s.blocks[layer][h][..n_blocks].to_vec();
+                    let meta: Vec<Cuboid> = s.meta[layer][h][..sealed].to_vec();
+                    heads.push((slots, meta));
+                }
+                adopted.push(heads);
+            }
+        }
+        // capture dst's (empty) pre-txn state so a rollback pops every
+        // adopted slot back out through the refcounted free path
+        self.txn_touch(dst);
+        for heads in &adopted {
+            for (slots, _) in heads {
+                for &slot in slots {
+                    self.retain_slot(slot);
+                }
+            }
+        }
+        let Some(d) = self.requests.get_mut(&dst) else {
+            debug_assert!(false, "dst vanished mid-adopt");
+            return Err(MemoryError::Unregistered { req: dst });
+        };
+        for (layer, heads) in adopted.into_iter().enumerate() {
+            for (h, (slots, meta)) in heads.into_iter().enumerate() {
+                d.blocks[layer][h] = slots;
+                d.meta[layer][h] = meta;
+            }
+            d.layer_len[layer] = n_tokens;
+        }
+        d.len = n_tokens;
+        Ok(())
+    }
+
+    /// Privatize `req`'s partially filled tail block of `layer` before a
+    /// write, if it is shared: allocate a fresh slot, copy the plane,
+    /// swap it into the block table. The old slot's reference is dropped
+    /// at commit (journaled when a transaction is open) so rollback can
+    /// restore the exact pre-step sharing. No-op in the common cases
+    /// (nothing shared anywhere, block-aligned position, or an already
+    /// private tail) — the zero-sharing decode hot loop sees one empty
+    /// map check.
+    fn cow_unshare_tail(&mut self, req: ReqId, layer: usize) -> Result<(), MemoryError> {
+        if self.slot_refs.is_empty() {
+            return Ok(());
+        }
+        let bs = self.spec.block_size;
+        let pos = self.layer_len(req, layer);
+        if pos % bs == 0 {
+            return Ok(()); // appends land in a fresh block, not a shared one
+        }
+        let blk = pos / bs;
+        let hkv = self.spec.n_kv_heads;
+        for h in 0..hkv {
+            let old = match self.requests.get(&req).and_then(|r| r.blocks[layer][h].get(blk)) {
+                Some(&s) => s,
+                None => continue,
+            };
+            if !self.slot_refs.contains_key(&old) {
+                continue;
+            }
+            let Some(fresh) = self.dram.alloc() else {
+                return Err(MemoryError::DramExhausted { req });
+            };
+            // plane copy through the recycled scratch buffer (COW is a
+            // once-per-shared-tail event, but keep it allocation-free)
+            let mut buf = std::mem::take(&mut self.scratch.src);
+            buf.clear();
+            buf.extend_from_slice(self.dram.slot(old));
+            self.dram.slot_mut(fresh).copy_from_slice(&buf);
+            self.scratch.src = buf;
+            if let Some(r) = self.requests.get_mut(&req) {
+                r.blocks[layer][h][blk] = fresh;
+            }
+            if let Some(txn) = &mut self.txn {
+                txn.cow.push((req, layer, h, blk, old, fresh));
+            } else {
+                // no transaction to defer to: drop the reference now
+                self.free_dram_slot(old);
+            }
+        }
+        Ok(())
     }
 
     /// Drain a request for migration: copy every DRAM-tier block plane
@@ -268,7 +479,11 @@ impl KvManager {
         for layer in r.blocks {
             for head in layer {
                 for slot in head {
-                    self.dram.free(slot);
+                    // sharing is dropped at the migration boundary: the
+                    // planes above are deep copies, so the payload is
+                    // self-contained regardless of refcounts; slots a
+                    // live sharer still references stay allocated here
+                    self.free_dram_slot(slot);
                 }
             }
         }
@@ -420,9 +635,18 @@ impl KvManager {
         self.txn = Some(TxnLog::default());
     }
 
-    /// Keep everything the transaction did and close it.
+    /// Keep everything the transaction did and close it. Copy-on-write
+    /// journal entries settle here: the step is final, so the writer's
+    /// reference on each privatized-away shared tail slot drops now
+    /// (deferring the deref to commit is what lets rollback restore the
+    /// old slot — it is guaranteed still allocated while the journal
+    /// holds it).
     pub fn commit_txn(&mut self) {
-        self.txn = None;
+        if let Some(log) = self.txn.take() {
+            for (_, _, _, _, old, _) in log.cow {
+                self.free_dram_slot(old);
+            }
+        }
     }
 
     /// Whether a step transaction is currently open.
@@ -450,6 +674,31 @@ impl KvManager {
         }
         let bs = self.spec.block_size;
         let hkv = self.spec.n_kv_heads;
+        // 1. copy-on-write undo: put the shared slot back in the
+        // writer's block table and free the private copy. The old slot
+        // is guaranteed still allocated — the journal's deferred
+        // reference (dropped only at commit) kept it alive.
+        for (req, layer, h, blk, old, fresh) in log.cow.into_iter().rev() {
+            let restored = match self.requests.get_mut(&req) {
+                Some(r) => {
+                    r.blocks[layer][h][blk] = old;
+                    true
+                }
+                None => false,
+            };
+            if restored {
+                self.free_dram_slot(fresh);
+            } else {
+                // writer released mid-transaction: its table (holding
+                // `fresh`) was already freed; only the journal's
+                // deferred reference on the shared slot remains to drop
+                self.free_dram_slot(old);
+            }
+        }
+        // 2. truncate every touched request to its pre-step lengths;
+        // frees route through the refcounted funnel so adopted prefix
+        // slots return their references instead of being double-freed
+        let mut to_free: Vec<SlotId> = Vec::new();
         for (req, (len, layer_len)) in log.touched {
             // a request released mid-transaction already freed everything
             let Some(r) = self.requests.get_mut(&req) else { continue };
@@ -459,7 +708,7 @@ impl KvManager {
                 for h in 0..hkv {
                     while r.blocks[layer][h].len() > keep_blocks {
                         let Some(slot) = r.blocks[layer][h].pop() else { break };
-                        self.dram.free(slot);
+                        to_free.push(slot);
                     }
                     r.meta[layer][h].truncate(keep_sealed);
                 }
@@ -467,13 +716,24 @@ impl KvManager {
             }
             r.len = len;
         }
+        for slot in to_free {
+            self.free_dram_slot(slot);
+        }
         for key in log.cache_inserts {
-            let sealed = self
-                .requests
-                .get(&key.req)
-                .map(|r| r.layer_len[key.layer as usize] / bs)
-                .unwrap_or(0);
-            if (key.block as usize) >= sealed {
+            let keep = if key.req == PREFIX_NS {
+                // shared entry: keyed by slot, valid while the backing
+                // slot is still shared (a last-reference free above
+                // already tore its entry down)
+                self.slot_refs.contains_key(&SlotId(key.block))
+            } else {
+                let sealed = self
+                    .requests
+                    .get(&key.req)
+                    .map(|r| r.layer_len[key.layer as usize] / bs)
+                    .unwrap_or(0);
+                (key.block as usize) < sealed
+            };
+            if !keep {
                 if let Some(slot) = self.cache.remove(&key) {
                     self.hbm.free(slot);
                 }
@@ -519,6 +779,9 @@ impl KvManager {
         debug_assert_eq!(k.len(), hkv * t_pad * dh);
         debug_assert_eq!(v.len(), hkv * t_pad * dh);
         self.txn_touch(req);
+        // writing into a shared (adopted) open tail block must not be
+        // visible to other sharers: unshare it first (copy-on-write)
+        self.cow_unshare_tail(req, layer)?;
         let base_len = self.layer_len(req, layer);
 
         // contiguous source tensor (K planes then V planes) + scatter
@@ -603,6 +866,8 @@ impl KvManager {
         let (bs, dh, hkv) = (self.spec.block_size, self.spec.head_dim, self.spec.n_kv_heads);
         debug_assert_eq!(k_row.len(), hkv * dh);
         self.txn_touch(req);
+        // copy-on-write before appending into a shared open tail
+        self.cow_unshare_tail(req, layer)?;
         let pos = self.layer_len(req, layer);
         let blk = pos / bs;
         let off = pos % bs;
@@ -810,7 +1075,15 @@ impl KvManager {
             let mut alloc_err = None;
             'heads: for (h, sel) in sealed_sel.iter().enumerate() {
                 for &b in sel {
-                    let key = BlockKey::new(req, layer as u16, h as u16, b);
+                    let dram_slot = self.requests[&req].blocks[layer][h][b as usize];
+                    // shared (prefix-adopted) blocks carry ONE residency
+                    // entry keyed by slot: any sharer's load or stage is
+                    // every sharer's hit
+                    let key = if self.slot_refs.contains_key(&dram_slot) {
+                        Self::shared_key(dram_slot)
+                    } else {
+                        BlockKey::new(req, layer as u16, h as u16, b)
+                    };
                     if self.cache.get(&key).is_some() {
                         if self.prefetch.note_access(&key) {
                             // consume the stage pin: the prefetcher earned
@@ -828,7 +1101,6 @@ impl KvManager {
                                 break 'heads;
                             }
                         };
-                        let dram_slot = self.requests[&req].blocks[layer][h][b as usize];
                         to_load.push((dram_slot, hbm_slot));
                         miss_keys.push(key);
                     }
@@ -871,7 +1143,12 @@ impl KvManager {
             debug_assert!(sel.len() + 1 <= budget_blocks, "selection exceeds budget");
             for (slot_idx, &b) in sel.iter().enumerate() {
                 let plane: &[f32] = if self.offload {
-                    let key = BlockKey::new(req, layer as u16, h as u16, b);
+                    let dram_slot = self.requests[&req].blocks[layer][h][b as usize];
+                    let key = if self.slot_refs.contains_key(&dram_slot) {
+                        Self::shared_key(dram_slot)
+                    } else {
+                        BlockKey::new(req, layer as u16, h as u16, b)
+                    };
                     // sparselint: allow(no-panic) -- phase 1 of this gather loaded and PINNED every selected block; a pinned entry cannot be evicted, so absence here is a cache-accounting bug that must fail fast
                     let hbm_slot = *self.cache.peek(&key).expect("resident after load");
                     self.hbm.slot(hbm_slot)
@@ -952,11 +1229,6 @@ impl KvManager {
         let policy = StagingPolicy { max_blocks, headroom };
         let mut staged = 0usize;
         for key in plan {
-            match policy.admit(&self.cache, key, staged) {
-                StageAdmission::Stop => break,
-                StageAdmission::SkipResident => continue,
-                StageAdmission::Admit => {}
-            }
             let (layer, head, blk) =
                 (key.layer as usize, key.head as usize, key.block as usize);
             let Some(r) = self.requests.get(&key.req) else { continue };
@@ -969,6 +1241,18 @@ impl KvManager {
                 continue;
             }
             let Some(&dram_slot) = r.blocks[layer][head].get(blk) else { continue };
+            // shared blocks stage under their slot-keyed residency
+            // entry, so skip-resident sees other sharers' stages
+            let key = if self.slot_refs.contains_key(&dram_slot) {
+                Self::shared_key(dram_slot)
+            } else {
+                *key
+            };
+            match policy.admit(&self.cache, &key, staged) {
+                StageAdmission::Stop => break,
+                StageAdmission::SkipResident => continue,
+                StageAdmission::Admit => {}
+            }
             let hbm_slot = match self.alloc_hbm_slot(key.req) {
                 Ok(s) => s,
                 Err(_) => break,
@@ -983,7 +1267,7 @@ impl KvManager {
             if let Some((_, freed)) = stage_block(
                 &mut self.cache,
                 &mut self.prefetch,
-                *key,
+                key,
                 hbm_slot,
                 slot_floats * 4,
                 defer,
@@ -1696,5 +1980,203 @@ mod tests {
         assert_eq!(m.seq_len(1), 12);
         assert_eq!(m.n_sealed(1, 0), 3);
         assert_eq!(m.open_fill(1, 0), 0);
+    }
+
+    // ------------------------------------------ cross-request prefix sharing
+
+    /// Prefill `req` with `t` tokens of the standard pattern on both layers.
+    fn prefill_req(m: &mut KvManager, req: ReqId, t: usize) {
+        m.register(req);
+        let (k, v) = prefill_kv(2, t, 4);
+        for layer in 0..2 {
+            m.append_prefill_layer(req, layer, &k, &v, t, t).unwrap();
+        }
+    }
+
+    #[test]
+    fn adopt_prefix_shares_slots_without_copying() {
+        let mut m = mk_manager(true, 64);
+        prefill_req(&mut m, 1, 12); // 3 blocks/head/layer
+        let used = m.dram_bytes_used();
+        m.register(2);
+        m.adopt_prefix(2, 1, 8).unwrap(); // share the first 2 blocks
+        assert_eq!(m.dram_bytes_used(), used, "adoption must not allocate");
+        assert_eq!(m.seq_len(2), 8);
+        assert_eq!(m.n_sealed(2, 0), 2);
+        // refcount == live sharers on every adopted slot
+        assert_eq!(m.n_shared_slots(), 2 * 2 * 2, "2 layers x 2 heads x 2 blocks");
+        let slot = m.requests[&2].blocks[0][0][0];
+        assert_eq!(slot, m.requests[&1].blocks[0][0][0], "same physical slot");
+        assert_eq!(m.slot_ref_count(slot), 2);
+        // block-aligned append: a fresh exclusive block, no COW, donor intact
+        for layer in 0..2 {
+            m.append_decode_token(2, layer, &[7.0; 8], &[7.0; 8]).unwrap();
+        }
+        assert_eq!(m.n_shared_slots(), 8, "aligned append never privatizes");
+        assert_eq!(m.seq_len(1), 12);
+        // donor finishes first: shared slots survive on the sharer's refs
+        m.release(1);
+        assert_eq!(m.slot_ref_count(slot), 1);
+        assert!(m.dram_bytes_used() > 0);
+        m.release(2);
+        assert_eq!(m.dram_bytes_used(), 0, "last release frees everything");
+        assert_eq!(m.n_shared_slots(), 0);
+    }
+
+    #[test]
+    fn write_into_shared_open_tail_copies_on_write() {
+        let mut m = mk_manager(true, 64);
+        prefill_req(&mut m, 1, 6); // 1 sealed block + 2 open tokens
+        m.register(2);
+        m.adopt_prefix(2, 1, 6).unwrap(); // includes the partial tail block
+        let shared_tail = m.requests[&1].blocks[0][0][1];
+        assert_eq!(m.slot_ref_count(shared_tail), 2);
+        // sharer appends: the tail must privatize, the donor keeps its slot
+        for layer in 0..2 {
+            m.append_decode_token(2, layer, &[9.0; 8], &[9.0; 8]).unwrap();
+        }
+        let tail2 = m.requests[&2].blocks[0][0][1];
+        assert_ne!(tail2, shared_tail, "tail privatized before the write");
+        assert_eq!(m.requests[&1].blocks[0][0][1], shared_tail, "donor untouched");
+        assert_eq!(m.slot_ref_count(shared_tail), 1, "sharer's ref moved off");
+        // the copied plane carries the donor's bytes: token 4 (tail, off 0)
+        // of head 0 has k[d=0] = 4.0 from the prefill pattern
+        assert_eq!(m.dram.slot(tail2)[0], 4.0, "COW copied the donor bytes");
+        assert_eq!(m.seq_len(2), 7);
+        assert_eq!(m.seq_len(1), 6, "donor length unchanged");
+        m.release(1);
+        m.release(2);
+        assert_eq!(m.dram_bytes_used(), 0);
+    }
+
+    #[test]
+    fn txn_rollback_returns_adopted_refs_and_undoes_cow() {
+        let mut m = mk_manager(true, 64);
+        prefill_req(&mut m, 1, 6);
+        let shared_tail = m.requests[&1].blocks[0][0][1];
+        let dram_before = m.dram_bytes_used();
+
+        // adoption inside a rolled-back step: every refcount returns
+        m.register(2);
+        m.begin_txn();
+        m.adopt_prefix(2, 1, 6).unwrap();
+        assert_eq!(m.slot_ref_count(shared_tail), 2);
+        m.rollback_txn();
+        assert_eq!(m.slot_ref_count(shared_tail), 1, "rollback returned the ref");
+        assert_eq!(m.seq_len(2), 0);
+        assert_eq!(m.dram_bytes_used(), dram_before);
+
+        // COW inside a rolled-back step: the shared slot returns to the
+        // table and the private copy is freed — byte-identical state
+        m.adopt_prefix(2, 1, 6).unwrap();
+        let dram_shared = m.dram_bytes_used();
+        m.begin_txn();
+        for layer in 0..2 {
+            m.append_decode_token(2, layer, &[9.0; 8], &[9.0; 8]).unwrap();
+        }
+        assert_ne!(m.requests[&2].blocks[0][0][1], shared_tail);
+        m.rollback_txn();
+        assert_eq!(m.requests[&2].blocks[0][0][1], shared_tail, "COW undone");
+        assert_eq!(m.slot_ref_count(shared_tail), 2, "both sharers again");
+        assert_eq!(m.seq_len(2), 6);
+        assert_eq!(m.dram_bytes_used(), dram_shared, "private copies freed");
+        // the same step re-runs clean and commits: the old shared slot's
+        // reference settles at commit (donor keeps it; sharer owns a copy)
+        m.begin_txn();
+        for layer in 0..2 {
+            m.append_decode_token(2, layer, &[9.0; 8], &[9.0; 8]).unwrap();
+        }
+        m.commit_txn();
+        assert_eq!(m.slot_ref_count(shared_tail), 1);
+        assert_eq!(m.requests[&1].blocks[0][0][1], shared_tail);
+        m.release(1);
+        m.release(2);
+        assert_eq!(m.dram_bytes_used(), 0);
+        assert_eq!(m.n_shared_slots(), 0);
+    }
+
+    #[test]
+    fn shared_block_residency_one_load_serves_every_sharer() {
+        let mut m = mk_manager(true, 64);
+        prefill_req(&mut m, 1, 8); // 2 sealed blocks/head/layer
+        m.register(2);
+        m.adopt_prefix(2, 1, 8).unwrap();
+        let budget = 3;
+        let s = budget * 4;
+        let sel = vec![vec![0u32, 1u32], vec![0u32, 1u32]];
+        let mut ko = vec![0.0; 2 * s * 4];
+        let mut vo = vec![0.0; 2 * s * 4];
+        let mut mo = vec![0.0; 2 * s];
+        // donor's gather pays the loads under the slot-keyed entries...
+        m.gather_into(1, 0, &sel, budget, &mut ko, &mut vo, &mut mo).unwrap();
+        let it1 = m.end_iteration();
+        assert_eq!(it1.blocks_loaded, 4);
+        // ...and the sharer's gather of the SAME blocks is all hits
+        let mut ko2 = vec![0.0; 2 * s * 4];
+        let mut vo2 = vec![0.0; 2 * s * 4];
+        let mut mo2 = vec![0.0; 2 * s];
+        m.gather_into(2, 0, &sel, budget, &mut ko2, &mut vo2, &mut mo2).unwrap();
+        let it2 = m.end_iteration();
+        assert_eq!(it2.blocks_loaded, 0, "one sharer's load is every sharer's hit");
+        assert_eq!(ko2, ko, "shared residency reads the same bytes");
+        // donor finishing does not evict the shared residency...
+        m.release(1);
+        m.gather_into(2, 0, &sel, budget, &mut ko2, &mut vo2, &mut mo2).unwrap();
+        let it3 = m.end_iteration();
+        assert_eq!(it3.blocks_loaded, 0, "residency outlives the donor");
+        // ...but the LAST release tears it down
+        m.release(2);
+        assert_eq!(m.hbm_bytes_used(), 0);
+        assert_eq!(m.dram_bytes_used(), 0);
+    }
+
+    #[test]
+    fn shared_prefetch_stage_is_cancelled_at_last_release() {
+        let mut m = mk_manager(true, 64);
+        prefill_req(&mut m, 1, 8);
+        m.register(2);
+        m.adopt_prefix(2, 1, 8).unwrap();
+        // stage a shared block: the plan key is per-request, the stage
+        // lands under the slot-keyed shared entry
+        let plan = [BlockKey::new(1, 0, 0, 0), BlockKey::new(2, 0, 1, 0)];
+        assert_eq!(m.prefetch_working_set(&plan, 64, 0, false), 2);
+        // the same blocks named through the OTHER sharer are already
+        // resident — skip-resident sees the shared entry
+        let plan2 = [BlockKey::new(2, 0, 0, 0), BlockKey::new(1, 0, 1, 0)];
+        assert_eq!(m.prefetch_working_set(&plan2, 64, 0, false), 0);
+        // releasing one sharer cancels nothing (its id keys no stages)...
+        m.release(1);
+        assert_eq!(m.prefetch_stats().cancelled, 0);
+        // ...the last sharer's release cancels the orphaned stages and
+        // returns their pins (pin conservation at shared teardown)
+        m.release(2);
+        assert_eq!(m.prefetch_stats().cancelled, 2);
+        assert_eq!(m.hbm_bytes_used(), 0);
+        let iter = m.end_iteration();
+        assert_eq!(iter.prefetch_wasted, 0, "cancelled stages are not wasted");
+    }
+
+    #[test]
+    fn drain_of_a_sharer_deep_copies_and_leaves_the_donor_whole() {
+        let mut m = mk_manager(true, 64);
+        prefill_req(&mut m, 1, 8);
+        m.register(2);
+        m.adopt_prefix(2, 1, 8).unwrap();
+        let used_shared = m.dram_bytes_used();
+        // the payload carries FULL bytes: sharing never crosses the
+        // migration boundary
+        let drained = m.drain_request(2).expect("sharer must drain");
+        assert_eq!(drained.total_bytes(), 8 * m.block_bytes());
+        let donor_slot = m.requests[&1].blocks[0][0][0];
+        assert_eq!(m.slot_ref_count(donor_slot), 1, "drain returned its refs");
+        assert_eq!(m.dram_bytes_used(), used_shared, "donor keeps its slots");
+        assert_eq!(m.seq_len(1), 8);
+        // import on the far side is fully private KV
+        let mut dst = mk_manager(true, 64);
+        dst.import_request(drained).unwrap();
+        assert_eq!(dst.seq_len(2), 8);
+        assert_eq!(dst.n_shared_slots(), 0);
+        m.release(1);
+        assert_eq!(m.dram_bytes_used(), 0);
     }
 }

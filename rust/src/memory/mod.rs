@@ -21,6 +21,7 @@ pub mod manager;
 pub mod metadata;
 pub mod pool;
 pub mod prefetch;
+pub mod prefix;
 pub mod staging_policy;
 pub mod transfer;
 
@@ -29,6 +30,7 @@ pub use manager::{KvManager, ReqId};
 pub use metadata::Cuboid;
 pub use pool::{BlockPool, SlotId};
 pub use prefetch::{PrefetchEngine, PrefetchStats};
+pub use prefix::{block_hashes, AcquiredPath, PrefixIndex, PREFIX_NS};
 pub use staging_policy::{StageAdmission, StagingPolicy};
 pub use transfer::{engine_for, TransferEngine, TransferStats};
 

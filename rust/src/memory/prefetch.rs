@@ -189,6 +189,19 @@ impl PrefetchEngine {
         dropped
     }
 
+    /// Drop one staged block (shared-prefix teardown: a slot-keyed
+    /// residency entry dies when its LAST sharer releases, which
+    /// `cancel_request` — keyed by request id — cannot see). Returns
+    /// whether the key was staged, so the owner can drop its stage pin.
+    pub fn cancel_key(&mut self, key: &BlockKey) -> bool {
+        let was = self.staged.remove(key) || self.staged_next.remove(key);
+        if was {
+            self.stats.cancelled += 1;
+        }
+        self.debug_assert_conserved();
+        was
+    }
+
     /// Counter conservation: every issued block is, at any instant,
     /// exactly one of still-staged / hit / wasted / cancelled. The
     /// pipelined executor makes this load-bearing: deferred stages
@@ -295,6 +308,22 @@ mod tests {
         assert_eq!(e.stats.cancelled, 2);
         assert_eq!(e.n_staged(), 1);
         assert!(e.is_staged(&key(2, 0)));
+    }
+
+    #[test]
+    fn cancel_key_drops_one_stage_and_counts_it() {
+        let mut e = PrefetchEngine::new(0);
+        e.mark_staged(key(1, 0), 10);
+        e.mark_staged_deferred(key(1, 1), 10);
+        assert!(e.cancel_key(&key(1, 1)), "deferred stage is cancellable");
+        assert!(!e.cancel_key(&key(9, 9)), "unstaged key is a no-op");
+        assert_eq!(e.stats.cancelled, 1);
+        assert_eq!(e.n_staged(), 1);
+        assert!(e.note_access(&key(1, 0)));
+        assert_eq!(
+            e.stats.issued_blocks,
+            e.stats.hits + e.stats.wasted + e.stats.cancelled
+        );
     }
 
     #[test]

@@ -1,0 +1,461 @@
+//! Cross-request KV prefix sharing: a radix (longest-common-prefix)
+//! index over block-aligned prompt hashes, with per-node refcounts.
+//!
+//! Each node is one *sealed, block-aligned* prompt block, keyed by
+//! `(parent node, chained block hash)` — the chain folds the parent's
+//! hash into every block hash, so a node id identifies the full prefix
+//! *content* up to and including its block, not just the block itself.
+//! Admission consults [`PrefixIndex::lookup`] (read-only, alloc-free —
+//! the serving hot path), then [`PrefixIndex::acquire_path`] publishes
+//! the request's own block-aligned prefix and takes a reference on
+//! every node along the path.
+//!
+//! Ownership invariant (see DESIGN.md "Prefix sharing"):
+//!
+//! - a node's `refs` counts **live sharers** — admitted requests whose
+//!   acquired path passes through it;
+//! - `refs == 0` nodes are *cached*: their KV stays resident in the
+//!   DRAM tier so the next conversation turn re-enters warm, but they
+//!   are evictable (leaf-first LRU, [`PrefixIndex::evict_unreferenced`])
+//!   whenever admission needs the bytes back;
+//! - a node with `refs > 0` is never evicted — that is the "shared
+//!   block evictable only when the last reference drops" rule;
+//! - the open (partially filled) tail block is **never** published:
+//!   paths cover whole blocks only, so every write lands in private
+//!   blocks (copy-on-write at the open tail by construction; the
+//!   `KvManager` additionally COWs adopted open tails defensively).
+//!
+//! Refcount conservation (checked by sparselint's pin-conservation
+//! pass over this file): every `acquire_path` is balanced by exactly
+//! one `release_path` (finish/cancel/migrate), and eviction only ever
+//! removes zero-ref nodes.
+
+use std::collections::HashMap;
+
+/// Namespace bit for shared-prefix residency keys: cache entries for a
+/// shared prefix block are keyed under `PREFIX_NS | chain id` instead
+/// of the sharer's request id, so one sharer's stage or demand load is
+/// every sharer's hit and the entry survives any individual sharer's
+/// release. Real request ids stay below this bit (u32 ids assigned
+/// sequentially); the namespace cannot collide with a live request.
+pub const PREFIX_NS: u32 = 0x8000_0000;
+
+const NO_PARENT: u32 = u32::MAX;
+
+#[derive(Debug, Clone)]
+struct Node {
+    parent: u32,
+    hash: u64,
+    /// Live sharers whose acquired path includes this node.
+    refs: u32,
+    /// Child nodes (eviction is leaf-first).
+    children: u32,
+    /// LRU recency for cached (zero-ref) eviction.
+    tick: u64,
+}
+
+/// Result of publishing one request's prefix path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AcquiredPath {
+    /// Deepest node of the path (the request's chain id); `NO_PARENT`
+    /// sentinel never escapes — an empty path returns `None` upstream.
+    pub tail: u32,
+    /// Blocks that already existed (the longest-common-prefix match).
+    pub matched_blocks: usize,
+    /// Blocks newly created (the request's published suffix).
+    pub new_blocks: usize,
+}
+
+/// Radix/LCP index over block-aligned prompt hashes with per-node
+/// refcounts. Owns no KV bytes itself — it is the *naming* layer: the
+/// scheduler charges `blocks * per-block KV bytes` for resident nodes
+/// and the backends key shared HBM residency by chain id.
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    nodes: Vec<Option<Node>>,
+    /// `(parent, chained hash) -> node`.
+    map: HashMap<(u32, u64), u32>,
+    free: Vec<u32>,
+    tick: u64,
+    /// Resident nodes (live + cached).
+    n_nodes: usize,
+    /// Nodes with `refs > 0`.
+    n_live: usize,
+}
+
+/// Chain-hash a prompt into per-block prefix hashes: `out[i]` digests
+/// tokens `[0, (i+1) * block)` (FNV-1a folded over the previous block's
+/// hash). Only whole blocks are hashed — the partial tail is private.
+pub fn block_hashes(tokens: &[i32], block: usize, out: &mut Vec<u64>) {
+    out.clear();
+    if block == 0 {
+        return;
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut in_block = 0usize;
+    for &t in tokens {
+        for b in (t as u32).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        in_block += 1;
+        if in_block == block {
+            out.push(h);
+            in_block = 0;
+        }
+    }
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resident prefix blocks (live + cached) — each occupies one
+    /// DRAM-tier block column in the scheduler's accounting.
+    pub fn total_blocks(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// Blocks referenced by at least one live sharer (not evictable).
+    pub fn live_blocks(&self) -> usize {
+        self.n_live
+    }
+
+    /// Cached blocks reclaimable on demand.
+    pub fn evictable_blocks(&self) -> usize {
+        self.n_nodes - self.n_live
+    }
+
+    /// Reference count of one node (tests / conservation checks).
+    pub fn node_refs(&self, id: u32) -> u32 {
+        self.nodes
+            .get(id as usize)
+            .and_then(|n| n.as_ref())
+            .map(|n| n.refs)
+            .unwrap_or(0)
+    }
+
+    /// Longest-common-prefix match: how many leading block hashes are
+    /// already resident. Read-only; the admission fast path.
+    // sparselint: hot
+    pub fn lookup(&self, hashes: &[u64]) -> usize {
+        let mut parent = NO_PARENT;
+        let mut matched = 0usize;
+        for &h in hashes {
+            match self.map.get(&(parent, h)) {
+                Some(&id) => {
+                    parent = id;
+                    matched += 1;
+                }
+                None => break,
+            }
+        }
+        matched
+    }
+
+    /// Publish a request's block-aligned prefix: walk the chain,
+    /// creating nodes for the unmatched suffix, and take one reference
+    /// on every node along the path. Balanced by [`Self::release_path`].
+    pub fn acquire_path(&mut self, hashes: &[u64]) -> Option<AcquiredPath> {
+        if hashes.is_empty() {
+            return None;
+        }
+        self.tick += 1;
+        let mut parent = NO_PARENT;
+        let mut created = 0usize;
+        for &h in hashes {
+            let id = match self.map.get(&(parent, h)) {
+                Some(&id) => id,
+                None => {
+                    let id = self.alloc_node(Node {
+                        parent,
+                        hash: h,
+                        refs: 0,
+                        children: 0,
+                        tick: self.tick,
+                    });
+                    self.map.insert((parent, h), id);
+                    if parent != NO_PARENT {
+                        if let Some(p) = self.nodes[parent as usize].as_mut() {
+                            p.children += 1;
+                        }
+                    }
+                    self.n_nodes += 1;
+                    created += 1;
+                    id
+                }
+            };
+            if let Some(n) = self.nodes[id as usize].as_mut() {
+                if n.refs == 0 {
+                    self.n_live += 1;
+                }
+                n.refs += 1;
+                n.tick = self.tick;
+            }
+            parent = id;
+        }
+        let matched_blocks = hashes.len() - created;
+        Some(AcquiredPath { tail: parent, matched_blocks, new_blocks: created })
+    }
+
+    /// Drop one sharer's references along the chain ending at `tail`
+    /// (walks parent links). Nodes stay resident as cached entries —
+    /// eviction reclaims them only under admission pressure.
+    pub fn release_path(&mut self, tail: u32) {
+        let mut cur = tail;
+        while cur != NO_PARENT {
+            let Some(n) = self.nodes.get_mut(cur as usize).and_then(|n| n.as_mut()) else {
+                debug_assert!(false, "release_path hit a freed node {cur}");
+                return;
+            };
+            debug_assert!(n.refs > 0, "release of unreferenced prefix node {cur}");
+            n.refs = n.refs.saturating_sub(1);
+            if n.refs == 0 {
+                self.n_live -= 1;
+            }
+            cur = n.parent;
+        }
+    }
+
+    /// Undo the node creation of a just-released [`Self::acquire_path`]:
+    /// remove up to `created` zero-ref, childless nodes walking up from
+    /// `tail`. Used when admission acquires a path and then fails the
+    /// capacity check — the newly published suffix has no KV behind it
+    /// and must not linger as a phantom match. Returns nodes removed
+    /// (stops early at a node another request still references or has
+    /// extended past).
+    pub fn rollback_path(&mut self, tail: u32, created: usize) -> usize {
+        let mut cur = tail;
+        let mut removed = 0usize;
+        while removed < created && cur != NO_PARENT {
+            let Some(n) = self.nodes.get(cur as usize).and_then(|n| n.as_ref()) else {
+                break;
+            };
+            if n.refs != 0 || n.children != 0 {
+                break;
+            }
+            let (parent, hash) = (n.parent, n.hash);
+            self.nodes[cur as usize] = None;
+            self.map.remove(&(parent, hash));
+            if parent != NO_PARENT {
+                if let Some(p) = self.nodes[parent as usize].as_mut() {
+                    p.children -= 1;
+                }
+            }
+            self.free.push(cur);
+            self.n_nodes -= 1;
+            removed += 1;
+            cur = parent;
+        }
+        removed
+    }
+
+    /// Depth (blocks) of the chain ending at `tail`.
+    pub fn path_blocks(&self, tail: u32) -> usize {
+        let mut cur = tail;
+        let mut depth = 0usize;
+        while cur != NO_PARENT {
+            let Some(n) = self.nodes.get(cur as usize).and_then(|n| n.as_ref()) else {
+                break;
+            };
+            depth += 1;
+            cur = n.parent;
+        }
+        depth
+    }
+
+    /// Evict up to `max_blocks` zero-ref nodes, leaf-first in LRU
+    /// order. Returns blocks actually reclaimed. A zero-ref node's
+    /// whole subtree is zero-ref (a parent carries every reference its
+    /// children do), so repeated leaf eviction drains entire cached
+    /// chains.
+    pub fn evict_unreferenced(&mut self, max_blocks: usize) -> usize {
+        let mut evicted = 0usize;
+        while evicted < max_blocks {
+            let mut victim: Option<(u64, u32)> = None;
+            for (i, slot) in self.nodes.iter().enumerate() {
+                if let Some(n) = slot {
+                    if n.refs == 0 && n.children == 0 {
+                        let cand = (n.tick, i as u32);
+                        if victim.map(|v| cand < v).unwrap_or(true) {
+                            victim = Some(cand);
+                        }
+                    }
+                }
+            }
+            let Some((_, id)) = victim else { break };
+            let Some(n) = self.nodes[id as usize].take() else { break };
+            self.map.remove(&(n.parent, n.hash));
+            if n.parent != NO_PARENT {
+                if let Some(p) = self.nodes[n.parent as usize].as_mut() {
+                    p.children -= 1;
+                }
+            }
+            self.free.push(id);
+            self.n_nodes -= 1;
+            evicted += 1;
+        }
+        evicted
+    }
+
+    fn alloc_node(&mut self, node: Node) -> u32 {
+        match self.free.pop() {
+            Some(id) => {
+                self.nodes[id as usize] = Some(node);
+                id
+            }
+            None => {
+                self.nodes.push(Some(node));
+                (self.nodes.len() - 1) as u32
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn hashes(tokens: &[i32], block: usize) -> Vec<u64> {
+        let mut out = Vec::new();
+        block_hashes(tokens, block, &mut out);
+        out
+    }
+
+    #[test]
+    fn block_hashes_cover_whole_blocks_only() {
+        let t: Vec<i32> = (0..10).collect();
+        assert_eq!(hashes(&t, 4).len(), 2, "partial tail block is private");
+        assert_eq!(hashes(&t, 16).len(), 0);
+        // chained: a different first block changes every later hash
+        let mut t2 = t.clone();
+        t2[0] = 99;
+        let (a, b) = (hashes(&t, 4), hashes(&t2, 4));
+        assert_ne!(a[0], b[0]);
+        assert_ne!(a[1], b[1], "chain must fold the past in");
+        // identical prefixes hash identically
+        assert_eq!(a, hashes(&t, 4));
+    }
+
+    #[test]
+    fn lookup_matches_longest_common_prefix() {
+        let mut ix = PrefixIndex::new();
+        let sys: Vec<i32> = (0..16).collect();
+        let a = ix.acquire_path(&hashes(&sys, 4)).unwrap();
+        assert_eq!(a.matched_blocks, 0);
+        assert_eq!(a.new_blocks, 4);
+        // same prompt: full match
+        assert_eq!(ix.lookup(&hashes(&sys, 4)), 4);
+        // shared first 8 tokens, divergent tail: LCP = 2 blocks
+        let mut other = sys.clone();
+        other[9] = -1;
+        assert_eq!(ix.lookup(&hashes(&other, 4)), 2);
+        // disjoint prompt: no match
+        let cold: Vec<i32> = (100..116).collect();
+        assert_eq!(ix.lookup(&hashes(&cold, 4)), 0);
+    }
+
+    #[test]
+    fn refcount_equals_live_sharers_across_interleavings() {
+        let mut ix = PrefixIndex::new();
+        let sys: Vec<i32> = (0..16).collect();
+        let h = hashes(&sys, 4);
+        let a = ix.acquire_path(&h).unwrap();
+        let b = ix.acquire_path(&h).unwrap();
+        assert_eq!(a.tail, b.tail, "identical prefixes share the chain");
+        assert_eq!(b.matched_blocks, 4);
+        assert_eq!(b.new_blocks, 0);
+        assert_eq!(ix.node_refs(a.tail), 2);
+        assert_eq!(ix.live_blocks(), 4);
+        // a third sharer with a longer prompt extends the chain
+        let mut long = sys.clone();
+        long.extend(16..24);
+        let c = ix.acquire_path(&hashes(&long, 4)).unwrap();
+        assert_eq!(c.matched_blocks, 4);
+        assert_eq!(c.new_blocks, 2);
+        assert_eq!(ix.node_refs(a.tail), 3, "shared part carries all sharers");
+        assert_eq!(ix.node_refs(c.tail), 1);
+        // releases drop exactly one sharer each; nodes become cached
+        ix.release_path(a.tail);
+        ix.release_path(b.tail);
+        assert_eq!(ix.node_refs(a.tail), 1, "c still passes through");
+        ix.release_path(c.tail);
+        assert_eq!(ix.node_refs(a.tail), 0);
+        assert_eq!(ix.live_blocks(), 0);
+        assert_eq!(ix.total_blocks(), 6, "cached chains stay resident");
+        assert_eq!(ix.evictable_blocks(), 6);
+    }
+
+    #[test]
+    fn eviction_is_leaf_first_and_never_touches_live_nodes() {
+        let mut ix = PrefixIndex::new();
+        let sys: Vec<i32> = (0..16).collect();
+        let h = hashes(&sys, 4);
+        let a = ix.acquire_path(&h).unwrap();
+        // a live chain cannot be evicted at all
+        assert_eq!(ix.evict_unreferenced(100), 0);
+        ix.release_path(a.tail);
+        // partial eviction removes leaves only; the surviving ancestor
+        // chain still matches shorter prefixes
+        assert_eq!(ix.evict_unreferenced(2), 2);
+        assert_eq!(ix.total_blocks(), 2);
+        assert_eq!(ix.lookup(&h), 2);
+        // re-entry re-acquires the cached stem and republishes the rest
+        let again = ix.acquire_path(&h).unwrap();
+        assert_eq!(again.matched_blocks, 2);
+        assert_eq!(again.new_blocks, 2);
+        ix.release_path(again.tail);
+        assert_eq!(ix.evict_unreferenced(100), 4);
+        assert_eq!(ix.total_blocks(), 0);
+    }
+
+    #[test]
+    fn cached_reentry_counts_as_match() {
+        // the multi-turn conversation pattern: finish, then re-enter
+        // with the same history — the cached chain must be a warm hit
+        let mut ix = PrefixIndex::new();
+        let turn1: Vec<i32> = (0..32).collect();
+        let h1 = hashes(&turn1, 4);
+        let p1 = ix.acquire_path(&h1).unwrap();
+        ix.release_path(p1.tail);
+        let mut turn2 = turn1.clone();
+        turn2.extend(32..48);
+        let p2 = ix.acquire_path(&hashes(&turn2, 4)).unwrap();
+        assert_eq!(p2.matched_blocks, 8, "warm history must match in full");
+        assert_eq!(p2.new_blocks, 4);
+        assert_eq!(ix.node_refs(p1.tail), 1, "turn 2 revives the cached chain");
+    }
+
+    #[test]
+    fn rollback_path_undoes_a_failed_admissions_publication() {
+        let mut ix = PrefixIndex::new();
+        let sys: Vec<i32> = (0..8).collect();
+        let h = hashes(&sys, 4);
+        let a = ix.acquire_path(&h).unwrap();
+        // extend with a new suffix, then roll the extension back
+        let mut long = sys.clone();
+        long.extend(8..16);
+        let b = ix.acquire_path(&hashes(&long, 4)).unwrap();
+        assert_eq!(b.new_blocks, 2);
+        ix.release_path(b.tail);
+        assert_eq!(ix.rollback_path(b.tail, b.new_blocks), 2);
+        assert_eq!(ix.total_blocks(), 2, "only the original chain remains");
+        assert_eq!(ix.node_refs(a.tail), 1, "sharer a is untouched");
+        // rollback stops at a node someone else references
+        ix.release_path(a.tail);
+        let c = ix.acquire_path(&h).unwrap();
+        ix.release_path(c.tail);
+        assert_eq!(c.new_blocks, 0);
+        assert_eq!(ix.rollback_path(c.tail, 0), 0, "nothing was created");
+    }
+
+    #[test]
+    fn path_blocks_walks_the_chain() {
+        let mut ix = PrefixIndex::new();
+        let t: Vec<i32> = (0..20).collect();
+        let p = ix.acquire_path(&hashes(&t, 4)).unwrap();
+        assert_eq!(ix.path_blocks(p.tail), 5);
+    }
+}

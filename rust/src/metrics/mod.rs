@@ -192,6 +192,15 @@ pub struct RunMetrics {
     pub pipeline_replans: usize,
     /// Per-layer compute-vs-transfer-wait profile (see [`LayerProfile`]).
     pub layer_profile: LayerProfile,
+    /// Admissions that matched a non-empty shared KV prefix (the
+    /// cross-request prefix index; zero with `prefix_sharing` off).
+    pub prefix_hits: u64,
+    /// Prompt tokens whose prefill was skipped because their KV was
+    /// adopted from a shared prefix path.
+    pub prefix_matched_tokens: u64,
+    /// Shared prefix pool charge at run end (live + cached path blocks),
+    /// bytes.
+    pub prefix_resident_bytes: u64,
 }
 
 impl RunMetrics {
@@ -347,6 +356,16 @@ impl RunMetrics {
         } else {
             String::new()
         };
+        let prefix = if self.prefix_hits > 0 {
+            format!(
+                " | prefix hits={} matched_tokens={} shared {:.1} MiB",
+                self.prefix_hits,
+                self.prefix_matched_tokens,
+                self.prefix_resident_bytes as f64 / (1 << 20) as f64,
+            )
+        } else {
+            String::new()
+        };
         let pipeline = if self.pipeline_spec_used + self.pipeline_replans > 0 {
             format!(
                 " | pipeline primed={} replans={} hidden {:.4}s bubble {:.4}s",
@@ -380,6 +399,7 @@ impl RunMetrics {
             prefetch,
         ) + &abort
             + &overlap
+            + &prefix
             + &pipeline
     }
 }
@@ -498,6 +518,16 @@ mod tests {
         // total stall is conserved across the attribution
         assert!((p.total_transfer_wait_s() - 0.03).abs() < 1e-12);
         assert!(p.summary().contains("2 layers"));
+    }
+
+    #[test]
+    fn prefix_counters_surface_in_summary() {
+        let mut m = RunMetrics::new();
+        assert!(!m.summary().contains("prefix hits"));
+        m.prefix_hits = 3;
+        m.prefix_matched_tokens = 1536;
+        m.prefix_resident_bytes = 4 << 20;
+        assert!(m.summary().contains("prefix hits=3 matched_tokens=1536 shared 4.0 MiB"));
     }
 
     #[test]

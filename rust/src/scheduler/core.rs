@@ -4,7 +4,7 @@
 use std::collections::{HashMap, VecDeque};
 
 use crate::config::{ModelSpec, PrefillMode, ServingConfig};
-use crate::memory::ReqId;
+use crate::memory::{block_hashes, PrefixIndex, ReqId};
 
 use super::plan::{Batch, PrefillWork};
 use super::request::{Phase, Priority, Request};
@@ -50,13 +50,44 @@ pub struct Scheduler {
     /// version: a speculation taken at version V is stale — and must be
     /// re-planned, never executed — once the version moves.
     plan_version: u64,
+    /// Cross-request prefix index (`Some` iff `cfg.prefix_sharing`):
+    /// admission matches the prompt's block-aligned hash chain here and
+    /// reserves only the unmatched-suffix KV privately.
+    prefix: Option<PrefixIndex>,
+    /// Bytes charged for resident prefix blocks — live (referenced by an
+    /// admitted sharer) plus cached (refs 0, reclaimable on demand by
+    /// [`PrefixIndex::evict_unreferenced`]). Conservation invariant:
+    /// `reserved_total + prefix_resident_bytes` is the total KV charge,
+    /// and with zero prefix hits it equals HEAD's exclusive accounting
+    /// exactly (every path block shifts bytes from private to shared,
+    /// never creating or dropping any).
+    prefix_resident_bytes: usize,
+    /// Per admitted request: acquired path tail + the bytes its path
+    /// shifted out of the private reservation (released exactly once at
+    /// finish / cancel / migration-export).
+    prefix_paths: HashMap<ReqId, (u32, usize)>,
+    /// Reused hash buffer (admission is on the planning path).
+    hash_scratch: Vec<u64>,
+    /// Admissions that matched a non-empty shared prefix (diagnostics;
+    /// folded into `RunMetrics::prefix_hits`).
+    pub prefix_hits: u64,
+    /// Cumulative prompt tokens whose prefill was skipped via the index.
+    pub prefix_matched_tokens: u64,
+    /// Admission-time prefix matches not yet forwarded to the backend
+    /// (`(id, matched tokens, path tail)`): registration happens at
+    /// submit, before admission resolves the match, so the engine drains
+    /// this queue right after planning and calls
+    /// [`crate::engine::Backend::adopt_prefix`] for each entry.
+    adoptions: Vec<(ReqId, usize, u32)>,
 }
 
 impl Scheduler {
     pub fn new(cfg: ServingConfig, spec: ModelSpec, hbm_capacity: usize) -> Self {
+        let prefix = cfg.prefix_sharing.then(PrefixIndex::new);
         Self {
             cfg,
             spec,
+            prefix,
             hbm_capacity,
             dram_capacity: usize::MAX,
             requests: HashMap::new(),
@@ -70,6 +101,12 @@ impl Scheduler {
             completion_ewma: 0.0,
             completion_obs: 0,
             plan_version: 0,
+            prefix_resident_bytes: 0,
+            prefix_paths: HashMap::new(),
+            hash_scratch: Vec::new(),
+            prefix_hits: 0,
+            prefix_matched_tokens: 0,
+            adoptions: Vec::new(),
         }
     }
 
@@ -124,8 +161,51 @@ impl Scheduler {
         if let Some(n) = self.reserved.remove(&id) {
             self.reserved_total -= n;
         }
+        self.release_prefix(id);
         self.plan_version += 1;
         true
+    }
+
+    /// Drop `id`'s reference on its acquired prefix path (idempotent:
+    /// finish, cancel and migration-export each route here, and the
+    /// path entry is removed on the first call). The path's blocks stay
+    /// resident as cached (refs-0) entries, still charged to
+    /// `prefix_resident_bytes` until admission pressure evicts them —
+    /// that retention is what makes the next conversation turn warm.
+    fn release_prefix(&mut self, id: ReqId) {
+        if let Some((tail, _)) = self.prefix_paths.remove(&id) {
+            if let Some(ix) = self.prefix.as_mut() {
+                ix.release_path(tail);
+            }
+        }
+    }
+
+    /// Bytes of one block-aligned prefix block across all layers and
+    /// KV heads — the unit the shared prefix pool is charged in.
+    pub fn prefix_block_bytes(&self) -> usize {
+        self.spec.n_layers * self.spec.n_kv_heads * self.spec.block_bytes()
+    }
+
+    /// Shared prefix pool charge (live + cached blocks), bytes.
+    pub fn prefix_resident_bytes(&self) -> usize {
+        self.prefix_resident_bytes
+    }
+
+    /// Next admission-time prefix match the backend has not been told
+    /// about yet (`(id, matched tokens, path tail)`). The engine drains
+    /// this after every planning pass; entries are queued only by
+    /// [`Self::try_admit`] on a non-empty match.
+    pub fn pop_adoption(&mut self) -> Option<(ReqId, usize, u32)> {
+        self.adoptions.pop()
+    }
+
+    /// Drop the prefix index (and the knob). The engine calls this when
+    /// its backend cannot adopt shared prefixes — skipping matched
+    /// prefill without backend adoption would leave that span's KV
+    /// unwritten.
+    pub fn disable_prefix_sharing(&mut self) {
+        self.cfg.prefix_sharing = false;
+        self.prefix = None;
     }
 
     /// Waiting request ids in admission order (diagnostics / tests).
@@ -328,15 +408,72 @@ impl Scheduler {
     /// when it doesn't fit — the vLLM failure mode of Fig. 10) or against
     /// DRAM with it (backpressure instead of the old unbounded admission
     /// that exhausted the DRAM pool mid-decode).
+    ///
+    /// With `prefix_sharing` the prompt's block-aligned hash chain is
+    /// matched against the prefix index FIRST and only the *unmatched
+    /// delta* is reserved privately: every block on the acquired path
+    /// (matched or newly published) is charged once to the shared pool
+    /// instead. A re-entering conversation turn therefore never
+    /// re-reserves its history (the double-reservation bug), and with
+    /// zero hits the private+shared total equals HEAD's exclusive
+    /// reservation byte for byte.
     fn try_admit(&mut self, now: f64) -> Option<ReqId> {
         let &id = self.queue.front()?;
         let (plen, mnew) = {
             let r = &self.requests[&id];
             (r.prompt_len, self.expected_new_tokens(r))
         };
-        let need = self.full_kv_bytes(plen, mnew);
-        if need > self.admission_capacity().saturating_sub(self.reserved_total) {
-            return None; // blocked; FCFS forbids skipping ahead
+        let full = self.full_kv_bytes(plen, mnew);
+        let pbb = self.prefix_block_bytes();
+        let bs = self.spec.block_size;
+        let mut need = full;
+        // (tail, path blocks, matched tokens, created blocks)
+        let mut acquired: Option<(u32, usize, usize, usize)> = None;
+        if self.cfg.prefix_sharing {
+            if let Some(ix) = self.prefix.as_mut() {
+                let mut scratch = std::mem::take(&mut self.hash_scratch);
+                let prompt = self.requests.get(&id).map(|r| r.prompt.as_slice()).unwrap_or(&[]);
+                block_hashes(prompt, bs, &mut scratch);
+                if let Some(path) = ix.acquire_path(&scratch) {
+                    // at least one prompt token must still prefill (the
+                    // first decode token is produced by the prefill pass)
+                    let mut matched_tok = path.matched_blocks * bs;
+                    if matched_tok >= plen {
+                        matched_tok = ((plen - 1) / bs) * bs;
+                    }
+                    let path_blocks = path.matched_blocks + path.new_blocks;
+                    self.prefix_resident_bytes += path.new_blocks * pbb;
+                    need = full.saturating_sub(path_blocks * pbb);
+                    acquired = Some((path.tail, path_blocks, matched_tok, path.new_blocks));
+                }
+                self.hash_scratch = scratch;
+            }
+        }
+        let cap = self.admission_capacity();
+        let mut avail = cap
+            .saturating_sub(self.reserved_total)
+            .saturating_sub(self.prefix_resident_bytes);
+        if need > avail {
+            // reclaim cached (refs-0) prefix blocks before blocking —
+            // the acquired path itself is protected by its references
+            if let Some(ix) = self.prefix.as_mut() {
+                let short_blocks = (need - avail).div_ceil(pbb.max(1));
+                let evicted = ix.evict_unreferenced(short_blocks);
+                self.prefix_resident_bytes -= evicted * pbb;
+                avail += evicted * pbb;
+            }
+        }
+        if need > avail {
+            // blocked; FCFS forbids skipping ahead. Undo the acquisition
+            // so the unbacked suffix never lingers as a phantom match.
+            if let Some((tail, _, _, created)) = acquired {
+                if let Some(ix) = self.prefix.as_mut() {
+                    ix.release_path(tail);
+                    let removed = ix.rollback_path(tail, created);
+                    self.prefix_resident_bytes -= removed * pbb;
+                }
+            }
+            return None;
         }
         self.reserved.insert(id, need);
         self.reserved_total += need;
@@ -346,6 +483,19 @@ impl Scheduler {
         if let Some(r) = self.requests.get_mut(&id) {
             r.phase = Phase::Prefill;
             r.admitted_s = Some(now);
+            if let Some((tail, path_blocks, matched_tok, _)) = acquired {
+                r.prefix_matched = matched_tok;
+                r.prefix_group = Some(tail);
+                // prefill starts past the adopted prefix
+                r.tokens_done = matched_tok;
+                r.layer_tok_done = matched_tok;
+                self.prefix_paths.insert(id, (tail, path_blocks * pbb));
+                if matched_tok > 0 {
+                    self.prefix_hits += 1;
+                    self.prefix_matched_tokens += matched_tok as u64;
+                    self.adoptions.push((id, matched_tok, tail));
+                }
+            }
         }
         self.active.push(id);
         Some(id)
@@ -356,12 +506,20 @@ impl Scheduler {
     fn plan_prefill(&self, id: ReqId, tokens_in_batch: usize) -> Option<PrefillWork> {
         let r = &self.requests[&id];
         let plen = r.prompt_len;
+        // prefix-matched tokens are adopted, never prefilled: planning
+        // works over the suffix [matched, plen)
+        let matched = r.prefix_matched;
         match self.cfg.prefill_mode {
             PrefillMode::Plain => {
-                if r.tokens_done > 0 {
+                if r.tokens_done > matched {
                     return None;
                 }
-                Some(PrefillWork::Chunk { req: id, start: 0, len: plen, is_last: true })
+                Some(PrefillWork::Chunk {
+                    req: id,
+                    start: matched,
+                    len: plen - matched,
+                    is_last: true,
+                })
             }
             PrefillMode::Chunked => {
                 let budget = self.cfg.t_max.saturating_sub(tokens_in_batch);
@@ -382,16 +540,18 @@ impl Scheduler {
             }
             PrefillMode::LayerSegmented => {
                 let inject = self.cfg.max_inject_tokens.max(1);
-                if plen <= inject {
-                    // whole prompt per layer; possibly several layers/batch
-                    let layers_per = (inject / plen).max(1);
+                let rem = plen - matched;
+                if rem <= inject {
+                    // whole (unmatched) prompt per layer; possibly
+                    // several layers/batch
+                    let layers_per = (inject / rem.max(1)).max(1);
                     let layer_end = (r.layers_done + layers_per).min(self.spec.n_layers);
                     Some(PrefillWork::LayerSegment {
                         req: id,
                         layer_start: r.layers_done,
                         layer_end,
-                        tok_start: 0,
-                        tok_len: plen,
+                        tok_start: matched,
+                        tok_len: rem,
                         is_last: layer_end == self.spec.n_layers,
                     })
                 } else {
@@ -426,14 +586,17 @@ impl Scheduler {
             }
             PrefillWork::LayerSegment { layer_start, layer_end, tok_start, tok_len, .. } => {
                 debug_assert_eq!(*layer_start, r.layers_done);
-                if *tok_len == r.prompt_len {
+                if *tok_start == r.prefix_matched && tok_start + tok_len == r.prompt_len {
+                    // whole unmatched suffix in one segment
                     r.layers_done = *layer_end;
                 } else {
                     debug_assert_eq!(*tok_start, r.layer_tok_done);
                     r.layer_tok_done += tok_len;
                     if r.layer_tok_done == r.prompt_len {
                         r.layers_done += 1;
-                        r.layer_tok_done = 0;
+                        // the next layer's chunking restarts past the
+                        // adopted prefix, not at token 0
+                        r.layer_tok_done = r.prefix_matched;
                     }
                 }
                 if r.layers_done == self.spec.n_layers {
@@ -468,6 +631,10 @@ impl Scheduler {
             if let Some(n) = self.reserved.remove(&id) {
                 self.reserved_total -= n;
             }
+            // the prefix path drops to cached (refs-0) state: the bytes
+            // stay charged to the shared pool until eviction reclaims
+            // them, keeping the next turn of this conversation warm
+            self.release_prefix(id);
             if self.cfg.admission_estimates {
                 // fold the observed completion length into the estimate
                 const ALPHA: f64 = 0.2;
@@ -483,9 +650,13 @@ impl Scheduler {
             // decode-time DRAM growth tracking: an estimate-admitted
             // request that outlives its estimate grows its reservation
             // with its actual KV (plus the next token) instead of
-            // silently exceeding it
+            // silently exceeding it. The shared-path bytes are carried
+            // by the prefix pool, NOT this private reservation — growing
+            // back to the full-lifetime figure here would re-reserve the
+            // shared history (the admission double-reservation bug).
             if self.cfg.admission_estimates {
-                let needed = self.full_kv_bytes(plen, n_gen + 1);
+                let shared = self.prefix_paths.get(&id).map(|&(_, b)| b).unwrap_or(0);
+                let needed = self.full_kv_bytes(plen, n_gen + 1).saturating_sub(shared);
                 let cur = self.reserved.get(&id).copied().unwrap_or(0);
                 if needed > cur {
                     self.reserved.insert(id, needed);
@@ -608,10 +779,21 @@ impl Scheduler {
         }
         // remove the record first (presence was just checked), THEN the
         // bookkeeping — so a miss cannot strand half-released state
-        let req = self.requests.remove(&id)?;
+        let mut req = self.requests.remove(&id)?;
         self.active.retain(|&a| a != id);
-        let bytes = self.reserved.remove(&id).unwrap_or(0);
+        let mut bytes = self.reserved.remove(&id).unwrap_or(0);
         self.reserved_total -= bytes;
+        // Sharing is dropped at the cluster boundary: the migration
+        // payload deep-copies the full KV (shared history included), so
+        // the target must reserve the FULL bytes — private delta plus
+        // the path share — and gets no index entry. `prefix_matched`
+        // stays (prefill progress over the suffix is still real); the
+        // group id does not survive the move.
+        if let Some(&(_, shared)) = self.prefix_paths.get(&id) {
+            bytes += shared;
+            req.prefix_group = None;
+        }
+        self.release_prefix(id);
         self.plan_version += 1;
         Some((req, bytes))
     }
@@ -1346,5 +1528,250 @@ mod tests {
         let mut ws = |r| no_ws(r);
         let b = s.plan(1.0, &mut ws);
         assert_eq!(b.decodes.len(), 2);
+    }
+
+    // ------------------------------------------- cross-request prefix sharing
+
+    fn sharing_cfg() -> ServingConfig {
+        let mut cfg = ServingConfig::sparseserve(256, 64, 4);
+        cfg.prefix_sharing = true;
+        cfg
+    }
+
+    /// Drive `id`'s prefill to completion, then emit every output token.
+    fn run_to_finish(s: &mut Scheduler, id: ReqId) {
+        let mut ws = |r| no_ws(r);
+        loop {
+            let b = s.plan(0.0, &mut ws);
+            match b.prefill {
+                Some(w) if w.req() == id => {
+                    let done = w.is_last();
+                    s.advance_prefill(&w);
+                    if done {
+                        break;
+                    }
+                }
+                _ => break,
+            }
+        }
+        let max_new = s.requests[&id].max_new_tokens;
+        for t in 0..max_new {
+            if s.emit_token(id, None, 0.1 + t as f64) {
+                break;
+            }
+        }
+        assert_eq!(s.requests[&id].phase, Phase::Finished);
+    }
+
+    /// Submit a token-filled request, drive its prefill to completion and
+    /// graduate it to decode: the single prefill slot frees for the next
+    /// admission while this request's path references stay held.
+    fn admit_to_decode(s: &mut Scheduler, id: ReqId, prompt: Vec<i32>) {
+        s.submit(Request::with_prompt(id, prompt, 8, 0.0));
+        let mut ws = |r| no_ws(r);
+        loop {
+            let b = s.plan(0.0, &mut ws);
+            let Some(w) = b.prefill else { break };
+            assert_eq!(w.req(), id, "single prefill slot, strict FCFS");
+            let done = w.is_last();
+            s.advance_prefill(&w);
+            if done {
+                assert!(!s.emit_token(id, None, 0.1), "max_new 8 > 1");
+                break;
+            }
+        }
+        assert_eq!(s.requests[&id].phase, Phase::Decode);
+    }
+
+    #[test]
+    fn prefix_hit_reserves_only_the_unmatched_suffix() {
+        let mut s = sched(sharing_cfg(), 1 << 30);
+        let pbb = s.prefix_block_bytes();
+        // 64 shared system tokens + 16 unique tokens = 5 blocks of 16
+        let shared: Vec<i32> = (0..64).collect();
+        let mut p1 = shared.clone();
+        p1.extend(1000..1016);
+        let mut p2 = shared.clone();
+        p2.extend(2000..2016);
+        let full = s.full_kv_bytes(80, 8);
+
+        s.submit(Request::with_prompt(1, p1, 8, 0.0));
+        let mut ws = |r| no_ws(r);
+        s.plan(0.0, &mut ws);
+        // first sharer: no match, but its whole 5-block path shifts from
+        // the private reservation to the shared pool
+        assert_eq!(s.prefix_hits, 0);
+        assert_eq!(s.reservation_of(1), full - 5 * pbb);
+        assert_eq!(s.prefix_resident_bytes(), 5 * pbb);
+        assert_eq!(s.reservation_of(1) + s.prefix_resident_bytes(), full);
+        assert!(s.pop_adoption().is_none(), "no match, nothing to adopt");
+        run_to_finish(&mut s, 1);
+
+        // second sharer: 4 blocks (64 tokens) match; only its unique
+        // tail block is new in the pool
+        s.submit(Request::with_prompt(2, p2, 8, 1.0));
+        s.plan(1.0, &mut ws);
+        assert_eq!(s.prefix_hits, 1);
+        assert_eq!(s.prefix_matched_tokens, 64);
+        assert_eq!(s.requests[&2].prefix_matched, 64);
+        assert_eq!(s.requests[&2].tokens_done, 64, "prefill starts past the match");
+        assert_eq!(s.reservation_of(2), full - 5 * pbb);
+        assert_eq!(s.prefix_resident_bytes(), 6 * pbb, "4 shared + 2 unique tails");
+        let (id, matched, _tail) = s.pop_adoption().expect("hit queues an adoption");
+        assert_eq!((id, matched), (2, 64));
+    }
+
+    #[test]
+    fn reentering_turn_tops_up_without_regrowing_shared_bytes() {
+        // Warm the completion estimator so admission reserves a SHORT
+        // estimate and decode must top the reservation up token by token
+        // — the double-reservation bug was this top-up path re-growing
+        // toward the full figure including the shared history.
+        let mut s = sched(sharing_cfg(), 1 << 30);
+        for id in 10..14u32 {
+            s.submit(Request::new(id, 16, 2, 0.0));
+            run_to_finish(&mut s, id);
+        }
+        assert!(s.completion_estimate().is_some());
+
+        // turn 1 of a conversation: 80-token prompt, finished
+        let hist: Vec<i32> = (0..80).collect();
+        s.submit(Request::with_prompt(1, hist.clone(), 2, 1.0));
+        run_to_finish(&mut s, 1);
+
+        // turn 2 re-sends the history plus 32 fresh tokens: the cached
+        // chain matches and only the delta is reserved
+        let mut turn2 = hist;
+        turn2.extend(3000..3032);
+        s.submit(Request::with_prompt(2, turn2, 64, 2.0));
+        let mut ws = |r| no_ws(r);
+        s.plan(2.0, &mut ws);
+        let pbb = s.prefix_block_bytes();
+        assert_eq!(s.requests[&2].prefix_matched, 80, "warm history fully matched");
+        // the whole 7-block path (5 matched + 2 fresh) rides the pool
+        let shared_bytes = 7 * pbb;
+        assert_eq!(s.prefix_paths.get(&2).map(|&(_, b)| b), Some(shared_bytes));
+        let reserved_at_admit = s.reservation_of(2);
+        assert!(
+            reserved_at_admit < s.full_kv_bytes(112, 64) - shared_bytes,
+            "estimate-based admission must reserve less than the conservative delta"
+        );
+
+        // drive the 32-token suffix prefill, then graduate to decode
+        loop {
+            let b = s.plan(2.0, &mut ws);
+            let Some(w) = b.prefill else { break };
+            let done = w.is_last();
+            s.advance_prefill(&w);
+            if done {
+                break;
+            }
+        }
+
+        // outlive the estimate: every top-up targets exactly
+        // (actual KV so far + next token) MINUS the shared path — the
+        // reservation converges to (full - shared), never to the
+        // double-counted full figure
+        for t in 0..63usize {
+            assert!(!s.emit_token(2, None, 3.0 + t as f64), "finishes on token 64");
+            let n_gen = s.requests[&2].n_generated;
+            let cap = s.full_kv_bytes(112, n_gen + 1).saturating_sub(shared_bytes);
+            assert_eq!(
+                s.reservation_of(2),
+                reserved_at_admit.max(cap),
+                "top-up must hold exactly the private delta at n_gen={n_gen}"
+            );
+        }
+        assert_eq!(
+            s.reservation_of(2),
+            s.full_kv_bytes(112, 64) - shared_bytes,
+            "converged reservation excludes the shared history"
+        );
+    }
+
+    #[test]
+    fn zero_hit_sharing_matches_exclusive_accounting_exactly() {
+        // Unique prompts: the index never matches. A sharing-on scheduler
+        // must track HEAD's exclusive accounting in lockstep — identical
+        // plans, identical finish decisions, and total KV charge
+        // (private + shared pool) equal to the exclusive reservation at
+        // every step.
+        let mut on = sched(sharing_cfg(), 1 << 30);
+        let mut off = sched(ServingConfig::sparseserve(256, 64, 4), 1 << 30);
+        let pbb = on.prefix_block_bytes();
+        for id in 1..=3u32 {
+            let p: Vec<i32> = (0..96).map(|t| (id as i32) * 1000 + t).collect();
+            on.submit(Request::with_prompt(id, p.clone(), 4, 0.0));
+            off.submit(Request::with_prompt(id, p, 4, 0.0));
+        }
+        let mut ws_a = |r| no_ws(r);
+        let mut ws_b = |r| no_ws(r);
+        // each request's 6-block path stays cached (refs 0) after finish
+        let mut finished_paths = 0usize;
+        for step in 0..64 {
+            let t = 0.1 * step as f64;
+            let b_on = on.plan(t, &mut ws_a);
+            let b_off = off.plan(t, &mut ws_b);
+            assert_eq!(b_on, b_off, "identical plans at 0% hits");
+            for &d in &b_on.decodes {
+                let fin = on.emit_token(d, None, t);
+                assert_eq!(fin, off.emit_token(d, None, t), "identical finishes");
+                finished_paths += fin as usize;
+            }
+            if let Some(w) = b_on.prefill {
+                let done = w.is_last();
+                on.advance_prefill(&w);
+                off.advance_prefill(&w);
+                if done {
+                    assert!(!on.emit_token(w.req(), None, t));
+                    assert!(!off.emit_token(w.req(), None, t));
+                }
+            }
+            assert_eq!(
+                on.reserved_bytes() + on.prefix_resident_bytes(),
+                off.reserved_bytes() + finished_paths * 6 * pbb,
+                "conservation: sharing shifts bytes, never creates or drops them"
+            );
+        }
+        assert_eq!(on.prefix_hits, 0);
+        assert_eq!(on.prefix_matched_tokens, 0);
+        assert!(on.pop_adoption().is_none());
+        assert!(on.requests.values().all(|r| r.is_done()), "all three served");
+        assert_eq!(finished_paths, 3);
+    }
+
+    #[test]
+    fn migration_export_folds_shared_bytes_into_the_reservation() {
+        let mut src = sched(sharing_cfg(), 1 << 30);
+        let shared: Vec<i32> = (0..64).collect();
+        let mut p1 = shared.clone();
+        p1.extend(1000..1016);
+        let mut p2 = shared.clone();
+        p2.extend(2000..2016);
+        admit_to_decode(&mut src, 1, p1);
+        admit_to_decode(&mut src, 2, p2);
+        assert_eq!(src.prefix_hits, 1);
+        let full = src.full_kv_bytes(80, 8);
+        let pbb = src.prefix_block_bytes();
+        assert_eq!(src.reservation_of(2), full - 5 * pbb);
+
+        // the exported reservation is the FULL footprint: the payload
+        // deep-copies the shared history, so the target prices it
+        // unshared and the request carries no group id across the wire
+        let (req, bytes) = src.extract_for_migration(2).expect("admitted");
+        assert_eq!(bytes, full, "private delta + path share");
+        assert!(req.prefix_group.is_none());
+        assert_eq!(req.prefix_matched, 64, "prefill progress stays real");
+
+        // the target re-reserves exactly those bytes, unshared
+        let mut dst = sched(ServingConfig::sparseserve(256, 64, 4), 1 << 30);
+        dst.admit_migrated(req, bytes).expect("fits");
+        assert_eq!(dst.reservation_of(2), full);
+        assert_eq!(dst.prefix_resident_bytes(), 0);
+
+        // source: request 1 still holds its path; request 2's references
+        // dropped to cached without disturbing the pool charge
+        assert_eq!(src.reservation_of(1), full - 5 * pbb);
+        assert_eq!(src.prefix_resident_bytes(), 6 * pbb);
     }
 }

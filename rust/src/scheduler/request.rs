@@ -90,6 +90,14 @@ pub struct Request {
     pub sparse_budget: Option<usize>,
 
     pub phase: Phase,
+    /// Prompt tokens covered by a shared KV prefix matched at admission
+    /// (block-aligned; 0 without `prefix_sharing`). Prefill starts past
+    /// these tokens — their KV is adopted from the shared block table.
+    pub prefix_matched: usize,
+    /// Tail node id of this request's acquired path in the scheduler's
+    /// `PrefixIndex` (`None` without sharing). Released exactly once at
+    /// finish / cancel / migration-export.
+    pub prefix_group: Option<u32>,
     /// Consecutive iterations WS batch control skipped this decode
     /// (starvation-guard input; reset when it is batched).
     pub ws_skip_streak: u32,
@@ -126,6 +134,8 @@ impl Request {
             ttft_slo_s: None,
             sparse_budget: None,
             phase: Phase::Queued,
+            prefix_matched: 0,
+            prefix_group: None,
             ws_skip_streak: 0,
             tokens_done: 0,
             layers_done: 0,

@@ -241,6 +241,23 @@ impl CostModel {
         total
     }
 
+    /// Prefill of only the suffix `[matched, prompt)` — the TTFT credit
+    /// a shared-prefix hit earns: the matched span's KV is adopted from
+    /// the prefix pool, so compute covers the remaining chunks only
+    /// (each still attends over the full preceding context, adopted
+    /// included). `matched = 0` degenerates to
+    /// [`Self::prefill_time_chunked`].
+    pub fn prefill_time_suffix(&self, prompt: usize, matched: usize, chunk: usize) -> f64 {
+        let mut total = 0.0;
+        let mut done = matched.min(prompt);
+        while done < prompt {
+            let c = chunk.min(prompt - done);
+            total += self.spec.n_layers as f64 * self.prefill_layer_time(c, done);
+            done += c;
+        }
+        total
+    }
+
     /// Fixed per-decode-iteration overhead: kernel launches, block
     /// selection, gather assembly, sampling and scheduler bookkeeping —
     /// ~0.8 ms per layer on real serving stacks (vLLM-class systems
@@ -414,6 +431,28 @@ mod tests {
         assert!(g > 1.2 && g < 1.4);
         // no offloading -> no saving traffic at all
         assert_eq!(m.save_overhead_factor(TransferKind::Memcpy, false), 1.0);
+    }
+
+    #[test]
+    fn suffix_prefill_earns_strict_ttft_credit() {
+        let m = model();
+        let prompt = 16_384;
+        let chunk = 2048;
+        let full = m.prefill_time_chunked(prompt, chunk);
+        // matched = 0 is exactly the full chunked prefill
+        assert_eq!(m.prefill_time_suffix(prompt, 0, chunk), full);
+        // every adopted block strictly reduces prefill compute, and a
+        // longer match reduces it further
+        let half = m.prefill_time_suffix(prompt, prompt / 2, chunk);
+        let most = m.prefill_time_suffix(prompt, prompt - chunk, chunk);
+        assert!(half < full, "half={half} full={full}");
+        assert!(most < half, "most={most} half={half}");
+        // the credit exceeds the suffix's share: the skipped chunks were
+        // the cheap early ones, the kept ones attend over the adopted
+        // context too — still strictly cheaper than prefilling from 0
+        assert!(most > 0.0);
+        // fully matched prompt costs nothing more to prefill
+        assert_eq!(m.prefill_time_suffix(prompt, prompt, chunk), 0.0);
     }
 
     #[test]
